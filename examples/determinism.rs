@@ -1,0 +1,79 @@
+//! Determinism & replay demo (paper §3.3).
+//!
+//! Shows the three determinism properties the paper claims:
+//!  1. bitwise-identical runs: same (seed, data) → identical loss sequence;
+//!  2. paired sampling: the host sampler (baseline path) and the fused
+//!     kernel (inside the artifact) draw the *same* neighborhoods from the
+//!     same base_seed — verified here by replaying the host sampler against
+//!     the counter-RNG contract;
+//!  3. seed sensitivity: changing base_seed changes the samples.
+//!
+//! ```sh
+//! cargo run --release --example determinism
+//! ```
+
+use anyhow::Result;
+use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Trainer, Variant};
+use fusesampleagg::gen::{builtin_spec, Dataset};
+use fusesampleagg::rng::rand_counter;
+use fusesampleagg::runtime::Runtime;
+use fusesampleagg::sampler;
+
+fn losses(rt: &Runtime, cache: &mut DatasetCache, seed: u64,
+          steps: usize) -> Result<Vec<f64>> {
+    let cfg = TrainConfig {
+        variant: Variant::Fsa,
+        hops: 2,
+        dataset: "tiny".into(),
+        k1: 5,
+        k2: 3,
+        batch: 64,
+        amp: true,
+        save_indices: true,
+        seed,
+    };
+    let mut trainer = Trainer::new(rt, cache, cfg)?;
+    (0..steps).map(|_| Ok(trainer.step()?.loss)).collect()
+}
+
+fn main() -> Result<()> {
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+
+    // 1. bitwise repeatability of the full training loop
+    let a = losses(&rt, &mut cache, 42, 20)?;
+    let b = losses(&rt, &mut cache, 42, 20)?;
+    assert_eq!(a, b, "identical seeds must give identical loss sequences");
+    println!("1. replay: 20-step loss sequences bitwise identical ✓");
+
+    let c = losses(&rt, &mut cache, 43, 20)?;
+    assert_ne!(a, c, "different seeds should differ");
+    println!("   (seed 43 differs from seed 42, as expected ✓)");
+
+    // 2. the sampling rule is a pure counter function — replay one draw
+    let ds = Dataset::generate(builtin_spec("tiny")?)?;
+    let base = 0xFEED;
+    let node = (0..ds.spec.n as i32)
+        .find(|&u| ds.graph.degree(u) > 4)
+        .expect("a node with degree > 4");
+    let mut out = vec![0i32; 4];
+    sampler::sample_neighbors(&ds.graph, node, 4, base, 0, &mut out);
+    let deg = ds.graph.degree(node) as u64;
+    let ns = ds.graph.neighbors(node);
+    for (slot, &v) in out.iter().enumerate() {
+        let expect = ns[(rand_counter(base, node as u64, 0, slot as u64)
+            % deg) as usize];
+        assert_eq!(v, expect);
+    }
+    println!("2. saved-index replay: host sampler reproduces the counter-RNG \
+              contract (node {node}, samples {out:?}) ✓");
+
+    // 3. seed sensitivity of raw sampling
+    let mut other = vec![0i32; 4];
+    sampler::sample_neighbors(&ds.graph, node, 4, base + 1, 0, &mut other);
+    assert_ne!(out, other);
+    println!("3. base_seed sensitivity: {out:?} vs {other:?} ✓");
+
+    println!("\ndeterminism demo OK");
+    Ok(())
+}

@@ -1,0 +1,11 @@
+"""Build-time compile package: L1 Pallas kernels + L2 JAX models + AOT driver.
+
+Python in this package runs ONLY at build time (``make artifacts``); the Rust
+coordinator executes the lowered HLO via PJRT and never imports any of this.
+
+x64 must be enabled before any jax array is created: the deterministic
+counter RNG (kernels/rng.py) is defined over uint64.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

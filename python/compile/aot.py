@@ -1,0 +1,187 @@
+"""AOT driver: lower every configured executable to HLO text + manifest.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the published ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (normally via ``make artifacts``):
+    cd python && python -m compile.aot --out-dir ../artifacts [--only SUBSTR]
+
+Incremental: a fingerprint of python/compile/**.py is stored next to the
+artifacts; when unchanged, existing files are skipped.
+"""
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import baseline, configs, model, stages
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec_to_aval(spec):
+    return jax.ShapeDtypeStruct(tuple(spec.shape), np.dtype(spec.dtype))
+
+
+def _n_params(variant):
+    return 5 if variant.startswith("fsa") else 6
+
+
+def build_fn(cfg):
+    """Positional wrapper matching the manifest input order exactly."""
+    np_ = _n_params(cfg.variant)
+
+    if cfg.kind == "train" and cfg.variant in ("fsa1", "fsa2"):
+        hops = 2 if cfg.variant == "fsa2" else 1
+        ts = model.make_fsa_train_step(
+            hops=hops, k1=cfg.k1, k2=cfg.k2, amp=cfg.amp,
+            save_indices=cfg.save_indices, tile=cfg.tile or None)
+
+        def fn(*args):
+            p = tuple(args[:np_])
+            m = tuple(args[np_:2 * np_])
+            v = tuple(args[2 * np_:3 * np_])
+            step = args[3 * np_]
+            rowptr, col, x, seeds, labels, base_seed = args[3 * np_ + 1:]
+            return ts(p, m, v, step, rowptr, col, x, seeds, labels, base_seed)
+
+        return fn
+
+    if cfg.kind == "train" and cfg.variant in ("dgl1", "dgl2"):
+        hops = 2 if cfg.variant == "dgl2" else 1
+        ts = baseline.make_dgl_train_step(hops=hops, amp=cfg.amp)
+
+        def fn(*args):
+            p = tuple(args[:np_])
+            m = tuple(args[np_:2 * np_])
+            v = tuple(args[2 * np_:3 * np_])
+            step = args[3 * np_]
+            rest = args[3 * np_ + 1:]
+            return ts(p, m, v, step, *rest)
+
+        return fn
+
+    if cfg.kind == "eval" and cfg.variant.startswith("fsa"):
+        hops = 2 if cfg.variant == "fsa2" else 1
+        ev = model.make_fsa_eval(hops=hops, k1=cfg.k1, k2=cfg.k2,
+                                 tile=cfg.tile or None)
+
+        def fn(*args):
+            p = tuple(args[:np_])
+            rowptr, col, x, seeds, base_seed = args[np_:]
+            return ev(p, rowptr, col, x, seeds, base_seed)
+
+        return fn
+
+    if cfg.kind == "eval" and cfg.variant.startswith("dgl"):
+        ev = baseline.make_dgl_eval(amp=False)
+
+        def fn(*args):
+            p = tuple(args[:np_])
+            x, f1, s2 = args[np_:]
+            return ev(p, x, f1, s2)
+
+        return fn
+
+    if cfg.kind == "stage":
+        if cfg.variant == "adamw":
+            inner = stages.make_stage_adamw(6)
+        else:
+            inner = stages.STAGE_FNS[cfg.variant]
+
+        def fn(*args):
+            out = inner(*args)
+            return out if isinstance(out, tuple) else (out,)
+
+        return fn
+
+    raise ValueError(f"unknown config kind/variant: {cfg.kind}/{cfg.variant}")
+
+
+def lower_config(cfg, out_dir):
+    fn = build_fn(cfg)
+    avals = [spec_to_aval(s) for s in cfg.inputs]
+    # keep_unused: the manifest's input list is a fixed ABI — XLA must not
+    # drop parameters that a particular stage happens not to read (e.g.
+    # bwd_layer1 receives h1 for interface symmetry only).
+    lowered = jax.jit(fn, keep_unused=True).lower(*avals)
+    text = to_hlo_text(lowered)
+
+    # sanity: output arity must match the manifest contract
+    out_avals = lowered.out_info
+    n_out = len(jax.tree_util.tree_leaves(out_avals))
+    if n_out != len(cfg.outputs):
+        raise RuntimeError(
+            f"{cfg.name}: lowered {n_out} outputs, manifest says "
+            f"{len(cfg.outputs)}")
+
+    (out_dir / cfg.file).write_text(text)
+    return len(text)
+
+
+def source_fingerprint():
+    """Hash of every .py under compile/ — the incremental-build key."""
+    root = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.name.encode())
+        h.update(p.read_bytes())
+    return h.hexdigest()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fp_file = out_dir / ".fingerprint"
+    fp = source_fingerprint()
+    fresh = fp_file.exists() and fp_file.read_text().strip() == fp
+
+    cfgs = configs.all_configs()
+    if args.only:
+        cfgs = [c for c in cfgs if args.only in c.name]
+
+    t0 = time.time()
+    built = skipped = 0
+    for i, cfg in enumerate(cfgs):
+        path = out_dir / cfg.file
+        if fresh and path.exists() and not args.force:
+            skipped += 1
+            continue
+        t = time.time()
+        size = lower_config(cfg, out_dir)
+        built += 1
+        print(f"[{i + 1}/{len(cfgs)}] {cfg.name}: {size / 1024:.0f} KiB "
+              f"({time.time() - t:.1f}s)", flush=True)
+
+    manifest = configs.manifest_dict()
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    fp_file.write_text(fp)
+    print(f"artifacts: {built} built, {skipped} up-to-date, "
+          f"manifest with {len(manifest['artifacts'])} entries "
+          f"({time.time() - t0:.1f}s total)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,115 @@
+"""L2: the DGL-like baseline — host-sampled blocks, materialized gathers,
+two SAGEConv(mean) layers (paper §5 "for the DGL baseline we use two
+SAGEConv (mean) layers").
+
+Pipeline shape (the sampler→materialize→aggregate gap the paper attacks):
+  1. the Rust host sampler (rust/src/sampler) draws the frontier
+     f1 = [seed | s1] and second-hop samples s2 — DGL's NeighborSampler role;
+  2. index tensors are uploaded to the device;
+  3. this model *materializes* the gathered feature block [B, 1+k1, k2, D]
+     (and the frontier features [B, 1+k1, D]) — ``optimization_barrier``
+     pins the materialization so XLA cannot fuse it away, because DGL
+     genuinely allocates these tensors;
+  4. two SAGEConv layers aggregate over the blocks.
+
+-1 entries in f1/s2 are padding (static shapes instead of DGL's dedup'd
+dynamic blocks — DESIGN.md §10).
+"""
+import jax
+import jax.numpy as jnp
+
+from .model import cross_entropy, _mm
+from .optim import adamw_update
+
+
+def _materialize(t):
+    """Force a real buffer for the gathered block (DGL materializes)."""
+    return jax.lax.optimization_barrier(t)
+
+
+def gather_blocks(x, f1, s2):
+    """The materialization stage: frontier features + second-hop block."""
+    xf1 = x[jnp.maximum(f1, 0)]                       # [B, 1+k1, D]
+    xf1 = _materialize(xf1 * (f1 >= 0)[..., None].astype(x.dtype))
+    block = x[jnp.maximum(s2, 0)]                     # [B, 1+k1, k2, D]
+    block = _materialize(block)
+    return xf1, block
+
+
+def masked_mean_np(feats, valid, axis):
+    """Mean over ``axis`` counting valid slots (f32 accumulation)."""
+    vf = valid.astype(jnp.float32)
+    num = (feats.astype(jnp.float32) * vf[..., None]).sum(axis=axis)
+    den = jnp.maximum(vf.sum(axis=axis), 1.0)
+    return num / den[..., None]
+
+
+def sage_layer1(xf1, block, s2, w_self, w_neigh, b, amp):
+    """SAGEConv over the innermost block: h1 for every frontier node."""
+    mean2 = masked_mean_np(block, s2 >= 0, axis=2)    # [B, 1+k1, D]
+    h = jax.nn.relu(_mm(xf1, w_self, amp) + _mm(mean2, w_neigh, amp) + b)
+    return h                                          # [B, 1+k1, H]
+
+
+def sage_layer2(h1, f1, w_self, w_neigh, b, amp):
+    """SAGEConv seeds <- frontier: logits for the B seed nodes."""
+    h_self = h1[:, 0]                                 # [B, H] (f1[:,0] = seed)
+    neigh_valid = f1[:, 1:] >= 0                      # [B, k1]
+    h_neigh = masked_mean_np(h1[:, 1:], neigh_valid, axis=1)
+    return _mm(h_self, w_self, amp) + _mm(h_neigh, w_neigh, amp) + b
+
+
+def dgl2_forward(params, x, f1, s2, amp):
+    """2-layer SAGE over host-sampled blocks; returns logits [B, C]."""
+    w1s, w1n, b1, w2s, w2n, b2 = params
+    xf1, block = gather_blocks(x, f1, s2)
+    h1 = sage_layer1(xf1, block, s2, w1s, w1n, b1, amp)
+    # zero out padded frontier rows so layer 2's mean sees true zeros
+    h1 = h1 * (f1 >= 0)[..., None].astype(h1.dtype)
+    return sage_layer2(h1, f1, w2s, w2n, b2, amp)
+
+
+def dgl1_forward(params, x, f1, amp):
+    """1-layer SAGE baseline (f1 = [seed | s1]); w2_neigh is unused."""
+    w1s, w1n, b1, w2s, _w2n, b2 = params
+    xf1 = _materialize(x[jnp.maximum(f1, 0)]
+                       * (f1 >= 0)[..., None].astype(x.dtype))
+    h_self = xf1[:, 0]
+    h_neigh = masked_mean_np(xf1[:, 1:], f1[:, 1:] >= 0, axis=1)
+    h = jax.nn.relu(_mm(h_self, w1s, amp) + _mm(h_neigh, w1n, amp) + b1)
+    return _mm(h, w2s, amp) + b2
+
+
+def make_dgl_eval(*, amp=False):
+    """Eval pass over host-sampled blocks: (params, x, f1, s2) -> (logits,)."""
+
+    def eval_fn(params, x, f1, s2):
+        return (dgl2_forward(params, x, f1, s2, amp),)
+
+    return eval_fn
+
+
+def make_dgl_train_step(*, hops, amp):
+    """Train step over materialized blocks:
+    2-hop: (params, m, v, step, x, f1, s2, labels) -> (new..., loss)
+    1-hop: (params, m, v, step, x, f1, labels)     -> (new..., loss)
+    """
+
+    if hops == 2:
+        def loss_fn(params, x, f1, s2, labels):
+            return cross_entropy(dgl2_forward(params, x, f1, s2, amp), labels)
+
+        def train_step(params, m, v, step, x, f1, s2, labels):
+            loss, grads = jax.value_and_grad(loss_fn)(params, x, f1, s2, labels)
+            new_p, new_m, new_v = adamw_update(params, grads, m, v, step)
+            return new_p + new_m + new_v + (loss,)
+    else:
+        def loss_fn(params, x, f1, labels):
+            return cross_entropy(dgl1_forward(params, x, f1, amp), labels)
+
+        def train_step(params, m, v, step, x, f1, labels):
+            loss, grads = jax.value_and_grad(loss_fn)(params, x, f1, labels)
+            new_p, new_m, new_v = adamw_update(params, grads, m, v, step)
+            return new_p + new_m + new_v + (loss,)
+
+    return train_step

@@ -1,0 +1,428 @@
+"""Single source of truth for every AOT artifact configuration.
+
+Everything the Rust coordinator needs to know about an executable — input
+order, shapes, dtypes, dataset dimensions, tile sizes — is derived here and
+serialized into ``artifacts/manifest.json``. Rust never re-derives shapes;
+it reads the manifest (rust/src/runtime/manifest.rs).
+
+Paper protocol (§5): fanouts {10-10, 15-10, 25-10}, batches {512, 1024},
+AMP on, hidden 256, AdamW(3e-3, wd 5e-4). CPU-scale substitutions
+(DESIGN.md §6): hidden 64, feature width 64, scaled synthetic datasets.
+"""
+from dataclasses import dataclass, field
+
+from .kernels import tiling
+
+# ---------------------------------------------------------------------------
+# datasets (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DatasetSpec:
+    """Scaled synthetic stand-in for one of the paper's datasets."""
+
+    name: str
+    stands_for: str
+    n: int            # node count
+    e_cap: int        # static CSR edge capacity (undirected, both directions)
+    avg_deg: int      # generator target average degree
+    degree_law: str   # "powerlaw" | "hubs" | "uniform"
+    d: int            # feature width
+    c: int            # classes
+    gen_seed: int     # generator base seed
+
+
+DATASETS = {
+    s.name: s
+    for s in [
+        DatasetSpec("arxiv_sim", "ogbn-arxiv", 20_000, 640_000, 14,
+                    "powerlaw", 64, 40, 1001),
+        DatasetSpec("reddit_sim", "Reddit", 12_000, 2_600_000, 100,
+                    "hubs", 64, 41, 1002),
+        DatasetSpec("products_sim", "ogbn-products", 32_000, 3_400_000, 50,
+                    "powerlaw", 64, 47, 1003),
+        DatasetSpec("tiny", "unit tests", 512, 8_192, 6,
+                    "uniform", 16, 8, 1000),
+    ]
+}
+
+HIDDEN = 64
+ADAMW = dict(lr=3e-3, b1=0.9, b2=0.999, eps=1e-8, wd=5e-4)  # paper §5
+
+MAIN_FANOUTS = [(10, 10), (15, 10), (25, 10)]
+MAIN_BATCHES = [512, 1024]
+MAIN_DATASETS = ["arxiv_sim", "reddit_sim", "products_sim"]
+FIG2_BATCHES = [128, 256, 512, 1024, 2048]
+PROFILE_CONFIG = ("products_sim", 15, 10, 1024)  # paper Table 3 setting
+
+# ---------------------------------------------------------------------------
+# tensor + artifact specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    shape: tuple
+    dtype: str  # numpy dtype name: "float32", "int32", "uint64", "bfloat16"
+
+
+@dataclass
+class ArtifactConfig:
+    """One AOT-compiled executable."""
+
+    name: str
+    kind: str          # "train" | "eval" | "stage"
+    variant: str       # fsa1|fsa2|dgl1|dgl2|gather|layer1|layer2|loss|bwd2|bwd1|adamw
+    dataset: str
+    k1: int = 0
+    k2: int = 0
+    batch: int = 0
+    amp: bool = True
+    save_indices: bool = True
+    hidden: int = HIDDEN
+    feat_dtype: str = "float32"  # fused 2-hop dispatches on this (paper §4)
+    inputs: list = field(default_factory=list)    # [TensorSpec]
+    outputs: list = field(default_factory=list)   # [TensorSpec]
+    tile: int = 0
+    vmem_tile_bytes: int = 0
+
+    @property
+    def file(self):
+        return f"{self.name}.hlo.txt"
+
+
+def _amp_tag(amp):
+    return "ampOn" if amp else "ampOff"
+
+
+# parameter layouts (flat, ordered — the rust<->HLO arg order contract)
+
+def fsa_param_specs(ds, hidden):
+    d, c = DATASETS[ds].d, DATASETS[ds].c
+    return [
+        TensorSpec("w_self", (d, hidden), "float32"),
+        TensorSpec("w_neigh", (d, hidden), "float32"),
+        TensorSpec("b_hidden", (hidden,), "float32"),
+        TensorSpec("w_out", (hidden, c), "float32"),
+        TensorSpec("b_out", (c,), "float32"),
+    ]
+
+
+def dgl_param_specs(ds, hidden):
+    d, c = DATASETS[ds].d, DATASETS[ds].c
+    return [
+        TensorSpec("w1_self", (d, hidden), "float32"),
+        TensorSpec("w1_neigh", (d, hidden), "float32"),
+        TensorSpec("b1", (hidden,), "float32"),
+        TensorSpec("w2_self", (hidden, c), "float32"),
+        TensorSpec("w2_neigh", (hidden, c), "float32"),
+        TensorSpec("b2", (c,), "float32"),
+    ]
+
+
+def param_specs(variant, ds, hidden=HIDDEN):
+    return fsa_param_specs(ds, hidden) if variant.startswith("fsa") \
+        else dgl_param_specs(ds, hidden)
+
+
+def graph_input_specs(ds, feat_dtype="float32"):
+    s = DATASETS[ds]
+    return [
+        TensorSpec("rowptr", (s.n + 1,), "int32"),
+        TensorSpec("col", (s.e_cap,), "int32"),
+        TensorSpec("x", (s.n, s.d), feat_dtype),
+    ]
+
+
+def _opt_state(params):
+    return ([TensorSpec(f"m_{p.name}", p.shape, p.dtype) for p in params]
+            + [TensorSpec(f"v_{p.name}", p.shape, p.dtype) for p in params])
+
+
+def train_input_specs(cfg):
+    """Input order contract for train artifacts:
+    params..., m..., v..., step, <data inputs per variant>."""
+    s = DATASETS[cfg.dataset]
+    params = param_specs(cfg.variant, cfg.dataset, cfg.hidden)
+    common = params + _opt_state(params) + [TensorSpec("step", (), "float32")]
+    b = cfg.batch
+    if cfg.variant in ("fsa1", "fsa2"):
+        data = graph_input_specs(cfg.dataset, cfg.feat_dtype) + [
+            TensorSpec("seeds", (b,), "int32"),
+            TensorSpec("labels", (b,), "int32"),
+            TensorSpec("base_seed", (1,), "uint64"),
+        ]
+    elif cfg.variant == "dgl2":
+        # host-sampled frontier f1 = [seeds | s1] and second-hop s2
+        data = [
+            TensorSpec("x", (s.n, s.d), "float32"),
+            TensorSpec("f1", (b, 1 + cfg.k1), "int32"),
+            TensorSpec("s2", (b, 1 + cfg.k1, cfg.k2), "int32"),
+            TensorSpec("labels", (b,), "int32"),
+        ]
+    elif cfg.variant == "dgl1":
+        # f1 = [seed | its k1 samples], like dgl2's first-layer frontier
+        data = [
+            TensorSpec("x", (s.n, s.d), "float32"),
+            TensorSpec("f1", (b, 1 + cfg.k1), "int32"),
+            TensorSpec("labels", (b,), "int32"),
+        ]
+    else:
+        raise ValueError(cfg.variant)
+    return common + data
+
+
+def train_output_specs(cfg):
+    params = param_specs(cfg.variant, cfg.dataset, cfg.hidden)
+    outs = ([TensorSpec(f"new_{p.name}", p.shape, p.dtype) for p in params]
+            + [TensorSpec(f"new_m_{p.name}", p.shape, p.dtype) for p in params]
+            + [TensorSpec(f"new_v_{p.name}", p.shape, p.dtype) for p in params]
+            + [TensorSpec("loss", (), "float32")])
+    return outs
+
+
+def eval_input_specs(cfg):
+    b = cfg.batch
+    s = DATASETS[cfg.dataset]
+    params = param_specs(cfg.variant, cfg.dataset, cfg.hidden)
+    if cfg.variant.startswith("dgl"):
+        # baseline eval consumes host-sampled blocks, like its train step
+        return params + [
+            TensorSpec("x", (s.n, s.d), "float32"),
+            TensorSpec("f1", (b, 1 + cfg.k1), "int32"),
+            TensorSpec("s2", (b, 1 + cfg.k1, cfg.k2), "int32"),
+        ]
+    return params + graph_input_specs(cfg.dataset) + [
+        TensorSpec("seeds", (b,), "int32"),
+        TensorSpec("base_seed", (1,), "uint64"),
+    ]
+
+
+def eval_output_specs(cfg):
+    c = DATASETS[cfg.dataset].c
+    return [TensorSpec("logits", (cfg.batch, c), "float32")]
+
+
+# ---------------------------------------------------------------------------
+# the artifact grid
+# ---------------------------------------------------------------------------
+
+
+def _mk(name, kind, variant, dataset, k1=0, k2=0, batch=0, amp=True,
+        save_indices=True, tile=None, feat_dtype="float32"):
+    cfg = ArtifactConfig(name=name, kind=kind, variant=variant,
+                         dataset=dataset, k1=k1, k2=k2, batch=batch, amp=amp,
+                         save_indices=save_indices, feat_dtype=feat_dtype)
+    s = DATASETS[dataset]
+    if variant.startswith("fsa") and batch:
+        fp = k1 * max(k2, 1)
+        # artifacts in this repo execute on CPU-PJRT: the L2 budget binds
+        # (tile_sweep bench, EXPERIMENTS.md §Perf); TPU would use
+        # VMEM_BUDGET_BYTES via the same rule.
+        nbytes = 2 if feat_dtype in ("bfloat16", "float16") else 4
+        cfg.tile = tile or tiling.seed_tile(
+            batch, fp, s.d, dtype_bytes=nbytes,
+            budget=tiling.CPU_L2_BUDGET_BYTES)
+        cfg.vmem_tile_bytes = tiling.tile_bytes(cfg.tile, fp, s.d, nbytes)
+    if kind == "train":
+        cfg.inputs = train_input_specs(cfg)
+        cfg.outputs = train_output_specs(cfg)
+    elif kind == "eval":
+        cfg.inputs = eval_input_specs(cfg)
+        cfg.outputs = eval_output_specs(cfg)
+    return cfg
+
+
+def _train_name(variant, ds, k1, k2, batch, amp, save_indices=True):
+    si = "" if save_indices else "_nosave"
+    k = f"f{k1}x{k2}" if k2 else f"f{k1}"
+    return f"{variant}_train_{ds}_{k}_b{batch}_{_amp_tag(amp)}{si}"
+
+
+def all_configs():
+    """Every artifact to compile — the per-experiment index of DESIGN.md §8."""
+    cfgs = []
+    seen = set()
+
+    def add(cfg):
+        if cfg.name not in seen:
+            seen.add(cfg.name)
+            cfgs.append(cfg)
+
+    # Main grid: Table 1 / Fig 1 / Table 2 / Figs 4,5 (and Fig 3 subset)
+    for ds in MAIN_DATASETS:
+        for (k1, k2) in MAIN_FANOUTS:
+            for b in MAIN_BATCHES:
+                for variant in ("fsa2", "dgl2"):
+                    add(_mk(_train_name(variant, ds, k1, k2, b, True),
+                            "train", variant, ds, k1, k2, b, amp=True))
+
+    # Fig 2: batch scaling on products_sim, fanout 15-10
+    for b in FIG2_BATCHES:
+        for variant in ("fsa2", "dgl2"):
+            add(_mk(_train_name(variant, "products_sim", 15, 10, b, True),
+                    "train", variant, "products_sim", 15, 10, b, amp=True))
+
+    # Ablation: AMP off (arxiv_sim 15-10 b1024)
+    for variant in ("fsa2", "dgl2"):
+        add(_mk(_train_name(variant, "arxiv_sim", 15, 10, 1024, False),
+                "train", variant, "arxiv_sim", 15, 10, 1024, amp=False))
+
+    # Ablation: 1-hop vs 2-hop (k=10, b1024, all datasets)
+    for ds in MAIN_DATASETS:
+        for variant in ("fsa1", "dgl1"):
+            add(_mk(_train_name(variant, ds, 10, 0, 1024, True),
+                    "train", variant, ds, 10, 0, 1024, amp=True))
+
+    # Ablation: save_indices off (forward-profiling mode, paper §3.2)
+    add(_mk(_train_name("fsa2", "products_sim", 15, 10, 1024, True, False),
+            "train", "fsa2", "products_sim", 15, 10, 1024, amp=True,
+            save_indices=False))
+
+    # Eval (validation accuracy for the e2e / time-to-accuracy examples)
+    for ds in MAIN_DATASETS + ["tiny"]:
+        add(_mk(f"fsa2_eval_{ds}_f15x10_b512", "eval", "fsa2", ds,
+                15, 10, 512, amp=False))
+        add(_mk(f"dgl2_eval_{ds}_f15x10_b512", "eval", "dgl2", ds,
+                15, 10, 512, amp=False))
+
+    # Tiny configs for rust integration tests + quickstart
+    for variant in ("fsa2", "dgl2"):
+        add(_mk(_train_name(variant, "tiny", 5, 3, 64, True),
+                "train", variant, "tiny", 5, 3, 64, amp=True))
+    add(_mk(_train_name("fsa1", "tiny", 5, 0, 64, True),
+            "train", "fsa1", "tiny", 5, 0, 64, amp=True))
+    add(_mk(_train_name("dgl1", "tiny", 5, 0, 64, True),
+            "train", "dgl1", "tiny", 5, 0, 64, amp=True))
+
+    # §Perf seed-tile sweep (the paper's "autotuning over block sizes"
+    # future-work knob): same config, different HBM<->VMEM schedules.
+    for tile in (8, 16, 32, 64, 256, 1024):
+        add(_mk(f"fsa2_train_products_sim_f15x10_b1024_ampOn_t{tile}",
+                "train", "fsa2", "products_sim", 15, 10, 1024, amp=True,
+                tile=tile))
+
+    # §Perf feature-dtype dispatch (paper §4: the fused 2-hop runs in the
+    # native tensor dtype): bf16 features halve the gather traffic.
+    add(_mk("fsa2_train_products_sim_f15x10_b1024_ampOn_xbf16",
+            "train", "fsa2", "products_sim", 15, 10, 1024, amp=True,
+            feat_dtype="bfloat16"))
+
+    # Table 3 profile stages (baseline decomposition, products 15-10 b1024)
+    ds, k1, k2, b = PROFILE_CONFIG
+    for stage in ("gather", "layer1", "layer2", "loss",
+                  "bwd_layer2", "bwd_layer1", "adamw"):
+        add(_stage_config(stage, ds, k1, k2, b))
+
+    return cfgs
+
+
+def _stage_config(stage, ds, k1, k2, b):
+    """Stage-split baseline executables for Table 3 (DESIGN.md §8)."""
+    s = DATASETS[ds]
+    h = HIDDEN
+    f1 = 1 + k1
+    cfg = ArtifactConfig(
+        name=f"stage_{stage}_{ds}_f{k1}x{k2}_b{b}",
+        kind="stage", variant=stage, dataset=ds, k1=k1, k2=k2, batch=b)
+    t = TensorSpec
+    if stage == "gather":
+        cfg.inputs = [t("x", (s.n, s.d), "float32"),
+                      t("f1", (b, f1), "int32"),
+                      t("s2", (b, f1, k2), "int32")]
+        cfg.outputs = [t("xf1", (b, f1, s.d), "float32"),
+                       t("block", (b, f1, k2, s.d), "float32")]
+    elif stage == "layer1":
+        cfg.inputs = [t("xf1", (b, f1, s.d), "float32"),
+                      t("block", (b, f1, k2, s.d), "float32"),
+                      t("s2", (b, f1, k2), "int32"),
+                      t("w1_self", (s.d, h), "float32"),
+                      t("w1_neigh", (s.d, h), "float32"),
+                      t("b1", (h,), "float32")]
+        cfg.outputs = [t("h1", (b, f1, h), "float32")]
+    elif stage == "layer2":
+        cfg.inputs = [t("h1", (b, f1, h), "float32"),
+                      t("f1", (b, f1), "int32"),
+                      t("w2_self", (h, s.c), "float32"),
+                      t("w2_neigh", (h, s.c), "float32"),
+                      t("b2", (s.c,), "float32")]
+        cfg.outputs = [t("logits", (b, s.c), "float32")]
+    elif stage == "loss":
+        cfg.inputs = [t("logits", (b, s.c), "float32"),
+                      t("labels", (b,), "int32")]
+        cfg.outputs = [t("loss", (), "float32"),
+                       t("glogits", (b, s.c), "float32")]
+    elif stage == "bwd_layer2":
+        cfg.inputs = [t("h1", (b, f1, h), "float32"),
+                      t("f1", (b, f1), "int32"),
+                      t("glogits", (b, s.c), "float32"),
+                      t("w2_self", (h, s.c), "float32"),
+                      t("w2_neigh", (h, s.c), "float32")]
+        cfg.outputs = [t("gw2_self", (h, s.c), "float32"),
+                       t("gw2_neigh", (h, s.c), "float32"),
+                       t("gb2", (s.c,), "float32"),
+                       t("gh1", (b, f1, h), "float32")]
+    elif stage == "bwd_layer1":
+        cfg.inputs = [t("xf1", (b, f1, s.d), "float32"),
+                      t("block", (b, f1, k2, s.d), "float32"),
+                      t("s2", (b, f1, k2), "int32"),
+                      t("h1", (b, f1, h), "float32"),
+                      t("gh1", (b, f1, h), "float32"),
+                      t("w1_self", (s.d, h), "float32"),
+                      t("w1_neigh", (s.d, h), "float32"),
+                      t("b1", (h,), "float32")]
+        cfg.outputs = [t("gw1_self", (s.d, h), "float32"),
+                       t("gw1_neigh", (s.d, h), "float32"),
+                       t("gb1", (h,), "float32")]
+    elif stage == "adamw":
+        params = dgl_param_specs(ds, h)
+        cfg.inputs = (params
+                      + [t(f"g_{p.name}", p.shape, p.dtype) for p in params]
+                      + [t(f"m_{p.name}", p.shape, p.dtype) for p in params]
+                      + [t(f"v_{p.name}", p.shape, p.dtype) for p in params]
+                      + [t("step", (), "float32")])
+        cfg.outputs = ([t(f"new_{p.name}", p.shape, p.dtype) for p in params]
+                       + [t(f"new_m_{p.name}", p.shape, p.dtype) for p in params]
+                       + [t(f"new_v_{p.name}", p.shape, p.dtype) for p in params])
+    else:
+        raise ValueError(stage)
+    return cfg
+
+
+def manifest_dict():
+    """The structure serialized to artifacts/manifest.json."""
+    return {
+        "version": 1,
+        "hidden": HIDDEN,
+        "adamw": ADAMW,
+        "datasets": {
+            name: {
+                "stands_for": s.stands_for, "n": s.n, "e_cap": s.e_cap,
+                "avg_deg": s.avg_deg, "degree_law": s.degree_law,
+                "d": s.d, "c": s.c, "gen_seed": s.gen_seed,
+            }
+            for name, s in DATASETS.items()
+        },
+        "artifacts": [
+            {
+                "name": c.name, "file": c.file, "kind": c.kind,
+                "variant": c.variant, "dataset": c.dataset,
+                "k1": c.k1, "k2": c.k2, "batch": c.batch,
+                "amp": c.amp, "save_indices": c.save_indices,
+                "hidden": c.hidden, "tile": c.tile,
+                "feat_dtype": c.feat_dtype,
+                "vmem_tile_bytes": c.vmem_tile_bytes,
+                "inputs": [
+                    {"name": i.name, "shape": list(i.shape), "dtype": i.dtype}
+                    for i in c.inputs
+                ],
+                "outputs": [
+                    {"name": o.name, "shape": list(o.shape), "dtype": o.dtype}
+                    for o in c.outputs
+                ],
+            }
+            for c in all_configs()
+        ],
+    }

@@ -1,0 +1,16 @@
+"""L1: fused sample+aggregate Pallas kernels and their support code.
+
+Public surface:
+  rng.mix / rng.rand_counter      -- the cross-language deterministic RNG
+  tiling.seed_tile                -- VMEM-budget tile-size selection
+  fused_1hop.fused_sample_agg_1hop
+  fused_2hop.fused_sample_agg_2hop
+  ref                             -- independent numpy oracle (tests only)
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from . import rng, tiling, fused_1hop, fused_2hop  # noqa: E402,F401
+from .fused_1hop import fused_sample_agg_1hop  # noqa: E402,F401
+from .fused_2hop import fused_sample_agg_2hop  # noqa: E402,F401

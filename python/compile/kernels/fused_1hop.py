@@ -1,0 +1,95 @@
+"""Fused 1-hop sample + mean-aggregate Pallas kernel (paper Alg. 1).
+
+CUDA original: warp-per-seed, lanes stride the D feature dims, reservoir
+sampling in registers. TPU re-expression (DESIGN.md §4): seed-tile per grid
+step; the whole [TB, k] index tile is computed vectorized on the VPU and the
+[TB, k, D] gathered feature tile lives only in VMEM for the duration of one
+grid step — no block tensor is ever materialized in HBM.
+
+The 1-hop path is FP32-only, matching the paper (§4 Implementation).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+from .sampling import masked_mean, sample_neighbors
+
+
+def _kernel(rowptr_ref, col_ref, x_ref, seeds_ref, base_ref,
+            out_ref, samples_ref, takes_ref, *, k, save_indices):
+    seeds = seeds_ref[...]                      # [TB] i32 seed tile
+    base = base_ref[0]
+    samples = sample_neighbors(rowptr_ref[...], col_ref[...], seeds, k, base, hop=0)
+    valid = samples >= 0                        # [TB, k]
+    gathered = x_ref[jnp.maximum(samples.reshape(-1), 0), :]
+    gathered = gathered.reshape(samples.shape + (x_ref.shape[-1],))
+    out_ref[...] = masked_mean(gathered, valid, axis=1)
+    if save_indices:
+        samples_ref[...] = samples
+        takes_ref[...] = valid.sum(axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "save_indices", "tile"))
+def fused_sample_agg_1hop(rowptr, col, x, seeds, base_seed, *, k,
+                          save_indices=True, tile=None):
+    """Fused 1-hop GraphSAGE-mean forward.
+
+    Args:
+      rowptr: [N+1] int32 CSR row pointers.
+      col:    [E] int32 CSR column indices (E may be E_cap-padded).
+      x:      [N, D] float32 node features (1-hop is FP32-only, per paper §4).
+      seeds:  [B] int32 frontier; B must be divisible by the seed tile.
+      base_seed: [1] uint64 — the paper's ``base_seed``.
+      k:      fanout (static).
+      save_indices: also emit ``samples [B,k]`` and ``takes [B]`` for the
+        deterministic backward replay (paper §3.3).
+      tile:   seed-tile override; default picked by tiling.seed_tile.
+
+    Returns:
+      (agg [B,D] f32, samples [B,k] i32, takes [B] i32) when save_indices,
+      else agg only.
+    """
+    if x.dtype != jnp.float32:
+        raise TypeError(f"1-hop kernel is FP32-only (paper §4), got {x.dtype}")
+    b = seeds.shape[0]
+    n, d = x.shape
+    tb = tile or tiling.seed_tile(b, k, d)
+    if b % tb != 0:
+        raise ValueError(f"batch {b} not divisible by seed tile {tb}")
+    grid = b // tb
+
+    out_shapes = [jax.ShapeDtypeStruct((b, d), jnp.float32)]
+    out_specs = [pl.BlockSpec((tb, d), lambda i: (i, 0))]
+    if save_indices:
+        out_shapes += [
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ]
+        out_specs += [
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ]
+
+    kernel = functools.partial(_kernel, k=k, save_indices=save_indices)
+    if not save_indices:
+        def kernel(rp, c, xr, s, bs, o, *, _inner=_kernel):  # noqa: F811
+            return _inner(rp, c, xr, s, bs, o, None, None, k=k, save_indices=False)
+
+    res = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(rowptr.shape, lambda i: (0,)),
+            pl.BlockSpec(col.shape, lambda i: (0,)),
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec(base_seed.shape, lambda i: (0,)),
+        ],
+        out_specs=out_specs if save_indices else out_specs[0],
+        out_shape=out_shapes if save_indices else out_shapes[0],
+        interpret=True,  # CPU-PJRT execution; real-TPU lowering is Mosaic-only
+    )(rowptr, col, x, seeds, base_seed)
+    return tuple(res) if save_indices else res

@@ -1,0 +1,110 @@
+"""Fused 2-hop sample + mean-aggregate Pallas kernel (paper Alg. 2).
+
+CUDA original: block-per-root with shared-memory buffers U[k1], W[k1,k2].
+TPU re-expression (DESIGN.md §4): seed-tile per grid step; both hops'
+index tiles ([TB,k1] and [TB,k1,k2]) are computed vectorized, and the
+gathered [TB,k1,k2,D] feature tile exists only in VMEM for one grid step.
+The nested mean uses the paper's k_eff rule exactly:
+
+    X̂_r[d] = (1/k1_eff) Σ_{u∈U valid} (1/k2_eff(u)) Σ_{w∈W[u] valid} X_w[d]
+
+Dtype dispatch matches the paper (§4): features may be f32 / bf16 / f16;
+accumulation is always f32; the output is cast back to the feature dtype.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+from .sampling import masked_mean, sample_neighbors
+
+SUPPORTED_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+
+def _kernel(rowptr_ref, col_ref, x_ref, seeds_ref, base_ref,
+            out_ref, s1_ref, s2_ref, *, k1, k2, save_indices):
+    seeds = seeds_ref[...]                       # [TB] i32 root tile
+    base = base_ref[0]
+    rowptr = rowptr_ref[...]
+    col = col_ref[...]
+
+    s1 = sample_neighbors(rowptr, col, seeds, k1, base, hop=0)   # [TB,k1]
+    s2 = sample_neighbors(rowptr, col, s1, k2, base, hop=1)      # [TB,k1,k2]
+
+    valid1 = s1 >= 0
+    valid2 = s2 >= 0
+    gathered = x_ref[jnp.maximum(s2.reshape(-1), 0), :]
+    gathered = gathered.reshape(s2.shape + (x_ref.shape[-1],))   # [TB,k1,k2,D]
+
+    inner = masked_mean(gathered, valid2, axis=2)                # [TB,k1,D] f32
+    # A valid u whose own neighborhood is empty contributes 0 but still
+    # counts toward k1_eff (paper Alg. 2 lines 7-15).
+    outer = masked_mean(inner, valid1, axis=1)                   # [TB,D] f32
+    out_ref[...] = outer.astype(out_ref.dtype)
+    if save_indices:
+        s1_ref[...] = s1
+        s2_ref[...] = s2
+
+
+@functools.partial(jax.jit, static_argnames=("k1", "k2", "save_indices", "tile"))
+def fused_sample_agg_2hop(rowptr, col, x, seeds, base_seed, *, k1, k2,
+                          save_indices=True, tile=None):
+    """Fused 2-hop GraphSAGE-mean forward.
+
+    Args:
+      rowptr: [N+1] int32 CSR row pointers.
+      col:    [E] int32 CSR column indices (E_cap-padded allowed).
+      x:      [N, D] features; f32 / bf16 / f16 (paper §4 dtype dispatch).
+      seeds:  [B] int32 roots.
+      base_seed: [1] uint64.
+      k1, k2: per-hop fanouts (static).
+      save_indices: also emit s1 [B,k1], s2 [B,k1,k2] for backward replay.
+      tile:   seed-tile override.
+
+    Returns:
+      (agg [B,D] x.dtype, s1, s2) when save_indices, else agg only.
+    """
+    if x.dtype not in [jnp.dtype(t) for t in SUPPORTED_DTYPES]:
+        raise TypeError(f"2-hop kernel supports f32/bf16/f16, got {x.dtype}")
+    b = seeds.shape[0]
+    n, d = x.shape
+    tb = tile or tiling.seed_tile(b, k1 * k2, d, dtype_bytes=x.dtype.itemsize)
+    if b % tb != 0:
+        raise ValueError(f"batch {b} not divisible by seed tile {tb}")
+    grid = b // tb
+
+    out_shapes = [jax.ShapeDtypeStruct((b, d), x.dtype)]
+    out_specs = [pl.BlockSpec((tb, d), lambda i: (i, 0))]
+    if save_indices:
+        out_shapes += [
+            jax.ShapeDtypeStruct((b, k1), jnp.int32),
+            jax.ShapeDtypeStruct((b, k1, k2), jnp.int32),
+        ]
+        out_specs += [
+            pl.BlockSpec((tb, k1), lambda i: (i, 0)),
+            pl.BlockSpec((tb, k1, k2), lambda i: (i, 0, 0)),
+        ]
+
+    kernel = functools.partial(_kernel, k1=k1, k2=k2, save_indices=save_indices)
+    if not save_indices:
+        def kernel(rp, c, xr, s, bs, o, *, _inner=_kernel):  # noqa: F811
+            return _inner(rp, c, xr, s, bs, o, None, None,
+                          k1=k1, k2=k2, save_indices=False)
+
+    res = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(rowptr.shape, lambda i: (0,)),
+            pl.BlockSpec(col.shape, lambda i: (0,)),
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec(base_seed.shape, lambda i: (0,)),
+        ],
+        out_specs=out_specs if save_indices else out_specs[0],
+        out_shape=out_shapes if save_indices else out_shapes[0],
+        interpret=True,  # CPU-PJRT execution; real-TPU lowering is Mosaic-only
+    )(rowptr, col, x, seeds, base_seed)
+    return tuple(res) if save_indices else res

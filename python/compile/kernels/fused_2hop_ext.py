@@ -1,0 +1,233 @@
+"""Extended fused 2-hop kernel — the paper's §9 future-work items made real:
+
+  (i)  *weighted / importance sampling*: an optional per-edge weight array
+       changes the per-edge contribution inside the fused reduction while
+       reusing the same index-save/replay path (the paper's exact plan:
+       "simply change the per-edge contribution in the fused reduction");
+  (ii) *richer aggregators*: ``max`` alongside ``mean``, with the kernel's
+       memory footprint unchanged (one gathered tile, one output tile).
+
+Weighted mean per root r:
+    X̂_r[d] = (1/k1_eff) Σ_{u valid} ( Σ_{w valid} ew(u,w)·X_w[d] / Σ ew )
+Max:
+    X̂_r[d] = max_{(u,w) valid} X_w[d]          (0 where nothing is valid)
+
+Both keep the DESIGN.md §5 sampling rule and counter RNG, so samples are
+bitwise identical to the plain kernel's. ``sample_positions`` additionally
+returns CSR *positions* so edge weights (stored per CSR slot) can be
+gathered for the sampled edges.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import rng, tiling
+from .sampling import masked_mean
+
+
+def sample_positions(rowptr, col, nodes, k, base, hop):
+    """Like sampling.sample_neighbors but returns (ids, csr_positions);
+    positions are -1 padded exactly where ids are."""
+    if col.shape[0] == 0:
+        pad = jnp.full(nodes.shape + (k,), -1, jnp.int32)
+        return pad, pad
+    valid_node = nodes >= 0
+    u = jnp.maximum(nodes, 0).astype(jnp.int32)
+    start = rowptr[u]
+    deg = rowptr[u + jnp.int32(1)] - start
+
+    slots_u = jnp.arange(k, dtype=jnp.uint64)
+    slots_i = jnp.arange(k, dtype=jnp.int32)
+    r = rng.rand_counter(base, u[..., None], hop, slots_u)
+    deg_u = jnp.maximum(deg, 1).astype(jnp.uint64)
+    idx_rand = (r % deg_u[..., None]).astype(jnp.int32)
+
+    take_all = deg <= k
+    pos_seq = start[..., None] + jnp.minimum(
+        slots_i, jnp.maximum(deg - 1, 0)[..., None])
+    pos = jnp.where(take_all[..., None], pos_seq,
+                    start[..., None] + idx_rand)
+    v = col[jnp.maximum(pos, 0)]
+    invalid = (~valid_node[..., None]) | (deg[..., None] == 0) \
+        | (take_all[..., None] & (slots_i >= deg[..., None]))
+    ids = jnp.where(invalid, jnp.int32(-1), v.astype(jnp.int32))
+    positions = jnp.where(invalid, jnp.int32(-1), pos.astype(jnp.int32))
+    return ids, positions
+
+
+def _kernel(rowptr_ref, col_ref, ew_ref, x_ref, seeds_ref, base_ref,
+            out_ref, s2_ref, p2_ref, *, k1, k2, aggregator, weighted):
+    seeds = seeds_ref[...]
+    base = base_ref[0]
+    rowptr = rowptr_ref[...]
+    col = col_ref[...]
+
+    s1, _ = sample_positions(rowptr, col, seeds, k1, base, hop=0)
+    s2, p2 = sample_positions(rowptr, col, s1, k2, base, hop=1)
+
+    valid1 = s1 >= 0                                     # [TB,k1]
+    valid2 = s2 >= 0                                     # [TB,k1,k2]
+    gathered = x_ref[jnp.maximum(s2.reshape(-1), 0), :]
+    gathered = gathered.reshape(s2.shape + (x_ref.shape[-1],))
+
+    if aggregator == "max":
+        neg = jnp.float32(-3.0e38)
+        masked = jnp.where(valid2[..., None],
+                           gathered.astype(jnp.float32), neg)
+        flat = masked.reshape(masked.shape[0], -1, masked.shape[-1])
+        mx = flat.max(axis=1)                            # [TB,D]
+        any_valid = valid2.reshape(valid2.shape[0], -1).any(axis=1)
+        out = jnp.where(any_valid[:, None], mx, 0.0)
+    elif weighted:
+        w = ew_ref[jnp.maximum(p2.reshape(-1), 0)]
+        w = w.reshape(p2.shape) * valid2.astype(jnp.float32)  # [TB,k1,k2]
+        num = (gathered.astype(jnp.float32) * w[..., None]).sum(axis=2)
+        den = jnp.maximum(w.sum(axis=2), 1e-12)
+        inner = num / den[..., None]                     # [TB,k1,D]
+        out = masked_mean(inner, valid1, axis=1)
+    else:
+        inner = masked_mean(gathered, valid2, axis=2)
+        out = masked_mean(inner, valid1, axis=1)
+    out_ref[...] = out.astype(out_ref.dtype)
+    s2_ref[...] = s2
+    p2_ref[...] = p2
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k1", "k2", "aggregator", "tile"))
+def fused_sample_agg_2hop_ext(rowptr, col, edge_weights, x, seeds, base_seed,
+                              *, k1, k2, aggregator="mean", tile=None):
+    """Extended fused 2-hop forward.
+
+    Args:
+      edge_weights: [E] float32 per-CSR-slot weights, or None (uniform).
+      aggregator: "mean" (optionally weighted) or "max".
+
+    Returns:
+      (agg [B,D], s2 [B,k1,k2] sampled ids, p2 [B,k1,k2] CSR positions).
+    """
+    if aggregator not in ("mean", "max"):
+        raise ValueError(f"unknown aggregator {aggregator!r}")
+    weighted = edge_weights is not None
+    if not weighted:
+        edge_weights = jnp.ones((max(col.shape[0], 1),), jnp.float32)
+    b = seeds.shape[0]
+    n, d = x.shape
+    tb = tile or tiling.seed_tile(b, k1 * k2, d,
+                                  dtype_bytes=x.dtype.itemsize)
+    if b % tb != 0:
+        raise ValueError(f"batch {b} not divisible by seed tile {tb}")
+    grid = b // tb
+
+    kernel = functools.partial(_kernel, k1=k1, k2=k2, aggregator=aggregator,
+                               weighted=weighted)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(rowptr.shape, lambda i: (0,)),
+            pl.BlockSpec(col.shape, lambda i: (0,)),
+            pl.BlockSpec(edge_weights.shape, lambda i: (0,)),
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec(base_seed.shape, lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((tb, k1, k2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, k1, k2), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), x.dtype),
+            jax.ShapeDtypeStruct((b, k1, k2), jnp.int32),
+            jax.ShapeDtypeStruct((b, k1, k2), jnp.int32),
+        ],
+        interpret=True,
+    )(rowptr, col, edge_weights, x, seeds, base_seed)
+
+
+def make_fsa2_weighted_op(k1, k2, tile=None):
+    """Weighted-mean fused op with saved-index replay backward.
+
+    The backward reuses the replay path with the per-edge contribution
+    w/(Σw · k1_eff) — exactly the paper's future-work recipe.
+    """
+
+    @jax.custom_vjp
+    def op(rowptr, col, edge_weights, x, seeds, base_seed):
+        out, _, _ = fused_sample_agg_2hop_ext(
+            rowptr, col, edge_weights, x, seeds, base_seed,
+            k1=k1, k2=k2, aggregator="mean", tile=tile)
+        return out
+
+    def fwd(rowptr, col, edge_weights, x, seeds, base_seed):
+        out, s2, p2 = fused_sample_agg_2hop_ext(
+            rowptr, col, edge_weights, x, seeds, base_seed,
+            k1=k1, k2=k2, aggregator="mean", tile=tile)
+        # replay needs hop-1 validity for the paper's k1_eff rule (a valid
+        # u with an empty neighborhood still counts in the denominator)
+        from .sampling import sample_neighbors
+        s1 = sample_neighbors(rowptr, col, seeds, k1, base_seed[0], hop=0)
+        return out, (s1, s2, p2, edge_weights, x.shape[0])
+
+    def bwd(res, g):
+        s1, s2, p2, ew, n = res
+        g = g.astype(jnp.float32)
+        valid2 = (s2 >= 0).astype(jnp.float32)
+        w = ew[jnp.maximum(p2, 0)] * valid2                 # [B,k1,k2]
+        den = jnp.maximum(w.sum(-1), 1e-12)                 # [B,k1]
+        valid1 = (s1 >= 0).astype(jnp.float32)              # [B,k1]
+        k1_eff = jnp.maximum(valid1.sum(-1), 1.0)           # [B]
+        coef = w / (den[..., None] * k1_eff[:, None, None])
+        contrib = g[:, None, None, :] * coef[..., None]
+        flat = jnp.maximum(s2.reshape(-1), 0)
+        dx = jnp.zeros((n, g.shape[1]), jnp.float32).at[flat].add(
+            contrib.reshape(-1, g.shape[1]))
+        return None, None, None, dx, None, None
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def make_fsa2_max_op(k1, k2, tile=None):
+    """Max-aggregator fused op; backward routes the gradient to the argmax
+    element per (root, feature) — the standard max subgradient, replayed
+    from the saved indices."""
+
+    @jax.custom_vjp
+    def op(rowptr, col, x, seeds, base_seed):
+        out, _, _ = fused_sample_agg_2hop_ext(
+            rowptr, col, None, x, seeds, base_seed,
+            k1=k1, k2=k2, aggregator="max", tile=tile)
+        return out
+
+    def fwd(rowptr, col, x, seeds, base_seed):
+        out, s2, _ = fused_sample_agg_2hop_ext(
+            rowptr, col, None, x, seeds, base_seed,
+            k1=k1, k2=k2, aggregator="max", tile=tile)
+        return out, (s2, x, out)
+
+    def bwd(res, g):
+        s2, x, out = res
+        g = g.astype(jnp.float32)
+        b, d = g.shape
+        valid2 = s2 >= 0                                    # [B,k1,k2]
+        flat_ids = jnp.maximum(s2.reshape(b, -1), 0)        # [B,K]
+        feats = x[flat_ids].astype(jnp.float32)             # [B,K,D]
+        neg = jnp.float32(-3.0e38)
+        masked = jnp.where(valid2.reshape(b, -1)[..., None], feats, neg)
+        arg = masked.argmax(axis=1)                         # [B,D]
+        any_valid = valid2.reshape(b, -1).any(axis=1)       # [B]
+        winner = jnp.take_along_axis(flat_ids, arg, axis=1) # [B,D] node ids
+        gsel = jnp.where(any_valid[:, None], g, 0.0)
+        n = x.shape[0]
+        dx = jnp.zeros((n, d), jnp.float32)
+        rows = winner.reshape(-1)
+        cols = jnp.tile(jnp.arange(d), b)
+        dx = dx.at[rows, cols].add(gsel.reshape(-1))
+        return None, None, dx.astype(x.dtype), None, None
+
+    op.defvjp(fwd, bwd)
+    return op

@@ -1,0 +1,146 @@
+"""Independent numpy oracle for the fused kernels (tests only).
+
+Deliberately written as scalar python-int arithmetic + numpy loops, sharing
+NO code with the jnp kernels: the u64 wrap-around semantics are emulated
+with explicit ``& MASK64`` on python ints, and sampling/aggregation follow
+the paper's Algorithms 1-2 line by line. pytest compares the Pallas kernels
+against this oracle bit-for-bit on indices and to fp tolerance on features.
+
+Also provides the paper's *reservoir* sampler (uniform WITHOUT replacement,
+Alg. 1 line 6) used to validate the Rust reservoir implementation and to
+quantify the with-replacement substitution documented in DESIGN.md §3.
+"""
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+GAMMA = 0x9E3779B97F4A7C15
+M2 = 0xBF58476D1CE4E5B9
+M3 = 0x94D049BB133111EB
+GOLDEN32 = 0x9E3779B1
+
+
+def mix(z: int) -> int:
+    """splitmix64 finalizer on a python int (wraps at 64 bits)."""
+    z = (z + GAMMA) & MASK64
+    z = ((z ^ (z >> 30)) * M2) & MASK64
+    z = ((z ^ (z >> 27)) * M3) & MASK64
+    return (z ^ (z >> 31)) & MASK64
+
+
+def rand_counter(base: int, node: int, hop: int, slot: int) -> int:
+    """u64 random word for (base, node, hop, slot) — DESIGN.md §5 contract."""
+    key = mix((node * GOLDEN32 + hop) & MASK64)
+    return mix((base + key + slot) & MASK64)
+
+
+def sample_neighbors(rowptr, col, node: int, k: int, base: int, hop: int):
+    """Sampling rule of DESIGN.md §5 for one node; returns list of len k."""
+    if node < 0:
+        return [-1] * k
+    start, end = int(rowptr[node]), int(rowptr[node + 1])
+    deg = end - start
+    if deg == 0:
+        return [-1] * k
+    if deg <= k:
+        return [int(col[start + i]) if i < deg else -1 for i in range(k)]
+    out = []
+    for i in range(k):
+        r = rand_counter(base, node, hop, i)
+        out.append(int(col[start + (r % deg)]))
+    return out
+
+
+def reservoir_sample(rowptr, col, node: int, k: int, base: int, hop: int):
+    """Paper's Alg. 1 reservoir sampler (uniform WITHOUT replacement).
+
+    Vitter's Algorithm R driven by the same counter RNG: slot i>=k draws
+    j = rand(base,node,hop,i) % (i+1) and replaces reservoir[j] if j<k.
+    Matches rust/src/sampler/reservoir.rs exactly.
+    """
+    if node < 0:
+        return [-1] * k
+    start, end = int(rowptr[node]), int(rowptr[node + 1])
+    deg = end - start
+    if deg == 0:
+        return [-1] * k
+    if deg <= k:
+        return [int(col[start + i]) if i < deg else -1 for i in range(k)]
+    res = [int(col[start + i]) for i in range(k)]
+    for i in range(k, deg):
+        j = rand_counter(base, node, hop, i) % (i + 1)
+        if j < k:
+            res[j] = int(col[start + i])
+    return res
+
+
+def fused_1hop(rowptr, col, x, seeds, base: int, k: int):
+    """Oracle for Alg. 1: returns (agg [B,D] f64, samples [B,k], takes [B])."""
+    b = len(seeds)
+    d = x.shape[1]
+    agg = np.zeros((b, d), np.float64)
+    samples = np.full((b, k), -1, np.int32)
+    takes = np.zeros(b, np.int32)
+    for bi, u in enumerate(seeds):
+        s = sample_neighbors(rowptr, col, int(u), k, base, hop=0)
+        samples[bi] = s
+        valid = [v for v in s if v >= 0]
+        takes[bi] = len(valid)
+        if valid:
+            agg[bi] = x[valid].astype(np.float64).mean(axis=0)
+    return agg, samples, takes
+
+
+def fused_2hop(rowptr, col, x, seeds, base: int, k1: int, k2: int):
+    """Oracle for Alg. 2: returns (agg [B,D] f64, s1 [B,k1], s2 [B,k1,k2])."""
+    b = len(seeds)
+    d = x.shape[1]
+    agg = np.zeros((b, d), np.float64)
+    s1_all = np.full((b, k1), -1, np.int32)
+    s2_all = np.full((b, k1, k2), -1, np.int32)
+    for bi, r in enumerate(seeds):
+        s1 = sample_neighbors(rowptr, col, int(r), k1, base, hop=0)
+        s1_all[bi] = s1
+        acc = np.zeros(d, np.float64)
+        k1_eff = 0
+        for ui, u in enumerate(s1):
+            s2 = sample_neighbors(rowptr, col, u, k2, base, hop=1)
+            s2_all[bi, ui] = s2
+            if u < 0:
+                continue
+            k1_eff += 1
+            valid = [w for w in s2 if w >= 0]
+            if valid:
+                acc += x[valid].astype(np.float64).mean(axis=0)
+        agg[bi] = acc / max(1, k1_eff)
+    return agg, s1_all, s2_all
+
+
+def backward_2hop_sized(s1, s2, g, n):
+    """dX [n,D] from saved indices and upstream grad g [B,D] (paper §3.2)."""
+    b, k1, k2 = s2.shape
+    d = g.shape[1]
+    dx = np.zeros((n, d), np.float64)
+    for bi in range(b):
+        k1_eff = max(1, int((s1[bi] >= 0).sum()))
+        for ui in range(k1):
+            if s1[bi, ui] < 0:
+                continue
+            valid = s2[bi, ui][s2[bi, ui] >= 0]
+            k2_eff = max(1, len(valid))
+            wgt = 1.0 / (k1_eff * k2_eff)
+            for w in valid:
+                dx[w] += wgt * g[bi]
+    return dx
+
+
+def backward_1hop_sized(samples, takes, g, n):
+    """dX [n,D] for the 1-hop op: dX[v] += g[u]/max(1,take(u)) (paper §3.1)."""
+    b, k = samples.shape
+    d = g.shape[1]
+    dx = np.zeros((n, d), np.float64)
+    for bi in range(b):
+        t = max(1, int(takes[bi]))
+        for v in samples[bi]:
+            if v >= 0:
+                dx[v] += g[bi] / t
+    return dx

@@ -1,0 +1,40 @@
+"""Deterministic counter RNG — the cross-language contract (DESIGN.md §5).
+
+One pure function of (base_seed, node, hop, slot); no RNG state, no ordering
+dependence. Implemented identically in:
+  * here (jnp uint64) — used inside the Pallas kernels,
+  * ``rust/src/rng/mod.rs`` — used by the host-side baseline sampler,
+  * ``python/compile/kernels/ref.py`` — independent numpy oracle.
+Golden-vector tests on both sides pin the bit patterns.
+
+The finalizer is splitmix64's (Vigna); the paper derives its xorshift stream
+from a splitmix seed the same way (§3.1, [1][15] in the paper).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+# splitmix64 constants
+GAMMA = np.uint64(0x9E3779B97F4A7C15)
+M2 = np.uint64(0xBF58476D1CE4E5B9)
+M3 = np.uint64(0x94D049BB133111EB)
+# 32-bit golden ratio used to decorrelate node ids from hop/slot counters
+GOLDEN32 = np.uint64(0x9E3779B1)
+
+
+def mix(z):
+    """splitmix64 finalizer over uint64 arrays (elementwise, wrap-around)."""
+    z = (z + GAMMA).astype(jnp.uint64)
+    z = ((z ^ (z >> jnp.uint64(30))) * M2).astype(jnp.uint64)
+    z = ((z ^ (z >> jnp.uint64(27))) * M3).astype(jnp.uint64)
+    return (z ^ (z >> jnp.uint64(31))).astype(jnp.uint64)
+
+
+def node_key(node, hop):
+    """Per-(node,hop) stream key. ``node`` int32/int64 array (>=0), hop scalar."""
+    n = node.astype(jnp.uint64)
+    return mix(n * GOLDEN32 + jnp.uint64(hop))
+
+
+def rand_counter(base, node, hop, slot):
+    """u64 random word for (base_seed, node, hop, slot). All broadcastable."""
+    return mix(base + node_key(node, hop) + slot.astype(jnp.uint64))

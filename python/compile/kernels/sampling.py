@@ -1,0 +1,72 @@
+"""Vectorized neighbor sampling shared by the 1-hop and 2-hop kernels.
+
+Sampling rule (DESIGN.md §5), per node u with degree deg, fanout k, slot i:
+  * u invalid (-1) or deg == 0      -> -1 (padded, paper §3.2)
+  * deg <= k ("take-all")           -> neighbor i if i < deg else -1
+  * deg >  k                        -> col[start + rand(base,u,hop,i) % deg]
+
+The rule is pure elementwise u64 math over (base, node, hop, slot), so a
+whole [TB, k] tile of sample indices is computed in one vectorized pass —
+this is the VPU-friendly re-expression of the paper's per-warp reservoir
+loop (DESIGN.md §4). The same rule is implemented by the Rust host sampler
+(rust/src/sampler) so the baseline and fused paths draw identical
+neighborhoods for a given (base_seed, seed order).
+"""
+import jax.numpy as jnp
+
+from . import rng
+
+
+def sample_neighbors(rowptr, col, nodes, k, base, hop):
+    """Sample up to ``k`` neighbors for each node in ``nodes``.
+
+    Args:
+      rowptr: [N+1] int32 CSR row pointers (jnp array or pallas-read value).
+      col:    [E] int32 CSR column indices.
+      nodes:  int32 array of any shape; -1 entries are invalid and propagate.
+      k:      static fanout.
+      base:   scalar uint64 base seed.
+      hop:    static hop counter (0 = first hop, 1 = second hop, ...).
+
+    Returns:
+      int32 array of shape nodes.shape + (k,), -1-padded.
+    """
+    if col.shape[0] == 0:
+        # edgeless graph (static property): everything pads to -1
+        return jnp.full(nodes.shape + (k,), -1, jnp.int32)
+    valid_node = nodes >= 0
+    u = jnp.maximum(nodes, 0).astype(jnp.int32)
+    start = rowptr[u]
+    deg = rowptr[u + jnp.int32(1)] - start
+
+    slots_u = jnp.arange(k, dtype=jnp.uint64)
+    slots_i = jnp.arange(k, dtype=jnp.int32)
+    r = rng.rand_counter(base, u[..., None], hop, slots_u)  # [..., k] u64
+    deg_u = jnp.maximum(deg, 1).astype(jnp.uint64)
+    idx_rand = (r % deg_u[..., None]).astype(jnp.int32)
+
+    take_all = deg <= k
+    # take-all path: slot i -> neighbor i (clamped; masked below)
+    pos_seq = start[..., None] + jnp.minimum(slots_i, jnp.maximum(deg - 1, 0)[..., None])
+    pos = jnp.where(take_all[..., None], pos_seq, start[..., None] + idx_rand)
+    v = col[jnp.maximum(pos, 0)]
+
+    invalid = (
+        ~valid_node[..., None]
+        | (deg[..., None] == 0)
+        | (take_all[..., None] & (slots_i >= deg[..., None]))
+    )
+    return jnp.where(invalid, jnp.int32(-1), v.astype(jnp.int32))
+
+
+def masked_mean(feats, valid, axis):
+    """Mean of ``feats`` over ``axis`` counting only ``valid`` slots.
+
+    Divides by max(1, #valid) — the paper's k_eff rule (Alg. 1 line 13,
+    Alg. 2 lines 7/9). ``feats`` is accumulated in f32 regardless of input
+    dtype (the MXU/VPU accumulate in f32 as well).
+    """
+    vf = valid.astype(jnp.float32)
+    num = (feats.astype(jnp.float32) * vf[..., None]).sum(axis=axis)
+    den = jnp.maximum(vf.sum(axis=axis), 1.0)
+    return num / den[..., None]

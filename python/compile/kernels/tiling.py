@@ -1,0 +1,86 @@
+"""Seed-tile selection: the TPU adaptation of the paper's CUDA launch shape.
+
+The CUDA operator maps one warp per seed (1-hop) / one block per root (2-hop)
+and stages U[k1], W[k1,k2] in shared memory. On TPU the analogous resource is
+VMEM: each Pallas grid step processes a *tile* of TB seeds, and the gathered
+feature tile [TB, k1, k2, D] must fit a VMEM budget so that it streams
+HBM -> VMEM -> reduce without ever being materialized in HBM
+(DESIGN.md §4 Hardware-Adaptation).
+
+interpret=True gives no TPU wallclock, so alongside the tile size we compute
+*structural* estimates (VMEM footprint, MXU-relevant flop balance) that are
+reported in EXPERIMENTS.md §Perf.
+"""
+from dataclasses import dataclass
+
+# Default budget: a conservative quarter of the ~16 MiB TPU v4 VMEM, leaving
+# room for double buffering and the output tile.
+VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+VMEM_TOTAL_BYTES = 16 * 1024 * 1024
+
+# Budget for CPU-PJRT execution (this repo's benchmark target): the gathered
+# tile should stay L2-resident. Measured on the flagship config
+# (products_sim 15-10 B=1024): tile 8 (300 KiB) = 10.8 ms/step vs tile 64
+# (2.3 MiB, the VMEM default) = 18.0 ms/step — see EXPERIMENTS.md §Perf and
+# `cargo bench --bench tile_sweep`. On a real TPU the VMEM budget binds
+# instead; both are just the "fit the fast memory" rule of DESIGN.md §4.
+CPU_L2_BUDGET_BYTES = 320 * 1024
+
+
+def seed_tile(batch, fanout_product, feat_dim, dtype_bytes=4,
+              budget=VMEM_BUDGET_BYTES, min_tile=8):
+    """Largest power-of-two tile TB dividing ``batch`` whose gathered feature
+    tile TB*fanout_product*feat_dim*dtype_bytes fits ``budget``.
+
+    Falls back to min(min_tile, batch) when even the minimum tile overflows
+    (the tile then simply spills — interpret mode doesn't care, and on real
+    hardware the kernel would switch to feature tiling, see DESIGN.md §4).
+    """
+    if batch <= 0:
+        raise ValueError(f"batch must be positive, got {batch}")
+    tb = 1
+    while tb * 2 <= batch and batch % (tb * 2) == 0:
+        tb *= 2
+    # shrink until the tile fits
+    while tb > min_tile and tile_bytes(tb, fanout_product, feat_dim, dtype_bytes) > budget:
+        tb //= 2
+    return max(1, min(tb, batch))
+
+
+def tile_bytes(tb, fanout_product, feat_dim, dtype_bytes=4):
+    """Bytes of the gathered feature tile plus index/output tiles."""
+    gather = tb * fanout_product * feat_dim * dtype_bytes
+    indices = tb * fanout_product * 4
+    out = tb * feat_dim * 4
+    return gather + indices + out
+
+
+@dataclass
+class KernelEstimate:
+    """Structural perf estimate for one kernel configuration (DESIGN.md §4)."""
+
+    tile: int
+    grid: int
+    vmem_tile_bytes: int
+    vmem_utilization: float       # tile bytes / VMEM budget
+    hbm_bytes_per_step: int       # feature words actually read from HBM
+    flops_per_step: int           # adds for the mean reduction
+    arithmetic_intensity: float   # flops / HBM byte (VPU-bound reduction)
+
+
+def estimate(batch, k1, k2, feat_dim, dtype_bytes=4, budget=VMEM_BUDGET_BYTES):
+    """Estimate for the fused 2-hop kernel (k2=0 means 1-hop)."""
+    fp = k1 * max(k2, 1)
+    tb = seed_tile(batch, fp, feat_dim, dtype_bytes, budget)
+    tbytes = tile_bytes(tb, fp, feat_dim, dtype_bytes)
+    hbm = batch * fp * feat_dim * dtype_bytes  # each sampled feature read once
+    flops = batch * fp * feat_dim              # one add per gathered element
+    return KernelEstimate(
+        tile=tb,
+        grid=(batch + tb - 1) // tb,
+        vmem_tile_bytes=tbytes,
+        vmem_utilization=tbytes / budget,
+        hbm_bytes_per_step=hbm,
+        flops_per_step=flops,
+        arithmetic_intensity=flops / max(hbm, 1),
+    )

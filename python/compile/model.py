@@ -1,0 +1,186 @@
+"""L2: the FuseSampleAgg model — fused op + light SAGE head (paper §5).
+
+The fused operator is wrapped in ``jax.custom_vjp`` implementing the paper's
+§3.3 saved-index replay backward: the forward emits the sampled indices, and
+the backward scatter-adds the upstream gradient with weights 1/max(1,take)
+(1-hop) or 1/(k1_eff · k2_eff) (2-hop). With ``save_indices=False`` the
+backward returns zeros for X — the paper's forward-profiling mode.
+
+Head (paper: "fused sampler + mean aggregator followed by a light SAGE-style
+head"):   h = relu(X[seeds] @ W_self + agg @ W_neigh + b)
+          logits = h @ W_out + b_out
+AMP mode runs the head matmuls in bf16 with f32 accumulation/master weights;
+the fused op itself stays in the feature dtype (paper §5).
+"""
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_sample_agg_1hop, fused_sample_agg_2hop
+from .optim import adamw_update
+
+# ---------------------------------------------------------------------------
+# fused ops with saved-index replay backward
+# ---------------------------------------------------------------------------
+
+
+def make_fsa2_op(k1, k2, save_indices=True, tile=None):
+    """2-hop fused op with custom vjp. Fanouts are static (closed over)."""
+
+    @jax.custom_vjp
+    def op(rowptr, col, x, seeds, base_seed):
+        if save_indices:
+            out, _, _ = fused_sample_agg_2hop(
+                rowptr, col, x, seeds, base_seed, k1=k1, k2=k2,
+                save_indices=True, tile=tile)
+            return out
+        return fused_sample_agg_2hop(
+            rowptr, col, x, seeds, base_seed, k1=k1, k2=k2,
+            save_indices=False, tile=tile)
+
+    def fwd(rowptr, col, x, seeds, base_seed):
+        if save_indices:
+            out, s1, s2 = fused_sample_agg_2hop(
+                rowptr, col, x, seeds, base_seed, k1=k1, k2=k2,
+                save_indices=True, tile=tile)
+            return out, (s1, s2, x.shape[0])
+        out = fused_sample_agg_2hop(
+            rowptr, col, x, seeds, base_seed, k1=k1, k2=k2,
+            save_indices=False, tile=tile)
+        return out, (None, None, x.shape[0])
+
+    def bwd(res, g):
+        s1, s2, n = res
+        xdtype = g.dtype  # fused 2-hop output dtype == feature dtype
+        if s1 is None:
+            # paper §3.2: without saved indices the autograd path returns
+            # zeros for X (forward-profiling only)
+            dx = jnp.zeros((n, g.shape[1]), xdtype)
+            return None, None, dx, None, None
+        g = g.astype(jnp.float32)
+        valid1 = (s1 >= 0).astype(jnp.float32)              # [B,k1]
+        valid2 = (s2 >= 0).astype(jnp.float32)              # [B,k1,k2]
+        k1_eff = jnp.maximum(valid1.sum(-1), 1.0)           # [B]
+        k2_eff = jnp.maximum(valid2.sum(-1), 1.0)           # [B,k1]
+        w = valid2 / (k1_eff[:, None, None] * k2_eff[:, :, None])
+        contrib = g[:, None, None, :] * w[..., None]        # [B,k1,k2,D]
+        flat = jnp.maximum(s2.reshape(-1), 0)
+        dx = jnp.zeros((n, g.shape[1]), jnp.float32).at[flat].add(
+            contrib.reshape(-1, g.shape[1]))
+        return None, None, dx.astype(xdtype), None, None
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def make_fsa1_op(k, save_indices=True, tile=None):
+    """1-hop fused op with custom vjp (FP32-only, paper §4)."""
+
+    @jax.custom_vjp
+    def op(rowptr, col, x, seeds, base_seed):
+        if save_indices:
+            out, _, _ = fused_sample_agg_1hop(
+                rowptr, col, x, seeds, base_seed, k=k,
+                save_indices=True, tile=tile)
+            return out
+        return fused_sample_agg_1hop(
+            rowptr, col, x, seeds, base_seed, k=k,
+            save_indices=False, tile=tile)
+
+    def fwd(rowptr, col, x, seeds, base_seed):
+        if save_indices:
+            out, samples, takes = fused_sample_agg_1hop(
+                rowptr, col, x, seeds, base_seed, k=k,
+                save_indices=True, tile=tile)
+            return out, (samples, takes, x.shape[0])
+        out = fused_sample_agg_1hop(
+            rowptr, col, x, seeds, base_seed, k=k,
+            save_indices=False, tile=tile)
+        return out, (None, None, x.shape[0])
+
+    def bwd(res, g):
+        samples, takes, n = res
+        if samples is None:
+            return None, None, jnp.zeros((n, g.shape[1]), jnp.float32), None, None
+        valid = (samples >= 0).astype(jnp.float32)          # [B,k]
+        t = jnp.maximum(takes.astype(jnp.float32), 1.0)     # [B]
+        w = valid / t[:, None]                              # [B,k]
+        contrib = g[:, None, :] * w[..., None]              # [B,k,D]
+        flat = jnp.maximum(samples.reshape(-1), 0)
+        dx = jnp.zeros((n, g.shape[1]), jnp.float32).at[flat].add(
+            contrib.reshape(-1, g.shape[1]))
+        return None, None, dx, None, None
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+# ---------------------------------------------------------------------------
+# head / loss / train step
+# ---------------------------------------------------------------------------
+
+
+def _mm(a, w, amp):
+    """Matmul with optional bf16 AMP compute and f32 accumulation."""
+    if amp:
+        return jnp.matmul(a.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                          preferred_element_type=jnp.float32)
+    return jnp.matmul(a, w)
+
+
+def sage_head(params, x_self, agg, amp):
+    """Light SAGE-style head (paper §5): one mean-combine layer + classifier."""
+    w_self, w_neigh, b_hidden, w_out, b_out = params
+    h = jax.nn.relu(_mm(x_self, w_self, amp)
+                    + _mm(agg.astype(jnp.float32), w_neigh, amp)
+                    + b_hidden)
+    return _mm(h, w_out, amp) + b_out
+
+
+def cross_entropy(logits, labels):
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.take_along_axis(lp, labels[:, None].astype(jnp.int32), axis=1).mean()
+
+
+def fsa_forward(params, rowptr, col, x, seeds, base_seed, *, hops, k1, k2,
+                amp, save_indices=True, tile=None):
+    """Forward pass of the fused model; returns logits [B, C]."""
+    if hops == 2:
+        op = make_fsa2_op(k1, k2, save_indices, tile)
+    else:
+        op = make_fsa1_op(k1, save_indices, tile)
+    agg = op(rowptr, col, x, seeds, base_seed)
+    x_self = x[seeds]
+    return sage_head(params, x_self, agg, amp)
+
+
+def make_fsa_train_step(*, hops, k1, k2, amp, save_indices=True, tile=None):
+    """Builds the jittable train step:
+    (params, m, v, step, rowptr, col, x, seeds, labels, base_seed)
+        -> (new_params..., new_m..., new_v..., loss)
+    Arg/result order is the contract recorded in the manifest.
+    """
+
+    def loss_fn(params, rowptr, col, x, seeds, labels, base_seed):
+        logits = fsa_forward(params, rowptr, col, x, seeds, base_seed,
+                             hops=hops, k1=k1, k2=k2, amp=amp,
+                             save_indices=save_indices, tile=tile)
+        return cross_entropy(logits, labels)
+
+    def train_step(params, m, v, step, rowptr, col, x, seeds, labels, base_seed):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, rowptr, col, x, seeds, labels, base_seed)
+        new_p, new_m, new_v = adamw_update(params, grads, m, v, step)
+        return new_p + new_m + new_v + (loss,)
+
+    return train_step
+
+
+def make_fsa_eval(*, hops, k1, k2, tile=None):
+    """Eval pass: (params, rowptr, col, x, seeds, base_seed) -> (logits,)."""
+
+    def eval_fn(params, rowptr, col, x, seeds, base_seed):
+        return (fsa_forward(params, rowptr, col, x, seeds, base_seed,
+                            hops=hops, k1=k1, k2=k2, amp=False,
+                            save_indices=False, tile=tile),)
+
+    return eval_fn

@@ -1,0 +1,31 @@
+"""In-graph AdamW (paper §5: lr 3e-3, weight decay 5e-4, AMP-safe f32 states).
+
+The optimizer lives inside the train-step executable so one PJRT dispatch
+covers forward + backward + update, matching the paper's "per-step timings
+include forward, backward, and optimizer step". Decoupled weight decay per
+Loshchilov & Hutter (paper ref [11]).
+"""
+import jax.numpy as jnp
+
+from .configs import ADAMW
+
+
+def adamw_update(params, grads, m, v, step, *, lr=ADAMW["lr"], b1=ADAMW["b1"],
+                 b2=ADAMW["b2"], eps=ADAMW["eps"], wd=ADAMW["wd"]):
+    """One AdamW step over flat tuples. ``step`` is the 0-based step count.
+
+    Returns (new_params, new_m, new_v), all flat tuples in input order.
+    """
+    t = step + 1.0
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        g = g.astype(jnp.float32)
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * g * g
+        mhat = mi / (1.0 - b1 ** t)
+        vhat = vi / (1.0 - b2 ** t)
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+        new_p.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+    return tuple(new_p), tuple(new_m), tuple(new_v)

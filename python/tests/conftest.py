@@ -1,0 +1,37 @@
+"""Shared fixtures: deterministic random CSR graphs + feature tensors."""
+import numpy as np
+import pytest
+
+
+def make_csr(n, max_deg, seed, isolated_fraction=0.1, e_pad=0):
+    """Random CSR with controlled degree range and some isolated nodes."""
+    rng = np.random.default_rng(seed)
+    deg = rng.integers(0, max_deg + 1, n)
+    deg[rng.random(n) < isolated_fraction] = 0
+    rowptr = np.zeros(n + 1, np.int32)
+    rowptr[1:] = np.cumsum(deg)
+    e = int(rowptr[-1])
+    col = rng.integers(0, n, e + e_pad).astype(np.int32)
+    return rowptr, col
+
+
+@pytest.fixture
+def small_graph():
+    """(rowptr, col, x) on 200 nodes, 16 features."""
+    rowptr, col = make_csr(200, 12, seed=7)
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal((200, 16)).astype(np.float32)
+    return rowptr, col, x
+
+
+@pytest.fixture
+def medium_graph():
+    """(rowptr, col, x) on 2000 nodes with hubs, 32 features."""
+    rng = np.random.default_rng(9)
+    deg = rng.integers(0, 20, 2000)
+    deg[::97] = 300  # hubs
+    rowptr = np.zeros(2001, np.int32)
+    rowptr[1:] = np.cumsum(deg)
+    col = rng.integers(0, 2000, int(rowptr[-1])).astype(np.int32)
+    x = rng.standard_normal((2000, 32)).astype(np.float32)
+    return rowptr, col, x

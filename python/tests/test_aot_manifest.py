@@ -1,0 +1,107 @@
+"""AOT configuration registry + manifest integrity (the rust contract)."""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import aot, configs
+
+
+def test_artifact_names_unique():
+    names = [c.name for c in configs.all_configs()]
+    assert len(names) == len(set(names))
+
+
+def test_main_grid_present():
+    cfgs = {c.name for c in configs.all_configs()}
+    for ds in configs.MAIN_DATASETS:
+        for (k1, k2) in configs.MAIN_FANOUTS:
+            for b in configs.MAIN_BATCHES:
+                for v in ("fsa2", "dgl2"):
+                    name = f"{v}_train_{ds}_f{k1}x{k2}_b{b}_ampOn"
+                    assert name in cfgs, name
+
+
+def test_profile_stages_present():
+    stages = [c for c in configs.all_configs() if c.kind == "stage"]
+    assert sorted(c.variant for c in stages) == sorted(
+        ["gather", "layer1", "layer2", "loss", "bwd_layer2", "bwd_layer1",
+         "adamw"])
+
+
+def test_train_io_contract():
+    cfg = next(c for c in configs.all_configs()
+               if c.name == "fsa2_train_tiny_f5x3_b64_ampOn")
+    names = [s.name for s in cfg.inputs]
+    # params..., m..., v..., step, then data
+    assert names[:5] == ["w_self", "w_neigh", "b_hidden", "w_out", "b_out"]
+    assert names[5] == "m_w_self" and names[10] == "v_w_self"
+    assert names[15] == "step"
+    assert names[16:] == ["rowptr", "col", "x", "seeds", "labels",
+                          "base_seed"]
+    out_names = [s.name for s in cfg.outputs]
+    assert out_names[0] == "new_w_self"
+    assert out_names[-1] == "loss"
+
+
+def test_dgl_train_io_contract():
+    cfg = next(c for c in configs.all_configs()
+               if c.name == "dgl2_train_tiny_f5x3_b64_ampOn")
+    names = [s.name for s in cfg.inputs]
+    assert len([n for n in names if n.startswith("m_")]) == 6
+    assert names[-4:] == ["x", "f1", "s2", "labels"]
+    s2 = next(s for s in cfg.inputs if s.name == "s2")
+    assert tuple(s2.shape) == (64, 1 + 5, 3)
+
+
+def test_tile_recorded_for_fsa_only():
+    for c in configs.all_configs():
+        if c.kind == "train" and c.variant.startswith("fsa"):
+            assert c.tile > 0 and c.batch % c.tile == 0
+        if c.variant.startswith("dgl"):
+            assert c.tile == 0
+
+
+def test_lowering_matches_contract_tiny():
+    """Actually lower the tiny configs and check output arity (the same
+    assertion aot.py enforces for every artifact at build time)."""
+    for name in ["fsa2_train_tiny_f5x3_b64_ampOn",
+                 "dgl1_train_tiny_f5_b64_ampOn"]:
+        cfg = next(c for c in configs.all_configs() if c.name == name)
+        import jax
+        fn = aot.build_fn(cfg)
+        avals = [aot.spec_to_aval(s) for s in cfg.inputs]
+        lowered = jax.jit(fn).lower(*avals)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text and len(text) > 1000
+
+
+def test_manifest_dict_serializable_and_complete():
+    m = configs.manifest_dict()
+    text = json.dumps(m)
+    back = json.loads(text)
+    assert back["version"] == 1
+    assert set(back["datasets"]) == {"tiny", "arxiv_sim", "reddit_sim",
+                                     "products_sim"}
+    assert len(back["artifacts"]) == len(configs.all_configs())
+    a = back["artifacts"][0]
+    for key in ["name", "file", "kind", "variant", "inputs", "outputs"]:
+        assert key in a
+
+
+def test_spec_to_aval_dtypes():
+    s = configs.TensorSpec("x", (2, 3), "uint64")
+    aval = aot.spec_to_aval(s)
+    assert aval.shape == (2, 3)
+    assert aval.dtype == np.dtype("uint64")
+
+
+def test_built_manifest_on_disk_matches_registry():
+    path = pathlib.Path(__file__).parents[2] / "artifacts" / "manifest.json"
+    if not path.exists():
+        pytest.skip("artifacts not built")
+    on_disk = json.loads(path.read_text())
+    assert len(on_disk["artifacts"]) == len(configs.all_configs())
+    for c in configs.all_configs():
+        assert (path.parent / c.file).exists(), f"missing {c.file}"

@@ -1,0 +1,124 @@
+"""Baseline (DGL-like) model + the stage-split pipeline (Table 3 stages):
+the chained stages must reproduce the monolithic train step exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import baseline, stages
+from compile.optim import adamw_update
+
+from .conftest import make_csr
+
+
+def setup(seed=0, n=120, d=8, h=16, c=5, b=8, k1=4, k2=3):
+    rng = np.random.default_rng(seed)
+    rowptr, col = make_csr(n, 8, seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    f1 = rng.integers(0, n, (b, 1 + k1)).astype(np.int32)
+    s2 = rng.integers(0, n, (b, 1 + k1, k2)).astype(np.int32)
+    # sprinkle padding
+    f1[0, 2] = -1
+    s2[1, :, 1] = -1
+    labels = rng.integers(0, c, b).astype(np.int32)
+    params = (
+        (rng.standard_normal((d, h)) * 0.2).astype(np.float32),
+        (rng.standard_normal((d, h)) * 0.2).astype(np.float32),
+        np.zeros(h, np.float32),
+        (rng.standard_normal((h, c)) * 0.2).astype(np.float32),
+        (rng.standard_normal((h, c)) * 0.2).astype(np.float32),
+        np.zeros(c, np.float32),
+    )
+    return x, f1, s2, labels, params
+
+
+def test_dgl2_forward_shape_and_padding():
+    x, f1, s2, labels, params = setup()
+    logits = baseline.dgl2_forward(params, x, f1, s2, amp=False)
+    assert logits.shape == (8, 5)
+    # padding a frontier slot must not change other rows
+    f1_mod = f1.copy()
+    f1_mod[3, 4] = -1
+    logits2 = baseline.dgl2_forward(params, x, f1_mod, s2, amp=False)
+    np.testing.assert_array_equal(np.asarray(logits[:3]),
+                                  np.asarray(logits2[:3]))
+    assert not np.array_equal(np.asarray(logits[3]), np.asarray(logits2[3]))
+
+
+def test_dgl2_mean_semantics_tiny_case():
+    # B=1, k1=1, k2=1: hand-computable
+    x = np.array([[1.0], [2.0], [4.0]], np.float32)
+    f1 = np.array([[0, 1]], np.int32)       # seed 0, neighbor 1
+    s2 = np.array([[[2], [0]]], np.int32)   # seed's hop2 = {2}, nbr's = {0}
+    d, h, c = 1, 1, 1
+    eye = np.ones((d, h), np.float32)
+    params = (eye, eye, np.zeros(h, np.float32),
+              np.ones((h, c), np.float32), np.ones((h, c), np.float32),
+              np.zeros(c, np.float32))
+    logits = baseline.dgl2_forward(params, x, f1, s2, amp=False)
+    # h1[seed] = relu(x0 + x2) = 5 ; h1[nbr] = relu(x1 + x0) = 3
+    # logits = h_self + mean(h_neigh) = 5 + 3 = 8
+    np.testing.assert_allclose(np.asarray(logits), [[8.0]], rtol=1e-6)
+
+
+def test_dgl1_forward_runs_and_masks():
+    x, f1, _, labels, params = setup(1)
+    logits = baseline.dgl1_forward(params, x, f1, amp=False)
+    assert logits.shape == (8, 5)
+
+
+def test_train_step_reduces_loss():
+    x, f1, s2, labels, params = setup(2)
+    ts = baseline.make_dgl_train_step(hops=2, amp=True)
+    m = tuple(np.zeros_like(p) for p in params)
+    v = tuple(np.zeros_like(p) for p in params)
+    jts = jax.jit(ts)
+    losses = []
+    p = params
+    for step in range(25):
+        out = jts(p, m, v, jnp.float32(step), x, f1, s2, labels)
+        p, m, v = out[:6], out[6:12], out[12:18]
+        losses.append(float(out[18]))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_stage_pipeline_equals_monolithic_step():
+    """gather→layer1→layer2→loss→bwd2→bwd1→adamw == one train step."""
+    x, f1, s2, labels, params = setup(3)
+    m = tuple(np.zeros_like(p) for p in params)
+    v = tuple(np.zeros_like(p) for p in params)
+    step = jnp.float32(0)
+
+    # monolithic (same AMP mode as the stages)
+    ts = baseline.make_dgl_train_step(hops=2, amp=stages.AMP)
+    mono = jax.jit(ts)(params, m, v, step, x, f1, s2, labels)
+
+    # staged
+    xf1, block = stages.stage_gather(x, f1, s2)
+    (h1,) = stages.stage_layer1(xf1, block, s2, *params[:3])
+    (logits,) = stages.stage_layer2(h1, f1, *params[3:])
+    loss, glogits = stages.stage_loss(logits, labels)
+    gw2s, gw2n, gb2, gh1 = stages.stage_bwd_layer2(h1, f1, glogits,
+                                                   params[3], params[4])
+    gw1s, gw1n, gb1 = stages.stage_bwd_layer1(xf1, block, s2, h1, gh1,
+                                              *params[:3])
+    grads = (gw1s, gw1n, gb1, gw2s, gw2n, gb2)
+    new_p, new_m, new_v = adamw_update(params, grads, m, v, step)
+
+    np.testing.assert_allclose(float(mono[18]), float(loss), rtol=1e-5)
+    for i in range(6):
+        np.testing.assert_allclose(np.asarray(mono[i]), np.asarray(new_p[i]),
+                                   rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(mono[6 + i]),
+                                   np.asarray(new_m[i]),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_materialization_barrier_present():
+    """the gather stage must survive into the lowered HLO as a real
+    intermediate (opt-barrier), not be fused away."""
+    x, f1, s2, labels, params = setup(4)
+    lowered = jax.jit(
+        lambda x_, f1_, s2_: baseline.gather_blocks(x_, f1_, s2_)).lower(
+            x, f1, s2)
+    hlo = lowered.compiler_ir("hlo").as_hlo_text()
+    assert "opt-barrier" in hlo, "materialization barrier was optimized away"

@@ -1,0 +1,74 @@
+"""The bf16 feature path (paper §4 dtype dispatch; §Perf optimization):
+train step with bfloat16 features must lower, run, and learn."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import configs, model
+
+from .conftest import make_csr
+
+
+def test_bf16_artifact_registered():
+    cfg = next((c for c in configs.all_configs()
+                if c.name.endswith("_xbf16")), None)
+    assert cfg is not None
+    x_spec = next(s for s in cfg.inputs if s.name == "x")
+    assert x_spec.dtype == "bfloat16"
+    # tile accounts for the 2-byte element size (more seeds fit the budget)
+    f32_twin = next(c for c in configs.all_configs()
+                    if c.name == "fsa2_train_products_sim_f15x10_b1024_ampOn")
+    assert cfg.tile >= f32_twin.tile
+
+
+def test_bf16_train_step_learns():
+    rng = np.random.default_rng(0)
+    n, d, h, c, b = 120, 8, 16, 5, 16
+    rowptr, col = make_csr(n, 8, 0)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    seeds = rng.integers(0, n, b).astype(np.int32)
+    labels = rng.integers(0, c, b).astype(np.int32)
+    params = (
+        (rng.standard_normal((d, h)) * 0.2).astype(np.float32),
+        (rng.standard_normal((d, h)) * 0.2).astype(np.float32),
+        np.zeros(h, np.float32),
+        (rng.standard_normal((h, c)) * 0.2).astype(np.float32),
+        np.zeros(c, np.float32),
+    )
+    m = tuple(np.zeros_like(p) for p in params)
+    v = tuple(np.zeros_like(p) for p in params)
+    ts = jax.jit(model.make_fsa_train_step(hops=2, k1=4, k2=3, amp=True))
+    x_bf16 = jnp.asarray(x, jnp.bfloat16)
+    base = np.array([42], np.uint64)
+    losses = []
+    p = params
+    for step in range(25):
+        out = ts(p, m, v, jnp.float32(step), rowptr, col, x_bf16, seeds,
+                 labels, base)
+        p, m, v = out[:5], out[5:10], out[10:15]
+        losses.append(float(out[15]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] * 0.85, losses
+
+
+def test_bf16_forward_close_to_f32():
+    rng = np.random.default_rng(1)
+    n, d, h, c, b = 100, 8, 16, 5, 16
+    rowptr, col = make_csr(n, 8, 1)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    seeds = rng.integers(0, n, b).astype(np.int32)
+    params = (
+        (rng.standard_normal((d, h)) * 0.2).astype(np.float32),
+        (rng.standard_normal((d, h)) * 0.2).astype(np.float32),
+        np.zeros(h, np.float32),
+        (rng.standard_normal((h, c)) * 0.2).astype(np.float32),
+        np.zeros(c, np.float32),
+    )
+    base = np.array([9], np.uint64)
+    f32 = model.fsa_forward(params, rowptr, col, x, seeds, base,
+                            hops=2, k1=4, k2=3, amp=False)
+    bf16 = model.fsa_forward(params, rowptr, col,
+                             jnp.asarray(x, jnp.bfloat16), seeds, base,
+                             hops=2, k1=4, k2=3, amp=False)
+    np.testing.assert_allclose(np.asarray(bf16, np.float32),
+                               np.asarray(f32), rtol=0.1, atol=0.1)

@@ -1,0 +1,136 @@
+"""Fused 2-hop Pallas kernel vs the numpy oracle (paper Alg. 2),
+including the dtype dispatch (f32/bf16/f16) of the paper's §4."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_sample_agg_2hop, ref
+
+from .conftest import make_csr
+
+
+def run_both(rowptr, col, x, seeds, base, k1, k2, tile=None):
+    agg, s1, s2 = fused_sample_agg_2hop(
+        rowptr, col, x, seeds, np.array([base], np.uint64), k1=k1, k2=k2,
+        tile=tile)
+    ragg, rs1, rs2 = ref.fused_2hop(rowptr, col, x, seeds, base, k1, k2)
+    return np.asarray(agg), np.asarray(s1), np.asarray(s2), ragg, rs1, rs2
+
+
+def test_matches_oracle(small_graph):
+    rowptr, col, x = small_graph
+    seeds = np.arange(32, dtype=np.int32)
+    agg, s1, s2, ragg, rs1, rs2 = run_both(rowptr, col, x, seeds, 42, 5, 3)
+    np.testing.assert_array_equal(s1, rs1)
+    np.testing.assert_array_equal(s2, rs2)
+    np.testing.assert_allclose(agg, ragg, rtol=1e-5, atol=1e-6)
+
+
+def test_k_eff_semantics_with_isolated_neighbors():
+    # node 0 -> {1, 2}; node 1 isolated; node 2 -> {0}
+    rowptr = np.array([0, 2, 2, 3], np.int32)
+    col = np.array([1, 2, 0], np.int32)
+    x = np.array([[10.0], [20.0], [30.0]], np.float32)
+    seeds = np.array([0], np.int32)
+    agg, s1, s2 = fused_sample_agg_2hop(
+        rowptr, col, x, seeds, np.array([0], np.uint64), k1=2, k2=2)
+    # u=1 valid but deg 0 -> contributes 0, still counts in k1_eff (=2);
+    # u=2 contributes mean(X[0]) = 10. So agg = (0 + 10)/2 = 5.
+    np.testing.assert_allclose(np.asarray(agg), [[5.0]])
+    ragg, _, _ = ref.fused_2hop(rowptr, col, x, seeds, 0, 2, 2)
+    np.testing.assert_allclose(np.asarray(agg), ragg)
+
+
+def test_second_hop_uses_hop1_counter(small_graph):
+    """s2 rows must equal 1-hop sampling of the s1 nodes at hop=1 — the
+    property that makes baseline/fused comparisons paired."""
+    rowptr, col, x = small_graph
+    seeds = np.arange(16, dtype=np.int32)
+    _, s1, s2, _, _, _ = run_both(rowptr, col, x, seeds, 99, 4, 3)
+    for bi in range(16):
+        for ui in range(4):
+            u = int(s1[bi, ui])
+            want = ref.sample_neighbors(rowptr, col, u, 3, 99, hop=1)
+            np.testing.assert_array_equal(s2[bi, ui], want)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.bfloat16, 0.05),
+                                        (jnp.float16, 0.01)])
+def test_dtype_dispatch(small_graph, dtype, rtol):
+    rowptr, col, x = small_graph
+    seeds = np.arange(32, dtype=np.int32)
+    agg, s1, s2 = fused_sample_agg_2hop(
+        rowptr, col, jnp.asarray(x, dtype), seeds,
+        np.array([5], np.uint64), k1=4, k2=3)
+    assert agg.dtype == jnp.dtype(dtype)
+    ragg, rs1, rs2 = ref.fused_2hop(rowptr, col, x, seeds, 5, 4, 3)
+    np.testing.assert_array_equal(np.asarray(s1), rs1)  # indices exact
+    np.testing.assert_allclose(np.asarray(agg, np.float64), ragg,
+                               rtol=rtol, atol=rtol)
+
+
+def test_save_indices_off(small_graph):
+    rowptr, col, x = small_graph
+    seeds = np.arange(16, dtype=np.int32)
+    out = fused_sample_agg_2hop(rowptr, col, x, seeds,
+                                np.array([3], np.uint64), k1=4, k2=2,
+                                save_indices=False)
+    assert out.shape == (16, 16)
+    with_idx, _, _ = fused_sample_agg_2hop(
+        rowptr, col, x, seeds, np.array([3], np.uint64), k1=4, k2=2)
+    # same samples, same means up to XLA reassociation between the two graphs
+    np.testing.assert_allclose(np.asarray(out), np.asarray(with_idx),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_tile_override_changes_nothing(medium_graph):
+    rowptr, col, x = medium_graph
+    seeds = np.arange(64, dtype=np.int32)
+    base = np.array([11], np.uint64)
+    a = fused_sample_agg_2hop(rowptr, col, x, seeds, base, k1=5, k2=4,
+                              tile=8)
+    b = fused_sample_agg_2hop(rowptr, col, x, seeds, base, k1=5, k2=4,
+                              tile=64)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[2]), np.asarray(b[2]))
+
+
+def test_hubs_sampled_with_replacement(medium_graph):
+    """deg > k nodes use the counter-hash rule (the documented
+    with-replacement substitution, DESIGN.md §3)."""
+    rowptr, col, x = medium_graph
+    hub = int(np.argmax(np.diff(rowptr)))
+    seeds = np.full(8, hub, np.int32)
+    _, s1, _ = fused_sample_agg_2hop(rowptr, col, x, seeds,
+                                     np.array([1], np.uint64), k1=6, k2=2)
+    s1 = np.asarray(s1)
+    # every row identical (same node, same counters)
+    for r in range(1, 8):
+        np.testing.assert_array_equal(s1[r], s1[0])
+    deg = int(rowptr[hub + 1] - rowptr[hub])
+    start = int(rowptr[hub])
+    want = [int(col[start + ref.rand_counter(1, hub, 0, i) % deg])
+            for i in range(6)]
+    np.testing.assert_array_equal(s1[0], want)
+
+
+@given(
+    gseed=st.integers(0, 500),
+    base=st.integers(0, (1 << 64) - 1),
+    k1=st.integers(1, 6),
+    k2=st.integers(1, 5),
+    b=st.sampled_from([8, 16]),
+    d=st.sampled_from([1, 7, 16]),
+)
+@settings(max_examples=20, deadline=None)
+def test_sweep_matches_oracle(gseed, base, k1, k2, b, d):
+    rng = np.random.default_rng(gseed)
+    rowptr, col = make_csr(60, 10, gseed, isolated_fraction=0.2)
+    x = rng.standard_normal((60, d)).astype(np.float32)
+    seeds = rng.integers(0, 60, b).astype(np.int32)
+    agg, s1, s2, ragg, rs1, rs2 = run_both(rowptr, col, x, seeds, base,
+                                           k1, k2)
+    np.testing.assert_array_equal(s1, rs1)
+    np.testing.assert_array_equal(s2, rs2)
+    np.testing.assert_allclose(agg, ragg, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,144 @@
+"""Extended fused kernel (paper §9 future work): weighted mean + max
+aggregators, verified against straightforward numpy recomputation from the
+saved indices/positions, plus gradient replay checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+from compile.kernels.fused_2hop_ext import (fused_sample_agg_2hop_ext,
+                                            make_fsa2_max_op,
+                                            make_fsa2_weighted_op,
+                                            sample_positions)
+
+from .conftest import make_csr
+
+
+def setup(seed=0, n=150, d=8, b=16):
+    rng = np.random.default_rng(seed)
+    rowptr, col = make_csr(n, 10, seed, isolated_fraction=0.15)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    ew = rng.random(len(col)).astype(np.float32) + 0.1
+    seeds = rng.integers(0, n, b).astype(np.int32)
+    return rowptr, col, ew, x, seeds
+
+
+def test_sample_positions_consistent_with_ids():
+    rowptr, col, _, _, seeds = setup(1)
+    ids, pos = sample_positions(jnp.asarray(rowptr), jnp.asarray(col),
+                                jnp.asarray(seeds), 5, jnp.uint64(7), hop=0)
+    ids, pos = np.asarray(ids), np.asarray(pos)
+    assert ids.shape == pos.shape
+    mask = ids >= 0
+    np.testing.assert_array_equal(ids[mask], col[pos[mask]])
+    assert (pos[~mask] == -1).all()
+    # identical ids to the plain sampling rule
+    want = np.array([ref.sample_neighbors(rowptr, col, int(u), 5, 7, 0)
+                     for u in seeds])
+    np.testing.assert_array_equal(ids, want)
+
+
+def test_uniform_weights_equal_plain_mean():
+    rowptr, col, _, x, seeds = setup(2)
+    base = np.array([3], np.uint64)
+    ones = np.ones(len(col), np.float32)
+    agg_w, s2, _ = fused_sample_agg_2hop_ext(rowptr, col, ones, x, seeds,
+                                             base, k1=4, k2=3)
+    ragg, rs1, rs2 = ref.fused_2hop(rowptr, col, x, seeds, 3, 4, 3)
+    np.testing.assert_array_equal(np.asarray(s2), rs2)
+    np.testing.assert_allclose(np.asarray(agg_w), ragg, rtol=1e-4, atol=1e-5)
+
+
+def test_weighted_mean_matches_numpy_recompute():
+    rowptr, col, ew, x, seeds = setup(3)
+    base = np.array([11], np.uint64)
+    k1, k2 = 4, 3
+    agg, s2, p2 = fused_sample_agg_2hop_ext(rowptr, col, ew, x, seeds, base,
+                                            k1=k1, k2=k2)
+    agg, s2, p2 = np.asarray(agg), np.asarray(s2), np.asarray(p2)
+    for bi, root in enumerate(seeds):
+        # k1_eff counts every valid hop-1 sample (paper Alg. 2 rule), even
+        # ones whose own neighborhood is empty
+        s1 = ref.sample_neighbors(rowptr, col, int(root), k1, 11, 0)
+        k1_eff = max(1, sum(1 for u in s1 if u >= 0))
+        acc = np.zeros(x.shape[1])
+        for ui in range(k1):
+            valid = s2[bi, ui] >= 0
+            if not valid.any():
+                continue
+            w = ew[p2[bi, ui][valid]]
+            acc += (x[s2[bi, ui][valid]] * w[:, None]).sum(0) / w.sum()
+        want = acc / k1_eff
+        np.testing.assert_allclose(agg[bi], want, rtol=1e-4, atol=1e-5)
+
+
+def test_max_matches_numpy_recompute():
+    rowptr, col, _, x, seeds = setup(4)
+    base = np.array([5], np.uint64)
+    agg, s2, _ = fused_sample_agg_2hop_ext(rowptr, col, None, x, seeds, base,
+                                           k1=5, k2=2, aggregator="max")
+    agg, s2 = np.asarray(agg), np.asarray(s2)
+    for bi in range(len(seeds)):
+        ids = s2[bi][s2[bi] >= 0]
+        want = x[ids].max(0) if len(ids) else np.zeros(x.shape[1])
+        np.testing.assert_allclose(agg[bi], want, rtol=1e-5, atol=1e-6)
+
+
+def test_weighted_grad_replay():
+    rowptr, col, ew, x, seeds = setup(5)
+    op = make_fsa2_weighted_op(k1=4, k2=3)
+    base = np.array([21], np.uint64)
+
+    def fused_loss(x_in):
+        return (op(rowptr, col, ew, x_in, seeds, base)
+                * jnp.arange(1.0, x.shape[1] + 1.0)).sum()
+
+    # differentiable recomputation from saved indices
+    _, s2, p2 = fused_sample_agg_2hop_ext(rowptr, col, ew, x, seeds, base,
+                                          k1=4, k2=3)
+
+    from compile.kernels.sampling import sample_neighbors
+    s1 = sample_neighbors(jnp.asarray(rowptr), jnp.asarray(col),
+                          jnp.asarray(seeds), 4, jnp.uint64(21), hop=0)
+
+    def indexed_loss(x_in):
+        valid = (s2 >= 0)
+        w = ew[jnp.maximum(p2, 0)] * valid
+        num = (x_in[jnp.maximum(s2, 0)] * w[..., None]).sum(2)
+        den = jnp.maximum(w.sum(-1), 1e-12)
+        inner = num / den[..., None]
+        valid1 = s1 >= 0
+        k1_eff = jnp.maximum(valid1.sum(-1), 1)
+        outer = (inner * valid1[..., None]).sum(1) / k1_eff[..., None]
+        return (outer * jnp.arange(1.0, x.shape[1] + 1.0)).sum()
+
+    g_fused = np.asarray(jax.grad(fused_loss)(x))
+    g_ref = np.asarray(jax.grad(indexed_loss)(x))
+    np.testing.assert_allclose(g_fused, g_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_max_grad_goes_to_argmax():
+    # hand-built graph: root 0 -> {1,2}; 1 -> {3}; 2 -> {4}
+    rowptr = np.array([0, 2, 3, 4, 4, 4], np.int32)
+    col = np.array([1, 2, 3, 4], np.int32)
+    x = np.array([[0.0], [0.0], [0.0], [5.0], [9.0]], np.float32)
+    seeds = np.array([0], np.int32)
+    op = make_fsa2_max_op(k1=2, k2=1)
+    base = np.array([1], np.uint64)
+
+    out = op(rowptr, col, x, seeds, base)
+    np.testing.assert_allclose(np.asarray(out), [[9.0]])
+    g = np.asarray(jax.grad(
+        lambda x_in: op(rowptr, col, x_in, seeds, base).sum())(x))
+    want = np.zeros_like(x)
+    want[4, 0] = 1.0  # only the argmax node receives gradient
+    np.testing.assert_array_equal(g, want)
+
+
+def test_ext_determinism():
+    rowptr, col, ew, x, seeds = setup(6)
+    base = np.array([8], np.uint64)
+    a = fused_sample_agg_2hop_ext(rowptr, col, ew, x, seeds, base, k1=3, k2=2)
+    b = fused_sample_agg_2hop_ext(rowptr, col, ew, x, seeds, base, k1=3, k2=2)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))

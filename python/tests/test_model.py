@@ -1,0 +1,124 @@
+"""L2 model layer: fused forward/train-step semantics, AMP, AdamW."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model, optim
+
+from .conftest import make_csr
+
+
+def setup(seed=0, n=120, d=8, h=16, c=5, b=16):
+    rng = np.random.default_rng(seed)
+    rowptr, col = make_csr(n, 8, seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    seeds = rng.integers(0, n, b).astype(np.int32)
+    labels = rng.integers(0, c, b).astype(np.int32)
+    params = (
+        (rng.standard_normal((d, h)) * 0.2).astype(np.float32),
+        (rng.standard_normal((d, h)) * 0.2).astype(np.float32),
+        np.zeros(h, np.float32),
+        (rng.standard_normal((h, c)) * 0.2).astype(np.float32),
+        np.zeros(c, np.float32),
+    )
+    return rowptr, col, x, seeds, labels, params
+
+
+def test_forward_shapes_and_determinism():
+    rowptr, col, x, seeds, _, params = setup()
+    base = np.array([42], np.uint64)
+    a = model.fsa_forward(params, rowptr, col, x, seeds, base,
+                          hops=2, k1=4, k2=3, amp=False)
+    b = model.fsa_forward(params, rowptr, col, x, seeds, base,
+                          hops=2, k1=4, k2=3, amp=False)
+    assert a.shape == (16, 5)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_amp_close_to_fp32():
+    rowptr, col, x, seeds, _, params = setup(1)
+    base = np.array([1], np.uint64)
+    full = model.fsa_forward(params, rowptr, col, x, seeds, base,
+                             hops=2, k1=4, k2=3, amp=False)
+    amp = model.fsa_forward(params, rowptr, col, x, seeds, base,
+                            hops=2, k1=4, k2=3, amp=True)
+    np.testing.assert_allclose(np.asarray(amp), np.asarray(full),
+                               rtol=0.05, atol=0.05)
+
+
+def test_cross_entropy_known_value():
+    logits = jnp.array([[0.0, 0.0], [100.0, 0.0]])
+    labels = jnp.array([0, 0], jnp.int32)
+    got = float(model.cross_entropy(logits, labels))
+    want = (np.log(2.0) + 0.0) / 2.0
+    assert abs(got - want) < 1e-5
+
+
+def test_train_step_reduces_loss():
+    rowptr, col, x, seeds, labels, params = setup(2)
+    ts = model.make_fsa_train_step(hops=2, k1=4, k2=3, amp=True)
+    m = tuple(np.zeros_like(p) for p in params)
+    v = tuple(np.zeros_like(p) for p in params)
+    jts = jax.jit(ts)
+    base = np.array([42], np.uint64)
+    losses = []
+    p = params
+    for step in range(25):
+        out = jts(p, m, v, jnp.float32(step), rowptr, col, x, seeds, labels,
+                  base)
+        p, m, v = out[:5], out[5:10], out[10:15]
+        losses.append(float(out[15]))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_1hop_train_step_runs():
+    rowptr, col, x, seeds, labels, params = setup(3)
+    ts = model.make_fsa_train_step(hops=1, k1=5, k2=0, amp=False)
+    m = tuple(np.zeros_like(p) for p in params)
+    v = tuple(np.zeros_like(p) for p in params)
+    out = jax.jit(ts)(params, m, v, jnp.float32(0), rowptr, col, x, seeds,
+                      labels, np.array([1], np.uint64))
+    assert len(out) == 16
+    assert np.isfinite(float(out[15]))
+
+
+def test_adamw_matches_manual_formula():
+    p = (np.array([1.0, -2.0], np.float32),)
+    g = (np.array([0.5, 0.5], np.float32),)
+    m = (np.zeros(2, np.float32),)
+    v = (np.zeros(2, np.float32),)
+    (new_p,), (new_m,), (new_v,) = optim.adamw_update(p, g, m, v,
+                                                      jnp.float32(0))
+    lr, b1, b2, eps, wd = 3e-3, 0.9, 0.999, 1e-8, 5e-4
+    m1 = (1 - b1) * 0.5
+    v1 = (1 - b2) * 0.25
+    mhat = m1 / (1 - b1)
+    vhat = v1 / (1 - b2)
+    want = np.array([1.0, -2.0]) - lr * (mhat / (np.sqrt(vhat) + eps)
+                                         + wd * np.array([1.0, -2.0]))
+    np.testing.assert_allclose(np.asarray(new_p), want, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_m), [m1, m1], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_v), [v1, v1], rtol=1e-5)
+
+
+def test_adamw_weight_decay_is_decoupled():
+    """zero gradient still decays weights (AdamW, not Adam+L2)."""
+    p = (np.array([10.0], np.float32),)
+    g = (np.array([0.0], np.float32),)
+    m = (np.zeros(1, np.float32),)
+    v = (np.zeros(1, np.float32),)
+    (new_p,), _, _ = optim.adamw_update(p, g, m, v, jnp.float32(0))
+    want = 10.0 - 3e-3 * (5e-4 * 10.0)
+    np.testing.assert_allclose(np.asarray(new_p), [want], rtol=1e-6)
+
+
+def test_eval_fn_matches_forward():
+    rowptr, col, x, seeds, _, params = setup(4)
+    ev = model.make_fsa_eval(hops=2, k1=4, k2=3)
+    base = np.array([9], np.uint64)
+    (logits,) = jax.jit(ev)(params, rowptr, col, x, seeds, base)
+    want = model.fsa_forward(params, rowptr, col, x, seeds, base,
+                             hops=2, k1=4, k2=3, amp=False,
+                             save_indices=False)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)

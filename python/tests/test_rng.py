@@ -1,0 +1,62 @@
+"""Cross-language RNG contract: jnp implementation vs the independent
+python-int oracle, plus the golden vectors pinned in rust/src/rng/mod.rs."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, rng
+
+U64 = st.integers(min_value=0, max_value=(1 << 64) - 1)
+
+
+def test_mix_golden_vectors():
+    # the same constants are asserted in rust/src/rng/mod.rs
+    assert ref.mix(0x0) == 0xE220A8397B1DCDAF
+    assert ref.mix(0x1) == 0x910A2DEC89025CC1
+    assert ref.mix(0x2A) == 0xBDD732262FEB6E95
+    assert ref.mix(0xDEADBEEF) == 0x4ADFB90F68C9EB9B
+    assert ref.mix((1 << 64) - 1) == 0xE4D971771B652C20
+
+
+def test_rand_counter_golden_vectors():
+    assert ref.rand_counter(42, 0, 0, 0) == 0xFE554343B462A664
+    assert ref.rand_counter(42, 7, 0, 3) == 0xCAA4B86D13EAFA09
+    assert ref.rand_counter(42, 7, 1, 3) == 0xD75D107DE516873C
+    assert ref.rand_counter(123456789, 19999, 1, 24) == 0xDFA619AE6464B6DD
+    assert ref.rand_counter(1 << 63, 11999, 0, 99) == 0x6F954A2ED0C8C743
+
+
+@given(U64)
+@settings(max_examples=200, deadline=None)
+def test_jnp_mix_matches_oracle(z):
+    got = int(rng.mix(jnp.uint64(z)))
+    assert got == ref.mix(z)
+
+
+@given(U64, st.integers(0, 2**31 - 1), st.integers(0, 3), st.integers(0, 1000))
+@settings(max_examples=200, deadline=None)
+def test_jnp_rand_counter_matches_oracle(base, node, hop, slot):
+    got = int(rng.rand_counter(jnp.uint64(base), jnp.int32(node), hop,
+                               jnp.uint64(slot)))
+    assert got == ref.rand_counter(base, node, hop, slot)
+
+
+def test_vectorized_equals_scalar():
+    nodes = jnp.arange(100, dtype=jnp.int32)
+    slots = jnp.arange(8, dtype=jnp.uint64)
+    words = rng.rand_counter(jnp.uint64(5), nodes[:, None], 1, slots)
+    assert words.shape == (100, 8)
+    for i in [0, 3, 99]:
+        for j in [0, 7]:
+            assert int(words[i, j]) == ref.rand_counter(5, i, 1, j)
+
+
+def test_word_distribution_is_uniform_ish():
+    nodes = jnp.arange(20_000, dtype=jnp.int32)
+    words = rng.rand_counter(jnp.uint64(1), nodes, 0, jnp.uint64(0))
+    # top bit should be set about half the time
+    top = (words >> jnp.uint64(63)).astype(np.float64).mean()
+    assert 0.47 < float(top) < 0.53
+    # low 10 bits roughly uniform
+    low = np.asarray(words & jnp.uint64(1023), dtype=np.float64)
+    assert abs(low.mean() - 511.5) < 15

@@ -1,0 +1,94 @@
+"""Vectorized sampling rule vs the line-by-line oracle (DESIGN.md §5)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sampling import masked_mean, sample_neighbors
+
+from .conftest import make_csr
+
+
+def oracle_frontier(rowptr, col, nodes, k, base, hop):
+    return np.array([
+        ref.sample_neighbors(rowptr, col, int(u), k, base, hop)
+        for u in nodes
+    ], np.int32)
+
+
+def test_matches_oracle_basic(small_graph):
+    rowptr, col, _ = small_graph
+    nodes = jnp.arange(200, dtype=jnp.int32)
+    for k in [1, 3, 8]:
+        got = sample_neighbors(jnp.asarray(rowptr), jnp.asarray(col), nodes,
+                               k, jnp.uint64(42), hop=0)
+        want = oracle_frontier(rowptr, col, np.arange(200), k, 42, 0)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_invalid_nodes_propagate(small_graph):
+    rowptr, col, _ = small_graph
+    nodes = jnp.array([-1, 0, -1, 5], jnp.int32)
+    got = np.asarray(sample_neighbors(jnp.asarray(rowptr), jnp.asarray(col),
+                                      nodes, 4, jnp.uint64(1), hop=1))
+    assert (got[0] == -1).all()
+    assert (got[2] == -1).all()
+
+
+def test_nested_shape(small_graph):
+    rowptr, col, _ = small_graph
+    nodes = jnp.arange(12, dtype=jnp.int32).reshape(3, 4)
+    got = sample_neighbors(jnp.asarray(rowptr), jnp.asarray(col), nodes, 5,
+                           jnp.uint64(9), hop=0)
+    assert got.shape == (3, 4, 5)
+
+
+@given(
+    seed=st.integers(0, 2**32),
+    base=st.integers(0, (1 << 64) - 1),
+    k=st.integers(1, 12),
+    hop=st.integers(0, 1),
+    max_deg=st.integers(0, 25),
+)
+@settings(max_examples=40, deadline=None)
+def test_matches_oracle_random_graphs(seed, base, k, hop, max_deg):
+    rowptr, col = make_csr(50, max_deg, seed)
+    nodes = np.arange(50)
+    got = sample_neighbors(jnp.asarray(rowptr), jnp.asarray(col),
+                           jnp.asarray(nodes, jnp.int32), k,
+                           jnp.uint64(base), hop=hop)
+    want = oracle_frontier(rowptr, col, nodes, k, base, hop)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_masked_mean_counts_only_valid():
+    feats = jnp.array([[[1.0, 2.0], [3.0, 4.0], [100.0, 100.0]]])
+    valid = jnp.array([[True, True, False]])
+    got = np.asarray(masked_mean(feats, valid, axis=1))
+    np.testing.assert_allclose(got, [[2.0, 3.0]])
+
+
+def test_masked_mean_all_invalid_gives_zero():
+    feats = jnp.ones((2, 3, 4))
+    valid = jnp.zeros((2, 3), bool)
+    got = np.asarray(masked_mean(feats, valid, axis=1))
+    np.testing.assert_allclose(got, np.zeros((2, 4)))
+
+
+def test_reservoir_oracle_is_without_replacement(medium_graph):
+    rowptr, col, _ = medium_graph
+    hub = int(np.argmax(np.diff(rowptr)))
+    k = 16
+    s = ref.reservoir_sample(rowptr, col, hub, k, base=3, hop=0)
+    assert len(s) == k
+    # positions (not necessarily values — parallel edges exist) are distinct:
+    # re-derive chosen positions by running the replacement trace
+    deg = int(rowptr[hub + 1] - rowptr[hub])
+    pos = list(range(k))
+    for i in range(k, deg):
+        j = ref.rand_counter(3, hub, 0, i) % (i + 1)
+        if j < k:
+            pos[j] = i
+    assert len(set(pos)) == k
+    want = [int(col[rowptr[hub] + p]) for p in pos]
+    assert s == want

@@ -1,0 +1,48 @@
+"""Seed-tile selection properties (the TPU VMEM adaptation, DESIGN.md §4)."""
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import tiling
+
+
+def test_known_cases():
+    # b=1024, 15x10 fanout, D=64, f32: tile*150*64*4 <= 4MiB -> tile<=109 -> 64
+    assert tiling.seed_tile(1024, 150, 64) == 64
+    # tiny problem: whole batch fits
+    assert tiling.seed_tile(64, 15, 16) == 64
+    # huge fanout: floor at min_tile
+    assert tiling.seed_tile(1024, 10_000, 512) == 8
+
+
+def test_tile_bytes_formula():
+    assert tiling.tile_bytes(2, 3, 4, 4) == 2 * 3 * 4 * 4 + 2 * 3 * 4 + 2 * 4 * 4
+
+
+@given(
+    batch=st.sampled_from([8, 16, 64, 128, 512, 1024, 2048]),
+    fp=st.integers(1, 2000),
+    d=st.sampled_from([1, 16, 64, 256]),
+    dtype_bytes=st.sampled_from([2, 4]),
+)
+@settings(max_examples=200, deadline=None)
+def test_properties(batch, fp, d, dtype_bytes):
+    tb = tiling.seed_tile(batch, fp, d, dtype_bytes)
+    assert 1 <= tb <= batch
+    assert batch % tb == 0, "tile must divide the batch"
+    # fits budget unless floored at min_tile
+    if tb > 8:
+        assert tiling.tile_bytes(tb, fp, d, dtype_bytes) <= tiling.VMEM_BUDGET_BYTES
+
+
+def test_estimate_structure():
+    e = tiling.estimate(1024, 15, 10, 64)
+    assert e.tile * e.grid >= 1024
+    assert e.vmem_tile_bytes <= tiling.VMEM_BUDGET_BYTES
+    assert 0 < e.vmem_utilization <= 1.0
+    assert e.hbm_bytes_per_step == 1024 * 150 * 64 * 4
+    # mean reduction: one add per element -> intensity = 1/dtype_bytes
+    assert abs(e.arithmetic_intensity - 0.25) < 1e-9
+
+
+def test_estimate_1hop():
+    e = tiling.estimate(512, 10, 0, 64)
+    assert e.flops_per_step == 512 * 10 * 64

@@ -1,0 +1,122 @@
+//! Bench: the §6.4 ablations — AMP on/off, 1-hop vs 2-hop, and
+//! save_indices on/off (the knobs the paper holds fixed in the main grid).
+//!
+//! Outputs: results/ablations.txt, results/ablations.csv.
+
+use std::fmt::Write as _;
+
+use fusesampleagg::bench::{run_config, save_exhibit};
+use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Variant};
+use fusesampleagg::metrics::{self, BenchRow};
+use fusesampleagg::runtime::Runtime;
+use fusesampleagg::util;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+    let quick = std::env::var("FSA_BENCH_QUICK").is_ok();
+    let steps: usize = std::env::var("FSA_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { 5 } else { 20 });
+    let warmup = if quick { 1 } else { 3 };
+
+    let mut rows: Vec<BenchRow> = Vec::new();
+    let mut out = String::new();
+    let _ = writeln!(out, "Ablations (paper §6.4): knobs held fixed in the \
+                           main grid.\n");
+
+    let run = |cache: &mut DatasetCache, cfg: TrainConfig|
+                   -> anyhow::Result<BenchRow> {
+        let row = run_config(&rt, cache, cfg, warmup, steps)?;
+        eprintln!("  abl {:<13} {:<4} hops{} f{:>2}x{:<2} amp={} save={}: \
+                   {:>8.2} ms/step",
+                  row.dataset, row.variant, row.hops, row.k1, row.k2, row.amp,
+                  row.steps > 0, row.step_ms);
+        Ok(row)
+    };
+
+    // --- AMP on/off (arxiv_sim 15-10 b1024, both variants)
+    let _ = writeln!(out, "[A] AMP on/off — arxiv_sim, fanout 15-10, B=1024");
+    for amp in [true, false] {
+        for variant in [Variant::Dgl, Variant::Fsa] {
+            let cfg = TrainConfig {
+                variant, hops: 2, dataset: "arxiv_sim".into(),
+                k1: 15, k2: 10, batch: 1024, amp, save_indices: true,
+                seed: 42,
+            };
+            let r = run(&mut cache, cfg)?;
+            let _ = writeln!(out, "  amp={:<5} {:<4}: {:>8.2} ms/step", amp,
+                             r.variant, r.step_ms);
+            rows.push(r);
+        }
+    }
+
+    // --- 1-hop vs 2-hop (k=10, b1024, all datasets)
+    let _ = writeln!(out, "\n[B] 1-hop vs 2-hop — k1=10, B=1024, AMP on");
+    for ds in ["arxiv_sim", "reddit_sim", "products_sim"] {
+        for (hops, k2) in [(1u32, 0usize), (2, 10)] {
+            for variant in [Variant::Dgl, Variant::Fsa] {
+                let cfg = TrainConfig {
+                    variant, hops, dataset: ds.into(), k1: 10, k2,
+                    batch: 1024, amp: true, save_indices: true, seed: 42,
+                };
+                let r = run(&mut cache, cfg)?;
+                let _ = writeln!(out, "  {:<13} {}-hop {:<4}: {:>8.2} ms/step \
+                                       ({:.1} MB transient)",
+                                 ds, hops, r.variant, r.step_ms,
+                                 util::bytes_to_mb(r.peak_transient_bytes));
+                rows.push(r);
+            }
+        }
+    }
+
+    // --- save_indices on/off (products_sim 15-10 b1024, fsa only)
+    let _ = writeln!(out, "\n[C] save_indices on/off — products_sim, \
+                           fanout 15-10, B=1024, fsa (off = the paper's \
+                           forward-profiling mode, §3.2)");
+    for save in [true, false] {
+        let cfg = TrainConfig {
+            variant: Variant::Fsa, hops: 2, dataset: "products_sim".into(),
+            k1: 15, k2: 10, batch: 1024, amp: true, save_indices: save,
+            seed: 42,
+        };
+        let r = run(&mut cache, cfg)?;
+        let _ = writeln!(out, "  save_indices={:<5}: {:>8.2} ms/step \
+                               ({:.1} MB transient)", save, r.step_ms,
+                         util::bytes_to_mb(r.peak_transient_bytes));
+        rows.push(r);
+    }
+
+    // --- feature dtype f32 vs bf16 (products_sim 15-10 b1024, fsa; the
+    // paper's §4 dtype dispatch — bf16 halves the gather traffic)
+    let _ = writeln!(out, "\n[D] feature dtype f32 vs bf16 — products_sim, \
+                           fanout 15-10, B=1024, fsa (§Perf)");
+    {
+        use fusesampleagg::coordinator::{measure, Trainer};
+        use fusesampleagg::metrics::median;
+        let rt2 = &rt;
+        for (label, artifact) in [
+            ("f32 ", "fsa2_train_products_sim_f15x10_b1024_ampOn"),
+            ("bf16", "fsa2_train_products_sim_f15x10_b1024_ampOn_xbf16"),
+        ] {
+            let cfg = TrainConfig {
+                variant: Variant::Fsa, hops: 2,
+                dataset: "products_sim".into(), k1: 15, k2: 10, batch: 1024,
+                amp: true, save_indices: true, seed: 42,
+            };
+            let mut tr = Trainer::new_named(rt2, &mut cache, cfg, artifact)?;
+            let timings = measure(&mut tr, warmup, steps)?;
+            let ms = median(&timings.iter().map(|t| t.total_ms())
+                .collect::<Vec<_>>());
+            let loss = timings.last().unwrap().loss;
+            let _ = writeln!(out, "  x={label}: {ms:>8.2} ms/step \
+                                   (loss {loss:.3})");
+            eprintln!("  abl feat dtype {label}: {ms:.2} ms/step");
+        }
+    }
+
+    metrics::write_csv(&util::results_dir().join("ablations.csv"), &rows)?;
+    save_exhibit("ablations", &out);
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate **Fig 2** — throughput scaling with batch size on
+//! products_sim at fanout 15-10 (B ∈ {128,256,512,1024,2048}, AMP on).
+//!
+//! Outputs: results/fig2.csv, results/fig2.txt.
+
+use fusesampleagg::bench::{env_overrides, render, run_grid, save_exhibit, Grid};
+use fusesampleagg::coordinator::DatasetCache;
+use fusesampleagg::metrics;
+use fusesampleagg::runtime::Runtime;
+use fusesampleagg::util;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+    let grid = env_overrides(Grid::fig2());
+    let rows = run_grid(&rt, &mut cache, &grid, |r| {
+        eprintln!("  fig2 {:<4} b{:<5} s{}: {:>8.2} ms/step ({:.0} seeds/s)",
+                  r.variant, r.batch, r.repeat_seed, r.step_ms, r.nodes_per_s);
+    })?;
+    metrics::write_csv(&util::results_dir().join("fig2.csv"), &rows)?;
+    save_exhibit("fig2", &render::fig2(&rows));
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate **Fig 3** — median step time vs fanout on arxiv_sim
+//! at B=1024 (fanouts {10-10, 15-10, 25-10}, AMP on; lower is better).
+//!
+//! Outputs: results/fig3.csv, results/fig3.txt.
+
+use fusesampleagg::bench::{env_overrides, render, run_grid, save_exhibit, Grid};
+use fusesampleagg::coordinator::DatasetCache;
+use fusesampleagg::metrics;
+use fusesampleagg::runtime::Runtime;
+use fusesampleagg::util;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+    let grid = env_overrides(Grid::fig3());
+    let rows = run_grid(&rt, &mut cache, &grid, |r| {
+        eprintln!("  fig3 {:<4} f{:>2}x{} s{}: {:>8.2} ms/step", r.variant,
+                  r.k1, r.k2, r.repeat_seed, r.step_ms);
+    })?;
+    metrics::write_csv(&util::results_dir().join("fig3.csv"), &rows)?;
+    save_exhibit("fig3", &render::fig3(&rows));
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Micro-benchmarks of the L3 substrates on the hot path: the host
+//! neighbor sampler (the baseline's per-step cost), block building, graph
+//! generation, counter-RNG throughput, and manifest JSON parsing.
+//!
+//! These locate L3 bottlenecks for the §Perf pass (EXPERIMENTS.md):
+//! if the host sampler dominated the baseline step, the fused-vs-baseline
+//! comparison would be measuring the sampler, not the materialization gap.
+
+use fusesampleagg::gen::{builtin_spec, Dataset};
+use fusesampleagg::metrics::Timer;
+use fusesampleagg::rng::{rand_counter, SplitMix64};
+use fusesampleagg::sampler;
+use fusesampleagg::util;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t = Timer::start();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t.ms() / iters as f64;
+    println!("{name:<44} {per:>10.3} ms/iter  ({iters} iters)");
+    per
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("micro-benchmarks (hot-path substrates)\n");
+
+    // counter RNG
+    let mut acc = 0u64;
+    bench("rng: 1M rand_counter words", 20, || {
+        for i in 0..1_000_000u64 {
+            acc = acc.wrapping_add(rand_counter(42, i, 0, i & 15));
+        }
+    });
+    std::hint::black_box(acc);
+
+    // graph generation
+    let t = Timer::start();
+    let ds = Dataset::generate(builtin_spec("products_sim")?)?;
+    println!("{:<44} {:>10.1} ms  ({} edges)", "gen: products_sim generate",
+             t.ms(), ds.graph.num_edges());
+
+    // host sampler: the baseline's per-step stage at the paper's settings
+    let mut rng = SplitMix64::new(7);
+    let seeds: Vec<i32> = (0..1024)
+        .map(|_| rng.next_below(ds.spec.n as u64) as i32)
+        .collect();
+    let ms = bench("sampler: build_block2 b1024 f15x10", 20, || {
+        std::hint::black_box(sampler::build_block2(&ds.graph, &seeds, 15, 10,
+                                                   rng.next_u64()));
+    });
+    let pairs = 1024.0 * (16.0 * 10.0 + 15.0);
+    println!("{:<44} {:>10.1} Mpairs/s", "  -> sampler throughput",
+             pairs / ms / 1e3);
+
+    bench("sampler: fused2_sampled_pairs (untimed path)", 20, || {
+        std::hint::black_box(sampler::fused2_sampled_pairs(
+            &ds.graph, &seeds, 15, 10, rng.next_u64()));
+    });
+
+    // shuffling (epoch boundary cost)
+    let mut nodes: Vec<i32> = (0..ds.spec.n as i32).collect();
+    bench("rng: shuffle 32k train nodes", 50, || {
+        SplitMix64::new(rng.next_u64()).shuffle(&mut nodes);
+    });
+
+    // manifest parse
+    let manifest_path = util::artifacts_dir().join("manifest.json");
+    if manifest_path.exists() {
+        let text = std::fs::read_to_string(&manifest_path)?;
+        bench("json: parse manifest.json", 50, || {
+            std::hint::black_box(fusesampleagg::json::parse(&text).unwrap());
+        });
+    }
+
+    Ok(())
+}

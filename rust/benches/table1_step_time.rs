@@ -1,0 +1,31 @@
+//! Bench: regenerate **Table 1** (and the Fig 1 speedup bars) — step time
+//! and sampled-pairs/s, DGL→FSA, across the paper's main grid
+//! (3 datasets × 3 fanouts × {512,1024} × 3 repeats, AMP on).
+//!
+//! Outputs: results/bench.csv, results/table1.txt, results/fig1.txt.
+//! Scale down with FSA_BENCH_QUICK=1 or FSA_BENCH_STEPS/WARMUP/SEEDS.
+
+use fusesampleagg::bench::{env_overrides, render, run_grid, save_exhibit, Grid};
+use fusesampleagg::coordinator::DatasetCache;
+use fusesampleagg::metrics;
+use fusesampleagg::runtime::Runtime;
+use fusesampleagg::util;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+    let grid = env_overrides(Grid::default());
+    eprintln!("table1: {} configs x {} repeats, {} timed steps each",
+              grid.datasets.len() * grid.fanouts.len() * grid.batches.len()
+                  * grid.variants.len(),
+              grid.seeds.len(), grid.steps);
+    let rows = run_grid(&rt, &mut cache, &grid, |r| {
+        eprintln!("  {:<13} {:<4} f{:>2}x{} b{:<4} s{}: {:>8.2} ms/step",
+                  r.dataset, r.variant, r.k1, r.k2, r.batch, r.repeat_seed,
+                  r.step_ms);
+    })?;
+    metrics::write_csv(&util::results_dir().join("bench.csv"), &rows)?;
+    save_exhibit("table1", &render::table1(&rows));
+    save_exhibit("fig1", &render::fig1(&rows));
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate **Table 2** and **Figs 4–5** — peak transient memory
+//! per training step, DGL→FSA, with reduction ratios (B=1024, AMP on).
+//!
+//! Memory is stable after the first steps, so the default run is shorter
+//! than the timing grid. Outputs: results/table2.txt, fig4.txt, fig5.txt,
+//! memory.csv.
+
+use fusesampleagg::bench::{env_overrides, render, run_grid, save_exhibit, Grid};
+use fusesampleagg::coordinator::DatasetCache;
+use fusesampleagg::metrics;
+use fusesampleagg::runtime::Runtime;
+use fusesampleagg::util;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+    let mut grid = Grid { steps: 5, warmup: 1, seeds: vec![42, 43, 44],
+                          ..Grid::default() };
+    grid = env_overrides(grid);
+    let rows = run_grid(&rt, &mut cache, &grid, |r| {
+        eprintln!("  mem {:<13} {:<4} f{:>2}x{} b{:<4}: {:>9.1} MB transient",
+                  r.dataset, r.variant, r.k1, r.k2, r.batch,
+                  util::bytes_to_mb(r.peak_transient_bytes));
+    })?;
+    metrics::write_csv(&util::results_dir().join("memory.csv"), &rows)?;
+    save_exhibit("table2", &render::table2(&rows));
+    save_exhibit("fig4", &render::fig4(&rows));
+    save_exhibit("fig5", &render::fig5(&rows));
+    Ok(())
+}

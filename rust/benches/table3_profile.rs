@@ -1,0 +1,20 @@
+//! Bench: regenerate **Table 3** — stage-split exclusive-time profile of
+//! the DGL-like baseline step (products_sim, fanout 15-10, B=1024, AMP on).
+//!
+//! Outputs: results/table3.txt.
+
+use fusesampleagg::bench::save_exhibit;
+use fusesampleagg::coordinator::{profile, DatasetCache};
+use fusesampleagg::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+    let steps: usize = std::env::var("FSA_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let report = profile::profile_baseline(&rt, &mut cache, 2, steps, 42)?;
+    save_exhibit("table3", &fusesampleagg::bench::render::table3(&report));
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! §Perf bench: L1 seed-tile sweep — the HBM↔VMEM schedule knob
+//! (the paper's "kernel autotuning over block sizes" future work).
+//!
+//! Same configuration (products_sim, 15-10, B=1024, AMP on), four tile
+//! sizes: 16 / 64 (VMEM-budget default) / 256 / 1024 (whole batch, one grid
+//! step). On a real TPU only tiles whose gathered block fits VMEM are
+//! legal; on CPU-PJRT all four run, exposing the grid-iteration overhead
+//! that the tile size trades against. Outputs: results/tile_sweep.txt.
+
+use std::fmt::Write as _;
+
+use fusesampleagg::bench::save_exhibit;
+use fusesampleagg::coordinator::{measure, DatasetCache, TrainConfig, Trainer,
+                                 Variant};
+use fusesampleagg::metrics::median;
+use fusesampleagg::runtime::Runtime;
+use fusesampleagg::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+    let quick = std::env::var("FSA_BENCH_QUICK").is_ok();
+    let steps = if quick { 5 } else { 20 };
+    let warmup = if quick { 1 } else { 3 };
+
+    let mut out = String::new();
+    let _ = writeln!(out, "L1 seed-tile sweep — products_sim, fanout 15-10, \
+                           B=1024, AMP on ({steps} timed steps).\n");
+    let _ = writeln!(out, "{:<8} {:>6} {:>16} {:>14} {:>12}", "tile", "grid",
+                     "gather tile", "VMEM-legal?", "step (ms)");
+
+    for tile in [8usize, 16, 32, 64, 256, 1024] {
+        let name = format!("fsa2_train_products_sim_f15x10_b1024_ampOn_t{tile}");
+        let cfg = TrainConfig {
+            variant: Variant::Fsa,
+            hops: 2,
+            dataset: "products_sim".into(),
+            k1: 15,
+            k2: 10,
+            batch: 1024,
+            amp: true,
+            save_indices: true,
+            seed: 42,
+        };
+        let mut tr = Trainer::new_named(&rt, &mut cache, cfg, &name)?;
+        let timings = measure(&mut tr, warmup, steps)?;
+        let ms = median(&timings.iter().map(|t| t.total_ms()).collect::<Vec<_>>());
+        let tile_bytes = (tile * 15 * 10 * 64 * 4) as u64;
+        let legal = tile_bytes <= 4 * 1024 * 1024;
+        let _ = writeln!(out, "{:<8} {:>6} {:>16} {:>14} {:>12.2}", tile,
+                         1024 / tile, fmt_bytes(tile_bytes),
+                         if legal { "yes" } else { "no (CPU only)" }, ms);
+        eprintln!("  tile {tile}: {ms:.2} ms/step");
+    }
+    let _ = writeln!(out, "\nDefault = largest VMEM-legal tile \
+                           (tiling.seed_tile); larger tiles trade VMEM \
+                           footprint for fewer grid iterations.");
+    save_exhibit("tile_sweep", &out);
+    Ok(())
+}

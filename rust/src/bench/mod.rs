@@ -1,0 +1,210 @@
+//! Benchmark grid runner — the Rust analogue of the paper's
+//! `scripts/bench_grid.py` (§5 "Command to reproduce").
+//!
+//! Runs (dataset × fanout × batch × variant × repeat) with the paper's
+//! protocol (warmup then timed steps, medians over repeats with seeds
+//! {42,43,44}), emits a single CSV (`results/bench.csv`), and [`render`]
+//! regenerates every table/figure from that CSV.
+
+pub mod render;
+
+use anyhow::Result;
+
+use crate::coordinator::{measure, DatasetCache, TrainConfig, Trainer, Variant};
+use crate::metrics::{median, BenchRow};
+use crate::runtime::Runtime;
+
+/// Grid specification (defaults = the paper's main grid, CPU-scaled).
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub datasets: Vec<String>,
+    pub fanouts: Vec<(usize, usize)>,
+    pub batches: Vec<usize>,
+    pub amp: bool,
+    pub steps: usize,
+    pub warmup: usize,
+    pub seeds: Vec<u64>,
+    pub variants: Vec<Variant>,
+    /// 2 for the main grid; 1 runs the 1-hop ablation artifacts.
+    pub hops: u32,
+}
+
+impl Default for Grid {
+    fn default() -> Self {
+        Grid {
+            datasets: vec!["arxiv_sim".into(), "reddit_sim".into(),
+                           "products_sim".into()],
+            fanouts: vec![(10, 10), (15, 10), (25, 10)],
+            batches: vec![512, 1024],
+            amp: true,
+            steps: 30,
+            warmup: 5,
+            seeds: vec![42, 43, 44],
+            variants: vec![Variant::Dgl, Variant::Fsa],
+            hops: 2,
+        }
+    }
+}
+
+impl Grid {
+    /// A fast smoke grid for CI / tests.
+    pub fn quick() -> Self {
+        Grid {
+            datasets: vec!["arxiv_sim".into()],
+            fanouts: vec![(15, 10)],
+            batches: vec![512],
+            steps: 5,
+            warmup: 1,
+            seeds: vec![42],
+            ..Default::default()
+        }
+    }
+
+    /// Fig 2 grid: batch scaling on products_sim at fanout 15-10.
+    pub fn fig2() -> Self {
+        Grid {
+            datasets: vec!["products_sim".into()],
+            fanouts: vec![(15, 10)],
+            batches: vec![128, 256, 512, 1024, 2048],
+            ..Default::default()
+        }
+    }
+
+    /// Fig 3 grid: fanout sweep on arxiv_sim at B=1024.
+    pub fn fig3() -> Self {
+        Grid {
+            datasets: vec!["arxiv_sim".into()],
+            batches: vec![1024],
+            ..Default::default()
+        }
+    }
+}
+
+/// Apply `FSA_BENCH_STEPS` / `FSA_BENCH_WARMUP` / `FSA_BENCH_SEEDS` /
+/// `FSA_BENCH_QUICK` environment overrides (used by the bench targets so a
+/// full `cargo bench` can be scaled down without editing code).
+pub fn env_overrides(mut grid: Grid) -> Grid {
+    if std::env::var("FSA_BENCH_QUICK").is_ok() {
+        grid.steps = 5;
+        grid.warmup = 1;
+        grid.seeds = vec![42];
+    }
+    if let Ok(v) = std::env::var("FSA_BENCH_STEPS") {
+        if let Ok(n) = v.parse() {
+            grid.steps = n;
+        }
+    }
+    if let Ok(v) = std::env::var("FSA_BENCH_WARMUP") {
+        if let Ok(n) = v.parse() {
+            grid.warmup = n;
+        }
+    }
+    if let Ok(v) = std::env::var("FSA_BENCH_SEEDS") {
+        let seeds: Vec<u64> = v.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+        if !seeds.is_empty() {
+            grid.seeds = seeds;
+        }
+    }
+    grid
+}
+
+/// Print an exhibit and persist it under `results/<name>.txt`.
+pub fn save_exhibit(name: &str, text: &str) {
+    println!("{text}");
+    let path = crate::util::results_dir().join(format!("{name}.txt"));
+    if let Err(e) = std::fs::write(&path, text) {
+        eprintln!("warning: could not write {path:?}: {e}");
+    } else {
+        println!("(saved to {})", path.display());
+    }
+}
+
+/// Run one configuration (one repeat) and reduce to a BenchRow.
+pub fn run_config(rt: &Runtime, cache: &mut DatasetCache, cfg: TrainConfig,
+                  warmup: usize, steps: usize) -> Result<BenchRow> {
+    let mut trainer = Trainer::new(rt, cache, cfg.clone())?;
+    let timings = measure(&mut trainer, warmup, steps)?;
+
+    let step_ms = median(&timings.iter().map(|t| t.total_ms()).collect::<Vec<_>>());
+    let sample_ms = median(&timings.iter().map(|t| t.sample_ms).collect::<Vec<_>>());
+    let upload_ms = median(&timings.iter().map(|t| t.upload_ms).collect::<Vec<_>>());
+    let execute_ms = median(&timings.iter().map(|t| t.execute_ms).collect::<Vec<_>>());
+    let pairs = median(&timings.iter().map(|t| t.pairs as f64).collect::<Vec<_>>());
+    let peak = timings.iter().map(|t| t.transient_bytes).max().unwrap_or(0);
+    let loss = timings.last().map(|t| t.loss).unwrap_or(f64::NAN);
+
+    Ok(BenchRow {
+        dataset: cfg.dataset.clone(),
+        variant: cfg.variant.as_str().to_string(),
+        hops: cfg.hops,
+        k1: cfg.k1 as u32,
+        k2: cfg.k2 as u32,
+        batch: cfg.batch as u32,
+        amp: cfg.amp,
+        repeat_seed: cfg.seed,
+        steps: steps as u32,
+        step_ms,
+        sample_ms,
+        upload_ms,
+        execute_ms,
+        pairs_per_s: pairs / (step_ms / 1e3),
+        nodes_per_s: cfg.batch as f64 / (step_ms / 1e3),
+        peak_transient_bytes: peak,
+        loss,
+    })
+}
+
+/// Run a full grid; returns one row per (config × repeat).
+pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
+                mut progress: impl FnMut(&BenchRow)) -> Result<Vec<BenchRow>> {
+    let mut rows = Vec::new();
+    for ds in &grid.datasets {
+        for &(k1, k2) in &grid.fanouts {
+            for &batch in &grid.batches {
+                for &variant in &grid.variants {
+                    for &seed in &grid.seeds {
+                        let cfg = TrainConfig {
+                            variant,
+                            hops: grid.hops,
+                            dataset: ds.clone(),
+                            k1,
+                            k2: if grid.hops == 2 { k2 } else { 0 },
+                            batch,
+                            amp: grid.amp,
+                            save_indices: true,
+                            seed,
+                        };
+                        let row = run_config(rt, cache, cfg, grid.warmup,
+                                             grid.steps)?;
+                        progress(&row);
+                        rows.push(row);
+                    }
+                }
+            }
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_is_the_paper_grid() {
+        let g = Grid::default();
+        assert_eq!(g.datasets.len(), 3);
+        assert_eq!(g.fanouts, vec![(10, 10), (15, 10), (25, 10)]);
+        assert_eq!(g.batches, vec![512, 1024]);
+        assert_eq!(g.steps, 30);
+        assert_eq!(g.warmup, 5);
+        assert_eq!(g.seeds, vec![42, 43, 44]);
+    }
+
+    #[test]
+    fn fig_grids_cover_their_axes() {
+        assert_eq!(Grid::fig2().batches, vec![128, 256, 512, 1024, 2048]);
+        assert_eq!(Grid::fig3().fanouts.len(), 3);
+        assert_eq!(Grid::fig3().batches, vec![1024]);
+    }
+}

@@ -1,0 +1,351 @@
+//! Table/figure renderers — regenerate every exhibit of the paper's
+//! evaluation section from `results/bench.csv` rows.
+//!
+//! | renderer | paper exhibit |
+//! |---|---|
+//! | [`table1`] | Table 1: step time + sampled-pairs/s, DGL→FSA |
+//! | [`fig1`]   | Fig 1: step-time speedup bars |
+//! | [`fig2`]   | Fig 2: throughput vs batch size (products, 15-10) |
+//! | [`fig3`]   | Fig 3: step time vs fanout (arxiv, B=1024) |
+//! | [`table2`] | Table 2: peak transient memory + ratio |
+//! | [`fig4`]   | Fig 4: memory-reduction ratio bars |
+//! | [`fig5`]   | Fig 5: absolute peak memory (log scale) |
+//! | [`table3`] | Table 3: profiler breakdown (takes a ProfileReport) |
+
+use std::collections::BTreeMap;
+use std::fmt::Write;
+
+use crate::coordinator::profile::ProfileReport;
+use crate::metrics::{median_over_repeats, BenchRow};
+use crate::util::{bytes_to_mb, fmt_ms};
+
+/// A paired (dgl, fsa) measurement for one configuration.
+#[derive(Clone, Debug)]
+pub struct Pair {
+    pub dataset: String,
+    pub k1: u32,
+    pub k2: u32,
+    pub batch: u32,
+    pub dgl: BenchRow,
+    pub fsa: BenchRow,
+}
+
+impl Pair {
+    pub fn fanout(&self) -> String {
+        if self.k2 > 0 {
+            format!("{}-{}", self.k1, self.k2)
+        } else {
+            format!("{}", self.k1)
+        }
+    }
+
+    pub fn step_speedup(&self) -> f64 {
+        self.dgl.step_ms / self.fsa.step_ms
+    }
+
+    pub fn pairs_speedup(&self) -> f64 {
+        self.fsa.pairs_per_s / self.dgl.pairs_per_s
+    }
+
+    pub fn mem_ratio(&self) -> f64 {
+        self.dgl.peak_transient_bytes as f64
+            / self.fsa.peak_transient_bytes.max(1) as f64
+    }
+}
+
+/// Median over repeats, then join dgl/fsa rows per configuration.
+pub fn pair_rows(rows: &[BenchRow]) -> Vec<Pair> {
+    let med = median_over_repeats(rows);
+    let mut by_key: BTreeMap<(String, u32, u32, u32, u32, bool),
+                             (Option<BenchRow>, Option<BenchRow>)> =
+        BTreeMap::new();
+    for r in med {
+        let key = (r.dataset.clone(), r.hops, r.k1, r.k2, r.batch, r.amp);
+        let slot = by_key.entry(key).or_default();
+        match r.variant.as_str() {
+            "dgl" => slot.0 = Some(r),
+            "fsa" => slot.1 = Some(r),
+            _ => {}
+        }
+    }
+    by_key
+        .into_iter()
+        .filter_map(|((ds, _h, k1, k2, b, _amp), (d, f))| {
+            Some(Pair { dataset: ds, k1, k2, batch: b, dgl: d?, fsa: f? })
+        })
+        .collect()
+}
+
+fn bar(value: f64, max: f64, width: usize) -> String {
+    let filled = ((value / max.max(1e-12)) * width as f64).round() as usize;
+    "█".repeat(filled.min(width))
+}
+
+/// Table 1: step time and sampled-pairs/s at B=1024, AMP on.
+pub fn table1(rows: &[BenchRow]) -> String {
+    let pairs: Vec<Pair> = pair_rows(rows)
+        .into_iter()
+        .filter(|p| p.batch == 1024 && p.k2 > 0)
+        .collect();
+    let mut out = String::new();
+    let _ = writeln!(out, "Table 1. Step time and sampled-pairs/s: DGL -> FuseSampleAgg (B=1024, AMP on).");
+    let _ = writeln!(out, "Medians over repeats; step time includes sampling, uploads, fwd+bwd+AdamW, sync.");
+    let _ = writeln!(out, "{:-<98}", "");
+    let _ = writeln!(out, "{:<14} {:<8} {:>22} {:>9} {:>28} {:>9}",
+                     "Dataset", "Fanout", "Step (ms) DGL->FSA", "Speedup",
+                     "Sampled-pairs/s DGL->FSA", "Speedup");
+    let _ = writeln!(out, "{:-<98}", "");
+    for p in &pairs {
+        let _ = writeln!(
+            out,
+            "{:<14} {:<8} {:>10} -> {:>8} {:>8.2}x {:>13.0} -> {:>11.0} {:>8.2}x",
+            p.dataset, p.fanout(), fmt_ms(p.dgl.step_ms), fmt_ms(p.fsa.step_ms),
+            p.step_speedup(), p.dgl.pairs_per_s, p.fsa.pairs_per_s,
+            p.pairs_speedup());
+    }
+    let _ = writeln!(out, "{:-<98}", "");
+    out
+}
+
+/// Fig 1: median step-time speedup bars per dataset/fanout (B=1024).
+pub fn fig1(rows: &[BenchRow]) -> String {
+    let pairs: Vec<Pair> = pair_rows(rows)
+        .into_iter()
+        .filter(|p| p.batch == 1024 && p.k2 > 0)
+        .collect();
+    let max = pairs.iter().map(Pair::step_speedup).fold(1.0f64, f64::max);
+    let mut out = String::new();
+    let _ = writeln!(out, "Fig 1. Median step-time speedup of FSA over DGL (B=1024, AMP on; dashed = parity 1.0x).");
+    let mut last_ds = String::new();
+    for p in &pairs {
+        if p.dataset != last_ds {
+            let _ = writeln!(out, "\n[{}]", p.dataset);
+            last_ds = p.dataset.clone();
+        }
+        let s = p.step_speedup();
+        let marker = if s < 1.0 { " (<1x: fusion loses)" } else { "" };
+        let _ = writeln!(out, "  {:<8} {:>6.2}x |{}{}", p.fanout(), s,
+                         bar(s, max, 48), marker);
+    }
+    out
+}
+
+/// Fig 2: throughput (seeds/s) scaling with batch size (products, 15-10).
+pub fn fig2(rows: &[BenchRow]) -> String {
+    let med = median_over_repeats(rows);
+    let mut series: BTreeMap<u32, (f64, f64)> = BTreeMap::new();
+    for r in &med {
+        if r.dataset == "products_sim" && r.k1 == 15 && r.k2 == 10 {
+            let e = series.entry(r.batch).or_default();
+            match r.variant.as_str() {
+                "dgl" => e.0 = r.nodes_per_s,
+                "fsa" => e.1 = r.nodes_per_s,
+                _ => {}
+            }
+        }
+    }
+    let max = series
+        .values()
+        .map(|(a, b)| a.max(*b))
+        .fold(1.0f64, f64::max);
+    let mut out = String::new();
+    let _ = writeln!(out, "Fig 2. Throughput (seed nodes/s) vs batch size on products_sim (fanout 15-10, AMP on).");
+    let _ = writeln!(out, "{:<8} {:>12} {:>12}   scaling", "batch", "DGL", "FSA");
+    for (b, (dgl, fsa)) in &series {
+        let _ = writeln!(out, "{:<8} {:>12.0} {:>12.0}", b, dgl, fsa);
+        let _ = writeln!(out, "   DGL |{}", bar(*dgl, max, 50));
+        let _ = writeln!(out, "   FSA |{}", bar(*fsa, max, 50));
+    }
+    out
+}
+
+/// Fig 3: median step time vs fanout (arxiv_sim, B=1024; lower is better).
+pub fn fig3(rows: &[BenchRow]) -> String {
+    let pairs: Vec<Pair> = pair_rows(rows)
+        .into_iter()
+        .filter(|p| p.dataset == "arxiv_sim" && p.batch == 1024 && p.k2 > 0)
+        .collect();
+    let max = pairs
+        .iter()
+        .map(|p| p.dgl.step_ms.max(p.fsa.step_ms))
+        .fold(1.0f64, f64::max);
+    let mut out = String::new();
+    let _ = writeln!(out, "Fig 3. Median step time (ms) vs fanout on arxiv_sim (B=1024, AMP on). Lower is better.");
+    for p in &pairs {
+        let _ = writeln!(out, "fanout {:<7}", p.fanout());
+        let _ = writeln!(out, "   DGL {:>9} |{}", fmt_ms(p.dgl.step_ms),
+                         bar(p.dgl.step_ms, max, 50));
+        let _ = writeln!(out, "   FSA {:>9} |{}", fmt_ms(p.fsa.step_ms),
+                         bar(p.fsa.step_ms, max, 50));
+    }
+    out
+}
+
+/// Table 2: peak transient memory (MB), DGL→FSA, with ratio (B=1024).
+pub fn table2(rows: &[BenchRow]) -> String {
+    let pairs: Vec<Pair> = pair_rows(rows)
+        .into_iter()
+        .filter(|p| p.batch == 1024 && p.k2 > 0)
+        .collect();
+    let mut out = String::new();
+    let _ = writeln!(out, "Table 2. Peak transient memory (MB) per training step (B=1024, AMP on).");
+    let _ = writeln!(out, "Transient = per-step uploads + executable intermediates + outputs (DESIGN.md §3).");
+    let _ = writeln!(out, "{:-<72}", "");
+    let _ = writeln!(out, "{:<14} {:<8} {:>24} {:>10}", "Dataset", "Fanout",
+                     "Peak MB (DGL -> FSA)", "Ratio");
+    let _ = writeln!(out, "{:-<72}", "");
+    for p in &pairs {
+        let _ = writeln!(out, "{:<14} {:<8} {:>10.1} -> {:>10.2} {:>9.2}x",
+                         p.dataset, p.fanout(),
+                         bytes_to_mb(p.dgl.peak_transient_bytes),
+                         bytes_to_mb(p.fsa.peak_transient_bytes),
+                         p.mem_ratio());
+    }
+    let _ = writeln!(out, "{:-<72}", "");
+    out
+}
+
+/// Fig 4: memory-reduction ratio bars (higher is better).
+pub fn fig4(rows: &[BenchRow]) -> String {
+    let pairs: Vec<Pair> = pair_rows(rows)
+        .into_iter()
+        .filter(|p| p.batch == 1024 && p.k2 > 0)
+        .collect();
+    let max = pairs.iter().map(Pair::mem_ratio).fold(1.0f64, f64::max);
+    let mut out = String::new();
+    let _ = writeln!(out, "Fig 4. Peak-memory reduction (DGL / FSA, B=1024, AMP on). Higher is better.");
+    let mut last_ds = String::new();
+    for p in &pairs {
+        if p.dataset != last_ds {
+            let _ = writeln!(out, "\n[{}]", p.dataset);
+            last_ds = p.dataset.clone();
+        }
+        let r = p.mem_ratio();
+        let _ = writeln!(out, "  {:<8} {:>7.2}x |{}", p.fanout(), r,
+                         bar(r, max, 48));
+    }
+    out
+}
+
+/// Fig 5: absolute peak memory, log10 scale, both variants.
+pub fn fig5(rows: &[BenchRow]) -> String {
+    let pairs: Vec<Pair> = pair_rows(rows)
+        .into_iter()
+        .filter(|p| p.batch == 1024 && p.k2 > 0)
+        .collect();
+    let logmax = pairs
+        .iter()
+        .map(|p| bytes_to_mb(p.dgl.peak_transient_bytes).max(
+            bytes_to_mb(p.fsa.peak_transient_bytes)))
+        .fold(1.0f64, f64::max)
+        .log10();
+    let mut out = String::new();
+    let _ = writeln!(out, "Fig 5. Absolute peak transient memory (MB, log scale), DGL vs FSA (B=1024).");
+    for p in &pairs {
+        let dgl_mb = bytes_to_mb(p.dgl.peak_transient_bytes);
+        let fsa_mb = bytes_to_mb(p.fsa.peak_transient_bytes);
+        let _ = writeln!(out, "{} {}", p.dataset, p.fanout());
+        let _ = writeln!(out, "   DGL {:>10.2} MB |{}", dgl_mb,
+                         bar(dgl_mb.max(0.01).log10().max(0.0), logmax, 50));
+        let _ = writeln!(out, "   FSA {:>10.2} MB |{}", fsa_mb,
+                         bar(fsa_mb.max(0.01).log10().max(0.0), logmax, 50));
+    }
+    out
+}
+
+/// Table 3: stage-split profiler breakdown of the baseline step.
+pub fn table3(report: &ProfileReport) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "Table 3. Stage-split profile of the DGL-like baseline ({}, fanout 15-10, B=1024, AMP on).",
+                     report.dataset);
+    let _ = writeln!(out, "Exclusive time per stage; {} timed steps, medians. PJRT analogue of the paper's PyTorch profiler.",
+                     report.steps);
+    let _ = writeln!(out, "{:-<64}", "");
+    let _ = writeln!(out, "{:<18} {:>10} {:>12} {:>8}", "Stage", "Self %",
+                     "Self (ms)", "#Calls");
+    let _ = writeln!(out, "{:-<64}", "");
+    for r in &report.rows {
+        let _ = writeln!(out, "{:<18} {:>9.2}% {:>12.3} {:>8}", r.name, r.pct,
+                         r.median_ms, r.calls);
+    }
+    let _ = writeln!(out, "{:-<64}", "");
+    let _ = writeln!(out, "{:<18} {:>10} {:>12.3}", "total", "100%",
+                     report.total_ms);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(ds: &str, variant: &str, k1: u32, k2: u32, batch: u32, seed: u64,
+           step_ms: f64, peak: u64) -> BenchRow {
+        BenchRow {
+            dataset: ds.into(),
+            variant: variant.into(),
+            hops: 2,
+            k1,
+            k2,
+            batch,
+            amp: true,
+            repeat_seed: seed,
+            steps: 30,
+            step_ms,
+            sample_ms: 0.0,
+            upload_ms: 0.0,
+            execute_ms: step_ms,
+            pairs_per_s: 1e6 / step_ms,
+            nodes_per_s: 1e3 / step_ms,
+            peak_transient_bytes: peak,
+            loss: 1.0,
+        }
+    }
+
+    fn sample_rows() -> Vec<BenchRow> {
+        let mut rows = Vec::new();
+        for seed in [42, 43, 44] {
+            rows.push(row("arxiv_sim", "dgl", 15, 10, 1024, seed, 10.0, 50_000_000));
+            rows.push(row("arxiv_sim", "fsa", 15, 10, 1024, seed, 2.0, 5_000_000));
+        }
+        rows
+    }
+
+    #[test]
+    fn pairing_and_speedup() {
+        let pairs = pair_rows(&sample_rows());
+        assert_eq!(pairs.len(), 1);
+        assert!((pairs[0].step_speedup() - 5.0).abs() < 1e-9);
+        assert!((pairs[0].mem_ratio() - 10.0).abs() < 1e-9);
+        assert_eq!(pairs[0].fanout(), "15-10");
+    }
+
+    #[test]
+    fn table1_mentions_both_variants() {
+        let t = table1(&sample_rows());
+        assert!(t.contains("arxiv_sim"));
+        assert!(t.contains("5.00x"));
+    }
+
+    #[test]
+    fn fig1_flags_regressions() {
+        let mut rows = sample_rows();
+        for seed in [42, 43, 44] {
+            rows.push(row("reddit_sim", "dgl", 25, 10, 1024, seed, 2.0, 1));
+            rows.push(row("reddit_sim", "fsa", 25, 10, 1024, seed, 4.0, 1));
+        }
+        let f = fig1(&rows);
+        assert!(f.contains("fusion loses"));
+    }
+
+    #[test]
+    fn table2_ratio_rendering() {
+        let t = table2(&sample_rows());
+        assert!(t.contains("10.00x"));
+    }
+
+    #[test]
+    fn unpaired_rows_are_dropped() {
+        let rows = vec![row("solo", "dgl", 10, 10, 1024, 42, 1.0, 1)];
+        assert!(pair_rows(&rows).is_empty());
+    }
+}

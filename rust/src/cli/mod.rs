@@ -1,0 +1,175 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `fsa <subcommand> [--key value]... [--switch]... [positional]...`
+//! A `--key` is a switch when it is followed by another `--key` or nothing;
+//! otherwise it consumes the next token as its value.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (after argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut it = tokens.into_iter().peekable();
+        let mut args = Args {
+            subcommand: it.next().unwrap_or_default(),
+            ..Default::default()
+        };
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                // --key=value form
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        args.options.insert(key.to_string(), v);
+                    }
+                    _ => args.switches.push(key.to_string()),
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.str_opt(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Fanout option like "15x10" or "10" (1-hop).
+    pub fn fanout(&self, key: &str, default: (usize, usize))
+                  -> Result<(usize, usize)> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => parse_fanout(v),
+        }
+    }
+}
+
+/// Parse "k1xk2" / "k1_k2" / "k1" into (k1, k2).
+pub fn parse_fanout(s: &str) -> Result<(usize, usize)> {
+    let norm = s.replace('_', "x");
+    if let Some((a, b)) = norm.split_once('x') {
+        Ok((a.trim().parse()?, b.trim().parse()?))
+    } else {
+        Ok((norm.trim().parse()?, 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_switches() {
+        let a = parse(&["train", "--dataset", "tiny", "--quick",
+                        "--steps", "30", "pos1"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.str_opt("dataset"), Some("tiny"));
+        assert!(a.has("quick"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 30);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse(&["x", "--k=v", "--n=3"]);
+        assert_eq!(a.str_opt("k"), Some("v"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["x", "--flag"]);
+        assert!(a.has("flag"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["x"]);
+        assert_eq!(a.str_or("dataset", "tiny"), "tiny");
+        assert_eq!(a.usize_or("steps", 30).unwrap(), 30);
+        assert_eq!(a.u64_or("seed", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn bad_int_reports_key() {
+        let a = parse(&["x", "--steps", "abc"]);
+        let err = a.usize_or("steps", 0).unwrap_err().to_string();
+        assert!(err.contains("steps"));
+    }
+
+    #[test]
+    fn fanout_forms() {
+        assert_eq!(parse_fanout("15x10").unwrap(), (15, 10));
+        assert_eq!(parse_fanout("15_10").unwrap(), (15, 10));
+        assert_eq!(parse_fanout("10").unwrap(), (10, 0));
+        assert!(parse_fanout("x").is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["x", "--datasets", "a, b,c"]);
+        assert_eq!(a.list_or("datasets", &["z"]), vec!["a", "b", "c"]);
+        assert_eq!(a.list_or("missing", &["z"]), vec!["z"]);
+    }
+}

@@ -1,0 +1,529 @@
+//! Training-loop coordinator — variant dispatch, batching, measurement.
+//!
+//! This is the L3 driver of the paper's benchmark protocol (§5): for each
+//! configuration it runs `warmup` untimed steps then `steps` timed steps,
+//! where one step = (host sampling for the baseline) + per-step uploads +
+//! one synchronized train-step dispatch + parameter-state update. Both
+//! variants share seed order, base-seed schedule, and dataset, so every
+//! comparison is paired (DESIGN.md §5).
+
+pub mod profile;
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gen::{builtin_spec, Dataset, Split};
+use crate::memory::{self, MemoryMeter, StepDims};
+use crate::metrics::Timer;
+use crate::rng::{mix, SplitMix64};
+use crate::runtime::{init_params, Executable, Runtime};
+use crate::sampler;
+
+/// Which pipeline a trainer drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// FuseSampleAgg: sampling happens inside the fused kernel.
+    Fsa,
+    /// DGL-like baseline: host sampling → materialized blocks → SAGEConv.
+    Dgl,
+}
+
+impl Variant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Fsa => "fsa",
+            Variant::Dgl => "dgl",
+        }
+    }
+}
+
+/// One training configuration (a row of the paper's grid).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub variant: Variant,
+    pub hops: u32,
+    pub dataset: String,
+    pub k1: usize,
+    pub k2: usize,
+    pub batch: usize,
+    pub amp: bool,
+    pub save_indices: bool,
+    /// Repeat seed (paper uses {42, 43, 44}).
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    pub fn artifact_variant(&self) -> String {
+        let base = match self.variant {
+            Variant::Fsa => "fsa",
+            Variant::Dgl => "dgl",
+        };
+        format!("{base}{}", self.hops)
+    }
+}
+
+/// Timing breakdown of one training step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTiming {
+    /// Host-side neighbor sampling (baseline only).
+    pub sample_ms: f64,
+    /// Per-step uploads: params/opt-state re-upload + batch tensors.
+    pub upload_ms: f64,
+    /// Synchronized executable dispatch (fwd+bwd+optimizer).
+    pub execute_ms: f64,
+    /// Output literal handling (tuple decomposition, loss read-back).
+    pub post_ms: f64,
+    /// Training loss after this step.
+    pub loss: f64,
+    /// Raw sampled (seed, neighbor) pairs this step (counted untimed).
+    pub pairs: u64,
+    /// Peak transient bytes this step (measured uploads/outputs + analytic
+    /// executable intermediates).
+    pub transient_bytes: u64,
+}
+
+impl StepTiming {
+    /// The paper's primary metric: full synchronized step wall-clock.
+    pub fn total_ms(&self) -> f64 {
+        self.sample_ms + self.upload_ms + self.execute_ms + self.post_ms
+    }
+}
+
+/// Cache of generated datasets (generation is deterministic but costly).
+#[derive(Default)]
+pub struct DatasetCache {
+    map: HashMap<String, Rc<Dataset>>,
+}
+
+impl DatasetCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&mut self, rt: &Runtime, name: &str) -> Result<Rc<Dataset>> {
+        if let Some(d) = self.map.get(name) {
+            return Ok(d.clone());
+        }
+        // manifest spec is authoritative; fall back to the builtin table
+        let spec = rt
+            .manifest
+            .datasets
+            .get(name)
+            .cloned()
+            .map_or_else(|| builtin_spec(name), Ok)?;
+        let ds = Rc::new(Dataset::generate(spec)?);
+        self.map.insert(name.to_string(), ds.clone());
+        Ok(ds)
+    }
+}
+
+/// A live training session for one configuration.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: TrainConfig,
+    exe: Rc<Executable>,
+    pub ds: Rc<Dataset>,
+    // static device buffers
+    rowptr_buf: Option<xla::PjRtBuffer>,
+    col_buf: Option<xla::PjRtBuffer>,
+    x_buf: xla::PjRtBuffer,
+    // host-side model state (re-uploaded each step; both variants pay this)
+    params: Vec<xla::Literal>,
+    mstate: Vec<xla::Literal>,
+    vstate: Vec<xla::Literal>,
+    pub step_count: usize,
+    // batching
+    train_nodes: Vec<i32>,
+    cursor: usize,
+    epoch: u64,
+    pub meter: MemoryMeter,
+    dims: StepDims,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cache: &mut DatasetCache,
+               cfg: TrainConfig) -> Result<Trainer<'rt>> {
+        let name = rt.manifest.find_train(
+            &cfg.artifact_variant(), &cfg.dataset, cfg.k1, cfg.k2,
+            cfg.batch, cfg.amp, cfg.save_indices)?.name.clone();
+        Self::new_named(rt, cache, cfg, &name)
+    }
+
+    /// Build a trainer on an explicit artifact (e.g. a §Perf tile variant)
+    /// whose dims must match `cfg`.
+    pub fn new_named(rt: &'rt Runtime, cache: &mut DatasetCache,
+                     cfg: TrainConfig, artifact: &str) -> Result<Trainer<'rt>> {
+        let exe = rt.load(artifact)?;
+        let ds = cache.get(rt, &cfg.dataset)?;
+
+        // static uploads (graph + features live on device, like DGL)
+        let n = ds.spec.n;
+        let needs_graph = cfg.variant == Variant::Fsa;
+        let rowptr_buf = if needs_graph {
+            Some(rt.buf_i32(&ds.graph.rowptr, &[n + 1])?)
+        } else {
+            None
+        };
+        let col_buf = if needs_graph {
+            Some(rt.buf_i32(&ds.graph.col, &[ds.graph.e_cap()])?)
+        } else {
+            None
+        };
+        // feature dtype follows the artifact contract (the fused 2-hop
+        // kernel dispatches on it — paper §4; bf16 halves gather traffic)
+        let x_dtype = exe
+            .spec
+            .inputs
+            .iter()
+            .find(|t| t.name == "x")
+            .map(|t| t.dtype)
+            .unwrap_or(crate::runtime::Dtype::F32);
+        let x_buf = match x_dtype {
+            crate::runtime::Dtype::Bf16 => {
+                rt.buf_bf16_from_f32(&ds.features, &[n, ds.spec.d])?
+            }
+            _ => rt.buf_f32(&ds.features, &[n, ds.spec.d])?,
+        };
+
+        // deterministic parameter init (identical across variants' seeds)
+        let np = exe.spec.n_params();
+        let pspecs = &exe.spec.inputs[..np];
+        let values = init_params(pspecs, cfg.seed);
+        let mut params = Vec::with_capacity(np);
+        let mut mstate = Vec::with_capacity(np);
+        let mut vstate = Vec::with_capacity(np);
+        for (s, vals) in pspecs.iter().zip(&values) {
+            params.push(lit_f32(vals, &s.shape)?);
+            mstate.push(lit_f32(&vec![0.0; vals.len()], &s.shape)?);
+            vstate.push(lit_f32(&vec![0.0; vals.len()], &s.shape)?);
+        }
+
+        let mut train_nodes = ds.split_nodes(Split::Train);
+        if train_nodes.len() < cfg.batch {
+            bail!("dataset {} has {} train nodes < batch {}",
+                  cfg.dataset, train_nodes.len(), cfg.batch);
+        }
+        SplitMix64::new(mix(cfg.seed ^ 0xE90C)).shuffle(&mut train_nodes);
+
+        let dims = StepDims {
+            batch: cfg.batch,
+            k1: cfg.k1,
+            k2: cfg.k2,
+            d: ds.spec.d,
+            hidden: rt.manifest.hidden,
+            classes: ds.spec.c,
+            tile: exe.spec.tile,
+        };
+
+        Ok(Trainer {
+            rt,
+            cfg,
+            exe,
+            ds,
+            rowptr_buf,
+            col_buf,
+            x_buf,
+            params,
+            mstate,
+            vstate,
+            step_count: 0,
+            train_nodes,
+            cursor: 0,
+            epoch: 0,
+            meter: MemoryMeter::new(),
+            dims,
+        })
+    }
+
+    /// Next batch of seed nodes (reshuffles at epoch boundaries; identical
+    /// order across variants for the same seed).
+    pub fn next_batch(&mut self) -> Vec<i32> {
+        if self.cursor + self.cfg.batch > self.train_nodes.len() {
+            self.epoch += 1;
+            SplitMix64::new(mix(self.cfg.seed ^ 0xE90C ^ self.epoch))
+                .shuffle(&mut self.train_nodes);
+            self.cursor = 0;
+        }
+        let out = self.train_nodes[self.cursor..self.cursor + self.cfg.batch]
+            .to_vec();
+        self.cursor += self.cfg.batch;
+        out
+    }
+
+    /// Per-step base seed: shared schedule across variants so both sample
+    /// the same neighborhoods at the same step (paired comparisons).
+    pub fn step_base_seed(&self) -> u64 {
+        mix(self.cfg.seed.wrapping_add(self.step_count as u64))
+    }
+
+    /// Run one training step; returns the timing breakdown.
+    pub fn step(&mut self) -> Result<StepTiming> {
+        let seeds = self.next_batch();
+        self.step_with_seeds(&seeds)
+    }
+
+    /// Run one step on explicit seeds (used by tests and the e2e example).
+    pub fn step_with_seeds(&mut self, seeds: &[i32]) -> Result<StepTiming> {
+        let mut t = StepTiming::default();
+        let base = self.step_base_seed();
+        let b = self.cfg.batch;
+        if seeds.len() != b {
+            bail!("expected {b} seeds, got {}", seeds.len());
+        }
+        let labels: Vec<i32> =
+            seeds.iter().map(|&u| self.ds.labels[u as usize]).collect();
+        self.meter.reset_step();
+
+        // ---- 1. host sampling (baseline only; the paper's sampler stage)
+        let mut block2: Option<sampler::Block2> = None;
+        let mut block1: Option<sampler::Block1> = None;
+        if self.cfg.variant == Variant::Dgl {
+            let timer = Timer::start();
+            if self.cfg.hops == 2 {
+                block2 = Some(sampler::build_block2(
+                    &self.ds.graph, seeds, self.cfg.k1, self.cfg.k2, base));
+            } else {
+                block1 = Some(sampler::build_block1(
+                    &self.ds.graph, seeds, self.cfg.k1, base));
+            }
+            t.sample_ms = timer.ms();
+        }
+
+        // ---- 2. per-step uploads (params/opt state + batch tensors);
+        // static buffers (graph, features) are passed by reference.
+        let timer = Timer::start();
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(24);
+        let mut upload_bytes = 0u64;
+        for lit in self.params.iter().chain(&self.mstate).chain(&self.vstate) {
+            owned.push(self.rt.buf_from_literal(lit)?);
+            upload_bytes += lit.size_bytes() as u64;
+        }
+        owned.push(self.rt.buf_scalar_f32(self.step_count as f32)?);
+        upload_bytes += 4;
+
+        // (owned-index | static-ref) arg plan, in manifest input order
+        enum Arg {
+            Owned(usize),
+            Rowptr,
+            Col,
+            X,
+        }
+        let mut plan: Vec<Arg> = (0..owned.len()).map(Arg::Owned).collect();
+        match (self.cfg.variant, self.cfg.hops) {
+            (Variant::Fsa, _) => {
+                plan.push(Arg::Rowptr);
+                plan.push(Arg::Col);
+                plan.push(Arg::X);
+                owned.push(self.rt.buf_i32(seeds, &[b])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                owned.push(self.rt.buf_i32(&labels, &[b])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                owned.push(self.rt.buf_u64(&[base], &[1])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                upload_bytes += (2 * b * 4 + 8) as u64;
+            }
+            (Variant::Dgl, 2) => {
+                let blk = block2.as_ref().unwrap();
+                let f1w = 1 + self.cfg.k1;
+                plan.push(Arg::X);
+                owned.push(self.rt.buf_i32(&blk.f1, &[b, f1w])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                owned.push(self.rt.buf_i32(&blk.s2, &[b, f1w, self.cfg.k2])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                owned.push(self.rt.buf_i32(&labels, &[b])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                upload_bytes +=
+                    (blk.f1.len() * 4 + blk.s2.len() * 4 + b * 4) as u64;
+            }
+            (Variant::Dgl, _) => {
+                let blk = block1.as_ref().unwrap();
+                let f1w = 1 + self.cfg.k1;
+                plan.push(Arg::X);
+                owned.push(self.rt.buf_i32(&blk.f1, &[b, f1w])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                owned.push(self.rt.buf_i32(&labels, &[b])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                upload_bytes += (blk.f1.len() * 4 + b * 4) as u64;
+            }
+        }
+        let args: Vec<&xla::PjRtBuffer> = plan
+            .iter()
+            .map(|a| match a {
+                Arg::Owned(i) => &owned[*i],
+                Arg::Rowptr => self.rowptr_buf.as_ref().unwrap(),
+                Arg::Col => self.col_buf.as_ref().unwrap(),
+                Arg::X => &self.x_buf,
+            })
+            .collect();
+        t.upload_ms = timer.ms();
+        self.meter.alloc(upload_bytes);
+
+        // ---- 3. synchronized dispatch (fwd + bwd + AdamW in one artifact)
+        let timer = Timer::start();
+        let outputs = self.exe.run(&args).context("train step dispatch")?;
+        t.execute_ms = timer.ms();
+
+        // ---- 4. state update + loss read-back
+        let timer = Timer::start();
+        let np = self.exe.spec.n_params();
+        let mut outputs = outputs;
+        let loss_lit = outputs.pop().unwrap();
+        t.loss = loss_lit.get_first_element::<f32>()? as f64;
+        let vs = outputs.split_off(2 * np);
+        let ms = outputs.split_off(np);
+        self.params = outputs;
+        self.mstate = ms;
+        self.vstate = vs;
+        t.post_ms = timer.ms();
+
+        // transient accounting: measured uploads/outputs + analytic
+        // executable intermediates (DESIGN.md §3 meter)
+        let analytic = match (self.cfg.variant, self.cfg.hops) {
+            (Variant::Dgl, 2) => memory::baseline2_transient(&self.dims),
+            (Variant::Dgl, _) => memory::baseline1_transient(&self.dims),
+            (Variant::Fsa, 2) => {
+                memory::fused2_transient(&self.dims, self.cfg.save_indices)
+            }
+            (Variant::Fsa, _) => {
+                memory::fused1_transient(&self.dims, self.cfg.save_indices)
+            }
+        };
+        self.meter.alloc(analytic.intermediates + self.exe.spec.output_bytes());
+        t.transient_bytes = self.meter.peak();
+        self.meter.reset_peak();
+        self.meter.reset_step();
+
+        // untimed: raw sampled-pair count (paper's auxiliary metric)
+        t.pairs = match (self.cfg.variant, self.cfg.hops) {
+            (Variant::Dgl, 2) => {
+                sampler::block2_sampled_pairs(block2.as_ref().unwrap())
+            }
+            (Variant::Dgl, _) => {
+                let blk = block1.as_ref().unwrap();
+                let f1w = 1 + self.cfg.k1;
+                (0..b)
+                    .map(|bi| sampler::valid_pairs(
+                        &blk.f1[bi * f1w + 1..(bi + 1) * f1w]))
+                    .sum()
+            }
+            (Variant::Fsa, 2) => sampler::fused2_sampled_pairs(
+                &self.ds.graph, seeds, self.cfg.k1, self.cfg.k2, base),
+            (Variant::Fsa, _) => {
+                let s1 = sampler::sample_frontier(
+                    &self.ds.graph, seeds, self.cfg.k1, base, 0);
+                sampler::valid_pairs(&s1)
+            }
+        };
+
+        self.step_count += 1;
+        Ok(t)
+    }
+
+    /// Current parameter literals (for eval / checkpoint inspection).
+    pub fn params(&self) -> &[xla::Literal] {
+        &self.params
+    }
+
+    /// Validation accuracy via the dataset's eval artifact (matching the
+    /// trainer's variant — fused forward for Fsa, block forward for Dgl).
+    pub fn evaluate(&self, max_nodes: usize) -> Result<f64> {
+        evaluate_params(self.rt, &self.ds, self.cfg.variant, &self.params,
+                        self.cfg.seed, max_nodes)
+    }
+}
+
+/// Validation accuracy of a parameter set using the dataset's
+/// `{fsa2|dgl2}_eval_*` artifact.
+pub fn evaluate_params(rt: &Runtime, ds: &Dataset, variant: Variant,
+                       params: &[xla::Literal], seed: u64,
+                       max_nodes: usize) -> Result<f64> {
+    let name = format!("{}2_eval_{}_f15x10_b512", variant.as_str(),
+                       ds.spec.name);
+    let exe = rt.load(&name)?;
+    let (b, k1, k2) = (exe.spec.batch, exe.spec.k1, exe.spec.k2);
+    let mut nodes = ds.split_nodes(Split::Val);
+    nodes.truncate(max_nodes.max(b));
+    let eval_base = mix(seed ^ 0xEAE1);
+    let rowptr = rt.buf_i32(&ds.graph.rowptr, &[ds.spec.n + 1])?;
+    let col = rt.buf_i32(&ds.graph.col, &[ds.graph.e_cap()])?;
+    let x = rt.buf_f32(&ds.features, &[ds.spec.n, ds.spec.d])?;
+
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for chunk in nodes.chunks(b) {
+        let mut seeds = chunk.to_vec();
+        let real = seeds.len();
+        seeds.resize(b, chunk[0]); // pad; padded rows ignored below
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(10);
+        for lit in params {
+            owned.push(rt.buf_from_literal(lit)?);
+        }
+        let np = owned.len();
+        let out = match variant {
+            Variant::Fsa => {
+                owned.push(rt.buf_i32(&seeds, &[b])?);
+                owned.push(rt.buf_u64(&[eval_base], &[1])?);
+                let mut args: Vec<&xla::PjRtBuffer> =
+                    owned[..np].iter().collect();
+                args.push(&rowptr);
+                args.push(&col);
+                args.push(&x);
+                args.push(&owned[np]);
+                args.push(&owned[np + 1]);
+                exe.run(&args)?
+            }
+            Variant::Dgl => {
+                let blk = sampler::build_block2(&ds.graph, &seeds, k1, k2,
+                                                eval_base);
+                owned.push(rt.buf_i32(&blk.f1, &[b, 1 + k1])?);
+                owned.push(rt.buf_i32(&blk.s2, &[b, 1 + k1, k2])?);
+                let mut args: Vec<&xla::PjRtBuffer> =
+                    owned[..np].iter().collect();
+                args.push(&x);
+                args.push(&owned[np]);
+                args.push(&owned[np + 1]);
+                exe.run(&args)?
+            }
+        };
+        let logits = out[0].to_vec::<f32>()?;
+        let c = ds.spec.c;
+        for (i, &u) in chunk.iter().enumerate().take(real) {
+            let row = &logits[i * c..(i + 1) * c];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred as i32 == ds.labels[u as usize] {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Warmup + timed measurement loop (the paper's protocol, §5).
+pub fn measure(trainer: &mut Trainer, warmup: usize, steps: usize)
+               -> Result<Vec<StepTiming>> {
+    for _ in 0..warmup {
+        trainer.step()?;
+    }
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        out.push(trainer.step()?);
+    }
+    Ok(out)
+}
+
+fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.len() <= 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}

@@ -1,0 +1,230 @@
+//! Stage-split profiler — the Table 3 reproduction.
+//!
+//! Runs the baseline training step as a pipeline of separate executables
+//! (gather → layer1 → layer2 → loss → bwd_layer2 → bwd_layer1 → adamw),
+//! timing every dispatch individually plus the host sampler and the
+//! between-stage copies. This is the PJRT analogue of the paper's PyTorch
+//! profiler breakdown (exclusive CUDA time per operator class); the
+//! stage ↔ paper-row mapping is documented in python/compile/stages.py.
+//!
+//! The between-stage copies are real: each stage's outputs are synced to
+//! host literals and re-uploaded for the next stage. The dominant copy is
+//! the materialized feature block — that round trip is precisely the
+//! "block materialization" cost the fused operator removes.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::DatasetCache;
+use crate::gen::Split;
+use crate::metrics::{summarize, Timer};
+use crate::rng::{mix, SplitMix64};
+use crate::runtime::{init_params, Runtime};
+use crate::sampler;
+
+/// Exclusive time of one profiled row.
+#[derive(Clone, Debug)]
+pub struct ProfileRow {
+    pub name: String,
+    /// Median exclusive milliseconds per step.
+    pub median_ms: f64,
+    /// Share of the summed exclusive time, in percent.
+    pub pct: f64,
+    /// Dispatches per step.
+    pub calls: u32,
+}
+
+/// Result of a profiling run.
+#[derive(Debug)]
+pub struct ProfileReport {
+    pub rows: Vec<ProfileRow>,
+    pub total_ms: f64,
+    pub dataset: String,
+    pub steps: usize,
+}
+
+/// Profile the baseline pipeline on the Table 3 configuration
+/// (products_sim, fanout 15–10, batch 1024, AMP on).
+pub fn profile_baseline(rt: &Runtime, cache: &mut DatasetCache,
+                        warmup: usize, steps: usize, seed: u64)
+                        -> Result<ProfileReport> {
+    let stages = rt.manifest.profile_stages();
+    anyhow::ensure!(stages.len() == 7, "expected 7 stage artifacts");
+    let spec0 = stages[0].clone();
+    let (ds_name, k1, k2, b) =
+        (spec0.dataset.clone(), spec0.k1, spec0.k2, spec0.batch);
+    let ds = cache.get(rt, &ds_name)?;
+    let f1w = 1 + k1;
+
+    // compile all stages up front
+    let exes: Vec<_> = stages
+        .iter()
+        .map(|s| rt.load(&s.name))
+        .collect::<Result<Vec<_>>>()?;
+    let stage_names: Vec<String> =
+        stages.iter().map(|s| s.variant.clone()).collect();
+
+    // static upload
+    let x_buf = rt.buf_f32(&ds.features, &[ds.spec.n, ds.spec.d])?;
+
+    // params for the adamw stage (dgl2 layout) — reuse its input specs
+    let adamw_spec = stages[6].clone();
+    let np = 6usize;
+    let pspecs = &adamw_spec.inputs[..np];
+    let values = init_params(pspecs, seed);
+    let mut params: Vec<xla::Literal> = Vec::new();
+    let mut mstate: Vec<xla::Literal> = Vec::new();
+    let mut vstate: Vec<xla::Literal> = Vec::new();
+    for (s, vals) in pspecs.iter().zip(&values) {
+        params.push(lit(vals, &s.shape)?);
+        mstate.push(lit(&vec![0.0; vals.len()], &s.shape)?);
+        vstate.push(lit(&vec![0.0; vals.len()], &s.shape)?);
+    }
+
+    let mut train_nodes = ds.split_nodes(Split::Train);
+    SplitMix64::new(mix(seed)).shuffle(&mut train_nodes);
+
+    // per-row samples across timed steps
+    let row_names = ["sample(host)", "copy(h2d/d2h)", "gather", "layer1",
+                     "layer2", "loss", "bwd_layer2", "bwd_layer1", "adamw"];
+    let mut samples: Vec<Vec<f64>> =
+        row_names.iter().map(|_| Vec::new()).collect();
+
+    for step in 0..warmup + steps {
+        let timed = step >= warmup;
+        let base = mix(seed.wrapping_add(step as u64));
+        let seeds = &train_nodes[(step * b) % (train_nodes.len() - b)..][..b];
+        let labels: Vec<i32> =
+            seeds.iter().map(|&u| ds.labels[u as usize]).collect();
+
+        let mut row_ms = [0f64; 9];
+
+        // -- host sampling
+        let t = Timer::start();
+        let blk = sampler::build_block2(&ds.graph, seeds, k1, k2, base);
+        row_ms[0] = t.ms();
+
+        // -- copies: index upload
+        let t = Timer::start();
+        let f1_buf = rt.buf_i32(&blk.f1, &[b, f1w])?;
+        let s2_buf = rt.buf_i32(&blk.s2, &[b, f1w, k2])?;
+        let labels_buf = rt.buf_i32(&labels, &[b])?;
+        let mut copy_ms = t.ms();
+
+        // helper: run a stage synchronized, return output literals
+        let mut run_stage = |idx: usize,
+                             args: &[&xla::PjRtBuffer]|
+                             -> Result<Vec<xla::Literal>> {
+            let t = Timer::start();
+            let out = exes[idx].run(args)
+                .with_context(|| format!("stage {}", stage_names[idx]))?;
+            row_ms[2 + idx] = t.ms();
+            Ok(out)
+        };
+
+        // -- gather (materializes xf1 + block)
+        let g_out = run_stage(0, &[&x_buf, &f1_buf, &s2_buf])?;
+
+        let t = Timer::start();
+        let xf1_buf = rt.buf_from_literal(&g_out[0])?;
+        let block_buf = rt.buf_from_literal(&g_out[1])?;
+        let pbufs: Vec<xla::PjRtBuffer> = params
+            .iter()
+            .map(|l| rt.buf_from_literal(l))
+            .collect::<Result<Vec<_>>>()?;
+        copy_ms += t.ms();
+
+        // -- layer1
+        let l1_out = run_stage(1, &[&xf1_buf, &block_buf, &s2_buf,
+                                    &pbufs[0], &pbufs[1], &pbufs[2]])?;
+        let t = Timer::start();
+        let h1_buf = rt.buf_from_literal(&l1_out[0])?;
+        copy_ms += t.ms();
+
+        // -- layer2
+        let l2_out = run_stage(2, &[&h1_buf, &f1_buf, &pbufs[3], &pbufs[4],
+                                    &pbufs[5]])?;
+        let t = Timer::start();
+        let logits_buf = rt.buf_from_literal(&l2_out[0])?;
+        copy_ms += t.ms();
+
+        // -- loss (+ dloss/dlogits)
+        let loss_out = run_stage(3, &[&logits_buf, &labels_buf])?;
+        let t = Timer::start();
+        let glogits_buf = rt.buf_from_literal(&loss_out[1])?;
+        copy_ms += t.ms();
+
+        // -- bwd layer2
+        let b2_out = run_stage(4, &[&h1_buf, &f1_buf, &glogits_buf,
+                                    &pbufs[3], &pbufs[4]])?;
+        let t = Timer::start();
+        let gh1_buf = rt.buf_from_literal(&b2_out[3])?;
+        copy_ms += t.ms();
+
+        // -- bwd layer1
+        let b1_out = run_stage(5, &[&xf1_buf, &block_buf, &s2_buf, &h1_buf,
+                                    &gh1_buf, &pbufs[0], &pbufs[1],
+                                    &pbufs[2]])?;
+
+        // -- adamw
+        let t = Timer::start();
+        let grads = [&b1_out[0], &b1_out[1], &b1_out[2], &b2_out[0],
+                     &b2_out[1], &b2_out[2]];
+        let mut abufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(25);
+        for l in params.iter() {
+            abufs.push(rt.buf_from_literal(l)?);
+        }
+        for g in grads {
+            abufs.push(rt.buf_from_literal(g)?);
+        }
+        for l in mstate.iter().chain(vstate.iter()) {
+            abufs.push(rt.buf_from_literal(l)?);
+        }
+        abufs.push(rt.buf_scalar_f32(step as f32)?);
+        copy_ms += t.ms();
+        let a_out = run_stage(6, &abufs.iter().collect::<Vec<_>>())?;
+
+        // state update
+        let mut a_out = a_out;
+        let vs = a_out.split_off(2 * np);
+        let ms_ = a_out.split_off(np);
+        params = a_out;
+        mstate = ms_;
+        vstate = vs;
+
+        row_ms[1] = copy_ms;
+        if timed {
+            for (i, v) in row_ms.iter().enumerate() {
+                samples[i].push(*v);
+            }
+        }
+    }
+
+    // summarize
+    let medians: Vec<f64> =
+        samples.iter().map(|s| summarize(s).median).collect();
+    let total: f64 = medians.iter().sum();
+    let calls = [1u32, 9, 1, 1, 1, 1, 1, 1, 1];
+    let mut rows: Vec<ProfileRow> = row_names
+        .iter()
+        .zip(&medians)
+        .zip(&calls)
+        .map(|((n, m), c)| ProfileRow {
+            name: n.to_string(),
+            median_ms: *m,
+            pct: 100.0 * m / total.max(1e-12),
+            calls: *c,
+        })
+        .collect();
+    rows.sort_by(|a, b| b.median_ms.partial_cmp(&a.median_ms).unwrap());
+
+    Ok(ProfileReport { rows, total_ms: total, dataset: ds_name, steps })
+}
+
+fn lit(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    if shape.len() <= 1 {
+        return Ok(l);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims)?)
+}

@@ -1,0 +1,221 @@
+//! CSR graph storage and construction.
+//!
+//! The paper's operator consumes "contiguous CSR (int32)" (§4); this module
+//! is that substrate: an `i32` CSR with a static edge *capacity* (`e_cap`),
+//! because the AOT-compiled executables have static shapes — `col` is padded
+//! to `e_cap` and `rowptr` never points into the pad (DESIGN.md §6).
+
+use anyhow::{bail, ensure, Result};
+
+/// Compressed sparse row adjacency with a padded edge capacity.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    /// Node count.
+    pub n: usize,
+    /// `n + 1` row pointers; `rowptr[n]` = live edge count.
+    pub rowptr: Vec<i32>,
+    /// Column indices, padded with 0 beyond `rowptr[n]` up to `e_cap`.
+    pub col: Vec<i32>,
+}
+
+impl Csr {
+    /// Build from a directed edge list. When `symmetrize` is set both
+    /// directions are inserted (the paper makes all graphs undirected, §5);
+    /// parallel edges and self-loops are removed either way.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)], e_cap: usize,
+                      symmetrize: bool) -> Result<Csr> {
+        let mut all: Vec<(u32, u32)> = Vec::with_capacity(
+            edges.len() * if symmetrize { 2 } else { 1 });
+        for &(u, v) in edges {
+            ensure!((u as usize) < n && (v as usize) < n,
+                    "edge ({u},{v}) out of range for n={n}");
+            if u == v {
+                continue; // drop self-loops
+            }
+            all.push((u, v));
+            if symmetrize {
+                all.push((v, u));
+            }
+        }
+        all.sort_unstable();
+        all.dedup();
+        if all.len() > e_cap {
+            bail!("edge count {} exceeds capacity {e_cap}", all.len());
+        }
+
+        let mut rowptr = vec![0i32; n + 1];
+        for &(u, _) in &all {
+            rowptr[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            rowptr[i + 1] += rowptr[i];
+        }
+        let mut col = vec![0i32; e_cap];
+        for (i, &(_, v)) in all.iter().enumerate() {
+            col[i] = v as i32;
+        }
+        let csr = Csr { n, rowptr, col };
+        csr.validate()?;
+        Ok(csr)
+    }
+
+    /// Live (non-pad) edge count.
+    pub fn num_edges(&self) -> usize {
+        self.rowptr[self.n] as usize
+    }
+
+    /// Padded capacity (= HLO static shape of `col`).
+    pub fn e_cap(&self) -> usize {
+        self.col.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, u: i32) -> i32 {
+        let u = u as usize;
+        self.rowptr[u + 1] - self.rowptr[u]
+    }
+
+    #[inline]
+    pub fn neighbors(&self, u: i32) -> &[i32] {
+        let u = u as usize;
+        &self.col[self.rowptr[u] as usize..self.rowptr[u + 1] as usize]
+    }
+
+    /// Structural invariants: monotone rowptr, in-range columns, cap respected.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.rowptr.len() == self.n + 1, "rowptr length");
+        ensure!(self.rowptr[0] == 0, "rowptr[0] != 0");
+        for i in 0..self.n {
+            ensure!(self.rowptr[i] <= self.rowptr[i + 1],
+                    "rowptr not monotone at {i}");
+        }
+        let e = self.num_edges();
+        ensure!(e <= self.col.len(),
+                "live edges {e} exceed capacity {}", self.col.len());
+        for (i, &c) in self.col[..e].iter().enumerate() {
+            ensure!((0..self.n as i32).contains(&c),
+                    "col[{i}]={c} out of range");
+        }
+        Ok(())
+    }
+
+    /// True when for every (u,v) the reverse edge exists.
+    pub fn is_symmetric(&self) -> bool {
+        (0..self.n as i32).all(|u| {
+            self.neighbors(u)
+                .iter()
+                .all(|&v| self.neighbors(v).binary_search(&u).is_ok()
+                    || self.neighbors(v).contains(&u))
+        })
+    }
+
+    /// Degree distribution statistics (drives the dataset-shape checks).
+    pub fn degree_stats(&self) -> DegreeStats {
+        let mut degs: Vec<i32> = (0..self.n as i32).map(|u| self.degree(u)).collect();
+        degs.sort_unstable();
+        let sum: i64 = degs.iter().map(|&d| d as i64).sum();
+        let n = self.n.max(1);
+        DegreeStats {
+            min: *degs.first().unwrap_or(&0),
+            max: *degs.last().unwrap_or(&0),
+            mean: sum as f64 / n as f64,
+            median: degs[n / 2],
+            p99: degs[((n as f64 * 0.99) as usize).min(n - 1)],
+            isolated: degs.iter().filter(|&&d| d == 0).count(),
+        }
+    }
+}
+
+/// Summary statistics of a degree distribution.
+#[derive(Clone, Copy, Debug)]
+pub struct DegreeStats {
+    pub min: i32,
+    pub max: i32,
+    pub mean: f64,
+    pub median: i32,
+    pub p99: i32,
+    pub isolated: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    fn path_graph(n: usize) -> Csr {
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        Csr::from_edges(n, &edges, 4 * n, true).unwrap()
+    }
+
+    #[test]
+    fn builds_path_graph() {
+        let g = path_graph(5);
+        assert_eq!(g.num_edges(), 8); // 4 undirected edges, both directions
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(2), 2);
+        assert_eq!(g.neighbors(2), &[1, 3]);
+        assert!(g.is_symmetric());
+    }
+
+    #[test]
+    fn dedups_and_drops_self_loops() {
+        let g = Csr::from_edges(3, &[(0, 1), (0, 1), (1, 0), (2, 2)], 8, true)
+            .unwrap();
+        assert_eq!(g.num_edges(), 2); // only 0<->1 survives
+        assert_eq!(g.degree(2), 0);
+    }
+
+    #[test]
+    fn respects_capacity() {
+        assert!(Csr::from_edges(3, &[(0, 1), (1, 2), (0, 2)], 2, true).is_err());
+        assert!(Csr::from_edges(3, &[(0, 1)], 2, true).is_ok());
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(Csr::from_edges(3, &[(0, 7)], 8, true).is_err());
+    }
+
+    #[test]
+    fn directed_mode_keeps_one_direction() {
+        let g = Csr::from_edges(3, &[(0, 1)], 4, false).unwrap();
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 0);
+        assert!(!g.is_symmetric());
+    }
+
+    #[test]
+    fn stats_on_star_graph() {
+        let edges: Vec<(u32, u32)> = (1..10u32).map(|i| (0, i)).collect();
+        let g = Csr::from_edges(10, &edges, 64, true).unwrap();
+        let s = g.degree_stats();
+        assert_eq!(s.max, 9);
+        assert_eq!(s.min, 1);
+        assert!((s.mean - 1.8).abs() < 1e-9);
+        assert_eq!(s.isolated, 0);
+    }
+
+    /// Property test: random edge lists always produce valid symmetric CSR.
+    #[test]
+    fn prop_random_graphs_valid() {
+        let mut r = SplitMix64::new(5);
+        for trial in 0..50 {
+            let n = 2 + r.next_below(60) as usize;
+            let m = r.next_below(4 * n as u64) as usize;
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (r.next_below(n as u64) as u32,
+                          r.next_below(n as u64) as u32))
+                .collect();
+            let g = Csr::from_edges(n, &edges, 2 * m + 16, true)
+                .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+            g.validate().unwrap();
+            assert!(g.is_symmetric(), "trial {trial} not symmetric");
+            // neighbor lists sorted (from_edges sorts) => binary search ok
+            for u in 0..n as i32 {
+                let ns = g.neighbors(u);
+                assert!(ns.windows(2).all(|w| w[0] < w[1]),
+                        "trial {trial}: neighbors of {u} not strictly sorted");
+            }
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! # FuseSampleAgg — fused neighbor sampling + aggregation for mini-batch GNNs
+//!
+//! Rust + JAX + Pallas reproduction of *"FuseSampleAgg: Fused Neighbor
+//! Sampling and Aggregation for Mini-batch GNNs"* (Stanković, 2025).
+//!
+//! This crate is **Layer 3** of the three-layer architecture (see DESIGN.md):
+//! it owns the entire training request path — synthetic dataset generation,
+//! CSR graph storage, the DGL-like host-side neighbor sampler used by the
+//! baseline, mini-batch scheduling, the PJRT runtime that executes the
+//! AOT-compiled artifacts (Layer 2 JAX models calling the Layer 1 Pallas
+//! fused kernels), step timing, transient-memory accounting, and the
+//! benchmark harness that regenerates every table and figure of the paper.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the models
+//! to HLO text once; the `fsa` binary is self-contained afterwards.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`rng`] | deterministic counter RNG (bitwise-identical to the kernel) |
+//! | [`json`] | minimal JSON parser/writer (manifest, configs) |
+//! | [`graph`] | CSR storage, builders, degree statistics |
+//! | [`gen`] | synthetic dataset registry (`arxiv_sim`, `reddit_sim`, …) |
+//! | [`sampler`] | host neighbor sampler + baseline block builder |
+//! | [`runtime`] | PJRT client, artifact manifest, executable cache |
+//! | [`memory`] | transient-memory meter + analytic block model |
+//! | [`metrics`] | timers, robust stats, CSV logging |
+//! | [`coordinator`] | training loop driver, variant dispatch, profiling |
+//! | [`bench`] | grid runner + table/figure renderers (Tables 1–3, Figs 1–5) |
+//! | [`cli`] | hand-rolled argument parser and subcommands |
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod gen;
+pub mod graph;
+pub mod json;
+pub mod memory;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod sampler;
+pub mod util;

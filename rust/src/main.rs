@@ -1,0 +1,286 @@
+//! `fsa` — the FuseSampleAgg coordinator CLI.
+//!
+//! Subcommands:
+//!   gen         generate a synthetic dataset, print shape statistics
+//!   train       train one configuration, print per-step timings + loss
+//!   bench-grid  run the paper's benchmark grid → results/bench.csv
+//!   table       render a table/figure (1|2|fig1..fig5) from the CSV
+//!   profile     stage-split baseline profile (Table 3)
+//!   memory      analytic transient-memory model for a configuration
+//!   inspect     show manifest metadata for an artifact
+//!
+//! Examples:
+//!   fsa train --variant fsa --dataset products_sim --fanout 15x10 \
+//!       --batch 1024 --steps 30
+//!   fsa bench-grid --out results/bench.csv
+//!   fsa table --which 1 --csv results/bench.csv
+
+use anyhow::{bail, Context, Result};
+use fusesampleagg::bench::{self, render, Grid};
+use fusesampleagg::cli::Args;
+use fusesampleagg::coordinator::{profile, DatasetCache, TrainConfig, Trainer,
+                                 Variant};
+use fusesampleagg::gen::{builtin_spec, Dataset};
+use fusesampleagg::memory::{self, StepDims};
+use fusesampleagg::metrics;
+use fusesampleagg::runtime::Runtime;
+use fusesampleagg::util;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "gen" => cmd_gen(args),
+        "train" => cmd_train(args),
+        "bench-grid" => cmd_bench_grid(args),
+        "table" => cmd_table(args),
+        "profile" => cmd_profile(args),
+        "memory" => cmd_memory(args),
+        "inspect" => cmd_inspect(args),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}; try `fsa help`"),
+    }
+}
+
+const HELP: &str = "\
+fsa — FuseSampleAgg coordinator (rust+JAX+Pallas reproduction)
+
+USAGE: fsa <subcommand> [options]
+
+SUBCOMMANDS
+  gen         --dataset NAME                       generate + print stats
+  train       --variant fsa|dgl --dataset NAME --fanout K1xK2 --batch B
+              [--steps N] [--warmup N] [--seed S] [--no-amp] [--eval]
+  bench-grid  [--quick] [--datasets a,b] [--fanouts 10x10,15x10]
+              [--batches 512,1024] [--steps N] [--warmup N] [--out FILE]
+  table       --which 1|2|3|fig1|fig2|fig3|fig4|fig5 [--csv FILE]
+  profile     [--steps N] [--warmup N] [--seed S]      (Table 3)
+  memory      --dataset NAME --fanout K1xK2 --batch B   (analytic model)
+  inspect     --artifact NAME | --list
+";
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let name = args.str_or("dataset", "tiny");
+    let spec = builtin_spec(&name)?;
+    let t = metrics::Timer::start();
+    let ds = Dataset::generate(spec)?;
+    let stats = ds.graph.degree_stats();
+    println!("dataset {name} (stands for {}):", ds.spec.stands_for);
+    println!("  nodes {}  edges {}  e_cap {}  ({:.1}ms to generate)",
+             ds.spec.n, ds.graph.num_edges(), ds.graph.e_cap(), t.ms());
+    println!("  degree: mean {:.1}  median {}  p99 {}  max {}  isolated {}",
+             stats.mean, stats.median, stats.p99, stats.max, stats.isolated);
+    println!("  features [{} x {}], {} classes", ds.spec.n, ds.spec.d,
+             ds.spec.c);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+    let variant = match args.str_or("variant", "fsa").as_str() {
+        "fsa" => Variant::Fsa,
+        "dgl" => Variant::Dgl,
+        v => bail!("--variant must be fsa|dgl, got {v:?}"),
+    };
+    let (k1, k2) = args.fanout("fanout", (15, 10))?;
+    let cfg = TrainConfig {
+        variant,
+        hops: if k2 == 0 { 1 } else { 2 },
+        dataset: args.str_or("dataset", "products_sim"),
+        k1,
+        k2,
+        batch: args.usize_or("batch", 1024)?,
+        amp: !args.has("no-amp"),
+        save_indices: !args.has("no-save-indices"),
+        seed: args.u64_or("seed", 42)?,
+    };
+    let steps = args.usize_or("steps", 30)?;
+    let warmup = args.usize_or("warmup", 5)?;
+
+    println!("training {} on {} fanout {}x{} batch {} amp={} seed={}",
+             cfg.variant.as_str(), cfg.dataset, k1, k2, cfg.batch, cfg.amp,
+             cfg.seed);
+    let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;
+    for _ in 0..warmup {
+        trainer.step()?;
+    }
+    let mut totals = Vec::new();
+    for s in 0..steps {
+        let t = trainer.step()?;
+        totals.push(t.total_ms());
+        if s % 10 == 0 || s == steps - 1 {
+            println!("step {s:>4}: {:.2} ms (sample {:.2} upload {:.2} exec \
+                      {:.2}) loss {:.4}",
+                     t.total_ms(), t.sample_ms, t.upload_ms, t.execute_ms,
+                     t.loss);
+        }
+    }
+    let summary = metrics::summarize(&totals);
+    println!("median step {:.2} ms  (p10 {:.2}, p90 {:.2}, n={})",
+             summary.median, summary.p10, summary.p90, summary.n);
+    if args.has("eval") {
+        let acc = trainer.evaluate(2048)?;
+        println!("validation accuracy: {:.3}", acc);
+    }
+    Ok(())
+}
+
+fn cmd_bench_grid(args: &Args) -> Result<()> {
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+    let mut grid = if args.has("quick") { Grid::quick() } else { Grid::default() };
+    if let Some(ds) = args.str_opt("datasets") {
+        grid.datasets = ds.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if let Some(f) = args.str_opt("fanouts") {
+        grid.fanouts = f
+            .split(',')
+            .map(fusesampleagg::cli::parse_fanout)
+            .collect::<Result<_>>()?;
+    }
+    if let Some(b) = args.str_opt("batches") {
+        grid.batches = b
+            .split(',')
+            .map(|s| s.trim().parse().context("bad batch"))
+            .collect::<Result<_>>()?;
+    }
+    grid.steps = args.usize_or("steps", grid.steps)?;
+    grid.warmup = args.usize_or("warmup", grid.warmup)?;
+
+    let out_path = match args.str_opt("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => util::results_dir().join("bench.csv"),
+    };
+    let rows = bench::run_grid(&rt, &mut cache, &grid, |r| {
+        println!("{:<14} {:<4} f{}x{} b{:<5} seed {}: {:>8.2} ms/step \
+                  ({:.0} pairs/s, {:.1} MB transient)",
+                 r.dataset, r.variant, r.k1, r.k2, r.batch, r.repeat_seed,
+                 r.step_ms, r.pairs_per_s,
+                 util::bytes_to_mb(r.peak_transient_bytes));
+    })?;
+    metrics::write_csv(&out_path, &rows)?;
+    println!("wrote {} rows to {}", rows.len(), out_path.display());
+    println!("\n{}", render::table1(&rows));
+    println!("{}", render::table2(&rows));
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let csv = match args.str_opt("csv") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => util::results_dir().join("bench.csv"),
+    };
+    let which = args.str_or("which", "1");
+    if which == "3" {
+        // Table 3 measures live (stage pipeline), not from the CSV
+        return cmd_profile(args);
+    }
+    let rows = metrics::read_csv(&csv)
+        .with_context(|| format!("reading {csv:?} — run `fsa bench-grid` first"))?;
+    let text = match which.as_str() {
+        "1" => render::table1(&rows),
+        "2" => render::table2(&rows),
+        "fig1" => render::fig1(&rows),
+        "fig2" => render::fig2(&rows),
+        "fig3" => render::fig3(&rows),
+        "fig4" => render::fig4(&rows),
+        "fig5" => render::fig5(&rows),
+        other => bail!("unknown exhibit {other:?}"),
+    };
+    println!("{text}");
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+    let steps = args.usize_or("steps", 10)?;
+    let warmup = args.usize_or("warmup", 2)?;
+    let seed = args.u64_or("seed", 42)?;
+    let report = profile::profile_baseline(&rt, &mut cache, warmup, steps,
+                                           seed)?;
+    println!("{}", render::table3(&report));
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let name = args.str_or("dataset", "products_sim");
+    let spec = builtin_spec(&name)?;
+    let (k1, k2) = args.fanout("fanout", (15, 10))?;
+    let batch = args.usize_or("batch", 1024)?;
+    let dims = StepDims {
+        batch,
+        k1,
+        k2,
+        d: spec.d,
+        hidden: 64,
+        classes: spec.c,
+        tile: args.usize_or("tile", 8)?, // CPU default (EXPERIMENTS §Perf)
+    };
+    let (base, fused) = if k2 > 0 {
+        (memory::baseline2_transient(&dims),
+         memory::fused2_transient(&dims, true))
+    } else {
+        (memory::baseline1_transient(&dims),
+         memory::fused1_transient(&dims, true))
+    };
+    println!("analytic transient model — {name} f{k1}x{k2} b{batch}:");
+    println!("  baseline: upload {} + intermediates {} + outputs {} = {}",
+             util::fmt_bytes(base.upload), util::fmt_bytes(base.intermediates),
+             util::fmt_bytes(base.outputs), util::fmt_bytes(base.peak_hbm()));
+    println!("  fused:    upload {} + intermediates {} + outputs {} = {} \
+              (+ VMEM tile {})",
+             util::fmt_bytes(fused.upload),
+             util::fmt_bytes(fused.intermediates),
+             util::fmt_bytes(fused.outputs), util::fmt_bytes(fused.peak_hbm()),
+             util::fmt_bytes(fused.vmem_tile));
+    println!("  reduction: {:.2}x",
+             base.peak_hbm() as f64 / fused.peak_hbm().max(1) as f64);
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let rt = Runtime::from_env()?;
+    if args.has("list") {
+        for (name, a) in &rt.manifest.artifacts {
+            println!("{:<44} {:<6} {:<10} in:{:<3} out:{}", name, a.kind,
+                     a.dataset, a.inputs.len(), a.outputs.len());
+        }
+        return Ok(());
+    }
+    let name = args
+        .str_opt("artifact")
+        .context("--artifact NAME or --list required")?;
+    let a = rt.manifest.artifact(name)?;
+    println!("{} ({}, {})", a.name, a.kind, a.file);
+    println!("  dataset {}  fanout {}x{}  batch {}  amp {}  save_indices {} \
+              tile {}",
+             a.dataset, a.k1, a.k2, a.batch, a.amp, a.save_indices, a.tile);
+    println!("  inputs:");
+    for t in &a.inputs {
+        println!("    {:<14} {:?} {:?} ({})", t.name, t.shape, t.dtype,
+                 util::fmt_bytes(t.bytes()));
+    }
+    println!("  outputs:");
+    for t in &a.outputs {
+        println!("    {:<14} {:?} {:?} ({})", t.name, t.shape, t.dtype,
+                 util::fmt_bytes(t.bytes()));
+    }
+    Ok(())
+}

@@ -1,0 +1,278 @@
+//! Transient-memory accounting — the Table 2 / Figs 4–5 meter.
+//!
+//! The paper measures the peak GPU-memory *delta* during the timed loop
+//! (NVML delta, falling back to `torch.cuda.max_memory_allocated`). Static
+//! buffers (graph, features, parameters) are excluded by construction; what
+//! remains is exactly the per-step transient footprint: uploaded index
+//! tensors, materialized blocks, activations, gradients, optimizer temps.
+//!
+//! Our meter mirrors that (DESIGN.md §3): the runtime reports measured
+//! upload/output buffer bytes, and this module contributes the analytic
+//! model of the executable-internal intermediates, derived from the same
+//! shape arithmetic as the paper's complexity summary (§4):
+//!   baseline 2-hop:  Θ(B·(1+k1)·k2·D) block + activations
+//!   fused 2-hop:     Θ(B·D) output + saved indices; the gathered tile
+//!                    lives in VMEM only (reported separately).
+
+/// Dimensions of one training-step configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct StepDims {
+    pub batch: usize,
+    pub k1: usize,
+    pub k2: usize, // 0 for 1-hop
+    pub d: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    /// Fused-kernel seed-tile (0 for baseline variants).
+    pub tile: usize,
+}
+
+/// Per-step transient footprint breakdown (bytes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Transient {
+    /// Host→device per-step uploads (index tensors, seeds, labels).
+    pub upload: u64,
+    /// Executable-internal HBM intermediates (blocks, activations, grads).
+    pub intermediates: u64,
+    /// Device→host / param-churn outputs (updated params+opt state, loss).
+    pub outputs: u64,
+    /// VMEM-resident gather tile (fused kernel only; NOT HBM).
+    pub vmem_tile: u64,
+}
+
+impl Transient {
+    /// Peak transient HBM bytes — the Table 2 quantity.
+    pub fn peak_hbm(&self) -> u64 {
+        self.upload + self.intermediates + self.outputs
+    }
+}
+
+const F32: u64 = 4;
+const I32: u64 = 4;
+
+fn fsa_param_bytes(dims: &StepDims) -> u64 {
+    // w_self[d,h] + w_neigh[d,h] + b[h] + w_out[h,c] + b_out[c]
+    ((2 * dims.d * dims.hidden + dims.hidden
+        + dims.hidden * dims.classes + dims.classes) as u64) * F32
+}
+
+fn dgl_param_bytes(dims: &StepDims) -> u64 {
+    // w1_self[d,h] + w1_neigh[d,h] + b1[h] + w2_self[h,c] + w2_neigh[h,c] + b2[c]
+    ((2 * dims.d * dims.hidden + dims.hidden
+        + 2 * dims.hidden * dims.classes + dims.classes) as u64) * F32
+}
+
+/// Analytic transient model for the baseline (DGL-like) 2-hop step.
+pub fn baseline2_transient(dims: &StepDims) -> Transient {
+    let (b, k1, k2, d, h, c) =
+        (dims.batch as u64, dims.k1 as u64, dims.k2 as u64,
+         dims.d as u64, dims.hidden as u64, dims.classes as u64);
+    let f1w = 1 + k1;
+    let params = dgl_param_bytes(dims);
+    let upload = b * f1w * I32          // f1
+        + b * f1w * k2 * I32            // s2
+        + b * I32;                      // labels
+    let intermediates =
+        b * f1w * d * F32               // xf1 (materialized)
+        + b * f1w * k2 * d * F32        // block (materialized) — the gap
+        + b * f1w * d * F32             // mean2
+        + b * f1w * h * F32             // h1
+        + b * h * F32                   // h_neigh
+        + b * c * F32                   // logits
+        + b * c * F32                   // glogits
+        + b * f1w * h * F32             // gh1
+        + params                        // grads
+        + 2 * params;                   // adam m̂/v̂ temps
+    let outputs = 3 * params + F32;     // new params+m+v, loss
+    Transient { upload, intermediates, outputs, vmem_tile: 0 }
+}
+
+/// Analytic transient model for the baseline 1-hop step.
+pub fn baseline1_transient(dims: &StepDims) -> Transient {
+    let (b, k1, d, h, c) = (dims.batch as u64, dims.k1 as u64,
+                            dims.d as u64, dims.hidden as u64,
+                            dims.classes as u64);
+    let f1w = 1 + k1;
+    let params = dgl_param_bytes(dims);
+    let upload = b * f1w * I32 + b * I32;
+    let intermediates = b * f1w * d * F32      // xf1 (materialized)
+        + b * d * F32                           // h_neigh mean
+        + b * h * F32                           // h
+        + 2 * b * c * F32                       // logits + glogits
+        + b * h * F32                           // gh
+        + 3 * params;
+    let outputs = 3 * params + F32;
+    Transient { upload, intermediates, outputs, vmem_tile: 0 }
+}
+
+/// Analytic transient model for the fused 2-hop step.
+pub fn fused2_transient(dims: &StepDims, save_indices: bool) -> Transient {
+    let (b, k1, k2, d, h, c) =
+        (dims.batch as u64, dims.k1 as u64, dims.k2 as u64,
+         dims.d as u64, dims.hidden as u64, dims.classes as u64);
+    let params = fsa_param_bytes(dims);
+    let upload = b * I32                // seeds
+        + b * I32                       // labels
+        + 8;                            // base_seed
+    let indices = if save_indices {
+        b * k1 * I32 + b * k1 * k2 * I32
+    } else {
+        0
+    };
+    let intermediates = indices
+        + b * d * F32                   // agg output of the fused op
+        + b * d * F32                   // x_self gather
+        + b * h * F32                   // head hidden
+        + 2 * b * c * F32               // logits + glogits
+        + b * h * F32                   // ghead
+        + params                        // grads
+        + 2 * params;                   // adam temps
+    let outputs = 3 * params + F32;
+    // the gathered feature tile never touches HBM: seed-tile × k1·k2 × D
+    let vmem_tile = (dims.tile.max(1) as u64) * k1 * k2.max(1) * d * F32;
+    Transient { upload, intermediates, outputs, vmem_tile }
+}
+
+/// Analytic transient model for the fused 1-hop step.
+pub fn fused1_transient(dims: &StepDims, save_indices: bool) -> Transient {
+    let (b, k1, d, h, c) = (dims.batch as u64, dims.k1 as u64,
+                            dims.d as u64, dims.hidden as u64,
+                            dims.classes as u64);
+    let params = fsa_param_bytes(dims);
+    let upload = 2 * b * I32 + 8;
+    let indices = if save_indices { b * k1 * I32 + b * I32 } else { 0 };
+    let intermediates = indices
+        + 2 * b * d * F32
+        + b * h * F32
+        + 2 * b * c * F32
+        + b * h * F32
+        + 3 * params;
+    let outputs = 3 * params + F32;
+    let vmem_tile = (dims.tile.max(1) as u64) * k1 * d * F32;
+    Transient { upload, intermediates, outputs, vmem_tile }
+}
+
+/// Runtime meter: accumulates *measured* buffer bytes as the coordinator
+/// creates/receives literals, tracking the per-step high-water mark.
+#[derive(Debug, Default)]
+pub struct MemoryMeter {
+    current: u64,
+    peak: u64,
+}
+
+impl MemoryMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an allocation of `bytes` live within the current step.
+    pub fn alloc(&mut self, bytes: u64) {
+        self.current += bytes;
+        self.peak = self.peak.max(self.current);
+    }
+
+    /// Record that `bytes` became dead (freed / dropped).
+    pub fn free(&mut self, bytes: u64) {
+        self.current = self.current.saturating_sub(bytes);
+    }
+
+    /// Step boundary: everything transient is dropped.
+    pub fn reset_step(&mut self) {
+        self.current = 0;
+    }
+
+    /// High-water mark since construction (or [`Self::reset_peak`]).
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn reset_peak(&mut self) {
+        self.peak = self.current;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims(batch: usize, k1: usize, k2: usize, tile: usize) -> StepDims {
+        StepDims { batch, k1, k2, d: 64, hidden: 64, classes: 47, tile }
+    }
+
+    #[test]
+    fn baseline_dominated_by_block() {
+        let t = baseline2_transient(&dims(1024, 15, 10, 0));
+        // block = 1024*16*10*64*4 ≈ 41.9 MB must dominate
+        let block = 1024u64 * 16 * 10 * 64 * 4;
+        assert!(t.intermediates > block);
+        assert!(t.peak_hbm() > block);
+        assert!(t.peak_hbm() < 3 * block, "model blew up: {}", t.peak_hbm());
+    }
+
+    #[test]
+    fn fused_is_orders_of_magnitude_smaller() {
+        let d = dims(1024, 15, 10, 64);
+        let base = baseline2_transient(&d).peak_hbm();
+        let fsa = fused2_transient(&d, true).peak_hbm();
+        let ratio = base as f64 / fsa as f64;
+        assert!(ratio > 5.0, "expected large reduction, got {ratio:.2}x");
+    }
+
+    #[test]
+    fn fanout_grows_baseline_not_fused_output() {
+        let small = baseline2_transient(&dims(1024, 10, 10, 0)).peak_hbm();
+        let large = baseline2_transient(&dims(1024, 25, 10, 0)).peak_hbm();
+        assert!(large as f64 > small as f64 * 1.8);
+        let fs = fused2_transient(&dims(1024, 10, 10, 64), true).peak_hbm();
+        let fl = fused2_transient(&dims(1024, 25, 10, 64), true).peak_hbm();
+        // fused grows only by the saved-index tensors
+        assert!((fl as f64) < (fs as f64) * 1.6);
+    }
+
+    #[test]
+    fn save_indices_off_shrinks_fused() {
+        let d = dims(1024, 15, 10, 64);
+        assert!(fused2_transient(&d, false).peak_hbm()
+            < fused2_transient(&d, true).peak_hbm());
+    }
+
+    #[test]
+    fn vmem_tile_respects_tile_size() {
+        let t = fused2_transient(&dims(1024, 15, 10, 64), true);
+        assert_eq!(t.vmem_tile, 64 * 15 * 10 * 64 * 4);
+        let t1 = fused1_transient(&dims(1024, 10, 0, 128), true);
+        assert_eq!(t1.vmem_tile, 128 * 10 * 64 * 4);
+    }
+
+    #[test]
+    fn meter_tracks_high_water() {
+        let mut m = MemoryMeter::new();
+        m.alloc(100);
+        m.alloc(50);
+        m.free(100);
+        m.alloc(30);
+        assert_eq!(m.peak(), 150);
+        m.reset_step();
+        m.alloc(10);
+        assert_eq!(m.peak(), 150, "peak persists across steps");
+        m.reset_peak();
+        assert_eq!(m.peak(), 10);
+    }
+
+    #[test]
+    fn meter_monotone_peak_property() {
+        use crate::rng::SplitMix64;
+        let mut r = SplitMix64::new(9);
+        let mut m = MemoryMeter::new();
+        let mut last_peak = 0;
+        for _ in 0..1000 {
+            if r.next_below(2) == 0 {
+                m.alloc(r.next_below(1000));
+            } else {
+                m.free(r.next_below(1000));
+            }
+            assert!(m.peak() >= last_peak, "peak decreased");
+            last_peak = m.peak();
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Timing, robust statistics, and CSV logging for the benchmark protocol.
+//!
+//! Mirrors the paper's measurement rules (§5): per-step wall-clock with
+//! explicit synchronization, medians across repeats, a single CSV that all
+//! tables/figures are rendered from.
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+/// Simple wall-clock stopwatch (monotonic).
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed milliseconds.
+    pub fn ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Robust summary of a sample of measurements.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub std: f64,
+}
+
+/// Summarize (empty input gives all zeros).
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len();
+    let mean = s.iter().sum::<f64>() / n as f64;
+    let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Summary {
+        n,
+        mean,
+        median: percentile_sorted(&s, 50.0),
+        min: s[0],
+        max: s[n - 1],
+        p10: percentile_sorted(&s, 10.0),
+        p90: percentile_sorted(&s, 90.0),
+        std: var.sqrt(),
+    }
+}
+
+/// Linear-interpolated percentile of an already sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    if n == 0 {
+        return 0.0;
+    }
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Median of raw (unsorted) values.
+pub fn median(xs: &[f64]) -> f64 {
+    summarize(xs).median
+}
+
+/// One benchmark row — the schema of `results/bench.csv`, mirroring the
+/// paper's `scripts/bench_grid.py` output.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub dataset: String,
+    pub variant: String, // "dgl" | "fsa"
+    pub hops: u32,
+    pub k1: u32,
+    pub k2: u32,
+    pub batch: u32,
+    pub amp: bool,
+    pub repeat_seed: u64,
+    pub steps: u32,
+    /// Median per-step wall clock (ms): forward+backward+optimizer,
+    /// synchronized (paper's primary metric).
+    pub step_ms: f64,
+    /// Host-side sampling share of the step (baseline only; 0 for fsa).
+    pub sample_ms: f64,
+    /// Upload (literal creation + transfer) share of the step.
+    pub upload_ms: f64,
+    /// Device execute share of the step.
+    pub execute_ms: f64,
+    /// Raw sampled (seed, neighbor) pairs per second.
+    pub pairs_per_s: f64,
+    /// Seeds (nodes) per second.
+    pub nodes_per_s: f64,
+    /// Peak transient memory per step, bytes (meter + analytic model).
+    pub peak_transient_bytes: u64,
+    /// Final training loss at the end of the timed window.
+    pub loss: f64,
+}
+
+pub const CSV_HEADER: &str = "dataset,variant,hops,k1,k2,batch,amp,repeat_seed,steps,step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,nodes_per_s,peak_transient_bytes,loss";
+
+impl BenchRow {
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.1},{},{:.5}",
+            self.dataset, self.variant, self.hops, self.k1, self.k2,
+            self.batch, self.amp, self.repeat_seed, self.steps, self.step_ms,
+            self.sample_ms, self.upload_ms, self.execute_ms, self.pairs_per_s,
+            self.nodes_per_s, self.peak_transient_bytes, self.loss
+        )
+    }
+
+    pub fn parse_csv(line: &str) -> Option<BenchRow> {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 17 {
+            return None;
+        }
+        Some(BenchRow {
+            dataset: f[0].to_string(),
+            variant: f[1].to_string(),
+            hops: f[2].parse().ok()?,
+            k1: f[3].parse().ok()?,
+            k2: f[4].parse().ok()?,
+            batch: f[5].parse().ok()?,
+            amp: f[6] == "true",
+            repeat_seed: f[7].parse().ok()?,
+            steps: f[8].parse().ok()?,
+            step_ms: f[9].parse().ok()?,
+            sample_ms: f[10].parse().ok()?,
+            upload_ms: f[11].parse().ok()?,
+            execute_ms: f[12].parse().ok()?,
+            pairs_per_s: f[13].parse().ok()?,
+            nodes_per_s: f[14].parse().ok()?,
+            peak_transient_bytes: f[15].parse().ok()?,
+            loss: f[16].parse().ok()?,
+        })
+    }
+}
+
+/// Write rows (with header) to a CSV file.
+pub fn write_csv(path: &Path, rows: &[BenchRow]) -> std::io::Result<()> {
+    let mut out = String::with_capacity(rows.len() * 96 + 128);
+    out.push_str(CSV_HEADER);
+    out.push('\n');
+    for r in rows {
+        let _ = writeln!(out, "{}", r.to_csv());
+    }
+    std::fs::write(path, out)
+}
+
+/// Read rows back (skipping the header and malformed lines).
+pub fn read_csv(path: &Path) -> std::io::Result<Vec<BenchRow>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(text.lines().skip(1).filter_map(BenchRow::parse_csv).collect())
+}
+
+/// Median row over repeats: groups rows by configuration key and reduces
+/// every numeric field to its median (the paper reports medians of 3).
+pub fn median_over_repeats(rows: &[BenchRow]) -> Vec<BenchRow> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<String, Vec<&BenchRow>> = BTreeMap::new();
+    for r in rows {
+        let key = format!("{}|{}|{}|{}|{}|{}|{}", r.dataset, r.variant,
+                          r.hops, r.k1, r.k2, r.batch, r.amp);
+        groups.entry(key).or_default().push(r);
+    }
+    groups
+        .into_values()
+        .map(|g| {
+            let med = |f: fn(&BenchRow) -> f64| {
+                median(&g.iter().map(|r| f(r)).collect::<Vec<_>>())
+            };
+            let first = g[0];
+            BenchRow {
+                dataset: first.dataset.clone(),
+                variant: first.variant.clone(),
+                hops: first.hops,
+                k1: first.k1,
+                k2: first.k2,
+                batch: first.batch,
+                amp: first.amp,
+                repeat_seed: 0,
+                steps: first.steps,
+                step_ms: med(|r| r.step_ms),
+                sample_ms: med(|r| r.sample_ms),
+                upload_ms: med(|r| r.upload_ms),
+                execute_ms: med(|r| r.execute_ms),
+                pairs_per_s: med(|r| r.pairs_per_s),
+                nodes_per_s: med(|r| r.nodes_per_s),
+                peak_transient_bytes: med(|r| r.peak_transient_bytes as f64)
+                    as u64,
+                loss: med(|r| r.loss),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = summarize(&[4.0, 1.0, 3.0, 2.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 4.0);
+        assert_eq!(percentile_sorted(&s, 50.0), 2.5);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(summarize(&[]).median, 0.0);
+        assert_eq!(summarize(&[7.0]).median, 7.0);
+    }
+
+    fn sample_row(seed: u64, step_ms: f64) -> BenchRow {
+        BenchRow {
+            dataset: "tiny".into(),
+            variant: "fsa".into(),
+            hops: 2,
+            k1: 5,
+            k2: 3,
+            batch: 64,
+            amp: true,
+            repeat_seed: seed,
+            steps: 30,
+            step_ms,
+            sample_ms: 0.0,
+            upload_ms: 0.1,
+            execute_ms: step_ms - 0.1,
+            pairs_per_s: 1e6,
+            nodes_per_s: 1e4,
+            peak_transient_bytes: 123456,
+            loss: 2.0,
+        }
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let row = sample_row(42, 1.25);
+        let parsed = BenchRow::parse_csv(&row.to_csv()).unwrap();
+        assert_eq!(parsed.dataset, "tiny");
+        assert_eq!(parsed.repeat_seed, 42);
+        assert!((parsed.step_ms - 1.25).abs() < 1e-9);
+        assert_eq!(parsed.peak_transient_bytes, 123456);
+    }
+
+    #[test]
+    fn csv_file_round_trip() {
+        let dir = std::env::temp_dir().join("fsa_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bench.csv");
+        let rows = vec![sample_row(42, 1.0), sample_row(43, 2.0)];
+        write_csv(&p, &rows).unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1].repeat_seed, 43);
+    }
+
+    #[test]
+    fn median_over_repeats_reduces() {
+        let rows = vec![sample_row(42, 1.0), sample_row(43, 5.0),
+                        sample_row(44, 2.0)];
+        let med = median_over_repeats(&rows);
+        assert_eq!(med.len(), 1);
+        assert_eq!(med[0].step_ms, 2.0);
+    }
+
+    #[test]
+    fn timer_runs_forward() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.ms() >= 1.0);
+    }
+}

@@ -1,0 +1,348 @@
+//! Artifact manifest loader — the Rust half of the AOT contract.
+//!
+//! `python/compile/configs.py` is the single source of truth; it serializes
+//! every executable's input/output order, shapes, and dtypes into
+//! `artifacts/manifest.json`, which this module parses (via the in-house
+//! [`crate::json`] parser — no serde offline). Rust never re-derives shapes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::gen::{DatasetSpec, DegreeLaw};
+use crate::json::{self, Value};
+
+/// Element type of a tensor in the AOT contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U64,
+    Bf16,
+    F16,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "float32" => Dtype::F32,
+            "int32" => Dtype::I32,
+            "uint64" => Dtype::U64,
+            "bfloat16" => Dtype::Bf16,
+            "float16" => Dtype::F16,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U64 => 8,
+            Dtype::Bf16 | Dtype::F16 => 2,
+        }
+    }
+}
+
+/// Shape + dtype + name of one executable input/output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.elements() * self.dtype.bytes()) as u64
+    }
+}
+
+/// One AOT-compiled executable as described by the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,    // train | eval | stage
+    pub variant: String, // fsa1 | fsa2 | dgl1 | dgl2 | stage names
+    pub dataset: String,
+    pub k1: usize,
+    pub k2: usize,
+    pub batch: usize,
+    pub amp: bool,
+    pub save_indices: bool,
+    pub hidden: usize,
+    pub tile: usize,
+    pub vmem_tile_bytes: u64,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Number of model parameter tensors (leading inputs are params, then
+    /// m, then v — the train-step contract).
+    pub fn n_params(&self) -> usize {
+        if self.variant.starts_with("fsa") { 5 } else { 6 }
+    }
+
+    pub fn input_bytes(&self) -> u64 {
+        self.inputs.iter().map(|t| t.bytes()).sum()
+    }
+
+    pub fn output_bytes(&self) -> u64 {
+        self.outputs.iter().map(|t| t.bytes()).sum()
+    }
+}
+
+/// AdamW hyper-parameters recorded in the manifest (paper §5).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamwConfig {
+    pub lr: f64,
+    pub b1: f64,
+    pub b2: f64,
+    pub eps: f64,
+    pub wd: f64,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug)]
+pub struct Manifest {
+    pub hidden: usize,
+    pub adamw: AdamwConfig,
+    pub datasets: BTreeMap<String, DatasetSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text).with_context(|| format!("parsing manifest {path:?}"))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text)?;
+        let version = v.get("version").and_then(Value::as_i64).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let hidden = req_usize(&v, "hidden")?;
+        let aw = v.get("adamw").ok_or_else(|| anyhow!("missing adamw"))?;
+        let adamw = AdamwConfig {
+            lr: req_f64(aw, "lr")?,
+            b1: req_f64(aw, "b1")?,
+            b2: req_f64(aw, "b2")?,
+            eps: req_f64(aw, "eps")?,
+            wd: req_f64(aw, "wd")?,
+        };
+
+        let mut datasets = BTreeMap::new();
+        for (name, d) in v
+            .get("datasets")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("missing datasets"))?
+        {
+            datasets.insert(
+                name.clone(),
+                DatasetSpec {
+                    name: name.clone(),
+                    stands_for: req_str(d, "stands_for")?,
+                    n: req_usize(d, "n")?,
+                    e_cap: req_usize(d, "e_cap")?,
+                    avg_deg: req_usize(d, "avg_deg")?,
+                    degree_law: DegreeLaw::parse(&req_str(d, "degree_law")?)?,
+                    d: req_usize(d, "d")?,
+                    c: req_usize(d, "c")?,
+                    gen_seed: req_usize(d, "gen_seed")? as u64,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in v
+            .get("artifacts")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+        {
+            let spec = ArtifactSpec {
+                name: req_str(a, "name")?,
+                file: req_str(a, "file")?,
+                kind: req_str(a, "kind")?,
+                variant: req_str(a, "variant")?,
+                dataset: req_str(a, "dataset")?,
+                k1: req_usize(a, "k1")?,
+                k2: req_usize(a, "k2")?,
+                batch: req_usize(a, "batch")?,
+                amp: a.get("amp").and_then(Value::as_bool).unwrap_or(false),
+                save_indices: a
+                    .get("save_indices")
+                    .and_then(Value::as_bool)
+                    .unwrap_or(true),
+                hidden: req_usize(a, "hidden")?,
+                tile: req_usize(a, "tile")?,
+                vmem_tile_bytes: req_usize(a, "vmem_tile_bytes")? as u64,
+                inputs: parse_tensors(a.get("inputs"))?,
+                outputs: parse_tensors(a.get("outputs"))?,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { hidden, adamw, datasets, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetSpec> {
+        self.datasets
+            .get(name)
+            .ok_or_else(|| anyhow!("dataset {name:?} not in manifest"))
+    }
+
+    /// Find the train artifact for a configuration.
+    pub fn find_train(&self, variant: &str, dataset: &str, k1: usize,
+                      k2: usize, batch: usize, amp: bool,
+                      save_indices: bool) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .find(|a| {
+                a.kind == "train" && a.variant == variant
+                    && a.dataset == dataset && a.k1 == k1 && a.k2 == k2
+                    && a.batch == batch && a.amp == amp
+                    && a.save_indices == save_indices
+            })
+            .ok_or_else(|| anyhow!(
+                "no train artifact for {variant}/{dataset} f{k1}x{k2} \
+                 b{batch} amp={amp} save={save_indices} — extend \
+                 python/compile/configs.py and re-run `make artifacts`"))
+    }
+
+    /// All stage artifacts for the Table 3 profile config, pipeline order.
+    pub fn profile_stages(&self) -> Vec<&ArtifactSpec> {
+        let order = ["gather", "layer1", "layer2", "loss", "bwd_layer2",
+                     "bwd_layer1", "adamw"];
+        order
+            .iter()
+            .filter_map(|s| {
+                self.artifacts.values().find(|a| a.kind == "stage" && a.variant == *s)
+            })
+            .collect()
+    }
+}
+
+fn parse_tensors(v: Option<&Value>) -> Result<Vec<TensorSpec>> {
+    let arr = v.and_then(Value::as_arr).ok_or_else(|| anyhow!("missing tensor list"))?;
+    arr.iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: req_str(t, "name")?,
+                shape: t
+                    .get("shape")
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| anyhow!("missing shape"))?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?,
+                dtype: Dtype::parse(&req_str(t, "dtype")?)?,
+            })
+        })
+        .collect()
+}
+
+fn req_str(v: &Value, k: &str) -> Result<String> {
+    v.get(k)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing string field {k:?}"))
+}
+
+fn req_usize(v: &Value, k: &str) -> Result<usize> {
+    v.get(k)
+        .and_then(Value::as_usize)
+        .ok_or_else(|| anyhow!("missing int field {k:?}"))
+}
+
+fn req_f64(v: &Value, k: &str) -> Result<f64> {
+    v.get(k)
+        .and_then(Value::as_f64)
+        .ok_or_else(|| anyhow!("missing float field {k:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "hidden": 64,
+      "adamw": {"lr": 0.003, "b1": 0.9, "b2": 0.999, "eps": 1e-8, "wd": 0.0005},
+      "datasets": {"tiny": {"stands_for": "unit tests", "n": 512,
+        "e_cap": 8192, "avg_deg": 6, "degree_law": "uniform", "d": 16,
+        "c": 8, "gen_seed": 1000}},
+      "artifacts": [{
+        "name": "fsa2_train_tiny", "file": "fsa2_train_tiny.hlo.txt",
+        "kind": "train", "variant": "fsa2", "dataset": "tiny",
+        "k1": 5, "k2": 3, "batch": 64, "amp": true, "save_indices": true,
+        "hidden": 64, "tile": 64, "vmem_tile_bytes": 123,
+        "inputs": [{"name": "w", "shape": [16, 64], "dtype": "float32"}],
+        "outputs": [{"name": "loss", "shape": [], "dtype": "float32"}]
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.hidden, 64);
+        assert!((m.adamw.lr - 3e-3).abs() < 1e-12);
+        let ds = m.dataset("tiny").unwrap();
+        assert_eq!(ds.n, 512);
+        let a = m.artifact("fsa2_train_tiny").unwrap();
+        assert_eq!(a.k1, 5);
+        assert_eq!(a.inputs[0].elements(), 16 * 64);
+        assert_eq!(a.inputs[0].bytes(), 16 * 64 * 4);
+        assert_eq!(a.outputs[0].elements(), 1);
+        assert_eq!(a.n_params(), 5);
+    }
+
+    #[test]
+    fn find_train_matches_exactly() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find_train("fsa2", "tiny", 5, 3, 64, true, true).is_ok());
+        assert!(m.find_train("fsa2", "tiny", 5, 3, 64, false, true).is_err());
+        assert!(m.find_train("dgl2", "tiny", 5, 3, 64, true, true).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version_and_dtype() {
+        assert!(Manifest::parse(&SAMPLE.replace("\"version\": 1", "\"version\": 9")).is_err());
+        assert!(Manifest::parse(&SAMPLE.replace("float32", "float8")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let path = crate::util::artifacts_dir().join("manifest.json");
+        if !path.exists() {
+            eprintln!("skipping: {path:?} missing (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        assert!(m.artifacts.len() >= 60, "expected full grid, got {}", m.artifacts.len());
+        // the paper's main grid must be present
+        for ds in ["arxiv_sim", "reddit_sim", "products_sim"] {
+            for (k1, k2) in [(10, 10), (15, 10), (25, 10)] {
+                for b in [512, 1024] {
+                    for v in ["fsa2", "dgl2"] {
+                        m.find_train(v, ds, k1, k2, b, true, true)
+                            .unwrap_or_else(|e| panic!("{e}"));
+                    }
+                }
+            }
+        }
+        assert_eq!(m.profile_stages().len(), 7);
+    }
+}

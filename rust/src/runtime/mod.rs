@@ -1,0 +1,226 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute on
+//! the hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute_b`. HLO *text* is the interchange format
+//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos; see aot.py).
+//!
+//! Static tensors (graph arrays, features) are uploaded once as device
+//! buffers and reused across steps — mirroring DGL keeping graph+features
+//! GPU-resident. Per-step tensors (seeds, labels, index blocks, params)
+//! are uploaded each step and counted by the memory meter.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{ensure, Context, Result};
+
+pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+
+/// A compiled artifact plus its manifest contract.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with device buffers in manifest input order; returns the
+    /// output literals in manifest output order (host-synchronized — this
+    /// is the paper's "explicit device synchronization" point).
+    pub fn run<L: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self, args: &[L]) -> Result<Vec<xla::Literal>> {
+        ensure!(args.len() == self.spec.inputs.len(),
+                "{}: got {} args, manifest says {}",
+                self.spec.name, args.len(), self.spec.inputs.len());
+        let out = self.exe.execute_b(args)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        ensure!(parts.len() == self.spec.outputs.len(),
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name, parts.len(), self.spec.outputs.len());
+        Ok(parts)
+    }
+
+    /// Execute but keep results on device (no host sync) — used by the
+    /// profiler to time pure dispatch+compute.
+    pub fn run_device<L: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self, args: &[L]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        ensure!(args.len() == self.spec.inputs.len(),
+                "{}: arg count mismatch", self.spec.name);
+        Ok(self.exe.execute_b(args)?)
+    }
+}
+
+/// PJRT client + artifact cache. One per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: std::cell::RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            cache: Default::default(),
+        })
+    }
+
+    /// Default runtime (artifacts dir discovered from the repo root).
+    pub fn from_env() -> Result<Runtime> {
+        Self::new(&crate::util::artifacts_dir())
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an artifact (cached after first use).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let e = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    // --- upload helpers (device buffers in manifest order) ---------------
+
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn buf_u64(&self, data: &[u64], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn buf_scalar_f32(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    /// Upload f32 host data as a bf16 device buffer (the fused 2-hop
+    /// kernel dispatches on the feature dtype, paper §4). Goes through the
+    /// XLA literal converter, which rounds to nearest-even like
+    /// [`f32_to_bf16_bytes`].
+    pub fn buf_bf16_from_f32(&self, data: &[f32], dims: &[usize])
+                             -> Result<xla::PjRtBuffer> {
+        let lit = xla::Literal::vec1(data);
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let lit = if dims.len() > 1 { lit.reshape(&dims_i64)? } else { lit };
+        let bf16 = lit.convert(xla::PrimitiveType::Bf16)?;
+        Ok(self.client.buffer_from_host_literal(None, &bf16)?)
+    }
+
+    /// Re-upload a host literal (e.g. an updated parameter) as a buffer.
+    pub fn buf_from_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+}
+
+/// Round-to-nearest-even f32 → bf16 conversion (little-endian byte pairs).
+pub fn f32_to_bf16_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    for &x in data {
+        let bits = x.to_bits();
+        let bf16 = if x.is_nan() {
+            0x7FC0u16 // canonical NaN
+        } else {
+            let round = 0x7FFF + ((bits >> 16) & 1);
+            ((bits.wrapping_add(round)) >> 16) as u16
+        };
+        out.extend_from_slice(&bf16.to_le_bytes());
+    }
+    out
+}
+
+/// Deterministic parameter initialization: Kaiming-scaled normals from the
+/// counter RNG; identical across runs with the same seed. Biases start at 0.
+pub fn init_params(specs: &[TensorSpec], seed: u64) -> Vec<Vec<f32>> {
+    use crate::rng::SplitMix64;
+    let mut rng = SplitMix64::new(crate::rng::mix(seed ^ 0x9A9A));
+    specs
+        .iter()
+        .map(|s| {
+            let fan_in = if s.shape.len() >= 2 { s.shape[0] } else { s.elements() };
+            let scale = if s.shape.len() >= 2 {
+                (2.0 / fan_in as f64).sqrt()
+            } else {
+                0.0 // biases start at zero
+            };
+            (0..s.elements())
+                .map(|_| (rng.next_normal() * scale) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Dtype;
+
+    fn spec(name: &str, shape: &[usize]) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype: Dtype::F32 }
+    }
+
+    #[test]
+    fn bf16_conversion_rounds_to_nearest_even() {
+        // 1.0f32 = 0x3F800000 -> bf16 0x3F80
+        assert_eq!(f32_to_bf16_bytes(&[1.0]), vec![0x80, 0x3F]);
+        // value exactly halfway rounds to even mantissa
+        let halfway = f32::from_bits(0x3F80_8000); // 1.00390625
+        assert_eq!(f32_to_bf16_bytes(&[halfway]), vec![0x80, 0x3F]);
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(f32_to_bf16_bytes(&[above]), vec![0x81, 0x3F]);
+        // NaN stays NaN
+        assert_eq!(f32_to_bf16_bytes(&[f32::NAN]), vec![0xC0, 0x7F]);
+        // round trip error bounded by 2^-8 relative
+        for x in [0.1f32, -3.5, 123.456, 1e-3] {
+            let b = f32_to_bf16_bytes(&[x]);
+            let back = f32::from_bits(
+                (u16::from_le_bytes([b[0], b[1]]) as u32) << 16);
+            assert!((back - x).abs() <= x.abs() / 128.0, "{x} -> {back}");
+        }
+    }
+
+    #[test]
+    fn init_params_deterministic_and_scaled() {
+        let specs = vec![spec("w", &[64, 32]), spec("b", &[32])];
+        let a = init_params(&specs, 42);
+        let b = init_params(&specs, 42);
+        assert_eq!(a, b);
+        let c = init_params(&specs, 43);
+        assert_ne!(a[0], c[0]);
+        // biases zero
+        assert!(a[1].iter().all(|&x| x == 0.0));
+        // weight std ~ sqrt(2/64) = 0.177
+        let std = (a[0].iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+            / a[0].len() as f64)
+            .sqrt();
+        assert!((std - 0.177).abs() < 0.03, "std {std}");
+    }
+}

@@ -1,0 +1,94 @@
+//! Small shared utilities: human-readable formatting and path discovery.
+
+use std::path::{Path, PathBuf};
+
+/// Format a byte count as a human-readable string (MiB precision like the
+/// paper's tables, which report MB).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= KIB * KIB * KIB {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    } else if b >= KIB * KIB {
+        format!("{:.1} MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.1} KiB", b / KIB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Bytes -> MB (10^6, matching the paper's "Peak MB" unit).
+pub fn bytes_to_mb(bytes: u64) -> f64 {
+    bytes as f64 / 1.0e6
+}
+
+/// Format milliseconds with the precision the paper's tables use.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 100.0 {
+        format!("{ms:.1}")
+    } else {
+        format!("{ms:.2}")
+    }
+}
+
+/// Locate the repository root by walking up from the current directory until
+/// `artifacts/manifest.json` (or `Cargo.toml`) is found. Tests, examples and
+/// benches all run from different working directories; this makes artifact
+/// discovery uniform.
+pub fn find_repo_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("artifacts/manifest.json").exists()
+            || dir.join("Cargo.toml").exists()
+        {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// `artifacts/` directory: `$FSA_ARTIFACTS` override or repo-root discovery.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("FSA_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    find_repo_root()
+        .map(|r| r.join("artifacts"))
+        .unwrap_or_else(|| Path::new("artifacts").to_path_buf())
+}
+
+/// `results/` directory (created on demand).
+pub fn results_dir() -> PathBuf {
+    let dir = find_repo_root()
+        .map(|r| r.join("results"))
+        .unwrap_or_else(|| Path::new("results").to_path_buf());
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.0 MiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.00 GiB");
+    }
+
+    #[test]
+    fn mb_matches_paper_unit() {
+        assert!((bytes_to_mb(5_052_000_000) - 5052.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ms_formatting() {
+        assert_eq!(fmt_ms(86.88), "86.88");
+        assert_eq!(fmt_ms(166.0), "166.0");
+    }
+}
