@@ -31,6 +31,8 @@ fn losses(rt: &Runtime, cache: &mut DatasetCache, seed: u64,
         amp: true,
         save_indices: true,
         seed,
+        threads: 1,
+        prefetch: false,
     };
     let mut trainer = Trainer::new(rt, cache, cfg)?;
     (0..steps).map(|_| Ok(trainer.step()?.loss)).collect()

@@ -55,6 +55,8 @@ fn main() -> Result<()> {
                     amp: true,
                     save_indices: true,
                     seed: 42,
+                    threads: 1,
+                    prefetch: false,
                 };
                 Ok(run_config(&rt, &mut cache, cfg, 1, 5)?
                     .peak_transient_bytes)

@@ -29,6 +29,8 @@ fn main() -> Result<()> {
         amp: true,
         save_indices: true,         // exact backward replay (paper §3.3)
         seed: 42,
+        threads: 1,                 // host sampler workers (0 = auto)
+        prefetch: false,            // overlap sampling with dispatch
     };
 
     // 3. train for 40 steps

@@ -26,6 +26,8 @@ fn run(rt: &Runtime, cache: &mut DatasetCache, variant: Variant,
         amp: true,
         save_indices: true,
         seed: 42,
+        threads: 1,
+        prefetch: false,
     };
     let mut tr = Trainer::new(rt, cache, cfg)?;
     let timer = Timer::start();

@@ -9,7 +9,8 @@
 //! the path. Recorded in EXPERIMENTS.md §End-to-end.
 //!
 //! ```sh
-//! cargo run --release --example train_e2e [-- steps=300 dataset=products_sim]
+//! cargo run --release --example train_e2e \
+//!     [-- steps=300 dataset=products_sim threads=4 prefetch=on]
 //! ```
 
 use std::fmt::Write as _;
@@ -23,11 +24,17 @@ use fusesampleagg::util;
 fn main() -> Result<()> {
     let mut steps = 300usize;
     let mut dataset = "products_sim".to_string();
+    let mut threads = 1usize;
+    let mut prefetch = false;
     for arg in std::env::args().skip(1) {
         if let Some(v) = arg.strip_prefix("steps=") {
             steps = v.parse()?;
         } else if let Some(v) = arg.strip_prefix("dataset=") {
             dataset = v.to_string();
+        } else if let Some(v) = arg.strip_prefix("threads=") {
+            threads = v.parse()?;
+        } else if let Some(v) = arg.strip_prefix("prefetch=") {
+            prefetch = v == "on" || v == "true";
         }
     }
 
@@ -43,6 +50,8 @@ fn main() -> Result<()> {
         amp: true,
         save_indices: true,
         seed: 42,
+        threads,
+        prefetch,
     };
     let total = Timer::start();
     let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;

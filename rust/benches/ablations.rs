@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
             let cfg = TrainConfig {
                 variant, hops: 2, dataset: "arxiv_sim".into(),
                 k1: 15, k2: 10, batch: 1024, amp, save_indices: true,
-                seed: 42,
+                seed: 42, threads: 1, prefetch: false,
             };
             let r = run(&mut cache, cfg)?;
             let _ = writeln!(out, "  amp={:<5} {:<4}: {:>8.2} ms/step", amp,
@@ -60,6 +60,7 @@ fn main() -> anyhow::Result<()> {
                 let cfg = TrainConfig {
                     variant, hops, dataset: ds.into(), k1: 10, k2,
                     batch: 1024, amp: true, save_indices: true, seed: 42,
+                    threads: 1, prefetch: false,
                 };
                 let r = run(&mut cache, cfg)?;
                 let _ = writeln!(out, "  {:<13} {}-hop {:<4}: {:>8.2} ms/step \
@@ -79,7 +80,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = TrainConfig {
             variant: Variant::Fsa, hops: 2, dataset: "products_sim".into(),
             k1: 15, k2: 10, batch: 1024, amp: true, save_indices: save,
-            seed: 42,
+            seed: 42, threads: 1, prefetch: false,
         };
         let r = run(&mut cache, cfg)?;
         let _ = writeln!(out, "  save_indices={:<5}: {:>8.2} ms/step \
@@ -104,6 +105,7 @@ fn main() -> anyhow::Result<()> {
                 variant: Variant::Fsa, hops: 2,
                 dataset: "products_sim".into(), k1: 15, k2: 10, batch: 1024,
                 amp: true, save_indices: true, seed: 42,
+                threads: 1, prefetch: false,
             };
             let mut tr = Trainer::new_named(rt2, &mut cache, cfg, artifact)?;
             let timings = measure(&mut tr, warmup, steps)?;

@@ -1,0 +1,63 @@
+//! Bench: host sampling/batch pipeline scaling — steps/sec vs sampler
+//! thread count and prefetch on/off (the tentpole's two knobs).
+//!
+//! Needs **no artifacts**: the device dispatch that prefetch overlaps is
+//! emulated by a fixed per-step sleep (see `bench::throughput`). Scale
+//! down with FSA_BENCH_QUICK=1. Outputs: results/host_pipeline.txt,
+//! results/host_pipeline.csv.
+
+use std::sync::Arc;
+
+use fusesampleagg::bench::{save_exhibit, throughput};
+use fusesampleagg::gen::{builtin_spec, Dataset};
+use fusesampleagg::metrics;
+use fusesampleagg::util;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("FSA_BENCH_QUICK").is_ok();
+    let steps: usize = std::env::var("FSA_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { 8 } else { 30 });
+    let warmup = if quick { 1 } else { 3 };
+
+    let mut rows = Vec::new();
+    for dataset in ["arxiv_sim", "products_sim"] {
+        let ds = Arc::new(Dataset::generate(builtin_spec(dataset)?)?);
+        eprintln!("host_pipeline: {dataset} ({} nodes, {} edges)",
+                  ds.spec.n, ds.graph.num_edges());
+        for threads in [1usize, 2, 4, 8] {
+            for prefetch in [false, true] {
+                let cfg = throughput::ThroughputConfig {
+                    steps,
+                    warmup,
+                    threads,
+                    prefetch,
+                    ..throughput::ThroughputConfig::new(dataset)
+                };
+                let row = throughput::run_throughput(ds.clone(), &cfg)?;
+                eprintln!("  t{threads} prefetch={}: {:>7.1} steps/s \
+                           (sample {:.2} ms crit, {:.2} ms overlapped)",
+                          if prefetch { "on " } else { "off" },
+                          row.steps_per_s, row.sample_ms, row.overlap_ms);
+                rows.push(row);
+            }
+        }
+    }
+
+    let mut out = String::new();
+    for dataset in ["arxiv_sim", "products_sim"] {
+        let subset: Vec<_> = rows
+            .iter()
+            .filter(|r| r.dataset == dataset)
+            .cloned()
+            .collect();
+        out.push_str(&format!("[{dataset}]\n"));
+        out.push_str(&throughput::render_table(&subset));
+        out.push('\n');
+    }
+    metrics::write_throughput_csv(
+        &util::results_dir().join("host_pipeline.csv"), &rows)?;
+    save_exhibit("host_pipeline", &out);
+    Ok(())
+}

@@ -9,7 +9,7 @@
 use fusesampleagg::gen::{builtin_spec, Dataset};
 use fusesampleagg::metrics::Timer;
 use fusesampleagg::rng::{rand_counter, SplitMix64};
-use fusesampleagg::sampler;
+use fusesampleagg::sampler::{self, ParallelSampler};
 use fusesampleagg::util;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
@@ -59,6 +59,20 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(sampler::fused2_sampled_pairs(
             &ds.graph, &seeds, 15, 10, rng.next_u64()));
     });
+
+    // parallel sampler thread scaling (the tentpole's sharded host path;
+    // output is bitwise identical to the serial sampler at any count)
+    let serial_ms = ms;
+    for threads in [2usize, 4, 8] {
+        let ps = ParallelSampler::new(threads);
+        let pms = bench(
+            &format!("sampler: parallel build_block2 t{threads}"), 20, || {
+                std::hint::black_box(ps.build_block2(&ds.graph, &seeds, 15,
+                                                     10, rng.next_u64()));
+            });
+        println!("{:<44} {:>10.2}x vs serial", "  -> speedup",
+                 serial_ms / pms);
+    }
 
     // shuffling (epoch boundary cost)
     let mut nodes: Vec<i32> = (0..ds.spec.n as i32).collect();

@@ -41,6 +41,8 @@ fn main() -> anyhow::Result<()> {
             amp: true,
             save_indices: true,
             seed: 42,
+            threads: 1,
+            prefetch: false,
         };
         let mut tr = Trainer::new_named(&rt, &mut cache, cfg, &name)?;
         let timings = measure(&mut tr, warmup, steps)?;

@@ -7,6 +7,7 @@
 //! regenerates every table/figure from that CSV.
 
 pub mod render;
+pub mod throughput;
 
 use anyhow::Result;
 
@@ -27,6 +28,10 @@ pub struct Grid {
     pub variants: Vec<Variant>,
     /// 2 for the main grid; 1 runs the 1-hop ablation artifacts.
     pub hops: u32,
+    /// Host sampler threads (paper protocol: 1 = serial; output identical).
+    pub threads: usize,
+    /// Overlap host sampling with dispatch (paper protocol: off).
+    pub prefetch: bool,
 }
 
 impl Default for Grid {
@@ -42,6 +47,8 @@ impl Default for Grid {
             seeds: vec![42, 43, 44],
             variants: vec![Variant::Dgl, Variant::Fsa],
             hops: 2,
+            threads: 1,
+            prefetch: false,
         }
     }
 }
@@ -173,6 +180,8 @@ pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
                             amp: grid.amp,
                             save_indices: true,
                             seed,
+                            threads: grid.threads,
+                            prefetch: grid.prefetch,
                         };
                         let row = run_config(rt, cache, cfg, grid.warmup,
                                              grid.steps)?;

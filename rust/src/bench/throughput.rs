@@ -1,0 +1,236 @@
+//! `throughput` bench mode — steps/sec and pipeline utilization of the
+//! host sampling/batch pipeline.
+//!
+//! This measures exactly the stage the tentpole parallelizes: seed
+//! scheduling → (sharded, multi-threaded) neighbor sampling → block
+//! materialization, with optional double-buffered prefetch. It needs **no
+//! AOT artifacts and no PJRT backend**: the device dispatch the prefetcher
+//! overlaps with is emulated by a fixed per-step sleep (`dispatch_ms`),
+//! standing in for the synchronized executable dispatch of a real step.
+//!
+//! Reported metrics:
+//! * `steps_per_s` — timed steps per wall-clock second (headline);
+//! * `sample_ms` — median critical-path sampling per step (block build
+//!   when synchronous, prefetch-wait when overlapped);
+//! * `overlap_ms` — median sampling wall-clock hidden behind dispatch;
+//! * `utilization` — fraction of total host sampling work that was
+//!   hidden, `1 - Σcritical / Σwork` (0 without prefetch).
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::pipeline::{prepare_batch, BatchPrefetcher,
+                                   BatchScheduler, HostWork};
+use crate::gen::Dataset;
+use crate::metrics::{summarize, ThroughputRow, Timer};
+use crate::sampler::ParallelSampler;
+
+/// One throughput-mode configuration.
+#[derive(Clone, Debug)]
+pub struct ThroughputConfig {
+    pub dataset: String,
+    pub hops: u32,
+    pub k1: usize,
+    pub k2: usize,
+    pub batch: usize,
+    pub steps: usize,
+    pub warmup: usize,
+    /// Sampler worker threads (0 = auto).
+    pub threads: usize,
+    pub prefetch: bool,
+    /// Emulated dispatch per step, ms (the device work prefetch overlaps).
+    pub dispatch_ms: f64,
+    pub seed: u64,
+}
+
+impl ThroughputConfig {
+    /// Defaults mirroring the paper's main grid cell (fanout 15-10,
+    /// B=1024) with a dispatch stand-in in the CPU-step ballpark.
+    pub fn new(dataset: &str) -> Self {
+        ThroughputConfig {
+            dataset: dataset.to_string(),
+            hops: 2,
+            k1: 15,
+            k2: 10,
+            batch: 1024,
+            steps: 30,
+            warmup: 3,
+            threads: 1,
+            prefetch: false,
+            dispatch_ms: 2.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Run the host pipeline for `warmup + steps` steps and reduce to a row.
+pub fn run_throughput(ds: Arc<Dataset>,
+                      cfg: &ThroughputConfig) -> Result<ThroughputRow> {
+    ensure!(cfg.steps > 0, "throughput: need at least one timed step");
+    let work = if cfg.hops == 2 { HostWork::Block2 } else { HostWork::Block1 };
+    let mut sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)?;
+    let sampler = ParallelSampler::new(cfg.threads);
+    let mut prefetcher = if cfg.prefetch {
+        Some(BatchPrefetcher::spawn(ds.clone(), work, cfg.k1, cfg.k2,
+                                    cfg.threads))
+    } else {
+        None
+    };
+
+    let mut step_wall: Vec<f64> = Vec::with_capacity(cfg.steps);
+    let mut critical: Vec<f64> = Vec::with_capacity(cfg.steps);
+    let mut overlapped: Vec<f64> = Vec::with_capacity(cfg.steps);
+    let mut wall = Timer::start();
+
+    for step in 0..cfg.warmup + cfg.steps {
+        if step == cfg.warmup {
+            wall = Timer::start(); // timed window begins
+        }
+        let step_timer = Timer::start();
+        let prepared = match prefetcher.as_mut() {
+            None => {
+                let s = sched.steps_drawn();
+                let seeds = sched.next_seeds();
+                prepare_batch(&ds, work, cfg.k1, cfg.k2, &sampler, s, seeds,
+                              sched.base_seed(s))
+            }
+            Some(pf) => pf.next_batch(&mut sched)?,
+        };
+        let (crit, over) = match prepared.wait_ms {
+            None => (prepared.sample_ms, 0.0),
+            Some(w) => (w, prepared.sample_ms),
+        };
+        // the emulated synchronized dispatch the next batch overlaps with
+        if cfg.dispatch_ms > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                cfg.dispatch_ms / 1e3));
+        }
+        std::hint::black_box(&prepared);
+        if step >= cfg.warmup {
+            step_wall.push(step_timer.ms());
+            critical.push(crit);
+            overlapped.push(over);
+        }
+    }
+    let wall_s = wall.ms() / 1e3;
+
+    // utilization: share of sampling work hidden behind dispatch
+    let work_ms: f64 = critical
+        .iter()
+        .zip(&overlapped)
+        .map(|(&c, &o)| if o > 0.0 { o } else { c })
+        .sum();
+    let crit_ms: f64 = critical.iter().sum();
+    let utilization = if work_ms > 0.0 {
+        (1.0 - crit_ms / work_ms).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+
+    Ok(ThroughputRow {
+        dataset: cfg.dataset.clone(),
+        hops: cfg.hops,
+        k1: cfg.k1 as u32,
+        k2: cfg.k2 as u32,
+        batch: cfg.batch as u32,
+        threads: sampler.threads() as u32,
+        prefetch: cfg.prefetch,
+        steps: cfg.steps as u32,
+        steps_per_s: cfg.steps as f64 / wall_s.max(1e-9),
+        step_ms: summarize(&step_wall).median,
+        sample_ms: summarize(&critical).median,
+        overlap_ms: summarize(&overlapped).median,
+        dispatch_ms: cfg.dispatch_ms,
+        utilization,
+    })
+}
+
+/// Render a throughput comparison table (rows share a dataset/config).
+pub fn render_table(rows: &[ThroughputRow]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "Host pipeline throughput — sharded parallel \
+                           sampling + batch prefetch.");
+    let _ = writeln!(out, "{:-<78}", "");
+    let _ = writeln!(out, "{:<10} {:>8} {:>10} {:>10} {:>12} {:>11} {:>9}",
+                     "threads", "prefetch", "steps/s", "step ms",
+                     "sample ms", "overlap ms", "util");
+    let _ = writeln!(out, "{:-<78}", "");
+    let baseline = rows.first().map(|r| r.steps_per_s);
+    for r in rows {
+        let speedup = baseline
+            .map(|b| format!(" ({:.2}x)", r.steps_per_s / b.max(1e-9)))
+            .unwrap_or_default();
+        let _ = writeln!(
+            out,
+            "{:<10} {:>8} {:>10.1} {:>10.2} {:>12.2} {:>11.2} {:>8.0}%{}",
+            r.threads, if r.prefetch { "on" } else { "off" }, r.steps_per_s,
+            r.step_ms, r.sample_ms, r.overlap_ms, 100.0 * r.utilization,
+            speedup);
+    }
+    let _ = writeln!(out, "{:-<78}", "");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::builtin_spec;
+
+    fn tiny() -> Arc<Dataset> {
+        Arc::new(Dataset::generate(builtin_spec("tiny").unwrap()).unwrap())
+    }
+
+    fn quick_cfg() -> ThroughputConfig {
+        ThroughputConfig {
+            batch: 64,
+            k1: 5,
+            k2: 3,
+            steps: 4,
+            warmup: 1,
+            dispatch_ms: 0.5,
+            ..ThroughputConfig::new("tiny")
+        }
+    }
+
+    #[test]
+    fn sync_mode_reports_zero_overlap() {
+        let r = run_throughput(tiny(), &quick_cfg()).unwrap();
+        assert_eq!(r.overlap_ms, 0.0);
+        assert_eq!(r.utilization, 0.0);
+        assert!(r.steps_per_s > 0.0);
+        assert_eq!(r.threads, 1);
+        assert_eq!(r.steps, 4);
+    }
+
+    #[test]
+    fn prefetch_mode_reports_overlap() {
+        let cfg = ThroughputConfig { prefetch: true, threads: 2,
+                                     ..quick_cfg() };
+        let r = run_throughput(tiny(), &cfg).unwrap();
+        assert!(r.prefetch);
+        assert_eq!(r.threads, 2);
+        assert!(r.utilization >= 0.0 && r.utilization <= 1.0);
+        // worker-side sampling time is reported as overlapped
+        assert!(r.overlap_ms > 0.0);
+    }
+
+    #[test]
+    fn one_hop_mode_runs() {
+        let cfg = ThroughputConfig { hops: 1, k2: 0, ..quick_cfg() };
+        let r = run_throughput(tiny(), &cfg).unwrap();
+        assert_eq!(r.hops, 1);
+        assert!(r.steps_per_s > 0.0);
+    }
+
+    #[test]
+    fn table_renders_speedup_column() {
+        let cfg = quick_cfg();
+        let a = run_throughput(tiny(), &cfg).unwrap();
+        let b = run_throughput(
+            tiny(), &ThroughputConfig { prefetch: true, ..cfg }).unwrap();
+        let t = render_table(&[a, b]);
+        assert!(t.contains("steps/s") && t.contains("1.00x"), "{t}");
+    }
+}

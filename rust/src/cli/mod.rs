@@ -83,6 +83,19 @@ impl Args {
         }
     }
 
+    /// Boolean option: `--key on|off|true|false|1|0|yes|no`, or a bare
+    /// `--key` switch meaning "on".
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        if let Some(v) = self.str_opt(key) {
+            return match v {
+                "on" | "true" | "1" | "yes" => Ok(true),
+                "off" | "false" | "0" | "no" => Ok(false),
+                other => Err(anyhow!("--{key} expects on|off, got {other:?}")),
+            };
+        }
+        Ok(self.has(key) || default)
+    }
+
     /// Comma-separated list option.
     pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
         match self.str_opt(key) {
@@ -156,6 +169,19 @@ mod tests {
         let a = parse(&["x", "--steps", "abc"]);
         let err = a.usize_or("steps", 0).unwrap_err().to_string();
         assert!(err.contains("steps"));
+    }
+
+    #[test]
+    fn bool_option_forms() {
+        let a = parse(&["x", "--prefetch", "on", "--amp", "off"]);
+        assert!(a.bool_or("prefetch", false).unwrap());
+        assert!(!a.bool_or("amp", true).unwrap());
+        assert!(a.bool_or("missing", true).unwrap());
+        assert!(!a.bool_or("missing", false).unwrap());
+        let b = parse(&["x", "--prefetch"]);
+        assert!(b.bool_or("prefetch", false).unwrap());
+        let c = parse(&["x", "--prefetch", "maybe"]);
+        assert!(c.bool_or("prefetch", false).is_err());
     }
 
     #[test]

@@ -6,20 +6,32 @@
 //! one synchronized train-step dispatch + parameter-state update. Both
 //! variants share seed order, base-seed schedule, and dataset, so every
 //! comparison is paired (DESIGN.md §5).
+//!
+//! The host half of the step runs through [`pipeline`]: batches are built
+//! by a sharded multi-threaded sampler (`TrainConfig::threads`) and can be
+//! prefetched on a background worker so sampling of step *t+1* overlaps
+//! the dispatch of step *t* (`TrainConfig::prefetch`, SALIENT-style).
+//! Seed order, base-seed schedule, and sampled neighborhoods are bitwise
+//! unchanged by either knob.
 
+pub mod pipeline;
 pub mod profile;
 
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::gen::{builtin_spec, Dataset, Split};
 use crate::memory::{self, MemoryMeter, StepDims};
 use crate::metrics::Timer;
-use crate::rng::{mix, SplitMix64};
+use crate::rng::mix;
 use crate::runtime::{init_params, Executable, Runtime};
-use crate::sampler;
+use crate::sampler::{self, ParallelSampler};
+use crate::xla;
+
+pub use pipeline::{BatchPrefetcher, BatchScheduler, HostWork, PreparedBatch};
 
 /// Which pipeline a trainer drives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,6 +64,12 @@ pub struct TrainConfig {
     pub save_indices: bool,
     /// Repeat seed (paper uses {42, 43, 44}).
     pub seed: u64,
+    /// Host sampler worker threads (0 = auto-detect, 1 = serial legacy
+    /// path). Output is bitwise identical at any value.
+    pub threads: usize,
+    /// Overlap host sampling of step t+1 with dispatch of step t on a
+    /// background worker (double-buffered prefetch).
+    pub prefetch: bool,
 }
 
 impl TrainConfig {
@@ -62,13 +80,28 @@ impl TrainConfig {
         };
         format!("{base}{}", self.hops)
     }
+
+    /// What the host pipeline must prepare per step for this variant.
+    pub fn host_work(&self) -> HostWork {
+        match (self.variant, self.hops) {
+            (Variant::Dgl, 2) => HostWork::Block2,
+            (Variant::Dgl, _) => HostWork::Block1,
+            (Variant::Fsa, _) => HostWork::SeedsOnly,
+        }
+    }
 }
 
 /// Timing breakdown of one training step.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepTiming {
-    /// Host-side neighbor sampling (baseline only).
+    /// Host-side neighbor sampling on the critical path (baseline only).
+    /// With prefetch on this is the time the step *blocked* waiting for
+    /// its batch, not the full sampling cost — see `sample_overlap_ms`.
     pub sample_ms: f64,
+    /// Host sampling wall-clock that ran overlapped with the previous
+    /// step's dispatch (prefetch on; 0 otherwise). Not on the critical
+    /// path and excluded from [`StepTiming::total_ms`].
+    pub sample_overlap_ms: f64,
     /// Per-step uploads: params/opt-state re-upload + batch tensors.
     pub upload_ms: f64,
     /// Synchronized executable dispatch (fwd+bwd+optimizer).
@@ -92,9 +125,11 @@ impl StepTiming {
 }
 
 /// Cache of generated datasets (generation is deterministic but costly).
+/// Datasets are `Arc`-shared so the prefetch worker can sample them from
+/// its own thread.
 #[derive(Default)]
 pub struct DatasetCache {
-    map: HashMap<String, Rc<Dataset>>,
+    map: HashMap<String, Arc<Dataset>>,
 }
 
 impl DatasetCache {
@@ -102,7 +137,7 @@ impl DatasetCache {
         Self::default()
     }
 
-    pub fn get(&mut self, rt: &Runtime, name: &str) -> Result<Rc<Dataset>> {
+    pub fn get(&mut self, rt: &Runtime, name: &str) -> Result<Arc<Dataset>> {
         if let Some(d) = self.map.get(name) {
             return Ok(d.clone());
         }
@@ -113,7 +148,7 @@ impl DatasetCache {
             .get(name)
             .cloned()
             .map_or_else(|| builtin_spec(name), Ok)?;
-        let ds = Rc::new(Dataset::generate(spec)?);
+        let ds = Arc::new(Dataset::generate(spec)?);
         self.map.insert(name.to_string(), ds.clone());
         Ok(ds)
     }
@@ -124,7 +159,7 @@ pub struct Trainer<'rt> {
     rt: &'rt Runtime,
     pub cfg: TrainConfig,
     exe: Rc<Executable>,
-    pub ds: Rc<Dataset>,
+    pub ds: Arc<Dataset>,
     // static device buffers
     rowptr_buf: Option<xla::PjRtBuffer>,
     col_buf: Option<xla::PjRtBuffer>,
@@ -134,10 +169,10 @@ pub struct Trainer<'rt> {
     mstate: Vec<xla::Literal>,
     vstate: Vec<xla::Literal>,
     pub step_count: usize,
-    // batching
-    train_nodes: Vec<i32>,
-    cursor: usize,
-    epoch: u64,
+    // host batch pipeline
+    sched: BatchScheduler,
+    sampler: ParallelSampler,
+    prefetcher: Option<BatchPrefetcher>,
     pub meter: MemoryMeter,
     dims: StepDims,
 }
@@ -200,12 +235,12 @@ impl<'rt> Trainer<'rt> {
             vstate.push(lit_f32(&vec![0.0; vals.len()], &s.shape)?);
         }
 
-        let mut train_nodes = ds.split_nodes(Split::Train);
-        if train_nodes.len() < cfg.batch {
-            bail!("dataset {} has {} train nodes < batch {}",
-                  cfg.dataset, train_nodes.len(), cfg.batch);
-        }
-        SplitMix64::new(mix(cfg.seed ^ 0xE90C)).shuffle(&mut train_nodes);
+        let sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)?;
+        let sampler = ParallelSampler::new(cfg.threads);
+        let prefetcher = cfg.prefetch.then(|| {
+            BatchPrefetcher::spawn(ds.clone(), cfg.host_work(), cfg.k1,
+                                   cfg.k2, cfg.threads)
+        });
 
         let dims = StepDims {
             batch: cfg.batch,
@@ -229,27 +264,20 @@ impl<'rt> Trainer<'rt> {
             mstate,
             vstate,
             step_count: 0,
-            train_nodes,
-            cursor: 0,
-            epoch: 0,
+            sched,
+            sampler,
+            prefetcher,
             meter: MemoryMeter::new(),
             dims,
         })
     }
 
     /// Next batch of seed nodes (reshuffles at epoch boundaries; identical
-    /// order across variants for the same seed).
+    /// order across variants for the same seed). Draws from the shared
+    /// scheduler — mixing manual draws with prefetching degrades the
+    /// prefetcher to the synchronous path (see [`Trainer::acquire_batch`]).
     pub fn next_batch(&mut self) -> Vec<i32> {
-        if self.cursor + self.cfg.batch > self.train_nodes.len() {
-            self.epoch += 1;
-            SplitMix64::new(mix(self.cfg.seed ^ 0xE90C ^ self.epoch))
-                .shuffle(&mut self.train_nodes);
-            self.cursor = 0;
-        }
-        let out = self.train_nodes[self.cursor..self.cursor + self.cfg.batch]
-            .to_vec();
-        self.cursor += self.cfg.batch;
-        out
+        self.sched.next_seeds()
     }
 
     /// Per-step base seed: shared schedule across variants so both sample
@@ -260,36 +288,66 @@ impl<'rt> Trainer<'rt> {
 
     /// Run one training step; returns the timing breakdown.
     pub fn step(&mut self) -> Result<StepTiming> {
-        let seeds = self.next_batch();
-        self.step_with_seeds(&seeds)
+        let prepared = self.acquire_batch()?;
+        self.step_prepared(prepared)
     }
 
     /// Run one step on explicit seeds (used by tests and the e2e example).
+    /// Always samples synchronously; does not consume the scheduler.
     pub fn step_with_seeds(&mut self, seeds: &[i32]) -> Result<StepTiming> {
+        let prepared = pipeline::prepare_batch(
+            &self.ds, self.cfg.host_work(), self.cfg.k1, self.cfg.k2,
+            &self.sampler, self.step_count, seeds.to_vec(),
+            self.step_base_seed());
+        self.step_prepared(prepared)
+    }
+
+    /// Obtain the batch for the current step — synchronously, or from the
+    /// double-buffered prefetch worker (keeping one batch in flight behind
+    /// the one being consumed so sampling overlaps dispatch).
+    fn acquire_batch(&mut self) -> Result<PreparedBatch> {
+        if let Some(p) = &mut self.prefetcher {
+            let prepared = p.next_batch(&mut self.sched)?;
+            if prepared.step == self.step_count {
+                return Ok(prepared);
+            }
+            // Schedule desync: explicit-seed steps advanced `step_count`
+            // past the prefetched stream. Keep the seed order (the drawn
+            // batch is still next) but resample synchronously with the
+            // base seed the legacy schedule mandates for this step.
+            return Ok(pipeline::prepare_batch(
+                &self.ds, self.cfg.host_work(), self.cfg.k1, self.cfg.k2,
+                &self.sampler, self.step_count, prepared.seeds,
+                self.step_base_seed()));
+        }
+        let seeds = self.sched.next_seeds();
+        Ok(pipeline::prepare_batch(
+            &self.ds, self.cfg.host_work(), self.cfg.k1, self.cfg.k2,
+            &self.sampler, self.step_count, seeds, self.step_base_seed()))
+    }
+
+    /// Upload, dispatch, and account one prepared batch.
+    fn step_prepared(&mut self, prepared: PreparedBatch) -> Result<StepTiming> {
         let mut t = StepTiming::default();
-        let base = self.step_base_seed();
+        let base = prepared.base;
         let b = self.cfg.batch;
+        let seeds: &[i32] = &prepared.seeds;
         if seeds.len() != b {
             bail!("expected {b} seeds, got {}", seeds.len());
         }
-        let labels: Vec<i32> =
-            seeds.iter().map(|&u| self.ds.labels[u as usize]).collect();
-        self.meter.reset_step();
-
-        // ---- 1. host sampling (baseline only; the paper's sampler stage)
-        let mut block2: Option<sampler::Block2> = None;
-        let mut block1: Option<sampler::Block1> = None;
-        if self.cfg.variant == Variant::Dgl {
-            let timer = Timer::start();
-            if self.cfg.hops == 2 {
-                block2 = Some(sampler::build_block2(
-                    &self.ds.graph, seeds, self.cfg.k1, self.cfg.k2, base));
-            } else {
-                block1 = Some(sampler::build_block1(
-                    &self.ds.graph, seeds, self.cfg.k1, base));
+        let labels: &[i32] = &prepared.labels;
+        let block1: Option<&sampler::Block1> = prepared.block1.as_ref();
+        let block2: Option<&sampler::Block2> = prepared.block2.as_ref();
+        match prepared.wait_ms {
+            // synchronous build: sampling is the critical path
+            None => t.sample_ms = prepared.sample_ms,
+            // prefetched: only the wait is critical; the build overlapped
+            Some(wait) => {
+                t.sample_ms = wait;
+                t.sample_overlap_ms = prepared.sample_ms;
             }
-            t.sample_ms = timer.ms();
         }
+        self.meter.reset_step();
 
         // ---- 2. per-step uploads (params/opt state + batch tensors);
         // static buffers (graph, features) are passed by reference.
@@ -318,32 +376,32 @@ impl<'rt> Trainer<'rt> {
                 plan.push(Arg::X);
                 owned.push(self.rt.buf_i32(seeds, &[b])?);
                 plan.push(Arg::Owned(owned.len() - 1));
-                owned.push(self.rt.buf_i32(&labels, &[b])?);
+                owned.push(self.rt.buf_i32(labels, &[b])?);
                 plan.push(Arg::Owned(owned.len() - 1));
                 owned.push(self.rt.buf_u64(&[base], &[1])?);
                 plan.push(Arg::Owned(owned.len() - 1));
                 upload_bytes += (2 * b * 4 + 8) as u64;
             }
             (Variant::Dgl, 2) => {
-                let blk = block2.as_ref().unwrap();
+                let blk = block2.expect("pipeline prepared no 2-hop block");
                 let f1w = 1 + self.cfg.k1;
                 plan.push(Arg::X);
                 owned.push(self.rt.buf_i32(&blk.f1, &[b, f1w])?);
                 plan.push(Arg::Owned(owned.len() - 1));
                 owned.push(self.rt.buf_i32(&blk.s2, &[b, f1w, self.cfg.k2])?);
                 plan.push(Arg::Owned(owned.len() - 1));
-                owned.push(self.rt.buf_i32(&labels, &[b])?);
+                owned.push(self.rt.buf_i32(labels, &[b])?);
                 plan.push(Arg::Owned(owned.len() - 1));
                 upload_bytes +=
                     (blk.f1.len() * 4 + blk.s2.len() * 4 + b * 4) as u64;
             }
             (Variant::Dgl, _) => {
-                let blk = block1.as_ref().unwrap();
+                let blk = block1.expect("pipeline prepared no 1-hop block");
                 let f1w = 1 + self.cfg.k1;
                 plan.push(Arg::X);
                 owned.push(self.rt.buf_i32(&blk.f1, &[b, f1w])?);
                 plan.push(Arg::Owned(owned.len() - 1));
-                owned.push(self.rt.buf_i32(&labels, &[b])?);
+                owned.push(self.rt.buf_i32(labels, &[b])?);
                 plan.push(Arg::Owned(owned.len() - 1));
                 upload_bytes += (blk.f1.len() * 4 + b * 4) as u64;
             }
@@ -398,10 +456,10 @@ impl<'rt> Trainer<'rt> {
         // untimed: raw sampled-pair count (paper's auxiliary metric)
         t.pairs = match (self.cfg.variant, self.cfg.hops) {
             (Variant::Dgl, 2) => {
-                sampler::block2_sampled_pairs(block2.as_ref().unwrap())
+                sampler::block2_sampled_pairs(block2.unwrap())
             }
             (Variant::Dgl, _) => {
-                let blk = block1.as_ref().unwrap();
+                let blk = block1.unwrap();
                 let f1w = 1 + self.cfg.k1;
                 (0..b)
                     .map(|bi| sampler::valid_pairs(

@@ -1,0 +1,342 @@
+//! Host batch pipeline — seed scheduling, batch preparation, and the
+//! double-buffered prefetch stage (SALIENT-style pipelining, arXiv
+//! 2110.08450: overlap host sampling of step *t+1* with dispatch of
+//! step *t*).
+//!
+//! Invariants the benchmarks depend on (pinned by `rust/tests/pipeline.rs`):
+//!
+//! * **seed order** — [`BatchScheduler`] reproduces the trainer's legacy
+//!   shuffle/epoch logic exactly, so batches arrive in the same order
+//!   whether prefetching is on or off;
+//! * **base-seed schedule** — step *t* always samples with
+//!   `mix(seed + t)`, the paired-comparison contract shared by both
+//!   variants;
+//! * **bitwise sampling** — batches are built by [`ParallelSampler`],
+//!   identical to the serial sampler at any thread count.
+//!
+//! Accounting: [`PreparedBatch::sample_ms`] is the wall-clock the host
+//! sampler actually spent (worker-side when prefetched), while the
+//! consumer records the *critical-path* time it blocked waiting — the
+//! split `StepTiming` reports as `sample_ms` vs `sample_overlap_ms`.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::gen::{Dataset, Split};
+use crate::metrics::Timer;
+use crate::rng::{mix, SplitMix64};
+use crate::sampler::{Block1, Block2, ParallelSampler};
+
+/// What the host must prepare per step for a given variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HostWork {
+    /// Fused path: the kernel samples on device; host supplies seeds+labels.
+    SeedsOnly,
+    /// Baseline 1-hop: materialize a [`Block1`].
+    Block1,
+    /// Baseline 2-hop: materialize a [`Block2`].
+    Block2,
+}
+
+/// Deterministic seed-batch scheduler (the trainer's legacy epoch logic,
+/// extracted so the prefetch stage can draw batches ahead of consumption).
+pub struct BatchScheduler {
+    seed: u64,
+    batch: usize,
+    train_nodes: Vec<i32>,
+    cursor: usize,
+    epoch: u64,
+    drawn: usize,
+}
+
+impl BatchScheduler {
+    pub fn new(ds: &Dataset, batch: usize, seed: u64) -> Result<BatchScheduler> {
+        let mut train_nodes = ds.split_nodes(Split::Train);
+        if train_nodes.len() < batch {
+            bail!("dataset {} has {} train nodes < batch {}",
+                  ds.spec.name, train_nodes.len(), batch);
+        }
+        SplitMix64::new(mix(seed ^ 0xE90C)).shuffle(&mut train_nodes);
+        Ok(BatchScheduler { seed, batch, train_nodes, cursor: 0, epoch: 0,
+                            drawn: 0 })
+    }
+
+    /// Number of batches drawn so far = the step index of the next draw.
+    pub fn steps_drawn(&self) -> usize {
+        self.drawn
+    }
+
+    /// Per-step base seed: shared schedule across variants so both sample
+    /// the same neighborhoods at the same step (paired comparisons).
+    pub fn base_seed(&self, step: usize) -> u64 {
+        mix(self.seed.wrapping_add(step as u64))
+    }
+
+    /// Next batch of seed nodes (reshuffles at epoch boundaries; identical
+    /// order across variants for the same seed).
+    pub fn next_seeds(&mut self) -> Vec<i32> {
+        if self.cursor + self.batch > self.train_nodes.len() {
+            self.epoch += 1;
+            SplitMix64::new(mix(self.seed ^ 0xE90C ^ self.epoch))
+                .shuffle(&mut self.train_nodes);
+            self.cursor = 0;
+        }
+        let out = self.train_nodes[self.cursor..self.cursor + self.batch]
+            .to_vec();
+        self.cursor += self.batch;
+        self.drawn += 1;
+        out
+    }
+}
+
+/// Everything the host prepares for one training step.
+pub struct PreparedBatch {
+    /// Step index this batch was drawn for (consumption-order guard).
+    pub step: usize,
+    pub seeds: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub base: u64,
+    pub block1: Option<Block1>,
+    pub block2: Option<Block2>,
+    /// Host sampling wall-clock spent building the blocks (worker-side
+    /// when prefetched — overlapped, not critical-path).
+    pub sample_ms: f64,
+    /// Critical-path wait the consumer paid to obtain this batch
+    /// (`None` = built synchronously; `sample_ms` *is* the critical path).
+    pub wait_ms: Option<f64>,
+}
+
+/// Build one batch synchronously with the given sampler.
+pub fn prepare_batch(ds: &Dataset, work: HostWork, k1: usize, k2: usize,
+                     sampler: &ParallelSampler, step: usize, seeds: Vec<i32>,
+                     base: u64) -> PreparedBatch {
+    let labels: Vec<i32> =
+        seeds.iter().map(|&u| ds.labels[u as usize]).collect();
+    let mut block1 = None;
+    let mut block2 = None;
+    let mut sample_ms = 0.0;
+    match work {
+        HostWork::SeedsOnly => {}
+        HostWork::Block1 => {
+            let t = Timer::start();
+            block1 = Some(sampler.build_block1(&ds.graph, &seeds, k1, base));
+            sample_ms = t.ms();
+        }
+        HostWork::Block2 => {
+            let t = Timer::start();
+            block2 = Some(sampler.build_block2(&ds.graph, &seeds, k1, k2,
+                                               base));
+            sample_ms = t.ms();
+        }
+    }
+    PreparedBatch { step, seeds, labels, base, block1, block2, sample_ms,
+                    wait_ms: None }
+}
+
+struct Job {
+    step: usize,
+    seeds: Vec<i32>,
+    base: u64,
+}
+
+/// Double-buffered batch prefetcher: a persistent worker thread builds
+/// batches FIFO while the consumer dispatches the previous step. Keep two
+/// jobs in flight (one being received, one overlapping) for full overlap.
+pub struct BatchPrefetcher {
+    jobs: Option<mpsc::Sender<Job>>,
+    done: mpsc::Receiver<PreparedBatch>,
+    worker: Option<thread::JoinHandle<()>>,
+    in_flight: usize,
+}
+
+impl BatchPrefetcher {
+    /// Spawn the worker. `threads` is the sampler's worker count inside the
+    /// prefetch thread (0 = auto).
+    pub fn spawn(ds: Arc<Dataset>, work: HostWork, k1: usize, k2: usize,
+                 threads: usize) -> BatchPrefetcher {
+        let (jtx, jrx) = mpsc::channel::<Job>();
+        let (dtx, drx) = mpsc::channel::<PreparedBatch>();
+        let worker = thread::spawn(move || {
+            let sampler = ParallelSampler::new(threads);
+            for job in jrx {
+                let batch = prepare_batch(&ds, work, k1, k2, &sampler,
+                                          job.step, job.seeds, job.base);
+                if dtx.send(batch).is_err() {
+                    break; // consumer gone
+                }
+            }
+        });
+        BatchPrefetcher {
+            jobs: Some(jtx),
+            done: drx,
+            worker: Some(worker),
+            in_flight: 0,
+        }
+    }
+
+    /// Batches submitted but not yet received.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Queue one batch for background preparation. Errors when the worker
+    /// thread is gone (died or already shut down).
+    pub fn submit(&mut self, step: usize, seeds: Vec<i32>,
+                  base: u64) -> Result<()> {
+        let tx = self
+            .jobs
+            .as_ref()
+            .ok_or_else(|| anyhow!("prefetch worker already shut down"))?;
+        if tx.send(Job { step, seeds, base }).is_err() {
+            bail!("prefetch worker terminated unexpectedly");
+        }
+        self.in_flight += 1;
+        Ok(())
+    }
+
+    /// Drive the double buffer from `sched`: keep two batches in flight
+    /// (one being consumed, one overlapping the caller's dispatch), block
+    /// for the oldest, and stamp the critical-path wait into
+    /// [`PreparedBatch::wait_ms`]. This is the one protocol all consumers
+    /// share — trainer, throughput mode, and tests.
+    pub fn next_batch(&mut self,
+                      sched: &mut BatchScheduler) -> Result<PreparedBatch> {
+        while self.in_flight < 2 {
+            let step = sched.steps_drawn();
+            let seeds = sched.next_seeds();
+            let base = sched.base_seed(step);
+            self.submit(step, seeds, base)?;
+        }
+        let timer = Timer::start();
+        let mut batch = self.recv()?;
+        batch.wait_ms = Some(timer.ms());
+        Ok(batch)
+    }
+
+    /// Block until the oldest in-flight batch is ready. Prefer
+    /// [`Self::next_batch`], which also keeps the buffer primed and
+    /// stamps the critical-path wait.
+    pub fn recv(&mut self) -> Result<PreparedBatch> {
+        if self.in_flight == 0 {
+            bail!("prefetcher: recv with no batch in flight");
+        }
+        let batch = self
+            .done
+            .recv()
+            .map_err(|_| anyhow!("prefetch worker terminated unexpectedly"))?;
+        self.in_flight -= 1;
+        Ok(batch)
+    }
+}
+
+impl Drop for BatchPrefetcher {
+    fn drop(&mut self) {
+        self.jobs.take(); // close the queue; worker loop exits
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::builtin_spec;
+
+    fn tiny() -> Arc<Dataset> {
+        Arc::new(Dataset::generate(builtin_spec("tiny").unwrap()).unwrap())
+    }
+
+    #[test]
+    fn scheduler_is_deterministic_and_epoch_aware() {
+        let ds = tiny();
+        let mut a = BatchScheduler::new(&ds, 64, 42).unwrap();
+        let mut b = BatchScheduler::new(&ds, 64, 42).unwrap();
+        // tiny has ~410 train nodes -> epoch boundary inside 20 steps
+        for step in 0..20 {
+            assert_eq!(a.next_seeds(), b.next_seeds(), "step {step}");
+            assert_eq!(a.base_seed(step), b.base_seed(step));
+        }
+        assert_eq!(a.steps_drawn(), 20);
+        let mut c = BatchScheduler::new(&ds, 64, 43).unwrap();
+        assert_ne!(a.base_seed(0), c.base_seed(0));
+    }
+
+    #[test]
+    fn scheduler_rejects_oversized_batch() {
+        let ds = tiny();
+        assert!(BatchScheduler::new(&ds, 100_000, 42).is_err());
+    }
+
+    #[test]
+    fn prepare_batch_builds_the_requested_block() {
+        let ds = tiny();
+        let sampler = ParallelSampler::serial();
+        let seeds: Vec<i32> = (0..32).collect();
+        let b2 = prepare_batch(&ds, HostWork::Block2, 4, 3, &sampler, 0,
+                               seeds.clone(), 7);
+        assert!(b2.block2.is_some() && b2.block1.is_none());
+        assert_eq!(b2.labels.len(), 32);
+        let b1 = prepare_batch(&ds, HostWork::Block1, 4, 3, &sampler, 0,
+                               seeds.clone(), 7);
+        assert!(b1.block1.is_some() && b1.block2.is_none());
+        let s = prepare_batch(&ds, HostWork::SeedsOnly, 4, 3, &sampler, 0,
+                              seeds, 7);
+        assert!(s.block1.is_none() && s.block2.is_none());
+        assert_eq!(s.sample_ms, 0.0);
+    }
+
+    #[test]
+    fn prefetcher_returns_batches_in_submission_order() {
+        let ds = tiny();
+        let mut sched = BatchScheduler::new(&ds, 64, 42).unwrap();
+        let mut pf =
+            BatchPrefetcher::spawn(ds.clone(), HostWork::Block2, 4, 3, 2);
+        for _ in 0..3 {
+            let step = sched.steps_drawn();
+            let seeds = sched.next_seeds();
+            let base = sched.base_seed(step);
+            pf.submit(step, seeds, base).unwrap();
+        }
+        assert_eq!(pf.in_flight(), 3);
+        for want in 0..3 {
+            let b = pf.recv().unwrap();
+            assert_eq!(b.step, want);
+            assert!(b.block2.is_some());
+        }
+        assert_eq!(pf.in_flight(), 0);
+        assert!(pf.recv().is_err(), "recv with empty queue must error");
+    }
+
+    #[test]
+    fn prefetched_batches_match_synchronous_ones() {
+        let ds = tiny();
+        let sampler = ParallelSampler::serial();
+        let mut sync_sched = BatchScheduler::new(&ds, 64, 42).unwrap();
+        let mut pf_sched = BatchScheduler::new(&ds, 64, 42).unwrap();
+        let mut pf =
+            BatchPrefetcher::spawn(ds.clone(), HostWork::Block2, 4, 3, 8);
+        for _ in 0..10 {
+            let step = pf_sched.steps_drawn();
+            let seeds = pf_sched.next_seeds();
+            pf.submit(step, seeds, pf_sched.base_seed(step)).unwrap();
+        }
+        for step in 0..10 {
+            let seeds = sync_sched.next_seeds();
+            let want = prepare_batch(&ds, HostWork::Block2, 4, 3, &sampler,
+                                     step, seeds, sync_sched.base_seed(step));
+            let got = pf.recv().unwrap();
+            assert_eq!(got.step, want.step);
+            assert_eq!(got.seeds, want.seeds);
+            assert_eq!(got.labels, want.labels);
+            assert_eq!(got.base, want.base);
+            assert_eq!(got.block2.as_ref().unwrap().f1,
+                       want.block2.as_ref().unwrap().f1, "step {step}");
+            assert_eq!(got.block2.as_ref().unwrap().s2,
+                       want.block2.as_ref().unwrap().s2, "step {step}");
+        }
+    }
+}

@@ -20,6 +20,7 @@ use crate::metrics::{summarize, Timer};
 use crate::rng::{mix, SplitMix64};
 use crate::runtime::{init_params, Runtime};
 use crate::sampler;
+use crate::xla;
 
 /// Exclusive time of one profiled row.
 #[derive(Clone, Debug)]

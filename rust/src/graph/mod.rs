@@ -5,7 +5,11 @@
 //! because the AOT-compiled executables have static shapes — `col` is padded
 //! to `e_cap` and `rowptr` never points into the pad (DESIGN.md §6).
 
+pub mod shard;
+
 use anyhow::{bail, ensure, Result};
+
+pub use shard::{plan_frontier_shards, plan_shards, sample_cost};
 
 /// Compressed sparse row adjacency with a padded edge capacity.
 #[derive(Clone, Debug)]

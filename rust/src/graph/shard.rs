@@ -1,0 +1,177 @@
+//! Degree-aware shard planner for the parallel host sampler.
+//!
+//! The frontier sampler partitions its row range across worker threads.
+//! A naive even split load-balances badly on the hub-heavy / power-law
+//! graphs the paper targets: one worker inherits the hubs and the rest
+//! idle. This planner weighs each frontier row by its *sampling cost* —
+//! `1 + min(degree, k)` (`k` hash draws when `deg > k`, a `deg`-element
+//! copy otherwise, plus a per-row constant) — and cuts the range at the
+//! cost quantiles, so every shard carries roughly `total_cost / parts`.
+//!
+//! Shards are **contiguous, ordered, and exactly cover** the input range.
+//! That invariant is what lets the parallel sampler hand each worker a
+//! disjoint `&mut` slice of the output tensor and stay bitwise identical
+//! to the serial sampler at any thread count (the counter RNG is
+//! order-independent; only the write layout has to be preserved).
+
+use std::ops::Range;
+
+use super::Csr;
+
+/// Host-sampling cost model for one frontier row (arbitrary units).
+///
+/// Invalid (`-1`) rows still pay the per-row constant; `deg <= k` rows pay
+/// the take-all copy; `deg > k` rows pay `k` counter-hash draws.
+pub fn sample_cost(csr: &Csr, node: i32, k: usize) -> u64 {
+    if node < 0 || node as usize >= csr.n {
+        return 1;
+    }
+    1 + (csr.degree(node) as usize).min(k) as u64
+}
+
+/// Cut `costs` into at most `parts` contiguous ranges of near-equal total
+/// cost. The ranges are ordered and cover `0..costs.len()` exactly; some
+/// may be empty when the distribution is extremely skewed.
+pub fn plan_shards(costs: &[u64], parts: usize) -> Vec<Range<usize>> {
+    let n = costs.len();
+    let parts = parts.max(1);
+    if parts == 1 || n <= 1 {
+        return vec![0..n];
+    }
+    let total: u64 = costs.iter().sum();
+    if total == 0 {
+        // degenerate (all-zero costs): fall back to an even row split
+        let step = (n + parts - 1) / parts;
+        return (0..parts)
+            .map(|j| (j * step).min(n)..((j + 1) * step).min(n))
+            .collect();
+    }
+    // prefix[i] = sum of costs[..i]; cut j at the first index whose prefix
+    // reaches the j-th cost quantile
+    let mut prefix = Vec::with_capacity(n + 1);
+    prefix.push(0u64);
+    for &c in costs {
+        prefix.push(prefix.last().unwrap() + c);
+    }
+    let mut cuts = Vec::with_capacity(parts + 1);
+    cuts.push(0usize);
+    for j in 1..parts {
+        let target = (total as u128 * j as u128 / parts as u128) as u64;
+        let cut = prefix.partition_point(|&p| p < target);
+        let lo = *cuts.last().unwrap();
+        cuts.push(cut.clamp(lo, n));
+    }
+    cuts.push(n);
+    cuts.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
+/// Plan shards for a frontier using the degree-aware cost model.
+pub fn plan_frontier_shards(csr: &Csr, frontier: &[i32], k: usize,
+                            parts: usize) -> Vec<Range<usize>> {
+    if parts <= 1 || frontier.len() <= 1 {
+        return vec![0..frontier.len()];
+    }
+    let costs: Vec<u64> =
+        frontier.iter().map(|&u| sample_cost(csr, u, k)).collect();
+    plan_shards(&costs, parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    fn assert_covering(ranges: &[Range<usize>], n: usize) {
+        let mut pos = 0;
+        for r in ranges {
+            assert_eq!(r.start, pos, "shards not contiguous: {ranges:?}");
+            assert!(r.end >= r.start);
+            pos = r.end;
+        }
+        assert_eq!(pos, n, "shards do not cover 0..{n}: {ranges:?}");
+    }
+
+    #[test]
+    fn uniform_costs_split_evenly() {
+        let costs = vec![1u64; 100];
+        let shards = plan_shards(&costs, 4);
+        assert_covering(&shards, 100);
+        assert_eq!(shards.len(), 4);
+        for r in &shards {
+            assert_eq!(r.end - r.start, 25);
+        }
+    }
+
+    #[test]
+    fn single_part_and_tiny_inputs() {
+        assert_eq!(plan_shards(&[5, 5, 5], 1), vec![0..3]);
+        assert_eq!(plan_shards(&[], 4), vec![0..0]);
+        assert_eq!(plan_shards(&[7], 4), vec![0..1]);
+    }
+
+    #[test]
+    fn zero_costs_fall_back_to_even_rows() {
+        let shards = plan_shards(&[0u64; 10], 3);
+        assert_covering(&shards, 10);
+        assert!(shards.iter().all(|r| r.end - r.start <= 4));
+    }
+
+    #[test]
+    fn heavy_head_is_isolated() {
+        // one row carrying half the cost should get (roughly) its own shard
+        let mut costs = vec![1u64; 64];
+        costs[0] = 64;
+        let shards = plan_shards(&costs, 4);
+        assert_covering(&shards, 64);
+        let first = &shards[0];
+        assert!(first.end - first.start <= 2,
+                "hub row not isolated: {shards:?}");
+    }
+
+    #[test]
+    fn frontier_plan_balances_star_graph() {
+        // star: node 0 is a hub (deg 63), leaves have deg 1
+        let edges: Vec<(u32, u32)> = (1..64u32).map(|i| (0, i)).collect();
+        let csr = Csr::from_edges(64, &edges, 256, true).unwrap();
+        let frontier: Vec<i32> = (0..64).collect();
+        let k = 16;
+        let shards = plan_frontier_shards(&csr, &frontier, k, 4);
+        assert_covering(&shards, 64);
+        let cost_of = |r: &Range<usize>| -> u64 {
+            frontier[r.clone()].iter().map(|&u| sample_cost(&csr, u, k)).sum()
+        };
+        let total: u64 = cost_of(&(0..64));
+        for r in &shards {
+            if r.end > r.start {
+                // no shard should carry more than ~2x its fair share
+                assert!(cost_of(r) <= total / 2,
+                        "unbalanced shard {r:?} in {shards:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_rows_have_unit_cost() {
+        let csr = Csr::from_edges(4, &[(0, 1)], 8, true).unwrap();
+        assert_eq!(sample_cost(&csr, -1, 5), 1);
+        assert_eq!(sample_cost(&csr, 99, 5), 1);
+        assert_eq!(sample_cost(&csr, 2, 5), 1); // isolated
+        assert_eq!(sample_cost(&csr, 0, 5), 2); // deg 1
+    }
+
+    /// Property: random costs and part counts always produce ordered,
+    /// covering shards.
+    #[test]
+    fn prop_random_plans_cover() {
+        let mut r = SplitMix64::new(17);
+        for _ in 0..200 {
+            let n = r.next_below(200) as usize;
+            let parts = 1 + r.next_below(12) as usize;
+            let costs: Vec<u64> =
+                (0..n).map(|_| r.next_below(50)).collect();
+            let shards = plan_shards(&costs, parts);
+            assert_covering(&shards, n);
+            assert!(shards.len() <= parts.max(1));
+        }
+    }
+}

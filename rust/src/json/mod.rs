@@ -1,9 +1,9 @@
 //! Minimal JSON parser + writer.
 //!
-//! The offline build environment vendors only the `xla` crate's dependency
-//! closure (no serde), so the manifest loader uses this hand-rolled,
-//! well-tested recursive-descent parser instead. Supports the full JSON
-//! grammar including escapes and `\uXXXX` (BMP + surrogate pairs).
+//! The offline build environment has no serde, so the manifest loader uses
+//! this hand-rolled, well-tested recursive-descent parser instead (only
+//! `anyhow` is a real dependency). Supports the full JSON grammar including
+//! escapes and `\uXXXX` (BMP + surrogate pairs).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -81,12 +81,19 @@ impl Value {
 }
 
 /// Parse error with byte offset for diagnostics.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 pub fn parse(input: &str) -> Result<Value, ParseError> {
     let mut p = Parser { bytes: input.as_bytes(), pos: 0 };

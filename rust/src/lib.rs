@@ -26,9 +26,10 @@
 //! | [`runtime`] | PJRT client, artifact manifest, executable cache |
 //! | [`memory`] | transient-memory meter + analytic block model |
 //! | [`metrics`] | timers, robust stats, CSV logging |
-//! | [`coordinator`] | training loop driver, variant dispatch, profiling |
-//! | [`bench`] | grid runner + table/figure renderers (Tables 1–3, Figs 1–5) |
+//! | [`coordinator`] | training loop driver, batch pipeline, profiling |
+//! | [`bench`] | grid runner + renderers + host-pipeline throughput mode |
 //! | [`cli`] | hand-rolled argument parser and subcommands |
+//! | [`xla`] | stand-in for the PJRT bindings (see its module docs) |
 
 pub mod bench;
 pub mod cli;
@@ -42,3 +43,4 @@ pub mod rng;
 pub mod runtime;
 pub mod sampler;
 pub mod util;
+pub mod xla;

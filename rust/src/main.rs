@@ -7,16 +7,20 @@
 //!   table       render a table/figure (1|2|fig1..fig5) from the CSV
 //!   profile     stage-split baseline profile (Table 3)
 //!   memory      analytic transient-memory model for a configuration
+//!   throughput  host sampling/batch pipeline: steps/sec + utilization
 //!   inspect     show manifest metadata for an artifact
 //!
 //! Examples:
 //!   fsa train --variant fsa --dataset products_sim --fanout 15x10 \
-//!       --batch 1024 --steps 30
+//!       --batch 1024 --steps 30 --threads 4 --prefetch on
 //!   fsa bench-grid --out results/bench.csv
 //!   fsa table --which 1 --csv results/bench.csv
+//!   fsa throughput --dataset arxiv_sim --sweep
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
-use fusesampleagg::bench::{self, render, Grid};
+use fusesampleagg::bench::{self, render, throughput, Grid};
 use fusesampleagg::cli::Args;
 use fusesampleagg::coordinator::{profile, DatasetCache, TrainConfig, Trainer,
                                  Variant};
@@ -48,6 +52,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "table" => cmd_table(args),
         "profile" => cmd_profile(args),
         "memory" => cmd_memory(args),
+        "throughput" => cmd_throughput(args),
         "inspect" => cmd_inspect(args),
         "" | "help" | "--help" => {
             print!("{}", HELP);
@@ -66,12 +71,24 @@ SUBCOMMANDS
   gen         --dataset NAME                       generate + print stats
   train       --variant fsa|dgl --dataset NAME --fanout K1xK2 --batch B
               [--steps N] [--warmup N] [--seed S] [--no-amp] [--eval]
+              [--threads N] [--prefetch on|off]
   bench-grid  [--quick] [--datasets a,b] [--fanouts 10x10,15x10]
               [--batches 512,1024] [--steps N] [--warmup N] [--out FILE]
+              [--threads N] [--prefetch on|off]
   table       --which 1|2|3|fig1|fig2|fig3|fig4|fig5 [--csv FILE]
   profile     [--steps N] [--warmup N] [--seed S]      (Table 3)
   memory      --dataset NAME --fanout K1xK2 --batch B   (analytic model)
+  throughput  --dataset NAME [--fanout K1xK2] [--batch B] [--steps N]
+              [--threads N] [--prefetch on|off] [--dispatch-ms X] [--sweep]
+              host sampling/batch pipeline: steps/sec + utilization
+              (no artifacts needed; dispatch is emulated)
   inspect     --artifact NAME | --list
+
+PIPELINE KNOBS
+  --threads N       host sampler worker threads (0 = auto, default 1);
+                    sampling output is bitwise identical at any value
+  --prefetch on     overlap host sampling of step t+1 with dispatch of
+                    step t (double-buffered; default off)
 ";
 
 fn cmd_gen(args: &Args) -> Result<()> {
@@ -109,21 +126,26 @@ fn cmd_train(args: &Args) -> Result<()> {
         amp: !args.has("no-amp"),
         save_indices: !args.has("no-save-indices"),
         seed: args.u64_or("seed", 42)?,
+        threads: args.usize_or("threads", 1)?,
+        prefetch: args.bool_or("prefetch", false)?,
     };
     let steps = args.usize_or("steps", 30)?;
     let warmup = args.usize_or("warmup", 5)?;
 
-    println!("training {} on {} fanout {}x{} batch {} amp={} seed={}",
+    println!("training {} on {} fanout {}x{} batch {} amp={} seed={} \
+              threads={} prefetch={}",
              cfg.variant.as_str(), cfg.dataset, k1, k2, cfg.batch, cfg.amp,
-             cfg.seed);
+             cfg.seed, cfg.threads, cfg.prefetch);
     let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;
     for _ in 0..warmup {
         trainer.step()?;
     }
     let mut totals = Vec::new();
+    let mut overlaps = Vec::new();
     for s in 0..steps {
         let t = trainer.step()?;
         totals.push(t.total_ms());
+        overlaps.push(t.sample_overlap_ms);
         if s % 10 == 0 || s == steps - 1 {
             println!("step {s:>4}: {:.2} ms (sample {:.2} upload {:.2} exec \
                       {:.2}) loss {:.4}",
@@ -134,6 +156,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let summary = metrics::summarize(&totals);
     println!("median step {:.2} ms  (p10 {:.2}, p90 {:.2}, n={})",
              summary.median, summary.p10, summary.p90, summary.n);
+    if trainer.cfg.prefetch {
+        println!("prefetch: median {:.2} ms of host sampling overlapped \
+                  off the critical path",
+                 metrics::median(&overlaps));
+    }
     if args.has("eval") {
         let acc = trainer.evaluate(2048)?;
         println!("validation accuracy: {:.3}", acc);
@@ -162,6 +189,14 @@ fn cmd_bench_grid(args: &Args) -> Result<()> {
     }
     grid.steps = args.usize_or("steps", grid.steps)?;
     grid.warmup = args.usize_or("warmup", grid.warmup)?;
+    grid.threads = args.usize_or("threads", grid.threads)?;
+    grid.prefetch = args.bool_or("prefetch", grid.prefetch)?;
+    if grid.threads != 1 || grid.prefetch {
+        eprintln!("note: --threads/--prefetch change step_ms/sample_ms \
+                   semantics and the CSV schema does not record them — \
+                   rows are NOT comparable with paper-protocol runs; use \
+                   `fsa throughput` for pipeline scaling measurements");
+    }
 
     let out_path = match args.str_opt("out") {
         Some(p) => std::path::PathBuf::from(p),
@@ -252,6 +287,66 @@ fn cmd_memory(args: &Args) -> Result<()> {
              util::fmt_bytes(fused.vmem_tile));
     println!("  reduction: {:.2}x",
              base.peak_hbm() as f64 / fused.peak_hbm().max(1) as f64);
+    Ok(())
+}
+
+/// `fsa throughput` — bench the host sampling/batch pipeline (steps/sec +
+/// utilization) with the --threads / --prefetch knobs. Needs no artifacts:
+/// dispatch is emulated (see bench::throughput docs).
+fn cmd_throughput(args: &Args) -> Result<()> {
+    let name = args.str_or("dataset", "arxiv_sim");
+    let spec = builtin_spec(&name)?;
+    let t = metrics::Timer::start();
+    let ds = Arc::new(Dataset::generate(spec)?);
+    println!("dataset {name}: {} nodes, {} edges ({:.0} ms to generate)",
+             ds.spec.n, ds.graph.num_edges(), t.ms());
+
+    let (k1, k2) = args.fanout("fanout", (15, 10))?;
+    let base_cfg = throughput::ThroughputConfig {
+        hops: if k2 == 0 { 1 } else { 2 },
+        k1,
+        k2,
+        batch: args.usize_or("batch", 1024)?,
+        steps: args.usize_or("steps", 30)?,
+        warmup: args.usize_or("warmup", 3)?,
+        threads: args.usize_or("threads", 1)?,
+        prefetch: args.bool_or("prefetch", false)?,
+        dispatch_ms: args
+            .str_opt("dispatch-ms")
+            .map(|v| v.parse::<f64>().context("bad --dispatch-ms"))
+            .transpose()?
+            .unwrap_or(2.0),
+        seed: args.u64_or("seed", 42)?,
+        ..throughput::ThroughputConfig::new(&name)
+    };
+
+    let mut rows = Vec::new();
+    if args.has("sweep") {
+        for threads in [1usize, 2, 4, 8] {
+            for prefetch in [false, true] {
+                let cfg = throughput::ThroughputConfig {
+                    threads,
+                    prefetch,
+                    ..base_cfg.clone()
+                };
+                let row = throughput::run_throughput(ds.clone(), &cfg)?;
+                eprintln!("  t{threads} prefetch={}: {:.1} steps/s",
+                          if prefetch { "on " } else { "off" },
+                          row.steps_per_s);
+                rows.push(row);
+            }
+        }
+    } else {
+        rows.push(throughput::run_throughput(ds.clone(), &base_cfg)?);
+    }
+    println!("\n{}", throughput::render_table(&rows));
+
+    let out_path = match args.str_opt("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => util::results_dir().join("throughput.csv"),
+    };
+    metrics::write_throughput_csv(&out_path, &rows)?;
+    println!("wrote {} rows to {}", rows.len(), out_path.display());
     Ok(())
 }
 

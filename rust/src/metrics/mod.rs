@@ -152,6 +152,82 @@ impl BenchRow {
     }
 }
 
+/// One `throughput`-mode measurement of the host sampling/batch pipeline —
+/// the schema of `results/throughput.csv`.
+#[derive(Clone, Debug)]
+pub struct ThroughputRow {
+    pub dataset: String,
+    pub hops: u32,
+    pub k1: u32,
+    pub k2: u32,
+    pub batch: u32,
+    /// Sampler worker threads (resolved; 0=auto never appears here).
+    pub threads: u32,
+    pub prefetch: bool,
+    pub steps: u32,
+    /// Timed steps per second of wall clock — the headline pipeline metric.
+    pub steps_per_s: f64,
+    /// Median wall-clock per step (ms).
+    pub step_ms: f64,
+    /// Median critical-path sampling ms (block build, or prefetch wait).
+    pub sample_ms: f64,
+    /// Median sampling ms overlapped behind dispatch (prefetch on).
+    pub overlap_ms: f64,
+    /// Dispatch ms per step (emulated when no backend is available).
+    pub dispatch_ms: f64,
+    /// Fraction of host sampling work hidden behind dispatch, in [0, 1].
+    pub utilization: f64,
+}
+
+pub const THROUGHPUT_CSV_HEADER: &str = "dataset,hops,k1,k2,batch,threads,prefetch,steps,steps_per_s,step_ms,sample_ms,overlap_ms,dispatch_ms,utilization";
+
+impl ThroughputRow {
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{:.4}",
+            self.dataset, self.hops, self.k1, self.k2, self.batch,
+            self.threads, self.prefetch, self.steps, self.steps_per_s,
+            self.step_ms, self.sample_ms, self.overlap_ms, self.dispatch_ms,
+            self.utilization
+        )
+    }
+
+    pub fn parse_csv(line: &str) -> Option<ThroughputRow> {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 14 {
+            return None;
+        }
+        Some(ThroughputRow {
+            dataset: f[0].to_string(),
+            hops: f[1].parse().ok()?,
+            k1: f[2].parse().ok()?,
+            k2: f[3].parse().ok()?,
+            batch: f[4].parse().ok()?,
+            threads: f[5].parse().ok()?,
+            prefetch: f[6] == "true",
+            steps: f[7].parse().ok()?,
+            steps_per_s: f[8].parse().ok()?,
+            step_ms: f[9].parse().ok()?,
+            sample_ms: f[10].parse().ok()?,
+            overlap_ms: f[11].parse().ok()?,
+            dispatch_ms: f[12].parse().ok()?,
+            utilization: f[13].parse().ok()?,
+        })
+    }
+}
+
+/// Write throughput rows (with header) to a CSV file.
+pub fn write_throughput_csv(path: &Path,
+                            rows: &[ThroughputRow]) -> std::io::Result<()> {
+    let mut out = String::with_capacity(rows.len() * 96 + 128);
+    out.push_str(THROUGHPUT_CSV_HEADER);
+    out.push('\n');
+    for r in rows {
+        let _ = writeln!(out, "{}", r.to_csv());
+    }
+    std::fs::write(path, out)
+}
+
 /// Write rows (with header) to a CSV file.
 pub fn write_csv(path: &Path, rows: &[BenchRow]) -> std::io::Result<()> {
     let mut out = String::with_capacity(rows.len() * 96 + 128);
@@ -289,6 +365,34 @@ mod tests {
         let med = median_over_repeats(&rows);
         assert_eq!(med.len(), 1);
         assert_eq!(med[0].step_ms, 2.0);
+    }
+
+    #[test]
+    fn throughput_csv_round_trip() {
+        let row = ThroughputRow {
+            dataset: "arxiv_sim".into(),
+            hops: 2,
+            k1: 15,
+            k2: 10,
+            batch: 1024,
+            threads: 4,
+            prefetch: true,
+            steps: 30,
+            steps_per_s: 123.45,
+            step_ms: 8.1,
+            sample_ms: 0.2,
+            overlap_ms: 5.5,
+            dispatch_ms: 2.0,
+            utilization: 0.96,
+        };
+        let parsed = ThroughputRow::parse_csv(&row.to_csv()).unwrap();
+        assert_eq!(parsed.dataset, "arxiv_sim");
+        assert_eq!(parsed.threads, 4);
+        assert!(parsed.prefetch);
+        assert!((parsed.steps_per_s - 123.45).abs() < 1e-6);
+        assert!((parsed.utilization - 0.96).abs() < 1e-9);
+        assert_eq!(THROUGHPUT_CSV_HEADER.split(',').count(),
+                   row.to_csv().split(',').count());
     }
 
     #[test]

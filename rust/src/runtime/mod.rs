@@ -1,10 +1,15 @@
 //! PJRT runtime: load AOT artifacts (HLO text), compile once, execute on
 //! the hot path.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! Pattern follows the xla_extension load_hlo flow: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute_b`. HLO *text* is the interchange format
 //! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos; see aot.py).
+//!
+//! In this offline build `xla` resolves to [`crate::xla`], a stand-in for
+//! the native bindings: buffers/literals are fully functional, compilation
+//! errors out with a clear message (see that module's docs for the swap
+//! path back to the real PJRT).
 //!
 //! Static tensors (graph arrays, features) are uploaded once as device
 //! buffers and reused across steps — mirroring DGL keeping graph+features
@@ -18,6 +23,8 @@ use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use anyhow::{ensure, Context, Result};
+
+use crate::xla;
 
 pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
 

@@ -11,8 +11,13 @@
 //!
 //! [`reservoir`] provides the paper's Alg. 1 uniform-without-replacement
 //! sampler (used for validation; see the substitution note in DESIGN.md §3).
+//! [`parallel`] shards the frontier across a scoped-thread worker pool —
+//! bitwise identical output at any thread count.
 
+pub mod parallel;
 pub mod reservoir;
+
+pub use parallel::ParallelSampler;
 
 use crate::graph::Csr;
 use crate::rng::rand_counter;

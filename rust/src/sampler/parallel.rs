@@ -1,0 +1,252 @@
+//! Multi-threaded frontier sampler — the parallel half of the host
+//! pipeline (SALIENT's "parallel batch preparation", arXiv 2110.08450,
+//! applied to this repo's counter-RNG sampler).
+//!
+//! Because [`crate::rng::rand_counter`] is a pure function of
+//! `(base, node, hop, slot)`, every output cell of a frontier sample is
+//! independent of evaluation order. The parallel sampler therefore only
+//! has to preserve the *write layout*: the frontier is cut into
+//! contiguous, degree-balanced shards ([`crate::graph::shard`]), each
+//! worker fills a disjoint `&mut` slice of the output tensor, and the
+//! result is **bitwise identical** to the serial sampler at any thread
+//! count (pinned by the tests below and `rust/tests/pipeline.rs`).
+//!
+//! Workers are scoped threads spawned per call — a hand-rolled fork/join
+//! pool with no queue, no locks, and no `unsafe`; for the frontier sizes
+//! of the paper's grid (≥ 512 rows × 11–16 columns) the spawn cost is
+//! well under the sampling work per shard. Tiny frontiers fall back to
+//! the serial path via [`MIN_ROWS_PER_WORKER`].
+
+use crate::graph::{shard, Csr};
+
+use super::{sample_neighbors, Block1, Block2};
+
+/// Below this many frontier rows per worker, thread spawn overhead beats
+/// the parallel speedup and the sampler degrades to fewer workers (the
+/// output is identical either way).
+pub const MIN_ROWS_PER_WORKER: usize = 64;
+
+/// A frontier sampler running on `threads` scoped workers.
+#[derive(Clone, Debug)]
+pub struct ParallelSampler {
+    threads: usize,
+}
+
+impl ParallelSampler {
+    /// `threads == 0` selects the machine's available parallelism.
+    pub fn new(threads: usize) -> Self {
+        let t = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        ParallelSampler { threads: t.max(1) }
+    }
+
+    /// The serial sampler (1 worker) as a `ParallelSampler`.
+    pub fn serial() -> Self {
+        ParallelSampler { threads: 1 }
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Workers actually worth spawning for a frontier of `rows` rows.
+    fn workers_for(&self, rows: usize) -> usize {
+        self.threads.min((rows / MIN_ROWS_PER_WORKER).max(1))
+    }
+
+    /// Parallel [`super::sample_frontier`]: row-major `[frontier.len(), k]`,
+    /// -1 padded, bitwise identical to the serial path.
+    pub fn sample_frontier(&self, csr: &Csr, frontier: &[i32], k: usize,
+                           base: u64, hop: u64) -> Vec<i32> {
+        let workers = self.workers_for(frontier.len());
+        if workers == 1 || k == 0 {
+            return super::sample_frontier(csr, frontier, k, base, hop);
+        }
+        let mut out = vec![-1i32; frontier.len() * k];
+        let plan = shard::plan_frontier_shards(csr, frontier, k, workers);
+        std::thread::scope(|s| {
+            let mut rest: &mut [i32] = &mut out;
+            for r in plan {
+                let take = (r.end - r.start) * k;
+                let slab = std::mem::take(&mut rest);
+                let (chunk, tail) = slab.split_at_mut(take);
+                rest = tail;
+                let rows = &frontier[r];
+                if rows.is_empty() {
+                    continue;
+                }
+                s.spawn(move || {
+                    for (i, &u) in rows.iter().enumerate() {
+                        sample_neighbors(csr, u, k, base, hop,
+                                         &mut chunk[i * k..(i + 1) * k]);
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    /// Parallel frontier build: `[seeds.len(), 1 + k]` with column 0 the
+    /// seed and columns 1.. its hop-0 samples (the `f1` layout).
+    fn build_frontier(&self, csr: &Csr, seeds: &[i32], k: usize,
+                      base: u64) -> Vec<i32> {
+        let f1w = 1 + k;
+        let mut f1 = vec![-1i32; seeds.len() * f1w];
+        let workers = self.workers_for(seeds.len());
+        if workers == 1 {
+            for (bi, &r) in seeds.iter().enumerate() {
+                f1[bi * f1w] = r;
+                sample_neighbors(csr, r, k, base, 0,
+                                 &mut f1[bi * f1w + 1..(bi + 1) * f1w]);
+            }
+            return f1;
+        }
+        let plan = shard::plan_frontier_shards(csr, seeds, k, workers);
+        std::thread::scope(|s| {
+            let mut rest: &mut [i32] = &mut f1;
+            for r in plan {
+                let take = (r.end - r.start) * f1w;
+                let slab = std::mem::take(&mut rest);
+                let (chunk, tail) = slab.split_at_mut(take);
+                rest = tail;
+                let rows = &seeds[r];
+                if rows.is_empty() {
+                    continue;
+                }
+                s.spawn(move || {
+                    for (i, &u) in rows.iter().enumerate() {
+                        chunk[i * f1w] = u;
+                        sample_neighbors(csr, u, k, base, 0,
+                                         &mut chunk[i * f1w + 1..(i + 1) * f1w]);
+                    }
+                });
+            }
+        });
+        f1
+    }
+
+    /// Parallel [`super::build_block2`] (bitwise identical).
+    pub fn build_block2(&self, csr: &Csr, seeds: &[i32], k1: usize, k2: usize,
+                        base: u64) -> Block2 {
+        if self.threads == 1 {
+            return super::build_block2(csr, seeds, k1, k2, base);
+        }
+        let f1 = self.build_frontier(csr, seeds, k1, base);
+        let s2 = self.sample_frontier(csr, &f1, k2, base, 1);
+        Block2 { f1, s2, batch: seeds.len(), k1, k2 }
+    }
+
+    /// Parallel [`super::build_block1`] (bitwise identical).
+    pub fn build_block1(&self, csr: &Csr, seeds: &[i32], k: usize,
+                        base: u64) -> Block1 {
+        if self.threads == 1 {
+            return super::build_block1(csr, seeds, k, base);
+        }
+        Block1 {
+            f1: self.build_frontier(csr, seeds, k, base),
+            batch: seeds.len(),
+            k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{builtin_spec, Dataset};
+    use crate::rng::SplitMix64;
+
+    fn test_graph() -> Csr {
+        Dataset::generate(builtin_spec("tiny").unwrap()).unwrap().graph
+    }
+
+    fn random_seeds(csr: &Csr, n: usize, seed: u64) -> Vec<i32> {
+        let mut r = SplitMix64::new(seed);
+        (0..n).map(|_| r.next_below(csr.n as u64) as i32).collect()
+    }
+
+    #[test]
+    fn frontier_bitwise_identical_across_thread_counts() {
+        let csr = test_graph();
+        // include invalid rows like a padded f1 frontier would
+        let mut frontier = random_seeds(&csr, 400, 3);
+        frontier[7] = -1;
+        frontier[123] = -1;
+        let serial = crate::sampler::sample_frontier(&csr, &frontier, 5, 99, 1);
+        for threads in [1usize, 2, 3, 8, 16] {
+            let par = ParallelSampler::new(threads)
+                .sample_frontier(&csr, &frontier, 5, 99, 1);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn block2_bitwise_identical_across_thread_counts() {
+        let csr = test_graph();
+        let seeds = random_seeds(&csr, 256, 11);
+        let serial = crate::sampler::build_block2(&csr, &seeds, 4, 3, 42);
+        for threads in [1usize, 2, 8] {
+            let par = ParallelSampler::new(threads)
+                .build_block2(&csr, &seeds, 4, 3, 42);
+            assert_eq!(par.f1, serial.f1, "f1 differs at threads={threads}");
+            assert_eq!(par.s2, serial.s2, "s2 differs at threads={threads}");
+            assert_eq!((par.batch, par.k1, par.k2),
+                       (serial.batch, serial.k1, serial.k2));
+        }
+    }
+
+    #[test]
+    fn block1_bitwise_identical_across_thread_counts() {
+        let csr = test_graph();
+        let seeds = random_seeds(&csr, 256, 13);
+        let serial = crate::sampler::build_block1(&csr, &seeds, 6, 7);
+        for threads in [1usize, 2, 8] {
+            let par = ParallelSampler::new(threads)
+                .build_block1(&csr, &seeds, 6, 7);
+            assert_eq!(par.f1, serial.f1, "threads={threads}");
+            assert_eq!((par.batch, par.k), (serial.batch, serial.k));
+        }
+    }
+
+    #[test]
+    fn tiny_frontiers_take_the_serial_path() {
+        let csr = test_graph();
+        let seeds = random_seeds(&csr, 8, 5);
+        let s = ParallelSampler::new(8);
+        assert_eq!(s.workers_for(seeds.len()), 1);
+        let serial = crate::sampler::build_block2(&csr, &seeds, 3, 2, 1);
+        let par = s.build_block2(&csr, &seeds, 3, 2, 1);
+        assert_eq!(par.f1, serial.f1);
+        assert_eq!(par.s2, serial.s2);
+    }
+
+    #[test]
+    fn zero_threads_means_auto() {
+        assert!(ParallelSampler::new(0).threads() >= 1);
+        assert_eq!(ParallelSampler::serial().threads(), 1);
+    }
+
+    /// Property: random frontiers, fanouts, and thread counts always match
+    /// the serial sampler bitwise.
+    #[test]
+    fn prop_parallel_matches_serial() {
+        let csr = test_graph();
+        let mut r = SplitMix64::new(77);
+        for _ in 0..25 {
+            let n = 65 + r.next_below(400) as usize;
+            let k = 1 + r.next_below(8) as usize;
+            let base = r.next_u64();
+            let frontier = random_seeds(&csr, n, r.next_u64());
+            let serial =
+                crate::sampler::sample_frontier(&csr, &frontier, k, base, 0);
+            let threads = 1 + r.next_below(8) as usize;
+            let par = ParallelSampler::new(threads)
+                .sample_frontier(&csr, &frontier, k, base, 0);
+            assert_eq!(par, serial, "n={n} k={k} threads={threads}");
+        }
+    }
+}

@@ -1,0 +1,365 @@
+//! In-crate stand-in for the `xla` (PJRT / xla_extension) bindings.
+//!
+//! The original build linked the vendored `xla` crate (xla_extension 0.5.1)
+//! to compile and dispatch the AOT-lowered HLO artifacts. That native
+//! dependency is not available in this offline build, so this module
+//! provides the exact API surface [`crate::runtime`] and
+//! [`crate::coordinator`] consume, with honest semantics:
+//!
+//! * literals and device "buffers" are real host-side containers (typed
+//!   byte storage with shape/dtype bookkeeping), so upload paths, size
+//!   accounting, and dtype conversion behave correctly;
+//! * `PjRtClient::compile` returns an error — there is no HLO compiler
+//!   here, and faking execution would corrupt every measurement. The
+//!   host-side pipeline (dataset generation, sampling, sharding, prefetch,
+//!   the `throughput` bench mode, the analytic memory model) is fully
+//!   functional without it.
+//!
+//! Swapping the real bindings back in is mechanical: delete this module
+//! and replace the `use crate::xla;` imports in `runtime`, `coordinator`,
+//! and `coordinator::profile` with the external crate.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring the bindings' error enum (string-backed here).
+#[derive(Debug)]
+pub struct XlaError {
+    msg: String,
+}
+
+impl XlaError {
+    fn new(msg: impl Into<String>) -> Self {
+        XlaError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla (stub): {}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// XLA element types used by the AOT contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+    U64,
+    Bf16,
+    F16,
+}
+
+impl PrimitiveType {
+    pub fn byte_size(&self) -> usize {
+        match self {
+            PrimitiveType::F32 | PrimitiveType::S32 => 4,
+            PrimitiveType::U64 => 8,
+            PrimitiveType::Bf16 | PrimitiveType::F16 => 2,
+        }
+    }
+}
+
+/// Host native types that can back a literal.
+pub trait NativeType: Copy {
+    const TY: PrimitiveType;
+    fn write_bytes(self, out: &mut Vec<u8>);
+    fn read_bytes(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: PrimitiveType = PrimitiveType::F32;
+    fn write_bytes(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_bytes(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: PrimitiveType = PrimitiveType::S32;
+    fn write_bytes(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_bytes(bytes: &[u8]) -> Self {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for u64 {
+    const TY: PrimitiveType = PrimitiveType::U64;
+    fn write_bytes(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_bytes(bytes: &[u8]) -> Self {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&bytes[..8]);
+        u64::from_le_bytes(b)
+    }
+}
+
+/// A host literal: typed byte storage + dims, or a tuple of literals.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: PrimitiveType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut bytes = Vec::with_capacity(data.len() * T::TY.byte_size());
+        for &v in data {
+            v.write_bytes(&mut bytes);
+        }
+        Literal {
+            ty: T::TY,
+            dims: vec![data.len() as i64],
+            data: bytes,
+            tuple: None,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<i64>().max(0) as usize
+    }
+
+    /// Total payload bytes (sum over leaves for tuples).
+    pub fn size_bytes(&self) -> usize {
+        match &self.tuple {
+            Some(parts) => parts.iter().map(Literal::size_bytes).sum(),
+            None => self.data.len(),
+        }
+    }
+
+    /// Reshape to new dims with the same element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if self.tuple.is_some() {
+            return Err(XlaError::new("cannot reshape a tuple literal"));
+        }
+        let new_count = dims.iter().product::<i64>().max(0) as usize;
+        if new_count != self.element_count() {
+            return Err(XlaError::new(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { ty: self.ty, dims: dims.to_vec(), data: self.data.clone(), tuple: None })
+    }
+
+    /// Element-type conversion. Supports the identity and the f32 -> bf16
+    /// path the runtime uses (round-to-nearest-even, like the kernels).
+    pub fn convert(&self, ty: PrimitiveType) -> Result<Literal> {
+        if self.tuple.is_some() {
+            return Err(XlaError::new("cannot convert a tuple literal"));
+        }
+        if ty == self.ty {
+            return Ok(self.clone());
+        }
+        match (self.ty, ty) {
+            (PrimitiveType::F32, PrimitiveType::Bf16) => {
+                let mut out = Vec::with_capacity(self.element_count() * 2);
+                for chunk in self.data.chunks_exact(4) {
+                    let x = f32::read_bytes(chunk);
+                    let bits = x.to_bits();
+                    let bf16 = if x.is_nan() {
+                        0x7FC0u16
+                    } else {
+                        let round = 0x7FFF + ((bits >> 16) & 1);
+                        ((bits.wrapping_add(round)) >> 16) as u16
+                    };
+                    out.extend_from_slice(&bf16.to_le_bytes());
+                }
+                Ok(Literal { ty, dims: self.dims.clone(), data: out, tuple: None })
+            }
+            (from, to) => Err(XlaError::new(format!(
+                "conversion {from:?} -> {to:?} not supported by the stub"
+            ))),
+        }
+    }
+
+    /// First element, checked against the requested native type.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        if self.ty != T::TY {
+            return Err(XlaError::new(format!(
+                "type mismatch: literal is {:?}", self.ty
+            )));
+        }
+        let sz = T::TY.byte_size();
+        if self.data.len() < sz {
+            return Err(XlaError::new("empty literal"));
+        }
+        Ok(T::read_bytes(&self.data[..sz]))
+    }
+
+    /// Full payload as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(XlaError::new(format!(
+                "type mismatch: literal is {:?}", self.ty
+            )));
+        }
+        let sz = T::TY.byte_size();
+        Ok(self.data.chunks_exact(sz).map(T::read_bytes).collect())
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.tuple {
+            Some(parts) => Ok(parts.clone()),
+            None => Err(XlaError::new("literal is not a tuple")),
+        }
+    }
+}
+
+/// A "device" buffer — host-resident here; keeps upload paths type-correct.
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Synchronized device-to-host copy.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Parsed HLO module (text retained for diagnostics only).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    /// HLO text size, reported in the compile error for context.
+    bytes: usize,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError::new(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { bytes: text.len() })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    bytes: usize,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { bytes: proto.bytes }
+    }
+}
+
+/// A compiled executable. Never constructed by the stub (compile errors),
+/// but the type must exist for the runtime's executable cache.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<L: Borrow<PjRtBuffer>>(
+        &self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::new(
+            "stub backend cannot execute; rebuild with the real PJRT bindings"))
+    }
+}
+
+/// PJRT client. Buffer management works; compilation is unavailable.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::new(format!(
+            "cannot compile HLO ({} bytes): the PJRT bindings (xla_extension) \
+             are not vendored in this build. Host-side subcommands \
+             (gen/memory/throughput) and all pure-rust tests remain available",
+            comp.bytes
+        )))
+    }
+
+    /// Upload a typed host slice as a buffer; dims must match the length.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self, data: &[T], dims: &[usize], _device: Option<usize>)
+        -> Result<PjRtBuffer> {
+        let count: usize = dims.iter().product();
+        if count != data.len() {
+            return Err(XlaError::new(format!(
+                "buffer_from_host_buffer: dims {:?} ({} elements) vs data len {}",
+                dims, count, data.len()
+            )));
+        }
+        let lit = Literal::vec1(data);
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let lit = if dims.len() == 1 {
+            lit
+        } else {
+            Literal { ty: lit.ty, dims: dims_i64, data: lit.data, tuple: None }
+        };
+        Ok(PjRtBuffer { literal: lit })
+    }
+
+    /// Upload an existing literal as a buffer.
+    pub fn buffer_from_host_literal(
+        &self, _device: Option<usize>, lit: &Literal) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { literal: lit.clone() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_sizes() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.size_bytes(), 16);
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(lit.get_first_element::<i32>().is_err());
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.size_bytes(), 16);
+        assert!(lit.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn bf16_conversion_matches_runtime_helper() {
+        let xs = [1.0f32, -3.5, 0.1, f32::NAN];
+        let lit = Literal::vec1(&xs).convert(PrimitiveType::Bf16).unwrap();
+        assert_eq!(lit.data, crate::runtime::f32_to_bf16_bytes(&xs));
+    }
+
+    #[test]
+    fn client_buffers_check_dims() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.buffer_from_host_buffer(&[1i32, 2], &[2], None).is_ok());
+        assert!(c.buffer_from_host_buffer(&[1i32, 2], &[3], None).is_err());
+        // scalar: empty dims = one element (product of [] is 1)
+        assert!(c.buffer_from_host_buffer(&[7.0f32], &[], None).is_ok());
+    }
+
+    #[test]
+    fn compile_is_an_explicit_error() {
+        let c = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto { bytes: 10 });
+        let err = c.compile(&comp).unwrap_err().to_string();
+        assert!(err.contains("stub") || err.contains("not vendored"), "{err}");
+    }
+}

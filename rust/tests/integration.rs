@@ -38,6 +38,8 @@ fn tiny_cfg(variant: Variant, hops: u32, seed: u64) -> TrainConfig {
         amp: true,
         save_indices: true,
         seed,
+        threads: 1,
+        prefetch: false,
     }
 }
 
@@ -98,6 +100,25 @@ fn training_is_bitwise_deterministic() {
     assert_eq!(a, b, "same seed must replay bitwise");
     let c = losses(43, &mut cache);
     assert_ne!(a, c, "different seed must differ");
+}
+
+/// The pipeline knobs must not change training: 8 sampler threads +
+/// prefetch must replay the serial loss sequence bitwise.
+#[test]
+fn parallel_prefetch_training_matches_serial() {
+    let Some((_serial, rt)) = runtime() else { return };
+    let mut cache = DatasetCache::new();
+    let losses = |cfg: TrainConfig, cache: &mut DatasetCache| -> Vec<f64> {
+        let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
+        (0..12).map(|_| tr.step().unwrap().loss).collect()
+    };
+    let serial = losses(tiny_cfg(Variant::Dgl, 2, 42), &mut cache);
+    let mut fast = tiny_cfg(Variant::Dgl, 2, 42);
+    fast.threads = 8;
+    fast.prefetch = true;
+    let pipelined = losses(fast, &mut cache);
+    assert_eq!(serial, pipelined,
+               "threads/prefetch changed the training trajectory");
 }
 
 #[test]
@@ -197,6 +218,8 @@ fn bf16_feature_artifact_trains() {
         amp: true,
         save_indices: true,
         seed: 42,
+        threads: 1,
+        prefetch: false,
     };
     let mut tr = Trainer::new_named(
         &rt, &mut cache, cfg,
