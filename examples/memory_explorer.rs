@@ -57,6 +57,7 @@ fn main() -> Result<()> {
                     seed: 42,
                     threads: 1,
                     prefetch: false,
+                    backend: Default::default(),
                 };
                 Ok(run_config(&rt, &mut cache, cfg, 1, 5)?
                     .peak_transient_bytes)

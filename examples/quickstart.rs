@@ -1,13 +1,14 @@
 //! Quickstart: train GraphSAGE with the fused sample+aggregate operator.
 //!
 //! ```sh
-//! make artifacts            # once: AOT-compile the kernels/models
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Walks the whole public API surface on the `tiny` dataset: load the PJRT
-//! runtime, generate a dataset, train with the FuseSampleAgg variant for a
-//! few steps, compare against the DGL-like baseline, and evaluate.
+//! Walks the whole public API surface on the `tiny` dataset: generate a
+//! dataset, train with the FuseSampleAgg variant for a few steps, compare
+//! against the DGL-like baseline, and evaluate. No artifacts needed — the
+//! default `auto` backend runs the native CPU engine when the AOT/PJRT
+//! path is unavailable (`make artifacts` + real bindings switch it over).
 
 use anyhow::Result;
 use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Trainer, Variant};
@@ -31,6 +32,7 @@ fn main() -> Result<()> {
         seed: 42,
         threads: 1,                 // host sampler workers (0 = auto)
         prefetch: false,            // overlap sampling with dispatch
+        backend: Default::default(),    // auto: PJRT, else native engine
     };
 
     // 3. train for 40 steps

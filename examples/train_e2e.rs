@@ -52,6 +52,7 @@ fn main() -> Result<()> {
         seed: 42,
         threads,
         prefetch,
+        backend: Default::default(),
     };
     let total = Timer::start();
     let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;

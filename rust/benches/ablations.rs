@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
                 variant, hops: 2, dataset: "arxiv_sim".into(),
                 k1: 15, k2: 10, batch: 1024, amp, save_indices: true,
                 seed: 42, threads: 1, prefetch: false,
+                backend: Default::default(),
             };
             let r = run(&mut cache, cfg)?;
             let _ = writeln!(out, "  amp={:<5} {:<4}: {:>8.2} ms/step", amp,
@@ -61,6 +62,7 @@ fn main() -> anyhow::Result<()> {
                     variant, hops, dataset: ds.into(), k1: 10, k2,
                     batch: 1024, amp: true, save_indices: true, seed: 42,
                     threads: 1, prefetch: false,
+                    backend: Default::default(),
                 };
                 let r = run(&mut cache, cfg)?;
                 let _ = writeln!(out, "  {:<13} {}-hop {:<4}: {:>8.2} ms/step \
@@ -81,6 +83,7 @@ fn main() -> anyhow::Result<()> {
             variant: Variant::Fsa, hops: 2, dataset: "products_sim".into(),
             k1: 15, k2: 10, batch: 1024, amp: true, save_indices: save,
             seed: 42, threads: 1, prefetch: false,
+            backend: Default::default(),
         };
         let r = run(&mut cache, cfg)?;
         let _ = writeln!(out, "  save_indices={:<5}: {:>8.2} ms/step \
@@ -106,6 +109,7 @@ fn main() -> anyhow::Result<()> {
                 dataset: "products_sim".into(), k1: 15, k2: 10, batch: 1024,
                 amp: true, save_indices: true, seed: 42,
                 threads: 1, prefetch: false,
+                backend: Default::default(),
             };
             let mut tr = Trainer::new_named(rt2, &mut cache, cfg, artifact)?;
             let timings = measure(&mut tr, warmup, steps)?;

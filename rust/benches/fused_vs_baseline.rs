@@ -1,0 +1,65 @@
+//! Bench: fused sample+aggregate vs block-materializing baseline on the
+//! **native CPU engine** — the repo's reproduction of the paper's headline
+//! comparison, runnable with no artifacts and no PJRT bindings.
+//!
+//! Runs both variants over the three `*_sim` datasets at the paper's main
+//! cell (fanout 15x10, batch 1024), reports per-step time, speedup, and
+//! *measured* peak transient bytes, and writes the cross-PR trajectory
+//! artifact `BENCH_native.json` at the repo root. Scale down with
+//! FSA_BENCH_QUICK=1 / FSA_BENCH_STEPS / FSA_BENCH_SEEDS.
+
+use fusesampleagg::bench::{self, env_overrides, save_exhibit, Grid};
+use fusesampleagg::coordinator::DatasetCache;
+use fusesampleagg::runtime::{BackendChoice, Runtime};
+use fusesampleagg::util;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+    let grid = env_overrides(Grid {
+        datasets: vec!["arxiv_sim".into(), "reddit_sim".into(),
+                       "products_sim".into()],
+        fanouts: vec![(15, 10)],
+        batches: vec![1024],
+        steps: 20,
+        warmup: 3,
+        seeds: vec![42, 43, 44],
+        backend: BackendChoice::Native,
+        ..Grid::default()
+    });
+
+    let rows = bench::run_grid(&rt, &mut cache, &grid, |r| {
+        eprintln!("  {:<14} {:<4} b{} seed {}: {:>8.2} ms/step \
+                   ({:.1} MB transient)",
+                  r.dataset, r.variant, r.batch, r.repeat_seed, r.step_ms,
+                  util::bytes_to_mb(r.peak_transient_bytes));
+    })?;
+
+    let json = bench::native_bench_json(&rows);
+    let repo = util::find_repo_root()
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    std::fs::write(repo.join("BENCH_native.json"), format!("{json}\n"))?;
+
+    // human-readable exhibit with the acceptance-shaped summary
+    let mut out = String::from(
+        "fused vs baseline — native CPU engine, fanout 15x10, batch 1024\n");
+    let empty = Vec::new();
+    let cells = json.get("cells").and_then(|c| c.as_arr()).unwrap_or(&empty);
+    out.push_str(&format!(
+        "{:<14} {:>12} {:>12} {:>9} {:>12} {:>12} {:>9}\n",
+        "dataset", "fused ms", "base ms", "speedup", "fused MB", "base MB",
+        "mem x"));
+    for cell in cells {
+        let f = |k: &str| cell.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        out.push_str(&format!(
+            "{:<14} {:>12.2} {:>12.2} {:>8.2}x {:>12.2} {:>12.2} {:>8.1}x\n",
+            cell.get("dataset").and_then(|v| v.as_str()).unwrap_or("?"),
+            f("fused_step_ms"), f("baseline_step_ms"), f("speedup"),
+            util::bytes_to_mb(f("fused_peak_transient_bytes") as u64),
+            util::bytes_to_mb(f("baseline_peak_transient_bytes") as u64),
+            f("transient_ratio")));
+    }
+    save_exhibit("fused_vs_baseline", &out);
+    println!("wrote {}", repo.join("BENCH_native.json").display());
+    Ok(())
+}

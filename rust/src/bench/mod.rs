@@ -12,8 +12,8 @@ pub mod throughput;
 use anyhow::Result;
 
 use crate::coordinator::{measure, DatasetCache, TrainConfig, Trainer, Variant};
-use crate::metrics::{median, BenchRow};
-use crate::runtime::Runtime;
+use crate::metrics::{median, median_over_repeats, BenchRow};
+use crate::runtime::{BackendChoice, Runtime};
 
 /// Grid specification (defaults = the paper's main grid, CPU-scaled).
 #[derive(Clone, Debug)]
@@ -32,6 +32,9 @@ pub struct Grid {
     pub threads: usize,
     /// Overlap host sampling with dispatch (paper protocol: off).
     pub prefetch: bool,
+    /// Execution backend for every cell (default auto: PJRT when
+    /// artifacts compile, native CPU engine otherwise).
+    pub backend: BackendChoice,
 }
 
 impl Default for Grid {
@@ -49,6 +52,7 @@ impl Default for Grid {
             hops: 2,
             threads: 1,
             prefetch: false,
+            backend: BackendChoice::Auto,
         }
     }
 }
@@ -182,6 +186,7 @@ pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
                             seed,
                             threads: grid.threads,
                             prefetch: grid.prefetch,
+                            backend: grid.backend,
                         };
                         let row = run_config(rt, cache, cfg, grid.warmup,
                                              grid.steps)?;
@@ -193,6 +198,77 @@ pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
         }
     }
     Ok(rows)
+}
+
+/// Reduce fused-vs-baseline rows to the `BENCH_native.json` trajectory
+/// artifact: one cell per (dataset, fanout, batch) with the median step
+/// time, throughput, and peak transient bytes of each variant plus the
+/// fused-over-baseline ratios. Written from `fsa bench-grid` native runs
+/// and the `fused_vs_baseline` bench target so the perf numbers are
+/// comparable across PRs.
+pub fn native_bench_json(rows: &[BenchRow]) -> crate::json::Value {
+    use crate::json::Value;
+    use std::collections::BTreeMap;
+
+    let med = median_over_repeats(rows);
+    let mut cells: BTreeMap<(String, u32, u32, u32),
+                            (Option<BenchRow>, Option<BenchRow>)> =
+        BTreeMap::new();
+    for r in med {
+        let key = (r.dataset.clone(), r.k1, r.k2, r.batch);
+        let slot = cells.entry(key).or_default();
+        match r.variant.as_str() {
+            "fsa" => slot.0 = Some(r),
+            "dgl" => slot.1 = Some(r),
+            _ => {}
+        }
+    }
+
+    let num = Value::Num;
+    let mut out_cells = Vec::new();
+    for ((dataset, k1, k2, batch), (fsa, dgl)) in cells {
+        let mut obj = BTreeMap::new();
+        obj.insert("dataset".into(), Value::Str(dataset));
+        obj.insert("k1".into(), num(k1 as f64));
+        obj.insert("k2".into(), num(k2 as f64));
+        obj.insert("batch".into(), num(batch as f64));
+        if let Some(f) = &fsa {
+            obj.insert("fused_step_ms".into(), num(f.step_ms));
+            obj.insert("fused_steps_per_s".into(),
+                       num(1e3 / f.step_ms.max(1e-9)));
+            obj.insert("fused_peak_transient_bytes".into(),
+                       num(f.peak_transient_bytes as f64));
+            obj.insert("fused_loss".into(), num(f.loss));
+        }
+        if let Some(d) = &dgl {
+            obj.insert("baseline_step_ms".into(), num(d.step_ms));
+            obj.insert("baseline_steps_per_s".into(),
+                       num(1e3 / d.step_ms.max(1e-9)));
+            obj.insert("baseline_peak_transient_bytes".into(),
+                       num(d.peak_transient_bytes as f64));
+            obj.insert("baseline_loss".into(), num(d.loss));
+        }
+        if let (Some(f), Some(d)) = (&fsa, &dgl) {
+            obj.insert("speedup".into(),
+                       num(d.step_ms / f.step_ms.max(1e-9)));
+            obj.insert("transient_ratio".into(),
+                       num(d.peak_transient_bytes as f64
+                           / (f.peak_transient_bytes as f64).max(1.0)));
+        }
+        out_cells.push(Value::Obj(obj));
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Value::Str("fused_vs_baseline".into()));
+    root.insert("backend".into(), Value::Str("native".into()));
+    root.insert("cells".into(), Value::Arr(out_cells));
+    Value::Obj(root)
+}
+
+/// Write [`native_bench_json`] to `path`.
+pub fn write_native_json(rows: &[BenchRow],
+                         path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", native_bench_json(rows)))
 }
 
 #[cfg(test)]
@@ -215,5 +291,50 @@ mod tests {
         assert_eq!(Grid::fig2().batches, vec![128, 256, 512, 1024, 2048]);
         assert_eq!(Grid::fig3().fanouts.len(), 3);
         assert_eq!(Grid::fig3().batches, vec![1024]);
+    }
+
+    fn row(variant: &str, seed: u64, step_ms: f64, peak: u64) -> BenchRow {
+        BenchRow {
+            dataset: "tiny".into(),
+            variant: variant.into(),
+            hops: 2,
+            k1: 5,
+            k2: 3,
+            batch: 64,
+            amp: true,
+            repeat_seed: seed,
+            steps: 5,
+            step_ms,
+            sample_ms: 0.0,
+            upload_ms: 0.0,
+            execute_ms: step_ms,
+            pairs_per_s: 1.0,
+            nodes_per_s: 1.0,
+            peak_transient_bytes: peak,
+            loss: 1.0,
+        }
+    }
+
+    #[test]
+    fn native_json_pairs_variants_and_computes_ratios() {
+        let rows = vec![
+            row("fsa", 42, 1.0, 100),
+            row("fsa", 43, 1.2, 110),
+            row("dgl", 42, 3.0, 1000),
+            row("dgl", 43, 3.4, 1100),
+        ];
+        let v = native_bench_json(&rows);
+        assert_eq!(v.get("bench").unwrap().as_str(),
+                   Some("fused_vs_baseline"));
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        let speedup = cells[0].get("speedup").unwrap().as_f64().unwrap();
+        assert!((speedup - 3.2 / 1.1).abs() < 1e-9, "speedup {speedup}");
+        let ratio =
+            cells[0].get("transient_ratio").unwrap().as_f64().unwrap();
+        assert!(ratio > 9.0, "ratio {ratio}");
+        // round-trips through the writer grammar
+        let text = format!("{v}");
+        assert!(crate::json::parse(&text).is_ok(), "{text}");
     }
 }

@@ -1,12 +1,15 @@
 //! `throughput` bench mode — steps/sec and pipeline utilization of the
 //! host sampling/batch pipeline.
 //!
-//! This measures exactly the stage the tentpole parallelizes: seed
-//! scheduling → (sharded, multi-threaded) neighbor sampling → block
-//! materialization, with optional double-buffered prefetch. It needs **no
-//! AOT artifacts and no PJRT backend**: the device dispatch the prefetcher
-//! overlaps with is emulated by a fixed per-step sleep (`dispatch_ms`),
-//! standing in for the synchronized executable dispatch of a real step.
+//! This measures exactly the stage PR 1 parallelized: seed scheduling →
+//! (sharded, multi-threaded) neighbor sampling → block materialization,
+//! with optional double-buffered prefetch. It needs **no AOT artifacts
+//! and no PJRT backend**: by default the device dispatch the prefetcher
+//! overlaps with is emulated by a fixed per-step sleep (`dispatch_ms`);
+//! with `native: true` ([`ThroughputConfig`]) each step instead runs a
+//! *real* fwd+bwd+AdamW dispatch on the native CPU engine
+//! ([`crate::kernel::NativeBackend`]), so the overlap numbers reflect
+//! genuine compute and perf regressions in the engine fail the CI smoke.
 //!
 //! Reported metrics:
 //! * `steps_per_s` — timed steps per wall-clock second (headline);
@@ -22,8 +25,13 @@ use anyhow::{ensure, Result};
 
 use crate::coordinator::pipeline::{prepare_batch, BatchPrefetcher,
                                    BatchScheduler, HostWork};
+use crate::coordinator::{TrainConfig, Variant};
 use crate::gen::Dataset;
+use crate::kernel::NativeBackend;
+use crate::memory::MemoryMeter;
 use crate::metrics::{summarize, ThroughputRow, Timer};
+use crate::runtime::manifest::AdamwConfig;
+use crate::runtime::{Backend, BackendChoice, Manifest, StepInputs};
 use crate::sampler::ParallelSampler;
 
 /// One throughput-mode configuration.
@@ -40,14 +48,27 @@ pub struct ThroughputConfig {
     pub threads: usize,
     pub prefetch: bool,
     /// Emulated dispatch per step, ms (the device work prefetch overlaps).
+    /// Ignored when `native` is set.
     pub dispatch_ms: f64,
     pub seed: u64,
+    /// Dispatch real native-engine train steps instead of sleeping.
+    pub native: bool,
+    /// Variant for the native dispatch (and the host work it implies:
+    /// Dgl builds blocks, Fsa samples inside the kernel).
+    pub variant: Variant,
+    /// Model hidden width for native dispatch. Defaults to the builtin
+    /// manifest; `cmd_throughput` overrides from the runtime manifest so
+    /// the smoke measures the same model as `fsa train --backend native`.
+    pub hidden: usize,
+    /// Optimizer hyper-parameters for native dispatch (same source).
+    pub adamw: AdamwConfig,
 }
 
 impl ThroughputConfig {
     /// Defaults mirroring the paper's main grid cell (fanout 15-10,
     /// B=1024) with a dispatch stand-in in the CPU-step ballpark.
     pub fn new(dataset: &str) -> Self {
+        let builtin = Manifest::builtin();
         ThroughputConfig {
             dataset: dataset.to_string(),
             hops: 2,
@@ -60,6 +81,31 @@ impl ThroughputConfig {
             prefetch: false,
             dispatch_ms: 2.0,
             seed: 42,
+            native: false,
+            variant: Variant::Dgl,
+            hidden: builtin.hidden,
+            adamw: builtin.adamw,
+        }
+    }
+
+    /// The equivalent training configuration of this throughput run —
+    /// the single home of the knob→`NativeConfig` mapping
+    /// ([`TrainConfig::native_config`]), so the native dispatch here and
+    /// `fsa train --backend native` always measure the same model.
+    fn train_config(&self) -> TrainConfig {
+        TrainConfig {
+            variant: self.variant,
+            hops: self.hops,
+            dataset: self.dataset.clone(),
+            k1: self.k1,
+            k2: self.k2,
+            batch: self.batch,
+            amp: false, // throughput smoke measures the f32 storage path
+            save_indices: true,
+            seed: self.seed,
+            threads: self.threads,
+            prefetch: self.prefetch,
+            backend: BackendChoice::Native,
         }
     }
 }
@@ -68,7 +114,21 @@ impl ThroughputConfig {
 pub fn run_throughput(ds: Arc<Dataset>,
                       cfg: &ThroughputConfig) -> Result<ThroughputRow> {
     ensure!(cfg.steps > 0, "throughput: need at least one timed step");
-    let work = if cfg.hops == 2 { HostWork::Block2 } else { HostWork::Block1 };
+    let work = match (cfg.native, cfg.variant, cfg.hops) {
+        (true, Variant::Fsa, _) => HostWork::SeedsOnly,
+        (_, _, 2) => HostWork::Block2,
+        _ => HostWork::Block1,
+    };
+    let mut engine = if cfg.native {
+        Some(NativeBackend::new(
+            ds.clone(),
+            cfg.train_config().native_config(cfg.hidden),
+            cfg.adamw,
+        )?)
+    } else {
+        None
+    };
+    let mut meter = MemoryMeter::new();
     let mut sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)?;
     let sampler = ParallelSampler::new(cfg.threads);
     let mut prefetcher = if cfg.prefetch {
@@ -81,6 +141,7 @@ pub fn run_throughput(ds: Arc<Dataset>,
     let mut step_wall: Vec<f64> = Vec::with_capacity(cfg.steps);
     let mut critical: Vec<f64> = Vec::with_capacity(cfg.steps);
     let mut overlapped: Vec<f64> = Vec::with_capacity(cfg.steps);
+    let mut dispatched: Vec<f64> = Vec::with_capacity(cfg.steps);
     let mut wall = Timer::start();
 
     for step in 0..cfg.warmup + cfg.steps {
@@ -101,16 +162,36 @@ pub fn run_throughput(ds: Arc<Dataset>,
             None => (prepared.sample_ms, 0.0),
             Some(w) => (w, prepared.sample_ms),
         };
-        // the emulated synchronized dispatch the next batch overlaps with
-        if cfg.dispatch_ms > 0.0 {
-            std::thread::sleep(std::time::Duration::from_secs_f64(
-                cfg.dispatch_ms / 1e3));
+        // the synchronized dispatch the next batch overlaps with: a real
+        // native-engine train step, or the emulated fixed sleep
+        let disp = Timer::start();
+        match engine.as_mut() {
+            Some(eng) => {
+                let inp = StepInputs {
+                    seeds: &prepared.seeds,
+                    labels: &prepared.labels,
+                    base: prepared.base,
+                    block1: prepared.block1.as_ref(),
+                    block2: prepared.block2.as_ref(),
+                };
+                let out = eng.train_step(step, &inp, &mut meter)?;
+                ensure!(out.loss.is_finite(),
+                        "native dispatch produced a non-finite loss");
+                meter.reset_step();
+            }
+            None if cfg.dispatch_ms > 0.0 => {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    cfg.dispatch_ms / 1e3));
+            }
+            None => {}
         }
+        let disp_ms = disp.ms();
         std::hint::black_box(&prepared);
         if step >= cfg.warmup {
             step_wall.push(step_timer.ms());
             critical.push(crit);
             overlapped.push(over);
+            dispatched.push(disp_ms);
         }
     }
     let wall_s = wall.ms() / 1e3;
@@ -141,7 +222,11 @@ pub fn run_throughput(ds: Arc<Dataset>,
         step_ms: summarize(&step_wall).median,
         sample_ms: summarize(&critical).median,
         overlap_ms: summarize(&overlapped).median,
-        dispatch_ms: cfg.dispatch_ms,
+        dispatch_ms: if cfg.native {
+            summarize(&dispatched).median
+        } else {
+            cfg.dispatch_ms
+        },
         utilization,
     })
 }
@@ -222,6 +307,22 @@ mod tests {
         let r = run_throughput(tiny(), &cfg).unwrap();
         assert_eq!(r.hops, 1);
         assert!(r.steps_per_s > 0.0);
+    }
+
+    #[test]
+    fn native_dispatch_runs_real_steps_for_both_variants() {
+        for variant in [Variant::Dgl, Variant::Fsa] {
+            let cfg = ThroughputConfig { native: true, variant,
+                                         ..quick_cfg() };
+            let r = run_throughput(tiny(), &cfg).unwrap();
+            assert!(r.steps_per_s > 0.0, "{variant:?}");
+            assert!(r.dispatch_ms > 0.0,
+                    "{variant:?}: native dispatch must take real time");
+            if variant == Variant::Fsa {
+                // fused path samples inside the kernel: no host blocks
+                assert_eq!(r.sample_ms, 0.0);
+            }
+        }
     }
 
     #[test]

@@ -13,21 +13,28 @@
 //! the dispatch of step *t* (`TrainConfig::prefetch`, SALIENT-style).
 //! Seed order, base-seed schedule, and sampled neighborhoods are bitwise
 //! unchanged by either knob.
+//!
+//! The dispatch half goes through the [`Backend`] seam
+//! (`TrainConfig::backend`): `Pjrt` runs the AOT artifact, `Native` runs
+//! the in-crate CPU engine ([`crate::kernel`]), and `Auto` (default)
+//! tries PJRT and falls back to native — so training works end-to-end
+//! with no artifacts and no PJRT bindings.
 
 pub mod pipeline;
 pub mod profile;
 
 use std::collections::HashMap;
-use std::rc::Rc;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::gen::{builtin_spec, Dataset, Split};
-use crate::memory::{self, MemoryMeter, StepDims};
-use crate::metrics::Timer;
+use crate::kernel::{NativeBackend, NativeConfig};
+use crate::memory::MemoryMeter;
 use crate::rng::mix;
-use crate::runtime::{init_params, Executable, Runtime};
+use crate::runtime::backend::{Backend, BackendChoice, PjrtBackend,
+                              StepInputs};
+use crate::runtime::Runtime;
 use crate::sampler::{self, ParallelSampler};
 use crate::xla;
 
@@ -70,6 +77,9 @@ pub struct TrainConfig {
     /// Overlap host sampling of step t+1 with dispatch of step t on a
     /// background worker (double-buffered prefetch).
     pub prefetch: bool,
+    /// Execution backend (default [`BackendChoice::Auto`]: PJRT when an
+    /// artifact compiles, native CPU engine otherwise).
+    pub backend: BackendChoice,
 }
 
 impl TrainConfig {
@@ -89,6 +99,21 @@ impl TrainConfig {
             (Variant::Fsa, _) => HostWork::SeedsOnly,
         }
     }
+
+    /// The native-engine view of this configuration.
+    pub fn native_config(&self, hidden: usize) -> NativeConfig {
+        NativeConfig {
+            fused: self.variant == Variant::Fsa,
+            hops: self.hops,
+            k1: self.k1,
+            k2: self.k2,
+            amp: self.amp,
+            save_indices: self.save_indices,
+            seed: self.seed,
+            threads: self.threads,
+            hidden,
+        }
+    }
 }
 
 /// Timing breakdown of one training step.
@@ -102,9 +127,11 @@ pub struct StepTiming {
     /// step's dispatch (prefetch on; 0 otherwise). Not on the critical
     /// path and excluded from [`StepTiming::total_ms`].
     pub sample_overlap_ms: f64,
-    /// Per-step uploads: params/opt-state re-upload + batch tensors.
+    /// Per-step uploads: params/opt-state re-upload + batch tensors
+    /// (0 on the native backend — nothing crosses a bus).
     pub upload_ms: f64,
-    /// Synchronized executable dispatch (fwd+bwd+optimizer).
+    /// Synchronized dispatch (fwd+bwd+optimizer) — real compute on the
+    /// native backend, executable dispatch on PJRT.
     pub execute_ms: f64,
     /// Output literal handling (tuple decomposition, loss read-back).
     pub post_ms: f64,
@@ -112,8 +139,9 @@ pub struct StepTiming {
     pub loss: f64,
     /// Raw sampled (seed, neighbor) pairs this step (counted untimed).
     pub pairs: u64,
-    /// Peak transient bytes this step (measured uploads/outputs + analytic
-    /// executable intermediates).
+    /// Peak transient bytes this step — measured allocations on the
+    /// native backend; measured uploads/outputs + analytic executable
+    /// intermediates on PJRT.
     pub transient_bytes: u64,
 }
 
@@ -158,118 +186,96 @@ impl DatasetCache {
 pub struct Trainer<'rt> {
     rt: &'rt Runtime,
     pub cfg: TrainConfig,
-    exe: Rc<Executable>,
+    backend: Box<dyn Backend + 'rt>,
     pub ds: Arc<Dataset>,
-    // static device buffers
-    rowptr_buf: Option<xla::PjRtBuffer>,
-    col_buf: Option<xla::PjRtBuffer>,
-    x_buf: xla::PjRtBuffer,
-    // host-side model state (re-uploaded each step; both variants pay this)
-    params: Vec<xla::Literal>,
-    mstate: Vec<xla::Literal>,
-    vstate: Vec<xla::Literal>,
     pub step_count: usize,
     // host batch pipeline
     sched: BatchScheduler,
     sampler: ParallelSampler,
     prefetcher: Option<BatchPrefetcher>,
     pub meter: MemoryMeter,
-    dims: StepDims,
+}
+
+/// One-time note when `Auto` falls back from PJRT to the native engine.
+fn note_native_fallback(err: &anyhow::Error) {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        eprintln!("note: PJRT backend unavailable ({err:#}); \
+                   using the native CPU engine");
+    });
 }
 
 impl<'rt> Trainer<'rt> {
     pub fn new(rt: &'rt Runtime, cache: &mut DatasetCache,
                cfg: TrainConfig) -> Result<Trainer<'rt>> {
+        let ds = cache.get(rt, &cfg.dataset)?;
+        let backend: Box<dyn Backend + 'rt> = match cfg.backend {
+            BackendChoice::Native => Box::new(Self::native_backend(rt, &ds,
+                                                                   &cfg)?),
+            BackendChoice::Pjrt => Box::new(Self::pjrt_backend(rt, &ds,
+                                                               &cfg)?),
+            BackendChoice::Auto => match Self::pjrt_backend(rt, &ds, &cfg) {
+                Ok(b) => Box::new(b),
+                Err(e) => {
+                    note_native_fallback(&e);
+                    Box::new(Self::native_backend(rt, &ds, &cfg)?)
+                }
+            },
+        };
+        Self::with_backend(rt, cfg, ds, backend)
+    }
+
+    /// Build a trainer on an explicit PJRT artifact (e.g. a §Perf tile
+    /// variant) whose dims must match `cfg`.
+    pub fn new_named(rt: &'rt Runtime, cache: &mut DatasetCache,
+                     cfg: TrainConfig, artifact: &str) -> Result<Trainer<'rt>> {
+        let ds = cache.get(rt, &cfg.dataset)?;
+        let backend = PjrtBackend::new(
+            rt, &ds, artifact, cfg.variant == Variant::Fsa, cfg.hops,
+            cfg.batch, cfg.k1, cfg.k2, cfg.save_indices, cfg.seed)?;
+        Self::with_backend(rt, cfg, ds, Box::new(backend))
+    }
+
+    fn pjrt_backend(rt: &'rt Runtime, ds: &Arc<Dataset>,
+                    cfg: &TrainConfig) -> Result<PjrtBackend<'rt>> {
         let name = rt.manifest.find_train(
             &cfg.artifact_variant(), &cfg.dataset, cfg.k1, cfg.k2,
             cfg.batch, cfg.amp, cfg.save_indices)?.name.clone();
-        Self::new_named(rt, cache, cfg, &name)
+        PjrtBackend::new(rt, ds, &name, cfg.variant == Variant::Fsa,
+                         cfg.hops, cfg.batch, cfg.k1, cfg.k2,
+                         cfg.save_indices, cfg.seed)
     }
 
-    /// Build a trainer on an explicit artifact (e.g. a §Perf tile variant)
-    /// whose dims must match `cfg`.
-    pub fn new_named(rt: &'rt Runtime, cache: &mut DatasetCache,
-                     cfg: TrainConfig, artifact: &str) -> Result<Trainer<'rt>> {
-        let exe = rt.load(artifact)?;
-        let ds = cache.get(rt, &cfg.dataset)?;
+    fn native_backend(rt: &Runtime, ds: &Arc<Dataset>,
+                      cfg: &TrainConfig) -> Result<NativeBackend> {
+        NativeBackend::new(ds.clone(), cfg.native_config(rt.manifest.hidden),
+                           rt.manifest.adamw)
+    }
 
-        // static uploads (graph + features live on device, like DGL)
-        let n = ds.spec.n;
-        let needs_graph = cfg.variant == Variant::Fsa;
-        let rowptr_buf = if needs_graph {
-            Some(rt.buf_i32(&ds.graph.rowptr, &[n + 1])?)
-        } else {
-            None
-        };
-        let col_buf = if needs_graph {
-            Some(rt.buf_i32(&ds.graph.col, &[ds.graph.e_cap()])?)
-        } else {
-            None
-        };
-        // feature dtype follows the artifact contract (the fused 2-hop
-        // kernel dispatches on it — paper §4; bf16 halves gather traffic)
-        let x_dtype = exe
-            .spec
-            .inputs
-            .iter()
-            .find(|t| t.name == "x")
-            .map(|t| t.dtype)
-            .unwrap_or(crate::runtime::Dtype::F32);
-        let x_buf = match x_dtype {
-            crate::runtime::Dtype::Bf16 => {
-                rt.buf_bf16_from_f32(&ds.features, &[n, ds.spec.d])?
-            }
-            _ => rt.buf_f32(&ds.features, &[n, ds.spec.d])?,
-        };
-
-        // deterministic parameter init (identical across variants' seeds)
-        let np = exe.spec.n_params();
-        let pspecs = &exe.spec.inputs[..np];
-        let values = init_params(pspecs, cfg.seed);
-        let mut params = Vec::with_capacity(np);
-        let mut mstate = Vec::with_capacity(np);
-        let mut vstate = Vec::with_capacity(np);
-        for (s, vals) in pspecs.iter().zip(&values) {
-            params.push(lit_f32(vals, &s.shape)?);
-            mstate.push(lit_f32(&vec![0.0; vals.len()], &s.shape)?);
-            vstate.push(lit_f32(&vec![0.0; vals.len()], &s.shape)?);
-        }
-
+    fn with_backend(rt: &'rt Runtime, cfg: TrainConfig, ds: Arc<Dataset>,
+                    backend: Box<dyn Backend + 'rt>) -> Result<Trainer<'rt>> {
         let sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)?;
         let sampler = ParallelSampler::new(cfg.threads);
         let prefetcher = cfg.prefetch.then(|| {
             BatchPrefetcher::spawn(ds.clone(), cfg.host_work(), cfg.k1,
                                    cfg.k2, cfg.threads)
         });
-
-        let dims = StepDims {
-            batch: cfg.batch,
-            k1: cfg.k1,
-            k2: cfg.k2,
-            d: ds.spec.d,
-            hidden: rt.manifest.hidden,
-            classes: ds.spec.c,
-            tile: exe.spec.tile,
-        };
-
         Ok(Trainer {
             rt,
             cfg,
-            exe,
+            backend,
             ds,
-            rowptr_buf,
-            col_buf,
-            x_buf,
-            params,
-            mstate,
-            vstate,
             step_count: 0,
             sched,
             sampler,
             prefetcher,
             meter: MemoryMeter::new(),
-            dims,
         })
+    }
+
+    /// The execution backend actually in use ("native" | "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Next batch of seed nodes (reshuffles at epoch boundaries; identical
@@ -326,18 +332,13 @@ impl<'rt> Trainer<'rt> {
             &self.sampler, self.step_count, seeds, self.step_base_seed()))
     }
 
-    /// Upload, dispatch, and account one prepared batch.
+    /// Dispatch one prepared batch through the backend and account it.
     fn step_prepared(&mut self, prepared: PreparedBatch) -> Result<StepTiming> {
         let mut t = StepTiming::default();
-        let base = prepared.base;
         let b = self.cfg.batch;
-        let seeds: &[i32] = &prepared.seeds;
-        if seeds.len() != b {
-            bail!("expected {b} seeds, got {}", seeds.len());
+        if prepared.seeds.len() != b {
+            bail!("expected {b} seeds, got {}", prepared.seeds.len());
         }
-        let labels: &[i32] = &prepared.labels;
-        let block1: Option<&sampler::Block1> = prepared.block1.as_ref();
-        let block2: Option<&sampler::Block2> = prepared.block2.as_ref();
         match prepared.wait_ms {
             // synchronous build: sampling is the critical path
             None => t.sample_ms = prepared.sample_ms,
@@ -347,166 +348,121 @@ impl<'rt> Trainer<'rt> {
                 t.sample_overlap_ms = prepared.sample_ms;
             }
         }
+
+        // ---- synchronized dispatch through the backend seam
         self.meter.reset_step();
-
-        // ---- 2. per-step uploads (params/opt state + batch tensors);
-        // static buffers (graph, features) are passed by reference.
-        let timer = Timer::start();
-        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(24);
-        let mut upload_bytes = 0u64;
-        for lit in self.params.iter().chain(&self.mstate).chain(&self.vstate) {
-            owned.push(self.rt.buf_from_literal(lit)?);
-            upload_bytes += lit.size_bytes() as u64;
-        }
-        owned.push(self.rt.buf_scalar_f32(self.step_count as f32)?);
-        upload_bytes += 4;
-
-        // (owned-index | static-ref) arg plan, in manifest input order
-        enum Arg {
-            Owned(usize),
-            Rowptr,
-            Col,
-            X,
-        }
-        let mut plan: Vec<Arg> = (0..owned.len()).map(Arg::Owned).collect();
-        match (self.cfg.variant, self.cfg.hops) {
-            (Variant::Fsa, _) => {
-                plan.push(Arg::Rowptr);
-                plan.push(Arg::Col);
-                plan.push(Arg::X);
-                owned.push(self.rt.buf_i32(seeds, &[b])?);
-                plan.push(Arg::Owned(owned.len() - 1));
-                owned.push(self.rt.buf_i32(labels, &[b])?);
-                plan.push(Arg::Owned(owned.len() - 1));
-                owned.push(self.rt.buf_u64(&[base], &[1])?);
-                plan.push(Arg::Owned(owned.len() - 1));
-                upload_bytes += (2 * b * 4 + 8) as u64;
-            }
-            (Variant::Dgl, 2) => {
-                let blk = block2.expect("pipeline prepared no 2-hop block");
-                let f1w = 1 + self.cfg.k1;
-                plan.push(Arg::X);
-                owned.push(self.rt.buf_i32(&blk.f1, &[b, f1w])?);
-                plan.push(Arg::Owned(owned.len() - 1));
-                owned.push(self.rt.buf_i32(&blk.s2, &[b, f1w, self.cfg.k2])?);
-                plan.push(Arg::Owned(owned.len() - 1));
-                owned.push(self.rt.buf_i32(labels, &[b])?);
-                plan.push(Arg::Owned(owned.len() - 1));
-                upload_bytes +=
-                    (blk.f1.len() * 4 + blk.s2.len() * 4 + b * 4) as u64;
-            }
-            (Variant::Dgl, _) => {
-                let blk = block1.expect("pipeline prepared no 1-hop block");
-                let f1w = 1 + self.cfg.k1;
-                plan.push(Arg::X);
-                owned.push(self.rt.buf_i32(&blk.f1, &[b, f1w])?);
-                plan.push(Arg::Owned(owned.len() - 1));
-                owned.push(self.rt.buf_i32(labels, &[b])?);
-                plan.push(Arg::Owned(owned.len() - 1));
-                upload_bytes += (blk.f1.len() * 4 + b * 4) as u64;
-            }
-        }
-        let args: Vec<&xla::PjRtBuffer> = plan
-            .iter()
-            .map(|a| match a {
-                Arg::Owned(i) => &owned[*i],
-                Arg::Rowptr => self.rowptr_buf.as_ref().unwrap(),
-                Arg::Col => self.col_buf.as_ref().unwrap(),
-                Arg::X => &self.x_buf,
-            })
-            .collect();
-        t.upload_ms = timer.ms();
-        self.meter.alloc(upload_bytes);
-
-        // ---- 3. synchronized dispatch (fwd + bwd + AdamW in one artifact)
-        let timer = Timer::start();
-        let outputs = self.exe.run(&args).context("train step dispatch")?;
-        t.execute_ms = timer.ms();
-
-        // ---- 4. state update + loss read-back
-        let timer = Timer::start();
-        let np = self.exe.spec.n_params();
-        let mut outputs = outputs;
-        let loss_lit = outputs.pop().unwrap();
-        t.loss = loss_lit.get_first_element::<f32>()? as f64;
-        let vs = outputs.split_off(2 * np);
-        let ms = outputs.split_off(np);
-        self.params = outputs;
-        self.mstate = ms;
-        self.vstate = vs;
-        t.post_ms = timer.ms();
-
-        // transient accounting: measured uploads/outputs + analytic
-        // executable intermediates (DESIGN.md §3 meter)
-        let analytic = match (self.cfg.variant, self.cfg.hops) {
-            (Variant::Dgl, 2) => memory::baseline2_transient(&self.dims),
-            (Variant::Dgl, _) => memory::baseline1_transient(&self.dims),
-            (Variant::Fsa, 2) => {
-                memory::fused2_transient(&self.dims, self.cfg.save_indices)
-            }
-            (Variant::Fsa, _) => {
-                memory::fused1_transient(&self.dims, self.cfg.save_indices)
-            }
+        let inp = StepInputs {
+            seeds: &prepared.seeds,
+            labels: &prepared.labels,
+            base: prepared.base,
+            block1: prepared.block1.as_ref(),
+            block2: prepared.block2.as_ref(),
         };
-        self.meter.alloc(analytic.intermediates + self.exe.spec.output_bytes());
+        let out = self.backend.train_step(self.step_count, &inp,
+                                          &mut self.meter)?;
+        t.upload_ms = out.upload_ms;
+        t.execute_ms = out.execute_ms;
+        t.post_ms = out.post_ms;
+        t.loss = out.loss;
         t.transient_bytes = self.meter.peak();
         self.meter.reset_peak();
         self.meter.reset_step();
 
-        // untimed: raw sampled-pair count (paper's auxiliary metric)
-        t.pairs = match (self.cfg.variant, self.cfg.hops) {
-            (Variant::Dgl, 2) => {
-                sampler::block2_sampled_pairs(block2.unwrap())
-            }
-            (Variant::Dgl, _) => {
-                let blk = block1.unwrap();
-                let f1w = 1 + self.cfg.k1;
-                (0..b)
-                    .map(|bi| sampler::valid_pairs(
-                        &blk.f1[bi * f1w + 1..(bi + 1) * f1w]))
-                    .sum()
-            }
-            (Variant::Fsa, 2) => sampler::fused2_sampled_pairs(
-                &self.ds.graph, seeds, self.cfg.k1, self.cfg.k2, base),
-            (Variant::Fsa, _) => {
-                let s1 = sampler::sample_frontier(
-                    &self.ds.graph, seeds, self.cfg.k1, base, 0);
-                sampler::valid_pairs(&s1)
-            }
+        // untimed: raw sampled-pair count (paper's auxiliary metric) —
+        // fused native kernels count inline; other paths recount here
+        t.pairs = match out.pairs {
+            Some(p) => p,
+            None => match (self.cfg.variant, self.cfg.hops) {
+                (Variant::Dgl, 2) => sampler::block2_sampled_pairs(
+                    prepared.block2.as_ref().unwrap()),
+                (Variant::Dgl, _) => {
+                    let blk = prepared.block1.as_ref().unwrap();
+                    let f1w = 1 + self.cfg.k1;
+                    (0..b)
+                        .map(|bi| sampler::valid_pairs(
+                            &blk.f1[bi * f1w + 1..(bi + 1) * f1w]))
+                        .sum()
+                }
+                (Variant::Fsa, 2) => sampler::fused2_sampled_pairs(
+                    &self.ds.graph, &prepared.seeds, self.cfg.k1, self.cfg.k2,
+                    prepared.base),
+                (Variant::Fsa, _) => {
+                    let s1 = sampler::sample_frontier(
+                        &self.ds.graph, &prepared.seeds, self.cfg.k1,
+                        prepared.base, 0);
+                    sampler::valid_pairs(&s1)
+                }
+            },
         };
 
         self.step_count += 1;
         Ok(t)
     }
 
-    /// Current parameter literals (for eval / checkpoint inspection).
-    pub fn params(&self) -> &[xla::Literal] {
-        &self.params
+    /// Current parameters as host f32 tensors (canonical spec order).
+    pub fn params_f32(&self) -> Result<Vec<Vec<f32>>> {
+        self.backend.params_f32()
     }
 
-    /// Validation accuracy via the dataset's eval artifact (matching the
-    /// trainer's variant — fused forward for Fsa, block forward for Dgl).
-    pub fn evaluate(&self, max_nodes: usize) -> Result<f64> {
-        evaluate_params(self.rt, &self.ds, self.cfg.variant, &self.params,
-                        self.cfg.seed, max_nodes)
+    /// Validation accuracy. Both backends follow the same protocol — the
+    /// 2-hop eval forward at the fixed f15x10 fanout over at least 512
+    /// val nodes — so numbers are comparable across the backend seam:
+    /// native runs it directly, PJRT through the dataset's
+    /// `{fsa2|dgl2}_eval_*` artifact (matching the trainer's variant).
+    pub fn evaluate(&mut self, max_nodes: usize) -> Result<f64> {
+        let mut nodes = self.ds.split_nodes(Split::Val);
+        nodes.truncate(max_nodes.max(512));
+        let eval_base = mix(self.cfg.seed ^ 0xEAE1);
+        let c = self.ds.spec.c;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for chunk in nodes.chunks(512) {
+            let Some(logits) = self.backend.eval_logits(chunk, eval_base)?
+            else {
+                // backend has no forward-only path: AOT eval artifact
+                return evaluate_params(self.rt, &self.ds, self.cfg.variant,
+                                       &self.backend.params_f32()?,
+                                       self.cfg.seed, max_nodes);
+            };
+            for (i, &u) in chunk.iter().enumerate() {
+                let row = &logits[i * c..(i + 1) * c];
+                if argmax(row) as i32 == self.ds.labels[u as usize] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
     }
 }
 
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 /// Validation accuracy of a parameter set using the dataset's
-/// `{fsa2|dgl2}_eval_*` artifact.
+/// `{fsa2|dgl2}_eval_*` artifact. Static graph/feature buffers come from
+/// the runtime's per-dataset cache ([`Runtime::graph_bufs`]) instead of
+/// being re-uploaded per call.
 pub fn evaluate_params(rt: &Runtime, ds: &Dataset, variant: Variant,
-                       params: &[xla::Literal], seed: u64,
+                       params: &[Vec<f32>], seed: u64,
                        max_nodes: usize) -> Result<f64> {
     let name = format!("{}2_eval_{}_f15x10_b512", variant.as_str(),
                        ds.spec.name);
     let exe = rt.load(&name)?;
     let (b, k1, k2) = (exe.spec.batch, exe.spec.k1, exe.spec.k2);
+    let np = exe.spec.n_params();
+    anyhow::ensure!(params.len() == np,
+                    "eval artifact {name} wants {np} params, got {}",
+                    params.len());
     let mut nodes = ds.split_nodes(Split::Val);
     nodes.truncate(max_nodes.max(b));
     let eval_base = mix(seed ^ 0xEAE1);
-    let rowptr = rt.buf_i32(&ds.graph.rowptr, &[ds.spec.n + 1])?;
-    let col = rt.buf_i32(&ds.graph.col, &[ds.graph.e_cap()])?;
-    let x = rt.buf_f32(&ds.features, &[ds.spec.n, ds.spec.d])?;
+    let x = rt.features_f32(ds)?;
 
     let mut correct = 0usize;
     let mut total = 0usize;
@@ -515,19 +471,19 @@ pub fn evaluate_params(rt: &Runtime, ds: &Dataset, variant: Variant,
         let real = seeds.len();
         seeds.resize(b, chunk[0]); // pad; padded rows ignored below
         let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(10);
-        for lit in params {
-            owned.push(rt.buf_from_literal(lit)?);
+        for (vals, spec) in params.iter().zip(&exe.spec.inputs[..np]) {
+            owned.push(rt.buf_f32(vals, &spec.shape)?);
         }
-        let np = owned.len();
         let out = match variant {
             Variant::Fsa => {
+                let graph = rt.graph_bufs(ds)?;
                 owned.push(rt.buf_i32(&seeds, &[b])?);
                 owned.push(rt.buf_u64(&[eval_base], &[1])?);
                 let mut args: Vec<&xla::PjRtBuffer> =
                     owned[..np].iter().collect();
-                args.push(&rowptr);
-                args.push(&col);
-                args.push(&x);
+                args.push(&graph.rowptr);
+                args.push(&graph.col);
+                args.push(x.as_ref());
                 args.push(&owned[np]);
                 args.push(&owned[np + 1]);
                 exe.run(&args)?
@@ -539,7 +495,7 @@ pub fn evaluate_params(rt: &Runtime, ds: &Dataset, variant: Variant,
                 owned.push(rt.buf_i32(&blk.s2, &[b, 1 + k1, k2])?);
                 let mut args: Vec<&xla::PjRtBuffer> =
                     owned[..np].iter().collect();
-                args.push(&x);
+                args.push(x.as_ref());
                 args.push(&owned[np]);
                 args.push(&owned[np + 1]);
                 exe.run(&args)?
@@ -549,13 +505,7 @@ pub fn evaluate_params(rt: &Runtime, ds: &Dataset, variant: Variant,
         let c = ds.spec.c;
         for (i, &u) in chunk.iter().enumerate().take(real) {
             let row = &logits[i * c..(i + 1) * c];
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            if pred as i32 == ds.labels[u as usize] {
+            if argmax(row) as i32 == ds.labels[u as usize] {
                 correct += 1;
             }
             total += 1;
@@ -575,13 +525,4 @@ pub fn measure(trainer: &mut Trainer, warmup: usize, steps: usize)
         out.push(trainer.step()?);
     }
     Ok(out)
-}
-
-fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(data);
-    if shape.len() <= 1 {
-        return Ok(lit);
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
 }

@@ -1,0 +1,447 @@
+//! [`NativeBackend`] — the native CPU implementation of the
+//! [`crate::runtime::backend::Backend`] seam: a full synchronized train
+//! step (forward + backward + AdamW) as real host compute, no PJRT
+//! artifacts required.
+//!
+//! Two step variants, sharing seeds, base-seed schedule, and the
+//! counter-hash sampling rule with the PJRT path:
+//!
+//! * **fused** ([`super::fused`]): sampling + mean aggregation in one pass,
+//!   a `[B,d]` aggregate and (optionally) the saved index tensors are the
+//!   only per-step intermediates;
+//! * **baseline** ([`super::baseline`]): consumes the host-sampled blocks
+//!   from the batch pipeline and materializes the dense feature gathers,
+//!   exactly the DGL-style pipeline the paper measures against.
+//!
+//! All transient buffers are recorded in the coordinator's
+//! [`MemoryMeter`], so `StepTiming::transient_bytes` is a *measured*
+//! quantity on this backend (the PJRT path still adds its analytic
+//! executable-internal model).
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::gen::Dataset;
+use crate::memory::MemoryMeter;
+use crate::metrics::Timer;
+use crate::runtime::backend::{Backend, StepInputs, StepOutcome};
+use crate::runtime::manifest::AdamwConfig;
+use crate::runtime::init_params;
+use crate::sampler;
+
+use super::linalg::{add_bias, col_sum, matmul, matmul_a_bt, matmul_at_b, relu};
+use super::{adamw_update, baseline, dgl_param_specs, fsa_param_specs, fused,
+            softmax_xent, Features};
+
+const F32: u64 = 4;
+const I32: u64 = 4;
+
+/// Fixed evaluation fanout, mirroring the `*_eval_*_f15x10_b512` AOT
+/// artifacts: both backends evaluate the same 2-hop forward regardless of
+/// the training fanout/hops, so accuracies are comparable across the
+/// backend seam.
+const EVAL_K1: usize = 15;
+const EVAL_K2: usize = 10;
+
+/// Configuration of a native training session (the subset of `TrainConfig`
+/// the engine needs, kept separate so `bench`/tests can construct it
+/// without the coordinator).
+#[derive(Clone, Debug)]
+pub struct NativeConfig {
+    /// Fused sample+aggregate (fsa) vs block-materializing baseline (dgl).
+    pub fused: bool,
+    pub hops: u32,
+    pub k1: usize,
+    pub k2: usize,
+    /// bf16 feature storage (the paper's AMP setting; accumulate stays f32).
+    pub amp: bool,
+    /// Keep the sampled index tensors per step (§3.3 replay backward).
+    pub save_indices: bool,
+    pub seed: u64,
+    /// Worker threads for the kernel's batch sharding (0 = auto).
+    pub threads: usize,
+    pub hidden: usize,
+}
+
+/// Native CPU training engine; owns the model/optimizer state.
+pub struct NativeBackend {
+    cfg: NativeConfig,
+    ds: Arc<Dataset>,
+    feat: Features,
+    adamw: AdamwConfig,
+    params: Vec<Vec<f32>>,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl NativeBackend {
+    pub fn new(ds: Arc<Dataset>, cfg: NativeConfig,
+               adamw: AdamwConfig) -> Result<NativeBackend> {
+        ensure!(cfg.hops == 1 || cfg.hops == 2, "hops must be 1 or 2");
+        ensure!(cfg.k1 > 0, "k1 must be positive");
+        ensure!(cfg.hops == 1 || cfg.k2 > 0, "2-hop config needs k2 > 0");
+        let (d, c) = (ds.spec.d, ds.spec.c);
+        let feat = Features::from_dataset(ds.clone(), cfg.amp);
+        let specs = if cfg.fused {
+            fsa_param_specs(d, cfg.hidden, c)
+        } else {
+            dgl_param_specs(d, cfg.hidden, c)
+        };
+        let params = init_params(&specs, cfg.seed);
+        let m = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let v = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        Ok(NativeBackend { cfg, ds, feat, adamw, params, m, v })
+    }
+
+    /// Current parameters (tests; canonical spec order).
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    /// Replace the parameters (finite-difference tests).
+    pub fn set_params(&mut self, params: Vec<Vec<f32>>) {
+        assert_eq!(params.len(), self.params.len());
+        self.params = params;
+    }
+
+    fn param_bytes(&self) -> u64 {
+        self.params.iter().map(|p| p.len() as u64 * F32).sum()
+    }
+
+    /// Shared SAGE head: `(pre, h, logits)` from `[B,d]` self features and
+    /// the `[B,d]` aggregate.
+    fn head_forward(&self, x_self: &[f32], agg: &[f32], b: usize)
+                    -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (d, h, c) = (self.feat.d, self.cfg.hidden, self.ds.spec.c);
+        let (w_self, w_neigh, b_h) =
+            (&self.params[0], &self.params[1], &self.params[2]);
+        let (w_out, b_out) = (&self.params[3], &self.params[4]);
+        let mut pre = vec![0.0f32; b * h];
+        matmul(x_self, w_self, &mut pre, b, d, h);
+        matmul(agg, w_neigh, &mut pre, b, d, h);
+        add_bias(&mut pre, b_h, b, h);
+        let mut hbuf = pre.clone();
+        relu(&mut hbuf);
+        let mut logits = vec![0.0f32; b * c];
+        matmul(&hbuf, w_out, &mut logits, b, h, c);
+        add_bias(&mut logits, b_out, b, c);
+        (pre, hbuf, logits)
+    }
+
+    /// Fused-variant loss and parameter gradients on one batch (also the
+    /// surface the gradient-parity tests drive).
+    pub fn fsa_loss_grads(&self, seeds: &[i32], labels: &[i32], base: u64,
+                          meter: &mut MemoryMeter)
+                          -> Result<(f64, Vec<Vec<f32>>, u64)> {
+        ensure!(self.cfg.fused, "fsa_loss_grads on a baseline engine");
+        let b = seeds.len();
+        let (d, h, c) = (self.feat.d, self.cfg.hidden, self.ds.spec.c);
+
+        // -- fused sample+aggregate (the kernel); `_saved` keeps the index
+        // tensors alive for the whole step, like the device buffers would be
+        let (agg, _saved, pairs) = if self.cfg.hops == 2 {
+            let out = fused::fused_2hop(&self.ds.graph, &self.feat, seeds,
+                                        self.cfg.k1, self.cfg.k2, base,
+                                        self.cfg.save_indices,
+                                        self.cfg.threads);
+            meter.alloc((b * d) as u64 * F32);
+            if self.cfg.save_indices {
+                meter.alloc((b * self.cfg.k1) as u64 * I32
+                    + (b * self.cfg.k1 * self.cfg.k2) as u64 * I32);
+            }
+            (out.agg, (out.s1, out.s2), out.pairs)
+        } else {
+            let out = fused::fused_1hop(&self.ds.graph, &self.feat, seeds,
+                                        self.cfg.k1, base,
+                                        self.cfg.save_indices,
+                                        self.cfg.threads);
+            meter.alloc((b * d) as u64 * F32);
+            if self.cfg.save_indices {
+                meter.alloc((b * self.cfg.k1) as u64 * I32);
+            }
+            (out.agg, (out.samples, None), out.pairs)
+        };
+
+        // -- seed features + head
+        let mut x_self = vec![0.0f32; b * d];
+        meter.alloc((b * d) as u64 * F32);
+        for (i, &s) in seeds.iter().enumerate() {
+            ensure!(s >= 0 && (s as usize) < self.feat.n, "seed {s} invalid");
+            self.feat.copy_row(s as usize, &mut x_self[i * d..(i + 1) * d]);
+        }
+        let (pre, hbuf, logits) = self.head_forward(&x_self, &agg, b);
+        meter.alloc((2 * b * h + b * c) as u64 * F32);
+        let (loss, dlogits) = softmax_xent(&logits, labels, b, c);
+        meter.alloc((b * c) as u64 * F32);
+
+        // -- backward through the head
+        let mut grads: Vec<Vec<f32>> =
+            self.params.iter().map(|p| vec![0.0; p.len()]).collect();
+        meter.alloc(self.param_bytes());
+        matmul_at_b(&hbuf, &dlogits, &mut grads[3], b, h, c);
+        col_sum(&dlogits, &mut grads[4], b, c);
+        let mut dpre = vec![0.0f32; b * h];
+        meter.alloc((b * h) as u64 * F32);
+        matmul_a_bt(&dlogits, &self.params[3], &mut dpre, b, c, h);
+        for (dv, &p) in dpre.iter_mut().zip(&pre) {
+            if p <= 0.0 {
+                *dv = 0.0;
+            }
+        }
+        matmul_at_b(&x_self, &dpre, &mut grads[0], b, d, h);
+        matmul_at_b(&agg, &dpre, &mut grads[1], b, d, h);
+        col_sum(&dpre, &mut grads[2], b, h);
+        Ok((loss, grads, pairs))
+    }
+
+    fn apply_adamw(&mut self, grads: &[Vec<f32>], step: usize) {
+        for i in 0..self.params.len() {
+            adamw_update(&mut self.params[i], &grads[i], &mut self.m[i],
+                         &mut self.v[i], step, &self.adamw);
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn train_step(&mut self, step: usize, inp: &StepInputs<'_>,
+                  meter: &mut MemoryMeter) -> Result<StepOutcome> {
+        let b = inp.seeds.len();
+        ensure!(inp.labels.len() == b, "labels/seeds length mismatch");
+        let (h, c) = (self.cfg.hidden, self.ds.spec.c);
+        let timer = Timer::start();
+        // per-step host tensors handed to the engine
+        meter.alloc((2 * b) as u64 * I32 + 8);
+
+        let (loss, pairs) = if self.cfg.fused {
+            let (loss, grads, pairs) =
+                self.fsa_loss_grads(inp.seeds, inp.labels, inp.base, meter)?;
+            self.apply_adamw(&grads, step);
+            (loss, Some(pairs))
+        } else if self.cfg.hops == 2 {
+            let Some(blk) = inp.block2 else {
+                bail!("native baseline 2-hop step without a prepared block")
+            };
+            ensure!(blk.batch == b && blk.k1 == self.cfg.k1
+                    && blk.k2 == self.cfg.k2, "block dims mismatch");
+            meter.alloc((blk.f1.len() + blk.s2.len()) as u64 * I32);
+            let fwd = baseline::forward2(&self.feat, blk, &self.params, h, c,
+                                         self.cfg.threads, meter);
+            let (loss, dlogits) = softmax_xent(&fwd.logits, inp.labels, b, c);
+            meter.alloc((b * c) as u64 * F32);
+            let mut grads: Vec<Vec<f32>> =
+                self.params.iter().map(|p| vec![0.0; p.len()]).collect();
+            meter.alloc(self.param_bytes());
+            baseline::backward2(&fwd, blk, &self.params, &dlogits, h, c,
+                                &mut grads, meter);
+            self.apply_adamw(&grads, step);
+            (loss, None)
+        } else {
+            let Some(blk) = inp.block1 else {
+                bail!("native baseline 1-hop step without a prepared block")
+            };
+            ensure!(blk.batch == b && blk.k == self.cfg.k1,
+                    "block dims mismatch");
+            meter.alloc(blk.f1.len() as u64 * I32);
+            let fwd = baseline::forward1(&self.feat, blk, &self.params, h, c,
+                                         self.cfg.threads, meter);
+            let (loss, dlogits) = softmax_xent(&fwd.logits, inp.labels, b, c);
+            meter.alloc((b * c) as u64 * F32);
+            let mut grads: Vec<Vec<f32>> =
+                self.params.iter().map(|p| vec![0.0; p.len()]).collect();
+            meter.alloc(self.param_bytes());
+            baseline::backward1(&fwd, &self.params, &dlogits, b, self.feat.d,
+                                h, c, &mut grads, meter);
+            self.apply_adamw(&grads, step);
+            (loss, None)
+        };
+
+        Ok(StepOutcome {
+            loss,
+            upload_ms: 0.0, // no device, nothing crosses a bus
+            execute_ms: timer.ms(),
+            post_ms: 0.0,
+            pairs,
+        })
+    }
+
+    fn eval_logits(&mut self, seeds: &[i32], base: u64)
+                   -> Result<Option<Vec<f32>>> {
+        let b = seeds.len();
+        if b == 0 {
+            return Ok(Some(Vec::new()));
+        }
+        let (d, h, c) = (self.feat.d, self.cfg.hidden, self.ds.spec.c);
+        let mut scratch = MemoryMeter::new(); // eval is not metered
+        // Fixed eval protocol (2-hop, EVAL_K1 x EVAL_K2), like the AOT
+        // eval artifacts — 1-hop-trained models share the same parameter
+        // shapes and evaluate through the 2-hop forward, exactly as the
+        // PJRT path does.
+        let logits = if self.cfg.fused {
+            let agg = fused::fused_2hop(&self.ds.graph, &self.feat, seeds,
+                                        EVAL_K1, EVAL_K2, base, false,
+                                        self.cfg.threads).agg;
+            let mut x_self = vec![0.0f32; b * d];
+            for (i, &s) in seeds.iter().enumerate() {
+                self.feat.copy_row(s as usize, &mut x_self[i * d..(i + 1) * d]);
+            }
+            self.head_forward(&x_self, &agg, b).2
+        } else {
+            let blk = sampler::build_block2(&self.ds.graph, seeds, EVAL_K1,
+                                            EVAL_K2, base);
+            baseline::forward2(&self.feat, &blk, &self.params, h, c,
+                               self.cfg.threads, &mut scratch).logits
+        };
+        Ok(Some(logits))
+    }
+
+    fn params_f32(&self) -> Result<Vec<Vec<f32>>> {
+        Ok(self.params.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::builtin_spec;
+
+    fn tiny() -> Arc<Dataset> {
+        Arc::new(Dataset::generate(builtin_spec("tiny").unwrap()).unwrap())
+    }
+
+    fn cfg(fused: bool) -> NativeConfig {
+        NativeConfig {
+            fused,
+            hops: 2,
+            k1: 5,
+            k2: 3,
+            amp: false,
+            save_indices: true,
+            seed: 42,
+            threads: 1,
+            hidden: 32,
+        }
+    }
+
+    fn adamw() -> AdamwConfig {
+        AdamwConfig { lr: 3e-3, b1: 0.9, b2: 0.999, eps: 1e-8, wd: 5e-4 }
+    }
+
+    fn step_inputs<'a>(seeds: &'a [i32], labels: &'a [i32], base: u64)
+                       -> StepInputs<'a> {
+        StepInputs { seeds, labels, base, block1: None, block2: None }
+    }
+
+    #[test]
+    fn fused_engine_decreases_loss() {
+        let ds = tiny();
+        let mut eng = NativeBackend::new(ds.clone(), cfg(true), adamw()).unwrap();
+        let seeds: Vec<i32> = (0..64).collect();
+        let labels: Vec<i32> =
+            seeds.iter().map(|&u| ds.labels[u as usize]).collect();
+        let mut meter = MemoryMeter::new();
+        let mut losses = Vec::new();
+        for step in 0..30 {
+            let base = crate::rng::mix(42 + step as u64);
+            let out = eng
+                .train_step(step, &step_inputs(&seeds, &labels, base),
+                            &mut meter)
+                .unwrap();
+            assert!(out.loss.is_finite());
+            assert!(out.pairs.unwrap() > 0);
+            losses.push(out.loss);
+            meter.reset_step();
+        }
+        assert!(losses[29] < losses[0] * 0.8,
+                "loss {} -> {}", losses[0], losses[29]);
+    }
+
+    #[test]
+    fn baseline_engine_requires_block_and_trains() {
+        let ds = tiny();
+        let mut eng =
+            NativeBackend::new(ds.clone(), cfg(false), adamw()).unwrap();
+        let seeds: Vec<i32> = (0..64).collect();
+        let labels: Vec<i32> =
+            seeds.iter().map(|&u| ds.labels[u as usize]).collect();
+        let mut meter = MemoryMeter::new();
+        assert!(eng
+            .train_step(0, &step_inputs(&seeds, &labels, 1), &mut meter)
+            .is_err(), "missing block must be an error");
+        let mut losses = Vec::new();
+        for step in 0..30 {
+            let base = crate::rng::mix(42 + step as u64);
+            let blk = sampler::build_block2(&ds.graph, &seeds, 5, 3, base);
+            let inp = StepInputs { seeds: &seeds, labels: &labels, base,
+                                   block1: None, block2: Some(&blk) };
+            losses.push(eng.train_step(step, &inp, &mut meter).unwrap().loss);
+            meter.reset_step();
+        }
+        assert!(losses[29] < losses[0] * 0.8,
+                "loss {} -> {}", losses[0], losses[29]);
+    }
+
+    #[test]
+    fn engine_is_deterministic_across_threads() {
+        let ds = tiny();
+        let seeds: Vec<i32> = (0..128).collect();
+        let labels: Vec<i32> =
+            seeds.iter().map(|&u| ds.labels[u as usize]).collect();
+        let run = |threads: usize| -> Vec<f64> {
+            let mut c = cfg(true);
+            c.threads = threads;
+            let mut eng = NativeBackend::new(ds.clone(), c, adamw()).unwrap();
+            let mut meter = MemoryMeter::new();
+            (0..10)
+                .map(|step| {
+                    let base = crate::rng::mix(7 + step as u64);
+                    eng.train_step(step,
+                                   &step_inputs(&seeds, &labels, base),
+                                   &mut meter)
+                        .unwrap()
+                        .loss
+                })
+                .collect()
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(4), "thread count changed the trajectory");
+        assert_eq!(serial, run(0), "auto threads changed the trajectory");
+    }
+
+    #[test]
+    fn eval_logits_shape_and_accuracy_signal() {
+        let ds = tiny();
+        let mut eng = NativeBackend::new(ds.clone(), cfg(true), adamw()).unwrap();
+        let seeds: Vec<i32> = (0..32).collect();
+        let logits = eng.eval_logits(&seeds, 9).unwrap().unwrap();
+        assert_eq!(logits.len(), 32 * ds.spec.c);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(eng.eval_logits(&[], 9).unwrap().unwrap().is_empty());
+    }
+
+    #[test]
+    fn fused_transient_far_below_baseline() {
+        let ds = tiny();
+        let seeds: Vec<i32> = (0..64).collect();
+        let labels: Vec<i32> =
+            seeds.iter().map(|&u| ds.labels[u as usize]).collect();
+        let mut fsa = NativeBackend::new(ds.clone(), cfg(true), adamw()).unwrap();
+        let mut meter = MemoryMeter::new();
+        fsa.train_step(0, &step_inputs(&seeds, &labels, 3), &mut meter)
+            .unwrap();
+        let fsa_peak = meter.peak();
+        let mut dgl = NativeBackend::new(ds.clone(), cfg(false), adamw()).unwrap();
+        let blk = sampler::build_block2(&ds.graph, &seeds, 5, 3, 3);
+        let inp = StepInputs { seeds: &seeds, labels: &labels, base: 3,
+                               block1: None, block2: Some(&blk) };
+        let mut meter = MemoryMeter::new();
+        dgl.train_step(0, &inp, &mut meter).unwrap();
+        let dgl_peak = meter.peak();
+        assert!(dgl_peak > 2 * fsa_peak,
+                "baseline {dgl_peak} vs fused {fsa_peak}");
+    }
+}

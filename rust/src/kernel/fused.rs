@@ -1,0 +1,523 @@
+//! The fused sample+aggregate kernels (paper Algorithms 1–2) as native
+//! host compute.
+//!
+//! One pass per seed: neighbors are drawn inline with the counter-hash
+//! rule ([`crate::sampler::sample_neighbors`], bitwise identical to the
+//! Pallas kernel and the host baseline sampler) and the running mean is
+//! folded into a single `[d]` accumulator per hop — **no** `[B,1+k1,k2,d]`
+//! block ever exists. The only per-step outputs are the `[B,d]` aggregate,
+//! the optional saved index tensors (`save_indices`, the paper's §3.3
+//! deterministic-backward replay), and the sampled-pair count.
+//!
+//! The gather is cache-blocked over the feature dimension
+//! ([`super::D_TILE`]): the accumulator tile stays L1-resident while the
+//! k2 sampled rows stream through it. Batch rows are sharded across scoped
+//! workers with the degree-aware planner; each worker writes disjoint row
+//! ranges of every output, so results are bitwise identical at any thread
+//! count.
+
+use crate::graph::{shard, Csr};
+use crate::sampler::sample_neighbors;
+
+use super::{resolve_threads, Features, D_TILE, MIN_PAR_ROWS};
+
+/// Output of one fused 2-hop aggregation.
+pub struct Fused2Out {
+    /// `[B, d]` two-hop mean-of-means aggregate.
+    pub agg: Vec<f32>,
+    /// `[B, k1]` hop-1 samples (when `save_indices`).
+    pub s1: Option<Vec<i32>>,
+    /// `[B, k1, k2]` hop-2 samples (when `save_indices`).
+    pub s2: Option<Vec<i32>>,
+    /// Valid (seed, neighbor) draws — matches
+    /// [`crate::sampler::fused2_sampled_pairs`] exactly.
+    pub pairs: u64,
+}
+
+/// Output of one fused 1-hop aggregation.
+pub struct Fused1Out {
+    /// `[B, d]` neighbor-mean aggregate.
+    pub agg: Vec<f32>,
+    /// `[B, k]` samples (when `save_indices`).
+    pub samples: Option<Vec<i32>>,
+    pub pairs: u64,
+}
+
+/// Per-worker scratch: reused across the rows of one shard.
+struct Scratch {
+    s1row: Vec<i32>,
+    s2row: Vec<i32>,
+    valid: Vec<u32>,
+    tile: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(k1: usize, k2: usize) -> Scratch {
+        Scratch {
+            s1row: vec![-1; k1],
+            s2row: vec![-1; k2.max(1)],
+            valid: Vec::with_capacity(k2.max(k1)),
+            tile: vec![0.0; D_TILE],
+        }
+    }
+}
+
+/// Mean of the valid feature rows into `agg_row` with weight `1/k1_eff`
+/// applied by the caller afterwards; `acc += mean(x[valid]) `.
+#[inline]
+fn accumulate_mean(feat: &Features, valid: &[u32], tile: &mut [f32],
+                   agg_row: &mut [f32]) {
+    if valid.is_empty() {
+        return;
+    }
+    let inv = 1.0 / valid.len() as f32;
+    let d = feat.d;
+    let mut t0 = 0;
+    while t0 < d {
+        let t1 = (t0 + D_TILE).min(d);
+        let acc = &mut tile[..t1 - t0];
+        acc.fill(0.0);
+        for &w in valid {
+            feat.add_row_slice(w as usize, t0, t1, acc);
+        }
+        for (a, &v) in agg_row[t0..t1].iter_mut().zip(acc.iter()) {
+            *a += v * inv;
+        }
+        t0 = t1;
+    }
+}
+
+#[inline]
+fn collect_valid(row: &[i32], out: &mut Vec<u32>) {
+    out.clear();
+    for &v in row {
+        if v >= 0 {
+            out.push(v as u32);
+        }
+    }
+}
+
+/// Serial kernel body for a contiguous run of seed rows (one shard).
+#[allow(clippy::too_many_arguments)]
+fn run_rows_2hop(csr: &Csr, feat: &Features, seeds: &[i32], k1: usize,
+                 k2: usize, base: u64, agg: &mut [f32],
+                 mut s1_out: Option<&mut [i32]>,
+                 mut s2_out: Option<&mut [i32]>, pairs: &mut [u64]) {
+    let d = feat.d;
+    let mut sc = Scratch::new(k1, k2);
+    for (bi, &r) in seeds.iter().enumerate() {
+        let agg_row = &mut agg[bi * d..(bi + 1) * d];
+        sample_neighbors(csr, r, k1, base, 0, &mut sc.s1row);
+        if let Some(buf) = s1_out.as_deref_mut() {
+            buf[bi * k1..(bi + 1) * k1].copy_from_slice(&sc.s1row);
+        }
+        let mut k1_eff = 0u64;
+        let mut npairs = 0u64;
+        for ui in 0..k1 {
+            let u = sc.s1row[ui];
+            sample_neighbors(csr, u, k2, base, 1, &mut sc.s2row);
+            if let Some(buf) = s2_out.as_deref_mut() {
+                buf[(bi * k1 + ui) * k2..(bi * k1 + ui + 1) * k2]
+                    .copy_from_slice(&sc.s2row);
+            }
+            if u < 0 {
+                continue;
+            }
+            k1_eff += 1;
+            npairs += 1;
+            collect_valid(&sc.s2row, &mut sc.valid);
+            npairs += sc.valid.len() as u64;
+            accumulate_mean(feat, &sc.valid, &mut sc.tile, agg_row);
+        }
+        let inv = 1.0 / k1_eff.max(1) as f32;
+        for v in agg_row.iter_mut() {
+            *v *= inv;
+        }
+        pairs[bi] = npairs;
+    }
+}
+
+fn run_rows_1hop(csr: &Csr, feat: &Features, seeds: &[i32], k: usize,
+                 base: u64, agg: &mut [f32],
+                 mut samples_out: Option<&mut [i32]>, pairs: &mut [u64]) {
+    let d = feat.d;
+    let mut sc = Scratch::new(k, 0);
+    for (bi, &r) in seeds.iter().enumerate() {
+        sample_neighbors(csr, r, k, base, 0, &mut sc.s1row);
+        if let Some(buf) = samples_out.as_deref_mut() {
+            buf[bi * k..(bi + 1) * k].copy_from_slice(&sc.s1row);
+        }
+        collect_valid(&sc.s1row, &mut sc.valid);
+        pairs[bi] = sc.valid.len() as u64;
+        accumulate_mean(feat, &sc.valid, &mut sc.tile,
+                        &mut agg[bi * d..(bi + 1) * d]);
+    }
+}
+
+/// Split `opt` (when present) at `at`, returning the head and keeping the
+/// tail for the next shard.
+fn take_chunk<'a>(opt: &mut Option<&'a mut [i32]>, at: usize)
+                  -> Option<&'a mut [i32]> {
+    opt.take().map(|buf| {
+        let (head, tail) = buf.split_at_mut(at);
+        *opt = Some(tail);
+        head
+    })
+}
+
+/// Fused 2-hop sample+aggregate over a batch of seeds.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_2hop(csr: &Csr, feat: &Features, seeds: &[i32], k1: usize,
+                  k2: usize, base: u64, save_indices: bool,
+                  threads: usize) -> Fused2Out {
+    let b = seeds.len();
+    let d = feat.d;
+    let mut agg = vec![0.0f32; b * d];
+    let mut s1 = save_indices.then(|| vec![-1i32; b * k1]);
+    let mut s2 = save_indices.then(|| vec![-1i32; b * k1 * k2]);
+    let mut pairs = vec![0u64; b];
+
+    let workers = resolve_threads(threads).min((b / MIN_PAR_ROWS).max(1));
+    if workers <= 1 {
+        run_rows_2hop(csr, feat, seeds, k1, k2, base, &mut agg,
+                      s1.as_deref_mut(), s2.as_deref_mut(), &mut pairs);
+    } else {
+        // cost model: each of the ≤k1 hop-1 draws triggers ≤k2 row adds
+        let costs: Vec<u64> = seeds
+            .iter()
+            .map(|&r| 1 + (shard::sample_cost(csr, r, k1) - 1) * (1 + k2 as u64))
+            .collect();
+        let plan = shard::plan_shards(&costs, workers);
+        std::thread::scope(|s| {
+            let mut agg_rest: &mut [f32] = &mut agg;
+            let mut s1_rest = s1.as_deref_mut();
+            let mut s2_rest = s2.as_deref_mut();
+            let mut pairs_rest: &mut [u64] = &mut pairs;
+            for r in plan {
+                let rows = r.end - r.start;
+                let (agg_c, tail) =
+                    std::mem::take(&mut agg_rest).split_at_mut(rows * d);
+                agg_rest = tail;
+                let s1_c = take_chunk(&mut s1_rest, rows * k1);
+                let s2_c = take_chunk(&mut s2_rest, rows * k1 * k2);
+                let (pairs_c, tail) =
+                    std::mem::take(&mut pairs_rest).split_at_mut(rows);
+                pairs_rest = tail;
+                if rows == 0 {
+                    continue;
+                }
+                let seed_c = &seeds[r];
+                s.spawn(move || {
+                    run_rows_2hop(csr, feat, seed_c, k1, k2, base, agg_c,
+                                  s1_c, s2_c, pairs_c);
+                });
+            }
+        });
+    }
+    Fused2Out { agg, s1, s2, pairs: pairs.iter().sum() }
+}
+
+/// Fused 1-hop sample+aggregate over a batch of seeds.
+pub fn fused_1hop(csr: &Csr, feat: &Features, seeds: &[i32], k: usize,
+                  base: u64, save_indices: bool, threads: usize) -> Fused1Out {
+    let b = seeds.len();
+    let d = feat.d;
+    let mut agg = vec![0.0f32; b * d];
+    let mut samples = save_indices.then(|| vec![-1i32; b * k]);
+    let mut pairs = vec![0u64; b];
+
+    let workers = resolve_threads(threads).min((b / MIN_PAR_ROWS).max(1));
+    if workers <= 1 {
+        run_rows_1hop(csr, feat, seeds, k, base, &mut agg,
+                      samples.as_deref_mut(), &mut pairs);
+    } else {
+        let costs: Vec<u64> =
+            seeds.iter().map(|&r| shard::sample_cost(csr, r, k)).collect();
+        let plan = shard::plan_shards(&costs, workers);
+        std::thread::scope(|s| {
+            let mut agg_rest: &mut [f32] = &mut agg;
+            let mut samp_rest = samples.as_deref_mut();
+            let mut pairs_rest: &mut [u64] = &mut pairs;
+            for r in plan {
+                let rows = r.end - r.start;
+                let (agg_c, tail) =
+                    std::mem::take(&mut agg_rest).split_at_mut(rows * d);
+                agg_rest = tail;
+                let samp_c = take_chunk(&mut samp_rest, rows * k);
+                let (pairs_c, tail) =
+                    std::mem::take(&mut pairs_rest).split_at_mut(rows);
+                pairs_rest = tail;
+                if rows == 0 {
+                    continue;
+                }
+                let seed_c = &seeds[r];
+                s.spawn(move || {
+                    run_rows_1hop(csr, feat, seed_c, k, base, agg_c, samp_c,
+                                  pairs_c);
+                });
+            }
+        });
+    }
+    Fused1Out { agg, samples, pairs: pairs.iter().sum() }
+}
+
+/// Parity helper: the 1-hop mean aggregate of `seeds` drawn at an explicit
+/// hop counter (the fused 2-hop inner loop draws at `hop = 1`; the golden
+/// parity tests compare baseline block means against this). Serial.
+pub fn fused_1hop_at_hop(csr: &Csr, feat: &Features, seeds: &[i32], k: usize,
+                         base: u64, hop: u64) -> Vec<f32> {
+    let d = feat.d;
+    let mut agg = vec![0.0f32; seeds.len() * d];
+    let mut sc = Scratch::new(k, 0);
+    for (bi, &r) in seeds.iter().enumerate() {
+        sample_neighbors(csr, r, k, base, hop, &mut sc.s1row);
+        collect_valid(&sc.s1row, &mut sc.valid);
+        accumulate_mean(feat, &sc.valid, &mut sc.tile,
+                        &mut agg[bi * d..(bi + 1) * d]);
+    }
+    agg
+}
+
+// ---------------------------------------------------------------------------
+// saved-index replay backward (paper §3.3) — dX for the fused ops.
+//
+// Not on the training path (features are not trainable parameters); used
+// by the gradient tests to pin the replay weights 1/(k1_eff·k2_eff) and
+// 1/max(1, take) against direct differentiation of the aggregate.
+// ---------------------------------------------------------------------------
+
+/// `dX[n,d]` from saved 2-hop indices and upstream `g[b,d]`.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_2hop(s1: &[i32], s2: &[i32], g: &[f32], b: usize, k1: usize,
+                     k2: usize, n: usize, d: usize) -> Vec<f32> {
+    debug_assert_eq!(s1.len(), b * k1);
+    debug_assert_eq!(s2.len(), b * k1 * k2);
+    debug_assert_eq!(g.len(), b * d);
+    let mut dx = vec![0.0f32; n * d];
+    for bi in 0..b {
+        let k1_eff = s1[bi * k1..(bi + 1) * k1]
+            .iter()
+            .filter(|&&u| u >= 0)
+            .count()
+            .max(1);
+        for ui in 0..k1 {
+            if s1[bi * k1 + ui] < 0 {
+                continue;
+            }
+            let row = &s2[(bi * k1 + ui) * k2..(bi * k1 + ui + 1) * k2];
+            let k2_eff = row.iter().filter(|&&w| w >= 0).count().max(1);
+            let wgt = 1.0 / (k1_eff * k2_eff) as f32;
+            for &w in row.iter().filter(|&&w| w >= 0) {
+                let dst = &mut dx[w as usize * d..(w as usize + 1) * d];
+                for (dv, &gv) in dst.iter_mut().zip(&g[bi * d..(bi + 1) * d]) {
+                    *dv += wgt * gv;
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// `dX[n,d]` for the 1-hop op: `dX[v] += g[u] / max(1, take(u))`.
+pub fn backward_1hop(samples: &[i32], g: &[f32], b: usize, k: usize,
+                     n: usize, d: usize) -> Vec<f32> {
+    debug_assert_eq!(samples.len(), b * k);
+    debug_assert_eq!(g.len(), b * d);
+    let mut dx = vec![0.0f32; n * d];
+    for bi in 0..b {
+        let row = &samples[bi * k..(bi + 1) * k];
+        let take = row.iter().filter(|&&v| v >= 0).count().max(1);
+        let wgt = 1.0 / take as f32;
+        for &v in row.iter().filter(|&&v| v >= 0) {
+            let dst = &mut dx[v as usize * d..(v as usize + 1) * d];
+            for (dv, &gv) in dst.iter_mut().zip(&g[bi * d..(bi + 1) * d]) {
+                *dv += wgt * gv;
+            }
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{builtin_spec, Dataset};
+    use crate::rng::SplitMix64;
+    use crate::sampler;
+
+    fn tiny() -> Dataset {
+        Dataset::generate(builtin_spec("tiny").unwrap()).unwrap()
+    }
+
+    /// Reference 2-hop aggregate computed the *baseline* way: materialize
+    /// the index tensors with the host sampler, gather, masked-mean.
+    fn reference_agg2(ds: &Dataset, seeds: &[i32], k1: usize, k2: usize,
+                      base: u64) -> Vec<f32> {
+        let d = ds.spec.d;
+        let s1 = sampler::sample_frontier(&ds.graph, seeds, k1, base, 0);
+        let s2 = sampler::sample_frontier(&ds.graph, &s1, k2, base, 1);
+        let mut agg = vec![0.0f32; seeds.len() * d];
+        for bi in 0..seeds.len() {
+            let mut outer = vec![0.0f64; d];
+            let mut k1_eff = 0usize;
+            for ui in 0..k1 {
+                if s1[bi * k1 + ui] < 0 {
+                    continue;
+                }
+                k1_eff += 1;
+                let row = &s2[(bi * k1 + ui) * k2..(bi * k1 + ui + 1) * k2];
+                let valid: Vec<i32> =
+                    row.iter().copied().filter(|&w| w >= 0).collect();
+                if valid.is_empty() {
+                    continue;
+                }
+                for &w in &valid {
+                    for j in 0..d {
+                        outer[j] += ds.features[w as usize * d + j] as f64
+                            / valid.len() as f64;
+                    }
+                }
+            }
+            for j in 0..d {
+                agg[bi * d + j] = (outer[j] / k1_eff.max(1) as f64) as f32;
+            }
+        }
+        agg
+    }
+
+    #[test]
+    fn fused2_matches_materialized_reference() {
+        let ds = tiny();
+        let mut r = SplitMix64::new(5);
+        let seeds: Vec<i32> =
+            (0..96).map(|_| r.next_below(ds.spec.n as u64) as i32).collect();
+        let feat = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false);
+        let out = fused_2hop(&ds.graph, &feat, &seeds, 5, 3, 42, true, 1);
+        let want = reference_agg2(&ds, &seeds, 5, 3, 42);
+        for (i, (&a, &w)) in out.agg.iter().zip(&want).enumerate() {
+            assert!((a - w).abs() < 1e-5, "agg[{i}]: {a} vs {w}");
+        }
+        // saved indices equal the host sampler's draws
+        let s1 = sampler::sample_frontier(&ds.graph, &seeds, 5, 42, 0);
+        let s2 = sampler::sample_frontier(&ds.graph, &s1, 3, 42, 1);
+        assert_eq!(out.s1.unwrap(), s1);
+        assert_eq!(out.s2.unwrap(), s2);
+        assert_eq!(out.pairs,
+                   sampler::fused2_sampled_pairs(&ds.graph, &seeds, 5, 3, 42));
+    }
+
+    #[test]
+    fn fused2_bitwise_identical_across_thread_counts() {
+        let ds = tiny();
+        let seeds: Vec<i32> = (0..200).map(|i| (i * 2) % ds.spec.n as i32).collect();
+        let feat = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false);
+        let serial = fused_2hop(&ds.graph, &feat, &seeds, 4, 3, 7, true, 1);
+        for threads in [2usize, 3, 8] {
+            let par = fused_2hop(&ds.graph, &feat, &seeds, 4, 3, 7, true,
+                                 threads);
+            assert_eq!(par.agg, serial.agg, "threads={threads}");
+            assert_eq!(par.s1, serial.s1);
+            assert_eq!(par.s2, serial.s2);
+            assert_eq!(par.pairs, serial.pairs);
+        }
+    }
+
+    #[test]
+    fn fused1_means_valid_neighbors() {
+        let ds = tiny();
+        let seeds: Vec<i32> = (0..64).collect();
+        let feat = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false);
+        let out = fused_1hop(&ds.graph, &feat, &seeds, 4, 9, true, 1);
+        let samples = out.samples.unwrap();
+        let d = ds.spec.d;
+        for bi in 0..seeds.len() {
+            let valid: Vec<i32> = samples[bi * 4..(bi + 1) * 4]
+                .iter()
+                .copied()
+                .filter(|&v| v >= 0)
+                .collect();
+            for j in (0..d).step_by(5) {
+                let want: f32 = if valid.is_empty() {
+                    0.0
+                } else {
+                    valid.iter()
+                        .map(|&v| ds.features[v as usize * d + j])
+                        .sum::<f32>() / valid.len() as f32
+                };
+                let got = out.agg[bi * d + j];
+                assert!((got - want).abs() < 1e-4, "row {bi} dim {j}");
+            }
+        }
+        let s1 = sampler::sample_frontier(&ds.graph, &seeds, 4, 9, 0);
+        assert_eq!(out.pairs, sampler::valid_pairs(&s1));
+    }
+
+    #[test]
+    fn bf16_storage_stays_close_to_f32() {
+        let ds = tiny();
+        let seeds: Vec<i32> = (0..64).collect();
+        let f32s = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false);
+        let bf16 = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, true);
+        let a = fused_2hop(&ds.graph, &f32s, &seeds, 5, 3, 11, false, 1);
+        let b = fused_2hop(&ds.graph, &bf16, &seeds, 5, 3, 11, false, 1);
+        for (&x, &y) in a.agg.iter().zip(&b.agg) {
+            assert!((x - y).abs() < 0.05 + x.abs() / 32.0, "{x} vs {y}");
+        }
+        assert_eq!(a.pairs, b.pairs);
+    }
+
+    /// The aggregate is linear in X, so the replay backward must satisfy
+    /// ⟨g, agg(x+Δ)−agg(x)⟩ == ⟨dX, Δ⟩ up to f32 rounding.
+    #[test]
+    fn replay_backward_is_the_exact_adjoint() {
+        let ds = tiny();
+        let (n, d) = (ds.spec.n, ds.spec.d);
+        let mut r = SplitMix64::new(77);
+        let seeds: Vec<i32> =
+            (0..48).map(|_| r.next_below(n as u64) as i32).collect();
+        let (k1, k2, base) = (4usize, 3usize, 123u64);
+        let feat = Features::from_f32(&ds.features, n, d, false);
+        let out = fused_2hop(&ds.graph, &feat, &seeds, k1, k2, base, true, 1);
+        let g: Vec<f32> =
+            (0..seeds.len() * d).map(|_| r.next_normal() as f32).collect();
+        let dx = backward_2hop(out.s1.as_ref().unwrap(),
+                               out.s2.as_ref().unwrap(), &g, seeds.len(),
+                               k1, k2, n, d);
+        // directional check along a random feature perturbation
+        let delta: Vec<f32> =
+            (0..n * d).map(|_| r.next_normal() as f32 * 0.1).collect();
+        let xp: Vec<f32> =
+            ds.features.iter().zip(&delta).map(|(&x, &dl)| x + dl).collect();
+        let featp = Features::from_f32(&xp, n, d, false);
+        let outp = fused_2hop(&ds.graph, &featp, &seeds, k1, k2, base, false, 1);
+        let lhs: f64 = outp
+            .agg
+            .iter()
+            .zip(&out.agg)
+            .zip(&g)
+            .map(|((&ap, &a), &gv)| ((ap - a) * gv) as f64)
+            .sum();
+        let rhs: f64 =
+            dx.iter().zip(&delta).map(|(&dv, &dl)| (dv * dl) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-2 + 0.01 * rhs.abs(),
+                "adjoint mismatch: {lhs} vs {rhs}");
+
+        // 1-hop variant
+        let out1 = fused_1hop(&ds.graph, &feat, &seeds, k1, base, true, 1);
+        let g1 = &g[..seeds.len() * d];
+        let dx1 = backward_1hop(out1.samples.as_ref().unwrap(), g1,
+                                seeds.len(), k1, n, d);
+        let out1p = fused_1hop(&ds.graph, &featp, &seeds, k1, base, false, 1);
+        let lhs1: f64 = out1p
+            .agg
+            .iter()
+            .zip(&out1.agg)
+            .zip(g1)
+            .map(|((&ap, &a), &gv)| ((ap - a) * gv) as f64)
+            .sum();
+        let rhs1: f64 =
+            dx1.iter().zip(&delta).map(|(&dv, &dl)| (dv * dl) as f64).sum();
+        assert!((lhs1 - rhs1).abs() < 1e-2 + 0.01 * rhs1.abs(),
+                "1-hop adjoint mismatch: {lhs1} vs {rhs1}");
+    }
+}

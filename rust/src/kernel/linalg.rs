@@ -1,0 +1,163 @@
+//! Dense f32 primitives for the native backend's SAGE head.
+//!
+//! Row-major, accumulate-into-output (`+=`) so the backward pass can fold
+//! several contributions into one gradient buffer without temporaries. The
+//! loop orders are chosen so the innermost loop is always a contiguous
+//! stream over both operands (ikj for `A·B`, the same shape for `Aᵀ·G`),
+//! which rustc auto-vectorizes; at the head sizes of this repo
+//! (d = h = 64, c ≤ 47) that is within a small factor of an optimized BLAS
+//! and far off the critical path next to the feature gathers.
+
+/// `c[m,n] += a[m,k] @ b[k,n]`.
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // relu outputs are sparse; skip dead rows of b
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `c[k,n] += a[m,k]ᵀ @ g[m,n]` — the `dW = activationsᵀ · upstream` shape.
+pub fn matmul_at_b(a: &[f32], g: &[f32], c: &mut [f32], m: usize, k: usize,
+                   n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let grow = &g[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[p * n..(p + 1) * n];
+            for (cv, &gv) in crow.iter_mut().zip(grow) {
+                *cv += av * gv;
+            }
+        }
+    }
+}
+
+/// `c[m,k] += g[m,n] @ b[k,n]ᵀ` — the `dA = upstream · Wᵀ` backprop shape
+/// (`b` is the *forward* weight, not pre-transposed).
+pub fn matmul_a_bt(g: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize,
+                   k: usize) {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    for i in 0..m {
+        let grow = &g[i * n..(i + 1) * n];
+        let crow = &mut c[i * k..(i + 1) * k];
+        for (p, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            let mut acc = 0.0f32;
+            for (&gv, &bv) in grow.iter().zip(brow) {
+                acc += gv * bv;
+            }
+            *cv += acc;
+        }
+    }
+}
+
+/// `row[j] += bias[j]` for every row of `x[m,n]`.
+pub fn add_bias(x: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * n);
+    debug_assert_eq!(bias.len(), n);
+    for i in 0..m {
+        for (xv, &bv) in x[i * n..(i + 1) * n].iter_mut().zip(bias) {
+            *xv += bv;
+        }
+    }
+}
+
+/// `out[j] += Σ_i g[i,j]` — bias gradient (column sum).
+pub fn col_sum(g: &[f32], out: &mut [f32], m: usize, n: usize) {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(out.len(), n);
+    for i in 0..m {
+        for (ov, &gv) in out.iter_mut().zip(&g[i * n..(i + 1) * n]) {
+            *ov += gv;
+        }
+    }
+}
+
+/// In-place ReLU; returns nothing (the pre-activation is kept by callers
+/// that need the backward mask).
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0f32; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+        // accumulates
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [38.0, 44.0, 86.0, 100.0]);
+    }
+
+    #[test]
+    fn transposed_products_agree_with_naive() {
+        let (m, k, n) = (5, 7, 3);
+        let mut r = crate::rng::SplitMix64::new(3);
+        let a: Vec<f32> =
+            (0..m * k).map(|_| r.next_normal() as f32).collect();
+        let g: Vec<f32> =
+            (0..m * n).map(|_| r.next_normal() as f32).collect();
+        let b: Vec<f32> =
+            (0..k * n).map(|_| r.next_normal() as f32).collect();
+
+        let mut atb = vec![0.0f32; k * n];
+        matmul_at_b(&a, &g, &mut atb, m, k, n);
+        for p in 0..k {
+            for j in 0..n {
+                let want: f32 = (0..m).map(|i| a[i * k + p] * g[i * n + j]).sum();
+                assert!((atb[p * n + j] - want).abs() < 1e-4);
+            }
+        }
+
+        let mut abt = vec![0.0f32; m * k];
+        matmul_a_bt(&g, &b, &mut abt, m, n, k);
+        for i in 0..m {
+            for p in 0..k {
+                let want: f32 = (0..n).map(|j| g[i * n + j] * b[p * n + j]).sum();
+                assert!((abt[i * k + p] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn bias_relu_colsum() {
+        let mut x = vec![-1.0f32, 2.0, 3.0, -4.0];
+        add_bias(&mut x, &[0.5, -0.5], 2, 2);
+        assert_eq!(x, [-0.5, 1.5, 3.5, -4.5]);
+        relu(&mut x);
+        assert_eq!(x, [0.0, 1.5, 3.5, 0.0]);
+        let mut s = vec![0.0f32; 2];
+        col_sum(&x, &mut s, 2, 2);
+        assert_eq!(s, [3.5, 1.5]);
+    }
+}

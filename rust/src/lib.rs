@@ -23,7 +23,8 @@
 //! | [`graph`] | CSR storage, builders, degree statistics |
 //! | [`gen`] | synthetic dataset registry (`arxiv_sim`, `reddit_sim`, …) |
 //! | [`sampler`] | host neighbor sampler + baseline block builder |
-//! | [`runtime`] | PJRT client, artifact manifest, executable cache |
+//! | [`kernel`] | native CPU engine: fused + baseline step variants |
+//! | [`runtime`] | PJRT client, artifact manifest, backend seam |
 //! | [`memory`] | transient-memory meter + analytic block model |
 //! | [`metrics`] | timers, robust stats, CSV logging |
 //! | [`coordinator`] | training loop driver, batch pipeline, profiling |
@@ -37,6 +38,7 @@ pub mod coordinator;
 pub mod gen;
 pub mod graph;
 pub mod json;
+pub mod kernel;
 pub mod memory;
 pub mod metrics;
 pub mod rng;

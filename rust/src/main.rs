@@ -27,7 +27,7 @@ use fusesampleagg::coordinator::{profile, DatasetCache, TrainConfig, Trainer,
 use fusesampleagg::gen::{builtin_spec, Dataset};
 use fusesampleagg::memory::{self, StepDims};
 use fusesampleagg::metrics;
-use fusesampleagg::runtime::Runtime;
+use fusesampleagg::runtime::{BackendChoice, Manifest, Runtime};
 use fusesampleagg::util;
 
 fn main() {
@@ -71,25 +71,37 @@ SUBCOMMANDS
   gen         --dataset NAME                       generate + print stats
   train       --variant fsa|dgl --dataset NAME --fanout K1xK2 --batch B
               [--steps N] [--warmup N] [--seed S] [--no-amp] [--eval]
-              [--threads N] [--prefetch on|off]
+              [--threads N] [--prefetch on|off] [--backend auto|native|pjrt]
   bench-grid  [--quick] [--datasets a,b] [--fanouts 10x10,15x10]
               [--batches 512,1024] [--steps N] [--warmup N] [--out FILE]
-              [--threads N] [--prefetch on|off]
+              [--threads N] [--prefetch on|off] [--backend auto|native|pjrt]
   table       --which 1|2|3|fig1|fig2|fig3|fig4|fig5 [--csv FILE]
   profile     [--steps N] [--warmup N] [--seed S]      (Table 3)
   memory      --dataset NAME --fanout K1xK2 --batch B   (analytic model)
   throughput  --dataset NAME [--fanout K1xK2] [--batch B] [--steps N]
               [--threads N] [--prefetch on|off] [--dispatch-ms X] [--sweep]
+              [--backend emulated|native] [--variant fsa|dgl]
               host sampling/batch pipeline: steps/sec + utilization
-              (no artifacts needed; dispatch is emulated)
+              (no artifacts needed; dispatch is emulated or native compute)
   inspect     --artifact NAME | --list
 
+BACKENDS
+  --backend auto    (default) run the AOT/PJRT artifact when it compiles,
+                    otherwise the native CPU engine — real host compute,
+                    no artifacts required
+  --backend native  always use the native engine
+  --backend pjrt    require the AOT artifact (error when missing/stubbed)
+
 PIPELINE KNOBS
-  --threads N       host sampler worker threads (0 = auto, default 1);
-                    sampling output is bitwise identical at any value
+  --threads N       host sampler + native-kernel worker threads (0 = auto,
+                    default 1); output is bitwise identical at any value
   --prefetch on     overlap host sampling of step t+1 with dispatch of
                     step t (double-buffered; default off)
 ";
+
+fn backend_choice(args: &Args) -> Result<BackendChoice> {
+    BackendChoice::parse(&args.str_or("backend", "auto"))
+}
 
 fn cmd_gen(args: &Args) -> Result<()> {
     let name = args.str_or("dataset", "tiny");
@@ -128,6 +140,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 42)?,
         threads: args.usize_or("threads", 1)?,
         prefetch: args.bool_or("prefetch", false)?,
+        backend: backend_choice(args)?,
     };
     let steps = args.usize_or("steps", 30)?;
     let warmup = args.usize_or("warmup", 5)?;
@@ -137,6 +150,7 @@ fn cmd_train(args: &Args) -> Result<()> {
              cfg.variant.as_str(), cfg.dataset, k1, k2, cfg.batch, cfg.amp,
              cfg.seed, cfg.threads, cfg.prefetch);
     let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;
+    println!("backend: {}", trainer.backend_name());
     for _ in 0..warmup {
         trainer.step()?;
     }
@@ -191,6 +205,7 @@ fn cmd_bench_grid(args: &Args) -> Result<()> {
     grid.warmup = args.usize_or("warmup", grid.warmup)?;
     grid.threads = args.usize_or("threads", grid.threads)?;
     grid.prefetch = args.bool_or("prefetch", grid.prefetch)?;
+    grid.backend = backend_choice(args)?;
     if grid.threads != 1 || grid.prefetch {
         eprintln!("note: --threads/--prefetch change step_ms/sample_ms \
                    semantics and the CSV schema does not record them — \
@@ -211,6 +226,19 @@ fn cmd_bench_grid(args: &Args) -> Result<()> {
     })?;
     metrics::write_csv(&out_path, &rows)?;
     println!("wrote {} rows to {}", rows.len(), out_path.display());
+
+    // An *explicit* `--backend native` run additionally emits the
+    // fused-vs-baseline summary under results/. Auto runs do not (what
+    // each cell resolved to isn't recorded per row), and the *canonical*
+    // cross-PR trajectory at the repo root is written only by the
+    // `fused_vs_baseline` bench — an ad-hoc grid must not overwrite it.
+    if grid.backend == BackendChoice::Native {
+        let json_path = util::results_dir().join("BENCH_native.json");
+        bench::write_native_json(&rows, &json_path)?;
+        println!("wrote native fused-vs-baseline summary to {}",
+                 json_path.display());
+    }
+
     println!("\n{}", render::table1(&rows));
     println!("{}", render::table2(&rows));
     Ok(())
@@ -302,6 +330,27 @@ fn cmd_throughput(args: &Args) -> Result<()> {
              ds.spec.n, ds.graph.num_edges(), t.ms());
 
     let (k1, k2) = args.fanout("fanout", (15, 10))?;
+    let native = match args.str_or("backend", "emulated").as_str() {
+        "native" => true,
+        "emulated" => false,
+        other => bail!("throughput --backend must be emulated|native, \
+                        got {other:?}"),
+    };
+    let variant = match args.str_or("variant", "dgl").as_str() {
+        "fsa" => Variant::Fsa,
+        "dgl" => Variant::Dgl,
+        v => bail!("--variant must be fsa|dgl, got {v:?}"),
+    };
+    // native dispatch measures the same model as `fsa train --backend
+    // native`: hyper-parameters come from the runtime manifest (the
+    // builtin one when no artifacts exist or the manifest is unreadable)
+    let (hidden, adamw) = match Runtime::from_env() {
+        Ok(rt) => (rt.manifest.hidden, rt.manifest.adamw),
+        Err(_) => {
+            let b = Manifest::builtin();
+            (b.hidden, b.adamw)
+        }
+    };
     let base_cfg = throughput::ThroughputConfig {
         hops: if k2 == 0 { 1 } else { 2 },
         k1,
@@ -317,6 +366,10 @@ fn cmd_throughput(args: &Args) -> Result<()> {
             .transpose()?
             .unwrap_or(2.0),
         seed: args.u64_or("seed", 42)?,
+        native,
+        variant,
+        hidden,
+        adamw,
         ..throughput::ThroughputConfig::new(&name)
     };
 

@@ -6,10 +6,14 @@
 //! remains is exactly the per-step transient footprint: uploaded index
 //! tensors, materialized blocks, activations, gradients, optimizer temps.
 //!
-//! Our meter mirrors that (DESIGN.md §3): the runtime reports measured
-//! upload/output buffer bytes, and this module contributes the analytic
-//! model of the executable-internal intermediates, derived from the same
-//! shape arithmetic as the paper's complexity summary (§4):
+//! Our meter mirrors that (DESIGN.md §3). On the **native backend** the
+//! per-step transient footprint is fully *measured*: the kernels record
+//! every materialized buffer (blocks, gathers, activations, gradients)
+//! into the [`MemoryMeter`] as it is allocated/released. On the PJRT
+//! backend the runtime reports measured upload/output buffer bytes and
+//! this module contributes the analytic model of the executable-internal
+//! intermediates, derived from the same shape arithmetic as the paper's
+//! complexity summary (§4):
 //!   baseline 2-hop:  Θ(B·(1+k1)·k2·D) block + activations
 //!   fused 2-hop:     Θ(B·D) output + saved indices; the gathered tile
 //!                    lives in VMEM only (reported separately).

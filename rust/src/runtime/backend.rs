@@ -1,0 +1,347 @@
+//! The execution-backend seam: one synchronized train-step dispatch.
+//!
+//! The coordinator's `Trainer` prepares batches (seed scheduling, host
+//! sampling, prefetch) and hands one [`StepInputs`] per step to a
+//! [`Backend`]; the backend owns the model/optimizer state and runs
+//! forward + backward + AdamW. Two implementations:
+//!
+//! * [`PjrtBackend`] (here) — the AOT path: upload per-step tensors,
+//!   dispatch one compiled artifact, read back state. With the in-crate
+//!   `xla` stub this fails at compile time with a clear error; with real
+//!   bindings it is the paper's measurement path.
+//! * [`crate::kernel::NativeBackend`] — real host compute, no artifacts
+//!   needed. `BackendChoice::Auto` (the default) tries PJRT and falls
+//!   back to native, so `fsa train` works end-to-end in this offline
+//!   build. See DESIGN_BACKEND.md for the re-vendoring contract.
+//!
+//! Transient accounting: backends record every per-step allocation into
+//! the coordinator's [`MemoryMeter`]; the native backend's numbers are
+//! fully measured, the PJRT backend adds the analytic model of the
+//! executable-internal intermediates ([`crate::memory`]) on top of its
+//! measured uploads/outputs.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::gen::Dataset;
+use crate::memory::{self, MemoryMeter, StepDims};
+use crate::metrics::Timer;
+use crate::sampler::{Block1, Block2};
+use crate::xla;
+
+use super::{init_params, Executable, Runtime};
+
+/// Which execution backend a trainer should use.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Try PJRT (artifact + compile), fall back to the native engine.
+    #[default]
+    Auto,
+    /// Native CPU engine (no artifacts needed).
+    Native,
+    /// PJRT only; errors when the artifact or the bindings are missing.
+    Pjrt,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Result<BackendChoice> {
+        Ok(match s {
+            "auto" => BackendChoice::Auto,
+            "native" => BackendChoice::Native,
+            "pjrt" => BackendChoice::Pjrt,
+            other => bail!("--backend must be auto|native|pjrt, got {other:?}"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendChoice::Auto => "auto",
+            BackendChoice::Native => "native",
+            BackendChoice::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Everything the host pipeline prepared for one step, by reference.
+pub struct StepInputs<'a> {
+    pub seeds: &'a [i32],
+    pub labels: &'a [i32],
+    /// Per-step base seed (shared sampling schedule across variants).
+    pub base: u64,
+    /// Host-materialized 1-hop block (baseline variant only).
+    pub block1: Option<&'a Block1>,
+    /// Host-materialized 2-hop block (baseline variant only).
+    pub block2: Option<&'a Block2>,
+}
+
+/// What one dispatch reports back to the coordinator.
+pub struct StepOutcome {
+    pub loss: f64,
+    /// Per-step uploads (params/opt state + batch tensors); 0 for native.
+    pub upload_ms: f64,
+    /// Synchronized dispatch (fwd + bwd + optimizer).
+    pub execute_ms: f64,
+    /// Output handling / state update; 0 for native (in-place update).
+    pub post_ms: f64,
+    /// Sampled (seed, neighbor) pairs counted inside the dispatch, when
+    /// the backend knows them for free (fused native kernels).
+    pub pairs: Option<u64>,
+}
+
+/// One synchronized train-step executor. Implementations own the model and
+/// optimizer state; the coordinator owns batching and measurement.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Run forward + backward + AdamW on one prepared batch, recording
+    /// per-step transient allocations into `meter`.
+    fn train_step(&mut self, step: usize, inp: &StepInputs<'_>,
+                  meter: &mut MemoryMeter) -> Result<StepOutcome>;
+
+    /// Forward-only logits `[seeds.len() * classes]` for evaluation.
+    /// `None` means "not supported here" — the PJRT path evaluates through
+    /// its dedicated AOT eval artifacts instead.
+    fn eval_logits(&mut self, _seeds: &[i32], _base: u64)
+                   -> Result<Option<Vec<f32>>> {
+        Ok(None)
+    }
+
+    /// Current parameters as host f32 tensors, canonical spec order.
+    fn params_f32(&self) -> Result<Vec<Vec<f32>>>;
+}
+
+/// The AOT/PJRT implementation of [`Backend`] (the paper's device path).
+pub struct PjrtBackend<'rt> {
+    rt: &'rt Runtime,
+    pub exe: Rc<Executable>,
+    fused: bool,
+    hops: u32,
+    save_indices: bool,
+    dims: StepDims,
+    /// Shared rowptr/col buffers — only fused artifacts consume them.
+    graph: Option<Rc<super::GraphBufs>>,
+    /// Shared f32 feature buffer (absent when the artifact wants bf16).
+    x_f32: Option<Rc<xla::PjRtBuffer>>,
+    /// Artifact-owned bf16 feature buffer (AMP storage).
+    x_bf16: Option<xla::PjRtBuffer>,
+    params: Vec<xla::Literal>,
+    mstate: Vec<xla::Literal>,
+    vstate: Vec<xla::Literal>,
+}
+
+impl<'rt> PjrtBackend<'rt> {
+    /// Load + compile `artifact` and set up static buffers and state.
+    /// Fails fast (before any training) when the bindings are stubbed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(rt: &'rt Runtime, ds: &Arc<Dataset>, artifact: &str,
+               fused: bool, hops: u32, batch: usize, k1: usize, k2: usize,
+               save_indices: bool, seed: u64) -> Result<PjrtBackend<'rt>> {
+        let exe = rt.load(artifact)?;
+        // static uploads, shared per dataset across trainers and eval;
+        // each variant only uploads what its artifact consumes
+        let graph = if fused { Some(rt.graph_bufs(ds)?) } else { None };
+        let x_dtype = exe
+            .spec
+            .inputs
+            .iter()
+            .find(|t| t.name == "x")
+            .map(|t| t.dtype)
+            .unwrap_or(super::Dtype::F32);
+        let (x_f32, x_bf16) = match x_dtype {
+            super::Dtype::Bf16 => (None, Some(rt.buf_bf16_from_f32(
+                &ds.features, &[ds.spec.n, ds.spec.d])?)),
+            _ => (Some(rt.features_f32(ds)?), None),
+        };
+
+        let np = exe.spec.n_params();
+        let pspecs = &exe.spec.inputs[..np];
+        let values = init_params(pspecs, seed);
+        let mut params = Vec::with_capacity(np);
+        let mut mstate = Vec::with_capacity(np);
+        let mut vstate = Vec::with_capacity(np);
+        for (s, vals) in pspecs.iter().zip(&values) {
+            params.push(lit_f32(vals, &s.shape)?);
+            mstate.push(lit_f32(&vec![0.0; vals.len()], &s.shape)?);
+            vstate.push(lit_f32(&vec![0.0; vals.len()], &s.shape)?);
+        }
+
+        let dims = StepDims {
+            batch,
+            k1,
+            k2,
+            d: ds.spec.d,
+            hidden: rt.manifest.hidden,
+            classes: ds.spec.c,
+            tile: exe.spec.tile,
+        };
+        Ok(PjrtBackend {
+            rt,
+            exe,
+            fused,
+            hops,
+            save_indices,
+            dims,
+            graph,
+            x_f32,
+            x_bf16,
+            params,
+            mstate,
+            vstate,
+        })
+    }
+}
+
+impl Backend for PjrtBackend<'_> {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn train_step(&mut self, step: usize, inp: &StepInputs<'_>,
+                  meter: &mut MemoryMeter) -> Result<StepOutcome> {
+        let b = self.dims.batch;
+        ensure!(inp.seeds.len() == b,
+                "expected {b} seeds, got {}", inp.seeds.len());
+
+        // ---- per-step uploads (params/opt state + batch tensors); static
+        // buffers (graph, features) are passed by reference.
+        let timer = Timer::start();
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(24);
+        let mut upload_bytes = 0u64;
+        for lit in self.params.iter().chain(&self.mstate).chain(&self.vstate) {
+            owned.push(self.rt.buf_from_literal(lit)?);
+            upload_bytes += lit.size_bytes() as u64;
+        }
+        owned.push(self.rt.buf_scalar_f32(step as f32)?);
+        upload_bytes += 4;
+
+        // (owned-index | static-ref) arg plan, in manifest input order
+        enum Arg {
+            Owned(usize),
+            Rowptr,
+            Col,
+            X,
+        }
+        let mut plan: Vec<Arg> = (0..owned.len()).map(Arg::Owned).collect();
+        match (self.fused, self.hops) {
+            (true, _) => {
+                plan.push(Arg::Rowptr);
+                plan.push(Arg::Col);
+                plan.push(Arg::X);
+                owned.push(self.rt.buf_i32(inp.seeds, &[b])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                owned.push(self.rt.buf_i32(inp.labels, &[b])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                owned.push(self.rt.buf_u64(&[inp.base], &[1])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                upload_bytes += (2 * b * 4 + 8) as u64;
+            }
+            (false, 2) => {
+                let blk = inp.block2
+                    .context("pipeline prepared no 2-hop block")?;
+                let f1w = 1 + self.dims.k1;
+                plan.push(Arg::X);
+                owned.push(self.rt.buf_i32(&blk.f1, &[b, f1w])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                owned.push(self.rt.buf_i32(&blk.s2, &[b, f1w, self.dims.k2])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                owned.push(self.rt.buf_i32(inp.labels, &[b])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                upload_bytes +=
+                    (blk.f1.len() * 4 + blk.s2.len() * 4 + b * 4) as u64;
+            }
+            (false, _) => {
+                let blk = inp.block1
+                    .context("pipeline prepared no 1-hop block")?;
+                let f1w = 1 + self.dims.k1;
+                plan.push(Arg::X);
+                owned.push(self.rt.buf_i32(&blk.f1, &[b, f1w])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                owned.push(self.rt.buf_i32(inp.labels, &[b])?);
+                plan.push(Arg::Owned(owned.len() - 1));
+                upload_bytes += (blk.f1.len() * 4 + b * 4) as u64;
+            }
+        }
+        let graph = self.graph.as_ref(); // present iff the variant is fused
+        let args: Vec<&xla::PjRtBuffer> = plan
+            .iter()
+            .map(|a| match a {
+                Arg::Owned(i) => &owned[*i],
+                Arg::Rowptr => &graph.expect("fused needs graph").rowptr,
+                Arg::Col => &graph.expect("fused needs graph").col,
+                Arg::X => match &self.x_bf16 {
+                    Some(b) => b,
+                    None => self.x_f32.as_deref().expect("f32 features"),
+                },
+            })
+            .collect();
+        let upload_ms = timer.ms();
+        meter.alloc(upload_bytes);
+
+        // ---- synchronized dispatch (fwd + bwd + AdamW in one artifact)
+        let timer = Timer::start();
+        let outputs = self.exe.run(&args).context("train step dispatch")?;
+        let execute_ms = timer.ms();
+
+        // ---- state update + loss read-back
+        let timer = Timer::start();
+        let np = self.exe.spec.n_params();
+        let mut outputs = outputs;
+        let loss_lit = outputs.pop().unwrap();
+        let loss = loss_lit.get_first_element::<f32>()? as f64;
+        let vs = outputs.split_off(2 * np);
+        let ms = outputs.split_off(np);
+        self.params = outputs;
+        self.mstate = ms;
+        self.vstate = vs;
+        let post_ms = timer.ms();
+
+        // measured uploads/outputs + analytic executable intermediates
+        let analytic = match (self.fused, self.hops) {
+            (false, 2) => memory::baseline2_transient(&self.dims),
+            (false, _) => memory::baseline1_transient(&self.dims),
+            (true, 2) => {
+                memory::fused2_transient(&self.dims, self.save_indices)
+            }
+            (true, _) => {
+                memory::fused1_transient(&self.dims, self.save_indices)
+            }
+        };
+        meter.alloc(analytic.intermediates + self.exe.spec.output_bytes());
+
+        Ok(StepOutcome { loss, upload_ms, execute_ms, post_ms, pairs: None })
+    }
+
+    fn params_f32(&self) -> Result<Vec<Vec<f32>>> {
+        self.params
+            .iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.len() <= 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_choice_parses_and_defaults() {
+        assert_eq!(BackendChoice::parse("auto").unwrap(), BackendChoice::Auto);
+        assert_eq!(BackendChoice::parse("native").unwrap(),
+                   BackendChoice::Native);
+        assert_eq!(BackendChoice::parse("pjrt").unwrap(), BackendChoice::Pjrt);
+        assert!(BackendChoice::parse("gpu").is_err());
+        assert_eq!(BackendChoice::default(), BackendChoice::Auto);
+        assert_eq!(BackendChoice::Native.as_str(), "native");
+    }
+}

@@ -118,6 +118,25 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Manifest-less default: the paper's hyper-parameters (§5, CPU-scale
+    /// hidden width) and no artifacts. Datasets resolve through
+    /// [`crate::gen::builtin_spec`]; every artifact lookup fails, steering
+    /// `BackendChoice::Auto` onto the native engine.
+    pub fn builtin() -> Manifest {
+        Manifest {
+            hidden: 64,
+            adamw: AdamwConfig {
+                lr: 3e-3,
+                b1: 0.9,
+                b2: 0.999,
+                eps: 1e-8,
+                wd: 5e-4,
+            },
+            datasets: BTreeMap::new(),
+            artifacts: BTreeMap::new(),
+        }
+    }
+
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading manifest {path:?} — run `make artifacts` first"))?;

@@ -16,6 +16,7 @@
 //! GPU-resident. Per-step tensors (seeds, labels, index blocks, params)
 //! are uploaded each step and counted by the memory meter.
 
+pub mod backend;
 pub mod manifest;
 
 use std::collections::HashMap;
@@ -24,8 +25,11 @@ use std::rc::Rc;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::gen::Dataset;
 use crate::xla;
 
+pub use backend::{Backend, BackendChoice, PjrtBackend, StepInputs,
+                  StepOutcome};
 pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
 
 /// A compiled artifact plus its manifest contract.
@@ -63,30 +67,92 @@ impl Executable {
     }
 }
 
+/// Static graph-array buffers (rowptr + col) of one dataset, uploaded once
+/// and shared by every fused-variant trainer/eval pass on that dataset —
+/// see [`Runtime::graph_bufs`]. The f32 feature buffer is cached
+/// separately ([`Runtime::features_f32`]) because baseline artifacts
+/// consume only `x`, and bf16 artifacts none of the f32 copies.
+pub struct GraphBufs {
+    pub rowptr: xla::PjRtBuffer,
+    pub col: xla::PjRtBuffer,
+}
+
 /// PJRT client + artifact cache. One per process.
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     dir: PathBuf,
     cache: std::cell::RefCell<HashMap<String, Rc<Executable>>>,
+    graph_cache: std::cell::RefCell<HashMap<String, Rc<GraphBufs>>>,
+    feat_cache: std::cell::RefCell<HashMap<String, Rc<xla::PjRtBuffer>>>,
 }
 
 impl Runtime {
     /// Create a CPU PJRT runtime over an artifacts directory.
     pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))?;
+        Self::with_manifest(artifacts_dir, manifest)
+    }
+
+    fn with_manifest(artifacts_dir: &Path, manifest: Manifest) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu()?;
         Ok(Runtime {
             client,
             manifest,
             dir: artifacts_dir.to_path_buf(),
             cache: Default::default(),
+            graph_cache: Default::default(),
+            feat_cache: Default::default(),
         })
     }
 
-    /// Default runtime (artifacts dir discovered from the repo root).
+    /// Default runtime: artifacts dir discovered from the repo root. When
+    /// no `manifest.json` exists (no `make artifacts` run — the normal
+    /// state of this offline build) the built-in manifest is used, which
+    /// has hyper-parameters and datasets but no artifacts: every PJRT
+    /// lookup fails cleanly and `BackendChoice::Auto` lands on the native
+    /// engine.
     pub fn from_env() -> Result<Runtime> {
-        Self::new(&crate::util::artifacts_dir())
+        let dir = crate::util::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Self::new(&dir)
+        } else {
+            Self::with_manifest(&dir, Manifest::builtin())
+        }
+    }
+
+    /// Static per-dataset graph arrays (rowptr, col), uploaded on first
+    /// use and cached for the process lifetime. Before this cache, every
+    /// trainer and every `evaluate_params` call re-uploaded them —
+    /// multiplying peak host memory whenever training and eval interleaved.
+    pub fn graph_bufs(&self, ds: &Dataset) -> Result<Rc<GraphBufs>> {
+        if let Some(b) = self.graph_cache.borrow().get(&ds.spec.name) {
+            return Ok(b.clone());
+        }
+        let n = ds.spec.n;
+        let bufs = Rc::new(GraphBufs {
+            rowptr: self.buf_i32(&ds.graph.rowptr, &[n + 1])?,
+            col: self.buf_i32(&ds.graph.col, &[ds.graph.e_cap()])?,
+        });
+        self.graph_cache
+            .borrow_mut()
+            .insert(ds.spec.name.clone(), bufs.clone());
+        Ok(bufs)
+    }
+
+    /// Static per-dataset f32 feature buffer, cached like
+    /// [`Runtime::graph_bufs`] (bf16 feature buffers are artifact-specific
+    /// and owned by their backend instead).
+    pub fn features_f32(&self, ds: &Dataset) -> Result<Rc<xla::PjRtBuffer>> {
+        if let Some(b) = self.feat_cache.borrow().get(&ds.spec.name) {
+            return Ok(b.clone());
+        }
+        let buf = Rc::new(
+            self.buf_f32(&ds.features, &[ds.spec.n, ds.spec.d])?);
+        self.feat_cache
+            .borrow_mut()
+            .insert(ds.spec.name.clone(), buf.clone());
+        Ok(buf)
     }
 
     pub fn client(&self) -> &xla::PjRtClient {

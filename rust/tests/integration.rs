@@ -40,6 +40,7 @@ fn tiny_cfg(variant: Variant, hops: u32, seed: u64) -> TrainConfig {
         seed,
         threads: 1,
         prefetch: false,
+        backend: Default::default(),
     }
 }
 
@@ -220,6 +221,7 @@ fn bf16_feature_artifact_trains() {
         seed: 42,
         threads: 1,
         prefetch: false,
+        backend: Default::default(),
     };
     let mut tr = Trainer::new_named(
         &rt, &mut cache, cfg,
