@@ -14,6 +14,7 @@
 
 use anyhow::Result;
 use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Trainer, Variant};
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::gen::{builtin_spec, Dataset};
 use fusesampleagg::rng::rand_counter;
 use fusesampleagg::runtime::Runtime;
@@ -23,10 +24,8 @@ fn losses(rt: &Runtime, cache: &mut DatasetCache, seed: u64,
           steps: usize) -> Result<Vec<f64>> {
     let cfg = TrainConfig {
         variant: Variant::Fsa,
-        hops: 2,
         dataset: "tiny".into(),
-        k1: 5,
-        k2: 3,
+        fanouts: Fanouts::of(&[5, 3]),
         batch: 64,
         amp: true,
         save_indices: true,

@@ -11,8 +11,9 @@
 use anyhow::Result;
 use fusesampleagg::bench::run_config;
 use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Variant};
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::gen::builtin_spec;
-use fusesampleagg::memory::{baseline2_transient, fused2_transient, StepDims};
+use fusesampleagg::memory::{baseline_transient, fused_transient, StepDims};
 use fusesampleagg::runtime::Runtime;
 use fusesampleagg::util::bytes_to_mb;
 
@@ -34,24 +35,27 @@ fn main() -> Result<()> {
              "meas DGL", "meas FSA", "ratio");
     println!("{:-<92}", "");
 
-    for (k1, k2) in [(10usize, 10usize), (15, 10), (25, 10)] {
+    // width sweep at depth 2, plus a 3-hop row at the 15·10 leaf budget
+    for fanouts in [Fanouts::of(&[10, 10]), Fanouts::of(&[15, 10]),
+                    Fanouts::of(&[25, 10]), Fanouts::of(&[15, 5, 2])] {
         for batch in [512usize, 1024] {
             let dims = StepDims {
-                batch, k1, k2,
+                batch,
+                fanouts: fanouts.clone(),
                 d: spec.d,
                 hidden: rt.manifest.hidden,
                 classes: spec.c,
                 tile: 64,
             };
-            let model_dgl = baseline2_transient(&dims).peak_hbm();
-            let model_fsa = fused2_transient(&dims, true).peak_hbm();
+            let model_dgl = baseline_transient(&dims).peak_hbm();
+            let model_fsa = fused_transient(&dims, true).peak_hbm();
 
             let mut measure = |variant| -> Result<u64> {
                 let cfg = TrainConfig {
                     variant,
-                    hops: 2,
                     dataset: dataset.clone(),
-                    k1, k2, batch,
+                    fanouts: fanouts.clone(),
+                    batch,
                     amp: true,
                     save_indices: true,
                     seed: 42,
@@ -67,15 +71,16 @@ fn main() -> Result<()> {
 
             println!("{:<10} {:<7} | {:>9.1}M {:>9.2}M {:>6.1}x | {:>9.1}M \
                       {:>9.2}M {:>6.1}x",
-                     format!("{k1}-{k2}"), batch,
+                     fanouts.label(), batch,
                      bytes_to_mb(model_dgl), bytes_to_mb(model_fsa),
                      model_dgl as f64 / model_fsa as f64,
                      bytes_to_mb(meas_dgl), bytes_to_mb(meas_fsa),
                      meas_dgl as f64 / meas_fsa as f64);
         }
     }
-    println!("\nThe materialized block Θ(B·(1+k1)·k2·D) dominates the \
-              baseline; the fused path's transients are Θ(B·D) + saved \
-              indices (paper §4 complexity summary).");
+    println!("\nThe materialized block Θ(B·Π(1+k_j)·k_L·D) dominates the \
+              baseline and multiplies with depth; the fused path's \
+              transients stay Θ(B·D) + saved indices (paper §4 complexity \
+              summary).");
     Ok(())
 }

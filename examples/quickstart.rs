@@ -12,6 +12,7 @@
 
 use anyhow::Result;
 use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Trainer, Variant};
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::runtime::Runtime;
 
 fn main() -> Result<()> {
@@ -22,10 +23,8 @@ fn main() -> Result<()> {
     // 2. a training configuration = one cell of the paper's grid
     let cfg = TrainConfig {
         variant: Variant::Fsa,      // the fused operator
-        hops: 2,
         dataset: "tiny".into(),
-        k1: 5,
-        k2: 3,
+        fanouts: Fanouts::of(&[5, 3]), // any depth: &[5], &[5,3], &[5,3,2]…
         batch: 64,
         amp: true,
         save_indices: true,         // exact backward replay (paper §3.3)

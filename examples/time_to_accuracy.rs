@@ -10,6 +10,7 @@
 
 use anyhow::Result;
 use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Trainer, Variant};
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::metrics::Timer;
 use fusesampleagg::runtime::Runtime;
 
@@ -18,10 +19,8 @@ fn run(rt: &Runtime, cache: &mut DatasetCache, variant: Variant,
        -> Result<(f64, usize, f64)> {
     let cfg = TrainConfig {
         variant,
-        hops: 2,
         dataset: dataset.into(),
-        k1: 15,
-        k2: 10,
+        fanouts: Fanouts::of(&[15, 10]),
         batch: 1024,
         amp: true,
         save_indices: true,

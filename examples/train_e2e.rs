@@ -10,13 +10,15 @@
 //!
 //! ```sh
 //! cargo run --release --example train_e2e \
-//!     [-- steps=300 dataset=products_sim threads=4 prefetch=on]
+//!     [-- steps=300 dataset=products_sim threads=4 prefetch=on \
+//!      fanout=15x10x5]
 //! ```
 
 use std::fmt::Write as _;
 
 use anyhow::Result;
 use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Trainer, Variant};
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::metrics::{summarize, Timer};
 use fusesampleagg::runtime::Runtime;
 use fusesampleagg::util;
@@ -26,6 +28,7 @@ fn main() -> Result<()> {
     let mut dataset = "products_sim".to_string();
     let mut threads = 1usize;
     let mut prefetch = false;
+    let mut fanouts = Fanouts::of(&[15, 10]);
     for arg in std::env::args().skip(1) {
         if let Some(v) = arg.strip_prefix("steps=") {
             steps = v.parse()?;
@@ -35,17 +38,18 @@ fn main() -> Result<()> {
             threads = v.parse()?;
         } else if let Some(v) = arg.strip_prefix("prefetch=") {
             prefetch = v == "on" || v == "true";
+        } else if let Some(v) = arg.strip_prefix("fanout=") {
+            fanouts = Fanouts::parse(v)?;
         }
     }
 
     let rt = Runtime::from_env()?;
     let mut cache = DatasetCache::new();
+    let hops = fanouts.depth();
     let cfg = TrainConfig {
         variant: Variant::Fsa,
-        hops: 2,
         dataset: dataset.clone(),
-        k1: 15,
-        k2: 10,
+        fanouts,
         batch: 1024,
         amp: true,
         save_indices: true,
@@ -56,7 +60,7 @@ fn main() -> Result<()> {
     };
     let total = Timer::start();
     let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;
-    println!("e2e: training fsa2 on {dataset} ({} nodes, {} edges, {} \
+    println!("e2e: training fsa{hops} on {dataset} ({} nodes, {} edges, {} \
               classes) for {steps} steps",
              trainer.ds.spec.n, trainer.ds.graph.num_edges(),
              trainer.ds.spec.c);

@@ -7,6 +7,7 @@ use std::fmt::Write as _;
 
 use fusesampleagg::bench::{run_config, save_exhibit};
 use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Variant};
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::metrics::{self, BenchRow};
 use fusesampleagg::runtime::Runtime;
 use fusesampleagg::util;
@@ -29,9 +30,9 @@ fn main() -> anyhow::Result<()> {
     let run = |cache: &mut DatasetCache, cfg: TrainConfig|
                    -> anyhow::Result<BenchRow> {
         let row = run_config(&rt, cache, cfg, warmup, steps)?;
-        eprintln!("  abl {:<13} {:<4} hops{} f{:>2}x{:<2} amp={} save={}: \
+        eprintln!("  abl {:<13} {:<4} hops{} f{:<8} amp={} save={}: \
                    {:>8.2} ms/step",
-                  row.dataset, row.variant, row.hops, row.k1, row.k2, row.amp,
+                  row.dataset, row.variant, row.hops, row.fanout, row.amp,
                   row.steps > 0, row.step_ms);
         Ok(row)
     };
@@ -41,9 +42,9 @@ fn main() -> anyhow::Result<()> {
     for amp in [true, false] {
         for variant in [Variant::Dgl, Variant::Fsa] {
             let cfg = TrainConfig {
-                variant, hops: 2, dataset: "arxiv_sim".into(),
-                k1: 15, k2: 10, batch: 1024, amp, save_indices: true,
-                seed: 42, threads: 1, prefetch: false,
+                variant, dataset: "arxiv_sim".into(),
+                fanouts: Fanouts::of(&[15, 10]), batch: 1024, amp,
+                save_indices: true, seed: 42, threads: 1, prefetch: false,
                 backend: Default::default(),
             };
             let r = run(&mut cache, cfg)?;
@@ -53,13 +54,14 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // --- 1-hop vs 2-hop (k=10, b1024, all datasets)
-    let _ = writeln!(out, "\n[B] 1-hop vs 2-hop — k1=10, B=1024, AMP on");
+    // --- depth 1/2/3 at k1=10 (b1024, all datasets)
+    let _ = writeln!(out, "\n[B] sampling depth 1/2/3 — k1=10, B=1024, \
+                           AMP on");
     for ds in ["arxiv_sim", "reddit_sim", "products_sim"] {
-        for (hops, k2) in [(1u32, 0usize), (2, 10)] {
+        for ks in [&[10usize][..], &[10, 10][..], &[10, 5, 5][..]] {
             for variant in [Variant::Dgl, Variant::Fsa] {
                 let cfg = TrainConfig {
-                    variant, hops, dataset: ds.into(), k1: 10, k2,
+                    variant, dataset: ds.into(), fanouts: Fanouts::of(ks),
                     batch: 1024, amp: true, save_indices: true, seed: 42,
                     threads: 1, prefetch: false,
                     backend: Default::default(),
@@ -67,7 +69,7 @@ fn main() -> anyhow::Result<()> {
                 let r = run(&mut cache, cfg)?;
                 let _ = writeln!(out, "  {:<13} {}-hop {:<4}: {:>8.2} ms/step \
                                        ({:.1} MB transient)",
-                                 ds, hops, r.variant, r.step_ms,
+                                 ds, ks.len(), r.variant, r.step_ms,
                                  util::bytes_to_mb(r.peak_transient_bytes));
                 rows.push(r);
             }
@@ -80,9 +82,9 @@ fn main() -> anyhow::Result<()> {
                            forward-profiling mode, §3.2)");
     for save in [true, false] {
         let cfg = TrainConfig {
-            variant: Variant::Fsa, hops: 2, dataset: "products_sim".into(),
-            k1: 15, k2: 10, batch: 1024, amp: true, save_indices: save,
-            seed: 42, threads: 1, prefetch: false,
+            variant: Variant::Fsa, dataset: "products_sim".into(),
+            fanouts: Fanouts::of(&[15, 10]), batch: 1024, amp: true,
+            save_indices: save, seed: 42, threads: 1, prefetch: false,
             backend: Default::default(),
         };
         let r = run(&mut cache, cfg)?;
@@ -105,8 +107,9 @@ fn main() -> anyhow::Result<()> {
             ("bf16", "fsa2_train_products_sim_f15x10_b1024_ampOn_xbf16"),
         ] {
             let cfg = TrainConfig {
-                variant: Variant::Fsa, hops: 2,
-                dataset: "products_sim".into(), k1: 15, k2: 10, batch: 1024,
+                variant: Variant::Fsa,
+                dataset: "products_sim".into(),
+                fanouts: Fanouts::of(&[15, 10]), batch: 1024,
                 amp: true, save_indices: true, seed: 42,
                 threads: 1, prefetch: false,
                 backend: Default::default(),

@@ -14,8 +14,8 @@ fn main() -> anyhow::Result<()> {
     let mut cache = DatasetCache::new();
     let grid = env_overrides(Grid::fig3());
     let rows = run_grid(&rt, &mut cache, &grid, |r| {
-        eprintln!("  fig3 {:<4} f{:>2}x{} s{}: {:>8.2} ms/step", r.variant,
-                  r.k1, r.k2, r.repeat_seed, r.step_ms);
+        eprintln!("  fig3 {:<4} f{:<8} s{}: {:>8.2} ms/step", r.variant,
+                  r.fanout, r.repeat_seed, r.step_ms);
     })?;
     metrics::write_csv(&util::results_dir().join("fig3.csv"), &rows)?;
     save_exhibit("fig3", &render::fig3(&rows));

@@ -3,13 +3,17 @@
 //! comparison, runnable with no artifacts and no PJRT bindings.
 //!
 //! Runs both variants over the three `*_sim` datasets at the paper's main
-//! cell (fanout 15x10, batch 1024), reports per-step time, speedup, and
-//! *measured* peak transient bytes, and writes the cross-PR trajectory
-//! artifact `BENCH_native.json` at the repo root. Scale down with
+//! cell (fanout 15x10, batch 1024) **plus a depth axis**: fanouts of depth
+//! 1/2/3 at a matched 150-leaves-per-seed budget (150, 15x10, 15x5x2), so
+//! the transient-ratio-vs-depth trajectory is recorded at equal gather
+//! volume. Reports per-step time, steps/sec, speedup, and *measured* peak
+//! transient bytes per depth, and writes the cross-PR trajectory artifact
+//! `BENCH_native.json` at the repo root. Scale down with
 //! FSA_BENCH_QUICK=1 / FSA_BENCH_STEPS / FSA_BENCH_SEEDS.
 
 use fusesampleagg::bench::{self, env_overrides, save_exhibit, Grid};
 use fusesampleagg::coordinator::DatasetCache;
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::runtime::{BackendChoice, Runtime};
 use fusesampleagg::util;
 
@@ -19,7 +23,9 @@ fn main() -> anyhow::Result<()> {
     let grid = env_overrides(Grid {
         datasets: vec!["arxiv_sim".into(), "reddit_sim".into(),
                        "products_sim".into()],
-        fanouts: vec![(15, 10)],
+        // depth axis at a matched 150-leaf budget: 150 = 15·10 = 15·5·2
+        fanouts: vec![Fanouts::of(&[150]), Fanouts::of(&[15, 10]),
+                      Fanouts::of(&[15, 5, 2])],
         batches: vec![1024],
         steps: 20,
         warmup: 3,
@@ -29,10 +35,10 @@ fn main() -> anyhow::Result<()> {
     });
 
     let rows = bench::run_grid(&rt, &mut cache, &grid, |r| {
-        eprintln!("  {:<14} {:<4} b{} seed {}: {:>8.2} ms/step \
+        eprintln!("  {:<14} {:<4} f{:<8} b{} seed {}: {:>8.2} ms/step \
                    ({:.1} MB transient)",
-                  r.dataset, r.variant, r.batch, r.repeat_seed, r.step_ms,
-                  util::bytes_to_mb(r.peak_transient_bytes));
+                  r.dataset, r.variant, r.fanout, r.batch, r.repeat_seed,
+                  r.step_ms, util::bytes_to_mb(r.peak_transient_bytes));
     })?;
 
     let json = bench::native_bench_json(&rows);
@@ -42,23 +48,30 @@ fn main() -> anyhow::Result<()> {
 
     // human-readable exhibit with the acceptance-shaped summary
     let mut out = String::from(
-        "fused vs baseline — native CPU engine, fanout 15x10, batch 1024\n");
+        "fused vs baseline — native CPU engine, batch 1024, depths 1/2/3 \
+         at a matched 150-leaf budget\n");
     let empty = Vec::new();
     let cells = json.get("cells").and_then(|c| c.as_arr()).unwrap_or(&empty);
     out.push_str(&format!(
-        "{:<14} {:>12} {:>12} {:>9} {:>12} {:>12} {:>9}\n",
-        "dataset", "fused ms", "base ms", "speedup", "fused MB", "base MB",
-        "mem x"));
+        "{:<14} {:<9} {:>6} {:>11} {:>11} {:>9} {:>11} {:>11} {:>9}\n",
+        "dataset", "fanout", "depth", "fused ms", "base ms", "speedup",
+        "fused MB", "base MB", "mem x"));
     for cell in cells {
         let f = |k: &str| cell.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
         out.push_str(&format!(
-            "{:<14} {:>12.2} {:>12.2} {:>8.2}x {:>12.2} {:>12.2} {:>8.1}x\n",
+            "{:<14} {:<9} {:>6} {:>11.2} {:>11.2} {:>8.2}x {:>11.2} \
+             {:>11.2} {:>8.1}x\n",
             cell.get("dataset").and_then(|v| v.as_str()).unwrap_or("?"),
+            cell.get("fanout").and_then(|v| v.as_str()).unwrap_or("?"),
+            f("depth") as u32,
             f("fused_step_ms"), f("baseline_step_ms"), f("speedup"),
             util::bytes_to_mb(f("fused_peak_transient_bytes") as u64),
             util::bytes_to_mb(f("baseline_peak_transient_bytes") as u64),
             f("transient_ratio")));
     }
+    out.push_str("\n(the mem-x column should grow with depth: the baseline \
+                  block multiplies by (1+k) per hop, the fused transients \
+                  only add saved-index rows)\n");
     save_exhibit("fused_vs_baseline", &out);
     println!("wrote {}", repo.join("BENCH_native.json").display());
     Ok(())

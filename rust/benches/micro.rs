@@ -6,6 +6,7 @@
 //! if the host sampler dominated the baseline step, the fused-vs-baseline
 //! comparison would be measuring the sampler, not the materialization gap.
 
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::gen::{builtin_spec, Dataset};
 use fusesampleagg::metrics::Timer;
 use fusesampleagg::rng::{rand_counter, SplitMix64};
@@ -47,18 +48,28 @@ fn main() -> anyhow::Result<()> {
     let seeds: Vec<i32> = (0..1024)
         .map(|_| rng.next_below(ds.spec.n as u64) as i32)
         .collect();
-    let ms = bench("sampler: build_block2 b1024 f15x10", 20, || {
-        std::hint::black_box(sampler::build_block2(&ds.graph, &seeds, 15, 10,
-                                                   rng.next_u64()));
+    let fo = Fanouts::of(&[15, 10]);
+    let ms = bench("sampler: build_block b1024 f15x10", 20, || {
+        std::hint::black_box(sampler::build_block(&ds.graph, &seeds, &fo,
+                                                  rng.next_u64()));
     });
     let pairs = 1024.0 * (16.0 * 10.0 + 15.0);
     println!("{:<44} {:>10.1} Mpairs/s", "  -> sampler throughput",
              pairs / ms / 1e3);
 
-    bench("sampler: fused2_sampled_pairs (untimed path)", 20, || {
-        std::hint::black_box(sampler::fused2_sampled_pairs(
-            &ds.graph, &seeds, 15, 10, rng.next_u64()));
+    bench("sampler: fused_sampled_pairs (untimed path)", 20, || {
+        std::hint::black_box(sampler::fused_sampled_pairs(
+            &ds.graph, &seeds, &fo, rng.next_u64()));
     });
+
+    // depth scaling of the block builder (matched 150-leaf budget)
+    for ks in [&[150usize][..], &[15, 10][..], &[15, 5, 2][..]] {
+        let f = Fanouts::of(ks);
+        bench(&format!("sampler: build_block b1024 f{f}"), 10, || {
+            std::hint::black_box(sampler::build_block(&ds.graph, &seeds, &f,
+                                                      rng.next_u64()));
+        });
+    }
 
     // parallel sampler thread scaling (the tentpole's sharded host path;
     // output is bitwise identical to the serial sampler at any count)
@@ -66,9 +77,9 @@ fn main() -> anyhow::Result<()> {
     for threads in [2usize, 4, 8] {
         let ps = ParallelSampler::new(threads);
         let pms = bench(
-            &format!("sampler: parallel build_block2 t{threads}"), 20, || {
-                std::hint::black_box(ps.build_block2(&ds.graph, &seeds, 15,
-                                                     10, rng.next_u64()));
+            &format!("sampler: parallel build_block t{threads}"), 20, || {
+                std::hint::black_box(ps.build_block(&ds.graph, &seeds, &fo,
+                                                    rng.next_u64()));
             });
         println!("{:<44} {:>10.2}x vs serial", "  -> speedup",
                  serial_ms / pms);

@@ -20,8 +20,8 @@ fn main() -> anyhow::Result<()> {
                   * grid.variants.len(),
               grid.seeds.len(), grid.steps);
     let rows = run_grid(&rt, &mut cache, &grid, |r| {
-        eprintln!("  {:<13} {:<4} f{:>2}x{} b{:<4} s{}: {:>8.2} ms/step",
-                  r.dataset, r.variant, r.k1, r.k2, r.batch, r.repeat_seed,
+        eprintln!("  {:<13} {:<4} f{:<8} b{:<4} s{}: {:>8.2} ms/step",
+                  r.dataset, r.variant, r.fanout, r.batch, r.repeat_seed,
                   r.step_ms);
     })?;
     metrics::write_csv(&util::results_dir().join("bench.csv"), &rows)?;

@@ -18,8 +18,8 @@ fn main() -> anyhow::Result<()> {
                           ..Grid::default() };
     grid = env_overrides(grid);
     let rows = run_grid(&rt, &mut cache, &grid, |r| {
-        eprintln!("  mem {:<13} {:<4} f{:>2}x{} b{:<4}: {:>9.1} MB transient",
-                  r.dataset, r.variant, r.k1, r.k2, r.batch,
+        eprintln!("  mem {:<13} {:<4} f{:<8} b{:<4}: {:>9.1} MB transient",
+                  r.dataset, r.variant, r.fanout, r.batch,
                   util::bytes_to_mb(r.peak_transient_bytes));
     })?;
     metrics::write_csv(&util::results_dir().join("memory.csv"), &rows)?;

@@ -12,6 +12,7 @@ use std::fmt::Write as _;
 use fusesampleagg::bench::save_exhibit;
 use fusesampleagg::coordinator::{measure, DatasetCache, TrainConfig, Trainer,
                                  Variant};
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::metrics::median;
 use fusesampleagg::runtime::Runtime;
 use fusesampleagg::util::fmt_bytes;
@@ -33,10 +34,8 @@ fn main() -> anyhow::Result<()> {
         let name = format!("fsa2_train_products_sim_f15x10_b1024_ampOn_t{tile}");
         let cfg = TrainConfig {
             variant: Variant::Fsa,
-            hops: 2,
             dataset: "products_sim".into(),
-            k1: 15,
-            k2: 10,
+            fanouts: Fanouts::of(&[15, 10]),
             batch: 1024,
             amp: true,
             save_indices: true,

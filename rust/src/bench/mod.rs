@@ -4,7 +4,9 @@
 //! Runs (dataset × fanout × batch × variant × repeat) with the paper's
 //! protocol (warmup then timed steps, medians over repeats with seeds
 //! {42,43,44}), emits a single CSV (`results/bench.csv`), and [`render`]
-//! regenerates every table/figure from that CSV.
+//! regenerates every table/figure from that CSV. Fanouts are full
+//! [`Fanouts`] lists, so a grid can sweep depth as well as width (see
+//! [`Grid::depth_axis`]).
 
 pub mod render;
 pub mod throughput;
@@ -12,6 +14,7 @@ pub mod throughput;
 use anyhow::Result;
 
 use crate::coordinator::{measure, DatasetCache, TrainConfig, Trainer, Variant};
+use crate::fanout::Fanouts;
 use crate::metrics::{median, median_over_repeats, BenchRow};
 use crate::runtime::{BackendChoice, Runtime};
 
@@ -19,15 +22,13 @@ use crate::runtime::{BackendChoice, Runtime};
 #[derive(Clone, Debug)]
 pub struct Grid {
     pub datasets: Vec<String>,
-    pub fanouts: Vec<(usize, usize)>,
+    pub fanouts: Vec<Fanouts>,
     pub batches: Vec<usize>,
     pub amp: bool,
     pub steps: usize,
     pub warmup: usize,
     pub seeds: Vec<u64>,
     pub variants: Vec<Variant>,
-    /// 2 for the main grid; 1 runs the 1-hop ablation artifacts.
-    pub hops: u32,
     /// Host sampler threads (paper protocol: 1 = serial; output identical).
     pub threads: usize,
     /// Overlap host sampling with dispatch (paper protocol: off).
@@ -42,14 +43,14 @@ impl Default for Grid {
         Grid {
             datasets: vec!["arxiv_sim".into(), "reddit_sim".into(),
                            "products_sim".into()],
-            fanouts: vec![(10, 10), (15, 10), (25, 10)],
+            fanouts: vec![Fanouts::of(&[10, 10]), Fanouts::of(&[15, 10]),
+                          Fanouts::of(&[25, 10])],
             batches: vec![512, 1024],
             amp: true,
             steps: 30,
             warmup: 5,
             seeds: vec![42, 43, 44],
             variants: vec![Variant::Dgl, Variant::Fsa],
-            hops: 2,
             threads: 1,
             prefetch: false,
             backend: BackendChoice::Auto,
@@ -62,7 +63,7 @@ impl Grid {
     pub fn quick() -> Self {
         Grid {
             datasets: vec!["arxiv_sim".into()],
-            fanouts: vec![(15, 10)],
+            fanouts: vec![Fanouts::of(&[15, 10])],
             batches: vec![512],
             steps: 5,
             warmup: 1,
@@ -75,7 +76,7 @@ impl Grid {
     pub fn fig2() -> Self {
         Grid {
             datasets: vec!["products_sim".into()],
-            fanouts: vec![(15, 10)],
+            fanouts: vec![Fanouts::of(&[15, 10])],
             batches: vec![128, 256, 512, 1024, 2048],
             ..Default::default()
         }
@@ -85,6 +86,18 @@ impl Grid {
     pub fn fig3() -> Self {
         Grid {
             datasets: vec!["arxiv_sim".into()],
+            batches: vec![1024],
+            ..Default::default()
+        }
+    }
+
+    /// Depth axis: fanouts of depth 1/2/3 at a matched 150-leaves-per-seed
+    /// budget (150 = 15·10 = 15·5·2), so cross-depth rows compare the
+    /// same leaf gather volume and isolate the depth cost itself.
+    pub fn depth_axis() -> Self {
+        Grid {
+            fanouts: vec![Fanouts::of(&[150]), Fanouts::of(&[15, 10]),
+                          Fanouts::of(&[15, 5, 2])],
             batches: vec![1024],
             ..Default::default()
         }
@@ -147,9 +160,8 @@ pub fn run_config(rt: &Runtime, cache: &mut DatasetCache, cfg: TrainConfig,
     Ok(BenchRow {
         dataset: cfg.dataset.clone(),
         variant: cfg.variant.as_str().to_string(),
-        hops: cfg.hops,
-        k1: cfg.k1 as u32,
-        k2: cfg.k2 as u32,
+        hops: cfg.hops(),
+        fanout: cfg.fanouts.label(),
         batch: cfg.batch as u32,
         amp: cfg.amp,
         repeat_seed: cfg.seed,
@@ -170,16 +182,14 @@ pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
                 mut progress: impl FnMut(&BenchRow)) -> Result<Vec<BenchRow>> {
     let mut rows = Vec::new();
     for ds in &grid.datasets {
-        for &(k1, k2) in &grid.fanouts {
+        for fanouts in &grid.fanouts {
             for &batch in &grid.batches {
                 for &variant in &grid.variants {
                     for &seed in &grid.seeds {
                         let cfg = TrainConfig {
                             variant,
-                            hops: grid.hops,
                             dataset: ds.clone(),
-                            k1,
-                            k2: if grid.hops == 2 { k2 } else { 0 },
+                            fanouts: fanouts.clone(),
                             batch,
                             amp: grid.amp,
                             save_indices: true,
@@ -201,21 +211,22 @@ pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
 }
 
 /// Reduce fused-vs-baseline rows to the `BENCH_native.json` trajectory
-/// artifact: one cell per (dataset, fanout, batch) with the median step
-/// time, throughput, and peak transient bytes of each variant plus the
-/// fused-over-baseline ratios. Written from `fsa bench-grid` native runs
-/// and the `fused_vs_baseline` bench target so the perf numbers are
+/// artifact: one cell per (dataset, fanout, batch) with the depth, the
+/// median step time, steps/sec, and peak transient bytes of each variant,
+/// plus the fused-over-baseline ratios. Written from `fsa bench-grid`
+/// native runs and the `fused_vs_baseline` bench target so the perf
+/// numbers — including the transient-ratio-vs-depth trajectory — are
 /// comparable across PRs.
 pub fn native_bench_json(rows: &[BenchRow]) -> crate::json::Value {
     use crate::json::Value;
     use std::collections::BTreeMap;
 
     let med = median_over_repeats(rows);
-    let mut cells: BTreeMap<(String, u32, u32, u32),
+    let mut cells: BTreeMap<(String, u32, String, u32),
                             (Option<BenchRow>, Option<BenchRow>)> =
         BTreeMap::new();
     for r in med {
-        let key = (r.dataset.clone(), r.k1, r.k2, r.batch);
+        let key = (r.dataset.clone(), r.hops, r.fanout.clone(), r.batch);
         let slot = cells.entry(key).or_default();
         match r.variant.as_str() {
             "fsa" => slot.0 = Some(r),
@@ -226,11 +237,11 @@ pub fn native_bench_json(rows: &[BenchRow]) -> crate::json::Value {
 
     let num = Value::Num;
     let mut out_cells = Vec::new();
-    for ((dataset, k1, k2, batch), (fsa, dgl)) in cells {
+    for ((dataset, hops, fanout, batch), (fsa, dgl)) in cells {
         let mut obj = BTreeMap::new();
         obj.insert("dataset".into(), Value::Str(dataset));
-        obj.insert("k1".into(), num(k1 as f64));
-        obj.insert("k2".into(), num(k2 as f64));
+        obj.insert("depth".into(), num(hops as f64));
+        obj.insert("fanout".into(), Value::Str(fanout));
         obj.insert("batch".into(), num(batch as f64));
         if let Some(f) = &fsa {
             obj.insert("fused_step_ms".into(), num(f.step_ms));
@@ -279,7 +290,9 @@ mod tests {
     fn default_grid_is_the_paper_grid() {
         let g = Grid::default();
         assert_eq!(g.datasets.len(), 3);
-        assert_eq!(g.fanouts, vec![(10, 10), (15, 10), (25, 10)]);
+        assert_eq!(g.fanouts,
+                   vec![Fanouts::of(&[10, 10]), Fanouts::of(&[15, 10]),
+                        Fanouts::of(&[25, 10])]);
         assert_eq!(g.batches, vec![512, 1024]);
         assert_eq!(g.steps, 30);
         assert_eq!(g.warmup, 5);
@@ -293,13 +306,23 @@ mod tests {
         assert_eq!(Grid::fig3().batches, vec![1024]);
     }
 
-    fn row(variant: &str, seed: u64, step_ms: f64, peak: u64) -> BenchRow {
+    #[test]
+    fn depth_axis_matches_leaf_budget_across_depths() {
+        let g = Grid::depth_axis();
+        assert_eq!(g.fanouts.len(), 3);
+        for (i, f) in g.fanouts.iter().enumerate() {
+            assert_eq!(f.depth(), i + 1);
+            assert_eq!(f.leaf_count(), 150, "{f}");
+        }
+    }
+
+    fn row(variant: &str, fanout: &str, hops: u32, seed: u64, step_ms: f64,
+           peak: u64) -> BenchRow {
         BenchRow {
             dataset: "tiny".into(),
             variant: variant.into(),
-            hops: 2,
-            k1: 5,
-            k2: 3,
+            hops,
+            fanout: fanout.into(),
             batch: 64,
             amp: true,
             repeat_seed: seed,
@@ -318,16 +341,18 @@ mod tests {
     #[test]
     fn native_json_pairs_variants_and_computes_ratios() {
         let rows = vec![
-            row("fsa", 42, 1.0, 100),
-            row("fsa", 43, 1.2, 110),
-            row("dgl", 42, 3.0, 1000),
-            row("dgl", 43, 3.4, 1100),
+            row("fsa", "5x3", 2, 42, 1.0, 100),
+            row("fsa", "5x3", 2, 43, 1.2, 110),
+            row("dgl", "5x3", 2, 42, 3.0, 1000),
+            row("dgl", "5x3", 2, 43, 3.4, 1100),
         ];
         let v = native_bench_json(&rows);
         assert_eq!(v.get("bench").unwrap().as_str(),
                    Some("fused_vs_baseline"));
         let cells = v.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].get("fanout").unwrap().as_str(), Some("5x3"));
+        assert_eq!(cells[0].get("depth").unwrap().as_f64(), Some(2.0));
         let speedup = cells[0].get("speedup").unwrap().as_f64().unwrap();
         assert!((speedup - 3.2 / 1.1).abs() < 1e-9, "speedup {speedup}");
         let ratio =
@@ -336,5 +361,27 @@ mod tests {
         // round-trips through the writer grammar
         let text = format!("{v}");
         assert!(crate::json::parse(&text).is_ok(), "{text}");
+    }
+
+    #[test]
+    fn native_json_keeps_depth_cells_separate() {
+        let rows = vec![
+            row("fsa", "150", 1, 42, 1.0, 100),
+            row("dgl", "150", 1, 42, 2.0, 500),
+            row("fsa", "15x10", 2, 42, 1.0, 120),
+            row("dgl", "15x10", 2, 42, 3.0, 1500),
+            row("fsa", "15x5x2", 3, 42, 1.0, 140),
+            row("dgl", "15x5x2", 3, 42, 4.0, 4000),
+        ];
+        let v = native_bench_json(&rows);
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 3);
+        // the transient ratio trajectory across depth is recoverable
+        let ratios: Vec<f64> = cells
+            .iter()
+            .map(|c| c.get("transient_ratio").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(ratios.len(), 3);
+        assert!(ratios.iter().all(|&r| r > 1.0), "{ratios:?}");
     }
 }

@@ -23,20 +23,18 @@ use crate::util::{bytes_to_mb, fmt_ms};
 #[derive(Clone, Debug)]
 pub struct Pair {
     pub dataset: String,
-    pub k1: u32,
-    pub k2: u32,
+    /// Sampling depth (fanout segment count).
+    pub hops: u32,
+    /// Canonical fanout label, e.g. "15x10" or "10x5x5".
+    pub fanout: String,
     pub batch: u32,
     pub dgl: BenchRow,
     pub fsa: BenchRow,
 }
 
 impl Pair {
-    pub fn fanout(&self) -> String {
-        if self.k2 > 0 {
-            format!("{}-{}", self.k1, self.k2)
-        } else {
-            format!("{}", self.k1)
-        }
+    pub fn fanout(&self) -> &str {
+        &self.fanout
     }
 
     pub fn step_speedup(&self) -> f64 {
@@ -56,11 +54,12 @@ impl Pair {
 /// Median over repeats, then join dgl/fsa rows per configuration.
 pub fn pair_rows(rows: &[BenchRow]) -> Vec<Pair> {
     let med = median_over_repeats(rows);
-    let mut by_key: BTreeMap<(String, u32, u32, u32, u32, bool),
+    let mut by_key: BTreeMap<(String, u32, String, u32, bool),
                              (Option<BenchRow>, Option<BenchRow>)> =
         BTreeMap::new();
     for r in med {
-        let key = (r.dataset.clone(), r.hops, r.k1, r.k2, r.batch, r.amp);
+        let key =
+            (r.dataset.clone(), r.hops, r.fanout.clone(), r.batch, r.amp);
         let slot = by_key.entry(key).or_default();
         match r.variant.as_str() {
             "dgl" => slot.0 = Some(r),
@@ -70,8 +69,9 @@ pub fn pair_rows(rows: &[BenchRow]) -> Vec<Pair> {
     }
     by_key
         .into_iter()
-        .filter_map(|((ds, _h, k1, k2, b, _amp), (d, f))| {
-            Some(Pair { dataset: ds, k1, k2, batch: b, dgl: d?, fsa: f? })
+        .filter_map(|((ds, h, fo, b, _amp), (d, f))| {
+            Some(Pair { dataset: ds, hops: h, fanout: fo, batch: b,
+                        dgl: d?, fsa: f? })
         })
         .collect()
 }
@@ -85,7 +85,7 @@ fn bar(value: f64, max: f64, width: usize) -> String {
 pub fn table1(rows: &[BenchRow]) -> String {
     let pairs: Vec<Pair> = pair_rows(rows)
         .into_iter()
-        .filter(|p| p.batch == 1024 && p.k2 > 0)
+        .filter(|p| p.batch == 1024 && p.hops >= 2)
         .collect();
     let mut out = String::new();
     let _ = writeln!(out, "Table 1. Step time and sampled-pairs/s: DGL -> FuseSampleAgg (B=1024, AMP on).");
@@ -111,7 +111,7 @@ pub fn table1(rows: &[BenchRow]) -> String {
 pub fn fig1(rows: &[BenchRow]) -> String {
     let pairs: Vec<Pair> = pair_rows(rows)
         .into_iter()
-        .filter(|p| p.batch == 1024 && p.k2 > 0)
+        .filter(|p| p.batch == 1024 && p.hops >= 2)
         .collect();
     let max = pairs.iter().map(Pair::step_speedup).fold(1.0f64, f64::max);
     let mut out = String::new();
@@ -135,7 +135,7 @@ pub fn fig2(rows: &[BenchRow]) -> String {
     let med = median_over_repeats(rows);
     let mut series: BTreeMap<u32, (f64, f64)> = BTreeMap::new();
     for r in &med {
-        if r.dataset == "products_sim" && r.k1 == 15 && r.k2 == 10 {
+        if r.dataset == "products_sim" && r.fanout == "15x10" {
             let e = series.entry(r.batch).or_default();
             match r.variant.as_str() {
                 "dgl" => e.0 = r.nodes_per_s,
@@ -163,7 +163,8 @@ pub fn fig2(rows: &[BenchRow]) -> String {
 pub fn fig3(rows: &[BenchRow]) -> String {
     let pairs: Vec<Pair> = pair_rows(rows)
         .into_iter()
-        .filter(|p| p.dataset == "arxiv_sim" && p.batch == 1024 && p.k2 > 0)
+        .filter(|p| p.dataset == "arxiv_sim" && p.batch == 1024
+            && p.hops >= 2)
         .collect();
     let max = pairs
         .iter()
@@ -185,7 +186,7 @@ pub fn fig3(rows: &[BenchRow]) -> String {
 pub fn table2(rows: &[BenchRow]) -> String {
     let pairs: Vec<Pair> = pair_rows(rows)
         .into_iter()
-        .filter(|p| p.batch == 1024 && p.k2 > 0)
+        .filter(|p| p.batch == 1024 && p.hops >= 2)
         .collect();
     let mut out = String::new();
     let _ = writeln!(out, "Table 2. Peak transient memory (MB) per training step (B=1024, AMP on).");
@@ -209,7 +210,7 @@ pub fn table2(rows: &[BenchRow]) -> String {
 pub fn fig4(rows: &[BenchRow]) -> String {
     let pairs: Vec<Pair> = pair_rows(rows)
         .into_iter()
-        .filter(|p| p.batch == 1024 && p.k2 > 0)
+        .filter(|p| p.batch == 1024 && p.hops >= 2)
         .collect();
     let max = pairs.iter().map(Pair::mem_ratio).fold(1.0f64, f64::max);
     let mut out = String::new();
@@ -231,7 +232,7 @@ pub fn fig4(rows: &[BenchRow]) -> String {
 pub fn fig5(rows: &[BenchRow]) -> String {
     let pairs: Vec<Pair> = pair_rows(rows)
         .into_iter()
-        .filter(|p| p.batch == 1024 && p.k2 > 0)
+        .filter(|p| p.batch == 1024 && p.hops >= 2)
         .collect();
     let logmax = pairs
         .iter()
@@ -278,14 +279,13 @@ pub fn table3(report: &ProfileReport) -> String {
 mod tests {
     use super::*;
 
-    fn row(ds: &str, variant: &str, k1: u32, k2: u32, batch: u32, seed: u64,
-           step_ms: f64, peak: u64) -> BenchRow {
+    fn row(ds: &str, variant: &str, fanout: &str, hops: u32, batch: u32,
+           seed: u64, step_ms: f64, peak: u64) -> BenchRow {
         BenchRow {
             dataset: ds.into(),
             variant: variant.into(),
-            hops: 2,
-            k1,
-            k2,
+            hops,
+            fanout: fanout.into(),
             batch,
             amp: true,
             repeat_seed: seed,
@@ -304,8 +304,10 @@ mod tests {
     fn sample_rows() -> Vec<BenchRow> {
         let mut rows = Vec::new();
         for seed in [42, 43, 44] {
-            rows.push(row("arxiv_sim", "dgl", 15, 10, 1024, seed, 10.0, 50_000_000));
-            rows.push(row("arxiv_sim", "fsa", 15, 10, 1024, seed, 2.0, 5_000_000));
+            rows.push(row("arxiv_sim", "dgl", "15x10", 2, 1024, seed, 10.0,
+                          50_000_000));
+            rows.push(row("arxiv_sim", "fsa", "15x10", 2, 1024, seed, 2.0,
+                          5_000_000));
         }
         rows
     }
@@ -316,7 +318,24 @@ mod tests {
         assert_eq!(pairs.len(), 1);
         assert!((pairs[0].step_speedup() - 5.0).abs() < 1e-9);
         assert!((pairs[0].mem_ratio() - 10.0).abs() < 1e-9);
-        assert_eq!(pairs[0].fanout(), "15-10");
+        assert_eq!(pairs[0].fanout(), "15x10");
+    }
+
+    #[test]
+    fn depth3_pairs_render_in_tables() {
+        let mut rows = sample_rows();
+        for seed in [42, 43, 44] {
+            rows.push(row("arxiv_sim", "dgl", "10x5x5", 3, 1024, seed, 20.0,
+                          200_000_000));
+            rows.push(row("arxiv_sim", "fsa", "10x5x5", 3, 1024, seed, 2.5,
+                          5_500_000));
+        }
+        let pairs = pair_rows(&rows);
+        assert_eq!(pairs.len(), 2);
+        let t1 = table1(&rows);
+        assert!(t1.contains("10x5x5"), "{t1}");
+        let t2 = table2(&rows);
+        assert!(t2.contains("10x5x5"), "{t2}");
     }
 
     #[test]
@@ -330,8 +349,10 @@ mod tests {
     fn fig1_flags_regressions() {
         let mut rows = sample_rows();
         for seed in [42, 43, 44] {
-            rows.push(row("reddit_sim", "dgl", 25, 10, 1024, seed, 2.0, 1));
-            rows.push(row("reddit_sim", "fsa", 25, 10, 1024, seed, 4.0, 1));
+            rows.push(row("reddit_sim", "dgl", "25x10", 2, 1024, seed, 2.0,
+                          1));
+            rows.push(row("reddit_sim", "fsa", "25x10", 2, 1024, seed, 4.0,
+                          1));
         }
         let f = fig1(&rows);
         assert!(f.contains("fusion loses"));
@@ -345,7 +366,7 @@ mod tests {
 
     #[test]
     fn unpaired_rows_are_dropped() {
-        let rows = vec![row("solo", "dgl", 10, 10, 1024, 42, 1.0, 1)];
+        let rows = vec![row("solo", "dgl", "10x10", 2, 1024, 42, 1.0, 1)];
         assert!(pair_rows(&rows).is_empty());
     }
 }

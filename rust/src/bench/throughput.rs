@@ -3,13 +3,14 @@
 //!
 //! This measures exactly the stage PR 1 parallelized: seed scheduling →
 //! (sharded, multi-threaded) neighbor sampling → block materialization,
-//! with optional double-buffered prefetch. It needs **no AOT artifacts
-//! and no PJRT backend**: by default the device dispatch the prefetcher
-//! overlaps with is emulated by a fixed per-step sleep (`dispatch_ms`);
-//! with `native: true` ([`ThroughputConfig`]) each step instead runs a
-//! *real* fwd+bwd+AdamW dispatch on the native CPU engine
-//! ([`crate::kernel::NativeBackend`]), so the overlap numbers reflect
-//! genuine compute and perf regressions in the engine fail the CI smoke.
+//! with optional double-buffered prefetch, at any fanout depth. It needs
+//! **no AOT artifacts and no PJRT backend**: by default the device
+//! dispatch the prefetcher overlaps with is emulated by a fixed per-step
+//! sleep (`dispatch_ms`); with `native: true` ([`ThroughputConfig`]) each
+//! step instead runs a *real* fwd+bwd+AdamW dispatch on the native CPU
+//! engine ([`crate::kernel::NativeBackend`]), so the overlap numbers
+//! reflect genuine compute and perf regressions in the engine fail the CI
+//! smoke.
 //!
 //! Reported metrics:
 //! * `steps_per_s` — timed steps per wall-clock second (headline);
@@ -26,6 +27,7 @@ use anyhow::{ensure, Result};
 use crate::coordinator::pipeline::{prepare_batch, BatchPrefetcher,
                                    BatchScheduler, HostWork};
 use crate::coordinator::{TrainConfig, Variant};
+use crate::fanout::Fanouts;
 use crate::gen::Dataset;
 use crate::kernel::NativeBackend;
 use crate::memory::MemoryMeter;
@@ -38,9 +40,8 @@ use crate::sampler::ParallelSampler;
 #[derive(Clone, Debug)]
 pub struct ThroughputConfig {
     pub dataset: String,
-    pub hops: u32,
-    pub k1: usize,
-    pub k2: usize,
+    /// Per-hop fanouts (depth = hops).
+    pub fanouts: Fanouts,
     pub batch: usize,
     pub steps: usize,
     pub warmup: usize,
@@ -71,9 +72,7 @@ impl ThroughputConfig {
         let builtin = Manifest::builtin();
         ThroughputConfig {
             dataset: dataset.to_string(),
-            hops: 2,
-            k1: 15,
-            k2: 10,
+            fanouts: Fanouts::of(&[15, 10]),
             batch: 1024,
             steps: 30,
             warmup: 3,
@@ -95,10 +94,8 @@ impl ThroughputConfig {
     fn train_config(&self) -> TrainConfig {
         TrainConfig {
             variant: self.variant,
-            hops: self.hops,
             dataset: self.dataset.clone(),
-            k1: self.k1,
-            k2: self.k2,
+            fanouts: self.fanouts.clone(),
             batch: self.batch,
             amp: false, // throughput smoke measures the f32 storage path
             save_indices: true,
@@ -114,10 +111,9 @@ impl ThroughputConfig {
 pub fn run_throughput(ds: Arc<Dataset>,
                       cfg: &ThroughputConfig) -> Result<ThroughputRow> {
     ensure!(cfg.steps > 0, "throughput: need at least one timed step");
-    let work = match (cfg.native, cfg.variant, cfg.hops) {
-        (true, Variant::Fsa, _) => HostWork::SeedsOnly,
-        (_, _, 2) => HostWork::Block2,
-        _ => HostWork::Block1,
+    let work = match (cfg.native, cfg.variant) {
+        (true, Variant::Fsa) => HostWork::SeedsOnly,
+        _ => HostWork::Block,
     };
     let mut engine = if cfg.native {
         Some(NativeBackend::new(
@@ -132,7 +128,7 @@ pub fn run_throughput(ds: Arc<Dataset>,
     let mut sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)?;
     let sampler = ParallelSampler::new(cfg.threads);
     let mut prefetcher = if cfg.prefetch {
-        Some(BatchPrefetcher::spawn(ds.clone(), work, cfg.k1, cfg.k2,
+        Some(BatchPrefetcher::spawn(ds.clone(), work, cfg.fanouts.clone(),
                                     cfg.threads))
     } else {
         None
@@ -153,7 +149,7 @@ pub fn run_throughput(ds: Arc<Dataset>,
             None => {
                 let s = sched.steps_drawn();
                 let seeds = sched.next_seeds();
-                prepare_batch(&ds, work, cfg.k1, cfg.k2, &sampler, s, seeds,
+                prepare_batch(&ds, work, &cfg.fanouts, &sampler, s, seeds,
                               sched.base_seed(s))
             }
             Some(pf) => pf.next_batch(&mut sched)?,
@@ -171,8 +167,7 @@ pub fn run_throughput(ds: Arc<Dataset>,
                     seeds: &prepared.seeds,
                     labels: &prepared.labels,
                     base: prepared.base,
-                    block1: prepared.block1.as_ref(),
-                    block2: prepared.block2.as_ref(),
+                    block: prepared.block.as_ref(),
                 };
                 let out = eng.train_step(step, &inp, &mut meter)?;
                 ensure!(out.loss.is_finite(),
@@ -211,9 +206,8 @@ pub fn run_throughput(ds: Arc<Dataset>,
 
     Ok(ThroughputRow {
         dataset: cfg.dataset.clone(),
-        hops: cfg.hops,
-        k1: cfg.k1 as u32,
-        k2: cfg.k2 as u32,
+        hops: cfg.fanouts.depth() as u32,
+        fanout: cfg.fanouts.label(),
         batch: cfg.batch as u32,
         threads: sampler.threads() as u32,
         prefetch: cfg.prefetch,
@@ -270,8 +264,7 @@ mod tests {
     fn quick_cfg() -> ThroughputConfig {
         ThroughputConfig {
             batch: 64,
-            k1: 5,
-            k2: 3,
+            fanouts: Fanouts::of(&[5, 3]),
             steps: 4,
             warmup: 1,
             dispatch_ms: 0.5,
@@ -287,6 +280,7 @@ mod tests {
         assert!(r.steps_per_s > 0.0);
         assert_eq!(r.threads, 1);
         assert_eq!(r.steps, 4);
+        assert_eq!(r.fanout, "5x3");
     }
 
     #[test]
@@ -302,11 +296,14 @@ mod tests {
     }
 
     #[test]
-    fn one_hop_mode_runs() {
-        let cfg = ThroughputConfig { hops: 1, k2: 0, ..quick_cfg() };
-        let r = run_throughput(tiny(), &cfg).unwrap();
-        assert_eq!(r.hops, 1);
-        assert!(r.steps_per_s > 0.0);
+    fn one_hop_and_three_hop_modes_run() {
+        for ks in [&[5][..], &[4, 2, 2][..]] {
+            let cfg = ThroughputConfig { fanouts: Fanouts::of(ks),
+                                         ..quick_cfg() };
+            let r = run_throughput(tiny(), &cfg).unwrap();
+            assert_eq!(r.hops, ks.len() as u32);
+            assert!(r.steps_per_s > 0.0);
+        }
     }
 
     #[test]
@@ -323,6 +320,16 @@ mod tests {
                 assert_eq!(r.sample_ms, 0.0);
             }
         }
+    }
+
+    #[test]
+    fn native_dispatch_runs_depth3() {
+        let cfg = ThroughputConfig { native: true, variant: Variant::Fsa,
+                                     fanouts: Fanouts::of(&[4, 2, 2]),
+                                     ..quick_cfg() };
+        let r = run_throughput(tiny(), &cfg).unwrap();
+        assert_eq!(r.hops, 3);
+        assert!(r.steps_per_s > 0.0 && r.dispatch_ms > 0.0);
     }
 
     #[test]

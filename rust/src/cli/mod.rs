@@ -8,6 +8,8 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::fanout::Fanouts;
+
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -104,24 +106,21 @@ impl Args {
         }
     }
 
-    /// Fanout option like "15x10" or "10" (1-hop).
-    pub fn fanout(&self, key: &str, default: (usize, usize))
-                  -> Result<(usize, usize)> {
+    /// Fanout option: any depth, e.g. "10" (1-hop), "15x10", "15x10x5".
+    pub fn fanout(&self, key: &str, default: &Fanouts) -> Result<Fanouts> {
         match self.str_opt(key) {
-            None => Ok(default),
-            Some(v) => parse_fanout(v),
+            None => Ok(default.clone()),
+            Some(v) => parse_fanout(v)
+                .map_err(|e| anyhow!("--{key}: {e}")),
         }
     }
 }
 
-/// Parse "k1xk2" / "k1_k2" / "k1" into (k1, k2).
-pub fn parse_fanout(s: &str) -> Result<(usize, usize)> {
-    let norm = s.replace('_', "x");
-    if let Some((a, b)) = norm.split_once('x') {
-        Ok((a.trim().parse()?, b.trim().parse()?))
-    } else {
-        Ok((norm.trim().parse()?, 0))
-    }
+/// Parse an arbitrary-depth fanout string — "k1xk2x…" / "k1_k2_…" /
+/// "k1,k2,…" / "k1" — into an ordered [`Fanouts`]. The legacy "15x10"
+/// and "10" forms parse identically to the pre-depth-generic CLI.
+pub fn parse_fanout(s: &str) -> Result<Fanouts> {
+    Fanouts::parse(s)
 }
 
 #[cfg(test)]
@@ -186,10 +185,30 @@ mod tests {
 
     #[test]
     fn fanout_forms() {
-        assert_eq!(parse_fanout("15x10").unwrap(), (15, 10));
-        assert_eq!(parse_fanout("15_10").unwrap(), (15, 10));
-        assert_eq!(parse_fanout("10").unwrap(), (10, 0));
+        // legacy 1/2-hop forms parse to the same configurations as before
+        assert_eq!(parse_fanout("15x10").unwrap(), Fanouts::of(&[15, 10]));
+        assert_eq!(parse_fanout("15_10").unwrap(), Fanouts::of(&[15, 10]));
+        assert_eq!(parse_fanout("10").unwrap(), Fanouts::of(&[10]));
+        // arbitrary depth, both separators
+        assert_eq!(parse_fanout("15x10x5").unwrap(),
+                   Fanouts::of(&[15, 10, 5]));
+        assert_eq!(parse_fanout("15,10,5").unwrap(),
+                   Fanouts::of(&[15, 10, 5]));
+        // empty / zero segments are clear errors
         assert!(parse_fanout("x").is_err());
+        assert!(parse_fanout("15x").is_err());
+        assert!(parse_fanout("15x0x5").is_err());
+        let a = parse(&["x", "--fanout", "10x5x5"]);
+        assert_eq!(a.fanout("fanout", &Fanouts::of(&[15, 10])).unwrap(),
+                   Fanouts::of(&[10, 5, 5]));
+        let b = parse(&["x"]);
+        assert_eq!(b.fanout("fanout", &Fanouts::of(&[15, 10])).unwrap(),
+                   Fanouts::of(&[15, 10]));
+        let c = parse(&["x", "--fanout", "bogus"]);
+        let err = c.fanout("fanout", &Fanouts::of(&[15, 10]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fanout"), "{err}");
     }
 
     #[test]

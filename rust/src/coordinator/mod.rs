@@ -7,6 +7,10 @@
 //! variants share seed order, base-seed schedule, and dataset, so every
 //! comparison is paired (DESIGN.md §5).
 //!
+//! Depth is configuration, not code: a [`TrainConfig`] carries an ordered
+//! [`Fanouts`] list and the whole stack — host sampling, kernels, model
+//! width, eval protocol — follows its depth.
+//!
 //! The host half of the step runs through [`pipeline`]: batches are built
 //! by a sharded multi-threaded sampler (`TrainConfig::threads`) and can be
 //! prefetched on a background worker so sampling of step *t+1* overlaps
@@ -15,10 +19,11 @@
 //! unchanged by either knob.
 //!
 //! The dispatch half goes through the [`Backend`] seam
-//! (`TrainConfig::backend`): `Pjrt` runs the AOT artifact, `Native` runs
-//! the in-crate CPU engine ([`crate::kernel`]), and `Auto` (default)
-//! tries PJRT and falls back to native — so training works end-to-end
-//! with no artifacts and no PJRT bindings.
+//! (`TrainConfig::backend`): `Pjrt` runs the AOT artifact (depth ≤ 2 —
+//! the manifest only defines 1- and 2-hop graphs), `Native` runs the
+//! in-crate CPU engine ([`crate::kernel`]) at any depth, and `Auto`
+//! (default) tries PJRT and falls back to native — so training works
+//! end-to-end with no artifacts and no PJRT bindings.
 
 pub mod pipeline;
 pub mod profile;
@@ -28,12 +33,13 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::fanout::Fanouts;
 use crate::gen::{builtin_spec, Dataset, Split};
 use crate::kernel::{NativeBackend, NativeConfig};
 use crate::memory::MemoryMeter;
 use crate::rng::mix;
-use crate::runtime::backend::{Backend, BackendChoice, PjrtBackend,
-                              StepInputs};
+use crate::runtime::backend::{ensure_pjrt_depth, Backend, BackendChoice,
+                              PjrtBackend, StepInputs};
 use crate::runtime::Runtime;
 use crate::sampler::{self, ParallelSampler};
 use crate::xla;
@@ -62,10 +68,10 @@ impl Variant {
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub variant: Variant,
-    pub hops: u32,
     pub dataset: String,
-    pub k1: usize,
-    pub k2: usize,
+    /// Ordered per-hop fanouts; `fanouts.depth()` is the number of hops
+    /// (and, for the baseline, SAGE layers).
+    pub fanouts: Fanouts,
     pub batch: usize,
     pub amp: bool,
     pub save_indices: bool,
@@ -83,20 +89,24 @@ pub struct TrainConfig {
 }
 
 impl TrainConfig {
+    /// Sampling depth (hops = baseline SAGE layers).
+    pub fn hops(&self) -> u32 {
+        self.fanouts.depth() as u32
+    }
+
     pub fn artifact_variant(&self) -> String {
         let base = match self.variant {
             Variant::Fsa => "fsa",
             Variant::Dgl => "dgl",
         };
-        format!("{base}{}", self.hops)
+        format!("{base}{}", self.fanouts.depth())
     }
 
     /// What the host pipeline must prepare per step for this variant.
     pub fn host_work(&self) -> HostWork {
-        match (self.variant, self.hops) {
-            (Variant::Dgl, 2) => HostWork::Block2,
-            (Variant::Dgl, _) => HostWork::Block1,
-            (Variant::Fsa, _) => HostWork::SeedsOnly,
+        match self.variant {
+            Variant::Dgl => HostWork::Block,
+            Variant::Fsa => HostWork::SeedsOnly,
         }
     }
 
@@ -104,9 +114,7 @@ impl TrainConfig {
     pub fn native_config(&self, hidden: usize) -> NativeConfig {
         NativeConfig {
             fused: self.variant == Variant::Fsa,
-            hops: self.hops,
-            k1: self.k1,
-            k2: self.k2,
+            fanouts: self.fanouts.clone(),
             amp: self.amp,
             save_indices: self.save_indices,
             seed: self.seed,
@@ -231,19 +239,21 @@ impl<'rt> Trainer<'rt> {
                      cfg: TrainConfig, artifact: &str) -> Result<Trainer<'rt>> {
         let ds = cache.get(rt, &cfg.dataset)?;
         let backend = PjrtBackend::new(
-            rt, &ds, artifact, cfg.variant == Variant::Fsa, cfg.hops,
-            cfg.batch, cfg.k1, cfg.k2, cfg.save_indices, cfg.seed)?;
+            rt, &ds, artifact, cfg.variant == Variant::Fsa, &cfg.fanouts,
+            cfg.batch, cfg.save_indices, cfg.seed)?;
         Self::with_backend(rt, cfg, ds, Box::new(backend))
     }
 
     fn pjrt_backend(rt: &'rt Runtime, ds: &Arc<Dataset>,
                     cfg: &TrainConfig) -> Result<PjrtBackend<'rt>> {
+        ensure_pjrt_depth(&cfg.fanouts)?;
+        let k1 = cfg.fanouts.k(0);
+        let k2 = if cfg.fanouts.depth() == 2 { cfg.fanouts.k(1) } else { 0 };
         let name = rt.manifest.find_train(
-            &cfg.artifact_variant(), &cfg.dataset, cfg.k1, cfg.k2,
+            &cfg.artifact_variant(), &cfg.dataset, k1, k2,
             cfg.batch, cfg.amp, cfg.save_indices)?.name.clone();
         PjrtBackend::new(rt, ds, &name, cfg.variant == Variant::Fsa,
-                         cfg.hops, cfg.batch, cfg.k1, cfg.k2,
-                         cfg.save_indices, cfg.seed)
+                         &cfg.fanouts, cfg.batch, cfg.save_indices, cfg.seed)
     }
 
     fn native_backend(rt: &Runtime, ds: &Arc<Dataset>,
@@ -257,8 +267,8 @@ impl<'rt> Trainer<'rt> {
         let sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)?;
         let sampler = ParallelSampler::new(cfg.threads);
         let prefetcher = cfg.prefetch.then(|| {
-            BatchPrefetcher::spawn(ds.clone(), cfg.host_work(), cfg.k1,
-                                   cfg.k2, cfg.threads)
+            BatchPrefetcher::spawn(ds.clone(), cfg.host_work(),
+                                   cfg.fanouts.clone(), cfg.threads)
         });
         Ok(Trainer {
             rt,
@@ -302,7 +312,7 @@ impl<'rt> Trainer<'rt> {
     /// Always samples synchronously; does not consume the scheduler.
     pub fn step_with_seeds(&mut self, seeds: &[i32]) -> Result<StepTiming> {
         let prepared = pipeline::prepare_batch(
-            &self.ds, self.cfg.host_work(), self.cfg.k1, self.cfg.k2,
+            &self.ds, self.cfg.host_work(), &self.cfg.fanouts,
             &self.sampler, self.step_count, seeds.to_vec(),
             self.step_base_seed());
         self.step_prepared(prepared)
@@ -322,14 +332,14 @@ impl<'rt> Trainer<'rt> {
             // batch is still next) but resample synchronously with the
             // base seed the legacy schedule mandates for this step.
             return Ok(pipeline::prepare_batch(
-                &self.ds, self.cfg.host_work(), self.cfg.k1, self.cfg.k2,
+                &self.ds, self.cfg.host_work(), &self.cfg.fanouts,
                 &self.sampler, self.step_count, prepared.seeds,
                 self.step_base_seed()));
         }
         let seeds = self.sched.next_seeds();
         Ok(pipeline::prepare_batch(
-            &self.ds, self.cfg.host_work(), self.cfg.k1, self.cfg.k2,
-            &self.sampler, self.step_count, seeds, self.step_base_seed()))
+            &self.ds, self.cfg.host_work(), &self.cfg.fanouts, &self.sampler,
+            self.step_count, seeds, self.step_base_seed()))
     }
 
     /// Dispatch one prepared batch through the backend and account it.
@@ -355,8 +365,7 @@ impl<'rt> Trainer<'rt> {
             seeds: &prepared.seeds,
             labels: &prepared.labels,
             base: prepared.base,
-            block1: prepared.block1.as_ref(),
-            block2: prepared.block2.as_ref(),
+            block: prepared.block.as_ref(),
         };
         let out = self.backend.train_step(self.step_count, &inp,
                                           &mut self.meter)?;
@@ -372,26 +381,12 @@ impl<'rt> Trainer<'rt> {
         // fused native kernels count inline; other paths recount here
         t.pairs = match out.pairs {
             Some(p) => p,
-            None => match (self.cfg.variant, self.cfg.hops) {
-                (Variant::Dgl, 2) => sampler::block2_sampled_pairs(
-                    prepared.block2.as_ref().unwrap()),
-                (Variant::Dgl, _) => {
-                    let blk = prepared.block1.as_ref().unwrap();
-                    let f1w = 1 + self.cfg.k1;
-                    (0..b)
-                        .map(|bi| sampler::valid_pairs(
-                            &blk.f1[bi * f1w + 1..(bi + 1) * f1w]))
-                        .sum()
-                }
-                (Variant::Fsa, 2) => sampler::fused2_sampled_pairs(
-                    &self.ds.graph, &prepared.seeds, self.cfg.k1, self.cfg.k2,
+            None => match self.cfg.variant {
+                Variant::Dgl => sampler::block_sampled_pairs(
+                    prepared.block.as_ref().unwrap()),
+                Variant::Fsa => sampler::fused_sampled_pairs(
+                    &self.ds.graph, &prepared.seeds, &self.cfg.fanouts,
                     prepared.base),
-                (Variant::Fsa, _) => {
-                    let s1 = sampler::sample_frontier(
-                        &self.ds.graph, &prepared.seeds, self.cfg.k1,
-                        prepared.base, 0);
-                    sampler::valid_pairs(&s1)
-                }
             },
         };
 
@@ -404,11 +399,15 @@ impl<'rt> Trainer<'rt> {
         self.backend.params_f32()
     }
 
-    /// Validation accuracy. Both backends follow the same protocol — the
-    /// 2-hop eval forward at the fixed f15x10 fanout over at least 512
-    /// val nodes — so numbers are comparable across the backend seam:
-    /// native runs it directly, PJRT through the dataset's
-    /// `{fsa2|dgl2}_eval_*` artifact (matching the trainer's variant).
+    /// Validation accuracy: the depth-matched eval forward at the
+    /// 15-10(-5…) fanout over at least 512 val nodes. Native runs it
+    /// directly; PJRT goes through the dataset's `{fsa2|dgl2}_eval_*`
+    /// artifact (matching the trainer's variant). At depth 2 the two
+    /// protocols coincide, so numbers are comparable across the backend
+    /// seam; at depth 1 the native baseline is a different (single-layer)
+    /// model than the fixed two-layer dgl1 artifacts, and at depth ≥ 3
+    /// only the native path exists — cross-seam comparisons are a
+    /// depth-2 property until L-hop manifests land (ROADMAP).
     pub fn evaluate(&mut self, max_nodes: usize) -> Result<f64> {
         let mut nodes = self.ds.split_nodes(Split::Val);
         nodes.truncate(max_nodes.max(512));
@@ -489,10 +488,11 @@ pub fn evaluate_params(rt: &Runtime, ds: &Dataset, variant: Variant,
                 exe.run(&args)?
             }
             Variant::Dgl => {
-                let blk = sampler::build_block2(&ds.graph, &seeds, k1, k2,
-                                                eval_base);
-                owned.push(rt.buf_i32(&blk.f1, &[b, 1 + k1])?);
-                owned.push(rt.buf_i32(&blk.s2, &[b, 1 + k1, k2])?);
+                let fo = Fanouts::new(vec![k1, k2])?;
+                let blk = sampler::build_block(&ds.graph, &seeds, &fo,
+                                               eval_base);
+                owned.push(rt.buf_i32(&blk.frontiers[1], &[b, 1 + k1])?);
+                owned.push(rt.buf_i32(&blk.leaf, &[b, 1 + k1, k2])?);
                 let mut args: Vec<&xla::PjRtBuffer> =
                     owned[..np].iter().collect();
                 args.push(x.as_ref());

@@ -12,7 +12,8 @@
 //!   `mix(seed + t)`, the paired-comparison contract shared by both
 //!   variants;
 //! * **bitwise sampling** — batches are built by [`ParallelSampler`],
-//!   identical to the serial sampler at any thread count.
+//!   identical to the serial sampler at any thread count and any fanout
+//!   depth.
 //!
 //! Accounting: [`PreparedBatch::sample_ms`] is the wall-clock the host
 //! sampler actually spent (worker-side when prefetched), while the
@@ -25,20 +26,20 @@ use std::thread;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::fanout::Fanouts;
 use crate::gen::{Dataset, Split};
 use crate::metrics::Timer;
 use crate::rng::{mix, SplitMix64};
-use crate::sampler::{Block1, Block2, ParallelSampler};
+use crate::sampler::{Block, ParallelSampler};
 
-/// What the host must prepare per step for a given variant.
+/// What the host must prepare per step for a given variant (the fanout
+/// list — and with it the depth — rides alongside in the trainer config).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum HostWork {
     /// Fused path: the kernel samples on device; host supplies seeds+labels.
     SeedsOnly,
-    /// Baseline 1-hop: materialize a [`Block1`].
-    Block1,
-    /// Baseline 2-hop: materialize a [`Block2`].
-    Block2,
+    /// Baseline: materialize an L-hop [`Block`] at the config's fanouts.
+    Block,
 }
 
 /// Deterministic seed-batch scheduler (the trainer's legacy epoch logic,
@@ -99,8 +100,8 @@ pub struct PreparedBatch {
     pub seeds: Vec<i32>,
     pub labels: Vec<i32>,
     pub base: u64,
-    pub block1: Option<Block1>,
-    pub block2: Option<Block2>,
+    /// Host-materialized L-hop block (baseline variant only).
+    pub block: Option<Block>,
     /// Host sampling wall-clock spent building the blocks (worker-side
     /// when prefetched — overlapped, not critical-path).
     pub sample_ms: f64,
@@ -110,29 +111,23 @@ pub struct PreparedBatch {
 }
 
 /// Build one batch synchronously with the given sampler.
-pub fn prepare_batch(ds: &Dataset, work: HostWork, k1: usize, k2: usize,
+pub fn prepare_batch(ds: &Dataset, work: HostWork, fanouts: &Fanouts,
                      sampler: &ParallelSampler, step: usize, seeds: Vec<i32>,
                      base: u64) -> PreparedBatch {
     let labels: Vec<i32> =
         seeds.iter().map(|&u| ds.labels[u as usize]).collect();
-    let mut block1 = None;
-    let mut block2 = None;
+    let mut block = None;
     let mut sample_ms = 0.0;
     match work {
         HostWork::SeedsOnly => {}
-        HostWork::Block1 => {
+        HostWork::Block => {
             let t = Timer::start();
-            block1 = Some(sampler.build_block1(&ds.graph, &seeds, k1, base));
-            sample_ms = t.ms();
-        }
-        HostWork::Block2 => {
-            let t = Timer::start();
-            block2 = Some(sampler.build_block2(&ds.graph, &seeds, k1, k2,
-                                               base));
+            block = Some(sampler.build_block(&ds.graph, &seeds, fanouts,
+                                             base));
             sample_ms = t.ms();
         }
     }
-    PreparedBatch { step, seeds, labels, base, block1, block2, sample_ms,
+    PreparedBatch { step, seeds, labels, base, block, sample_ms,
                     wait_ms: None }
 }
 
@@ -155,14 +150,14 @@ pub struct BatchPrefetcher {
 impl BatchPrefetcher {
     /// Spawn the worker. `threads` is the sampler's worker count inside the
     /// prefetch thread (0 = auto).
-    pub fn spawn(ds: Arc<Dataset>, work: HostWork, k1: usize, k2: usize,
+    pub fn spawn(ds: Arc<Dataset>, work: HostWork, fanouts: Fanouts,
                  threads: usize) -> BatchPrefetcher {
         let (jtx, jrx) = mpsc::channel::<Job>();
         let (dtx, drx) = mpsc::channel::<PreparedBatch>();
         let worker = thread::spawn(move || {
             let sampler = ParallelSampler::new(threads);
             for job in jrx {
-                let batch = prepare_batch(&ds, work, k1, k2, &sampler,
+                let batch = prepare_batch(&ds, work, &fanouts, &sampler,
                                           job.step, job.seeds, job.base);
                 if dtx.send(batch).is_err() {
                     break; // consumer gone
@@ -276,16 +271,18 @@ mod tests {
         let ds = tiny();
         let sampler = ParallelSampler::serial();
         let seeds: Vec<i32> = (0..32).collect();
-        let b2 = prepare_batch(&ds, HostWork::Block2, 4, 3, &sampler, 0,
-                               seeds.clone(), 7);
-        assert!(b2.block2.is_some() && b2.block1.is_none());
-        assert_eq!(b2.labels.len(), 32);
-        let b1 = prepare_batch(&ds, HostWork::Block1, 4, 3, &sampler, 0,
-                               seeds.clone(), 7);
-        assert!(b1.block1.is_some() && b1.block2.is_none());
-        let s = prepare_batch(&ds, HostWork::SeedsOnly, 4, 3, &sampler, 0,
-                              seeds, 7);
-        assert!(s.block1.is_none() && s.block2.is_none());
+        for fo in [Fanouts::of(&[4]), Fanouts::of(&[4, 3]),
+                   Fanouts::of(&[4, 3, 2])] {
+            let b = prepare_batch(&ds, HostWork::Block, &fo, &sampler, 0,
+                                  seeds.clone(), 7);
+            let blk = b.block.as_ref().unwrap();
+            assert_eq!(blk.fanouts, fo);
+            assert_eq!(blk.frontiers.len(), fo.depth());
+            assert_eq!(b.labels.len(), 32);
+        }
+        let s = prepare_batch(&ds, HostWork::SeedsOnly, &Fanouts::of(&[4, 3]),
+                              &sampler, 0, seeds, 7);
+        assert!(s.block.is_none());
         assert_eq!(s.sample_ms, 0.0);
     }
 
@@ -293,8 +290,8 @@ mod tests {
     fn prefetcher_returns_batches_in_submission_order() {
         let ds = tiny();
         let mut sched = BatchScheduler::new(&ds, 64, 42).unwrap();
-        let mut pf =
-            BatchPrefetcher::spawn(ds.clone(), HostWork::Block2, 4, 3, 2);
+        let mut pf = BatchPrefetcher::spawn(ds.clone(), HostWork::Block,
+                                            Fanouts::of(&[4, 3]), 2);
         for _ in 0..3 {
             let step = sched.steps_drawn();
             let seeds = sched.next_seeds();
@@ -305,7 +302,7 @@ mod tests {
         for want in 0..3 {
             let b = pf.recv().unwrap();
             assert_eq!(b.step, want);
-            assert!(b.block2.is_some());
+            assert!(b.block.is_some());
         }
         assert_eq!(pf.in_flight(), 0);
         assert!(pf.recv().is_err(), "recv with empty queue must error");
@@ -314,11 +311,12 @@ mod tests {
     #[test]
     fn prefetched_batches_match_synchronous_ones() {
         let ds = tiny();
+        let fo = Fanouts::of(&[4, 3]);
         let sampler = ParallelSampler::serial();
         let mut sync_sched = BatchScheduler::new(&ds, 64, 42).unwrap();
         let mut pf_sched = BatchScheduler::new(&ds, 64, 42).unwrap();
-        let mut pf =
-            BatchPrefetcher::spawn(ds.clone(), HostWork::Block2, 4, 3, 8);
+        let mut pf = BatchPrefetcher::spawn(ds.clone(), HostWork::Block,
+                                            fo.clone(), 8);
         for _ in 0..10 {
             let step = pf_sched.steps_drawn();
             let seeds = pf_sched.next_seeds();
@@ -326,17 +324,17 @@ mod tests {
         }
         for step in 0..10 {
             let seeds = sync_sched.next_seeds();
-            let want = prepare_batch(&ds, HostWork::Block2, 4, 3, &sampler,
+            let want = prepare_batch(&ds, HostWork::Block, &fo, &sampler,
                                      step, seeds, sync_sched.base_seed(step));
             let got = pf.recv().unwrap();
             assert_eq!(got.step, want.step);
             assert_eq!(got.seeds, want.seeds);
             assert_eq!(got.labels, want.labels);
             assert_eq!(got.base, want.base);
-            assert_eq!(got.block2.as_ref().unwrap().f1,
-                       want.block2.as_ref().unwrap().f1, "step {step}");
-            assert_eq!(got.block2.as_ref().unwrap().s2,
-                       want.block2.as_ref().unwrap().s2, "step {step}");
+            assert_eq!(got.block.as_ref().unwrap().frontiers,
+                       want.block.as_ref().unwrap().frontiers, "step {step}");
+            assert_eq!(got.block.as_ref().unwrap().leaf,
+                       want.block.as_ref().unwrap().leaf, "step {step}");
         }
     }
 }

@@ -15,6 +15,7 @@
 use anyhow::{Context, Result};
 
 use crate::coordinator::DatasetCache;
+use crate::fanout::Fanouts;
 use crate::gen::Split;
 use crate::metrics::{summarize, Timer};
 use crate::rng::{mix, SplitMix64};
@@ -54,6 +55,8 @@ pub fn profile_baseline(rt: &Runtime, cache: &mut DatasetCache,
     let (ds_name, k1, k2, b) =
         (spec0.dataset.clone(), spec0.k1, spec0.k2, spec0.batch);
     let ds = cache.get(rt, &ds_name)?;
+    anyhow::ensure!(k2 > 0, "profile stages are 2-hop artifacts");
+    let fanouts = Fanouts::new(vec![k1, k2])?;
     let f1w = 1 + k1;
 
     // compile all stages up front
@@ -101,13 +104,13 @@ pub fn profile_baseline(rt: &Runtime, cache: &mut DatasetCache,
 
         // -- host sampling
         let t = Timer::start();
-        let blk = sampler::build_block2(&ds.graph, seeds, k1, k2, base);
+        let blk = sampler::build_block(&ds.graph, seeds, &fanouts, base);
         row_ms[0] = t.ms();
 
         // -- copies: index upload
         let t = Timer::start();
-        let f1_buf = rt.buf_i32(&blk.f1, &[b, f1w])?;
-        let s2_buf = rt.buf_i32(&blk.s2, &[b, f1w, k2])?;
+        let f1_buf = rt.buf_i32(&blk.frontiers[1], &[b, f1w])?;
+        let s2_buf = rt.buf_i32(&blk.leaf, &[b, f1w, k2])?;
         let labels_buf = rt.buf_i32(&labels, &[b])?;
         let mut copy_ms = t.ms();
 

@@ -1,0 +1,169 @@
+//! [`Fanouts`] — the ordered per-hop fanout list that parameterizes every
+//! layer of the stack (CLI → coordinator → sampler → kernels → runtime).
+//!
+//! Before this type the repo hardcoded the `{1, 2}`-hop pair everywhere
+//! (`(k1, k2)` tuples with `k2 == 0` meaning "1-hop"); `Fanouts` makes
+//! depth a value, so `15x10x5` (SALIENT-style 3-hop) is one configuration
+//! away instead of a third copy-pasted code path. Hop 0 is the hop drawn
+//! from the seed nodes; the last hop's samples are the leaves whose
+//! features the fused operator aggregates.
+//!
+//! Accepted string forms (all equivalent separators): `15x10x5`,
+//! `15_10_5`, `15,10,5`; a single integer (`10`) is a 1-hop fanout. The
+//! legacy `15x10` / `10` forms parse to exactly the same configurations
+//! as before the depth generalization.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// Ordered per-hop neighbor fanouts `[k1, k2, …, kL]`; depth = `L ≥ 1`,
+/// every `k > 0`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Fanouts(Vec<usize>);
+
+impl Fanouts {
+    /// Validated constructor: at least one hop, all fanouts positive.
+    pub fn new(ks: Vec<usize>) -> Result<Fanouts> {
+        if ks.is_empty() {
+            bail!("fanout must have at least one hop");
+        }
+        if let Some(pos) = ks.iter().position(|&k| k == 0) {
+            bail!("fanout segment {} is zero (every hop must sample at \
+                   least one neighbor)", pos + 1);
+        }
+        Ok(Fanouts(ks))
+    }
+
+    /// Literal constructor for tests/benches; panics on invalid input.
+    pub fn of(ks: &[usize]) -> Fanouts {
+        Fanouts::new(ks.to_vec()).expect("invalid fanout literal")
+    }
+
+    /// Parse `15x10x5` / `15_10_5` / `15,10,5` / `10`. Empty or zero
+    /// segments are errors with the offending segment named.
+    pub fn parse(s: &str) -> Result<Fanouts> {
+        let trimmed = s.trim();
+        if trimmed.is_empty() {
+            bail!("empty fanout string");
+        }
+        let mut ks = Vec::new();
+        for (i, seg) in trimmed.split(['x', '_', ',']).enumerate() {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                bail!("fanout {trimmed:?}: segment {} is empty", i + 1);
+            }
+            let k: usize = seg.parse().map_err(|_| {
+                anyhow::anyhow!("fanout {trimmed:?}: segment {:?} is not an \
+                                 integer", seg)
+            })?;
+            if k == 0 {
+                bail!("fanout {trimmed:?}: segment {:?} is zero (every hop \
+                       must sample at least one neighbor)", seg);
+            }
+            ks.push(k);
+        }
+        Fanouts::new(ks)
+    }
+
+    /// Number of hops `L`.
+    pub fn depth(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Fanout of hop `hop` (0-based; hop 0 is drawn from the seeds).
+    pub fn k(&self, hop: usize) -> usize {
+        self.0[hop]
+    }
+
+    /// All fanouts, outermost (seed) hop first.
+    pub fn as_slice(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Canonical display label, e.g. `"15x10x5"` (also the CSV/JSON form).
+    pub fn label(&self) -> String {
+        self.0
+            .iter()
+            .map(|k| k.to_string())
+            .collect::<Vec<_>>()
+            .join("x")
+    }
+
+    /// Leaves per seed: `k1·k2·…·kL` (the fused kernel's gather budget).
+    pub fn leaf_count(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Cumulative sample counts per hop: `[k1, k1·k2, …, k1·…·kL]` — the
+    /// per-seed row widths of the fused kernel's saved-index tensors.
+    pub fn cumulative(&self) -> Vec<usize> {
+        self.0
+            .iter()
+            .scan(1usize, |w, &k| {
+                *w *= k;
+                Some(*w)
+            })
+            .collect()
+    }
+
+    /// Self-inclusive frontier width after `hops` hops:
+    /// `(1+k1)·(1+k2)·…·(1+k_hops)` — the baseline's materialized row
+    /// width at that depth (`hops = 0` → 1, the seed itself).
+    pub fn frontier_width(&self, hops: usize) -> usize {
+        self.0[..hops].iter().map(|&k| 1 + k).product()
+    }
+}
+
+impl fmt::Display for Fanouts {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_separators_and_depths() {
+        assert_eq!(Fanouts::parse("15x10").unwrap(), Fanouts::of(&[15, 10]));
+        assert_eq!(Fanouts::parse("15_10").unwrap(), Fanouts::of(&[15, 10]));
+        assert_eq!(Fanouts::parse("15,10").unwrap(), Fanouts::of(&[15, 10]));
+        assert_eq!(Fanouts::parse("10").unwrap(), Fanouts::of(&[10]));
+        assert_eq!(Fanouts::parse("15x10x5").unwrap(),
+                   Fanouts::of(&[15, 10, 5]));
+        assert_eq!(Fanouts::parse(" 15, 10 , 5 ").unwrap(),
+                   Fanouts::of(&[15, 10, 5]));
+        assert_eq!(Fanouts::parse("2x2x2x2").unwrap().depth(), 4);
+    }
+
+    #[test]
+    fn rejects_empty_zero_and_garbage_segments() {
+        assert!(Fanouts::parse("").is_err());
+        assert!(Fanouts::parse("x").is_err());
+        assert!(Fanouts::parse("15x").is_err());
+        assert!(Fanouts::parse("x10").is_err());
+        assert!(Fanouts::parse("15x0x5").is_err());
+        assert!(Fanouts::parse("15xabc").is_err());
+        assert!(Fanouts::new(vec![]).is_err());
+        assert!(Fanouts::new(vec![5, 0]).is_err());
+        let err = Fanouts::parse("15x0").unwrap_err().to_string();
+        assert!(err.contains("zero"), "{err}");
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let f = Fanouts::of(&[15, 10, 5]);
+        assert_eq!(f.depth(), 3);
+        assert_eq!(f.k(0), 15);
+        assert_eq!(f.k(2), 5);
+        assert_eq!(f.label(), "15x10x5");
+        assert_eq!(format!("{f}"), "15x10x5");
+        assert_eq!(f.leaf_count(), 750);
+        assert_eq!(f.cumulative(), vec![15, 150, 750]);
+        assert_eq!(f.frontier_width(0), 1);
+        assert_eq!(f.frontier_width(1), 16);
+        assert_eq!(f.frontier_width(2), 176);
+    }
+}

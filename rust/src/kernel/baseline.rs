@@ -1,107 +1,117 @@
-//! The DGL-style baseline as native host compute: host-sampled index
-//! tensors → **materialized** dense feature blocks → SAGEConv(mean)
-//! layers. This is the sample→materialize→aggregate pipeline the fused
-//! kernel removes; the `[B, 1+k1, k2, d]` block is genuinely allocated,
-//! written, re-read, and reduced every step (the `optimization_barrier`
-//! of the JAX baseline made literal), and every materialized buffer is
-//! reported to the [`MemoryMeter`] so the bench compares *measured*
-//! transient bytes.
+//! The DGL-style baseline as native host compute, generic over depth:
+//! host-sampled index tensors → **materialized** dense feature blocks →
+//! an L-layer SAGEConv(mean) stack. This is the
+//! sample→materialize→aggregate pipeline the fused kernel removes; the
+//! `[B·Π(1+k_j), k_L, d]` leaf block is genuinely allocated, written,
+//! re-read, and reduced every step (the `optimization_barrier` of the JAX
+//! baseline made literal), and every materialized buffer is reported to
+//! the [`MemoryMeter`] so the bench compares *measured* transient bytes.
 //!
-//! Forward/backward mirror `python/compile/baseline.py` line by line;
-//! gradients are produced for the six parameter tensors only (features
-//! are inputs, not parameters).
+//! Layer `i` (1-based, innermost first) computes, for every node of the
+//! self-inclusive frontier at depth `L-i`,
+//! `relu(self·W_self + mean(children)·W_neigh + b)` — layer 1 reads raw
+//! features and the leaf block, upper layers read the previous layer's
+//! hidden rows through the nested `[…, 1+k, h]` group layout (slot 0 =
+//! self, slots 1.. = children). The last layer drops the relu and emits
+//! logits for the seeds. At depth 2 the float-op sequence is exactly the
+//! pre-generalization `forward2`/`backward2` pair (mirroring
+//! `python/compile/baseline.py`); gradients cover the `3·L` parameter
+//! tensors only (features are inputs, not parameters).
 
 use crate::memory::MemoryMeter;
-use crate::sampler::{Block1, Block2};
+use crate::sampler::Block;
 
 use super::linalg::{add_bias, col_sum, matmul, matmul_a_bt, matmul_at_b, relu};
 use super::{par_fill_rows, Features};
 
 const F32: u64 = 4;
 
-/// Forward activations of one baseline 2-hop step (kept for backward).
-pub struct Fwd2 {
-    /// `[B, 1+k1, d]` frontier features, invalid rows zeroed.
-    pub xf1: Vec<f32>,
-    /// `[B, 1+k1, d]` masked mean over the hop-2 block.
-    pub mean2: Vec<f32>,
-    /// `[B, 1+k1, h]` pre-activation of layer 1.
-    pub pre1: Vec<f32>,
-    /// `[B, 1+k1, h]` relu'd, invalid frontier rows zeroed.
-    pub h1: Vec<f32>,
-    /// `[B, h]` seed row of `h1`.
-    pub h_self: Vec<f32>,
-    /// `[B, h]` masked mean over the frontier rows of `h1`.
-    pub h_neigh: Vec<f32>,
+/// Kept activations of one SAGE layer (inputs + pre-activation).
+pub struct LayerFwd {
+    /// `[rows, in]` self inputs (features for layer 1, hidden rows above).
+    pub x_self: Vec<f32>,
+    /// `[rows, in]` masked neighbor means.
+    pub x_neigh: Vec<f32>,
+    /// `[rows, out]` pre-activation (empty for the last layer — its
+    /// pre-activation *is* the logits).
+    pub pre: Vec<f32>,
+    /// `[rows, out]` relu'd, invalid-frontier rows zeroed (empty for the
+    /// last layer).
+    pub h: Vec<f32>,
+}
+
+/// Forward activations of one baseline L-hop step (kept for backward).
+pub struct Fwd {
+    /// Innermost layer first: `layers[0]` consumes features, the last
+    /// entry produces the logits.
+    pub layers: Vec<LayerFwd>,
     /// `[B, c]` output logits.
     pub logits: Vec<f32>,
 }
 
-/// Layer-1 input rows per batch element.
-fn f1w_of(blk: &Block2) -> usize {
-    1 + blk.k1
-}
-
-/// Gather + materialize + aggregate + two SAGE layers (paper §5 baseline).
-/// `params` order: `[w1_self, w1_neigh, b1, w2_self, w2_neigh, b2]`.
-pub fn forward2(feat: &Features, blk: &Block2, params: &[Vec<f32>],
-                hidden: usize, classes: usize, threads: usize,
-                meter: &mut MemoryMeter) -> Fwd2 {
-    let (b, k2, d, h, c) = (blk.batch, blk.k2, feat.d, hidden, classes);
-    let f1w = f1w_of(blk);
-    let (w1s, w1n, b1) = (&params[0], &params[1], &params[2]);
-    let (w2s, w2n, b2) = (&params[3], &params[4], &params[5]);
+/// Gather + materialize + aggregate + L SAGE layers (paper §5 baseline).
+/// `params` order: `[w1_self, w1_neigh, b1, …]`
+/// ([`super::dgl_param_specs`]).
+pub fn forward(feat: &Features, blk: &Block, params: &[Vec<f32>],
+               hidden: usize, classes: usize, threads: usize,
+               meter: &mut MemoryMeter) -> Fwd {
+    let depth = blk.fanouts.depth();
+    debug_assert_eq!(params.len(), 3 * depth, "params/depth mismatch");
+    let (b, d, h, c) = (blk.batch, feat.d, hidden, classes);
+    let kl = blk.fanouts.k(depth - 1);
+    let deepest = &blk.frontiers[depth - 1];
+    let w = deepest.len() / b; // Π_{j<L}(1+k_j)
 
     // per-row gather cost: number of feature rows touched
     let costs: Vec<u64> = (0..b).map(|bi| {
-        1 + blk.f1[bi * f1w..(bi + 1) * f1w]
+        1 + deepest[bi * w..(bi + 1) * w]
             .iter()
             .filter(|&&u| u >= 0)
             .count() as u64
-            * (1 + k2 as u64)
+            * (1 + kl as u64)
     }).collect();
 
-    // -- frontier features, zeroed where f1 is padding
-    let mut xf1 = vec![0.0f32; b * f1w * d];
-    meter.alloc(xf1.len() as u64 * F32);
-    par_fill_rows(threads, &costs, &mut xf1, f1w * d, |bi, row| {
-        for col in 0..f1w {
-            let u = blk.f1[bi * f1w + col];
+    // -- deepest frontier features, zeroed where the frontier is padding
+    let mut xf = vec![0.0f32; b * w * d];
+    meter.alloc(xf.len() as u64 * F32);
+    par_fill_rows(threads, &costs, &mut xf, w * d, |bi, row| {
+        for col in 0..w {
+            let u = deepest[bi * w + col];
             if u >= 0 {
                 feat.copy_row(u as usize, &mut row[col * d..(col + 1) * d]);
             }
         }
     });
 
-    // -- THE BLOCK: dense [B, 1+k1, k2, d] gather (pads gather row 0, like
-    // x[max(s2, 0)]); this materialization is the cost the fused op kills
-    let mut block = vec![0.0f32; b * f1w * k2 * d];
+    // -- THE BLOCK: dense [B·Π(1+k_j), k_L, d] leaf gather (pads gather
+    // row 0, like x[max(leaf, 0)]); this materialization is the cost the
+    // fused op kills, and it scales multiplicatively with depth
+    let mut block = vec![0.0f32; b * w * kl * d];
     meter.alloc(block.len() as u64 * F32);
-    par_fill_rows(threads, &costs, &mut block, f1w * k2 * d, |bi, row| {
-        for slot in 0..f1w * k2 {
-            let w = blk.s2[bi * f1w * k2 + slot].max(0);
-            feat.copy_row(w as usize, &mut row[slot * d..(slot + 1) * d]);
+    par_fill_rows(threads, &costs, &mut block, w * kl * d, |bi, row| {
+        for slot in 0..w * kl {
+            let v = blk.leaf[bi * w * kl + slot].max(0);
+            feat.copy_row(v as usize, &mut row[slot * d..(slot + 1) * d]);
         }
     });
 
-    // -- masked mean over the k2 axis (re-reads the whole block)
-    let mut mean2 = vec![0.0f32; b * f1w * d];
-    meter.alloc(mean2.len() as u64 * F32);
-    par_fill_rows(threads, &costs, &mut mean2, f1w * d, |bi, row| {
-        for col in 0..f1w {
-            let valid = blk.s2[(bi * f1w + col) * k2..(bi * f1w + col + 1) * k2]
-                .iter()
-                .filter(|&&w| w >= 0)
-                .count();
+    // -- masked mean over the k_L axis (re-reads the whole block)
+    let mut mean = vec![0.0f32; b * w * d];
+    meter.alloc(mean.len() as u64 * F32);
+    par_fill_rows(threads, &costs, &mut mean, w * d, |bi, row| {
+        for col in 0..w {
+            let leaf_row =
+                &blk.leaf[(bi * w + col) * kl..(bi * w + col + 1) * kl];
+            let valid = leaf_row.iter().filter(|&&v| v >= 0).count();
             let den = valid.max(1) as f32;
             let dst = &mut row[col * d..(col + 1) * d];
-            for j2 in 0..k2 {
-                if blk.s2[(bi * f1w + col) * k2 + j2] < 0 {
+            for (j2, &v) in leaf_row.iter().enumerate() {
+                if v < 0 {
                     continue;
                 }
-                let src = &block[((bi * f1w + col) * k2 + j2) * d..][..d];
-                for (o, &v) in dst.iter_mut().zip(src) {
-                    *o += v;
+                let src = &block[((bi * w + col) * kl + j2) * d..][..d];
+                for (o, &x) in dst.iter_mut().zip(src) {
+                    *o += x;
                 }
             }
             for o in dst.iter_mut() {
@@ -112,226 +122,180 @@ pub fn forward2(feat: &Features, blk: &Block2, params: &[Vec<f32>],
     meter.free(block.len() as u64 * F32);
     drop(block);
 
-    // -- layer 1 over all B·(1+k1) rows
-    let m = b * f1w;
-    let mut pre1 = vec![0.0f32; m * h];
-    meter.alloc(pre1.len() as u64 * F32);
-    matmul(&xf1, w1s, &mut pre1, m, d, h);
-    matmul(&mean2, w1n, &mut pre1, m, d, h);
-    add_bias(&mut pre1, b1, m, h);
-    let mut h1 = pre1.clone();
-    meter.alloc(h1.len() as u64 * F32);
-    relu(&mut h1);
-    // zero padded frontier rows so layer 2's mean sees true zeros
-    for bi in 0..b {
-        for col in 0..f1w {
-            if blk.f1[bi * f1w + col] < 0 {
-                h1[(bi * f1w + col) * h..(bi * f1w + col + 1) * h].fill(0.0);
-            }
-        }
-    }
+    let mut layers: Vec<LayerFwd> = Vec::with_capacity(depth);
 
-    // -- layer 2: seeds ← frontier
-    let mut h_self = vec![0.0f32; b * h];
-    let mut h_neigh = vec![0.0f32; b * h];
-    meter.alloc(2 * (b * h) as u64 * F32);
-    for bi in 0..b {
-        h_self[bi * h..(bi + 1) * h]
-            .copy_from_slice(&h1[bi * f1w * h..(bi * f1w + 1) * h]);
-        let valid = blk.f1[bi * f1w + 1..(bi + 1) * f1w]
-            .iter()
-            .filter(|&&u| u >= 0)
-            .count();
-        let den = valid.max(1) as f32;
-        let dst = &mut h_neigh[bi * h..(bi + 1) * h];
-        for col in 1..f1w {
-            if blk.f1[bi * f1w + col] < 0 {
-                continue;
-            }
-            let src = &h1[(bi * f1w + col) * h..(bi * f1w + col + 1) * h];
-            for (o, &v) in dst.iter_mut().zip(src) {
-                *o += v;
-            }
-        }
-        for o in dst.iter_mut() {
-            *o /= den;
-        }
-    }
-    let mut logits = vec![0.0f32; b * c];
-    meter.alloc(logits.len() as u64 * F32);
-    matmul(&h_self, w2s, &mut logits, b, h, c);
-    matmul(&h_neigh, w2n, &mut logits, b, h, c);
-    add_bias(&mut logits, b2, b, c);
-
-    Fwd2 { xf1, mean2, pre1, h1, h_self, h_neigh, logits }
-}
-
-/// Backward of [`forward2`] into `grads` (same order/shapes as `params`),
-/// accumulating (callers zero the buffers).
-#[allow(clippy::too_many_arguments)]
-pub fn backward2(fwd: &Fwd2, blk: &Block2, params: &[Vec<f32>],
-                 dlogits: &[f32], hidden: usize, classes: usize,
-                 grads: &mut [Vec<f32>], meter: &mut MemoryMeter) {
-    let (b, d) = (blk.batch, fwd.xf1.len() / (blk.batch * f1w_of(blk)));
-    let (h, c) = (hidden, classes);
-    let f1w = f1w_of(blk);
-    let (w2s, w2n) = (&params[3], &params[4]);
-
-    // layer-2 parameter grads
-    matmul_at_b(&fwd.h_self, dlogits, &mut grads[3], b, h, c);
-    matmul_at_b(&fwd.h_neigh, dlogits, &mut grads[4], b, h, c);
-    col_sum(dlogits, &mut grads[5], b, c);
-
-    // into the frontier activations
-    let mut dh_self = vec![0.0f32; b * h];
-    let mut dh_neigh = vec![0.0f32; b * h];
-    meter.alloc(2 * (b * h) as u64 * F32);
-    matmul_a_bt(dlogits, w2s, &mut dh_self, b, c, h);
-    matmul_a_bt(dlogits, w2n, &mut dh_neigh, b, c, h);
-
-    let m = b * f1w;
-    let mut dpre1 = vec![0.0f32; m * h];
-    meter.alloc(dpre1.len() as u64 * F32);
-    for bi in 0..b {
-        // seed row
-        dpre1[bi * f1w * h..(bi * f1w + 1) * h]
-            .copy_from_slice(&dh_self[bi * h..(bi + 1) * h]);
-        // frontier rows share dh_neigh / n_valid
-        let valid = blk.f1[bi * f1w + 1..(bi + 1) * f1w]
-            .iter()
-            .filter(|&&u| u >= 0)
-            .count();
-        let inv = 1.0 / valid.max(1) as f32;
-        for col in 1..f1w {
-            if blk.f1[bi * f1w + col] < 0 {
-                continue;
-            }
-            let dst = &mut dpre1[(bi * f1w + col) * h..(bi * f1w + col + 1) * h];
-            for (o, &v) in dst.iter_mut().zip(&dh_neigh[bi * h..(bi + 1) * h]) {
-                *o = v * inv;
-            }
-        }
-    }
-    // relu mask (pre-activation sign)
-    for (dv, &p) in dpre1.iter_mut().zip(&fwd.pre1) {
-        if p <= 0.0 {
-            *dv = 0.0;
-        }
-    }
-
-    // layer-1 parameter grads
-    matmul_at_b(&fwd.xf1, &dpre1, &mut grads[0], m, d, h);
-    matmul_at_b(&fwd.mean2, &dpre1, &mut grads[1], m, d, h);
-    col_sum(&dpre1, &mut grads[2], m, h);
-    meter.free((2 * b * h + m * h) as u64 * F32);
-}
-
-/// Forward activations of the baseline 1-hop step.
-pub struct Fwd1 {
-    pub h_self: Vec<f32>,
-    pub h_neigh: Vec<f32>,
-    pub pre: Vec<f32>,
-    pub h: Vec<f32>,
-    pub logits: Vec<f32>,
-}
-
-/// 1-layer SAGE baseline over a materialized `[B, 1+k, d]` frontier
-/// gather (`w2_neigh` exists for layout parity but is unused).
-pub fn forward1(feat: &Features, blk: &Block1, params: &[Vec<f32>],
-                hidden: usize, classes: usize, threads: usize,
-                meter: &mut MemoryMeter) -> Fwd1 {
-    let (b, d, h, c) = (blk.batch, feat.d, hidden, classes);
-    let f1w = 1 + blk.k;
-    let (w1s, w1n, b1) = (&params[0], &params[1], &params[2]);
-    let (w2s, b2) = (&params[3], &params[5]);
-
-    let costs: Vec<u64> = (0..b).map(|bi| {
-        1 + blk.f1[bi * f1w..(bi + 1) * f1w]
-            .iter()
-            .filter(|&&u| u >= 0)
-            .count() as u64
-    }).collect();
-    let mut xf1 = vec![0.0f32; b * f1w * d];
-    meter.alloc(xf1.len() as u64 * F32);
-    par_fill_rows(threads, &costs, &mut xf1, f1w * d, |bi, row| {
-        for col in 0..f1w {
-            let u = blk.f1[bi * f1w + col];
-            if u >= 0 {
-                feat.copy_row(u as usize, &mut row[col * d..(col + 1) * d]);
-            }
-        }
-    });
-
-    let mut h_self = vec![0.0f32; b * d];
-    let mut h_neigh = vec![0.0f32; b * d];
-    meter.alloc(2 * (b * d) as u64 * F32);
-    for bi in 0..b {
-        h_self[bi * d..(bi + 1) * d]
-            .copy_from_slice(&xf1[bi * f1w * d..(bi * f1w + 1) * d]);
-        let valid = blk.f1[bi * f1w + 1..(bi + 1) * f1w]
-            .iter()
-            .filter(|&&u| u >= 0)
-            .count();
-        let den = valid.max(1) as f32;
-        let dst = &mut h_neigh[bi * d..(bi + 1) * d];
-        for col in 1..f1w {
-            if blk.f1[bi * f1w + col] < 0 {
-                continue;
-            }
-            let src = &xf1[(bi * f1w + col) * d..(bi * f1w + col + 1) * d];
-            for (o, &v) in dst.iter_mut().zip(src) {
-                *o += v;
-            }
-        }
-        for o in dst.iter_mut() {
-            *o /= den;
-        }
-    }
-    meter.free(xf1.len() as u64 * F32);
-    drop(xf1);
-
-    let mut pre = vec![0.0f32; b * h];
+    // -- layer 1 over all B·Π(1+k_j) rows
+    let m = b * w;
+    let out1 = if depth == 1 { c } else { h };
+    let mut pre = vec![0.0f32; m * out1];
     meter.alloc(pre.len() as u64 * F32);
-    matmul(&h_self, w1s, &mut pre, b, d, h);
-    matmul(&h_neigh, w1n, &mut pre, b, d, h);
-    add_bias(&mut pre, b1, b, h);
+    matmul(&xf, &params[0], &mut pre, m, d, out1);
+    matmul(&mean, &params[1], &mut pre, m, d, out1);
+    add_bias(&mut pre, &params[2], m, out1);
+    if depth == 1 {
+        let logits = pre;
+        layers.push(LayerFwd { x_self: xf, x_neigh: mean, pre: Vec::new(),
+                               h: Vec::new() });
+        return Fwd { layers, logits };
+    }
     let mut hbuf = pre.clone();
     meter.alloc(hbuf.len() as u64 * F32);
     relu(&mut hbuf);
-    let mut logits = vec![0.0f32; b * c];
-    meter.alloc(logits.len() as u64 * F32);
-    matmul(&hbuf, w2s, &mut logits, b, h, c);
-    add_bias(&mut logits, b2, b, c);
-
-    Fwd1 { h_self, h_neigh, pre, h: hbuf, logits }
-}
-
-/// Backward of [`forward1`] into `grads` (`w2_neigh` gradient stays 0).
-#[allow(clippy::too_many_arguments)]
-pub fn backward1(fwd: &Fwd1, params: &[Vec<f32>], dlogits: &[f32], b: usize,
-                 d: usize, hidden: usize, classes: usize,
-                 grads: &mut [Vec<f32>], meter: &mut MemoryMeter) {
-    let (h, c) = (hidden, classes);
-    let w2s = &params[3];
-    matmul_at_b(&fwd.h, dlogits, &mut grads[3], b, h, c);
-    col_sum(dlogits, &mut grads[5], b, c);
-    let mut dpre = vec![0.0f32; b * h];
-    meter.alloc(dpre.len() as u64 * F32);
-    matmul_a_bt(dlogits, w2s, &mut dpre, b, c, h);
-    for (dv, &p) in dpre.iter_mut().zip(&fwd.pre) {
-        if p <= 0.0 {
-            *dv = 0.0;
+    // zero padded frontier rows so the next layer's mean sees true zeros
+    for (p, &u) in deepest.iter().enumerate() {
+        if u < 0 {
+            hbuf[p * h..(p + 1) * h].fill(0.0);
         }
     }
-    matmul_at_b(&fwd.h_self, &dpre, &mut grads[0], b, d, h);
-    matmul_at_b(&fwd.h_neigh, &dpre, &mut grads[1], b, d, h);
-    col_sum(&dpre, &mut grads[2], b, h);
-    meter.free(dpre.len() as u64 * F32);
+    layers.push(LayerFwd { x_self: xf, x_neigh: mean, pre, h: hbuf });
+
+    // -- layers 2..=L: parents ← nested child groups of the layer below
+    for i in 2..=depth {
+        let lvl = depth - i; // parent frontier depth
+        let parents = &blk.frontiers[lvl];
+        let children = &blk.frontiers[lvl + 1];
+        let rows = parents.len();
+        let gw = children.len() / rows; // 1 + k_{lvl+1}
+        let out_i = if i == depth { c } else { h };
+        let hprev = &layers[i - 2].h;
+
+        let mut x_self = vec![0.0f32; rows * h];
+        let mut x_neigh = vec![0.0f32; rows * h];
+        meter.alloc(2 * (rows * h) as u64 * F32);
+        for p in 0..rows {
+            x_self[p * h..(p + 1) * h]
+                .copy_from_slice(&hprev[p * gw * h..(p * gw + 1) * h]);
+            let valid = children[p * gw + 1..(p + 1) * gw]
+                .iter()
+                .filter(|&&u| u >= 0)
+                .count();
+            let den = valid.max(1) as f32;
+            let dst = &mut x_neigh[p * h..(p + 1) * h];
+            for col in 1..gw {
+                if children[p * gw + col] < 0 {
+                    continue;
+                }
+                let src = &hprev[(p * gw + col) * h..(p * gw + col + 1) * h];
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o += v;
+                }
+            }
+            for o in dst.iter_mut() {
+                *o /= den;
+            }
+        }
+
+        let base = 3 * (i - 1);
+        let mut pre = vec![0.0f32; rows * out_i];
+        meter.alloc(pre.len() as u64 * F32);
+        matmul(&x_self, &params[base], &mut pre, rows, h, out_i);
+        matmul(&x_neigh, &params[base + 1], &mut pre, rows, h, out_i);
+        add_bias(&mut pre, &params[base + 2], rows, out_i);
+        if i == depth {
+            let logits = pre;
+            layers.push(LayerFwd { x_self, x_neigh, pre: Vec::new(),
+                                   h: Vec::new() });
+            return Fwd { layers, logits };
+        }
+        let mut hbuf = pre.clone();
+        meter.alloc(hbuf.len() as u64 * F32);
+        relu(&mut hbuf);
+        for (p, &u) in parents.iter().enumerate() {
+            if u < 0 {
+                hbuf[p * h..(p + 1) * h].fill(0.0);
+            }
+        }
+        layers.push(LayerFwd { x_self, x_neigh, pre, h: hbuf });
+    }
+    unreachable!("loop returns at i == depth")
+}
+
+/// Backward of [`forward`] into `grads` (same order/shapes as `params`),
+/// accumulating (callers zero the buffers). Features are not parameters,
+/// so propagation stops below layer 1.
+#[allow(clippy::too_many_arguments)]
+pub fn backward(fwd: &Fwd, blk: &Block, params: &[Vec<f32>],
+                dlogits: &[f32], hidden: usize, classes: usize,
+                grads: &mut [Vec<f32>], meter: &mut MemoryMeter) {
+    let depth = blk.fanouts.depth();
+    let h = hidden;
+    let d = fwd.layers[0].x_self.len() / blk.frontiers[depth - 1].len();
+    let mut g_own: Option<Vec<f32>> = None;
+    for i in (1..=depth).rev() {
+        let layer = &fwd.layers[i - 1];
+        let in_i = if i == 1 { d } else { h };
+        let out_i = if i == depth { classes } else { h };
+        let rows = layer.x_self.len() / in_i;
+        let base = 3 * (i - 1);
+        {
+            let g: &[f32] = g_own.as_deref().unwrap_or(dlogits);
+            // layer-i parameter grads
+            matmul_at_b(&layer.x_self, g, &mut grads[base], rows, in_i, out_i);
+            matmul_at_b(&layer.x_neigh, g, &mut grads[base + 1], rows, in_i,
+                        out_i);
+            col_sum(g, &mut grads[base + 2], rows, out_i);
+        }
+        if i == 1 {
+            break;
+        }
+
+        // -- propagate into the layer below through the group layout
+        let lvl = depth - i;
+        let children = &blk.frontiers[lvl + 1];
+        let gw = children.len() / rows;
+        let mut d_self = vec![0.0f32; rows * h];
+        let mut d_neigh = vec![0.0f32; rows * h];
+        meter.alloc(2 * (rows * h) as u64 * F32);
+        {
+            let g: &[f32] = g_own.as_deref().unwrap_or(dlogits);
+            matmul_a_bt(g, &params[base], &mut d_self, rows, out_i, h);
+            matmul_a_bt(g, &params[base + 1], &mut d_neigh, rows, out_i, h);
+        }
+        let mut dpre = vec![0.0f32; children.len() * h];
+        meter.alloc(dpre.len() as u64 * F32);
+        for p in 0..rows {
+            // self slot
+            dpre[p * gw * h..(p * gw + 1) * h]
+                .copy_from_slice(&d_self[p * h..(p + 1) * h]);
+            // child slots share d_neigh / n_valid
+            let valid = children[p * gw + 1..(p + 1) * gw]
+                .iter()
+                .filter(|&&u| u >= 0)
+                .count();
+            let inv = 1.0 / valid.max(1) as f32;
+            for col in 1..gw {
+                if children[p * gw + col] < 0 {
+                    continue;
+                }
+                let dst =
+                    &mut dpre[(p * gw + col) * h..(p * gw + col + 1) * h];
+                for (o, &v) in dst.iter_mut().zip(&d_neigh[p * h..(p + 1) * h])
+                {
+                    *o = v * inv;
+                }
+            }
+        }
+        // relu mask (pre-activation sign of the layer below)
+        for (dv, &pv) in dpre.iter_mut().zip(&fwd.layers[i - 2].pre) {
+            if pv <= 0.0 {
+                *dv = 0.0;
+            }
+        }
+        meter.free(2 * (rows * h) as u64 * F32);
+        if let Some(prev) = g_own.take() {
+            meter.free(prev.len() as u64 * F32);
+        }
+        g_own = Some(dpre);
+    }
+    if let Some(prev) = g_own.take() {
+        meter.free(prev.len() as u64 * F32);
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fanout::Fanouts;
     use crate::gen::{builtin_spec, Dataset};
     use crate::kernel::{dgl_param_specs, fused, softmax_xent};
     use crate::runtime::init_params;
@@ -341,10 +305,11 @@ mod tests {
         Dataset::generate(builtin_spec("tiny").unwrap()).unwrap()
     }
 
-    fn tiny_setup() -> (Dataset, Features, Vec<Vec<f32>>) {
+    fn tiny_setup(depth: usize) -> (Dataset, Features, Vec<Vec<f32>>) {
         let ds = tiny();
         let feat = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false);
-        let params = init_params(&dgl_param_specs(ds.spec.d, 32, ds.spec.c), 42);
+        let params =
+            init_params(&dgl_param_specs(ds.spec.d, 32, ds.spec.c, depth), 42);
         (ds, feat, params)
     }
 
@@ -353,25 +318,26 @@ mod tests {
     /// (the paired-sampling property, now at the feature level).
     #[test]
     fn block_mean_matches_fused_agg_per_frontier_node() {
-        let (ds, feat, params) = tiny_setup();
+        let (ds, feat, params) = tiny_setup(2);
         let seeds: Vec<i32> = (0..64).collect();
         let (k1, k2, base) = (5usize, 3usize, 42u64);
-        let blk = sampler::build_block2(&ds.graph, &seeds, k1, k2, base);
+        let fo = Fanouts::of(&[k1, k2]);
+        let blk = sampler::build_block(&ds.graph, &seeds, &fo, base);
         let mut meter = crate::memory::MemoryMeter::new();
-        let fwd = forward2(&feat, &blk, &params, 32, ds.spec.c, 1, &mut meter);
-        // mean2 column ui+1 of the baseline == 1-hop fused agg of s1[ui]
-        // at hop=1 counters
+        let fwd = forward(&feat, &blk, &params, 32, ds.spec.c, 1, &mut meter);
+        // layer-1 neighbor-mean column ui+1 == 1-hop fused agg of
+        // frontiers[1][ui+1] at hop=1 counters
         let d = ds.spec.d;
         let f1w = 1 + k1;
         for bi in 0..4 {
             for ui in 0..k1 {
-                let u = blk.f1[bi * f1w + 1 + ui];
+                let u = blk.frontiers[1][bi * f1w + 1 + ui];
                 if u < 0 {
                     continue;
                 }
                 let one = fused::fused_1hop_at_hop(&ds.graph, &feat, &[u], k2,
                                                    base, 1);
-                let col = &fwd.mean2[(bi * f1w + 1 + ui) * d..][..d];
+                let col = &fwd.layers[0].x_neigh[(bi * f1w + 1 + ui) * d..][..d];
                 for (j, (&a, &w)) in col.iter().zip(&one).enumerate() {
                     assert!((a - w).abs() < 1e-4,
                             "bi={bi} ui={ui} j={j}: {a} vs {w}");
@@ -381,123 +347,114 @@ mod tests {
     }
 
     #[test]
-    fn forward2_shapes_and_masking() {
-        let (ds, feat, params) = tiny_setup();
-        let seeds: Vec<i32> = (0..32).collect();
-        let blk = sampler::build_block2(&ds.graph, &seeds, 4, 3, 7);
-        let mut meter = crate::memory::MemoryMeter::new();
-        let fwd = forward2(&feat, &blk, &params, 32, ds.spec.c, 1, &mut meter);
-        assert_eq!(fwd.logits.len(), 32 * ds.spec.c);
-        assert!(fwd.logits.iter().all(|v| v.is_finite()));
-        // h1 rows for padded frontier entries are zero
-        let f1w = 5;
-        for bi in 0..32 {
-            for col in 0..f1w {
-                if blk.f1[bi * f1w + col] < 0 {
-                    assert!(fwd.h1[(bi * f1w + col) * 32..][..32]
-                        .iter()
-                        .all(|&v| v == 0.0));
+    fn forward_shapes_and_masking_at_depths_2_and_3() {
+        for fo in [Fanouts::of(&[4, 3]), Fanouts::of(&[3, 2, 2])] {
+            let depth = fo.depth();
+            let (ds, feat, params) = tiny_setup(depth);
+            let seeds: Vec<i32> = (0..32).collect();
+            let blk = sampler::build_block(&ds.graph, &seeds, &fo, 7);
+            let mut meter = crate::memory::MemoryMeter::new();
+            let fwd =
+                forward(&feat, &blk, &params, 32, ds.spec.c, 1, &mut meter);
+            assert_eq!(fwd.layers.len(), depth);
+            assert_eq!(fwd.logits.len(), 32 * ds.spec.c);
+            assert!(fwd.logits.iter().all(|v| v.is_finite()));
+            // hidden rows for padded frontier entries are zero at every
+            // non-final layer
+            for i in 1..depth {
+                let frontier = &blk.frontiers[depth - i];
+                for (p, &u) in frontier.iter().enumerate() {
+                    if u < 0 {
+                        assert!(fwd.layers[i - 1].h[p * 32..(p + 1) * 32]
+                            .iter()
+                            .all(|&v| v == 0.0), "{fo} layer {i} row {p}");
+                    }
                 }
             }
+            // the leaf block was materialized and released: peak covers it
+            let w = blk.frontiers[depth - 1].len() / 32;
+            let block_bytes =
+                (32 * w * fo.k(depth - 1) * ds.spec.d * 4) as u64;
+            assert!(meter.peak() > block_bytes,
+                    "{fo}: peak missed the block");
         }
-        // the block was materialized and released: peak covers it, and
-        // everything still live is less than the peak
-        let block_bytes = (32 * f1w * 3 * ds.spec.d * 4) as u64;
-        assert!(meter.peak() > block_bytes, "peak missed the block");
     }
 
     /// Analytic parameter gradients must match a directional finite
-    /// difference of the loss (2-hop baseline).
+    /// difference of the loss, at every depth (1, 2, and 3 layers).
     #[test]
-    fn backward2_matches_finite_difference() {
-        let (ds, feat, params) = tiny_setup();
-        let seeds: Vec<i32> = (40..72).collect();
-        let labels: Vec<i32> =
-            seeds.iter().map(|&u| ds.labels[u as usize]).collect();
-        let blk = sampler::build_block2(&ds.graph, &seeds, 4, 3, 99);
-        let (h, c) = (32usize, ds.spec.c);
-        let b = seeds.len();
-        let mut meter = crate::memory::MemoryMeter::new();
+    fn backward_matches_finite_difference_at_depths_1_2_3() {
+        for fo in [Fanouts::of(&[5]), Fanouts::of(&[4, 3]),
+                   Fanouts::of(&[3, 2, 2])] {
+            let depth = fo.depth();
+            let (ds, feat, params) = tiny_setup(depth);
+            let seeds: Vec<i32> = (40..72).collect();
+            let labels: Vec<i32> =
+                seeds.iter().map(|&u| ds.labels[u as usize]).collect();
+            let blk = sampler::build_block(&ds.graph, &seeds, &fo, 99);
+            let (h, c) = (32usize, ds.spec.c);
+            let b = seeds.len();
+            let mut meter = crate::memory::MemoryMeter::new();
 
-        let loss_of = |p: &[Vec<f32>]| -> f64 {
-            let mut m = crate::memory::MemoryMeter::new();
-            let fwd = forward2(&feat, &blk, p, h, c, 1, &mut m);
-            softmax_xent(&fwd.logits, &labels, b, c).0
-        };
+            let loss_of = |p: &[Vec<f32>]| -> f64 {
+                let mut m = crate::memory::MemoryMeter::new();
+                let fwd = forward(&feat, &blk, p, h, c, 1, &mut m);
+                softmax_xent(&fwd.logits, &labels, b, c).0
+            };
 
-        let fwd = forward2(&feat, &blk, &params, h, c, 1, &mut meter);
-        let (_, dlogits) = softmax_xent(&fwd.logits, &labels, b, c);
-        let mut grads: Vec<Vec<f32>> =
-            params.iter().map(|p| vec![0.0; p.len()]).collect();
-        backward2(&fwd, &blk, &params, &dlogits, h, c, &mut grads, &mut meter);
+            let fwd = forward(&feat, &blk, &params, h, c, 1, &mut meter);
+            let (_, dlogits) = softmax_xent(&fwd.logits, &labels, b, c);
+            let mut grads: Vec<Vec<f32>> =
+                params.iter().map(|p| vec![0.0; p.len()]).collect();
+            backward(&fwd, &blk, &params, &dlogits, h, c, &mut grads,
+                     &mut meter);
 
-        let mut r = crate::rng::SplitMix64::new(8);
-        for (ti, g) in grads.iter().enumerate() {
-            let delta: Vec<f32> = (0..g.len())
-                .map(|_| r.next_normal() as f32 / (g.len() as f32).sqrt())
-                .collect();
-            let eps = 1e-2f32;
-            let mut pp = params.clone();
-            let mut pm = params.clone();
-            for ((a, b_), &dl) in
-                pp[ti].iter_mut().zip(pm[ti].iter_mut()).zip(&delta)
-            {
-                *a += eps * dl;
-                *b_ -= eps * dl;
+            let mut r = crate::rng::SplitMix64::new(8);
+            for (ti, g) in grads.iter().enumerate() {
+                let delta: Vec<f32> = (0..g.len())
+                    .map(|_| r.next_normal() as f32 / (g.len() as f32).sqrt())
+                    .collect();
+                let eps = 1e-2f32;
+                let mut pp = params.clone();
+                let mut pm = params.clone();
+                for ((a, b_), &dl) in
+                    pp[ti].iter_mut().zip(pm[ti].iter_mut()).zip(&delta)
+                {
+                    *a += eps * dl;
+                    *b_ -= eps * dl;
+                }
+                let fd = (loss_of(&pp) - loss_of(&pm)) / (2.0 * eps as f64);
+                let analytic: f64 = g
+                    .iter()
+                    .zip(&delta)
+                    .map(|(&gv, &dl)| (gv * dl) as f64)
+                    .sum();
+                assert!((fd - analytic).abs() < 2e-3 + 0.05 * analytic.abs(),
+                        "{fo} tensor {ti}: fd {fd} vs analytic {analytic}");
             }
-            let fd = (loss_of(&pp) - loss_of(&pm)) / (2.0 * eps as f64);
-            let analytic: f64 = g
-                .iter()
-                .zip(&delta)
-                .map(|(&gv, &dl)| (gv * dl) as f64)
-                .sum();
-            assert!((fd - analytic).abs() < 2e-3 + 0.05 * analytic.abs(),
-                    "tensor {ti}: fd {fd} vs analytic {analytic}");
         }
     }
 
+    /// Depth-1 stack is a single SAGE layer d → c: three parameter
+    /// tensors, all with nonzero gradients on a trained batch.
     #[test]
-    fn forward1_and_backward1_run_and_fd_check() {
-        let (ds, feat, params) = tiny_setup();
+    fn depth1_stack_has_three_tensors_and_live_grads() {
+        let (ds, feat, params) = tiny_setup(1);
+        assert_eq!(params.len(), 3);
         let seeds: Vec<i32> = (0..48).collect();
         let labels: Vec<i32> =
             seeds.iter().map(|&u| ds.labels[u as usize]).collect();
-        let blk = sampler::build_block1(&ds.graph, &seeds, 5, 3);
-        let (h, c, b, d) = (32usize, ds.spec.c, seeds.len(), ds.spec.d);
+        let blk = sampler::build_block(&ds.graph, &seeds, &Fanouts::of(&[5]),
+                                       3);
+        let (b, c) = (seeds.len(), ds.spec.c);
         let mut meter = crate::memory::MemoryMeter::new();
-        let fwd = forward1(&feat, &blk, &params, h, c, 1, &mut meter);
+        let fwd = forward(&feat, &blk, &params, 32, c, 1, &mut meter);
         let (_, dlogits) = softmax_xent(&fwd.logits, &labels, b, c);
         let mut grads: Vec<Vec<f32>> =
             params.iter().map(|p| vec![0.0; p.len()]).collect();
-        backward1(&fwd, &params, &dlogits, b, d, h, c, &mut grads, &mut meter);
-        // w2_neigh untouched in the 1-hop model
-        assert!(grads[4].iter().all(|&v| v == 0.0));
-
-        let loss_of = |p: &[Vec<f32>]| -> f64 {
-            let mut m = crate::memory::MemoryMeter::new();
-            let fwd = forward1(&feat, &blk, p, h, c, 1, &mut m);
-            softmax_xent(&fwd.logits, &labels, b, c).0
-        };
-        let mut r = crate::rng::SplitMix64::new(4);
-        for ti in [0usize, 2, 3] {
-            let g = &grads[ti];
-            let delta: Vec<f32> = (0..g.len())
-                .map(|_| r.next_normal() as f32 / (g.len() as f32).sqrt())
-                .collect();
-            let eps = 1e-2f32;
-            let mut pp = params.clone();
-            let mut pm = params.clone();
-            for ((a, b_), &dl) in
-                pp[ti].iter_mut().zip(pm[ti].iter_mut()).zip(&delta)
-            {
-                *a += eps * dl;
-                *b_ -= eps * dl;
-            }
-            let fd = (loss_of(&pp) - loss_of(&pm)) / (2.0 * eps as f64);
-            let analytic: f64 =
-                g.iter().zip(&delta).map(|(&gv, &dl)| (gv * dl) as f64).sum();
-            assert!((fd - analytic).abs() < 2e-3 + 0.05 * analytic.abs(),
-                    "tensor {ti}: fd {fd} vs analytic {analytic}");
+        backward(&fwd, &blk, &params, &dlogits, 32, c, &mut grads, &mut meter);
+        for (ti, g) in grads.iter().enumerate() {
+            assert!(g.iter().any(|&v| v != 0.0), "tensor {ti} all-zero grad");
         }
     }
 }

@@ -1,17 +1,22 @@
 //! [`NativeBackend`] — the native CPU implementation of the
 //! [`crate::runtime::backend::Backend`] seam: a full synchronized train
 //! step (forward + backward + AdamW) as real host compute, no PJRT
-//! artifacts required.
+//! artifacts required, at any sampling depth.
 //!
 //! Two step variants, sharing seeds, base-seed schedule, and the
 //! counter-hash sampling rule with the PJRT path:
 //!
-//! * **fused** ([`super::fused`]): sampling + mean aggregation in one pass,
-//!   a `[B,d]` aggregate and (optionally) the saved index tensors are the
-//!   only per-step intermediates;
-//! * **baseline** ([`super::baseline`]): consumes the host-sampled blocks
-//!   from the batch pipeline and materializes the dense feature gathers,
-//!   exactly the DGL-style pipeline the paper measures against.
+//! * **fused** ([`super::fused`]): sampling + nested mean aggregation in
+//!   one pass over the whole fanout list; a `[B,d]` aggregate and
+//!   (optionally) the per-hop saved index tensors are the only per-step
+//!   intermediates. The model is the depth-independent SAGE head
+//!   (`x_self`, multi-hop aggregate → hidden → logits);
+//! * **baseline** ([`super::baseline`]): consumes the host-sampled
+//!   [`crate::sampler::Block`] from the batch pipeline, materializes the
+//!   dense feature gathers, and runs an L-layer SAGE stack — exactly the
+//!   DGL-style pipeline the paper measures against, with one parameter
+//!   triple (w_self, w_neigh, b) per layer and AdamW state keyed per
+//!   tensor.
 //!
 //! All transient buffers are recorded in the coordinator's
 //! [`MemoryMeter`], so `StepTiming::transient_bytes` is a *measured*
@@ -22,12 +27,13 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
+use crate::fanout::Fanouts;
 use crate::gen::Dataset;
 use crate::memory::MemoryMeter;
 use crate::metrics::Timer;
 use crate::runtime::backend::{Backend, StepInputs, StepOutcome};
-use crate::runtime::manifest::AdamwConfig;
 use crate::runtime::init_params;
+use crate::runtime::manifest::AdamwConfig;
 use crate::sampler;
 
 use super::linalg::{add_bias, col_sum, matmul, matmul_a_bt, matmul_at_b, relu};
@@ -37,12 +43,20 @@ use super::{adamw_update, baseline, dgl_param_specs, fsa_param_specs, fused,
 const F32: u64 = 4;
 const I32: u64 = 4;
 
-/// Fixed evaluation fanout, mirroring the `*_eval_*_f15x10_b512` AOT
-/// artifacts: both backends evaluate the same 2-hop forward regardless of
-/// the training fanout/hops, so accuracies are comparable across the
-/// backend seam.
-const EVAL_K1: usize = 15;
-const EVAL_K2: usize = 10;
+/// Evaluation fanouts for a model of the given depth: the classic 15-10
+/// protocol for the first two hops (mirroring the `*_eval_*_f15x10_b512`
+/// AOT artifacts), 5 for every deeper hop. Both variants evaluate at the
+/// same depth-matched fanout. At depth 2 this is exactly the AOT eval
+/// protocol, so accuracies are comparable across the backend seam; at
+/// other depths the protocol (and, for the baseline, the model itself —
+/// one SAGE layer per hop vs the fixed two-layer dgl1 artifacts) is
+/// native-only until L-hop manifests land (ROADMAP).
+pub fn eval_fanouts(depth: usize) -> Fanouts {
+    const BASE: [usize; 2] = [15, 10];
+    Fanouts::of(&(0..depth)
+        .map(|l| BASE.get(l).copied().unwrap_or(5))
+        .collect::<Vec<_>>())
+}
 
 /// Configuration of a native training session (the subset of `TrainConfig`
 /// the engine needs, kept separate so `bench`/tests can construct it
@@ -51,9 +65,9 @@ const EVAL_K2: usize = 10;
 pub struct NativeConfig {
     /// Fused sample+aggregate (fsa) vs block-materializing baseline (dgl).
     pub fused: bool,
-    pub hops: u32,
-    pub k1: usize,
-    pub k2: usize,
+    /// Per-hop fanouts; depth = number of hops (and, for the baseline,
+    /// SAGE layers).
+    pub fanouts: Fanouts,
     /// bf16 feature storage (the paper's AMP setting; accumulate stays f32).
     pub amp: bool,
     /// Keep the sampled index tensors per step (§3.3 replay backward).
@@ -78,15 +92,13 @@ pub struct NativeBackend {
 impl NativeBackend {
     pub fn new(ds: Arc<Dataset>, cfg: NativeConfig,
                adamw: AdamwConfig) -> Result<NativeBackend> {
-        ensure!(cfg.hops == 1 || cfg.hops == 2, "hops must be 1 or 2");
-        ensure!(cfg.k1 > 0, "k1 must be positive");
-        ensure!(cfg.hops == 1 || cfg.k2 > 0, "2-hop config needs k2 > 0");
+        ensure!(cfg.fanouts.depth() >= 1, "fanout must have at least 1 hop");
         let (d, c) = (ds.spec.d, ds.spec.c);
         let feat = Features::from_dataset(ds.clone(), cfg.amp);
         let specs = if cfg.fused {
             fsa_param_specs(d, cfg.hidden, c)
         } else {
-            dgl_param_specs(d, cfg.hidden, c)
+            dgl_param_specs(d, cfg.hidden, c, cfg.fanouts.depth())
         };
         let params = init_params(&specs, cfg.seed);
         let m = params.iter().map(|p| vec![0.0; p.len()]).collect();
@@ -140,28 +152,16 @@ impl NativeBackend {
 
         // -- fused sample+aggregate (the kernel); `_saved` keeps the index
         // tensors alive for the whole step, like the device buffers would be
-        let (agg, _saved, pairs) = if self.cfg.hops == 2 {
-            let out = fused::fused_2hop(&self.ds.graph, &self.feat, seeds,
-                                        self.cfg.k1, self.cfg.k2, base,
-                                        self.cfg.save_indices,
-                                        self.cfg.threads);
-            meter.alloc((b * d) as u64 * F32);
-            if self.cfg.save_indices {
-                meter.alloc((b * self.cfg.k1) as u64 * I32
-                    + (b * self.cfg.k1 * self.cfg.k2) as u64 * I32);
+        let out = fused::fused_khop(&self.ds.graph, &self.feat, seeds,
+                                    &self.cfg.fanouts, base,
+                                    self.cfg.save_indices, self.cfg.threads);
+        meter.alloc((b * d) as u64 * F32);
+        if let Some(saved) = &out.saved {
+            for s in saved {
+                meter.alloc(s.len() as u64 * I32);
             }
-            (out.agg, (out.s1, out.s2), out.pairs)
-        } else {
-            let out = fused::fused_1hop(&self.ds.graph, &self.feat, seeds,
-                                        self.cfg.k1, base,
-                                        self.cfg.save_indices,
-                                        self.cfg.threads);
-            meter.alloc((b * d) as u64 * F32);
-            if self.cfg.save_indices {
-                meter.alloc((b * self.cfg.k1) as u64 * I32);
-            }
-            (out.agg, (out.samples, None), out.pairs)
-        };
+        }
+        let (agg, _saved, pairs) = (out.agg, out.saved, out.pairs);
 
         // -- seed features + head
         let mut x_self = vec![0.0f32; b * d];
@@ -222,40 +222,23 @@ impl Backend for NativeBackend {
                 self.fsa_loss_grads(inp.seeds, inp.labels, inp.base, meter)?;
             self.apply_adamw(&grads, step);
             (loss, Some(pairs))
-        } else if self.cfg.hops == 2 {
-            let Some(blk) = inp.block2 else {
-                bail!("native baseline 2-hop step without a prepared block")
-            };
-            ensure!(blk.batch == b && blk.k1 == self.cfg.k1
-                    && blk.k2 == self.cfg.k2, "block dims mismatch");
-            meter.alloc((blk.f1.len() + blk.s2.len()) as u64 * I32);
-            let fwd = baseline::forward2(&self.feat, blk, &self.params, h, c,
-                                         self.cfg.threads, meter);
-            let (loss, dlogits) = softmax_xent(&fwd.logits, inp.labels, b, c);
-            meter.alloc((b * c) as u64 * F32);
-            let mut grads: Vec<Vec<f32>> =
-                self.params.iter().map(|p| vec![0.0; p.len()]).collect();
-            meter.alloc(self.param_bytes());
-            baseline::backward2(&fwd, blk, &self.params, &dlogits, h, c,
-                                &mut grads, meter);
-            self.apply_adamw(&grads, step);
-            (loss, None)
         } else {
-            let Some(blk) = inp.block1 else {
-                bail!("native baseline 1-hop step without a prepared block")
+            let Some(blk) = inp.block else {
+                bail!("native baseline step without a prepared block")
             };
-            ensure!(blk.batch == b && blk.k == self.cfg.k1,
-                    "block dims mismatch");
-            meter.alloc(blk.f1.len() as u64 * I32);
-            let fwd = baseline::forward1(&self.feat, blk, &self.params, h, c,
-                                         self.cfg.threads, meter);
+            ensure!(blk.batch == b && blk.fanouts == self.cfg.fanouts,
+                    "block dims mismatch: block {}x{}, config {}x{}",
+                    blk.batch, blk.fanouts, b, self.cfg.fanouts);
+            meter.alloc(blk.index_len() as u64 * I32);
+            let fwd = baseline::forward(&self.feat, blk, &self.params, h, c,
+                                        self.cfg.threads, meter);
             let (loss, dlogits) = softmax_xent(&fwd.logits, inp.labels, b, c);
             meter.alloc((b * c) as u64 * F32);
             let mut grads: Vec<Vec<f32>> =
                 self.params.iter().map(|p| vec![0.0; p.len()]).collect();
             meter.alloc(self.param_bytes());
-            baseline::backward1(&fwd, &self.params, &dlogits, b, self.feat.d,
-                                h, c, &mut grads, meter);
+            baseline::backward(&fwd, blk, &self.params, &dlogits, h, c,
+                               &mut grads, meter);
             self.apply_adamw(&grads, step);
             (loss, None)
         };
@@ -277,13 +260,13 @@ impl Backend for NativeBackend {
         }
         let (d, h, c) = (self.feat.d, self.cfg.hidden, self.ds.spec.c);
         let mut scratch = MemoryMeter::new(); // eval is not metered
-        // Fixed eval protocol (2-hop, EVAL_K1 x EVAL_K2), like the AOT
-        // eval artifacts — 1-hop-trained models share the same parameter
-        // shapes and evaluate through the 2-hop forward, exactly as the
-        // PJRT path does.
+        // Depth-matched eval protocol: the 15-10(-5…) fanout at the
+        // model's own depth (see [`eval_fanouts`]). At depth 2 this is
+        // exactly the fixed f15x10 protocol of the AOT eval artifacts.
+        let ef = eval_fanouts(self.cfg.fanouts.depth());
         let logits = if self.cfg.fused {
-            let agg = fused::fused_2hop(&self.ds.graph, &self.feat, seeds,
-                                        EVAL_K1, EVAL_K2, base, false,
+            let agg = fused::fused_khop(&self.ds.graph, &self.feat, seeds,
+                                        &ef, base, false,
                                         self.cfg.threads).agg;
             let mut x_self = vec![0.0f32; b * d];
             for (i, &s) in seeds.iter().enumerate() {
@@ -291,10 +274,9 @@ impl Backend for NativeBackend {
             }
             self.head_forward(&x_self, &agg, b).2
         } else {
-            let blk = sampler::build_block2(&self.ds.graph, seeds, EVAL_K1,
-                                            EVAL_K2, base);
-            baseline::forward2(&self.feat, &blk, &self.params, h, c,
-                               self.cfg.threads, &mut scratch).logits
+            let blk = sampler::build_block(&self.ds.graph, seeds, &ef, base);
+            baseline::forward(&self.feat, &blk, &self.params, h, c,
+                              self.cfg.threads, &mut scratch).logits
         };
         Ok(Some(logits))
     }
@@ -313,12 +295,10 @@ mod tests {
         Arc::new(Dataset::generate(builtin_spec("tiny").unwrap()).unwrap())
     }
 
-    fn cfg(fused: bool) -> NativeConfig {
+    fn cfg(fused: bool, ks: &[usize]) -> NativeConfig {
         NativeConfig {
             fused,
-            hops: 2,
-            k1: 5,
-            k2: 3,
+            fanouts: Fanouts::of(ks),
             amp: false,
             save_indices: true,
             seed: 42,
@@ -333,38 +313,52 @@ mod tests {
 
     fn step_inputs<'a>(seeds: &'a [i32], labels: &'a [i32], base: u64)
                        -> StepInputs<'a> {
-        StepInputs { seeds, labels, base, block1: None, block2: None }
+        StepInputs { seeds, labels, base, block: None }
     }
 
     #[test]
-    fn fused_engine_decreases_loss() {
+    fn eval_fanouts_follow_model_depth() {
+        assert_eq!(eval_fanouts(1), Fanouts::of(&[15]));
+        assert_eq!(eval_fanouts(2), Fanouts::of(&[15, 10]));
+        assert_eq!(eval_fanouts(3), Fanouts::of(&[15, 10, 5]));
+        assert_eq!(eval_fanouts(4), Fanouts::of(&[15, 10, 5, 5]));
+    }
+
+    #[test]
+    fn fused_engine_decreases_loss_at_every_depth() {
         let ds = tiny();
-        let mut eng = NativeBackend::new(ds.clone(), cfg(true), adamw()).unwrap();
-        let seeds: Vec<i32> = (0..64).collect();
-        let labels: Vec<i32> =
-            seeds.iter().map(|&u| ds.labels[u as usize]).collect();
-        let mut meter = MemoryMeter::new();
-        let mut losses = Vec::new();
-        for step in 0..30 {
-            let base = crate::rng::mix(42 + step as u64);
-            let out = eng
-                .train_step(step, &step_inputs(&seeds, &labels, base),
-                            &mut meter)
-                .unwrap();
-            assert!(out.loss.is_finite());
-            assert!(out.pairs.unwrap() > 0);
-            losses.push(out.loss);
-            meter.reset_step();
+        for ks in [&[5][..], &[5, 3][..], &[4, 3, 2][..]] {
+            let mut eng =
+                NativeBackend::new(ds.clone(), cfg(true, ks), adamw()).unwrap();
+            let seeds: Vec<i32> = (0..64).collect();
+            let labels: Vec<i32> =
+                seeds.iter().map(|&u| ds.labels[u as usize]).collect();
+            let mut meter = MemoryMeter::new();
+            let mut losses = Vec::new();
+            for step in 0..30 {
+                let base = crate::rng::mix(42 + step as u64);
+                let out = eng
+                    .train_step(step, &step_inputs(&seeds, &labels, base),
+                                &mut meter)
+                    .unwrap();
+                assert!(out.loss.is_finite());
+                assert!(out.pairs.unwrap() > 0);
+                losses.push(out.loss);
+                meter.reset_step();
+            }
+            assert!(losses[29] < losses[0] * 0.8,
+                    "depth {}: loss {} -> {}", ks.len(), losses[0],
+                    losses[29]);
         }
-        assert!(losses[29] < losses[0] * 0.8,
-                "loss {} -> {}", losses[0], losses[29]);
     }
 
     #[test]
     fn baseline_engine_requires_block_and_trains() {
         let ds = tiny();
+        let fo = Fanouts::of(&[5, 3]);
         let mut eng =
-            NativeBackend::new(ds.clone(), cfg(false), adamw()).unwrap();
+            NativeBackend::new(ds.clone(), cfg(false, &[5, 3]), adamw())
+                .unwrap();
         let seeds: Vec<i32> = (0..64).collect();
         let labels: Vec<i32> =
             seeds.iter().map(|&u| ds.labels[u as usize]).collect();
@@ -372,12 +366,44 @@ mod tests {
         assert!(eng
             .train_step(0, &step_inputs(&seeds, &labels, 1), &mut meter)
             .is_err(), "missing block must be an error");
+        // mismatched fanouts must also be rejected
+        let wrong = sampler::build_block(&ds.graph, &seeds,
+                                         &Fanouts::of(&[5]), 1);
+        let inp = StepInputs { seeds: &seeds, labels: &labels, base: 1,
+                               block: Some(&wrong) };
+        assert!(eng.train_step(0, &inp, &mut meter).is_err(),
+                "depth-mismatched block must be an error");
         let mut losses = Vec::new();
         for step in 0..30 {
             let base = crate::rng::mix(42 + step as u64);
-            let blk = sampler::build_block2(&ds.graph, &seeds, 5, 3, base);
+            let blk = sampler::build_block(&ds.graph, &seeds, &fo, base);
             let inp = StepInputs { seeds: &seeds, labels: &labels, base,
-                                   block1: None, block2: Some(&blk) };
+                                   block: Some(&blk) };
+            losses.push(eng.train_step(step, &inp, &mut meter).unwrap().loss);
+            meter.reset_step();
+        }
+        assert!(losses[29] < losses[0] * 0.8,
+                "loss {} -> {}", losses[0], losses[29]);
+    }
+
+    #[test]
+    fn baseline_engine_trains_at_depth_3() {
+        let ds = tiny();
+        let fo = Fanouts::of(&[4, 3, 2]);
+        let mut eng =
+            NativeBackend::new(ds.clone(), cfg(false, &[4, 3, 2]), adamw())
+                .unwrap();
+        assert_eq!(eng.params().len(), 9, "3 layers x (w_self, w_neigh, b)");
+        let seeds: Vec<i32> = (0..64).collect();
+        let labels: Vec<i32> =
+            seeds.iter().map(|&u| ds.labels[u as usize]).collect();
+        let mut meter = MemoryMeter::new();
+        let mut losses = Vec::new();
+        for step in 0..30 {
+            let base = crate::rng::mix(42 + step as u64);
+            let blk = sampler::build_block(&ds.graph, &seeds, &fo, base);
+            let inp = StepInputs { seeds: &seeds, labels: &labels, base,
+                                   block: Some(&blk) };
             losses.push(eng.train_step(step, &inp, &mut meter).unwrap().loss);
             meter.reset_step();
         }
@@ -392,7 +418,7 @@ mod tests {
         let labels: Vec<i32> =
             seeds.iter().map(|&u| ds.labels[u as usize]).collect();
         let run = |threads: usize| -> Vec<f64> {
-            let mut c = cfg(true);
+            let mut c = cfg(true, &[5, 3]);
             c.threads = threads;
             let mut eng = NativeBackend::new(ds.clone(), c, adamw()).unwrap();
             let mut meter = MemoryMeter::new();
@@ -415,12 +441,21 @@ mod tests {
     #[test]
     fn eval_logits_shape_and_accuracy_signal() {
         let ds = tiny();
-        let mut eng = NativeBackend::new(ds.clone(), cfg(true), adamw()).unwrap();
+        let mut eng =
+            NativeBackend::new(ds.clone(), cfg(true, &[5, 3]), adamw())
+                .unwrap();
         let seeds: Vec<i32> = (0..32).collect();
         let logits = eng.eval_logits(&seeds, 9).unwrap().unwrap();
         assert_eq!(logits.len(), 32 * ds.spec.c);
         assert!(logits.iter().all(|v| v.is_finite()));
         assert!(eng.eval_logits(&[], 9).unwrap().unwrap().is_empty());
+        // 3-hop configs evaluate through the depth-matched protocol
+        let mut eng3 =
+            NativeBackend::new(ds.clone(), cfg(true, &[4, 3, 2]), adamw())
+                .unwrap();
+        let logits3 = eng3.eval_logits(&seeds, 9).unwrap().unwrap();
+        assert_eq!(logits3.len(), 32 * ds.spec.c);
+        assert!(logits3.iter().all(|v| v.is_finite()));
     }
 
     #[test]
@@ -429,15 +464,20 @@ mod tests {
         let seeds: Vec<i32> = (0..64).collect();
         let labels: Vec<i32> =
             seeds.iter().map(|&u| ds.labels[u as usize]).collect();
-        let mut fsa = NativeBackend::new(ds.clone(), cfg(true), adamw()).unwrap();
+        let mut fsa =
+            NativeBackend::new(ds.clone(), cfg(true, &[5, 3]), adamw())
+                .unwrap();
         let mut meter = MemoryMeter::new();
         fsa.train_step(0, &step_inputs(&seeds, &labels, 3), &mut meter)
             .unwrap();
         let fsa_peak = meter.peak();
-        let mut dgl = NativeBackend::new(ds.clone(), cfg(false), adamw()).unwrap();
-        let blk = sampler::build_block2(&ds.graph, &seeds, 5, 3, 3);
+        let mut dgl =
+            NativeBackend::new(ds.clone(), cfg(false, &[5, 3]), adamw())
+                .unwrap();
+        let blk = sampler::build_block(&ds.graph, &seeds,
+                                       &Fanouts::of(&[5, 3]), 3);
         let inp = StepInputs { seeds: &seeds, labels: &labels, base: 3,
-                               block1: None, block2: Some(&blk) };
+                               block: Some(&blk) };
         let mut meter = MemoryMeter::new();
         dgl.train_step(0, &inp, &mut meter).unwrap();
         let dgl_peak = meter.peak();

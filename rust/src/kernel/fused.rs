@@ -1,69 +1,70 @@
-//! The fused sample+aggregate kernels (paper Algorithms 1–2) as native
-//! host compute.
+//! The fused sample+aggregate kernel (paper Algorithms 1–2) as native
+//! host compute, generic over sampling depth.
 //!
 //! One pass per seed: neighbors are drawn inline with the counter-hash
 //! rule ([`crate::sampler::sample_neighbors`], bitwise identical to the
-//! Pallas kernel and the host baseline sampler) and the running mean is
-//! folded into a single `[d]` accumulator per hop — **no** `[B,1+k1,k2,d]`
-//! block ever exists. The only per-step outputs are the `[B,d]` aggregate,
-//! the optional saved index tensors (`save_indices`, the paper's §3.3
+//! Pallas kernel and the host baseline sampler) and the running
+//! mean-of-means is folded innermost-first into a single `[d]` accumulator
+//! per hop level — **no** `[B, Π(1+k), d]` block ever exists. The only
+//! per-step outputs are the `[B, d]` aggregate, the optional per-hop
+//! saved index tensors (`save_indices`, the paper's §3.3
 //! deterministic-backward replay), and the sampled-pair count.
+//!
+//! Depth is a parameter: [`fused_khop`] recurses over the fanout list,
+//! each hop level folding its children's aggregate into the parent
+//! accumulator scaled by `1/k_eff`. At depths 1 and 2 the floating-point
+//! operation sequence is exactly the pre-generalization `fused_1hop` /
+//! `fused_2hop` kernels' (pinned bitwise by `rust/tests/depth.rs`).
 //!
 //! The gather is cache-blocked over the feature dimension
 //! ([`super::D_TILE`]): the accumulator tile stays L1-resident while the
-//! k2 sampled rows stream through it. Batch rows are sharded across scoped
+//! sampled rows stream through it. Batch rows are sharded across scoped
 //! workers with the degree-aware planner; each worker writes disjoint row
 //! ranges of every output, so results are bitwise identical at any thread
 //! count.
 
+use crate::fanout::Fanouts;
 use crate::graph::{shard, Csr};
 use crate::sampler::sample_neighbors;
 
 use super::{resolve_threads, Features, D_TILE, MIN_PAR_ROWS};
 
-/// Output of one fused 2-hop aggregation.
-pub struct Fused2Out {
-    /// `[B, d]` two-hop mean-of-means aggregate.
+/// Output of one fused L-hop aggregation.
+pub struct FusedOut {
+    /// `[B, d]` L-level mean-of-means aggregate of the leaf features.
     pub agg: Vec<f32>,
-    /// `[B, k1]` hop-1 samples (when `save_indices`).
-    pub s1: Option<Vec<i32>>,
-    /// `[B, k1, k2]` hop-2 samples (when `save_indices`).
-    pub s2: Option<Vec<i32>>,
-    /// Valid (seed, neighbor) draws — matches
-    /// [`crate::sampler::fused2_sampled_pairs`] exactly.
-    pub pairs: u64,
-}
-
-/// Output of one fused 1-hop aggregation.
-pub struct Fused1Out {
-    /// `[B, d]` neighbor-mean aggregate.
-    pub agg: Vec<f32>,
-    /// `[B, k]` samples (when `save_indices`).
-    pub samples: Option<Vec<i32>>,
+    /// Per-hop samples when `save_indices`: `saved[l]` is
+    /// `[B, k1·…·k_{l+1}]` (hop `l`'s draws, -1 padded).
+    pub saved: Option<Vec<Vec<i32>>>,
+    /// Valid (parent, child) draws — matches
+    /// [`crate::sampler::fused_sampled_pairs`] exactly.
     pub pairs: u64,
 }
 
 /// Per-worker scratch: reused across the rows of one shard.
 struct Scratch {
-    s1row: Vec<i32>,
-    s2row: Vec<i32>,
+    /// One sample-row buffer per hop level (`rows[l].len() == k_{l+1}`).
+    rows: Vec<Vec<i32>>,
+    /// One `[d]` accumulator per non-leaf level below the seed.
+    accs: Vec<Vec<f32>>,
     valid: Vec<u32>,
     tile: Vec<f32>,
 }
 
 impl Scratch {
-    fn new(k1: usize, k2: usize) -> Scratch {
+    fn new(ks: &[usize], d: usize) -> Scratch {
         Scratch {
-            s1row: vec![-1; k1],
-            s2row: vec![-1; k2.max(1)],
-            valid: Vec::with_capacity(k2.max(k1)),
+            rows: ks.iter().map(|&k| vec![-1i32; k]).collect(),
+            accs: (0..ks.len().saturating_sub(1))
+                .map(|_| vec![0.0f32; d])
+                .collect(),
+            valid: Vec::with_capacity(ks.iter().copied().max().unwrap_or(1)),
             tile: vec![0.0; D_TILE],
         }
     }
 }
 
-/// Mean of the valid feature rows into `agg_row` with weight `1/k1_eff`
-/// applied by the caller afterwards; `acc += mean(x[valid]) `.
+/// Mean of the valid feature rows into `agg_row`; `acc += mean(x[valid])`.
 #[inline]
 fn accumulate_mean(feat: &Features, valid: &[u32], tile: &mut [f32],
                    agg_row: &mut [f32]) {
@@ -97,60 +98,73 @@ fn collect_valid(row: &[i32], out: &mut Vec<u32>) {
     }
 }
 
-/// Serial kernel body for a contiguous run of seed rows (one shard).
+/// Fold the nested mean-of-means aggregate of `node`'s sampling subtree
+/// into `out` (`out += agg(node)`): at the leaf hop the mean of the valid
+/// sampled features goes straight into `out`; at intermediate hops the
+/// children's aggregates accumulate into this level's scratch buffer and
+/// fold into `out` scaled by `1/k_eff`. `slot` is the node's flattened
+/// position among seed-row `bi`'s hop-`hop` samples; together with
+/// `kprod[0]` (this level's per-seed width) it addresses the shard-level
+/// saved tensors without any per-row slicing. Invalid children are
+/// skipped entirely — the counter RNG is stateless and the saved buffers
+/// are -1-prefilled, so the result is identical to sampling below them.
 #[allow(clippy::too_many_arguments)]
-fn run_rows_2hop(csr: &Csr, feat: &Features, seeds: &[i32], k1: usize,
-                 k2: usize, base: u64, agg: &mut [f32],
-                 mut s1_out: Option<&mut [i32]>,
-                 mut s2_out: Option<&mut [i32]>, pairs: &mut [u64]) {
-    let d = feat.d;
-    let mut sc = Scratch::new(k1, k2);
-    for (bi, &r) in seeds.iter().enumerate() {
-        let agg_row = &mut agg[bi * d..(bi + 1) * d];
-        sample_neighbors(csr, r, k1, base, 0, &mut sc.s1row);
-        if let Some(buf) = s1_out.as_deref_mut() {
-            buf[bi * k1..(bi + 1) * k1].copy_from_slice(&sc.s1row);
+fn fold_subtree(csr: &Csr, feat: &Features, node: i32, hop: u64,
+                ks: &[usize], kprod: &[usize], bi: usize, slot: usize,
+                base: u64, rows: &mut [Vec<i32>], accs: &mut [Vec<f32>],
+                saved: &mut [Option<&mut [i32]>], valid: &mut Vec<u32>,
+                tile: &mut [f32], out: &mut [f32], pairs: &mut u64) {
+    let k = ks[0];
+    let (row, rows_rest) = rows.split_first_mut().unwrap();
+    let (srow, saved_rest) = saved.split_first_mut().unwrap();
+    sample_neighbors(csr, node, k, base, hop, row);
+    if let Some(buf) = srow.as_deref_mut() {
+        let at = bi * kprod[0] + slot * k;
+        buf[at..at + k].copy_from_slice(row);
+    }
+    if ks.len() == 1 {
+        collect_valid(row, valid);
+        *pairs += valid.len() as u64;
+        accumulate_mean(feat, valid, tile, out);
+        return;
+    }
+    let (acc, accs_rest) = accs.split_first_mut().unwrap();
+    acc.fill(0.0);
+    let mut eff = 0u64;
+    for i in 0..k {
+        let child = row[i];
+        if child < 0 {
+            continue;
         }
-        let mut k1_eff = 0u64;
-        let mut npairs = 0u64;
-        for ui in 0..k1 {
-            let u = sc.s1row[ui];
-            sample_neighbors(csr, u, k2, base, 1, &mut sc.s2row);
-            if let Some(buf) = s2_out.as_deref_mut() {
-                buf[(bi * k1 + ui) * k2..(bi * k1 + ui + 1) * k2]
-                    .copy_from_slice(&sc.s2row);
-            }
-            if u < 0 {
-                continue;
-            }
-            k1_eff += 1;
-            npairs += 1;
-            collect_valid(&sc.s2row, &mut sc.valid);
-            npairs += sc.valid.len() as u64;
-            accumulate_mean(feat, &sc.valid, &mut sc.tile, agg_row);
-        }
-        let inv = 1.0 / k1_eff.max(1) as f32;
-        for v in agg_row.iter_mut() {
-            *v *= inv;
-        }
-        pairs[bi] = npairs;
+        eff += 1;
+        *pairs += 1;
+        fold_subtree(csr, feat, child, hop + 1, &ks[1..], &kprod[1..], bi,
+                     slot * k + i, base, rows_rest, accs_rest, saved_rest,
+                     valid, tile, acc, pairs);
+    }
+    let inv = 1.0 / eff.max(1) as f32;
+    for (o, &a) in out.iter_mut().zip(acc.iter()) {
+        *o += a * inv;
     }
 }
 
-fn run_rows_1hop(csr: &Csr, feat: &Features, seeds: &[i32], k: usize,
-                 base: u64, agg: &mut [f32],
-                 mut samples_out: Option<&mut [i32]>, pairs: &mut [u64]) {
+/// Serial kernel body for a contiguous run of seed rows (one shard).
+/// `saved[l]`, when present, covers exactly these rows (`rows·K_l` ints,
+/// `K_l = kprod[l]`). No per-row allocations: scratch is per-shard and
+/// the saved tensors are addressed by (row, slot) arithmetic.
+#[allow(clippy::too_many_arguments)]
+fn run_rows(csr: &Csr, feat: &Features, seeds: &[i32], ks: &[usize],
+            kprod: &[usize], base: u64, agg: &mut [f32],
+            saved: &mut [Option<&mut [i32]>], pairs: &mut [u64]) {
     let d = feat.d;
-    let mut sc = Scratch::new(k, 0);
+    let mut sc = Scratch::new(ks, d);
     for (bi, &r) in seeds.iter().enumerate() {
-        sample_neighbors(csr, r, k, base, 0, &mut sc.s1row);
-        if let Some(buf) = samples_out.as_deref_mut() {
-            buf[bi * k..(bi + 1) * k].copy_from_slice(&sc.s1row);
-        }
-        collect_valid(&sc.s1row, &mut sc.valid);
-        pairs[bi] = sc.valid.len() as u64;
-        accumulate_mean(feat, &sc.valid, &mut sc.tile,
-                        &mut agg[bi * d..(bi + 1) * d]);
+        let agg_row = &mut agg[bi * d..(bi + 1) * d];
+        let mut np = 0u64;
+        fold_subtree(csr, feat, r, 0, ks, kprod, bi, 0, base, &mut sc.rows,
+                     &mut sc.accs, saved, &mut sc.valid, &mut sc.tile,
+                     agg_row, &mut np);
+        pairs[bi] = np;
     }
 }
 
@@ -165,175 +179,158 @@ fn take_chunk<'a>(opt: &mut Option<&'a mut [i32]>, at: usize)
     })
 }
 
-/// Fused 2-hop sample+aggregate over a batch of seeds.
-#[allow(clippy::too_many_arguments)]
-pub fn fused_2hop(csr: &Csr, feat: &Features, seeds: &[i32], k1: usize,
-                  k2: usize, base: u64, save_indices: bool,
-                  threads: usize) -> Fused2Out {
-    let b = seeds.len();
-    let d = feat.d;
-    let mut agg = vec![0.0f32; b * d];
-    let mut s1 = save_indices.then(|| vec![-1i32; b * k1]);
-    let mut s2 = save_indices.then(|| vec![-1i32; b * k1 * k2]);
-    let mut pairs = vec![0u64; b];
-
-    let workers = resolve_threads(threads).min((b / MIN_PAR_ROWS).max(1));
-    if workers <= 1 {
-        run_rows_2hop(csr, feat, seeds, k1, k2, base, &mut agg,
-                      s1.as_deref_mut(), s2.as_deref_mut(), &mut pairs);
-    } else {
-        // cost model: each of the ≤k1 hop-1 draws triggers ≤k2 row adds
-        let costs: Vec<u64> = seeds
-            .iter()
-            .map(|&r| 1 + (shard::sample_cost(csr, r, k1) - 1) * (1 + k2 as u64))
-            .collect();
-        let plan = shard::plan_shards(&costs, workers);
-        std::thread::scope(|s| {
-            let mut agg_rest: &mut [f32] = &mut agg;
-            let mut s1_rest = s1.as_deref_mut();
-            let mut s2_rest = s2.as_deref_mut();
-            let mut pairs_rest: &mut [u64] = &mut pairs;
-            for r in plan {
-                let rows = r.end - r.start;
-                let (agg_c, tail) =
-                    std::mem::take(&mut agg_rest).split_at_mut(rows * d);
-                agg_rest = tail;
-                let s1_c = take_chunk(&mut s1_rest, rows * k1);
-                let s2_c = take_chunk(&mut s2_rest, rows * k1 * k2);
-                let (pairs_c, tail) =
-                    std::mem::take(&mut pairs_rest).split_at_mut(rows);
-                pairs_rest = tail;
-                if rows == 0 {
-                    continue;
-                }
-                let seed_c = &seeds[r];
-                s.spawn(move || {
-                    run_rows_2hop(csr, feat, seed_c, k1, k2, base, agg_c,
-                                  s1_c, s2_c, pairs_c);
-                });
-            }
-        });
-    }
-    Fused2Out { agg, s1, s2, pairs: pairs.iter().sum() }
+/// Cost-model weight of the subtree hanging off one hop-0 draw:
+/// `1 + k2·(1 + k3·(…))` row adds per sampled hop-0 neighbor.
+fn subtree_weight(ks: &[usize]) -> u64 {
+    ks[1..].iter().rev().fold(1u64, |w, &k| 1 + k as u64 * w)
 }
 
-/// Fused 1-hop sample+aggregate over a batch of seeds.
-pub fn fused_1hop(csr: &Csr, feat: &Features, seeds: &[i32], k: usize,
-                  base: u64, save_indices: bool, threads: usize) -> Fused1Out {
+/// Fused L-hop sample+aggregate over a batch of seeds — the single
+/// depth-generic kernel (`fanouts.depth()` = 1 reproduces the old 1-hop
+/// kernel bitwise, depth 2 the old 2-hop kernel).
+pub fn fused_khop(csr: &Csr, feat: &Features, seeds: &[i32],
+                  fanouts: &Fanouts, base: u64, save_indices: bool,
+                  threads: usize) -> FusedOut {
     let b = seeds.len();
     let d = feat.d;
+    let ks = fanouts.as_slice();
+    let kprod = fanouts.cumulative();
     let mut agg = vec![0.0f32; b * d];
-    let mut samples = save_indices.then(|| vec![-1i32; b * k]);
     let mut pairs = vec![0u64; b];
-
-    let workers = resolve_threads(threads).min((b / MIN_PAR_ROWS).max(1));
-    if workers <= 1 {
-        run_rows_1hop(csr, feat, seeds, k, base, &mut agg,
-                      samples.as_deref_mut(), &mut pairs);
+    let mut saved_bufs: Vec<Vec<i32>> = if save_indices {
+        kprod.iter().map(|&kp| vec![-1i32; b * kp]).collect()
     } else {
-        let costs: Vec<u64> =
-            seeds.iter().map(|&r| shard::sample_cost(csr, r, k)).collect();
-        let plan = shard::plan_shards(&costs, workers);
-        std::thread::scope(|s| {
-            let mut agg_rest: &mut [f32] = &mut agg;
-            let mut samp_rest = samples.as_deref_mut();
-            let mut pairs_rest: &mut [u64] = &mut pairs;
-            for r in plan {
-                let rows = r.end - r.start;
-                let (agg_c, tail) =
-                    std::mem::take(&mut agg_rest).split_at_mut(rows * d);
-                agg_rest = tail;
-                let samp_c = take_chunk(&mut samp_rest, rows * k);
-                let (pairs_c, tail) =
-                    std::mem::take(&mut pairs_rest).split_at_mut(rows);
-                pairs_rest = tail;
-                if rows == 0 {
-                    continue;
+        Vec::new()
+    };
+    {
+        let mut view: Vec<Option<&mut [i32]>> = if save_indices {
+            saved_bufs.iter_mut().map(|v| Some(v.as_mut_slice())).collect()
+        } else {
+            ks.iter().map(|_| None).collect()
+        };
+        let workers = resolve_threads(threads).min((b / MIN_PAR_ROWS).max(1));
+        if workers <= 1 {
+            run_rows(csr, feat, seeds, ks, &kprod, base, &mut agg, &mut view,
+                     &mut pairs);
+        } else {
+            // cost model: each of the ≤k1 hop-0 draws triggers the whole
+            // nested row-add subtree below it
+            let wb = subtree_weight(ks);
+            let costs: Vec<u64> = seeds
+                .iter()
+                .map(|&r| 1 + (shard::sample_cost(csr, r, ks[0]) - 1) * wb)
+                .collect();
+            let plan = shard::plan_shards(&costs, workers);
+            std::thread::scope(|s| {
+                let mut agg_rest: &mut [f32] = &mut agg;
+                let mut pairs_rest: &mut [u64] = &mut pairs;
+                let mut view_rest: Vec<Option<&mut [i32]>> =
+                    view.iter_mut().map(|o| o.as_deref_mut()).collect();
+                for r in plan {
+                    let rows = r.end - r.start;
+                    let (agg_c, tail) =
+                        std::mem::take(&mut agg_rest).split_at_mut(rows * d);
+                    agg_rest = tail;
+                    let mut saved_c: Vec<Option<&mut [i32]>> = view_rest
+                        .iter_mut()
+                        .zip(&kprod)
+                        .map(|(o, &kp)| take_chunk(o, rows * kp))
+                        .collect();
+                    let (pairs_c, tail) =
+                        std::mem::take(&mut pairs_rest).split_at_mut(rows);
+                    pairs_rest = tail;
+                    if rows == 0 {
+                        continue;
+                    }
+                    let seed_c = &seeds[r];
+                    let kprod_ref = &kprod;
+                    s.spawn(move || {
+                        run_rows(csr, feat, seed_c, ks, kprod_ref, base,
+                                 agg_c, &mut saved_c, pairs_c);
+                    });
                 }
-                let seed_c = &seeds[r];
-                s.spawn(move || {
-                    run_rows_1hop(csr, feat, seed_c, k, base, agg_c, samp_c,
-                                  pairs_c);
-                });
-            }
-        });
+            });
+        }
     }
-    Fused1Out { agg, samples, pairs: pairs.iter().sum() }
+    FusedOut {
+        agg,
+        saved: save_indices.then_some(saved_bufs),
+        pairs: pairs.iter().sum(),
+    }
 }
 
 /// Parity helper: the 1-hop mean aggregate of `seeds` drawn at an explicit
-/// hop counter (the fused 2-hop inner loop draws at `hop = 1`; the golden
-/// parity tests compare baseline block means against this). Serial.
+/// hop counter (the fused multi-hop inner loop draws hop `l` at counter
+/// `l`; the golden parity tests compare baseline block means against
+/// this). Serial.
 pub fn fused_1hop_at_hop(csr: &Csr, feat: &Features, seeds: &[i32], k: usize,
                          base: u64, hop: u64) -> Vec<f32> {
     let d = feat.d;
     let mut agg = vec![0.0f32; seeds.len() * d];
-    let mut sc = Scratch::new(k, 0);
+    let mut row = vec![-1i32; k];
+    let mut valid = Vec::with_capacity(k);
+    let mut tile = vec![0.0f32; D_TILE];
     for (bi, &r) in seeds.iter().enumerate() {
-        sample_neighbors(csr, r, k, base, hop, &mut sc.s1row);
-        collect_valid(&sc.s1row, &mut sc.valid);
-        accumulate_mean(feat, &sc.valid, &mut sc.tile,
+        sample_neighbors(csr, r, k, base, hop, &mut row);
+        collect_valid(&row, &mut valid);
+        accumulate_mean(feat, &valid, &mut tile,
                         &mut agg[bi * d..(bi + 1) * d]);
     }
     agg
 }
 
 // ---------------------------------------------------------------------------
-// saved-index replay backward (paper §3.3) — dX for the fused ops.
+// saved-index replay backward (paper §3.3) — dX for the fused op.
 //
 // Not on the training path (features are not trainable parameters); used
-// by the gradient tests to pin the replay weights 1/(k1_eff·k2_eff) and
-// 1/max(1, take) against direct differentiation of the aggregate.
+// by the gradient tests to pin the replay weights 1/Π(k_eff along the
+// path) against direct differentiation of the aggregate.
 // ---------------------------------------------------------------------------
 
-/// `dX[n,d]` from saved 2-hop indices and upstream `g[b,d]`.
+/// Recursive replay: distribute `g` (the seed's upstream row) over the
+/// valid leaves below slot `slot` of hop tensor `level`, each weighted by
+/// the inverse product of the effective fanouts along its path.
 #[allow(clippy::too_many_arguments)]
-pub fn backward_2hop(s1: &[i32], s2: &[i32], g: &[f32], b: usize, k1: usize,
-                     k2: usize, n: usize, d: usize) -> Vec<f32> {
-    debug_assert_eq!(s1.len(), b * k1);
-    debug_assert_eq!(s2.len(), b * k1 * k2);
-    debug_assert_eq!(g.len(), b * d);
-    let mut dx = vec![0.0f32; n * d];
-    for bi in 0..b {
-        let k1_eff = s1[bi * k1..(bi + 1) * k1]
-            .iter()
-            .filter(|&&u| u >= 0)
-            .count()
-            .max(1);
-        for ui in 0..k1 {
-            if s1[bi * k1 + ui] < 0 {
-                continue;
-            }
-            let row = &s2[(bi * k1 + ui) * k2..(bi * k1 + ui + 1) * k2];
-            let k2_eff = row.iter().filter(|&&w| w >= 0).count().max(1);
-            let wgt = 1.0 / (k1_eff * k2_eff) as f32;
-            for &w in row.iter().filter(|&&w| w >= 0) {
-                let dst = &mut dx[w as usize * d..(w as usize + 1) * d];
-                for (dv, &gv) in dst.iter_mut().zip(&g[bi * d..(bi + 1) * d]) {
-                    *dv += wgt * gv;
-                }
-            }
-        }
-    }
-    dx
-}
-
-/// `dX[n,d]` for the 1-hop op: `dX[v] += g[u] / max(1, take(u))`.
-pub fn backward_1hop(samples: &[i32], g: &[f32], b: usize, k: usize,
-                     n: usize, d: usize) -> Vec<f32> {
-    debug_assert_eq!(samples.len(), b * k);
-    debug_assert_eq!(g.len(), b * d);
-    let mut dx = vec![0.0f32; n * d];
-    for bi in 0..b {
-        let row = &samples[bi * k..(bi + 1) * k];
-        let take = row.iter().filter(|&&v| v >= 0).count().max(1);
-        let wgt = 1.0 / take as f32;
+fn replay(saved: &[Vec<i32>], ks: &[usize], kprod: &[usize], bi: usize,
+          level: usize, slot: usize, denom: u64, g: &[f32], dx: &mut [f32],
+          d: usize) {
+    let k = ks[level];
+    let row = &saved[level][bi * kprod[level] + slot * k..][..k];
+    let eff = row.iter().filter(|&&v| v >= 0).count().max(1) as u64;
+    if level + 1 == ks.len() {
+        let wgt = 1.0 / (denom * eff) as f32;
         for &v in row.iter().filter(|&&v| v >= 0) {
             let dst = &mut dx[v as usize * d..(v as usize + 1) * d];
-            for (dv, &gv) in dst.iter_mut().zip(&g[bi * d..(bi + 1) * d]) {
+            for (dv, &gv) in dst.iter_mut().zip(g) {
                 *dv += wgt * gv;
             }
         }
+        return;
+    }
+    for (i, &c) in row.iter().enumerate() {
+        if c < 0 {
+            continue;
+        }
+        replay(saved, ks, kprod, bi, level + 1, slot * k + i, denom * eff, g,
+               dx, d);
+    }
+}
+
+/// `dX[n,d]` from the saved L-hop indices and upstream `g[b,d]` — the
+/// exact adjoint of the aggregate (which is linear in X).
+pub fn backward_khop(saved: &[Vec<i32>], g: &[f32], b: usize,
+                     fanouts: &Fanouts, n: usize, d: usize) -> Vec<f32> {
+    let ks = fanouts.as_slice();
+    let kprod = fanouts.cumulative();
+    debug_assert_eq!(saved.len(), ks.len());
+    for (s, &kp) in saved.iter().zip(&kprod) {
+        debug_assert_eq!(s.len(), b * kp);
+    }
+    debug_assert_eq!(g.len(), b * d);
+    let mut dx = vec![0.0f32; n * d];
+    for bi in 0..b {
+        replay(saved, ks, &kprod, bi, 0, 0, 1, &g[bi * d..(bi + 1) * d],
+               &mut dx, d);
     }
     dx
 }
@@ -349,86 +346,137 @@ mod tests {
         Dataset::generate(builtin_spec("tiny").unwrap()).unwrap()
     }
 
-    /// Reference 2-hop aggregate computed the *baseline* way: materialize
-    /// the index tensors with the host sampler, gather, masked-mean.
-    fn reference_agg2(ds: &Dataset, seeds: &[i32], k1: usize, k2: usize,
-                      base: u64) -> Vec<f32> {
+    /// Reference L-hop aggregate computed the *materialized* way: sample
+    /// every hop tensor with the host sampler, then nested masked means in
+    /// f64.
+    fn reference_agg(ds: &Dataset, seeds: &[i32], fanouts: &Fanouts,
+                     base: u64) -> Vec<f32> {
         let d = ds.spec.d;
-        let s1 = sampler::sample_frontier(&ds.graph, seeds, k1, base, 0);
-        let s2 = sampler::sample_frontier(&ds.graph, &s1, k2, base, 1);
-        let mut agg = vec![0.0f32; seeds.len() * d];
-        for bi in 0..seeds.len() {
-            let mut outer = vec![0.0f64; d];
-            let mut k1_eff = 0usize;
-            for ui in 0..k1 {
-                if s1[bi * k1 + ui] < 0 {
-                    continue;
-                }
-                k1_eff += 1;
-                let row = &s2[(bi * k1 + ui) * k2..(bi * k1 + ui + 1) * k2];
+        let depth = fanouts.depth();
+        let mut hops: Vec<Vec<i32>> = Vec::new();
+        let mut frontier = seeds.to_vec();
+        for l in 0..depth {
+            let s = sampler::sample_frontier(&ds.graph, &frontier,
+                                             fanouts.k(l), base, l as u64);
+            hops.push(s.clone());
+            frontier = s;
+        }
+        // recursive nested mean over the materialized tensors
+        fn node_agg(ds: &Dataset, hops: &[Vec<i32>], fanouts: &Fanouts,
+                    level: usize, slot: usize, bi: usize, d: usize)
+                    -> Option<Vec<f64>> {
+            let k = fanouts.k(level);
+            let kprod: usize = fanouts.as_slice()[..=level].iter().product();
+            let row = &hops[level][bi * kprod + slot * k..][..k];
+            if level + 1 == fanouts.depth() {
                 let valid: Vec<i32> =
-                    row.iter().copied().filter(|&w| w >= 0).collect();
+                    row.iter().copied().filter(|&v| v >= 0).collect();
                 if valid.is_empty() {
-                    continue;
+                    return None;
                 }
-                for &w in &valid {
+                let mut out = vec![0.0f64; d];
+                for &v in &valid {
                     for j in 0..d {
-                        outer[j] += ds.features[w as usize * d + j] as f64
+                        out[j] += ds.features[v as usize * d + j] as f64
                             / valid.len() as f64;
                     }
                 }
+                return Some(out);
             }
+            let mut out = vec![0.0f64; d];
+            let mut eff = 0usize;
+            for (i, &c) in row.iter().enumerate() {
+                if c < 0 {
+                    continue;
+                }
+                eff += 1;
+                if let Some(sub) = node_agg(ds, hops, fanouts, level + 1,
+                                            slot * k + i, bi, d) {
+                    for j in 0..d {
+                        out[j] += sub[j];
+                    }
+                }
+            }
+            if eff == 0 {
+                return Some(out);
+            }
+            for o in out.iter_mut() {
+                *o /= eff as f64;
+            }
+            Some(out)
+        }
+        // note the kernel folds a hop-0 aggregate with eff==0 to zeros and
+        // (for depth >= 2) divides by max(1, eff); the reference mirrors
+        // that by returning zeros from empty subtrees
+        let mut agg = vec![0.0f32; seeds.len() * d];
+        for bi in 0..seeds.len() {
+            let v = node_agg(ds, &hops, fanouts, 0, 0, bi, d)
+                .unwrap_or_else(|| vec![0.0; d]);
             for j in 0..d {
-                agg[bi * d + j] = (outer[j] / k1_eff.max(1) as f64) as f32;
+                agg[bi * d + j] = v[j] as f32;
             }
         }
         agg
     }
 
     #[test]
-    fn fused2_matches_materialized_reference() {
+    fn fused_matches_materialized_reference_at_depths_1_2_3() {
         let ds = tiny();
         let mut r = SplitMix64::new(5);
         let seeds: Vec<i32> =
             (0..96).map(|_| r.next_below(ds.spec.n as u64) as i32).collect();
         let feat = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false);
-        let out = fused_2hop(&ds.graph, &feat, &seeds, 5, 3, 42, true, 1);
-        let want = reference_agg2(&ds, &seeds, 5, 3, 42);
-        for (i, (&a, &w)) in out.agg.iter().zip(&want).enumerate() {
-            assert!((a - w).abs() < 1e-5, "agg[{i}]: {a} vs {w}");
+        for fo in [Fanouts::of(&[5]), Fanouts::of(&[5, 3]),
+                   Fanouts::of(&[4, 3, 2])] {
+            let out = fused_khop(&ds.graph, &feat, &seeds, &fo, 42, true, 1);
+            let want = reference_agg(&ds, &seeds, &fo, 42);
+            for (i, (&a, &w)) in out.agg.iter().zip(&want).enumerate() {
+                assert!((a - w).abs() < 1e-4, "{fo} agg[{i}]: {a} vs {w}");
+            }
+            // saved indices equal the host sampler's draws, hop by hop
+            let saved = out.saved.unwrap();
+            let mut frontier = seeds.clone();
+            for (l, s) in saved.iter().enumerate() {
+                let want_s = sampler::sample_frontier(&ds.graph, &frontier,
+                                                      fo.k(l), 42, l as u64);
+                assert_eq!(s, &want_s, "{fo} hop {l} saved indices");
+                frontier = want_s;
+            }
+            assert_eq!(out.pairs,
+                       sampler::fused_sampled_pairs(&ds.graph, &seeds, &fo,
+                                                    42),
+                       "{fo} pair count");
         }
-        // saved indices equal the host sampler's draws
-        let s1 = sampler::sample_frontier(&ds.graph, &seeds, 5, 42, 0);
-        let s2 = sampler::sample_frontier(&ds.graph, &s1, 3, 42, 1);
-        assert_eq!(out.s1.unwrap(), s1);
-        assert_eq!(out.s2.unwrap(), s2);
-        assert_eq!(out.pairs,
-                   sampler::fused2_sampled_pairs(&ds.graph, &seeds, 5, 3, 42));
     }
 
     #[test]
-    fn fused2_bitwise_identical_across_thread_counts() {
+    fn fused_bitwise_identical_across_thread_counts() {
         let ds = tiny();
-        let seeds: Vec<i32> = (0..200).map(|i| (i * 2) % ds.spec.n as i32).collect();
+        let seeds: Vec<i32> =
+            (0..200).map(|i| (i * 2) % ds.spec.n as i32).collect();
         let feat = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false);
-        let serial = fused_2hop(&ds.graph, &feat, &seeds, 4, 3, 7, true, 1);
-        for threads in [2usize, 3, 8] {
-            let par = fused_2hop(&ds.graph, &feat, &seeds, 4, 3, 7, true,
-                                 threads);
-            assert_eq!(par.agg, serial.agg, "threads={threads}");
-            assert_eq!(par.s1, serial.s1);
-            assert_eq!(par.s2, serial.s2);
-            assert_eq!(par.pairs, serial.pairs);
+        for fo in [Fanouts::of(&[4]), Fanouts::of(&[4, 3]),
+                   Fanouts::of(&[4, 3, 2])] {
+            let serial = fused_khop(&ds.graph, &feat, &seeds, &fo, 7, true, 1);
+            for threads in [2usize, 3, 4, 8] {
+                let par = fused_khop(&ds.graph, &feat, &seeds, &fo, 7, true,
+                                     threads);
+                assert_eq!(par.agg, serial.agg, "{fo} threads={threads}");
+                assert_eq!(par.saved, serial.saved);
+                assert_eq!(par.pairs, serial.pairs);
+            }
         }
     }
 
     #[test]
-    fn fused1_means_valid_neighbors() {
+    fn fused_1hop_means_valid_neighbors() {
         let ds = tiny();
         let seeds: Vec<i32> = (0..64).collect();
         let feat = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false);
-        let out = fused_1hop(&ds.graph, &feat, &seeds, 4, 9, true, 1);
-        let samples = out.samples.unwrap();
+        let out = fused_khop(&ds.graph, &feat, &seeds, &Fanouts::of(&[4]), 9,
+                             true, 1);
+        let saved = out.saved.unwrap();
+        let samples = &saved[0];
         let d = ds.spec.d;
         for bi in 0..seeds.len() {
             let valid: Vec<i32> = samples[bi * 4..(bi + 1) * 4]
@@ -458,8 +506,9 @@ mod tests {
         let seeds: Vec<i32> = (0..64).collect();
         let f32s = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false);
         let bf16 = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, true);
-        let a = fused_2hop(&ds.graph, &f32s, &seeds, 5, 3, 11, false, 1);
-        let b = fused_2hop(&ds.graph, &bf16, &seeds, 5, 3, 11, false, 1);
+        let fo = Fanouts::of(&[5, 3]);
+        let a = fused_khop(&ds.graph, &f32s, &seeds, &fo, 11, false, 1);
+        let b = fused_khop(&ds.graph, &bf16, &seeds, &fo, 11, false, 1);
         for (&x, &y) in a.agg.iter().zip(&b.agg) {
             assert!((x - y).abs() < 0.05 + x.abs() / 32.0, "{x} vs {y}");
         }
@@ -467,7 +516,7 @@ mod tests {
     }
 
     /// The aggregate is linear in X, so the replay backward must satisfy
-    /// ⟨g, agg(x+Δ)−agg(x)⟩ == ⟨dX, Δ⟩ up to f32 rounding.
+    /// ⟨g, agg(x+Δ)−agg(x)⟩ == ⟨dX, Δ⟩ up to f32 rounding — at every depth.
     #[test]
     fn replay_backward_is_the_exact_adjoint() {
         let ds = tiny();
@@ -475,49 +524,33 @@ mod tests {
         let mut r = SplitMix64::new(77);
         let seeds: Vec<i32> =
             (0..48).map(|_| r.next_below(n as u64) as i32).collect();
-        let (k1, k2, base) = (4usize, 3usize, 123u64);
+        let base = 123u64;
         let feat = Features::from_f32(&ds.features, n, d, false);
-        let out = fused_2hop(&ds.graph, &feat, &seeds, k1, k2, base, true, 1);
         let g: Vec<f32> =
             (0..seeds.len() * d).map(|_| r.next_normal() as f32).collect();
-        let dx = backward_2hop(out.s1.as_ref().unwrap(),
-                               out.s2.as_ref().unwrap(), &g, seeds.len(),
-                               k1, k2, n, d);
-        // directional check along a random feature perturbation
         let delta: Vec<f32> =
             (0..n * d).map(|_| r.next_normal() as f32 * 0.1).collect();
         let xp: Vec<f32> =
             ds.features.iter().zip(&delta).map(|(&x, &dl)| x + dl).collect();
         let featp = Features::from_f32(&xp, n, d, false);
-        let outp = fused_2hop(&ds.graph, &featp, &seeds, k1, k2, base, false, 1);
-        let lhs: f64 = outp
-            .agg
-            .iter()
-            .zip(&out.agg)
-            .zip(&g)
-            .map(|((&ap, &a), &gv)| ((ap - a) * gv) as f64)
-            .sum();
-        let rhs: f64 =
-            dx.iter().zip(&delta).map(|(&dv, &dl)| (dv * dl) as f64).sum();
-        assert!((lhs - rhs).abs() < 1e-2 + 0.01 * rhs.abs(),
-                "adjoint mismatch: {lhs} vs {rhs}");
-
-        // 1-hop variant
-        let out1 = fused_1hop(&ds.graph, &feat, &seeds, k1, base, true, 1);
-        let g1 = &g[..seeds.len() * d];
-        let dx1 = backward_1hop(out1.samples.as_ref().unwrap(), g1,
-                                seeds.len(), k1, n, d);
-        let out1p = fused_1hop(&ds.graph, &featp, &seeds, k1, base, false, 1);
-        let lhs1: f64 = out1p
-            .agg
-            .iter()
-            .zip(&out1.agg)
-            .zip(g1)
-            .map(|((&ap, &a), &gv)| ((ap - a) * gv) as f64)
-            .sum();
-        let rhs1: f64 =
-            dx1.iter().zip(&delta).map(|(&dv, &dl)| (dv * dl) as f64).sum();
-        assert!((lhs1 - rhs1).abs() < 1e-2 + 0.01 * rhs1.abs(),
-                "1-hop adjoint mismatch: {lhs1} vs {rhs1}");
+        for fo in [Fanouts::of(&[4]), Fanouts::of(&[4, 3]),
+                   Fanouts::of(&[3, 3, 2])] {
+            let out = fused_khop(&ds.graph, &feat, &seeds, &fo, base, true, 1);
+            let dx = backward_khop(out.saved.as_ref().unwrap(), &g,
+                                   seeds.len(), &fo, n, d);
+            let outp = fused_khop(&ds.graph, &featp, &seeds, &fo, base,
+                                  false, 1);
+            let lhs: f64 = outp
+                .agg
+                .iter()
+                .zip(&out.agg)
+                .zip(&g)
+                .map(|((&ap, &a), &gv)| ((ap - a) * gv) as f64)
+                .sum();
+            let rhs: f64 =
+                dx.iter().zip(&delta).map(|(&dv, &dl)| (dv * dl) as f64).sum();
+            assert!((lhs - rhs).abs() < 1e-2 + 0.01 * rhs.abs(),
+                    "{fo}: adjoint mismatch {lhs} vs {rhs}");
+        }
     }
 }

@@ -1,14 +1,16 @@
 //! Native CPU execution engine — real host compute for both step variants.
 //!
 //! This subsystem is the "fused kernel written for the host" half of the
-//! paper's claim: [`fused`] implements Algorithms 1–2 (sample neighbors with
-//! the counter-hash rule and fold the running mean into one `[B, d]`
-//! register tile per hop, **no** materialized block), while [`baseline`]
-//! implements the DGL-style pipeline it is compared against (gather the
-//! sampled index tensors into dense `[B, 1+k1(, k2), d]` feature blocks,
-//! then aggregate). [`engine::NativeBackend`] composes either kernel with
-//! the shared SAGE head, softmax cross-entropy, and AdamW below into a full
-//! train step behind the [`crate::runtime::backend::Backend`] seam.
+//! paper's claim, generic over sampling depth: [`fused`] implements
+//! Algorithms 1–2 for any fanout list (sample neighbors with the
+//! counter-hash rule and fold the running mean-of-means into one `[B, d]`
+//! register tile, innermost hop first, **no** materialized block), while
+//! [`baseline`] implements the DGL-style pipeline it is compared against
+//! (gather the sampled index tensors into dense
+//! `[B, Π(1+k_j)·k_L, d]`-shaped feature blocks, then run an L-layer
+//! SAGE stack). [`engine::NativeBackend`] composes either kernel with
+//! softmax cross-entropy and AdamW below into a full train step behind
+//! the [`crate::runtime::backend::Backend`] seam.
 //!
 //! Numerics: all accumulation is f32 (loss reduction in f64); the optional
 //! AMP mode stores the feature matrix as bf16 (round-to-nearest-even, the
@@ -56,22 +58,7 @@ pub fn resolve_threads(threads: usize) -> usize {
 // feature storage (f32 or bf16-compressed)
 // ---------------------------------------------------------------------------
 
-#[inline]
-fn f32_to_bf16(x: f32) -> u16 {
-    // round-to-nearest-even, identical to runtime::f32_to_bf16_bytes
-    let bits = x.to_bits();
-    if x.is_nan() {
-        0x7FC0
-    } else {
-        let round = 0x7FFF + ((bits >> 16) & 1);
-        (bits.wrapping_add(round) >> 16) as u16
-    }
-}
-
-#[inline]
-fn bf16_to_f32(b: u16) -> f32 {
-    f32::from_bits((b as u32) << 16)
-}
+use crate::util::{bf16_to_f32, f32_to_bf16};
 
 enum Storage {
     /// Owned f32 copy (test fixtures, perturbed matrices).
@@ -233,17 +220,30 @@ fn spec(name: &str, shape: &[usize]) -> TensorSpec {
     TensorSpec { name: name.into(), shape: shape.to_vec(), dtype: Dtype::F32 }
 }
 
-/// FSA head parameters, canonical order (python `model.sage_head`).
+/// FSA head parameters, canonical order (python `model.sage_head`). The
+/// head consumes the `[B, d]` multi-hop aggregate, so its shapes are
+/// independent of sampling depth.
 pub fn fsa_param_specs(d: usize, h: usize, c: usize) -> Vec<TensorSpec> {
     vec![spec("w_self", &[d, h]), spec("w_neigh", &[d, h]),
          spec("b_hidden", &[h]), spec("w_out", &[h, c]), spec("b_out", &[c])]
 }
 
-/// DGL baseline parameters, canonical order (python `baseline.dgl2_forward`).
-pub fn dgl_param_specs(d: usize, h: usize, c: usize) -> Vec<TensorSpec> {
-    vec![spec("w1_self", &[d, h]), spec("w1_neigh", &[d, h]),
-         spec("b1", &[h]), spec("w2_self", &[h, c]),
-         spec("w2_neigh", &[h, c]), spec("b2", &[c])]
+/// DGL baseline parameters for an L-layer SAGE stack, canonical order:
+/// `[w1_self, w1_neigh, b1, w2_self, w2_neigh, b2, …]` with layer widths
+/// `d → h → … → h → c`. Depth 2 reproduces the python
+/// `baseline.dgl2_forward` layout exactly.
+pub fn dgl_param_specs(d: usize, h: usize, c: usize,
+                       depth: usize) -> Vec<TensorSpec> {
+    assert!(depth >= 1, "SAGE stack needs at least one layer");
+    let mut specs = Vec::with_capacity(3 * depth);
+    for i in 1..=depth {
+        let inp = if i == 1 { d } else { h };
+        let out = if i == depth { c } else { h };
+        specs.push(spec(&format!("w{i}_self"), &[inp, out]));
+        specs.push(spec(&format!("w{i}_neigh"), &[inp, out]));
+        specs.push(spec(&format!("b{i}"), &[out]));
+    }
+    specs
 }
 
 /// Degree-balanced parallel fill of row-major `out[rows, width]`:

@@ -19,6 +19,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`rng`] | deterministic counter RNG (bitwise-identical to the kernel) |
+//! | [`fanout`] | the ordered per-hop [`fanout::Fanouts`] list (depth = L) |
 //! | [`json`] | minimal JSON parser/writer (manifest, configs) |
 //! | [`graph`] | CSR storage, builders, degree statistics |
 //! | [`gen`] | synthetic dataset registry (`arxiv_sim`, `reddit_sim`, …) |
@@ -35,6 +36,7 @@
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
+pub mod fanout;
 pub mod gen;
 pub mod graph;
 pub mod json;

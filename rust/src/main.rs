@@ -10,9 +10,13 @@
 //!   throughput  host sampling/batch pipeline: steps/sec + utilization
 //!   inspect     show manifest metadata for an artifact
 //!
+//! Fanouts are arbitrary-depth lists: `--fanout 10` (1-hop),
+//! `--fanout 15x10` (2-hop), `--fanout 15x10x5` (3-hop), and so on.
+//!
 //! Examples:
 //!   fsa train --variant fsa --dataset products_sim --fanout 15x10 \
 //!       --batch 1024 --steps 30 --threads 4 --prefetch on
+//!   fsa train --fanout 10x5x5 --backend native     # 3-hop, native engine
 //!   fsa bench-grid --out results/bench.csv
 //!   fsa table --which 1 --csv results/bench.csv
 //!   fsa throughput --dataset arxiv_sim --sweep
@@ -24,6 +28,7 @@ use fusesampleagg::bench::{self, render, throughput, Grid};
 use fusesampleagg::cli::Args;
 use fusesampleagg::coordinator::{profile, DatasetCache, TrainConfig, Trainer,
                                  Variant};
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::gen::{builtin_spec, Dataset};
 use fusesampleagg::memory::{self, StepDims};
 use fusesampleagg::metrics;
@@ -69,28 +74,39 @@ USAGE: fsa <subcommand> [options]
 
 SUBCOMMANDS
   gen         --dataset NAME                       generate + print stats
-  train       --variant fsa|dgl --dataset NAME --fanout K1xK2 --batch B
-              [--steps N] [--warmup N] [--seed S] [--no-amp] [--eval]
-              [--threads N] [--prefetch on|off] [--backend auto|native|pjrt]
-  bench-grid  [--quick] [--datasets a,b] [--fanouts 10x10,15x10]
-              [--batches 512,1024] [--steps N] [--warmup N] [--out FILE]
-              [--threads N] [--prefetch on|off] [--backend auto|native|pjrt]
+  train       --variant fsa|dgl --dataset NAME --fanout K1xK2[xK3...]
+              --batch B [--steps N] [--warmup N] [--seed S] [--no-amp]
+              [--eval] [--threads N] [--prefetch on|off]
+              [--backend auto|native|pjrt]
+  bench-grid  [--quick] [--depths] [--datasets a,b]
+              [--fanouts 10x10,15x10,15x10x5] [--batches 512,1024]
+              [--steps N] [--warmup N] [--out FILE] [--threads N]
+              [--prefetch on|off] [--backend auto|native|pjrt]
   table       --which 1|2|3|fig1|fig2|fig3|fig4|fig5 [--csv FILE]
   profile     [--steps N] [--warmup N] [--seed S]      (Table 3)
-  memory      --dataset NAME --fanout K1xK2 --batch B   (analytic model)
-  throughput  --dataset NAME [--fanout K1xK2] [--batch B] [--steps N]
-              [--threads N] [--prefetch on|off] [--dispatch-ms X] [--sweep]
-              [--backend emulated|native] [--variant fsa|dgl]
+  memory      --dataset NAME --fanout K1xK2[xK3...] --batch B
+              (analytic model, any depth)
+  throughput  --dataset NAME [--fanout K1xK2[xK3...]] [--batch B]
+              [--steps N] [--threads N] [--prefetch on|off]
+              [--dispatch-ms X] [--sweep] [--backend emulated|native]
+              [--variant fsa|dgl]
               host sampling/batch pipeline: steps/sec + utilization
               (no artifacts needed; dispatch is emulated or native compute)
   inspect     --artifact NAME | --list
+
+FANOUT SYNTAX
+  One positive integer per hop, joined by 'x', '_' or ',':
+  10 = 1-hop, 15x10 = 2-hop, 15x10x5 = 3-hop (SALIENT-style), any depth.
+  The sampler, kernels, model depth, and eval protocol all follow the
+  fanout list; nothing else selects the hop count.
 
 BACKENDS
   --backend auto    (default) run the AOT/PJRT artifact when it compiles,
                     otherwise the native CPU engine — real host compute,
                     no artifacts required
-  --backend native  always use the native engine
-  --backend pjrt    require the AOT artifact (error when missing/stubbed)
+  --backend native  always use the native engine (any fanout depth)
+  --backend pjrt    require the AOT artifact (error when missing/stubbed;
+                    the artifact manifest only defines depth <= 2)
 
 PIPELINE KNOBS
   --threads N       host sampler + native-kernel worker threads (0 = auto,
@@ -127,13 +143,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         "dgl" => Variant::Dgl,
         v => bail!("--variant must be fsa|dgl, got {v:?}"),
     };
-    let (k1, k2) = args.fanout("fanout", (15, 10))?;
+    let fanouts = args.fanout("fanout", &Fanouts::of(&[15, 10]))?;
     let cfg = TrainConfig {
         variant,
-        hops: if k2 == 0 { 1 } else { 2 },
         dataset: args.str_or("dataset", "products_sim"),
-        k1,
-        k2,
+        fanouts,
         batch: args.usize_or("batch", 1024)?,
         amp: !args.has("no-amp"),
         save_indices: !args.has("no-save-indices"),
@@ -145,10 +159,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 30)?;
     let warmup = args.usize_or("warmup", 5)?;
 
-    println!("training {} on {} fanout {}x{} batch {} amp={} seed={} \
+    println!("training {} on {} fanout {} ({}-hop) batch {} amp={} seed={} \
               threads={} prefetch={}",
-             cfg.variant.as_str(), cfg.dataset, k1, k2, cfg.batch, cfg.amp,
-             cfg.seed, cfg.threads, cfg.prefetch);
+             cfg.variant.as_str(), cfg.dataset, cfg.fanouts, cfg.hops(),
+             cfg.batch, cfg.amp, cfg.seed, cfg.threads, cfg.prefetch);
     let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;
     println!("backend: {}", trainer.backend_name());
     for _ in 0..warmup {
@@ -185,15 +199,37 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_bench_grid(args: &Args) -> Result<()> {
     let rt = Runtime::from_env()?;
     let mut cache = DatasetCache::new();
-    let mut grid = if args.has("quick") { Grid::quick() } else { Grid::default() };
+    let mut grid = if args.has("quick") {
+        Grid::quick()
+    } else if args.has("depths") {
+        // depth axis: 1/2/3 hops at a matched 150-leaf budget
+        Grid::depth_axis()
+    } else {
+        Grid::default()
+    };
     if let Some(ds) = args.str_opt("datasets") {
         grid.datasets = ds.split(',').map(|s| s.trim().to_string()).collect();
     }
     if let Some(f) = args.str_opt("fanouts") {
+        // list entries use the 'x'/'_' separators ("10x10,15x10x5");
+        // the ',' fanout form is for the single-value --fanout option
         grid.fanouts = f
             .split(',')
             .map(fusesampleagg::cli::parse_fanout)
             .collect::<Result<_>>()?;
+        if grid.fanouts.len() > 1 && grid.fanouts.iter().all(|f| f.depth() == 1)
+        {
+            eprintln!("note: --fanouts {f:?} parsed as {} separate 1-hop \
+                       grids ({}); for a single multi-hop fanout use 'x' \
+                       separators (e.g. --fanouts 15x10), or --fanout for \
+                       the comma form",
+                      grid.fanouts.len(),
+                      grid.fanouts
+                          .iter()
+                          .map(|f| f.label())
+                          .collect::<Vec<_>>()
+                          .join(", "));
+        }
     }
     if let Some(b) = args.str_opt("batches") {
         grid.batches = b
@@ -218,9 +254,9 @@ fn cmd_bench_grid(args: &Args) -> Result<()> {
         None => util::results_dir().join("bench.csv"),
     };
     let rows = bench::run_grid(&rt, &mut cache, &grid, |r| {
-        println!("{:<14} {:<4} f{}x{} b{:<5} seed {}: {:>8.2} ms/step \
+        println!("{:<14} {:<4} f{:<8} b{:<5} seed {}: {:>8.2} ms/step \
                   ({:.0} pairs/s, {:.1} MB transient)",
-                 r.dataset, r.variant, r.k1, r.k2, r.batch, r.repeat_seed,
+                 r.dataset, r.variant, r.fanout, r.batch, r.repeat_seed,
                  r.step_ms, r.pairs_per_s,
                  util::bytes_to_mb(r.peak_transient_bytes));
     })?;
@@ -256,6 +292,11 @@ fn cmd_table(args: &Args) -> Result<()> {
     }
     let rows = metrics::read_csv(&csv)
         .with_context(|| format!("reading {csv:?} — run `fsa bench-grid` first"))?;
+    if rows.is_empty() {
+        bail!("{csv:?} contains no parseable rows — it may predate the \
+               depth-generic schema (the k1,k2 columns were replaced by a \
+               single fanout column); re-run `fsa bench-grid`");
+    }
     let text = match which.as_str() {
         "1" => render::table1(&rows),
         "2" => render::table2(&rows),
@@ -285,25 +326,20 @@ fn cmd_profile(args: &Args) -> Result<()> {
 fn cmd_memory(args: &Args) -> Result<()> {
     let name = args.str_or("dataset", "products_sim");
     let spec = builtin_spec(&name)?;
-    let (k1, k2) = args.fanout("fanout", (15, 10))?;
+    let fanouts = args.fanout("fanout", &Fanouts::of(&[15, 10]))?;
     let batch = args.usize_or("batch", 1024)?;
     let dims = StepDims {
         batch,
-        k1,
-        k2,
+        fanouts: fanouts.clone(),
         d: spec.d,
         hidden: 64,
         classes: spec.c,
         tile: args.usize_or("tile", 8)?, // CPU default (EXPERIMENTS §Perf)
     };
-    let (base, fused) = if k2 > 0 {
-        (memory::baseline2_transient(&dims),
-         memory::fused2_transient(&dims, true))
-    } else {
-        (memory::baseline1_transient(&dims),
-         memory::fused1_transient(&dims, true))
-    };
-    println!("analytic transient model — {name} f{k1}x{k2} b{batch}:");
+    let base = memory::baseline_transient(&dims);
+    let fused = memory::fused_transient(&dims, true);
+    println!("analytic transient model — {name} f{fanouts} ({}-hop) \
+              b{batch}:", fanouts.depth());
     println!("  baseline: upload {} + intermediates {} + outputs {} = {}",
              util::fmt_bytes(base.upload), util::fmt_bytes(base.intermediates),
              util::fmt_bytes(base.outputs), util::fmt_bytes(base.peak_hbm()));
@@ -329,7 +365,7 @@ fn cmd_throughput(args: &Args) -> Result<()> {
     println!("dataset {name}: {} nodes, {} edges ({:.0} ms to generate)",
              ds.spec.n, ds.graph.num_edges(), t.ms());
 
-    let (k1, k2) = args.fanout("fanout", (15, 10))?;
+    let fanouts = args.fanout("fanout", &Fanouts::of(&[15, 10]))?;
     let native = match args.str_or("backend", "emulated").as_str() {
         "native" => true,
         "emulated" => false,
@@ -352,9 +388,7 @@ fn cmd_throughput(args: &Args) -> Result<()> {
         }
     };
     let base_cfg = throughput::ThroughputConfig {
-        hops: if k2 == 0 { 1 } else { 2 },
-        k1,
-        k2,
+        fanouts,
         batch: args.usize_or("batch", 1024)?,
         steps: args.usize_or("steps", 30)?,
         warmup: args.usize_or("warmup", 3)?,

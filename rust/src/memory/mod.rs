@@ -13,17 +13,19 @@
 //! backend the runtime reports measured upload/output buffer bytes and
 //! this module contributes the analytic model of the executable-internal
 //! intermediates, derived from the same shape arithmetic as the paper's
-//! complexity summary (§4):
-//!   baseline 2-hop:  Θ(B·(1+k1)·k2·D) block + activations
-//!   fused 2-hop:     Θ(B·D) output + saved indices; the gathered tile
+//! complexity summary (§4), generic over depth L:
+//!   baseline L-hop:  Θ(B·Π(1+k_j)·k_L·D) leaf block + nested activations
+//!   fused L-hop:     Θ(B·D) output + saved indices; the gathered tile
 //!                    lives in VMEM only (reported separately).
 
+use crate::fanout::Fanouts;
+
 /// Dimensions of one training-step configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct StepDims {
     pub batch: usize,
-    pub k1: usize,
-    pub k2: usize, // 0 for 1-hop
+    /// Per-hop fanouts; depth decides block widths and layer count.
+    pub fanouts: Fanouts,
     pub d: usize,
     pub hidden: usize,
     pub classes: usize,
@@ -55,71 +57,75 @@ const F32: u64 = 4;
 const I32: u64 = 4;
 
 fn fsa_param_bytes(dims: &StepDims) -> u64 {
-    // w_self[d,h] + w_neigh[d,h] + b[h] + w_out[h,c] + b_out[c]
+    // w_self[d,h] + w_neigh[d,h] + b[h] + w_out[h,c] + b_out[c] —
+    // depth-independent (the head consumes the [B,d] aggregate)
     ((2 * dims.d * dims.hidden + dims.hidden
         + dims.hidden * dims.classes + dims.classes) as u64) * F32
 }
 
 fn dgl_param_bytes(dims: &StepDims) -> u64 {
-    // w1_self[d,h] + w1_neigh[d,h] + b1[h] + w2_self[h,c] + w2_neigh[h,c] + b2[c]
-    ((2 * dims.d * dims.hidden + dims.hidden
-        + 2 * dims.hidden * dims.classes + dims.classes) as u64) * F32
+    // per layer: w{i}_self[in,out] + w{i}_neigh[in,out] + b{i}[out],
+    // widths d → h → … → h → c
+    let depth = dims.fanouts.depth();
+    let mut total = 0u64;
+    for i in 1..=depth {
+        let inp = if i == 1 { dims.d } else { dims.hidden };
+        let out = if i == depth { dims.classes } else { dims.hidden };
+        total += (2 * inp * out + out) as u64;
+    }
+    total * F32
 }
 
-/// Analytic transient model for the baseline (DGL-like) 2-hop step.
-pub fn baseline2_transient(dims: &StepDims) -> Transient {
-    let (b, k1, k2, d, h, c) =
-        (dims.batch as u64, dims.k1 as u64, dims.k2 as u64,
-         dims.d as u64, dims.hidden as u64, dims.classes as u64);
-    let f1w = 1 + k1;
+/// Analytic transient model for the baseline (DGL-like) L-hop step.
+pub fn baseline_transient(dims: &StepDims) -> Transient {
+    let depth = dims.fanouts.depth();
+    let (b, d, h, c) = (dims.batch as u64, dims.d as u64,
+                        dims.hidden as u64, dims.classes as u64);
     let params = dgl_param_bytes(dims);
-    let upload = b * f1w * I32          // f1
-        + b * f1w * k2 * I32            // s2
+
+    // self-inclusive frontier widths: w grows to Π_{j<L}(1+k_j)
+    let mut w = 1u64;
+    let mut frontier_ints = 0u64;
+    for l in 0..depth - 1 {
+        w *= 1 + dims.fanouts.k(l) as u64;
+        frontier_ints += b * w;
+    }
+    let kl = dims.fanouts.k(depth - 1) as u64;
+    let upload = frontier_ints * I32    // nested frontier levels
+        + b * w * kl * I32              // leaf samples
         + b * I32;                      // labels
-    let intermediates =
-        b * f1w * d * F32               // xf1 (materialized)
-        + b * f1w * k2 * d * F32        // block (materialized) — the gap
-        + b * f1w * d * F32             // mean2
-        + b * f1w * h * F32             // h1
-        + b * h * F32                   // h_neigh
-        + b * c * F32                   // logits
-        + b * c * F32                   // glogits
-        + b * f1w * h * F32             // gh1
-        + params                        // grads
-        + 2 * params;                   // adam m̂/v̂ temps
+
+    let mut intermediates =
+        b * w * d * F32                 // deepest-frontier gather
+        + b * w * kl * d * F32          // leaf block (materialized) — the gap
+        + b * w * d * F32               // leaf masked mean
+        + 2 * b * c * F32               // logits + glogits
+        + 3 * params;                   // grads + adam m̂/v̂ temps
+    // hidden activations + their backward temps per non-final layer, plus
+    // the neighbor-mean buffer each upper layer reduces into
+    let mut wl = w;
+    for i in 1..depth {
+        intermediates += 2 * b * wl * h * F32; // h_i + dpre_i
+        wl /= 1 + dims.fanouts.k(depth - 1 - i) as u64;
+        intermediates += b * wl * h * F32;     // layer-(i+1) neigh mean
+    }
     let outputs = 3 * params + F32;     // new params+m+v, loss
     Transient { upload, intermediates, outputs, vmem_tile: 0 }
 }
 
-/// Analytic transient model for the baseline 1-hop step.
-pub fn baseline1_transient(dims: &StepDims) -> Transient {
-    let (b, k1, d, h, c) = (dims.batch as u64, dims.k1 as u64,
-                            dims.d as u64, dims.hidden as u64,
-                            dims.classes as u64);
-    let f1w = 1 + k1;
-    let params = dgl_param_bytes(dims);
-    let upload = b * f1w * I32 + b * I32;
-    let intermediates = b * f1w * d * F32      // xf1 (materialized)
-        + b * d * F32                           // h_neigh mean
-        + b * h * F32                           // h
-        + 2 * b * c * F32                       // logits + glogits
-        + b * h * F32                           // gh
-        + 3 * params;
-    let outputs = 3 * params + F32;
-    Transient { upload, intermediates, outputs, vmem_tile: 0 }
-}
-
-/// Analytic transient model for the fused 2-hop step.
-pub fn fused2_transient(dims: &StepDims, save_indices: bool) -> Transient {
-    let (b, k1, k2, d, h, c) =
-        (dims.batch as u64, dims.k1 as u64, dims.k2 as u64,
-         dims.d as u64, dims.hidden as u64, dims.classes as u64);
+/// Analytic transient model for the fused L-hop step.
+pub fn fused_transient(dims: &StepDims, save_indices: bool) -> Transient {
+    let (b, d, h, c) = (dims.batch as u64, dims.d as u64,
+                        dims.hidden as u64, dims.classes as u64);
     let params = fsa_param_bytes(dims);
-    let upload = b * I32                // seeds
-        + b * I32                       // labels
+    let upload = 2 * b * I32            // seeds + labels
         + 8;                            // base_seed
     let indices = if save_indices {
-        b * k1 * I32 + b * k1 * k2 * I32
+        dims.fanouts
+            .cumulative()
+            .iter()
+            .map(|&kp| b * kp as u64 * I32)
+            .sum()
     } else {
         0
     };
@@ -132,27 +138,9 @@ pub fn fused2_transient(dims: &StepDims, save_indices: bool) -> Transient {
         + params                        // grads
         + 2 * params;                   // adam temps
     let outputs = 3 * params + F32;
-    // the gathered feature tile never touches HBM: seed-tile × k1·k2 × D
-    let vmem_tile = (dims.tile.max(1) as u64) * k1 * k2.max(1) * d * F32;
-    Transient { upload, intermediates, outputs, vmem_tile }
-}
-
-/// Analytic transient model for the fused 1-hop step.
-pub fn fused1_transient(dims: &StepDims, save_indices: bool) -> Transient {
-    let (b, k1, d, h, c) = (dims.batch as u64, dims.k1 as u64,
-                            dims.d as u64, dims.hidden as u64,
-                            dims.classes as u64);
-    let params = fsa_param_bytes(dims);
-    let upload = 2 * b * I32 + 8;
-    let indices = if save_indices { b * k1 * I32 + b * I32 } else { 0 };
-    let intermediates = indices
-        + 2 * b * d * F32
-        + b * h * F32
-        + 2 * b * c * F32
-        + b * h * F32
-        + 3 * params;
-    let outputs = 3 * params + F32;
-    let vmem_tile = (dims.tile.max(1) as u64) * k1 * d * F32;
+    // the gathered feature tile never touches HBM: seed-tile × Πk × D
+    let vmem_tile = (dims.tile.max(1) as u64)
+        * dims.fanouts.leaf_count() as u64 * d * F32;
     Transient { upload, intermediates, outputs, vmem_tile }
 }
 
@@ -199,13 +187,14 @@ impl MemoryMeter {
 mod tests {
     use super::*;
 
-    fn dims(batch: usize, k1: usize, k2: usize, tile: usize) -> StepDims {
-        StepDims { batch, k1, k2, d: 64, hidden: 64, classes: 47, tile }
+    fn dims(batch: usize, ks: &[usize], tile: usize) -> StepDims {
+        StepDims { batch, fanouts: Fanouts::of(ks), d: 64, hidden: 64,
+                   classes: 47, tile }
     }
 
     #[test]
     fn baseline_dominated_by_block() {
-        let t = baseline2_transient(&dims(1024, 15, 10, 0));
+        let t = baseline_transient(&dims(1024, &[15, 10], 0));
         // block = 1024*16*10*64*4 ≈ 41.9 MB must dominate
         let block = 1024u64 * 16 * 10 * 64 * 4;
         assert!(t.intermediates > block);
@@ -215,37 +204,57 @@ mod tests {
 
     #[test]
     fn fused_is_orders_of_magnitude_smaller() {
-        let d = dims(1024, 15, 10, 64);
-        let base = baseline2_transient(&d).peak_hbm();
-        let fsa = fused2_transient(&d, true).peak_hbm();
+        let d = dims(1024, &[15, 10], 64);
+        let base = baseline_transient(&d).peak_hbm();
+        let fsa = fused_transient(&d, true).peak_hbm();
         let ratio = base as f64 / fsa as f64;
         assert!(ratio > 5.0, "expected large reduction, got {ratio:.2}x");
     }
 
+    /// The baseline's block term multiplies with depth while the fused
+    /// path only adds saved-index rows, so the analytic reduction ratio
+    /// grows with depth at a matched leaf budget.
+    #[test]
+    fn reduction_ratio_grows_with_depth() {
+        // matched leaf budget: 150 leaves per seed at depths 1/2/3
+        let ratio = |ks: &[usize]| {
+            let d = dims(1024, ks, 64);
+            baseline_transient(&d).peak_hbm() as f64
+                / fused_transient(&d, true).peak_hbm() as f64
+        };
+        let (r1, r2, r3) =
+            (ratio(&[150]), ratio(&[15, 10]), ratio(&[15, 5, 2]));
+        assert!(r1 > 1.0, "depth 1 ratio {r1:.2}");
+        assert!(r2 > r1, "depth 2 ratio {r2:.2} <= depth 1 {r1:.2}");
+        assert!(r3 > r2, "depth 3 ratio {r3:.2} <= depth 2 {r2:.2}");
+    }
+
     #[test]
     fn fanout_grows_baseline_not_fused_output() {
-        let small = baseline2_transient(&dims(1024, 10, 10, 0)).peak_hbm();
-        let large = baseline2_transient(&dims(1024, 25, 10, 0)).peak_hbm();
+        let small = baseline_transient(&dims(1024, &[10, 10], 0)).peak_hbm();
+        let large = baseline_transient(&dims(1024, &[25, 10], 0)).peak_hbm();
         assert!(large as f64 > small as f64 * 1.8);
-        let fs = fused2_transient(&dims(1024, 10, 10, 64), true).peak_hbm();
-        let fl = fused2_transient(&dims(1024, 25, 10, 64), true).peak_hbm();
+        let fs = fused_transient(&dims(1024, &[10, 10], 64), true).peak_hbm();
+        let fl = fused_transient(&dims(1024, &[25, 10], 64), true).peak_hbm();
         // fused grows only by the saved-index tensors
         assert!((fl as f64) < (fs as f64) * 1.6);
     }
 
     #[test]
     fn save_indices_off_shrinks_fused() {
-        let d = dims(1024, 15, 10, 64);
-        assert!(fused2_transient(&d, false).peak_hbm()
-            < fused2_transient(&d, true).peak_hbm());
+        let d = dims(1024, &[15, 10], 64);
+        assert!(fused_transient(&d, false).peak_hbm()
+            < fused_transient(&d, true).peak_hbm());
     }
 
     #[test]
     fn vmem_tile_respects_tile_size() {
-        let t = fused2_transient(&dims(1024, 15, 10, 64), true);
+        let t = fused_transient(&dims(1024, &[15, 10], 64), true);
         assert_eq!(t.vmem_tile, 64 * 15 * 10 * 64 * 4);
-        let t1 = fused1_transient(&dims(1024, 10, 0, 128), true);
+        let t1 = fused_transient(&dims(1024, &[10], 128), true);
         assert_eq!(t1.vmem_tile, 128 * 10 * 64 * 4);
+        let t3 = fused_transient(&dims(1024, &[15, 10, 5], 8), true);
+        assert_eq!(t3.vmem_tile, 8 * 15 * 10 * 5 * 64 * 4);
     }
 
     #[test]

@@ -86,9 +86,10 @@ pub fn median(xs: &[f64]) -> f64 {
 pub struct BenchRow {
     pub dataset: String,
     pub variant: String, // "dgl" | "fsa"
+    /// Sampling depth (= `fanout` segment count).
     pub hops: u32,
-    pub k1: u32,
-    pub k2: u32,
+    /// Canonical fanout label, e.g. "15x10" or "10x5x5".
+    pub fanout: String,
     pub batch: u32,
     pub amp: bool,
     pub repeat_seed: u64,
@@ -112,13 +113,13 @@ pub struct BenchRow {
     pub loss: f64,
 }
 
-pub const CSV_HEADER: &str = "dataset,variant,hops,k1,k2,batch,amp,repeat_seed,steps,step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,nodes_per_s,peak_transient_bytes,loss";
+pub const CSV_HEADER: &str = "dataset,variant,hops,fanout,batch,amp,repeat_seed,steps,step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,nodes_per_s,peak_transient_bytes,loss";
 
 impl BenchRow {
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.1},{},{:.5}",
-            self.dataset, self.variant, self.hops, self.k1, self.k2,
+            "{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.1},{},{:.5}",
+            self.dataset, self.variant, self.hops, self.fanout,
             self.batch, self.amp, self.repeat_seed, self.steps, self.step_ms,
             self.sample_ms, self.upload_ms, self.execute_ms, self.pairs_per_s,
             self.nodes_per_s, self.peak_transient_bytes, self.loss
@@ -127,27 +128,30 @@ impl BenchRow {
 
     pub fn parse_csv(line: &str) -> Option<BenchRow> {
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 17 {
+        if f.len() != 16 {
             return None;
         }
+        // `hops` is derivable from the fanout label; derive it so the two
+        // columns can never disagree (the written column stays validated
+        // for schema sanity but is informational)
+        let _written_hops: u32 = f[2].parse().ok()?;
         Some(BenchRow {
             dataset: f[0].to_string(),
             variant: f[1].to_string(),
-            hops: f[2].parse().ok()?,
-            k1: f[3].parse().ok()?,
-            k2: f[4].parse().ok()?,
-            batch: f[5].parse().ok()?,
-            amp: f[6] == "true",
-            repeat_seed: f[7].parse().ok()?,
-            steps: f[8].parse().ok()?,
-            step_ms: f[9].parse().ok()?,
-            sample_ms: f[10].parse().ok()?,
-            upload_ms: f[11].parse().ok()?,
-            execute_ms: f[12].parse().ok()?,
-            pairs_per_s: f[13].parse().ok()?,
-            nodes_per_s: f[14].parse().ok()?,
-            peak_transient_bytes: f[15].parse().ok()?,
-            loss: f[16].parse().ok()?,
+            hops: f[3].split('x').count() as u32,
+            fanout: f[3].to_string(),
+            batch: f[4].parse().ok()?,
+            amp: f[5] == "true",
+            repeat_seed: f[6].parse().ok()?,
+            steps: f[7].parse().ok()?,
+            step_ms: f[8].parse().ok()?,
+            sample_ms: f[9].parse().ok()?,
+            upload_ms: f[10].parse().ok()?,
+            execute_ms: f[11].parse().ok()?,
+            pairs_per_s: f[12].parse().ok()?,
+            nodes_per_s: f[13].parse().ok()?,
+            peak_transient_bytes: f[14].parse().ok()?,
+            loss: f[15].parse().ok()?,
         })
     }
 }
@@ -157,9 +161,10 @@ impl BenchRow {
 #[derive(Clone, Debug)]
 pub struct ThroughputRow {
     pub dataset: String,
+    /// Sampling depth (= `fanout` segment count).
     pub hops: u32,
-    pub k1: u32,
-    pub k2: u32,
+    /// Canonical fanout label, e.g. "15x10".
+    pub fanout: String,
     pub batch: u32,
     /// Sampler worker threads (resolved; 0=auto never appears here).
     pub threads: u32,
@@ -179,13 +184,13 @@ pub struct ThroughputRow {
     pub utilization: f64,
 }
 
-pub const THROUGHPUT_CSV_HEADER: &str = "dataset,hops,k1,k2,batch,threads,prefetch,steps,steps_per_s,step_ms,sample_ms,overlap_ms,dispatch_ms,utilization";
+pub const THROUGHPUT_CSV_HEADER: &str = "dataset,hops,fanout,batch,threads,prefetch,steps,steps_per_s,step_ms,sample_ms,overlap_ms,dispatch_ms,utilization";
 
 impl ThroughputRow {
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{:.4}",
-            self.dataset, self.hops, self.k1, self.k2, self.batch,
+            "{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{:.4}",
+            self.dataset, self.hops, self.fanout, self.batch,
             self.threads, self.prefetch, self.steps, self.steps_per_s,
             self.step_ms, self.sample_ms, self.overlap_ms, self.dispatch_ms,
             self.utilization
@@ -194,24 +199,25 @@ impl ThroughputRow {
 
     pub fn parse_csv(line: &str) -> Option<ThroughputRow> {
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 14 {
+        if f.len() != 13 {
             return None;
         }
+        // derive hops from the fanout label (see BenchRow::parse_csv)
+        let _written_hops: u32 = f[1].parse().ok()?;
         Some(ThroughputRow {
             dataset: f[0].to_string(),
-            hops: f[1].parse().ok()?,
-            k1: f[2].parse().ok()?,
-            k2: f[3].parse().ok()?,
-            batch: f[4].parse().ok()?,
-            threads: f[5].parse().ok()?,
-            prefetch: f[6] == "true",
-            steps: f[7].parse().ok()?,
-            steps_per_s: f[8].parse().ok()?,
-            step_ms: f[9].parse().ok()?,
-            sample_ms: f[10].parse().ok()?,
-            overlap_ms: f[11].parse().ok()?,
-            dispatch_ms: f[12].parse().ok()?,
-            utilization: f[13].parse().ok()?,
+            hops: f[2].split('x').count() as u32,
+            fanout: f[2].to_string(),
+            batch: f[3].parse().ok()?,
+            threads: f[4].parse().ok()?,
+            prefetch: f[5] == "true",
+            steps: f[6].parse().ok()?,
+            steps_per_s: f[7].parse().ok()?,
+            step_ms: f[8].parse().ok()?,
+            sample_ms: f[9].parse().ok()?,
+            overlap_ms: f[10].parse().ok()?,
+            dispatch_ms: f[11].parse().ok()?,
+            utilization: f[12].parse().ok()?,
         })
     }
 }
@@ -251,8 +257,8 @@ pub fn median_over_repeats(rows: &[BenchRow]) -> Vec<BenchRow> {
     use std::collections::BTreeMap;
     let mut groups: BTreeMap<String, Vec<&BenchRow>> = BTreeMap::new();
     for r in rows {
-        let key = format!("{}|{}|{}|{}|{}|{}|{}", r.dataset, r.variant,
-                          r.hops, r.k1, r.k2, r.batch, r.amp);
+        let key = format!("{}|{}|{}|{}|{}|{}", r.dataset, r.variant,
+                          r.hops, r.fanout, r.batch, r.amp);
         groups.entry(key).or_default().push(r);
     }
     groups
@@ -266,8 +272,7 @@ pub fn median_over_repeats(rows: &[BenchRow]) -> Vec<BenchRow> {
                 dataset: first.dataset.clone(),
                 variant: first.variant.clone(),
                 hops: first.hops,
-                k1: first.k1,
-                k2: first.k2,
+                fanout: first.fanout.clone(),
                 batch: first.batch,
                 amp: first.amp,
                 repeat_seed: 0,
@@ -319,8 +324,7 @@ mod tests {
             dataset: "tiny".into(),
             variant: "fsa".into(),
             hops: 2,
-            k1: 5,
-            k2: 3,
+            fanout: "5x3".into(),
             batch: 64,
             amp: true,
             repeat_seed: seed,
@@ -341,6 +345,7 @@ mod tests {
         let row = sample_row(42, 1.25);
         let parsed = BenchRow::parse_csv(&row.to_csv()).unwrap();
         assert_eq!(parsed.dataset, "tiny");
+        assert_eq!(parsed.fanout, "5x3");
         assert_eq!(parsed.repeat_seed, 42);
         assert!((parsed.step_ms - 1.25).abs() < 1e-9);
         assert_eq!(parsed.peak_transient_bytes, 123456);
@@ -372,8 +377,7 @@ mod tests {
         let row = ThroughputRow {
             dataset: "arxiv_sim".into(),
             hops: 2,
-            k1: 15,
-            k2: 10,
+            fanout: "15x10".into(),
             batch: 1024,
             threads: 4,
             prefetch: true,

@@ -3,16 +3,20 @@
 //! The coordinator's `Trainer` prepares batches (seed scheduling, host
 //! sampling, prefetch) and hands one [`StepInputs`] per step to a
 //! [`Backend`]; the backend owns the model/optimizer state and runs
-//! forward + backward + AdamW. Two implementations:
+//! forward + backward + AdamW. The step spec is depth-generic: the batch
+//! carries one optional [`Block`] whose [`crate::fanout::Fanouts`] decide
+//! everything shape-related. Two implementations:
 //!
 //! * [`PjrtBackend`] (here) — the AOT path: upload per-step tensors,
-//!   dispatch one compiled artifact, read back state. With the in-crate
-//!   `xla` stub this fails at compile time with a clear error; with real
-//!   bindings it is the paper's measurement path.
-//! * [`crate::kernel::NativeBackend`] — real host compute, no artifacts
-//!   needed. `BackendChoice::Auto` (the default) tries PJRT and falls
-//!   back to native, so `fsa train` works end-to-end in this offline
-//!   build. See DESIGN_BACKEND.md for the re-vendoring contract.
+//!   dispatch one compiled artifact, read back state. The artifact
+//!   manifest only defines 1- and 2-hop graphs, so this backend rejects
+//!   deeper fanouts with a clear error (use the native engine). With the
+//!   in-crate `xla` stub compilation also fails with a clear error; with
+//!   real bindings it is the paper's measurement path.
+//! * [`crate::kernel::NativeBackend`] — real host compute at any depth,
+//!   no artifacts needed. `BackendChoice::Auto` (the default) tries PJRT
+//!   and falls back to native, so `fsa train` works end-to-end in this
+//!   offline build. See DESIGN_BACKEND.md for the re-vendoring contract.
 //!
 //! Transient accounting: backends record every per-step allocation into
 //! the coordinator's [`MemoryMeter`]; the native backend's numbers are
@@ -25,10 +29,11 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::fanout::Fanouts;
 use crate::gen::Dataset;
 use crate::memory::{self, MemoryMeter, StepDims};
 use crate::metrics::Timer;
-use crate::sampler::{Block1, Block2};
+use crate::sampler::Block;
 use crate::xla;
 
 use super::{init_params, Executable, Runtime};
@@ -70,10 +75,9 @@ pub struct StepInputs<'a> {
     pub labels: &'a [i32],
     /// Per-step base seed (shared sampling schedule across variants).
     pub base: u64,
-    /// Host-materialized 1-hop block (baseline variant only).
-    pub block1: Option<&'a Block1>,
-    /// Host-materialized 2-hop block (baseline variant only).
-    pub block2: Option<&'a Block2>,
+    /// Host-materialized L-hop index block (baseline variant only; its
+    /// fanouts carry the depth).
+    pub block: Option<&'a Block>,
 }
 
 /// What one dispatch reports back to the coordinator.
@@ -112,12 +116,23 @@ pub trait Backend {
     fn params_f32(&self) -> Result<Vec<Vec<f32>>>;
 }
 
+/// Reject fanouts the AOT manifest cannot express. The manifest only
+/// generates 1- and 2-hop train/eval graphs (`fsa1/fsa2/dgl1/dgl2`);
+/// L-hop PJRT manifests are an open ROADMAP item.
+pub fn ensure_pjrt_depth(fanouts: &Fanouts) -> Result<()> {
+    ensure!(fanouts.depth() <= 2,
+            "PJRT backend supports fanout depth <= 2, got depth {} ({}): \
+             the AOT artifact manifest only defines 1- and 2-hop graphs — \
+             use --backend native for deeper fanouts",
+            fanouts.depth(), fanouts);
+    Ok(())
+}
+
 /// The AOT/PJRT implementation of [`Backend`] (the paper's device path).
 pub struct PjrtBackend<'rt> {
     rt: &'rt Runtime,
     pub exe: Rc<Executable>,
     fused: bool,
-    hops: u32,
     save_indices: bool,
     dims: StepDims,
     /// Shared rowptr/col buffers — only fused artifacts consume them.
@@ -133,11 +148,13 @@ pub struct PjrtBackend<'rt> {
 
 impl<'rt> PjrtBackend<'rt> {
     /// Load + compile `artifact` and set up static buffers and state.
-    /// Fails fast (before any training) when the bindings are stubbed.
+    /// Fails fast (before any training) when the bindings are stubbed or
+    /// the fanout depth exceeds what the manifest expresses.
     #[allow(clippy::too_many_arguments)]
     pub fn new(rt: &'rt Runtime, ds: &Arc<Dataset>, artifact: &str,
-               fused: bool, hops: u32, batch: usize, k1: usize, k2: usize,
+               fused: bool, fanouts: &Fanouts, batch: usize,
                save_indices: bool, seed: u64) -> Result<PjrtBackend<'rt>> {
+        ensure_pjrt_depth(fanouts)?;
         let exe = rt.load(artifact)?;
         // static uploads, shared per dataset across trainers and eval;
         // each variant only uploads what its artifact consumes
@@ -169,8 +186,7 @@ impl<'rt> PjrtBackend<'rt> {
 
         let dims = StepDims {
             batch,
-            k1,
-            k2,
+            fanouts: fanouts.clone(),
             d: ds.spec.d,
             hidden: rt.manifest.hidden,
             classes: ds.spec.c,
@@ -180,7 +196,6 @@ impl<'rt> PjrtBackend<'rt> {
             rt,
             exe,
             fused,
-            hops,
             save_indices,
             dims,
             graph,
@@ -203,6 +218,8 @@ impl Backend for PjrtBackend<'_> {
         let b = self.dims.batch;
         ensure!(inp.seeds.len() == b,
                 "expected {b} seeds, got {}", inp.seeds.len());
+        let depth = self.dims.fanouts.depth();
+        let k1 = self.dims.fanouts.k(0);
 
         // ---- per-step uploads (params/opt state + batch tensors); static
         // buffers (graph, features) are passed by reference.
@@ -224,7 +241,7 @@ impl Backend for PjrtBackend<'_> {
             X,
         }
         let mut plan: Vec<Arg> = (0..owned.len()).map(Arg::Owned).collect();
-        match (self.fused, self.hops) {
+        match (self.fused, depth) {
             (true, _) => {
                 plan.push(Arg::Rowptr);
                 plan.push(Arg::Col);
@@ -238,29 +255,45 @@ impl Backend for PjrtBackend<'_> {
                 upload_bytes += (2 * b * 4 + 8) as u64;
             }
             (false, 2) => {
-                let blk = inp.block2
+                let blk = inp.block
                     .context("pipeline prepared no 2-hop block")?;
-                let f1w = 1 + self.dims.k1;
+                ensure!(blk.fanouts == self.dims.fanouts,
+                        "block fanouts {} do not match artifact fanouts {}",
+                        blk.fanouts, self.dims.fanouts);
+                let f1w = 1 + k1;
+                let k2 = self.dims.fanouts.k(1);
+                let f1 = &blk.frontiers[1];
+                let s2 = &blk.leaf;
                 plan.push(Arg::X);
-                owned.push(self.rt.buf_i32(&blk.f1, &[b, f1w])?);
+                owned.push(self.rt.buf_i32(f1, &[b, f1w])?);
                 plan.push(Arg::Owned(owned.len() - 1));
-                owned.push(self.rt.buf_i32(&blk.s2, &[b, f1w, self.dims.k2])?);
+                owned.push(self.rt.buf_i32(s2, &[b, f1w, k2])?);
                 plan.push(Arg::Owned(owned.len() - 1));
                 owned.push(self.rt.buf_i32(inp.labels, &[b])?);
                 plan.push(Arg::Owned(owned.len() - 1));
-                upload_bytes +=
-                    (blk.f1.len() * 4 + blk.s2.len() * 4 + b * 4) as u64;
+                upload_bytes += (f1.len() * 4 + s2.len() * 4 + b * 4) as u64;
             }
             (false, _) => {
-                let blk = inp.block1
+                let blk = inp.block
                     .context("pipeline prepared no 1-hop block")?;
-                let f1w = 1 + self.dims.k1;
+                ensure!(blk.fanouts == self.dims.fanouts,
+                        "block fanouts {} do not match artifact fanouts {}",
+                        blk.fanouts, self.dims.fanouts);
+                // the dgl1 artifact consumes the legacy combined
+                // [B, 1+k] frontier (seed column + samples)
+                let f1w = 1 + k1;
+                let mut f1 = vec![-1i32; b * f1w];
+                for bi in 0..b {
+                    f1[bi * f1w] = blk.frontiers[0][bi];
+                    f1[bi * f1w + 1..(bi + 1) * f1w]
+                        .copy_from_slice(&blk.leaf[bi * k1..(bi + 1) * k1]);
+                }
                 plan.push(Arg::X);
-                owned.push(self.rt.buf_i32(&blk.f1, &[b, f1w])?);
+                owned.push(self.rt.buf_i32(&f1, &[b, f1w])?);
                 plan.push(Arg::Owned(owned.len() - 1));
                 owned.push(self.rt.buf_i32(inp.labels, &[b])?);
                 plan.push(Arg::Owned(owned.len() - 1));
-                upload_bytes += (blk.f1.len() * 4 + b * 4) as u64;
+                upload_bytes += (f1.len() * 4 + b * 4) as u64;
             }
         }
         let graph = self.graph.as_ref(); // present iff the variant is fused
@@ -298,15 +331,10 @@ impl Backend for PjrtBackend<'_> {
         let post_ms = timer.ms();
 
         // measured uploads/outputs + analytic executable intermediates
-        let analytic = match (self.fused, self.hops) {
-            (false, 2) => memory::baseline2_transient(&self.dims),
-            (false, _) => memory::baseline1_transient(&self.dims),
-            (true, 2) => {
-                memory::fused2_transient(&self.dims, self.save_indices)
-            }
-            (true, _) => {
-                memory::fused1_transient(&self.dims, self.save_indices)
-            }
+        let analytic = if self.fused {
+            memory::fused_transient(&self.dims, self.save_indices)
+        } else {
+            memory::baseline_transient(&self.dims)
         };
         meter.alloc(analytic.intermediates + self.exe.spec.output_bytes());
 
@@ -343,5 +371,17 @@ mod tests {
         assert!(BackendChoice::parse("gpu").is_err());
         assert_eq!(BackendChoice::default(), BackendChoice::Auto);
         assert_eq!(BackendChoice::Native.as_str(), "native");
+    }
+
+    #[test]
+    fn pjrt_depth_gate_names_the_limitation() {
+        assert!(ensure_pjrt_depth(&Fanouts::of(&[10])).is_ok());
+        assert!(ensure_pjrt_depth(&Fanouts::of(&[15, 10])).is_ok());
+        let err = ensure_pjrt_depth(&Fanouts::of(&[15, 10, 5]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("depth 3"), "{err}");
+        assert!(err.contains("manifest"), "{err}");
+        assert!(err.contains("--backend native"), "{err}");
     }
 }

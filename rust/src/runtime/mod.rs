@@ -214,18 +214,12 @@ impl Runtime {
     }
 }
 
-/// Round-to-nearest-even f32 → bf16 conversion (little-endian byte pairs).
+/// Round-to-nearest-even f32 → bf16 conversion (little-endian byte
+/// pairs), delegating to the shared [`crate::util::f32_to_bf16`].
 pub fn f32_to_bf16_bytes(data: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(data.len() * 2);
     for &x in data {
-        let bits = x.to_bits();
-        let bf16 = if x.is_nan() {
-            0x7FC0u16 // canonical NaN
-        } else {
-            let round = 0x7FFF + ((bits >> 16) & 1);
-            ((bits.wrapping_add(round)) >> 16) as u16
-        };
-        out.extend_from_slice(&bf16.to_le_bytes());
+        out.extend_from_slice(&crate::util::f32_to_bf16(x).to_le_bytes());
     }
     out
 }

@@ -9,6 +9,10 @@
 //! so both variants draw identical neighborhoods; parity is pinned by golden
 //! vectors generated from the python oracle and by the integration tests.
 //!
+//! Depth is a parameter, not a code path: [`build_block`] builds the
+//! no-dedup nested frontier tensors of an L-hop [`Block`] for any
+//! [`Fanouts`], one expansion loop instead of per-depth builders.
+//!
 //! [`reservoir`] provides the paper's Alg. 1 uniform-without-replacement
 //! sampler (used for validation; see the substitution note in DESIGN.md §3).
 //! [`parallel`] shards the frontier across a scoped-thread worker pool —
@@ -19,6 +23,7 @@ pub mod reservoir;
 
 pub use parallel::ParallelSampler;
 
+use crate::fanout::Fanouts;
 use crate::graph::Csr;
 use crate::rng::rand_counter;
 
@@ -62,52 +67,64 @@ pub fn sample_frontier(csr: &Csr, frontier: &[i32], k: usize, base: u64,
     out
 }
 
-/// The index tensors one baseline 2-hop step uploads (DGL's "blocks").
-pub struct Block2 {
-    /// `[B, 1+k1]` frontier: column 0 = seed, columns 1.. = hop-1 samples.
-    pub f1: Vec<i32>,
-    /// `[B, 1+k1, k2]` hop-2 samples for every frontier node.
-    pub s2: Vec<i32>,
-    pub batch: usize,
-    pub k1: usize,
-    pub k2: usize,
-}
-
-/// The index tensor a baseline 1-hop step uploads.
-pub struct Block1 {
-    /// `[B, 1+k]` frontier: column 0 = seed, columns 1.. = samples.
-    pub f1: Vec<i32>,
-    pub batch: usize,
-    pub k: usize,
-}
-
-/// Build the 2-layer frontier + blocks for a batch of seeds (no dedup —
-/// static shapes; DESIGN.md §10 discusses the deviation from DGL's MFGs).
-pub fn build_block2(csr: &Csr, seeds: &[i32], k1: usize, k2: usize,
-                    base: u64) -> Block2 {
-    let b = seeds.len();
-    let f1w = 1 + k1;
-    let mut f1 = vec![-1i32; b * f1w];
-    for (bi, &r) in seeds.iter().enumerate() {
-        f1[bi * f1w] = r;
-        sample_neighbors(csr, r, k1, base, 0,
-                         &mut f1[bi * f1w + 1..(bi + 1) * f1w]);
+/// Self-inclusive frontier expansion: `[nodes.len(), 1+k]` with column 0
+/// the node itself and columns 1.. its `k` hop-`hop` samples (the nested
+/// layout every baseline level uses; invalid nodes expand to -1 rows).
+pub fn expand_frontier(csr: &Csr, nodes: &[i32], k: usize, base: u64,
+                       hop: u64) -> Vec<i32> {
+    let w = 1 + k;
+    let mut out = vec![-1i32; nodes.len() * w];
+    for (i, &u) in nodes.iter().enumerate() {
+        out[i * w] = u;
+        sample_neighbors(csr, u, k, base, hop, &mut out[i * w + 1..(i + 1) * w]);
     }
-    let s2 = sample_frontier(csr, &f1, k2, base, 1);
-    Block2 { f1, s2, batch: b, k1, k2 }
+    out
 }
 
-/// Build the 1-layer frontier for a batch of seeds.
-pub fn build_block1(csr: &Csr, seeds: &[i32], k: usize, base: u64) -> Block1 {
-    let b = seeds.len();
-    let f1w = 1 + k;
-    let mut f1 = vec![-1i32; b * f1w];
-    for (bi, &r) in seeds.iter().enumerate() {
-        f1[bi * f1w] = r;
-        sample_neighbors(csr, r, k, base, 0,
-                         &mut f1[bi * f1w + 1..(bi + 1) * f1w]);
+/// The index tensors one baseline L-hop step uploads (DGL's "blocks"),
+/// depth-generic and no-dedup (static shapes; DESIGN.md §10 discusses the
+/// deviation from DGL's MFGs).
+///
+/// `frontiers[l]` is the self-inclusive frontier at depth `l`: level 0 is
+/// the `[B, 1]` seeds; level `l > 0` nests each level-`l-1` node with its
+/// `k_l` hop-`l-1` samples, width `Π_{j≤l}(1+k_j)`. `leaf` holds the last
+/// hop's samples only (`[B, Π_{j<L}(1+k_j) · k_L]`) — the tensor whose
+/// dense feature gather is the materialization cost the fused op removes.
+///
+/// Depth-2 instance: `frontiers[1]` is the legacy `f1 = [B, 1+k1]` and
+/// `leaf` the legacy `s2 = [B, (1+k1), k2]`, with identical draws.
+pub struct Block {
+    pub batch: usize,
+    pub fanouts: Fanouts,
+    pub frontiers: Vec<Vec<i32>>,
+    pub leaf: Vec<i32>,
+}
+
+impl Block {
+    /// Total uploaded index ints (frontier levels past the seeds + leaf).
+    pub fn index_len(&self) -> usize {
+        self.frontiers[1..].iter().map(|f| f.len()).sum::<usize>()
+            + self.leaf.len()
     }
-    Block1 { f1, batch: b, k }
+}
+
+/// Build the L-hop nested frontier + leaf tensors for a batch of seeds:
+/// one expansion loop over the fanout list (hop `l` draws with counter
+/// index `l`, exactly like the fused kernel).
+pub fn build_block(csr: &Csr, seeds: &[i32], fanouts: &Fanouts,
+                   base: u64) -> Block {
+    let depth = fanouts.depth();
+    let mut frontiers: Vec<Vec<i32>> = Vec::with_capacity(depth);
+    frontiers.push(seeds.to_vec());
+    for hop in 0..depth - 1 {
+        let next = expand_frontier(csr, &frontiers[hop], fanouts.k(hop),
+                                   base, hop as u64);
+        frontiers.push(next);
+    }
+    let leaf = sample_frontier(csr, &frontiers[depth - 1],
+                               fanouts.k(depth - 1), base,
+                               (depth - 1) as u64);
+    Block { batch: seeds.len(), fanouts: fanouts.clone(), frontiers, leaf }
 }
 
 /// Count of valid (non `-1`) entries — the paper's raw "sampled pairs" unit.
@@ -124,24 +141,36 @@ pub fn distinct_nodes(indices: &[i32]) -> u64 {
     ids.len() as u64
 }
 
-/// Raw sampled pairs of one *fused* 2-hop step (B·k1 hop-1 draws plus the
-/// valid hop-2 draws), computable without running the kernel because the
-/// host sampler is bitwise-identical to it.
-pub fn fused2_sampled_pairs(csr: &Csr, seeds: &[i32], k1: usize, k2: usize,
-                            base: u64) -> u64 {
-    let s1 = sample_frontier(csr, seeds, k1, base, 0);
-    let s2 = sample_frontier(csr, &s1, k2, base, 1);
-    valid_pairs(&s1) + valid_pairs(&s2)
+/// Raw sampled pairs of one *fused* L-hop step (every hop's valid draws,
+/// leaves drawn only below valid parents), computable without running the
+/// kernel because the host sampler is bitwise-identical to it.
+pub fn fused_sampled_pairs(csr: &Csr, seeds: &[i32], fanouts: &Fanouts,
+                           base: u64) -> u64 {
+    let mut frontier = seeds.to_vec();
+    let mut total = 0u64;
+    for hop in 0..fanouts.depth() {
+        let s = sample_frontier(csr, &frontier, fanouts.k(hop), base,
+                                hop as u64);
+        total += valid_pairs(&s);
+        frontier = s;
+    }
+    total
 }
 
-/// Raw sampled pairs of one baseline 2-hop step (the frontier includes the
-/// seed itself, so the baseline genuinely samples more pairs).
-pub fn block2_sampled_pairs(block: &Block2) -> u64 {
-    let f1w = 1 + block.k1;
-    let hop1: u64 = (0..block.batch)
-        .map(|bi| valid_pairs(&block.f1[bi * f1w + 1..(bi + 1) * f1w]))
-        .sum();
-    hop1 + valid_pairs(&block.s2)
+/// Raw sampled pairs of one baseline L-hop step: every *sampled* slot of
+/// every frontier level (the self slots are carried nodes, not draws)
+/// plus the leaf draws. The baseline frontier includes the parents
+/// themselves, so it genuinely samples more pairs than the fused op.
+pub fn block_sampled_pairs(block: &Block) -> u64 {
+    let mut total = 0u64;
+    for (l, level) in block.frontiers.iter().enumerate().skip(1) {
+        let gw = 1 + block.fanouts.k(l - 1);
+        total += level
+            .chunks_exact(gw)
+            .map(|group| valid_pairs(&group[1..]))
+            .sum::<u64>();
+    }
+    total + valid_pairs(&block.leaf)
 }
 
 #[cfg(test)]
@@ -203,18 +232,50 @@ mod tests {
     }
 
     #[test]
-    fn block2_layout_embeds_seed_and_hop1() {
+    fn block_level1_embeds_seed_and_hop0_samples() {
         let csr = test_graph();
         let seeds = [3i32, 100, 200];
-        let blk = build_block2(&csr, &seeds, 4, 2, 42);
+        let blk = build_block(&csr, &seeds, &Fanouts::of(&[4, 2]), 42);
         let f1w = 5;
+        assert_eq!(blk.frontiers.len(), 2);
+        assert_eq!(blk.frontiers[0], seeds);
         for (bi, &r) in seeds.iter().enumerate() {
-            assert_eq!(blk.f1[bi * f1w], r);
+            assert_eq!(blk.frontiers[1][bi * f1w], r);
             let mut want = vec![0i32; 4];
             sample_neighbors(&csr, r, 4, 42, 0, &mut want);
-            assert_eq!(&blk.f1[bi * f1w + 1..(bi + 1) * f1w], &want[..]);
+            assert_eq!(&blk.frontiers[1][bi * f1w + 1..(bi + 1) * f1w],
+                       &want[..]);
         }
-        assert_eq!(blk.s2.len(), 3 * f1w * 2);
+        assert_eq!(blk.leaf.len(), 3 * f1w * 2);
+        assert_eq!(blk.index_len(), 3 * f1w + 3 * f1w * 2);
+    }
+
+    /// Depth-3 nesting: every level-2 group starts with its level-1 node
+    /// (the self slot) followed by that node's hop-1 samples, and the leaf
+    /// rows are the hop-2 samples of the level-2 nodes.
+    #[test]
+    fn block_depth3_nests_self_and_samples() {
+        let csr = test_graph();
+        let seeds: Vec<i32> = (0..8).collect();
+        let fo = Fanouts::of(&[3, 2, 2]);
+        let blk = build_block(&csr, &seeds, &fo, 7);
+        let (w1, w2) = (4usize, 3usize); // 1+k1 group, 1+k2 group
+        assert_eq!(blk.frontiers[1].len(), 8 * w1);
+        assert_eq!(blk.frontiers[2].len(), 8 * w1 * w2);
+        assert_eq!(blk.leaf.len(), 8 * w1 * w2 * 2);
+        let mut buf = vec![0i32; 2];
+        for p in 0..8 * w1 {
+            let u = blk.frontiers[1][p];
+            let group = &blk.frontiers[2][p * w2..(p + 1) * w2];
+            assert_eq!(group[0], u, "self slot at {p}");
+            sample_neighbors(&csr, u, 2, 7, 1, &mut buf);
+            assert_eq!(&group[1..], &buf[..], "hop-1 samples at {p}");
+        }
+        for (q, &v) in blk.frontiers[2].iter().enumerate() {
+            sample_neighbors(&csr, v, 2, 7, 2, &mut buf);
+            assert_eq!(&blk.leaf[q * 2..(q + 1) * 2], &buf[..],
+                       "leaf row {q}");
+        }
     }
 
     /// Baseline hop-2 samples for a frontier node must equal the fused
@@ -224,16 +285,16 @@ mod tests {
         let csr = test_graph();
         let seeds = [5i32, 17, 333];
         let (k1, k2, base) = (4usize, 3usize, 97u64);
-        let blk = build_block2(&csr, &seeds, k1, k2, base);
+        let blk = build_block(&csr, &seeds, &Fanouts::of(&[k1, k2]), base);
         let s1 = sample_frontier(&csr, &seeds, k1, base, 0);
         let s2 = sample_frontier(&csr, &s1, k2, base, 1);
         let f1w = 1 + k1;
         for bi in 0..seeds.len() {
             for i in 0..k1 {
-                // fused s2 row for (bi, i) == baseline s2 row for frontier
-                // column 1+i
+                // fused s2 row for (bi, i) == baseline leaf row for
+                // frontier column 1+i
                 let fused_row = &s2[(bi * k1 + i) * k2..][..k2];
-                let base_row = &blk.s2[(bi * f1w + 1 + i) * k2..][..k2];
+                let base_row = &blk.leaf[(bi * f1w + 1 + i) * k2..][..k2];
                 assert_eq!(fused_row, base_row);
             }
         }
@@ -245,11 +306,17 @@ mod tests {
         assert_eq!(distinct_nodes(&[1, -1, 3, 3]), 2);
         let csr = test_graph();
         let seeds = [1i32, 2, 3, 4];
-        let blk = build_block2(&csr, &seeds, 3, 2, 42);
-        let raw = block2_sampled_pairs(&blk);
-        assert!(raw > 0 && raw <= (4 * 3 + 4 * 4 * 2) as u64);
-        let fused = fused2_sampled_pairs(&csr, &seeds, 3, 2, 42);
-        assert!(fused <= raw, "fused {fused} > baseline {raw}");
+        for fo in [Fanouts::of(&[3]), Fanouts::of(&[3, 2]),
+                   Fanouts::of(&[3, 2, 2])] {
+            let blk = build_block(&csr, &seeds, &fo, 42);
+            let raw = block_sampled_pairs(&blk);
+            let cap: u64 = (0..fo.depth())
+                .map(|l| (4 * fo.frontier_width(l) * fo.k(l)) as u64)
+                .sum();
+            assert!(raw > 0 && raw <= cap, "{fo}: {raw} > cap {cap}");
+            let fused = fused_sampled_pairs(&csr, &seeds, &fo, 42);
+            assert!(fused <= raw, "{fo}: fused {fused} > baseline {raw}");
+        }
     }
 
     /// Property test: every sampled id is a real neighbor, padding is only

@@ -11,15 +11,20 @@
 //! result is **bitwise identical** to the serial sampler at any thread
 //! count (pinned by the tests below and `rust/tests/pipeline.rs`).
 //!
+//! Depth-generic: [`ParallelSampler::build_block`] runs the same
+//! level-by-level expansion as the serial [`super::build_block`], each
+//! level sharded independently.
+//!
 //! Workers are scoped threads spawned per call — a hand-rolled fork/join
 //! pool with no queue, no locks, and no `unsafe`; for the frontier sizes
 //! of the paper's grid (≥ 512 rows × 11–16 columns) the spawn cost is
 //! well under the sampling work per shard. Tiny frontiers fall back to
 //! the serial path via [`MIN_ROWS_PER_WORKER`].
 
+use crate::fanout::Fanouts;
 use crate::graph::{shard, Csr};
 
-use super::{sample_neighbors, Block1, Block2};
+use super::{sample_neighbors, Block};
 
 /// Below this many frontier rows per worker, thread spawn overhead beats
 /// the parallel speedup and the sampler degrades to fewer workers (the
@@ -90,66 +95,63 @@ impl ParallelSampler {
         out
     }
 
-    /// Parallel frontier build: `[seeds.len(), 1 + k]` with column 0 the
-    /// seed and columns 1.. its hop-0 samples (the `f1` layout).
-    fn build_frontier(&self, csr: &Csr, seeds: &[i32], k: usize,
-                      base: u64) -> Vec<i32> {
-        let f1w = 1 + k;
-        let mut f1 = vec![-1i32; seeds.len() * f1w];
-        let workers = self.workers_for(seeds.len());
+    /// Parallel [`super::expand_frontier`]: `[nodes.len(), 1 + k]` with
+    /// column 0 the node itself and columns 1.. its hop-`hop` samples.
+    pub fn expand_frontier(&self, csr: &Csr, nodes: &[i32], k: usize,
+                           base: u64, hop: u64) -> Vec<i32> {
+        let w = 1 + k;
+        let workers = self.workers_for(nodes.len());
         if workers == 1 {
-            for (bi, &r) in seeds.iter().enumerate() {
-                f1[bi * f1w] = r;
-                sample_neighbors(csr, r, k, base, 0,
-                                 &mut f1[bi * f1w + 1..(bi + 1) * f1w]);
-            }
-            return f1;
+            return super::expand_frontier(csr, nodes, k, base, hop);
         }
-        let plan = shard::plan_frontier_shards(csr, seeds, k, workers);
+        let mut out = vec![-1i32; nodes.len() * w];
+        let plan = shard::plan_frontier_shards(csr, nodes, k, workers);
         std::thread::scope(|s| {
-            let mut rest: &mut [i32] = &mut f1;
+            let mut rest: &mut [i32] = &mut out;
             for r in plan {
-                let take = (r.end - r.start) * f1w;
+                let take = (r.end - r.start) * w;
                 let slab = std::mem::take(&mut rest);
                 let (chunk, tail) = slab.split_at_mut(take);
                 rest = tail;
-                let rows = &seeds[r];
+                let rows = &nodes[r];
                 if rows.is_empty() {
                     continue;
                 }
                 s.spawn(move || {
                     for (i, &u) in rows.iter().enumerate() {
-                        chunk[i * f1w] = u;
-                        sample_neighbors(csr, u, k, base, 0,
-                                         &mut chunk[i * f1w + 1..(i + 1) * f1w]);
+                        chunk[i * w] = u;
+                        sample_neighbors(csr, u, k, base, hop,
+                                         &mut chunk[i * w + 1..(i + 1) * w]);
                     }
                 });
             }
         });
-        f1
+        out
     }
 
-    /// Parallel [`super::build_block2`] (bitwise identical).
-    pub fn build_block2(&self, csr: &Csr, seeds: &[i32], k1: usize, k2: usize,
-                        base: u64) -> Block2 {
+    /// Parallel [`super::build_block`] (bitwise identical at any thread
+    /// count): the same level-by-level expansion, each level sharded.
+    pub fn build_block(&self, csr: &Csr, seeds: &[i32], fanouts: &Fanouts,
+                       base: u64) -> Block {
         if self.threads == 1 {
-            return super::build_block2(csr, seeds, k1, k2, base);
+            return super::build_block(csr, seeds, fanouts, base);
         }
-        let f1 = self.build_frontier(csr, seeds, k1, base);
-        let s2 = self.sample_frontier(csr, &f1, k2, base, 1);
-        Block2 { f1, s2, batch: seeds.len(), k1, k2 }
-    }
-
-    /// Parallel [`super::build_block1`] (bitwise identical).
-    pub fn build_block1(&self, csr: &Csr, seeds: &[i32], k: usize,
-                        base: u64) -> Block1 {
-        if self.threads == 1 {
-            return super::build_block1(csr, seeds, k, base);
+        let depth = fanouts.depth();
+        let mut frontiers: Vec<Vec<i32>> = Vec::with_capacity(depth);
+        frontiers.push(seeds.to_vec());
+        for hop in 0..depth - 1 {
+            let next = self.expand_frontier(csr, &frontiers[hop],
+                                            fanouts.k(hop), base, hop as u64);
+            frontiers.push(next);
         }
-        Block1 {
-            f1: self.build_frontier(csr, seeds, k, base),
+        let leaf = self.sample_frontier(csr, &frontiers[depth - 1],
+                                        fanouts.k(depth - 1), base,
+                                        (depth - 1) as u64);
+        Block {
             batch: seeds.len(),
-            k,
+            fanouts: fanouts.clone(),
+            frontiers,
+            leaf,
         }
     }
 }
@@ -172,7 +174,7 @@ mod tests {
     #[test]
     fn frontier_bitwise_identical_across_thread_counts() {
         let csr = test_graph();
-        // include invalid rows like a padded f1 frontier would
+        // include invalid rows like a padded frontier would
         let mut frontier = random_seeds(&csr, 400, 3);
         frontier[7] = -1;
         frontier[123] = -1;
@@ -185,30 +187,22 @@ mod tests {
     }
 
     #[test]
-    fn block2_bitwise_identical_across_thread_counts() {
+    fn block_bitwise_identical_across_thread_counts_and_depths() {
         let csr = test_graph();
         let seeds = random_seeds(&csr, 256, 11);
-        let serial = crate::sampler::build_block2(&csr, &seeds, 4, 3, 42);
-        for threads in [1usize, 2, 8] {
-            let par = ParallelSampler::new(threads)
-                .build_block2(&csr, &seeds, 4, 3, 42);
-            assert_eq!(par.f1, serial.f1, "f1 differs at threads={threads}");
-            assert_eq!(par.s2, serial.s2, "s2 differs at threads={threads}");
-            assert_eq!((par.batch, par.k1, par.k2),
-                       (serial.batch, serial.k1, serial.k2));
-        }
-    }
-
-    #[test]
-    fn block1_bitwise_identical_across_thread_counts() {
-        let csr = test_graph();
-        let seeds = random_seeds(&csr, 256, 13);
-        let serial = crate::sampler::build_block1(&csr, &seeds, 6, 7);
-        for threads in [1usize, 2, 8] {
-            let par = ParallelSampler::new(threads)
-                .build_block1(&csr, &seeds, 6, 7);
-            assert_eq!(par.f1, serial.f1, "threads={threads}");
-            assert_eq!((par.batch, par.k), (serial.batch, serial.k));
+        for fo in [Fanouts::of(&[6]), Fanouts::of(&[4, 3]),
+                   Fanouts::of(&[4, 3, 2])] {
+            let serial = crate::sampler::build_block(&csr, &seeds, &fo, 42);
+            for threads in [1usize, 2, 8] {
+                let par = ParallelSampler::new(threads)
+                    .build_block(&csr, &seeds, &fo, 42);
+                assert_eq!(par.frontiers, serial.frontiers,
+                           "{fo}: frontiers differ at threads={threads}");
+                assert_eq!(par.leaf, serial.leaf,
+                           "{fo}: leaf differs at threads={threads}");
+                assert_eq!((par.batch, &par.fanouts),
+                           (serial.batch, &serial.fanouts));
+            }
         }
     }
 
@@ -218,10 +212,11 @@ mod tests {
         let seeds = random_seeds(&csr, 8, 5);
         let s = ParallelSampler::new(8);
         assert_eq!(s.workers_for(seeds.len()), 1);
-        let serial = crate::sampler::build_block2(&csr, &seeds, 3, 2, 1);
-        let par = s.build_block2(&csr, &seeds, 3, 2, 1);
-        assert_eq!(par.f1, serial.f1);
-        assert_eq!(par.s2, serial.s2);
+        let fo = Fanouts::of(&[3, 2]);
+        let serial = crate::sampler::build_block(&csr, &seeds, &fo, 1);
+        let par = s.build_block(&csr, &seeds, &fo, 1);
+        assert_eq!(par.frontiers, serial.frontiers);
+        assert_eq!(par.leaf, serial.leaf);
     }
 
     #[test]

@@ -1,6 +1,29 @@
-//! Small shared utilities: human-readable formatting and path discovery.
+//! Small shared utilities: human-readable formatting, path discovery, and
+//! the one shared bf16 conversion (previously duplicated between
+//! `kernel` and `runtime`).
 
 use std::path::{Path, PathBuf};
+
+/// f32 → bf16 with round-to-nearest-even — the exact conversion the XLA
+/// literal converter applies, shared by the native engine's bf16 feature
+/// storage and the runtime's upload path. NaN maps to the canonical
+/// quiet-NaN pattern.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        0x7FC0
+    } else {
+        let round = 0x7FFF + ((bits >> 16) & 1);
+        (bits.wrapping_add(round) >> 16) as u16
+    }
+}
+
+/// bf16 → f32 (exact: bf16 is a truncated f32).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
 
 /// Format a byte count as a human-readable string (MiB precision like the
 /// paper's tables, which report MB).
@@ -72,6 +95,30 @@ pub fn results_dir() -> PathBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bf16_round_trip_error_is_bounded() {
+        for x in [0.0f32, 1.0, -3.5, 0.1, 123.456, -1e-3, 65504.0, 1e-8] {
+            let back = bf16_to_f32(f32_to_bf16(x));
+            assert!((back - x).abs() <= x.abs() / 128.0 + 1e-38,
+                    "{x} -> {back}");
+        }
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(f32_to_bf16(f32::NAN), 0x7FC0);
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0f32 = 0x3F800000 -> bf16 0x3F80
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        // exactly-halfway rounds to the even mantissa
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+        // bf16 values decode and re-encode bit-exactly
+        for b in [0x0000u16, 0x3F80, 0xC2F7, 0x7F7F] {
+            assert_eq!(f32_to_bf16(bf16_to_f32(b)), b);
+        }
+    }
 
     #[test]
     fn bytes_formatting() {

@@ -8,6 +8,7 @@
 use fusesampleagg::bench::{render, run_config};
 use fusesampleagg::coordinator::{measure, DatasetCache, TrainConfig, Trainer,
                                  Variant};
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::metrics::BenchRow;
 use fusesampleagg::runtime::Runtime;
 use fusesampleagg::util;
@@ -30,10 +31,12 @@ fn runtime() -> Option<(std::sync::MutexGuard<'static, ()>, Runtime)> {
 fn tiny_cfg(variant: Variant, hops: u32, seed: u64) -> TrainConfig {
     TrainConfig {
         variant,
-        hops,
         dataset: "tiny".into(),
-        k1: 5,
-        k2: if hops == 2 { 3 } else { 0 },
+        fanouts: if hops == 2 {
+            Fanouts::of(&[5, 3])
+        } else {
+            Fanouts::of(&[5])
+        },
         batch: 64,
         amp: true,
         save_indices: true,
@@ -211,10 +214,8 @@ fn bf16_feature_artifact_trains() {
     let mut cache = DatasetCache::new();
     let cfg = TrainConfig {
         variant: Variant::Fsa,
-        hops: 2,
         dataset: "products_sim".into(),
-        k1: 15,
-        k2: 10,
+        fanouts: Fanouts::of(&[15, 10]),
         batch: 1024,
         amp: true,
         save_indices: true,

@@ -3,11 +3,15 @@
 //! and no PJRT bindings. These are the non-skipping counterpart of
 //! `integration.rs` — they must stay green in a fresh checkout and are run
 //! in release mode by CI (parity + gradient checks are too slow in debug).
+//!
+//! Depth-3 coverage and the depth-1/2 golden regressions against the
+//! pre-refactor kernels live in `depth.rs`.
 
 use std::sync::Arc;
 
 use fusesampleagg::coordinator::{measure, DatasetCache, TrainConfig, Trainer,
                                  Variant};
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::gen::{builtin_spec, Dataset};
 use fusesampleagg::kernel::{fsa_param_specs, NativeBackend, NativeConfig};
 use fusesampleagg::memory::MemoryMeter;
@@ -19,13 +23,11 @@ fn runtime() -> Runtime {
     Runtime::from_env().expect("manifest-less runtime")
 }
 
-fn tiny_cfg(variant: Variant, hops: u32, seed: u64) -> TrainConfig {
+fn tiny_cfg(variant: Variant, ks: &[usize], seed: u64) -> TrainConfig {
     TrainConfig {
         variant,
-        hops,
         dataset: "tiny".into(),
-        k1: 5,
-        k2: if hops == 2 { 3 } else { 0 },
+        fanouts: Fanouts::of(ks),
         batch: 64,
         amp: false,
         save_indices: true,
@@ -40,7 +42,7 @@ fn tiny_cfg(variant: Variant, hops: u32, seed: u64) -> TrainConfig {
 fn auto_backend_falls_back_to_native_without_artifacts() {
     let rt = runtime();
     let mut cache = DatasetCache::new();
-    let mut cfg = tiny_cfg(Variant::Fsa, 2, 42);
+    let mut cfg = tiny_cfg(Variant::Fsa, &[5, 3], 42);
     cfg.backend = BackendChoice::Auto;
     let tr = Trainer::new(&rt, &mut cache, cfg).unwrap();
     assert_eq!(tr.backend_name(), "native");
@@ -50,17 +52,35 @@ fn auto_backend_falls_back_to_native_without_artifacts() {
 fn pjrt_backend_is_a_hard_error_without_artifacts() {
     let rt = runtime();
     let mut cache = DatasetCache::new();
-    let mut cfg = tiny_cfg(Variant::Fsa, 2, 42);
+    let mut cfg = tiny_cfg(Variant::Fsa, &[5, 3], 42);
     cfg.backend = BackendChoice::Pjrt;
     assert!(Trainer::new(&rt, &mut cache, cfg).is_err());
+}
+
+/// PJRT cannot express depth > 2: explicit selection errors with a
+/// message naming the manifest limitation, and `Auto` silently lands on
+/// the native engine.
+#[test]
+fn pjrt_rejects_depth_3_and_auto_falls_back() {
+    let rt = runtime();
+    let mut cache = DatasetCache::new();
+    let mut cfg = tiny_cfg(Variant::Fsa, &[4, 3, 2], 42);
+    cfg.backend = BackendChoice::Pjrt;
+    let err = Trainer::new(&rt, &mut cache, cfg).unwrap_err().to_string();
+    assert!(err.contains("depth"), "{err}");
+    let mut cfg = tiny_cfg(Variant::Fsa, &[4, 3, 2], 42);
+    cfg.backend = BackendChoice::Auto;
+    let tr = Trainer::new(&rt, &mut cache, cfg).unwrap();
+    assert_eq!(tr.backend_name(), "native");
 }
 
 #[test]
 fn native_fsa2_trains_loss_decreases_and_beats_chance() {
     let rt = runtime();
     let mut cache = DatasetCache::new();
-    let mut tr = Trainer::new(&rt, &mut cache, tiny_cfg(Variant::Fsa, 2, 42))
-        .unwrap();
+    let mut tr =
+        Trainer::new(&rt, &mut cache, tiny_cfg(Variant::Fsa, &[5, 3], 42))
+            .unwrap();
     let timings = measure(&mut tr, 2, 40).unwrap();
     let first = timings.first().unwrap().loss;
     let last = timings.last().unwrap().loss;
@@ -79,8 +99,9 @@ fn native_fsa2_trains_loss_decreases_and_beats_chance() {
 fn native_dgl2_trains_and_pays_host_sampling() {
     let rt = runtime();
     let mut cache = DatasetCache::new();
-    let mut tr = Trainer::new(&rt, &mut cache, tiny_cfg(Variant::Dgl, 2, 42))
-        .unwrap();
+    let mut tr =
+        Trainer::new(&rt, &mut cache, tiny_cfg(Variant::Dgl, &[5, 3], 42))
+            .unwrap();
     let timings = measure(&mut tr, 2, 30).unwrap();
     let first = timings.first().unwrap().loss;
     let last = timings.last().unwrap().loss;
@@ -98,7 +119,8 @@ fn one_hop_native_variants_train() {
     let mut cache = DatasetCache::new();
     for variant in [Variant::Fsa, Variant::Dgl] {
         let mut tr =
-            Trainer::new(&rt, &mut cache, tiny_cfg(variant, 1, 42)).unwrap();
+            Trainer::new(&rt, &mut cache, tiny_cfg(variant, &[5], 42))
+                .unwrap();
         let timings = measure(&mut tr, 1, 25).unwrap();
         let first = timings.first().unwrap().loss;
         let last = timings.last().unwrap().loss;
@@ -112,7 +134,8 @@ fn native_training_is_bitwise_deterministic() {
     let mut cache = DatasetCache::new();
     let losses = |seed: u64, cache: &mut DatasetCache| -> Vec<f64> {
         let mut tr =
-            Trainer::new(&rt, cache, tiny_cfg(Variant::Fsa, 2, seed)).unwrap();
+            Trainer::new(&rt, cache, tiny_cfg(Variant::Fsa, &[5, 3], seed))
+                .unwrap();
         (0..15).map(|_| tr.step().unwrap().loss).collect()
     };
     let a = losses(42, &mut cache);
@@ -134,8 +157,8 @@ fn parallel_prefetch_native_training_matches_serial() {
         (0..12).map(|_| tr.step().unwrap().loss).collect()
     };
     for variant in [Variant::Fsa, Variant::Dgl] {
-        let serial = losses(tiny_cfg(variant, 2, 42), &mut cache);
-        let mut fast = tiny_cfg(variant, 2, 42);
+        let serial = losses(tiny_cfg(variant, &[5, 3], 42), &mut cache);
+        let mut fast = tiny_cfg(variant, &[5, 3], 42);
         fast.threads = 8;
         fast.prefetch = true;
         let pipelined = losses(fast, &mut cache);
@@ -148,10 +171,12 @@ fn parallel_prefetch_native_training_matches_serial() {
 fn paired_native_variants_share_sampling_schedule() {
     let rt = runtime();
     let mut cache = DatasetCache::new();
-    let fsa = Trainer::new(&rt, &mut cache, tiny_cfg(Variant::Fsa, 2, 42))
-        .unwrap();
-    let dgl = Trainer::new(&rt, &mut cache, tiny_cfg(Variant::Dgl, 2, 42))
-        .unwrap();
+    let fsa =
+        Trainer::new(&rt, &mut cache, tiny_cfg(Variant::Fsa, &[5, 3], 42))
+            .unwrap();
+    let dgl =
+        Trainer::new(&rt, &mut cache, tiny_cfg(Variant::Dgl, &[5, 3], 42))
+            .unwrap();
     assert_eq!(fsa.step_base_seed(), dgl.step_base_seed());
 }
 
@@ -162,10 +187,8 @@ fn paired_native_variants_share_sampling_schedule() {
 fn measured_transient_ratio_exceeds_five() {
     let rt = runtime();
     let mut cache = DatasetCache::new();
-    let mut cfg = tiny_cfg(Variant::Fsa, 2, 42);
+    let mut cfg = tiny_cfg(Variant::Fsa, &[10, 5], 42);
     cfg.batch = 256;
-    cfg.k1 = 10;
-    cfg.k2 = 5;
     let mut fsa = Trainer::new(&rt, &mut cache, cfg.clone()).unwrap();
     let f = fsa.step().unwrap();
     cfg.variant = Variant::Dgl;
@@ -190,9 +213,7 @@ fn native_fused_forward_matches_unfused_reference() {
     let (d, h, c) = (ds.spec.d, 64usize, ds.spec.c);
     let cfg = NativeConfig {
         fused: true,
-        hops: 2,
-        k1: 5,
-        k2: 3,
+        fanouts: Fanouts::of(&[5, 3]),
         amp: false,
         save_indices: false,
         seed: 42,
@@ -206,7 +227,8 @@ fn native_fused_forward_matches_unfused_reference() {
     let got = eng.eval_logits(&seeds, base).unwrap().unwrap();
 
     // reference: materialized two-level masked means at the fixed eval
-    // fanout (15x10 — eval_logits mirrors the AOT eval protocol), then
+    // fanout (15x10 — eval_logits uses the depth-matched 15-10 protocol
+    // for this 2-hop config, mirroring the AOT eval artifacts), then
     // the same head
     let (ek1, ek2) = (15usize, 10usize);
     let b = seeds.len();
@@ -267,9 +289,7 @@ fn fused_grads_match_finite_difference() {
     let (d, h, c) = (ds.spec.d, 32usize, ds.spec.c);
     let cfg = NativeConfig {
         fused: true,
-        hops: 2,
-        k1: 4,
-        k2: 3,
+        fanouts: Fanouts::of(&[4, 3]),
         amp: false,
         save_indices: true,
         seed: 7,
@@ -321,7 +341,7 @@ fn fused_grads_match_finite_difference() {
 fn amp_bf16_storage_trains() {
     let rt = runtime();
     let mut cache = DatasetCache::new();
-    let mut cfg = tiny_cfg(Variant::Fsa, 2, 42);
+    let mut cfg = tiny_cfg(Variant::Fsa, &[5, 3], 42);
     cfg.amp = true;
     let mut tr = Trainer::new(&rt, &mut cache, cfg).unwrap();
     let timings = measure(&mut tr, 1, 30).unwrap();
@@ -337,8 +357,9 @@ fn amp_bf16_storage_trains() {
 fn explicit_seed_steps_work() {
     let rt = runtime();
     let mut cache = DatasetCache::new();
-    let mut tr = Trainer::new(&rt, &mut cache, tiny_cfg(Variant::Fsa, 2, 42))
-        .unwrap();
+    let mut tr =
+        Trainer::new(&rt, &mut cache, tiny_cfg(Variant::Fsa, &[5, 3], 42))
+            .unwrap();
     let seeds: Vec<i32> = (0..64).collect();
     let t = tr.step_with_seeds(&seeds).unwrap();
     assert!(t.loss.is_finite() && t.pairs > 0);

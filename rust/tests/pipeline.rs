@@ -1,7 +1,7 @@
 //! Host-pipeline invariants (no artifacts needed — pure host path):
 //!
-//! 1. the parallel sampler's `Block1`/`Block2` output is **bitwise equal**
-//!    to the serial sampler for thread counts {1, 2, 8};
+//! 1. the parallel sampler's [`Block`] output is **bitwise equal** to the
+//!    serial sampler for thread counts {1, 2, 8} at depths 1, 2, and 3;
 //! 2. the prefetch pipeline leaves the paired **seed order** and
 //!    **base-seed schedule** unchanged — batches stream in the exact
 //!    order and with the exact base seeds the synchronous path produces,
@@ -13,6 +13,7 @@ use std::sync::Arc;
 use fusesampleagg::bench::throughput::{run_throughput, ThroughputConfig};
 use fusesampleagg::coordinator::pipeline::{prepare_batch, BatchPrefetcher,
                                            BatchScheduler, HostWork};
+use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::gen::{builtin_spec, Dataset};
 use fusesampleagg::rng::SplitMix64;
 use fusesampleagg::sampler::{self, ParallelSampler};
@@ -27,27 +28,20 @@ fn random_nodes(ds: &Dataset, n: usize, seed: u64) -> Vec<i32> {
 }
 
 #[test]
-fn block2_bitwise_identical_for_1_2_8_threads() {
+fn blocks_bitwise_identical_for_1_2_8_threads_at_depths_1_2_3() {
     let ds = tiny();
     let seeds = random_nodes(&ds, 512, 1);
-    let serial = sampler::build_block2(&ds.graph, &seeds, 15, 10, 42);
-    for threads in [1usize, 2, 8] {
-        let par = ParallelSampler::new(threads)
-            .build_block2(&ds.graph, &seeds, 15, 10, 42);
-        assert_eq!(par.f1, serial.f1, "f1 mismatch at {threads} threads");
-        assert_eq!(par.s2, serial.s2, "s2 mismatch at {threads} threads");
-    }
-}
-
-#[test]
-fn block1_bitwise_identical_for_1_2_8_threads() {
-    let ds = tiny();
-    let seeds = random_nodes(&ds, 512, 2);
-    let serial = sampler::build_block1(&ds.graph, &seeds, 10, 7);
-    for threads in [1usize, 2, 8] {
-        let par = ParallelSampler::new(threads)
-            .build_block1(&ds.graph, &seeds, 10, 7);
-        assert_eq!(par.f1, serial.f1, "f1 mismatch at {threads} threads");
+    for fo in [Fanouts::of(&[10]), Fanouts::of(&[15, 10]),
+               Fanouts::of(&[10, 5, 5])] {
+        let serial = sampler::build_block(&ds.graph, &seeds, &fo, 42);
+        for threads in [1usize, 2, 8] {
+            let par = ParallelSampler::new(threads)
+                .build_block(&ds.graph, &seeds, &fo, 42);
+            assert_eq!(par.frontiers, serial.frontiers,
+                       "{fo}: frontiers mismatch at {threads} threads");
+            assert_eq!(par.leaf, serial.leaf,
+                       "{fo}: leaf mismatch at {threads} threads");
+        }
     }
 }
 
@@ -57,7 +51,8 @@ fn block1_bitwise_identical_for_1_2_8_threads() {
 #[test]
 fn prefetch_preserves_seed_order_and_base_seed_schedule() {
     let ds = tiny();
-    let (batch, k1, k2, seed) = (64usize, 5usize, 3usize, 42u64);
+    let (batch, seed) = (64usize, 42u64);
+    let fo = Fanouts::of(&[5, 3]);
     // tiny has ~410 train nodes; 30 steps cross several epoch reshuffles
     let steps = 30usize;
 
@@ -68,25 +63,26 @@ fn prefetch_preserves_seed_order_and_base_seed_schedule() {
         .map(|s| {
             let seeds = sync_sched.next_seeds();
             let base = sync_sched.base_seed(s);
-            prepare_batch(&ds, HostWork::Block2, k1, k2, &sampler, s, seeds,
+            prepare_batch(&ds, HostWork::Block, &fo, &sampler, s, seeds,
                           base)
         })
         .collect();
 
     // pipelined: double-buffered prefetch with a multi-threaded sampler
     let mut sched = BatchScheduler::new(&ds, batch, seed).unwrap();
-    let mut pf = BatchPrefetcher::spawn(ds.clone(), HostWork::Block2, k1, k2,
-                                        8);
+    let mut pf = BatchPrefetcher::spawn(ds.clone(), HostWork::Block,
+                                        fo.clone(), 8);
     for (s, want) in reference.iter().enumerate() {
         let got = pf.next_batch(&mut sched).unwrap();
         assert_eq!(got.step, s, "batches out of order");
         assert_eq!(got.seeds, want.seeds, "seed order changed at step {s}");
         assert_eq!(got.base, want.base, "base-seed schedule changed at {s}");
         assert_eq!(got.labels, want.labels, "labels diverged at step {s}");
-        let (gb, wb) = (got.block2.as_ref().unwrap(),
-                        want.block2.as_ref().unwrap());
-        assert_eq!(gb.f1, wb.f1, "prefetched f1 diverged at step {s}");
-        assert_eq!(gb.s2, wb.s2, "prefetched s2 diverged at step {s}");
+        let (gb, wb) = (got.block.as_ref().unwrap(),
+                        want.block.as_ref().unwrap());
+        assert_eq!(gb.frontiers, wb.frontiers,
+                   "prefetched frontiers diverged at step {s}");
+        assert_eq!(gb.leaf, wb.leaf, "prefetched leaf diverged at step {s}");
     }
 }
 
@@ -107,8 +103,7 @@ fn throughput_mode_improves_with_threads_and_prefetch() {
     let ds = tiny();
     let cfg = ThroughputConfig {
         batch: 256,
-        k1: 10,
-        k2: 10,
+        fanouts: Fanouts::of(&[10, 10]),
         steps: 6,
         warmup: 1,
         dispatch_ms: 1.0,
