@@ -33,6 +33,7 @@ fn losses(rt: &Runtime, cache: &mut DatasetCache, seed: u64,
         threads: 1,
         prefetch: false,
         backend: Default::default(),
+        planner: Default::default(),
     };
     let mut trainer = Trainer::new(rt, cache, cfg)?;
     (0..steps).map(|_| Ok(trainer.step()?.loss)).collect()

@@ -62,6 +62,7 @@ fn main() -> Result<()> {
                     threads: 1,
                     prefetch: false,
                     backend: Default::default(),
+                    planner: Default::default(),
                 };
                 Ok(run_config(&rt, &mut cache, cfg, 1, 5)?
                     .peak_transient_bytes)

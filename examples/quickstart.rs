@@ -32,6 +32,7 @@ fn main() -> Result<()> {
         threads: 1,                 // host sampler workers (0 = auto)
         prefetch: false,            // overlap sampling with dispatch
         backend: Default::default(),    // auto: PJRT, else native engine
+        planner: Default::default(),
     };
 
     // 3. train for 40 steps

@@ -28,6 +28,7 @@ fn run(rt: &Runtime, cache: &mut DatasetCache, variant: Variant,
         threads: 1,
         prefetch: false,
         backend: Default::default(),
+        planner: Default::default(),
     };
     let mut tr = Trainer::new(rt, cache, cfg)?;
     let timer = Timer::start();

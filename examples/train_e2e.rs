@@ -57,6 +57,7 @@ fn main() -> Result<()> {
         threads,
         prefetch,
         backend: Default::default(),
+        planner: Default::default(),
     };
     let total = Timer::start();
     let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;

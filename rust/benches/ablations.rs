@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
                 fanouts: Fanouts::of(&[15, 10]), batch: 1024, amp,
                 save_indices: true, seed: 42, threads: 1, prefetch: false,
                 backend: Default::default(),
+                planner: Default::default(),
             };
             let r = run(&mut cache, cfg)?;
             let _ = writeln!(out, "  amp={:<5} {:<4}: {:>8.2} ms/step", amp,
@@ -65,6 +66,7 @@ fn main() -> anyhow::Result<()> {
                     batch: 1024, amp: true, save_indices: true, seed: 42,
                     threads: 1, prefetch: false,
                     backend: Default::default(),
+                    planner: Default::default(),
                 };
                 let r = run(&mut cache, cfg)?;
                 let _ = writeln!(out, "  {:<13} {}-hop {:<4}: {:>8.2} ms/step \
@@ -86,6 +88,7 @@ fn main() -> anyhow::Result<()> {
             fanouts: Fanouts::of(&[15, 10]), batch: 1024, amp: true,
             save_indices: save, seed: 42, threads: 1, prefetch: false,
             backend: Default::default(),
+            planner: Default::default(),
         };
         let r = run(&mut cache, cfg)?;
         let _ = writeln!(out, "  save_indices={:<5}: {:>8.2} ms/step \
@@ -113,6 +116,7 @@ fn main() -> anyhow::Result<()> {
                 amp: true, save_indices: true, seed: 42,
                 threads: 1, prefetch: false,
                 backend: Default::default(),
+                planner: Default::default(),
             };
             let mut tr = Trainer::new_named(rt2, &mut cache, cfg, artifact)?;
             let timings = measure(&mut tr, warmup, steps)?;

@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
                   r.step_ms, util::bytes_to_mb(r.peak_transient_bytes));
     })?;
 
-    let json = bench::native_bench_json(&rows);
+    let json = bench::native_bench_json(&rows, grid.planner);
     let repo = util::find_repo_root()
         .unwrap_or_else(|| std::path::PathBuf::from("."));
     std::fs::write(repo.join("BENCH_native.json"), format!("{json}\n"))?;

@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
             threads: 1,
             prefetch: false,
             backend: Default::default(),
+            planner: Default::default(),
         };
         let mut tr = Trainer::new_named(&rt, &mut cache, cfg, &name)?;
         let timings = measure(&mut tr, warmup, steps)?;

@@ -15,6 +15,7 @@ use anyhow::Result;
 
 use crate::coordinator::{measure, DatasetCache, TrainConfig, Trainer, Variant};
 use crate::fanout::Fanouts;
+use crate::graph::PlannerChoice;
 use crate::metrics::{median, median_over_repeats, BenchRow};
 use crate::runtime::{BackendChoice, Runtime};
 
@@ -36,6 +37,8 @@ pub struct Grid {
     /// Execution backend for every cell (default auto: PJRT when
     /// artifacts compile, native CPU engine otherwise).
     pub backend: BackendChoice,
+    /// Shard-planner cost model for every cell (`--planner`).
+    pub planner: PlannerChoice,
 }
 
 impl Default for Grid {
@@ -54,6 +57,7 @@ impl Default for Grid {
             threads: 1,
             prefetch: false,
             backend: BackendChoice::Auto,
+            planner: PlannerChoice::default(),
         }
     }
 }
@@ -156,6 +160,8 @@ pub fn run_config(rt: &Runtime, cache: &mut DatasetCache, cfg: TrainConfig,
     let pairs = median(&timings.iter().map(|t| t.pairs as f64).collect::<Vec<_>>());
     let peak = timings.iter().map(|t| t.transient_bytes).max().unwrap_or(0);
     let loss = timings.last().map(|t| t.loss).unwrap_or(f64::NAN);
+    let imbalance =
+        median(&timings.iter().map(|t| t.imbalance).collect::<Vec<_>>());
 
     Ok(BenchRow {
         dataset: cfg.dataset.clone(),
@@ -174,6 +180,7 @@ pub fn run_config(rt: &Runtime, cache: &mut DatasetCache, cfg: TrainConfig,
         nodes_per_s: cfg.batch as f64 / (step_ms / 1e3),
         peak_transient_bytes: peak,
         loss,
+        imbalance,
     })
 }
 
@@ -197,6 +204,7 @@ pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
                             threads: grid.threads,
                             prefetch: grid.prefetch,
                             backend: grid.backend,
+                            planner: grid.planner,
                         };
                         let row = run_config(rt, cache, cfg, grid.warmup,
                                              grid.steps)?;
@@ -217,7 +225,8 @@ pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
 /// native runs and the `fused_vs_baseline` bench target so the perf
 /// numbers — including the transient-ratio-vs-depth trajectory — are
 /// comparable across PRs.
-pub fn native_bench_json(rows: &[BenchRow]) -> crate::json::Value {
+pub fn native_bench_json(rows: &[BenchRow],
+                         planner: PlannerChoice) -> crate::json::Value {
     use crate::json::Value;
     use std::collections::BTreeMap;
 
@@ -250,6 +259,9 @@ pub fn native_bench_json(rows: &[BenchRow]) -> crate::json::Value {
             obj.insert("fused_peak_transient_bytes".into(),
                        num(f.peak_transient_bytes as f64));
             obj.insert("fused_loss".into(), num(f.loss));
+            // per-depth measured shard-imbalance ratio of the fused
+            // kernel's batch sharding (1.0 = balanced or serial)
+            obj.insert("imbalance".into(), num(f.imbalance));
         }
         if let Some(d) = &dgl {
             obj.insert("baseline_step_ms".into(), num(d.step_ms));
@@ -258,6 +270,7 @@ pub fn native_bench_json(rows: &[BenchRow]) -> crate::json::Value {
             obj.insert("baseline_peak_transient_bytes".into(),
                        num(d.peak_transient_bytes as f64));
             obj.insert("baseline_loss".into(), num(d.loss));
+            obj.insert("baseline_imbalance".into(), num(d.imbalance));
         }
         if let (Some(f), Some(d)) = (&fsa, &dgl) {
             obj.insert("speedup".into(),
@@ -272,14 +285,17 @@ pub fn native_bench_json(rows: &[BenchRow]) -> crate::json::Value {
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Value::Str("fused_vs_baseline".into()));
     root.insert("backend".into(), Value::Str("native".into()));
+    // the imbalance cells depend on the planner flavor; record it so
+    // artifacts from different flavors are distinguishable
+    root.insert("planner".into(), Value::Str(planner.as_str().into()));
     root.insert("cells".into(), Value::Arr(out_cells));
     Value::Obj(root)
 }
 
 /// Write [`native_bench_json`] to `path`.
-pub fn write_native_json(rows: &[BenchRow],
+pub fn write_native_json(rows: &[BenchRow], planner: PlannerChoice,
                          path: &std::path::Path) -> std::io::Result<()> {
-    std::fs::write(path, format!("{}\n", native_bench_json(rows)))
+    std::fs::write(path, format!("{}\n", native_bench_json(rows, planner)))
 }
 
 #[cfg(test)]
@@ -335,6 +351,7 @@ mod tests {
             nodes_per_s: 1.0,
             peak_transient_bytes: peak,
             loss: 1.0,
+            imbalance: 1.1,
         }
     }
 
@@ -346,13 +363,14 @@ mod tests {
             row("dgl", "5x3", 2, 42, 3.0, 1000),
             row("dgl", "5x3", 2, 43, 3.4, 1100),
         ];
-        let v = native_bench_json(&rows);
+        let v = native_bench_json(&rows, PlannerChoice::default());
         assert_eq!(v.get("bench").unwrap().as_str(),
                    Some("fused_vs_baseline"));
         let cells = v.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 1);
         assert_eq!(cells[0].get("fanout").unwrap().as_str(), Some("5x3"));
         assert_eq!(cells[0].get("depth").unwrap().as_f64(), Some(2.0));
+        assert_eq!(cells[0].get("imbalance").unwrap().as_f64(), Some(1.1));
         let speedup = cells[0].get("speedup").unwrap().as_f64().unwrap();
         assert!((speedup - 3.2 / 1.1).abs() < 1e-9, "speedup {speedup}");
         let ratio =
@@ -373,7 +391,7 @@ mod tests {
             row("fsa", "15x5x2", 3, 42, 1.0, 140),
             row("dgl", "15x5x2", 3, 42, 4.0, 4000),
         ];
-        let v = native_bench_json(&rows);
+        let v = native_bench_json(&rows, PlannerChoice::default());
         let cells = v.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 3);
         // the transient ratio trajectory across depth is recoverable

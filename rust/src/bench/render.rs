@@ -298,6 +298,7 @@ mod tests {
             nodes_per_s: 1e3 / step_ms,
             peak_transient_bytes: peak,
             loss: 1.0,
+            imbalance: 1.0,
         }
     }
 

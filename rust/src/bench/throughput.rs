@@ -29,6 +29,7 @@ use crate::coordinator::pipeline::{prepare_batch, BatchPrefetcher,
 use crate::coordinator::{TrainConfig, Variant};
 use crate::fanout::Fanouts;
 use crate::gen::Dataset;
+use crate::graph::PlannerChoice;
 use crate::kernel::NativeBackend;
 use crate::memory::MemoryMeter;
 use crate::metrics::{summarize, ThroughputRow, Timer};
@@ -63,6 +64,8 @@ pub struct ThroughputConfig {
     pub hidden: usize,
     /// Optimizer hyper-parameters for native dispatch (same source).
     pub adamw: AdamwConfig,
+    /// Shard-planner cost model (`--planner`).
+    pub planner: PlannerChoice,
 }
 
 impl ThroughputConfig {
@@ -84,6 +87,7 @@ impl ThroughputConfig {
             variant: Variant::Dgl,
             hidden: builtin.hidden,
             adamw: builtin.adamw,
+            planner: PlannerChoice::default(),
         }
     }
 
@@ -103,6 +107,7 @@ impl ThroughputConfig {
             threads: self.threads,
             prefetch: self.prefetch,
             backend: BackendChoice::Native,
+            planner: self.planner,
         }
     }
 }
@@ -126,10 +131,10 @@ pub fn run_throughput(ds: Arc<Dataset>,
     };
     let mut meter = MemoryMeter::new();
     let mut sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)?;
-    let sampler = ParallelSampler::new(cfg.threads);
+    let sampler = ParallelSampler::with_planner(cfg.threads, cfg.planner);
     let mut prefetcher = if cfg.prefetch {
         Some(BatchPrefetcher::spawn(ds.clone(), work, cfg.fanouts.clone(),
-                                    cfg.threads))
+                                    cfg.threads, cfg.planner))
     } else {
         None
     };
@@ -138,6 +143,7 @@ pub fn run_throughput(ds: Arc<Dataset>,
     let mut critical: Vec<f64> = Vec::with_capacity(cfg.steps);
     let mut overlapped: Vec<f64> = Vec::with_capacity(cfg.steps);
     let mut dispatched: Vec<f64> = Vec::with_capacity(cfg.steps);
+    let mut imbalances: Vec<f64> = Vec::with_capacity(cfg.steps);
     let mut wall = Timer::start();
 
     for step in 0..cfg.warmup + cfg.steps {
@@ -161,6 +167,7 @@ pub fn run_throughput(ds: Arc<Dataset>,
         // the synchronized dispatch the next batch overlaps with: a real
         // native-engine train step, or the emulated fixed sleep
         let disp = Timer::start();
+        let mut engine_stats = None;
         match engine.as_mut() {
             Some(eng) => {
                 let inp = StepInputs {
@@ -172,6 +179,7 @@ pub fn run_throughput(ds: Arc<Dataset>,
                 let out = eng.train_step(step, &inp, &mut meter)?;
                 ensure!(out.loss.is_finite(),
                         "native dispatch produced a non-finite loss");
+                engine_stats = out.shard_stats;
                 meter.reset_step();
             }
             None if cfg.dispatch_ms > 0.0 => {
@@ -181,12 +189,20 @@ pub fn run_throughput(ds: Arc<Dataset>,
             None => {}
         }
         let disp_ms = disp.ms();
+        // shard balance: engine batch shards when the dispatch sharded,
+        // else the sampler's block shards (1.0 = balanced or serial)
+        let imb = engine_stats
+            .as_ref()
+            .map(|s| s.imbalance())
+            .or(prepared.sample_imbalance)
+            .unwrap_or(1.0);
         std::hint::black_box(&prepared);
         if step >= cfg.warmup {
             step_wall.push(step_timer.ms());
             critical.push(crit);
             overlapped.push(over);
             dispatched.push(disp_ms);
+            imbalances.push(imb);
         }
     }
     let wall_s = wall.ms() / 1e3;
@@ -222,6 +238,7 @@ pub fn run_throughput(ds: Arc<Dataset>,
             cfg.dispatch_ms
         },
         utilization,
+        imbalance: summarize(&imbalances).median,
     })
 }
 
@@ -231,11 +248,12 @@ pub fn render_table(rows: &[ThroughputRow]) -> String {
     let mut out = String::new();
     let _ = writeln!(out, "Host pipeline throughput — sharded parallel \
                            sampling + batch prefetch.");
-    let _ = writeln!(out, "{:-<78}", "");
-    let _ = writeln!(out, "{:<10} {:>8} {:>10} {:>10} {:>12} {:>11} {:>9}",
+    let _ = writeln!(out, "{:-<86}", "");
+    let _ = writeln!(out,
+                     "{:<10} {:>8} {:>10} {:>10} {:>12} {:>11} {:>7} {:>9}",
                      "threads", "prefetch", "steps/s", "step ms",
-                     "sample ms", "overlap ms", "util");
-    let _ = writeln!(out, "{:-<78}", "");
+                     "sample ms", "overlap ms", "imbal", "util");
+    let _ = writeln!(out, "{:-<86}", "");
     let baseline = rows.first().map(|r| r.steps_per_s);
     for r in rows {
         let speedup = baseline
@@ -243,12 +261,13 @@ pub fn render_table(rows: &[ThroughputRow]) -> String {
             .unwrap_or_default();
         let _ = writeln!(
             out,
-            "{:<10} {:>8} {:>10.1} {:>10.2} {:>12.2} {:>11.2} {:>8.0}%{}",
+            "{:<10} {:>8} {:>10.1} {:>10.2} {:>12.2} {:>11.2} {:>7.2} \
+             {:>8.0}%{}",
             r.threads, if r.prefetch { "on" } else { "off" }, r.steps_per_s,
-            r.step_ms, r.sample_ms, r.overlap_ms, 100.0 * r.utilization,
-            speedup);
+            r.step_ms, r.sample_ms, r.overlap_ms, r.imbalance,
+            100.0 * r.utilization, speedup);
     }
-    let _ = writeln!(out, "{:-<78}", "");
+    let _ = writeln!(out, "{:-<86}", "");
     out
 }
 
@@ -315,6 +334,10 @@ mod tests {
             assert!(r.steps_per_s > 0.0, "{variant:?}");
             assert!(r.dispatch_ms > 0.0,
                     "{variant:?}: native dispatch must take real time");
+            // the imbalance ratio is always reported: finite and >= 1
+            // (exactly 1.0 for this serial run)
+            assert!(r.imbalance.is_finite() && r.imbalance >= 1.0,
+                    "{variant:?}: bad imbalance {}", r.imbalance);
             if variant == Variant::Fsa {
                 // fused path samples inside the kernel: no host blocks
                 assert_eq!(r.sample_ms, 0.0);
@@ -340,5 +363,6 @@ mod tests {
             tiny(), &ThroughputConfig { prefetch: true, ..cfg }).unwrap();
         let t = render_table(&[a, b]);
         assert!(t.contains("steps/s") && t.contains("1.00x"), "{t}");
+        assert!(t.contains("imbal"), "imbalance column missing:\n{t}");
     }
 }

@@ -35,6 +35,7 @@ use anyhow::{bail, Result};
 
 use crate::fanout::Fanouts;
 use crate::gen::{builtin_spec, Dataset, Split};
+use crate::graph::PlannerChoice;
 use crate::kernel::{NativeBackend, NativeConfig};
 use crate::memory::MemoryMeter;
 use crate::rng::mix;
@@ -86,6 +87,10 @@ pub struct TrainConfig {
     /// Execution backend (default [`BackendChoice::Auto`]: PJRT when an
     /// artifact compiles, native CPU engine otherwise).
     pub backend: BackendChoice,
+    /// Shard-planner cost model (`--planner`; default quantile). Outputs
+    /// are bitwise identical under every flavor — only shard balance,
+    /// and with it step time, moves.
+    pub planner: PlannerChoice,
 }
 
 impl TrainConfig {
@@ -119,6 +124,7 @@ impl TrainConfig {
             save_indices: self.save_indices,
             seed: self.seed,
             threads: self.threads,
+            planner: self.planner,
             hidden,
         }
     }
@@ -151,6 +157,11 @@ pub struct StepTiming {
     /// native backend; measured uploads/outputs + analytic executable
     /// intermediates on PJRT.
     pub transient_bytes: u64,
+    /// Measured shard-imbalance ratio of this step's sharded host pass
+    /// (max/mean per-shard wall time): the fused kernel's batch shards
+    /// when the native engine sharded, else the sampler's block shards.
+    /// 1.0 = balanced or serial.
+    pub imbalance: f64,
 }
 
 impl StepTiming {
@@ -265,10 +276,11 @@ impl<'rt> Trainer<'rt> {
     fn with_backend(rt: &'rt Runtime, cfg: TrainConfig, ds: Arc<Dataset>,
                     backend: Box<dyn Backend + 'rt>) -> Result<Trainer<'rt>> {
         let sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)?;
-        let sampler = ParallelSampler::new(cfg.threads);
+        let sampler = ParallelSampler::with_planner(cfg.threads, cfg.planner);
         let prefetcher = cfg.prefetch.then(|| {
             BatchPrefetcher::spawn(ds.clone(), cfg.host_work(),
-                                   cfg.fanouts.clone(), cfg.threads)
+                                   cfg.fanouts.clone(), cfg.threads,
+                                   cfg.planner)
         });
         Ok(Trainer {
             rt,
@@ -373,6 +385,14 @@ impl<'rt> Trainer<'rt> {
         t.execute_ms = out.execute_ms;
         t.post_ms = out.post_ms;
         t.loss = out.loss;
+        // shard balance: the engine's batch shards when it sharded, else
+        // the host sampler's block shards, else serial (1.0)
+        t.imbalance = out
+            .shard_stats
+            .as_ref()
+            .map(|s| s.imbalance())
+            .or(prepared.sample_imbalance)
+            .unwrap_or(1.0);
         t.transient_bytes = self.meter.peak();
         self.meter.reset_peak();
         self.meter.reset_step();

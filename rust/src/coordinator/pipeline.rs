@@ -108,6 +108,10 @@ pub struct PreparedBatch {
     /// Critical-path wait the consumer paid to obtain this batch
     /// (`None` = built synchronously; `sample_ms` *is* the critical path).
     pub wait_ms: Option<f64>,
+    /// Measured shard-imbalance ratio of the block build's sharded
+    /// sampling passes (None when the sampler ran serially or no block
+    /// was built) — the sampler half of the measured-imbalance feedback.
+    pub sample_imbalance: Option<f64>,
 }
 
 /// Build one batch synchronously with the given sampler.
@@ -118,17 +122,20 @@ pub fn prepare_batch(ds: &Dataset, work: HostWork, fanouts: &Fanouts,
         seeds.iter().map(|&u| ds.labels[u as usize]).collect();
     let mut block = None;
     let mut sample_ms = 0.0;
+    let mut sample_imbalance = None;
     match work {
         HostWork::SeedsOnly => {}
         HostWork::Block => {
             let t = Timer::start();
+            sampler.take_imbalance(); // discard any stale accumulation
             block = Some(sampler.build_block(&ds.graph, &seeds, fanouts,
                                              base));
             sample_ms = t.ms();
+            sample_imbalance = sampler.take_imbalance();
         }
     }
     PreparedBatch { step, seeds, labels, base, block, sample_ms,
-                    wait_ms: None }
+                    wait_ms: None, sample_imbalance }
 }
 
 struct Job {
@@ -149,13 +156,14 @@ pub struct BatchPrefetcher {
 
 impl BatchPrefetcher {
     /// Spawn the worker. `threads` is the sampler's worker count inside the
-    /// prefetch thread (0 = auto).
+    /// prefetch thread (0 = auto); `planner` its shard-planner flavor.
     pub fn spawn(ds: Arc<Dataset>, work: HostWork, fanouts: Fanouts,
-                 threads: usize) -> BatchPrefetcher {
+                 threads: usize,
+                 planner: crate::graph::PlannerChoice) -> BatchPrefetcher {
         let (jtx, jrx) = mpsc::channel::<Job>();
         let (dtx, drx) = mpsc::channel::<PreparedBatch>();
         let worker = thread::spawn(move || {
-            let sampler = ParallelSampler::new(threads);
+            let sampler = ParallelSampler::with_planner(threads, planner);
             for job in jrx {
                 let batch = prepare_batch(&ds, work, &fanouts, &sampler,
                                           job.step, job.seeds, job.base);
@@ -291,7 +299,8 @@ mod tests {
         let ds = tiny();
         let mut sched = BatchScheduler::new(&ds, 64, 42).unwrap();
         let mut pf = BatchPrefetcher::spawn(ds.clone(), HostWork::Block,
-                                            Fanouts::of(&[4, 3]), 2);
+                                            Fanouts::of(&[4, 3]), 2,
+                                            Default::default());
         for _ in 0..3 {
             let step = sched.steps_drawn();
             let seeds = sched.next_seeds();
@@ -316,7 +325,8 @@ mod tests {
         let mut sync_sched = BatchScheduler::new(&ds, 64, 42).unwrap();
         let mut pf_sched = BatchScheduler::new(&ds, 64, 42).unwrap();
         let mut pf = BatchPrefetcher::spawn(ds.clone(), HostWork::Block,
-                                            fo.clone(), 8);
+                                            fo.clone(), 8,
+                                            Default::default());
         for _ in 0..10 {
             let step = pf_sched.steps_drawn();
             let seeds = pf_sched.next_seeds();

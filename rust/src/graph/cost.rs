@@ -1,0 +1,638 @@
+//! Expected-subtree cost model for the shard planner.
+//!
+//! The fused kernel shards its seed batch with a per-seed *cost*; until
+//! this module the cost assumed every hop-0 draw expands to the full
+//! nominal fanout below it (`nominal_subtree_weight`). On hub-heavy
+//! power-law graphs that assumption is exactly wrong where it matters
+//! most: a hub seed whose neighbors are degree-1 leaves does a fraction
+//! of the row-adds the nominal model charges it for, while a mid-degree
+//! seed sitting in a dense core does far more than its share — so shard
+//! balance degrades with depth (ROADMAP "Depth-aware shard planner
+//! tuning"; SALIENT, arXiv 2110.08450, makes the same observation about
+//! sampler load balance dominating once aggregation is fused).
+//!
+//! [`CostModel`] replaces the nominal weight with *expected* row-adds,
+//! folded innermost-first exactly like `fused_khop` folds its
+//! accumulators:
+//!
+//! ```text
+//! sub(L)      = 1                                 (a leaf draw = 1 row-add)
+//! sub(l)      = 1 + ebar(k_{l+1}) · sub(l+1)      (global, hops 2..L)
+//! cost(seed)  = 1 + min(deg(seed), k1)
+//!                 · (1 + emin(seed, k2) · sub(2)) (per-node, hops 0..1)
+//! ```
+//!
+//! where `ebar(k) = E[min(deg(child), k)]` over the graph's *edge-weighted*
+//! child-degree distribution and `emin(u, k)` is the same expectation
+//! restricted to `u`'s own neighbor list. Both come from a
+//! [`DegreeSummary`]: a compact degree-quantile sketch (Q global buckets
+//! of the child-degree distribution plus a per-node neighbor histogram
+//! over those buckets) built once per graph and cached on the
+//! [`Csr`] (`Csr::degree_summary`, the `Runtime::graph_bufs` reuse
+//! pattern) — so planning stays O(frontier · Q) = O(frontier).
+//!
+//! Three planner flavors ([`PlannerChoice`], the `--planner` CLI knob):
+//!
+//! * `nominal`  — bit-for-bit the pre-cost-model *cost arithmetic*
+//!   (full-fanout subtree weights); cut positions may still differ from
+//!   the pre-PR planner because [`plan_shards`] itself now rounds cuts
+//!   to the nearest prefix;
+//! * `quantile` — the expected-subtree costs above (default);
+//! * `adaptive` — quantile costs plus measured-throughput feedback: the
+//!   engine records per-shard wall time into [`ShardStats`] and
+//!   [`CostModel::observe`] folds an EWMA of each worker's cost/ms into
+//!   weighted cut targets for the next step's plan.
+//!
+//! **Determinism**: the planner only decides *where* contiguous shard
+//! cuts land, never *what* is computed — every worker still writes a
+//! disjoint slice and the counter RNG is order-independent — so sampler
+//! and kernel outputs are bitwise identical under every planner choice
+//! and thread count (pinned by `rust/tests/planner.rs`).
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::shard::{plan_shards, plan_shards_weighted, sample_cost};
+use super::Csr;
+use crate::fanout::Fanouts;
+
+/// Which cost model the shard planner runs on (`--planner`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlannerChoice {
+    /// Full-nominal-fanout subtree weights (the legacy cost arithmetic,
+    /// reproduced bit-for-bit).
+    Nominal,
+    /// Degree-quantile expected-subtree costs (default).
+    #[default]
+    Quantile,
+    /// Quantile costs + measured per-shard throughput feedback.
+    Adaptive,
+}
+
+impl PlannerChoice {
+    pub fn parse(s: &str) -> Result<PlannerChoice> {
+        Ok(match s {
+            "nominal" => PlannerChoice::Nominal,
+            "quantile" => PlannerChoice::Quantile,
+            "adaptive" => PlannerChoice::Adaptive,
+            other => {
+                bail!("--planner must be nominal|quantile|adaptive, \
+                       got {other:?}")
+            }
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlannerChoice::Nominal => "nominal",
+            PlannerChoice::Quantile => "quantile",
+            PlannerChoice::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// Cost-model weight of the subtree hanging off one hop-0 draw under the
+/// *nominal* full-fanout assumption: `1 + k2·(1 + k3·(…))` row-adds per
+/// sampled hop-0 neighbor. Depth-0 / depth-1 fanout lists have no hops
+/// below hop 0, so the weight degenerates to 1 (one row-add per draw) —
+/// the explicit guard the old `kernel::fused::subtree_weight` lacked (it
+/// indexed `ks[1..]` unconditionally and panicked on an empty list).
+pub fn nominal_subtree_weight(ks: &[usize]) -> u64 {
+    ks.get(1..)
+        .unwrap_or(&[])
+        .iter()
+        .rev()
+        .fold(1u64, |w, &k| 1 + k as u64 * w)
+}
+
+// ---------------------------------------------------------------------------
+// DegreeSummary — the per-dataset degree-quantile sketch
+// ---------------------------------------------------------------------------
+
+/// Number of degree-quantile buckets. Small on purpose: per-row planning
+/// work is O(Q), and power-law degree distributions are summarized well
+/// by a handful of log-spaced mass quantiles.
+pub const SUMMARY_BUCKETS: usize = 8;
+
+/// Compact degree-quantile summary of a graph: Q buckets of the
+/// edge-weighted child-degree distribution (a sampled neighbor is a
+/// uniform draw from its parent's list, so across parents a child of
+/// degree d appears with weight proportional to d), plus a per-node
+/// histogram of each node's own neighbors over those buckets.
+#[derive(Debug)]
+pub struct DegreeSummary {
+    /// Inclusive upper degree bound of each bucket (ascending).
+    upper: Vec<i32>,
+    /// Edge-weight share of each bucket (sums to 1 when edges exist).
+    frac: Vec<f64>,
+    /// Weighted mean child degree of each bucket.
+    mean: Vec<f64>,
+    /// `[n, Q]` per-node neighbor counts per bucket.
+    hist: Vec<u32>,
+}
+
+impl DegreeSummary {
+    /// Build the sketch: O(E log Q) once per graph (cache it via
+    /// [`Csr::degree_summary`]).
+    pub fn build(csr: &Csr) -> DegreeSummary {
+        let n = csr.n;
+        let q = SUMMARY_BUCKETS;
+        // weighted degree histogram: a degree-d node contributes weight d
+        // (it is the endpoint of d edges)
+        let mut by_degree: Vec<(i32, u64)> = Vec::new();
+        {
+            let mut degs: Vec<i32> =
+                (0..n as i32).map(|u| csr.degree(u)).filter(|&d| d > 0).collect();
+            degs.sort_unstable();
+            for d in degs {
+                match by_degree.last_mut() {
+                    Some((dv, w)) if *dv == d => *w += d as u64,
+                    _ => by_degree.push((d, d as u64)),
+                }
+            }
+        }
+        let total: u64 = by_degree.iter().map(|&(_, w)| w).sum();
+        // bucket upper bounds at the cumulative-weight quantiles
+        let mut upper = vec![0i32; q];
+        let mut acc = 0u64;
+        let mut vi = 0usize;
+        for (b, up) in upper.iter_mut().enumerate().take(q - 1) {
+            let target = total as u128 * (b as u128 + 1) / q as u128;
+            while vi < by_degree.len() && (acc as u128) < target {
+                acc += by_degree[vi].1;
+                vi += 1;
+            }
+            *up = if vi > 0 { by_degree[vi - 1].0 } else { 0 };
+        }
+        upper[q - 1] = by_degree.last().map(|&(d, _)| d).unwrap_or(0);
+        let bucket_of = |d: i32| -> usize {
+            upper.partition_point(|&u| u < d).min(q - 1)
+        };
+        // per-bucket weight share and mean degree
+        let mut wsum = vec![0.0f64; q];
+        let mut dsum = vec![0.0f64; q];
+        for &(d, w) in &by_degree {
+            let b = bucket_of(d);
+            wsum[b] += w as f64;
+            dsum[b] += w as f64 * d as f64;
+        }
+        let frac: Vec<f64> = wsum
+            .iter()
+            .map(|&w| if total > 0 { w / total as f64 } else { 0.0 })
+            .collect();
+        let mean: Vec<f64> = wsum
+            .iter()
+            .zip(&dsum)
+            .map(|(&w, &dw)| if w > 0.0 { dw / w } else { 0.0 })
+            .collect();
+        // per-node neighbor histogram over the buckets
+        let mut hist = vec![0u32; n * q];
+        for u in 0..n as i32 {
+            let row = &mut hist[u as usize * q..(u as usize + 1) * q];
+            for &v in csr.neighbors(u) {
+                let dv = csr.degree(v);
+                if dv > 0 {
+                    row[bucket_of(dv)] += 1;
+                }
+            }
+        }
+        DegreeSummary { upper, frac, mean, hist }
+    }
+
+    /// Global `E[min(deg(child), k)]` over the edge-weighted child-degree
+    /// distribution (the expected effective fanout of one draw at hops
+    /// deep enough that per-node information has washed out).
+    pub fn expected_child_min(&self, k: usize) -> f64 {
+        self.frac
+            .iter()
+            .zip(&self.mean)
+            .map(|(&f, &m)| f * m.min(k as f64))
+            .sum()
+    }
+
+    /// `E[min(deg(child), k)]` restricted to `u`'s own neighbor list —
+    /// the per-node term that separates a hub ringed by leaves from a
+    /// node wired into a dense core. Falls back to the global expectation
+    /// for isolated nodes.
+    pub fn node_child_min(&self, u: usize, k: usize) -> f64 {
+        let q = self.mean.len();
+        let row = &self.hist[u * q..(u + 1) * q];
+        let total: u32 = row.iter().sum();
+        if total == 0 {
+            return self.expected_child_min(k);
+        }
+        let kf = k as f64;
+        row.iter()
+            .zip(&self.mean)
+            .map(|(&c, &m)| c as f64 * m.min(kf))
+            .sum::<f64>()
+            / total as f64
+    }
+
+    /// Bucket upper bounds (tests / diagnostics).
+    pub fn bucket_uppers(&self) -> &[i32] {
+        &self.upper
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ShardStats — measured per-shard wall time (the feedback signal)
+// ---------------------------------------------------------------------------
+
+/// Per-shard wall time and planned cost of one sharded pass (one fused
+/// kernel call, or one level of a parallel block build). Shard `j` is the
+/// slice worker `j` executed; empty shards carry zeros.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardStats {
+    /// Measured wall-clock per shard, ms.
+    pub shard_ms: Vec<f64>,
+    /// Planned cost per shard (the planner's own units).
+    pub shard_cost: Vec<u64>,
+}
+
+impl ShardStats {
+    pub fn new(shard_ms: Vec<f64>, shard_cost: Vec<u64>) -> ShardStats {
+        debug_assert_eq!(shard_ms.len(), shard_cost.len());
+        ShardStats { shard_ms, shard_cost }
+    }
+
+    /// No sharded pass recorded (serial execution).
+    pub fn is_empty(&self) -> bool {
+        self.shard_ms.is_empty()
+    }
+
+    /// Slowest shard, ms (idle shards are 0).
+    pub fn max_ms(&self) -> f64 {
+        self.shard_ms.iter().fold(0.0, |m, &ms| m.max(ms))
+    }
+
+    /// Mean over *all planned* shards, ms — the per-worker time a
+    /// perfectly balanced plan would have achieved. Idle (empty) shards
+    /// count: a plan that leaves workers idle is an imbalanced plan.
+    pub fn mean_ms(&self) -> f64 {
+        let parts = self.shard_ms.len();
+        if parts == 0 {
+            return 0.0;
+        }
+        self.shard_ms.iter().sum::<f64>() / parts as f64
+    }
+
+    /// Measured imbalance ratio of this pass: slowest shard over the
+    /// balanced ideal (`max / (total / parts)`, ≥ 1). 1.0 is a perfectly
+    /// balanced pass; the serial (unsharded) case also reports 1.0 by
+    /// convention. A plan that starves workers (empty shards) scores
+    /// high, not low — exactly the planner failure the metric guards.
+    pub fn imbalance(&self) -> f64 {
+        let ideal = self.mean_ms();
+        if ideal <= 0.0 || self.shard_ms.len() < 2 {
+            return 1.0;
+        }
+        self.max_ms() / ideal
+    }
+}
+
+/// Aggregate of several sharded passes (the levels of one block build,
+/// or every step in a measurement window). Passes may plan different
+/// worker counts, so per-shard vectors are *not* summed elementwise;
+/// instead each pass contributes its critical path (`max_ms`) and its
+/// balanced ideal (`mean_ms`), and the aggregate imbalance is
+/// `Σ critical / Σ ideal` — the measured wall clock of the sharded work
+/// over what perfect balance would have cost.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ImbalanceAcc {
+    crit_ms: f64,
+    ideal_ms: f64,
+    passes: usize,
+}
+
+impl ImbalanceAcc {
+    /// Fold one sharded pass in.
+    pub fn add(&mut self, stats: &ShardStats) {
+        if stats.is_empty() {
+            return;
+        }
+        self.add_pass(stats.max_ms(), stats.mean_ms());
+    }
+
+    /// Fold one pass given its critical-path and balanced-ideal ms (for
+    /// callers that never materialize a [`ShardStats`]).
+    pub fn add_pass(&mut self, crit_ms: f64, ideal_ms: f64) {
+        self.crit_ms += crit_ms;
+        self.ideal_ms += ideal_ms;
+        self.passes += 1;
+    }
+
+    /// No pass recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.passes == 0
+    }
+
+    /// `Σ critical / Σ ideal` over the recorded passes (1.0 when nothing
+    /// was recorded or the timers were below resolution).
+    pub fn imbalance(&self) -> f64 {
+        if self.ideal_ms <= 0.0 {
+            return 1.0;
+        }
+        self.crit_ms / self.ideal_ms
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CostModel — the planner
+// ---------------------------------------------------------------------------
+
+/// Fixed-point scale for expected (fractional) costs; plans only care
+/// about relative weight, so 1/16-row-add resolution is plenty.
+pub const COST_SCALE: u64 = 16;
+
+/// EWMA factor for the adaptive planner's per-worker throughput blend.
+const FEEDBACK_ALPHA: f64 = 0.3;
+/// Clamp on a worker's relative speed weight (keeps one noisy
+/// measurement from starving a worker).
+const FEEDBACK_CLAMP: (f64, f64) = (0.25, 4.0);
+
+/// A planner for one `(graph, fanouts)` configuration: turns frontier
+/// rows into costs and costs into contiguous shard plans. Cheap to build
+/// (the degree summary is cached on the [`Csr`]); hold one per training
+/// session so the adaptive flavor can accumulate feedback.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    choice: PlannerChoice,
+    ks: Vec<usize>,
+    /// Nominal integer subtree weight below one hop-0 draw.
+    wb_nominal: u64,
+    /// Degree sketch (quantile/adaptive only).
+    summary: Option<Arc<DegreeSummary>>,
+    /// Expected subtree rooted at a hop-1 draw (`sub(2)` in the module
+    /// docs; 1.0 at depth ≤ 2).
+    sub2: f64,
+    /// Adaptive: per-worker relative speed (empty = uniform).
+    weights: Vec<f64>,
+}
+
+impl CostModel {
+    pub fn new(csr: &Csr, fanouts: &Fanouts,
+               choice: PlannerChoice) -> CostModel {
+        let ks = fanouts.as_slice().to_vec();
+        let wb_nominal = nominal_subtree_weight(&ks);
+        let (summary, sub2) = match choice {
+            PlannerChoice::Nominal => (None, 1.0),
+            _ => {
+                let s = csr.degree_summary();
+                // fold expected effective fanouts innermost-first:
+                // sub(L) = 1; sub(l) = 1 + ebar(k_l) * sub(l+1), down to
+                // sub(2) — hops 0 and 1 use per-node terms instead.
+                let mut sub = 1.0f64;
+                for &k in ks.iter().skip(2).rev() {
+                    sub = 1.0 + s.expected_child_min(k) * sub;
+                }
+                (Some(s), sub)
+            }
+        };
+        CostModel { choice, ks, wb_nominal, summary, sub2, weights: Vec::new() }
+    }
+
+    pub fn choice(&self) -> PlannerChoice {
+        self.choice
+    }
+
+    /// Planner cost of the full sampling subtree under one seed row.
+    /// Nominal reproduces the legacy arithmetic bit-for-bit; quantile /
+    /// adaptive charge expected row-adds (fixed-point, ×[`COST_SCALE`]).
+    /// Guarded for every depth ≥ 1 and for invalid / isolated rows.
+    pub fn seed_cost(&self, csr: &Csr, node: i32) -> u64 {
+        let k0 = self.ks.first().copied().unwrap_or(0);
+        match (self.choice, &self.summary) {
+            (PlannerChoice::Nominal, _) | (_, None) => {
+                1 + (sample_cost(csr, node, k0) - 1) * self.wb_nominal
+            }
+            (_, Some(s)) => {
+                if node < 0 || node as usize >= csr.n {
+                    return COST_SCALE;
+                }
+                let deg = csr.degree(node);
+                if deg == 0 {
+                    return COST_SCALE;
+                }
+                let m0 = (deg as usize).min(k0) as f64;
+                let c = if self.ks.len() == 1 {
+                    1.0 + m0
+                } else {
+                    let e1 = s.node_child_min(node as usize, self.ks[1]);
+                    1.0 + m0 * (1.0 + e1 * self.sub2)
+                };
+                ((c * COST_SCALE as f64).round() as u64).max(1)
+            }
+        }
+    }
+
+    /// Planner cost of sampling one frontier row at hop `hop` (the
+    /// parallel block sampler's per-level unit). At this granularity the
+    /// degree-aware cost is already *exact* — a row's work is its own
+    /// `1 + min(deg, k)` draws, with no subtree below it in the same
+    /// tensor — so every flavor shares it; the flavors differ in the cut
+    /// targets ([`CostModel::plan`]).
+    pub fn frontier_cost(&self, csr: &Csr, node: i32, hop: usize) -> u64 {
+        let k = self.ks.get(hop).copied().unwrap_or(0);
+        sample_cost(csr, node, k)
+    }
+
+    /// Cut `costs` into at most `parts` contiguous shards. Adaptive
+    /// applies the measured per-worker speed weights; the others use
+    /// plain cost quantiles.
+    pub fn plan(&self, costs: &[u64], parts: usize) -> Vec<Range<usize>> {
+        if self.choice == PlannerChoice::Adaptive
+            && self.weights.len() == parts
+        {
+            return plan_shards_weighted(costs, parts, &self.weights);
+        }
+        plan_shards(costs, parts)
+    }
+
+    /// Fold one step's measured per-shard throughput into the adaptive
+    /// weights (no-op for the other flavors). Shard `j` feeds worker
+    /// `j`'s EWMA of cost-units per ms; weights are normalized to mean 1
+    /// and clamped so the next plan's cut targets shift toward the
+    /// faster workers.
+    pub fn observe(&mut self, stats: &ShardStats) {
+        if self.choice != PlannerChoice::Adaptive || stats.is_empty() {
+            return;
+        }
+        let parts = stats.shard_ms.len().min(stats.shard_cost.len());
+        if self.weights.len() != parts {
+            self.weights = vec![1.0; parts];
+        }
+        // per-shard throughput, normalized to this step's mean
+        let mut tp = vec![0.0f64; parts];
+        let (mut sum, mut cnt) = (0.0f64, 0usize);
+        for j in 0..parts {
+            if stats.shard_cost[j] > 0 && stats.shard_ms[j] > 0.0 {
+                tp[j] = stats.shard_cost[j] as f64 / stats.shard_ms[j];
+                sum += tp[j];
+                cnt += 1;
+            }
+        }
+        if cnt < 2 {
+            return;
+        }
+        let mean_tp = sum / cnt as f64;
+        for j in 0..parts {
+            if tp[j] > 0.0 {
+                let rel = tp[j] / mean_tp;
+                let w = (1.0 - FEEDBACK_ALPHA) * self.weights[j]
+                    + FEEDBACK_ALPHA * rel;
+                self.weights[j] = w.clamp(FEEDBACK_CLAMP.0, FEEDBACK_CLAMP.1);
+            }
+        }
+    }
+
+    /// Current adaptive per-worker weights (diagnostics / tests).
+    pub fn worker_weights(&self) -> &[f64] {
+        &self.weights
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{builtin_spec, Dataset};
+
+    fn tiny_graph() -> Csr {
+        Dataset::generate(builtin_spec("tiny").unwrap()).unwrap().graph
+    }
+
+    #[test]
+    fn planner_choice_parses_and_round_trips() {
+        for s in ["nominal", "quantile", "adaptive"] {
+            assert_eq!(PlannerChoice::parse(s).unwrap().as_str(), s);
+        }
+        assert!(PlannerChoice::parse("bogus").is_err());
+        assert_eq!(PlannerChoice::default(), PlannerChoice::Quantile);
+    }
+
+    #[test]
+    fn nominal_weight_guards_short_fanouts() {
+        // the old kernel helper panicked on these; the guard returns the
+        // degenerate one-row-add-per-draw weight instead
+        assert_eq!(nominal_subtree_weight(&[]), 1);
+        assert_eq!(nominal_subtree_weight(&[7]), 1);
+        assert_eq!(nominal_subtree_weight(&[5, 3]), 4);
+        assert_eq!(nominal_subtree_weight(&[5, 3, 2]), 10); // 1 + 3*(1+2)
+    }
+
+    #[test]
+    fn summary_fractions_and_expectations_are_sane() {
+        let csr = tiny_graph();
+        let s = DegreeSummary::build(&csr);
+        let total: f64 = s.frac.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "bucket mass {total}");
+        // E[min(deg, k)] is monotone in k and bounded by the mean degree
+        let mut last = 0.0;
+        for k in [1usize, 2, 4, 8, 1024] {
+            let e = s.expected_child_min(k);
+            assert!(e >= last - 1e-12, "not monotone at k={k}");
+            assert!(e <= k as f64 + 1e-12);
+            last = e;
+        }
+        // with a huge k the min never binds: expectation = edge-weighted
+        // mean degree ≥ plain mean degree
+        let mean_deg = csr.num_edges() as f64 / csr.n as f64;
+        assert!(s.expected_child_min(1 << 20) >= mean_deg * 0.99);
+        // per-node expectations stay within the same bounds
+        for u in 0..csr.n {
+            let e = s.node_child_min(u, 4);
+            assert!((0.0..=4.0).contains(&e), "node {u}: {e}");
+        }
+    }
+
+    #[test]
+    fn nominal_costs_reproduce_legacy_arithmetic() {
+        let csr = tiny_graph();
+        let fo = Fanouts::of(&[5, 3, 2]);
+        let m = CostModel::new(&csr, &fo, PlannerChoice::Nominal);
+        let wb = nominal_subtree_weight(fo.as_slice());
+        for u in [-1i32, 0, 7, 100, 511] {
+            assert_eq!(m.seed_cost(&csr, u),
+                       1 + (sample_cost(&csr, u, 5) - 1) * wb);
+        }
+    }
+
+    #[test]
+    fn quantile_costs_are_positive_and_depth_aware() {
+        let csr = tiny_graph();
+        let shallow = CostModel::new(&csr, &Fanouts::of(&[5]),
+                                     PlannerChoice::Quantile);
+        let deep = CostModel::new(&csr, &Fanouts::of(&[5, 3, 2]),
+                                  PlannerChoice::Quantile);
+        assert_eq!(shallow.seed_cost(&csr, -1), COST_SCALE);
+        for u in 0..csr.n as i32 {
+            let cs = shallow.seed_cost(&csr, u);
+            let cd = deep.seed_cost(&csr, u);
+            assert!(cs >= 1 && cd >= cs,
+                    "node {u}: depth-1 {cs} vs depth-3 {cd}");
+        }
+    }
+
+    #[test]
+    fn shard_stats_imbalance_counts_idle_workers() {
+        let s = ShardStats::default();
+        assert!(s.is_empty());
+        assert_eq!(s.imbalance(), 1.0);
+        let balanced = ShardStats::new(vec![2.0, 2.0], vec![10, 10]);
+        assert!((balanced.imbalance() - 1.0).abs() < 1e-12);
+        // a plan that leaves half the workers idle is 2x off ideal even
+        // though the live shards match each other exactly
+        let idle = ShardStats::new(vec![3.0, 3.0, 0.0, 0.0],
+                                   vec![10, 10, 0, 0]);
+        assert_eq!(idle.max_ms(), 3.0);
+        assert!((idle.mean_ms() - 1.5).abs() < 1e-12);
+        assert!((idle.imbalance() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_acc_aggregates_passes_of_different_widths() {
+        let mut acc = ImbalanceAcc::default();
+        assert!(acc.is_empty());
+        assert_eq!(acc.imbalance(), 1.0);
+        // two perfectly balanced passes with different worker counts
+        // must aggregate to 1.0 (no phantom imbalance from widths)
+        acc.add(&ShardStats::new(vec![4.0, 4.0], vec![5, 5]));
+        acc.add(&ShardStats::new(vec![1.0; 8], vec![2; 8]));
+        assert!((acc.imbalance() - 1.0).abs() < 1e-12, "{acc:?}");
+        // a pass using 1 of 4 workers drags the aggregate up:
+        // crit += 4, ideal += 1
+        acc.add(&ShardStats::new(vec![4.0, 0.0, 0.0, 0.0], vec![9, 0, 0, 0]));
+        // totals: crit = 4 + 1 + 4 = 9, ideal = 4 + 1 + 1 = 6
+        assert!((acc.imbalance() - 1.5).abs() < 1e-12, "{acc:?}");
+        assert!(!acc.is_empty());
+        acc.add(&ShardStats::default()); // empty pass is a no-op
+        assert!((acc.imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adaptive_feedback_moves_weights_toward_fast_workers() {
+        let csr = tiny_graph();
+        let fo = Fanouts::of(&[5, 3]);
+        let mut m = CostModel::new(&csr, &fo, PlannerChoice::Adaptive);
+        // worker 0 is twice as fast (same cost in half the time)
+        for _ in 0..20 {
+            m.observe(&ShardStats::new(vec![1.0, 2.0], vec![100, 100]));
+        }
+        let w = m.worker_weights();
+        assert_eq!(w.len(), 2);
+        assert!(w[0] > 1.2 && w[1] < 0.9, "weights {w:?}");
+        // weighted plan hands worker 0 the bigger contiguous range
+        let costs = vec![1u64; 100];
+        let plan = m.plan(&costs, 2);
+        assert_eq!(plan.len(), 2);
+        assert!(plan[0].len() > 55, "plan {plan:?}");
+        assert_eq!(plan[0].end, plan[1].start);
+        assert_eq!(plan[1].end, 100);
+        // non-adaptive flavors ignore feedback entirely
+        let mut q = CostModel::new(&csr, &fo, PlannerChoice::Quantile);
+        q.observe(&ShardStats::new(vec![1.0, 2.0], vec![100, 100]));
+        assert!(q.worker_weights().is_empty());
+    }
+}

@@ -5,11 +5,16 @@
 //! because the AOT-compiled executables have static shapes — `col` is padded
 //! to `e_cap` and `rowptr` never points into the pad (DESIGN.md §6).
 
+pub mod cost;
 pub mod shard;
+
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, ensure, Result};
 
-pub use shard::{plan_frontier_shards, plan_shards, sample_cost};
+pub use cost::{CostModel, DegreeSummary, ImbalanceAcc, PlannerChoice,
+               ShardStats};
+pub use shard::{plan_shards, plan_shards_weighted, sample_cost};
 
 /// Compressed sparse row adjacency with a padded edge capacity.
 #[derive(Clone, Debug)]
@@ -20,9 +25,28 @@ pub struct Csr {
     pub rowptr: Vec<i32>,
     /// Column indices, padded with 0 beyond `rowptr[n]` up to `e_cap`.
     pub col: Vec<i32>,
+    /// Lazily built degree-quantile sketch for the cost planner
+    /// ([`Csr::degree_summary`]); cloning a `Csr` shares the built
+    /// summary via the `Arc`.
+    summary: OnceLock<Arc<DegreeSummary>>,
 }
 
 impl Csr {
+    /// Assemble from raw parts (tests / fixtures); [`Csr::from_edges`] is
+    /// the validated constructor.
+    pub fn new(n: usize, rowptr: Vec<i32>, col: Vec<i32>) -> Csr {
+        Csr { n, rowptr, col, summary: OnceLock::new() }
+    }
+
+    /// The graph's degree-quantile sketch, built on first use and cached
+    /// for the lifetime of the `Csr` (the planner's per-dataset
+    /// precompute — the `Runtime::graph_bufs` reuse pattern).
+    pub fn degree_summary(&self) -> Arc<DegreeSummary> {
+        self.summary
+            .get_or_init(|| Arc::new(DegreeSummary::build(self)))
+            .clone()
+    }
+
     /// Build from a directed edge list. When `symmetrize` is set both
     /// directions are inserted (the paper makes all graphs undirected, §5);
     /// parallel edges and self-loops are removed either way.
@@ -58,7 +82,7 @@ impl Csr {
         for (i, &(_, v)) in all.iter().enumerate() {
             col[i] = v as i32;
         }
-        let csr = Csr { n, rowptr, col };
+        let csr = Csr::new(n, rowptr, col);
         csr.validate()?;
         Ok(csr)
     }

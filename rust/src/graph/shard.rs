@@ -31,14 +31,49 @@ pub fn sample_cost(csr: &Csr, node: i32, k: usize) -> u64 {
 
 /// Cut `costs` into at most `parts` contiguous ranges of near-equal total
 /// cost. The ranges are ordered and cover `0..costs.len()` exactly; some
-/// may be empty when the distribution is extremely skewed.
+/// may be empty when the distribution is extremely skewed. Prefix sums
+/// accumulate in u128, so totals near (or past) `u64::MAX` plan without
+/// truncation.
 pub fn plan_shards(costs: &[u64], parts: usize) -> Vec<Range<usize>> {
+    plan_with_targets(costs, parts, |total, j, parts| {
+        total * j as u128 / parts as u128
+    })
+}
+
+/// [`plan_shards`] with per-part speed weights (the adaptive planner's
+/// measured-throughput blend): part `j` is targeted at a cost share
+/// proportional to `weights[j]`. Non-finite, non-positive, or
+/// wrong-length weights degrade to the unweighted quantile cuts.
+pub fn plan_shards_weighted(costs: &[u64], parts: usize,
+                            weights: &[f64]) -> Vec<Range<usize>> {
+    if weights.len() != parts
+        || weights.iter().any(|w| !w.is_finite() || *w <= 0.0)
+    {
+        return plan_shards(costs, parts);
+    }
+    let wsum: f64 = weights.iter().sum();
+    // cumulative weight share before each cut j (cut j separates parts
+    // j-1 and j, so it accumulates weights[..j])
+    let mut cum = vec![0.0f64; parts];
+    for j in 1..parts {
+        cum[j] = cum[j - 1] + weights[j - 1];
+    }
+    plan_with_targets(costs, parts, move |total, j, _| {
+        ((total as f64) * (cum[j] / wsum)) as u128
+    })
+}
+
+/// Shared quantile-cut body: `target(total, j, parts)` names the prefix
+/// cost at which cut `j` (1-based, `1..parts`) should land.
+fn plan_with_targets(costs: &[u64], parts: usize,
+                     target: impl Fn(u128, usize, usize) -> u128)
+                     -> Vec<Range<usize>> {
     let n = costs.len();
     let parts = parts.max(1);
     if parts == 1 || n <= 1 {
         return vec![0..n];
     }
-    let total: u64 = costs.iter().sum();
+    let total: u128 = costs.iter().map(|&c| c as u128).sum();
     if total == 0 {
         // degenerate (all-zero costs): fall back to an even row split
         let step = (n + parts - 1) / parts;
@@ -46,34 +81,29 @@ pub fn plan_shards(costs: &[u64], parts: usize) -> Vec<Range<usize>> {
             .map(|j| (j * step).min(n)..((j + 1) * step).min(n))
             .collect();
     }
-    // prefix[i] = sum of costs[..i]; cut j at the first index whose prefix
-    // reaches the j-th cost quantile
+    // prefix[i] = sum of costs[..i]; cut j at the index whose prefix is
+    // *nearest* the j-th cost quantile. Nearest (not first-reaching)
+    // matters when one giant row sits at the end of the range: its prefix
+    // jump would otherwise swallow every cut before it and the giant row
+    // would be packed together with the whole preceding range.
     let mut prefix = Vec::with_capacity(n + 1);
-    prefix.push(0u64);
+    prefix.push(0u128);
     for &c in costs {
-        prefix.push(prefix.last().unwrap() + c);
+        prefix.push(prefix.last().unwrap() + c as u128);
     }
     let mut cuts = Vec::with_capacity(parts + 1);
     cuts.push(0usize);
     for j in 1..parts {
-        let target = (total as u128 * j as u128 / parts as u128) as u64;
-        let cut = prefix.partition_point(|&p| p < target);
+        let t = target(total, j, parts);
+        let mut cut = prefix.partition_point(|&p| p < t);
+        if cut > 0 && cut <= n && t - prefix[cut - 1] < prefix[cut] - t {
+            cut -= 1;
+        }
         let lo = *cuts.last().unwrap();
         cuts.push(cut.clamp(lo, n));
     }
     cuts.push(n);
     cuts.windows(2).map(|w| w[0]..w[1]).collect()
-}
-
-/// Plan shards for a frontier using the degree-aware cost model.
-pub fn plan_frontier_shards(csr: &Csr, frontier: &[i32], k: usize,
-                            parts: usize) -> Vec<Range<usize>> {
-    if parts <= 1 || frontier.len() <= 1 {
-        return vec![0..frontier.len()];
-    }
-    let costs: Vec<u64> =
-        frontier.iter().map(|&u| sample_cost(csr, u, k)).collect();
-    plan_shards(&costs, parts)
 }
 
 #[cfg(test)]
@@ -130,12 +160,15 @@ mod tests {
 
     #[test]
     fn frontier_plan_balances_star_graph() {
-        // star: node 0 is a hub (deg 63), leaves have deg 1
+        // star: node 0 is a hub (deg 63), leaves have deg 1 — the
+        // per-level cost + quantile-cut path the sampler runs
         let edges: Vec<(u32, u32)> = (1..64u32).map(|i| (0, i)).collect();
         let csr = Csr::from_edges(64, &edges, 256, true).unwrap();
         let frontier: Vec<i32> = (0..64).collect();
         let k = 16;
-        let shards = plan_frontier_shards(&csr, &frontier, k, 4);
+        let costs: Vec<u64> =
+            frontier.iter().map(|&u| sample_cost(&csr, u, k)).collect();
+        let shards = plan_shards(&costs, 4);
         assert_covering(&shards, 64);
         let cost_of = |r: &Range<usize>| -> u64 {
             frontier[r.clone()].iter().map(|&u| sample_cost(&csr, u, k)).sum()

@@ -29,6 +29,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::fanout::Fanouts;
 use crate::gen::Dataset;
+use crate::graph::{CostModel, PlannerChoice, ShardStats};
 use crate::memory::MemoryMeter;
 use crate::metrics::Timer;
 use crate::runtime::backend::{Backend, StepInputs, StepOutcome};
@@ -75,15 +76,21 @@ pub struct NativeConfig {
     pub seed: u64,
     /// Worker threads for the kernel's batch sharding (0 = auto).
     pub threads: usize,
+    /// Shard-planner flavor for the fused kernel's batch sharding (the
+    /// `--planner` knob; outputs are bitwise identical under every
+    /// flavor, only shard cuts — and therefore balance — move).
+    pub planner: PlannerChoice,
     pub hidden: usize,
 }
 
-/// Native CPU training engine; owns the model/optimizer state.
+/// Native CPU training engine; owns the model/optimizer state (and the
+/// shard-planner cost model, so adaptive feedback persists across steps).
 pub struct NativeBackend {
     cfg: NativeConfig,
     ds: Arc<Dataset>,
     feat: Features,
     adamw: AdamwConfig,
+    cost: CostModel,
     params: Vec<Vec<f32>>,
     m: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
@@ -100,10 +107,18 @@ impl NativeBackend {
         } else {
             dgl_param_specs(d, cfg.hidden, c, cfg.fanouts.depth())
         };
+        // the baseline variant never plans subtrees (its blocks are
+        // sharded per level by the sampler), so build the sketch-free
+        // nominal model there — the flavor only matters on the fused path
+        let cost = CostModel::new(&ds.graph, &cfg.fanouts, if cfg.fused {
+            cfg.planner
+        } else {
+            PlannerChoice::Nominal
+        });
         let params = init_params(&specs, cfg.seed);
         let m = params.iter().map(|p| vec![0.0; p.len()]).collect();
         let v = params.iter().map(|p| vec![0.0; p.len()]).collect();
-        Ok(NativeBackend { cfg, ds, feat, adamw, params, m, v })
+        Ok(NativeBackend { cfg, ds, feat, adamw, cost, params, m, v })
     }
 
     /// Current parameters (tests; canonical spec order).
@@ -142,26 +157,28 @@ impl NativeBackend {
     }
 
     /// Fused-variant loss and parameter gradients on one batch (also the
-    /// surface the gradient-parity tests drive).
+    /// surface the gradient-parity tests drive). The last element is the
+    /// kernel's per-shard timing (empty when it ran serially).
     pub fn fsa_loss_grads(&self, seeds: &[i32], labels: &[i32], base: u64,
                           meter: &mut MemoryMeter)
-                          -> Result<(f64, Vec<Vec<f32>>, u64)> {
+                          -> Result<(f64, Vec<Vec<f32>>, u64, ShardStats)> {
         ensure!(self.cfg.fused, "fsa_loss_grads on a baseline engine");
         let b = seeds.len();
         let (d, h, c) = (self.feat.d, self.cfg.hidden, self.ds.spec.c);
 
         // -- fused sample+aggregate (the kernel); `_saved` keeps the index
         // tensors alive for the whole step, like the device buffers would be
-        let out = fused::fused_khop(&self.ds.graph, &self.feat, seeds,
-                                    &self.cfg.fanouts, base,
-                                    self.cfg.save_indices, self.cfg.threads);
+        let out = fused::fused_khop_planned(
+            &self.ds.graph, &self.feat, seeds, &self.cfg.fanouts, base,
+            self.cfg.save_indices, self.cfg.threads, &self.cost);
         meter.alloc((b * d) as u64 * F32);
         if let Some(saved) = &out.saved {
             for s in saved {
                 meter.alloc(s.len() as u64 * I32);
             }
         }
-        let (agg, _saved, pairs) = (out.agg, out.saved, out.pairs);
+        let (agg, _saved, pairs, stats) =
+            (out.agg, out.saved, out.pairs, out.stats);
 
         // -- seed features + head
         let mut x_self = vec![0.0f32; b * d];
@@ -192,7 +209,7 @@ impl NativeBackend {
         matmul_at_b(&x_self, &dpre, &mut grads[0], b, d, h);
         matmul_at_b(&agg, &dpre, &mut grads[1], b, d, h);
         col_sum(&dpre, &mut grads[2], b, h);
-        Ok((loss, grads, pairs))
+        Ok((loss, grads, pairs, stats))
     }
 
     fn apply_adamw(&mut self, grads: &[Vec<f32>], step: usize) {
@@ -217,11 +234,15 @@ impl Backend for NativeBackend {
         // per-step host tensors handed to the engine
         meter.alloc((2 * b) as u64 * I32 + 8);
 
-        let (loss, pairs) = if self.cfg.fused {
-            let (loss, grads, pairs) =
+        let (loss, pairs, shard_stats) = if self.cfg.fused {
+            let (loss, grads, pairs, stats) =
                 self.fsa_loss_grads(inp.seeds, inp.labels, inp.base, meter)?;
             self.apply_adamw(&grads, step);
-            (loss, Some(pairs))
+            // adaptive flavor: fold this step's measured per-shard
+            // throughput into the next plan's cut targets
+            self.cost.observe(&stats);
+            (loss, Some(pairs),
+             (!stats.is_empty()).then_some(stats))
         } else {
             let Some(blk) = inp.block else {
                 bail!("native baseline step without a prepared block")
@@ -240,7 +261,7 @@ impl Backend for NativeBackend {
             baseline::backward(&fwd, blk, &self.params, &dlogits, h, c,
                                &mut grads, meter);
             self.apply_adamw(&grads, step);
-            (loss, None)
+            (loss, None, None)
         };
 
         Ok(StepOutcome {
@@ -249,6 +270,7 @@ impl Backend for NativeBackend {
             execute_ms: timer.ms(),
             post_ms: 0.0,
             pairs,
+            shard_stats,
         })
     }
 
@@ -265,9 +287,15 @@ impl Backend for NativeBackend {
         // exactly the fixed f15x10 protocol of the AOT eval artifacts.
         let ef = eval_fanouts(self.cfg.fanouts.depth());
         let logits = if self.cfg.fused {
-            let agg = fused::fused_khop(&self.ds.graph, &self.feat, seeds,
-                                        &ef, base, false,
-                                        self.cfg.threads).agg;
+            // eval fanouts differ from the training fanouts, so the
+            // session's cost model does not apply — but the *flavor*
+            // must: --planner nominal must not build the degree sketch
+            let model = CostModel::new(&self.ds.graph, &ef,
+                                       self.cfg.planner);
+            let agg = fused::fused_khop_planned(&self.ds.graph, &self.feat,
+                                                seeds, &ef, base, false,
+                                                self.cfg.threads,
+                                                &model).agg;
             let mut x_self = vec![0.0f32; b * d];
             for (i, &s) in seeds.iter().enumerate() {
                 self.feat.copy_row(s as usize, &mut x_self[i * d..(i + 1) * d]);
@@ -303,6 +331,7 @@ mod tests {
             save_indices: true,
             seed: 42,
             threads: 1,
+            planner: PlannerChoice::default(),
             hidden: 32,
         }
     }

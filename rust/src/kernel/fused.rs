@@ -19,12 +19,16 @@
 //! The gather is cache-blocked over the feature dimension
 //! ([`super::D_TILE`]): the accumulator tile stays L1-resident while the
 //! sampled rows stream through it. Batch rows are sharded across scoped
-//! workers with the degree-aware planner; each worker writes disjoint row
-//! ranges of every output, so results are bitwise identical at any thread
-//! count.
+//! workers with the expected-subtree cost planner
+//! ([`crate::graph::CostModel`]); each worker writes disjoint row ranges
+//! of every output, so results are bitwise identical at any thread count
+//! and under every planner flavor. Per-shard wall time is measured into
+//! [`FusedOut::stats`] — the feedback signal for the adaptive planner
+//! and the bench imbalance column.
 
 use crate::fanout::Fanouts;
-use crate::graph::{shard, Csr};
+use crate::graph::{CostModel, Csr, PlannerChoice, ShardStats};
+use crate::metrics::Timer;
 use crate::sampler::sample_neighbors;
 
 use super::{resolve_threads, Features, D_TILE, MIN_PAR_ROWS};
@@ -39,6 +43,10 @@ pub struct FusedOut {
     /// Valid (parent, child) draws — matches
     /// [`crate::sampler::fused_sampled_pairs`] exactly.
     pub pairs: u64,
+    /// Per-shard wall time + planned cost of this call's batch sharding
+    /// (empty when the kernel ran serially). Timing only — the outputs
+    /// above are bitwise independent of the plan.
+    pub stats: ShardStats,
 }
 
 /// Per-worker scratch: reused across the rows of one shard.
@@ -179,24 +187,36 @@ fn take_chunk<'a>(opt: &mut Option<&'a mut [i32]>, at: usize)
     })
 }
 
-/// Cost-model weight of the subtree hanging off one hop-0 draw:
-/// `1 + k2·(1 + k3·(…))` row adds per sampled hop-0 neighbor.
-fn subtree_weight(ks: &[usize]) -> u64 {
-    ks[1..].iter().rev().fold(1u64, |w, &k| 1 + k as u64 * w)
-}
-
 /// Fused L-hop sample+aggregate over a batch of seeds — the single
 /// depth-generic kernel (`fanouts.depth()` = 1 reproduces the old 1-hop
-/// kernel bitwise, depth 2 the old 2-hop kernel).
+/// kernel bitwise, depth 2 the old 2-hop kernel). Plans its batch shards
+/// with the default (quantile) cost model; long-lived callers should
+/// build one [`CostModel`] and use [`fused_khop_planned`] instead.
 pub fn fused_khop(csr: &Csr, feat: &Features, seeds: &[i32],
                   fanouts: &Fanouts, base: u64, save_indices: bool,
                   threads: usize) -> FusedOut {
+    let model = CostModel::new(csr, fanouts, PlannerChoice::default());
+    fused_khop_planned(csr, feat, seeds, fanouts, base, save_indices,
+                       threads, &model)
+}
+
+/// [`fused_khop`] with an explicit shard planner. The plan decides only
+/// *where* the contiguous seed-range cuts land — every worker writes a
+/// disjoint slice of every output and the counter RNG is
+/// order-independent, so `agg`/`saved`/`pairs` are bitwise identical
+/// under every [`CostModel`] flavor and thread count (pinned by
+/// `rust/tests/planner.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_khop_planned(csr: &Csr, feat: &Features, seeds: &[i32],
+                          fanouts: &Fanouts, base: u64, save_indices: bool,
+                          threads: usize, model: &CostModel) -> FusedOut {
     let b = seeds.len();
     let d = feat.d;
     let ks = fanouts.as_slice();
     let kprod = fanouts.cumulative();
     let mut agg = vec![0.0f32; b * d];
     let mut pairs = vec![0u64; b];
+    let mut stats = ShardStats::default();
     let mut saved_bufs: Vec<Vec<i32>> = if save_indices {
         kprod.iter().map(|&kp| vec![-1i32; b * kp]).collect()
     } else {
@@ -213,17 +233,20 @@ pub fn fused_khop(csr: &Csr, feat: &Features, seeds: &[i32],
             run_rows(csr, feat, seeds, ks, &kprod, base, &mut agg, &mut view,
                      &mut pairs);
         } else {
-            // cost model: each of the ≤k1 hop-0 draws triggers the whole
-            // nested row-add subtree below it
-            let wb = subtree_weight(ks);
-            let costs: Vec<u64> = seeds
+            // cost model: expected row-adds of the whole nested subtree
+            // below each seed (nominal flavor: full-fanout weights)
+            let costs: Vec<u64> =
+                seeds.iter().map(|&r| model.seed_cost(csr, r)).collect();
+            let plan = model.plan(&costs, workers);
+            let mut shard_ms = vec![0.0f64; plan.len()];
+            let shard_cost: Vec<u64> = plan
                 .iter()
-                .map(|&r| 1 + (shard::sample_cost(csr, r, ks[0]) - 1) * wb)
+                .map(|r| costs[r.clone()].iter().sum())
                 .collect();
-            let plan = shard::plan_shards(&costs, workers);
             std::thread::scope(|s| {
                 let mut agg_rest: &mut [f32] = &mut agg;
                 let mut pairs_rest: &mut [u64] = &mut pairs;
+                let mut ms_rest: &mut [f64] = &mut shard_ms;
                 let mut view_rest: Vec<Option<&mut [i32]>> =
                     view.iter_mut().map(|o| o.as_deref_mut()).collect();
                 for r in plan {
@@ -239,23 +262,30 @@ pub fn fused_khop(csr: &Csr, feat: &Features, seeds: &[i32],
                     let (pairs_c, tail) =
                         std::mem::take(&mut pairs_rest).split_at_mut(rows);
                     pairs_rest = tail;
+                    let (ms_c, tail) =
+                        std::mem::take(&mut ms_rest).split_at_mut(1);
+                    ms_rest = tail;
                     if rows == 0 {
                         continue;
                     }
                     let seed_c = &seeds[r];
                     let kprod_ref = &kprod;
                     s.spawn(move || {
+                        let t = Timer::start();
                         run_rows(csr, feat, seed_c, ks, kprod_ref, base,
                                  agg_c, &mut saved_c, pairs_c);
+                        ms_c[0] = t.ms();
                     });
                 }
             });
+            stats = ShardStats::new(shard_ms, shard_cost);
         }
     }
     FusedOut {
         agg,
         saved: save_indices.then_some(saved_bufs),
         pairs: pairs.iter().sum(),
+        stats,
     }
 }
 

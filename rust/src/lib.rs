@@ -21,7 +21,7 @@
 //! | [`rng`] | deterministic counter RNG (bitwise-identical to the kernel) |
 //! | [`fanout`] | the ordered per-hop [`fanout::Fanouts`] list (depth = L) |
 //! | [`json`] | minimal JSON parser/writer (manifest, configs) |
-//! | [`graph`] | CSR storage, builders, degree statistics |
+//! | [`graph`] | CSR storage, degree stats, expected-subtree shard planner |
 //! | [`gen`] | synthetic dataset registry (`arxiv_sim`, `reddit_sim`, …) |
 //! | [`sampler`] | host neighbor sampler + baseline block builder |
 //! | [`kernel`] | native CPU engine: fused + baseline step variants |

@@ -30,6 +30,7 @@ use fusesampleagg::coordinator::{profile, DatasetCache, TrainConfig, Trainer,
                                  Variant};
 use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::gen::{builtin_spec, Dataset};
+use fusesampleagg::graph::PlannerChoice;
 use fusesampleagg::memory::{self, StepDims};
 use fusesampleagg::metrics;
 use fusesampleagg::runtime::{BackendChoice, Manifest, Runtime};
@@ -78,10 +79,12 @@ SUBCOMMANDS
               --batch B [--steps N] [--warmup N] [--seed S] [--no-amp]
               [--eval] [--threads N] [--prefetch on|off]
               [--backend auto|native|pjrt]
+              [--planner nominal|quantile|adaptive]
   bench-grid  [--quick] [--depths] [--datasets a,b]
               [--fanouts 10x10,15x10,15x10x5] [--batches 512,1024]
               [--steps N] [--warmup N] [--out FILE] [--threads N]
               [--prefetch on|off] [--backend auto|native|pjrt]
+              [--planner nominal|quantile|adaptive]
   table       --which 1|2|3|fig1|fig2|fig3|fig4|fig5 [--csv FILE]
   profile     [--steps N] [--warmup N] [--seed S]      (Table 3)
   memory      --dataset NAME --fanout K1xK2[xK3...] --batch B
@@ -89,9 +92,10 @@ SUBCOMMANDS
   throughput  --dataset NAME [--fanout K1xK2[xK3...]] [--batch B]
               [--steps N] [--threads N] [--prefetch on|off]
               [--dispatch-ms X] [--sweep] [--backend emulated|native]
-              [--variant fsa|dgl]
-              host sampling/batch pipeline: steps/sec + utilization
-              (no artifacts needed; dispatch is emulated or native compute)
+              [--variant fsa|dgl] [--planner nominal|quantile|adaptive]
+              host sampling/batch pipeline: steps/sec + shard imbalance
+              + utilization (no artifacts needed; dispatch is emulated or
+              native compute)
   inspect     --artifact NAME | --list
 
 FANOUT SYNTAX
@@ -113,10 +117,21 @@ PIPELINE KNOBS
                     default 1); output is bitwise identical at any value
   --prefetch on     overlap host sampling of step t+1 with dispatch of
                     step t (double-buffered; default off)
+  --planner P       shard-planner cost model (default quantile):
+                      nominal   legacy full-fanout subtree weights
+                      quantile  degree-quantile expected-subtree costs
+                      adaptive  quantile + measured per-shard throughput
+                    outputs are bitwise identical under every flavor —
+                    only shard balance (reported as the imbalance
+                    column/ratio, max/mean worker ms) moves
 ";
 
 fn backend_choice(args: &Args) -> Result<BackendChoice> {
     BackendChoice::parse(&args.str_or("backend", "auto"))
+}
+
+fn planner_choice(args: &Args) -> Result<PlannerChoice> {
+    PlannerChoice::parse(&args.str_or("planner", "quantile"))
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
@@ -155,6 +170,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         threads: args.usize_or("threads", 1)?,
         prefetch: args.bool_or("prefetch", false)?,
         backend: backend_choice(args)?,
+        planner: planner_choice(args)?,
     };
     let steps = args.usize_or("steps", 30)?;
     let warmup = args.usize_or("warmup", 5)?;
@@ -170,10 +186,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let mut totals = Vec::new();
     let mut overlaps = Vec::new();
+    let mut imbalances = Vec::new();
     for s in 0..steps {
         let t = trainer.step()?;
         totals.push(t.total_ms());
         overlaps.push(t.sample_overlap_ms);
+        imbalances.push(t.imbalance);
         if s % 10 == 0 || s == steps - 1 {
             println!("step {s:>4}: {:.2} ms (sample {:.2} upload {:.2} exec \
                       {:.2}) loss {:.4}",
@@ -184,6 +202,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let summary = metrics::summarize(&totals);
     println!("median step {:.2} ms  (p10 {:.2}, p90 {:.2}, n={})",
              summary.median, summary.p10, summary.p90, summary.n);
+    if trainer.cfg.threads != 1 {
+        println!("shard imbalance (max/mean worker ms, planner {}): \
+                  median {:.2}",
+                 trainer.cfg.planner.as_str(),
+                 metrics::median(&imbalances));
+    }
     if trainer.cfg.prefetch {
         println!("prefetch: median {:.2} ms of host sampling overlapped \
                   off the critical path",
@@ -242,11 +266,18 @@ fn cmd_bench_grid(args: &Args) -> Result<()> {
     grid.threads = args.usize_or("threads", grid.threads)?;
     grid.prefetch = args.bool_or("prefetch", grid.prefetch)?;
     grid.backend = backend_choice(args)?;
+    grid.planner = planner_choice(args)?;
     if grid.threads != 1 || grid.prefetch {
         eprintln!("note: --threads/--prefetch change step_ms/sample_ms \
                    semantics and the CSV schema does not record them — \
                    rows are NOT comparable with paper-protocol runs; use \
                    `fsa throughput` for pipeline scaling measurements");
+    }
+    if grid.planner != PlannerChoice::default() {
+        eprintln!("note: the CSV schema does not record --planner either \
+                   (the imbalance column depends on it) — keep {} rows in \
+                   a separate file from quantile runs; BENCH_native.json \
+                   does record the flavor", grid.planner.as_str());
     }
 
     let out_path = match args.str_opt("out") {
@@ -270,7 +301,7 @@ fn cmd_bench_grid(args: &Args) -> Result<()> {
     // `fused_vs_baseline` bench — an ad-hoc grid must not overwrite it.
     if grid.backend == BackendChoice::Native {
         let json_path = util::results_dir().join("BENCH_native.json");
-        bench::write_native_json(&rows, &json_path)?;
+        bench::write_native_json(&rows, grid.planner, &json_path)?;
         println!("wrote native fused-vs-baseline summary to {}",
                  json_path.display());
     }
@@ -294,8 +325,9 @@ fn cmd_table(args: &Args) -> Result<()> {
         .with_context(|| format!("reading {csv:?} — run `fsa bench-grid` first"))?;
     if rows.is_empty() {
         bail!("{csv:?} contains no parseable rows — it may predate the \
-               depth-generic schema (the k1,k2 columns were replaced by a \
-               single fanout column); re-run `fsa bench-grid`");
+               current schema (the k1,k2 columns became a single fanout \
+               column, and an imbalance column was appended); re-run \
+               `fsa bench-grid`");
     }
     let text = match which.as_str() {
         "1" => render::table1(&rows),
@@ -404,6 +436,7 @@ fn cmd_throughput(args: &Args) -> Result<()> {
         variant,
         hidden,
         adamw,
+        planner: planner_choice(args)?,
         ..throughput::ThroughputConfig::new(&name)
     };
 

@@ -111,24 +111,28 @@ pub struct BenchRow {
     pub peak_transient_bytes: u64,
     /// Final training loss at the end of the timed window.
     pub loss: f64,
+    /// Median measured shard-imbalance ratio (max/mean per-shard wall
+    /// time of the step's sharded host pass; 1.0 = balanced or serial).
+    pub imbalance: f64,
 }
 
-pub const CSV_HEADER: &str = "dataset,variant,hops,fanout,batch,amp,repeat_seed,steps,step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,nodes_per_s,peak_transient_bytes,loss";
+pub const CSV_HEADER: &str = "dataset,variant,hops,fanout,batch,amp,repeat_seed,steps,step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,nodes_per_s,peak_transient_bytes,loss,imbalance";
 
 impl BenchRow {
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.1},{},{:.5}",
+            "{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.1},{},{:.5},{:.4}",
             self.dataset, self.variant, self.hops, self.fanout,
             self.batch, self.amp, self.repeat_seed, self.steps, self.step_ms,
             self.sample_ms, self.upload_ms, self.execute_ms, self.pairs_per_s,
-            self.nodes_per_s, self.peak_transient_bytes, self.loss
+            self.nodes_per_s, self.peak_transient_bytes, self.loss,
+            self.imbalance
         )
     }
 
     pub fn parse_csv(line: &str) -> Option<BenchRow> {
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 16 {
+        if f.len() != 17 {
             return None;
         }
         // `hops` is derivable from the fanout label; derive it so the two
@@ -152,6 +156,7 @@ impl BenchRow {
             nodes_per_s: f[13].parse().ok()?,
             peak_transient_bytes: f[14].parse().ok()?,
             loss: f[15].parse().ok()?,
+            imbalance: f[16].parse().ok()?,
         })
     }
 }
@@ -182,24 +187,28 @@ pub struct ThroughputRow {
     pub dispatch_ms: f64,
     /// Fraction of host sampling work hidden behind dispatch, in [0, 1].
     pub utilization: f64,
+    /// Median measured shard-imbalance ratio per step (max/mean per-shard
+    /// wall time; 1.0 = balanced or serial) — makes planner regressions
+    /// visible without a full bench run.
+    pub imbalance: f64,
 }
 
-pub const THROUGHPUT_CSV_HEADER: &str = "dataset,hops,fanout,batch,threads,prefetch,steps,steps_per_s,step_ms,sample_ms,overlap_ms,dispatch_ms,utilization";
+pub const THROUGHPUT_CSV_HEADER: &str = "dataset,hops,fanout,batch,threads,prefetch,steps,steps_per_s,step_ms,sample_ms,overlap_ms,dispatch_ms,utilization,imbalance";
 
 impl ThroughputRow {
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{:.4}",
+            "{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4}",
             self.dataset, self.hops, self.fanout, self.batch,
             self.threads, self.prefetch, self.steps, self.steps_per_s,
             self.step_ms, self.sample_ms, self.overlap_ms, self.dispatch_ms,
-            self.utilization
+            self.utilization, self.imbalance
         )
     }
 
     pub fn parse_csv(line: &str) -> Option<ThroughputRow> {
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 13 {
+        if f.len() != 14 {
             return None;
         }
         // derive hops from the fanout label (see BenchRow::parse_csv)
@@ -218,6 +227,7 @@ impl ThroughputRow {
             overlap_ms: f[10].parse().ok()?,
             dispatch_ms: f[11].parse().ok()?,
             utilization: f[12].parse().ok()?,
+            imbalance: f[13].parse().ok()?,
         })
     }
 }
@@ -286,6 +296,7 @@ pub fn median_over_repeats(rows: &[BenchRow]) -> Vec<BenchRow> {
                 peak_transient_bytes: med(|r| r.peak_transient_bytes as f64)
                     as u64,
                 loss: med(|r| r.loss),
+                imbalance: med(|r| r.imbalance),
             }
         })
         .collect()
@@ -337,6 +348,7 @@ mod tests {
             nodes_per_s: 1e4,
             peak_transient_bytes: 123456,
             loss: 2.0,
+            imbalance: 1.25,
         }
     }
 
@@ -349,6 +361,9 @@ mod tests {
         assert_eq!(parsed.repeat_seed, 42);
         assert!((parsed.step_ms - 1.25).abs() < 1e-9);
         assert_eq!(parsed.peak_transient_bytes, 123456);
+        assert!((parsed.imbalance - 1.25).abs() < 1e-9);
+        assert_eq!(CSV_HEADER.split(',').count(),
+                   row.to_csv().split(',').count());
     }
 
     #[test]
@@ -388,6 +403,7 @@ mod tests {
             overlap_ms: 5.5,
             dispatch_ms: 2.0,
             utilization: 0.96,
+            imbalance: 1.08,
         };
         let parsed = ThroughputRow::parse_csv(&row.to_csv()).unwrap();
         assert_eq!(parsed.dataset, "arxiv_sim");
@@ -395,6 +411,7 @@ mod tests {
         assert!(parsed.prefetch);
         assert!((parsed.steps_per_s - 123.45).abs() < 1e-6);
         assert!((parsed.utilization - 0.96).abs() < 1e-9);
+        assert!((parsed.imbalance - 1.08).abs() < 1e-9);
         assert_eq!(THROUGHPUT_CSV_HEADER.split(',').count(),
                    row.to_csv().split(',').count());
     }

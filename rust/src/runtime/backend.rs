@@ -92,6 +92,11 @@ pub struct StepOutcome {
     /// Sampled (seed, neighbor) pairs counted inside the dispatch, when
     /// the backend knows them for free (fused native kernels).
     pub pairs: Option<u64>,
+    /// Per-shard wall time/cost of the dispatch's batch sharding (native
+    /// fused kernel only; None when the backend does not shard on the
+    /// host). Feeds the measured-imbalance metrics and the adaptive
+    /// planner.
+    pub shard_stats: Option<crate::graph::ShardStats>,
 }
 
 /// One synchronized train-step executor. Implementations own the model and
@@ -338,7 +343,8 @@ impl Backend for PjrtBackend<'_> {
         };
         meter.alloc(analytic.intermediates + self.exe.spec.output_bytes());
 
-        Ok(StepOutcome { loss, upload_ms, execute_ms, post_ms, pairs: None })
+        Ok(StepOutcome { loss, upload_ms, execute_ms, post_ms, pairs: None,
+                         shard_stats: None })
     }
 
     fn params_f32(&self) -> Result<Vec<Vec<f32>>> {

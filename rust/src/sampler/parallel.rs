@@ -21,8 +21,11 @@
 //! well under the sampling work per shard. Tiny frontiers fall back to
 //! the serial path via [`MIN_ROWS_PER_WORKER`].
 
+use std::sync::{Arc, Mutex};
+
 use crate::fanout::Fanouts;
-use crate::graph::{shard, Csr};
+use crate::graph::{shard, CostModel, Csr, ImbalanceAcc, PlannerChoice};
+use crate::metrics::Timer;
 
 use super::{sample_neighbors, Block};
 
@@ -32,25 +35,50 @@ use super::{sample_neighbors, Block};
 pub const MIN_ROWS_PER_WORKER: usize = 64;
 
 /// A frontier sampler running on `threads` scoped workers.
+///
+/// Per-level planning uses the *exact* row cost `1 + min(deg, k)` (a
+/// frontier row's work is its own draws; there is no subtree below it in
+/// the same tensor — see [`CostModel::frontier_cost`]). Nominal and
+/// quantile plans are therefore identical here, so only the adaptive
+/// flavor routes through a [`CostModel`] (whose weighted cut targets the
+/// ROADMAP follow-on will feed from sampler stats). Every sharded pass
+/// contributes its wall time to an [`ImbalanceAcc`] drained by
+/// [`ParallelSampler::take_imbalance`] — the sampler half of the
+/// measured-imbalance feedback loop; passes of different worker counts
+/// (the levels of one block build) aggregate by
+/// critical-path-over-ideal, not by per-shard vectors.
 #[derive(Clone, Debug)]
 pub struct ParallelSampler {
     threads: usize,
+    planner: PlannerChoice,
+    /// Imbalance accumulator (`Arc`: clones share it, like the stats of
+    /// one pipeline stage).
+    stats: Arc<Mutex<ImbalanceAcc>>,
 }
 
 impl ParallelSampler {
     /// `threads == 0` selects the machine's available parallelism.
     pub fn new(threads: usize) -> Self {
+        Self::with_planner(threads, PlannerChoice::default())
+    }
+
+    /// [`ParallelSampler::new`] with an explicit planner flavor.
+    pub fn with_planner(threads: usize, planner: PlannerChoice) -> Self {
         let t = if threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             threads
         };
-        ParallelSampler { threads: t.max(1) }
+        ParallelSampler {
+            threads: t.max(1),
+            planner,
+            stats: Arc::new(Mutex::new(ImbalanceAcc::default())),
+        }
     }
 
     /// The serial sampler (1 worker) as a `ParallelSampler`.
     pub fn serial() -> Self {
-        ParallelSampler { threads: 1 }
+        Self::with_planner(1, PlannerChoice::default())
     }
 
     /// Configured worker count.
@@ -58,39 +86,113 @@ impl ParallelSampler {
         self.threads
     }
 
+    /// Drain the accumulated measured imbalance ratio (None when every
+    /// pass since the last drain ran serially).
+    pub fn take_imbalance(&self) -> Option<f64> {
+        let mut s = self.stats.lock().ok()?;
+        if s.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut *s).imbalance())
+        }
+    }
+
+    fn record(&self, shard_ms: &[f64]) {
+        let parts = shard_ms.len();
+        if parts == 0 {
+            return;
+        }
+        let crit = shard_ms.iter().fold(0.0f64, |m, &v| m.max(v));
+        let ideal = shard_ms.iter().sum::<f64>() / parts as f64;
+        if let Ok(mut s) = self.stats.lock() {
+            s.add_pass(crit, ideal);
+        }
+    }
+
     /// Workers actually worth spawning for a frontier of `rows` rows.
     fn workers_for(&self, rows: usize) -> usize {
         self.threads.min((rows / MIN_ROWS_PER_WORKER).max(1))
+    }
+
+    /// Run `fill(node, out_row)` over the planned contiguous shards of
+    /// `frontier`, each worker owning a disjoint `width`-column slice of
+    /// `out`; per-shard wall time is recorded into the accumulator.
+    fn run_plan<F>(&self, frontier: &[i32], width: usize, out: &mut [i32],
+                   plan: Vec<std::ops::Range<usize>>, fill: F)
+    where
+        F: Fn(i32, &mut [i32]) + Sync,
+    {
+        let mut shard_ms = vec![0.0f64; plan.len()];
+        std::thread::scope(|s| {
+            let mut rest: &mut [i32] = out;
+            let mut ms_rest: &mut [f64] = &mut shard_ms;
+            let fill = &fill;
+            for r in plan {
+                let take = (r.end - r.start) * width;
+                let slab = std::mem::take(&mut rest);
+                let (chunk, tail) = slab.split_at_mut(take);
+                rest = tail;
+                let (ms_c, tail) = std::mem::take(&mut ms_rest).split_at_mut(1);
+                ms_rest = tail;
+                let rows = &frontier[r];
+                if rows.is_empty() {
+                    continue;
+                }
+                s.spawn(move || {
+                    let t = Timer::start();
+                    for (i, &u) in rows.iter().enumerate() {
+                        fill(u, &mut chunk[i * width..(i + 1) * width]);
+                    }
+                    ms_c[0] = t.ms();
+                });
+            }
+        });
+        self.record(&shard_ms);
+    }
+
+    /// Plan one frontier level from the exact per-row cost
+    /// `1 + min(deg, k)`. With a model (the adaptive block path) the
+    /// costs and cuts route through it — today that produces identical
+    /// cuts (a fresh model has no worker weights); it is the hook the
+    /// sampler-feedback follow-on (ROADMAP) fills in.
+    fn level_plan(&self, csr: &Csr, frontier: &[i32], k: usize, hop: usize,
+                  workers: usize, model: Option<&CostModel>)
+                  -> Vec<std::ops::Range<usize>> {
+        let costs: Vec<u64> = match model {
+            Some(m) => frontier
+                .iter()
+                .map(|&u| m.frontier_cost(csr, u, hop))
+                .collect(),
+            None => frontier
+                .iter()
+                .map(|&u| shard::sample_cost(csr, u, k))
+                .collect(),
+        };
+        match model {
+            Some(m) => m.plan(&costs, workers),
+            None => shard::plan_shards(&costs, workers),
+        }
     }
 
     /// Parallel [`super::sample_frontier`]: row-major `[frontier.len(), k]`,
     /// -1 padded, bitwise identical to the serial path.
     pub fn sample_frontier(&self, csr: &Csr, frontier: &[i32], k: usize,
                            base: u64, hop: u64) -> Vec<i32> {
+        self.sample_frontier_planned(csr, frontier, k, base, hop, None)
+    }
+
+    fn sample_frontier_planned(&self, csr: &Csr, frontier: &[i32], k: usize,
+                               base: u64, hop: u64,
+                               model: Option<&CostModel>) -> Vec<i32> {
         let workers = self.workers_for(frontier.len());
         if workers == 1 || k == 0 {
             return super::sample_frontier(csr, frontier, k, base, hop);
         }
         let mut out = vec![-1i32; frontier.len() * k];
-        let plan = shard::plan_frontier_shards(csr, frontier, k, workers);
-        std::thread::scope(|s| {
-            let mut rest: &mut [i32] = &mut out;
-            for r in plan {
-                let take = (r.end - r.start) * k;
-                let slab = std::mem::take(&mut rest);
-                let (chunk, tail) = slab.split_at_mut(take);
-                rest = tail;
-                let rows = &frontier[r];
-                if rows.is_empty() {
-                    continue;
-                }
-                s.spawn(move || {
-                    for (i, &u) in rows.iter().enumerate() {
-                        sample_neighbors(csr, u, k, base, hop,
-                                         &mut chunk[i * k..(i + 1) * k]);
-                    }
-                });
-            }
+        let plan =
+            self.level_plan(csr, frontier, k, hop as usize, workers, model);
+        self.run_plan(frontier, k, &mut out, plan, |u, row| {
+            sample_neighbors(csr, u, k, base, hop, row);
         });
         out
     }
@@ -99,54 +201,52 @@ impl ParallelSampler {
     /// column 0 the node itself and columns 1.. its hop-`hop` samples.
     pub fn expand_frontier(&self, csr: &Csr, nodes: &[i32], k: usize,
                            base: u64, hop: u64) -> Vec<i32> {
+        self.expand_frontier_planned(csr, nodes, k, base, hop, None)
+    }
+
+    fn expand_frontier_planned(&self, csr: &Csr, nodes: &[i32], k: usize,
+                               base: u64, hop: u64,
+                               model: Option<&CostModel>) -> Vec<i32> {
         let w = 1 + k;
         let workers = self.workers_for(nodes.len());
         if workers == 1 {
             return super::expand_frontier(csr, nodes, k, base, hop);
         }
         let mut out = vec![-1i32; nodes.len() * w];
-        let plan = shard::plan_frontier_shards(csr, nodes, k, workers);
-        std::thread::scope(|s| {
-            let mut rest: &mut [i32] = &mut out;
-            for r in plan {
-                let take = (r.end - r.start) * w;
-                let slab = std::mem::take(&mut rest);
-                let (chunk, tail) = slab.split_at_mut(take);
-                rest = tail;
-                let rows = &nodes[r];
-                if rows.is_empty() {
-                    continue;
-                }
-                s.spawn(move || {
-                    for (i, &u) in rows.iter().enumerate() {
-                        chunk[i * w] = u;
-                        sample_neighbors(csr, u, k, base, hop,
-                                         &mut chunk[i * w + 1..(i + 1) * w]);
-                    }
-                });
-            }
+        let plan =
+            self.level_plan(csr, nodes, k, hop as usize, workers, model);
+        self.run_plan(nodes, w, &mut out, plan, |u, row| {
+            row[0] = u;
+            sample_neighbors(csr, u, k, base, hop, &mut row[1..]);
         });
         out
     }
 
     /// Parallel [`super::build_block`] (bitwise identical at any thread
-    /// count): the same level-by-level expansion, each level sharded.
+    /// count and planner flavor): the same level-by-level expansion, each
+    /// level sharded by its exact per-row costs. Only the adaptive flavor
+    /// builds a [`CostModel`] — nominal/quantile plans are provably the
+    /// same as the exact path, and skipping the model keeps the default
+    /// block pipeline from building the degree sketch it never reads.
     pub fn build_block(&self, csr: &Csr, seeds: &[i32], fanouts: &Fanouts,
                        base: u64) -> Block {
         if self.threads == 1 {
             return super::build_block(csr, seeds, fanouts, base);
         }
+        let model = (self.planner == PlannerChoice::Adaptive)
+            .then(|| CostModel::new(csr, fanouts, self.planner));
         let depth = fanouts.depth();
         let mut frontiers: Vec<Vec<i32>> = Vec::with_capacity(depth);
         frontiers.push(seeds.to_vec());
         for hop in 0..depth - 1 {
-            let next = self.expand_frontier(csr, &frontiers[hop],
-                                            fanouts.k(hop), base, hop as u64);
+            let next = self.expand_frontier_planned(
+                csr, &frontiers[hop], fanouts.k(hop), base, hop as u64,
+                model.as_ref());
             frontiers.push(next);
         }
-        let leaf = self.sample_frontier(csr, &frontiers[depth - 1],
-                                        fanouts.k(depth - 1), base,
-                                        (depth - 1) as u64);
+        let leaf = self.sample_frontier_planned(
+            csr, &frontiers[depth - 1], fanouts.k(depth - 1), base,
+            (depth - 1) as u64, model.as_ref());
         Block {
             batch: seeds.len(),
             fanouts: fanouts.clone(),

@@ -326,6 +326,7 @@ fn depth3_bitwise_deterministic_across_threads_1_4_8() {
             threads,
             prefetch: false,
             backend: BackendChoice::Native,
+            planner: Default::default(),
         };
         let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
         (0..8).map(|_| tr.step().unwrap().loss).collect()
@@ -353,6 +354,7 @@ fn depth3_native_training_end_to_end() {
             threads: 1,
             prefetch: false,
             backend: BackendChoice::Native,
+            planner: Default::default(),
         };
         let mut tr = Trainer::new(&rt, &mut cache, cfg).unwrap();
         let timings = measure(&mut tr, 2, 30).unwrap();
@@ -390,6 +392,7 @@ fn depth_axis_transient_ratio_grows() {
                 threads: 1,
                 prefetch: false,
                 backend: BackendChoice::Native,
+                planner: Default::default(),
             };
             let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
             peaks[i] = tr.step().unwrap().transient_bytes;

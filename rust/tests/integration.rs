@@ -44,6 +44,7 @@ fn tiny_cfg(variant: Variant, hops: u32, seed: u64) -> TrainConfig {
         threads: 1,
         prefetch: false,
         backend: Default::default(),
+        planner: Default::default(),
     }
 }
 
@@ -223,6 +224,7 @@ fn bf16_feature_artifact_trains() {
         threads: 1,
         prefetch: false,
         backend: Default::default(),
+        planner: Default::default(),
     };
     let mut tr = Trainer::new_named(
         &rt, &mut cache, cfg,

@@ -35,6 +35,7 @@ fn tiny_cfg(variant: Variant, ks: &[usize], seed: u64) -> TrainConfig {
         threads: 1,
         prefetch: false,
         backend: BackendChoice::Native,
+        planner: Default::default(),
     }
 }
 
@@ -218,6 +219,7 @@ fn native_fused_forward_matches_unfused_reference() {
         save_indices: false,
         seed: 42,
         threads: 1,
+        planner: Default::default(),
         hidden: h,
     };
     let adamw = Manifest::builtin().adamw;
@@ -294,6 +296,7 @@ fn fused_grads_match_finite_difference() {
         save_indices: true,
         seed: 7,
         threads: 1,
+        planner: Default::default(),
         hidden: h,
     };
     let adamw = Manifest::builtin().adamw;
@@ -305,7 +308,7 @@ fn fused_grads_match_finite_difference() {
 
     let params0 = eng.params().to_vec();
     let mut meter = MemoryMeter::new();
-    let (_, grads, _) =
+    let (_, grads, _, _) =
         eng.fsa_loss_grads(&seeds, &labels, base, &mut meter).unwrap();
     assert_eq!(grads.len(), fsa_param_specs(d, h, c).len());
 

@@ -1,0 +1,426 @@
+//! Shard-planner suite — pins the expected-subtree cost model.
+//!
+//! 1. **Plan invariants**: every planner flavor produces contiguous,
+//!    ordered, exactly-covering shard plans at random depths, fanouts,
+//!    and part counts (including adaptive plans under arbitrary measured
+//!    feedback).
+//! 2. **Bitwise determinism**: sampler blocks, fused-kernel outputs, and
+//!    whole loss trajectories are bitwise identical under
+//!    `nominal`/`quantile`/`adaptive` planning at threads 1/4/8 — the
+//!    plan may only change *where* cuts land, never *what* is computed.
+//! 3. **Power-law regression**: on a sparse Zipf-ish graph generated via
+//!    `gen::DatasetSpec`, the quantile planner's depth-3 cost-imbalance
+//!    ratio beats the nominal planner's by a pinned margin (the nominal
+//!    model charges every hop-0 draw the full-fanout subtree, which is
+//!    exactly wrong on hub-heavy graphs).
+//! 4. **Edge cases**: the old `subtree_weight` panic path (empty/1-hop
+//!    fanouts), fuzzed `Fanouts` parsing round-tripped through the
+//!    planner, and `plan_shards` corner cases (`parts > n`, a giant cost
+//!    at the end of the range, u64-overflow-adjacent totals).
+
+use std::ops::Range;
+
+use fusesampleagg::cli::parse_fanout;
+use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Trainer, Variant};
+use fusesampleagg::fanout::Fanouts;
+use fusesampleagg::gen::{builtin_spec, Dataset, DatasetSpec, DegreeLaw};
+use fusesampleagg::graph::{cost::nominal_subtree_weight, plan_shards,
+                           plan_shards_weighted, CostModel, Csr,
+                           PlannerChoice, ShardStats};
+use fusesampleagg::kernel::{fused, Features};
+use fusesampleagg::rng::{mix, SplitMix64};
+use fusesampleagg::runtime::{BackendChoice, Runtime};
+use fusesampleagg::sampler::{self, sample_neighbors, ParallelSampler};
+
+const CHOICES: [PlannerChoice; 3] = [PlannerChoice::Nominal,
+                                     PlannerChoice::Quantile,
+                                     PlannerChoice::Adaptive];
+
+fn tiny() -> Dataset {
+    Dataset::generate(builtin_spec("tiny").unwrap()).unwrap()
+}
+
+fn assert_covering(plan: &[Range<usize>], n: usize) {
+    let mut pos = 0;
+    for r in plan {
+        assert_eq!(r.start, pos, "shards not contiguous: {plan:?}");
+        assert!(r.end >= r.start, "shard reversed: {plan:?}");
+        pos = r.end;
+    }
+    assert_eq!(pos, n, "shards do not cover 0..{n}: {plan:?}");
+}
+
+/// Property: every flavor's plans are contiguous, ordered, and covering
+/// for random depths, fanouts, frontier sizes (with invalid rows), and
+/// part counts — adaptive included, under arbitrary observed feedback.
+#[test]
+fn prop_cost_model_plans_always_cover() {
+    let ds = tiny();
+    let csr = &ds.graph;
+    let mut r = SplitMix64::new(2024);
+    for trial in 0..150 {
+        let depth = 1 + r.next_below(4) as usize;
+        let ks: Vec<usize> =
+            (0..depth).map(|_| 1 + r.next_below(12) as usize).collect();
+        let fo = Fanouts::new(ks).unwrap();
+        let n = r.next_below(300) as usize;
+        let mut frontier: Vec<i32> = (0..n)
+            .map(|_| r.next_below(csr.n as u64) as i32)
+            .collect();
+        if n > 3 {
+            frontier[0] = -1; // padded/invalid rows must plan too
+            frontier[n / 2] = -1;
+        }
+        let parts = 1 + r.next_below(12) as usize;
+        for choice in CHOICES {
+            let mut model = CostModel::new(csr, &fo, choice);
+            if choice == PlannerChoice::Adaptive && trial % 2 == 0 {
+                // arbitrary measured feedback, including degenerate values
+                model.observe(&ShardStats::new(
+                    (0..parts).map(|j| j as f64 * 0.37).collect(),
+                    (0..parts).map(|j| (j as u64 % 5) * 10).collect(),
+                ));
+            }
+            let costs: Vec<u64> =
+                frontier.iter().map(|&u| model.seed_cost(csr, u)).collect();
+            assert!(costs.iter().all(|&c| c >= 1),
+                    "zero cost from {choice:?}");
+            let plan = model.plan(&costs, parts);
+            assert_covering(&plan, n);
+            assert!(plan.len() <= parts.max(1),
+                    "{choice:?}: {} shards for {parts} parts", plan.len());
+            // per-level frontier costs are guarded at any hop index
+            for hop in 0..depth + 2 {
+                for &u in frontier.iter().take(8) {
+                    assert!(model.frontier_cost(csr, u, hop) >= 1);
+                }
+            }
+        }
+    }
+}
+
+/// The plan may only move cut positions: fused kernel outputs (aggregate,
+/// saved indices, pair count) are bitwise identical across planner
+/// flavors and thread counts 1/4/8 — including adaptive mid-training,
+/// after feedback has skewed its cut targets.
+#[test]
+fn fused_outputs_bitwise_identical_across_planners_and_threads() {
+    let ds = tiny();
+    let feat = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false);
+    let mut r = SplitMix64::new(9);
+    let seeds: Vec<i32> =
+        (0..256).map(|_| r.next_below(ds.spec.n as u64) as i32).collect();
+    for fo in [Fanouts::of(&[6]), Fanouts::of(&[5, 3]),
+               Fanouts::of(&[4, 3, 2])] {
+        let reference =
+            fused::fused_khop(&ds.graph, &feat, &seeds, &fo, 77, true, 1);
+        for choice in CHOICES {
+            let mut model = CostModel::new(&ds.graph, &fo, choice);
+            for threads in [1usize, 4, 8] {
+                let out = fused::fused_khop_planned(
+                    &ds.graph, &feat, &seeds, &fo, 77, true, threads, &model);
+                assert_eq!(out.agg, reference.agg,
+                           "{fo} {choice:?} t={threads}: agg diverged");
+                assert_eq!(out.saved, reference.saved,
+                           "{fo} {choice:?} t={threads}: saved diverged");
+                assert_eq!(out.pairs, reference.pairs);
+                // feed the measured stats back (only adaptive uses them)
+                model.observe(&out.stats);
+            }
+            // after feedback: still bitwise identical
+            let out = fused::fused_khop_planned(
+                &ds.graph, &feat, &seeds, &fo, 77, true, 8, &model);
+            assert_eq!(out.agg, reference.agg,
+                       "{fo} {choice:?}: post-feedback agg diverged");
+            assert_eq!(out.saved, reference.saved);
+        }
+    }
+}
+
+/// Sampler blocks are bitwise identical to the serial sampler under
+/// every planner flavor and thread count.
+#[test]
+fn sampler_blocks_bitwise_identical_across_planners_and_threads() {
+    let ds = tiny();
+    let mut r = SplitMix64::new(13);
+    let seeds: Vec<i32> =
+        (0..256).map(|_| r.next_below(ds.spec.n as u64) as i32).collect();
+    for fo in [Fanouts::of(&[6]), Fanouts::of(&[4, 3]),
+               Fanouts::of(&[4, 3, 2])] {
+        let serial = sampler::build_block(&ds.graph, &seeds, &fo, 31);
+        for choice in CHOICES {
+            for threads in [1usize, 4, 8] {
+                let s = ParallelSampler::with_planner(threads, choice);
+                let par = s.build_block(&ds.graph, &seeds, &fo, 31);
+                assert_eq!(par.frontiers, serial.frontiers,
+                           "{fo} {choice:?} t={threads}: frontiers diverged");
+                assert_eq!(par.leaf, serial.leaf,
+                           "{fo} {choice:?} t={threads}: leaf diverged");
+                // sharded runs must report their measured imbalance
+                let imb = s.take_imbalance();
+                if threads > 1 {
+                    let v = imb.expect("sharded pass recorded no imbalance");
+                    assert!(v.is_finite() && v >= 1.0 - 1e-9, "{v}");
+                    assert!(s.take_imbalance().is_none(), "drain must clear");
+                }
+            }
+        }
+    }
+}
+
+/// Whole-trainer determinism: fsa and dgl loss trajectories on the
+/// native backend are bitwise identical across planner flavors at
+/// threads 1/4/8.
+#[test]
+fn training_trajectories_identical_across_planners() {
+    let rt = Runtime::from_env().unwrap();
+    let mut cache = DatasetCache::new();
+    for variant in [Variant::Fsa, Variant::Dgl] {
+        let run = |planner: PlannerChoice, threads: usize,
+                   cache: &mut DatasetCache| -> Vec<f64> {
+            let cfg = TrainConfig {
+                variant,
+                dataset: "tiny".into(),
+                fanouts: Fanouts::of(&[4, 3, 2]),
+                batch: 64,
+                amp: false,
+                save_indices: true,
+                seed: 42,
+                threads,
+                prefetch: false,
+                backend: BackendChoice::Native,
+                planner,
+            };
+            let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
+            (0..6).map(|_| tr.step().unwrap().loss).collect()
+        };
+        let reference = run(PlannerChoice::Nominal, 1, &mut cache);
+        for choice in CHOICES {
+            for threads in [1usize, 4, 8] {
+                assert_eq!(run(choice, threads, &mut cache), reference,
+                           "{variant:?} {choice:?} t={threads}: \
+                            trajectory diverged");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// power-law regression
+// ---------------------------------------------------------------------------
+
+/// Actual row-adds of the fused kernel's subtree under `seed` — the same
+/// draws the kernel would make (sampler and kernel are bitwise-identical),
+/// counted instead of aggregated.
+fn true_subtree_cost(csr: &Csr, seed: i32, ks: &[usize], base: u64) -> u64 {
+    fn rec(csr: &Csr, v: i32, ks: &[usize], base: u64, hop: u64) -> u64 {
+        if hop as usize == ks.len() {
+            return 1;
+        }
+        let k = ks[hop as usize];
+        let mut row = vec![-1i32; k];
+        sample_neighbors(csr, v, k, base, hop, &mut row);
+        let mut total = 1;
+        for &w in &row {
+            if w >= 0 {
+                total += rec(csr, w, ks, base, hop + 1);
+            }
+        }
+        total
+    }
+    let k = ks[0];
+    let mut row = vec![-1i32; k];
+    sample_neighbors(csr, seed, k, base, 0, &mut row);
+    let mut total = 1;
+    for &v in &row {
+        if v >= 0 {
+            total += rec(csr, v, ks, base, 1);
+        }
+    }
+    total
+}
+
+/// Max-shard true cost over the ideal per-shard share.
+fn imbalance_on(plan: &[Range<usize>], true_costs: &[u64],
+                parts: usize) -> f64 {
+    let total: u64 = true_costs.iter().sum();
+    let max: u64 = plan
+        .iter()
+        .map(|r| true_costs[r.clone()].iter().sum())
+        .max()
+        .unwrap_or(0);
+    max as f64 / (total as f64 / parts as f64)
+}
+
+/// On a sparse Zipf-ish power-law graph at depth 3, the quantile
+/// planner's cost-imbalance ratio must beat the nominal planner's by a
+/// pinned margin. Seeds run in id order — the order `split_nodes` (and
+/// with it eval batching) produces — where the generator's local-window
+/// homophily clusters hub-adjacent seeds, which is exactly where the
+/// full-fanout assumption misplaces cuts. Everything is deterministic:
+/// graph, draws, costs, and plans.
+#[test]
+fn quantile_beats_nominal_on_power_law_depth3() {
+    let spec = DatasetSpec {
+        name: "zipf_sim".into(),
+        stands_for: "planner regression fixture".into(),
+        n: 1500,
+        e_cap: 60_000,
+        avg_deg: 4,
+        degree_law: DegreeLaw::PowerLaw,
+        d: 8,
+        c: 4,
+        gen_seed: 77,
+    };
+    let ds = Dataset::generate(spec).unwrap();
+    let csr = &ds.graph;
+    let stats = csr.degree_stats();
+    assert!(stats.max as f64 > 4.0 * stats.mean,
+            "fixture lost its heavy tail: {stats:?}");
+
+    let fo = Fanouts::of(&[10, 10, 10]);
+    let (base, parts) = (mix(1234), 8usize);
+    let seeds: Vec<i32> = (0..csr.n as i32).collect();
+    let true_costs: Vec<u64> = seeds
+        .iter()
+        .map(|&s| true_subtree_cost(csr, s, fo.as_slice(), base))
+        .collect();
+
+    let plan_for = |choice: PlannerChoice| -> Vec<Range<usize>> {
+        let model = CostModel::new(csr, &fo, choice);
+        let costs: Vec<u64> =
+            seeds.iter().map(|&s| model.seed_cost(csr, s)).collect();
+        model.plan(&costs, parts)
+    };
+    let im_nominal =
+        imbalance_on(&plan_for(PlannerChoice::Nominal), &true_costs, parts);
+    let im_quantile =
+        imbalance_on(&plan_for(PlannerChoice::Quantile), &true_costs, parts);
+
+    // pinned margin (measured ~1.10 vs ~1.04 on this fixture): quantile
+    // must win by ≥ 0.03 absolute and carry ≤ 1/1.4 of the excess
+    assert!(im_quantile + 0.03 <= im_nominal,
+            "quantile {im_quantile:.4} did not beat nominal \
+             {im_nominal:.4} by the pinned margin");
+    assert!(im_nominal - 1.0 >= 1.4 * (im_quantile - 1.0),
+            "excess imbalance ratio regressed: nominal {im_nominal:.4} \
+             vs quantile {im_quantile:.4}");
+    // and the model is a genuinely better predictor, not just lucky cuts:
+    // an oracle plan from the true costs can't be much better than the
+    // quantile plan's balance on this fixture
+    let oracle = plan_shards(&true_costs, parts);
+    let im_oracle = imbalance_on(&oracle, &true_costs, parts);
+    assert!(im_quantile <= im_oracle + 0.10,
+            "quantile {im_quantile:.4} far from oracle {im_oracle:.4}");
+}
+
+// ---------------------------------------------------------------------------
+// guards, fuzzing, plan_shards edge cases
+// ---------------------------------------------------------------------------
+
+/// The old `kernel::fused::subtree_weight` indexed `ks[1..]`
+/// unconditionally; the planner's version is guarded for depth 0/1 and
+/// every model handles 1-hop fanouts.
+#[test]
+fn subtree_weight_guards_depth_0_and_1() {
+    assert_eq!(nominal_subtree_weight(&[]), 1);
+    assert_eq!(nominal_subtree_weight(&[9]), 1);
+    assert_eq!(nominal_subtree_weight(&[15, 10]), 11);
+    assert_eq!(nominal_subtree_weight(&[15, 10, 5]), 61); // 1 + 10*(1+5)
+    let ds = tiny();
+    for choice in CHOICES {
+        let model = CostModel::new(&ds.graph, &Fanouts::of(&[7]), choice);
+        for u in [-1i32, 0, 3, 511, 9999] {
+            assert!(model.seed_cost(&ds.graph, u) >= 1, "{choice:?} {u}");
+        }
+    }
+}
+
+/// Fuzz: random fanout lists round-trip `label → parse → planner`
+/// without panicking, and malformed strings error instead of panicking.
+#[test]
+fn fuzz_fanout_parse_round_trips_through_planner() {
+    let ds = tiny();
+    let mut r = SplitMix64::new(404);
+    for _ in 0..100 {
+        let depth = 1 + r.next_below(5) as usize;
+        let ks: Vec<usize> =
+            (0..depth).map(|_| 1 + r.next_below(20) as usize).collect();
+        let fo = Fanouts::new(ks.clone()).unwrap();
+        let parsed = parse_fanout(&fo.label()).unwrap();
+        assert_eq!(parsed, fo, "label round-trip broke for {ks:?}");
+        let model = CostModel::new(&ds.graph, &parsed,
+                                   PlannerChoice::Quantile);
+        let costs: Vec<u64> = (0..64)
+            .map(|i| model.seed_cost(&ds.graph, (i * 7) % ds.spec.n as i32))
+            .collect();
+        assert_covering(&model.plan(&costs, 1 + r.next_below(9) as usize),
+                        costs.len());
+    }
+    // malformed inputs: clean errors, never a panic
+    for bad in ["", "x", "15x", "x10", "0", "15x0x5", "1e3", "-4", "4x-1",
+                "nope", "10,,5", "  ", "10x5x"] {
+        assert!(parse_fanout(bad).is_err(), "{bad:?} should not parse");
+    }
+}
+
+#[test]
+fn plan_shards_handles_more_parts_than_rows() {
+    let costs = [3u64, 1, 2];
+    let plan = plan_shards(&costs, 10);
+    assert_covering(&plan, 3);
+    assert!(plan.len() <= 10);
+    // every row still lands in exactly one shard
+    let live: usize = plan.iter().map(|r| r.len()).sum();
+    assert_eq!(live, 3);
+    // degenerate inputs
+    assert_covering(&plan_shards(&[], 7), 0);
+    assert_covering(&plan_shards(&[5], 7), 1);
+}
+
+#[test]
+fn plan_shards_isolates_giant_cost_at_end_of_range() {
+    let mut costs = vec![1u64; 64];
+    costs[63] = 1_000; // one giant row at the *end* of the range
+    let plan = plan_shards(&costs, 4);
+    assert_covering(&plan, 64);
+    // the giant row's shard must not drag a meaningful prefix with it
+    let last_live = plan.iter().rev().find(|r| !r.is_empty()).unwrap();
+    assert!(last_live.contains(&63));
+    assert!(last_live.len() <= 2,
+            "giant tail row not isolated: {plan:?}");
+}
+
+#[test]
+fn plan_shards_survives_u64_overflow_adjacent_totals() {
+    // total ≈ 2.67 * u64::MAX — u64 prefix sums would wrap/panic
+    let costs = vec![u64::MAX / 3; 8];
+    let plan = plan_shards(&costs, 4);
+    assert_covering(&plan, 8);
+    for r in &plan {
+        assert_eq!(r.len(), 2, "unbalanced under huge costs: {plan:?}");
+    }
+    // a single near-max cost plus small ones
+    let mut costs = vec![1u64; 16];
+    costs[0] = u64::MAX - 7;
+    let plan = plan_shards(&costs, 3);
+    assert_covering(&plan, 16);
+    let first_live = plan.iter().find(|r| !r.is_empty()).unwrap();
+    assert!(first_live.len() <= 1 + 8,
+            "near-max head not isolated: {plan:?}");
+}
+
+#[test]
+fn weighted_plans_cover_and_degrade_safely() {
+    let costs = vec![2u64; 90];
+    // matching, valid weights: faster worker 0 takes a bigger range
+    let plan = plan_shards_weighted(&costs, 3, &[2.0, 1.0, 1.0]);
+    assert_covering(&plan, 90);
+    assert!(plan[0].len() > plan[1].len(), "{plan:?}");
+    // mismatched or invalid weights degrade to the unweighted plan
+    for bad in [vec![1.0, 2.0], vec![0.0, 1.0, 1.0],
+                vec![f64::NAN, 1.0, 1.0]] {
+        assert_eq!(plan_shards_weighted(&costs, 3, &bad),
+                   plan_shards(&costs, 3));
+    }
+}
