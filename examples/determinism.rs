@@ -34,6 +34,7 @@ fn losses(rt: &Runtime, cache: &mut DatasetCache, seed: u64,
         prefetch: false,
         backend: Default::default(),
         planner: Default::default(),
+        planner_state: None,
     };
     let mut trainer = Trainer::new(rt, cache, cfg)?;
     (0..steps).map(|_| Ok(trainer.step()?.loss)).collect()

@@ -63,6 +63,7 @@ fn main() -> Result<()> {
                     prefetch: false,
                     backend: Default::default(),
                     planner: Default::default(),
+                    planner_state: None,
                 };
                 Ok(run_config(&rt, &mut cache, cfg, 1, 5)?
                     .peak_transient_bytes)

@@ -33,6 +33,7 @@ fn main() -> Result<()> {
         prefetch: false,            // overlap sampling with dispatch
         backend: Default::default(),    // auto: PJRT, else native engine
         planner: Default::default(),
+        planner_state: None,
     };
 
     // 3. train for 40 steps

@@ -29,6 +29,7 @@ fn run(rt: &Runtime, cache: &mut DatasetCache, variant: Variant,
         prefetch: false,
         backend: Default::default(),
         planner: Default::default(),
+        planner_state: None,
     };
     let mut tr = Trainer::new(rt, cache, cfg)?;
     let timer = Timer::start();

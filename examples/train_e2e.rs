@@ -58,6 +58,7 @@ fn main() -> Result<()> {
         prefetch,
         backend: Default::default(),
         planner: Default::default(),
+        planner_state: None,
     };
     let total = Timer::start();
     let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;

@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
                 save_indices: true, seed: 42, threads: 1, prefetch: false,
                 backend: Default::default(),
                 planner: Default::default(),
+                planner_state: None,
             };
             let r = run(&mut cache, cfg)?;
             let _ = writeln!(out, "  amp={:<5} {:<4}: {:>8.2} ms/step", amp,
@@ -67,6 +68,7 @@ fn main() -> anyhow::Result<()> {
                     threads: 1, prefetch: false,
                     backend: Default::default(),
                     planner: Default::default(),
+                    planner_state: None,
                 };
                 let r = run(&mut cache, cfg)?;
                 let _ = writeln!(out, "  {:<13} {}-hop {:<4}: {:>8.2} ms/step \
@@ -89,6 +91,7 @@ fn main() -> anyhow::Result<()> {
             save_indices: save, seed: 42, threads: 1, prefetch: false,
             backend: Default::default(),
             planner: Default::default(),
+            planner_state: None,
         };
         let r = run(&mut cache, cfg)?;
         let _ = writeln!(out, "  save_indices={:<5}: {:>8.2} ms/step \
@@ -117,6 +120,7 @@ fn main() -> anyhow::Result<()> {
                 threads: 1, prefetch: false,
                 backend: Default::default(),
                 planner: Default::default(),
+                planner_state: None,
             };
             let mut tr = Trainer::new_named(rt2, &mut cache, cfg, artifact)?;
             let timings = measure(&mut tr, warmup, steps)?;

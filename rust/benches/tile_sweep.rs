@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
             prefetch: false,
             backend: Default::default(),
             planner: Default::default(),
+            planner_state: None,
         };
         let mut tr = Trainer::new_named(&rt, &mut cache, cfg, &name)?;
         let timings = measure(&mut tr, warmup, steps)?;

@@ -39,6 +39,10 @@ pub struct Grid {
     pub backend: BackendChoice,
     /// Shard-planner cost model for every cell (`--planner`).
     pub planner: PlannerChoice,
+    /// Planner-state persistence file for adaptive cells
+    /// (`--planner-state <path|off>`; None = off, the grid default —
+    /// paper-protocol cells should not inherit another run's weights).
+    pub planner_state: Option<std::path::PathBuf>,
 }
 
 impl Default for Grid {
@@ -58,6 +62,7 @@ impl Default for Grid {
             prefetch: false,
             backend: BackendChoice::Auto,
             planner: PlannerChoice::default(),
+            planner_state: None,
         }
     }
 }
@@ -181,6 +186,7 @@ pub fn run_config(rt: &Runtime, cache: &mut DatasetCache, cfg: TrainConfig,
         peak_transient_bytes: peak,
         loss,
         imbalance,
+        planner: cfg.planner.as_str().to_string(),
     })
 }
 
@@ -205,6 +211,7 @@ pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
                             prefetch: grid.prefetch,
                             backend: grid.backend,
                             planner: grid.planner,
+                            planner_state: grid.planner_state.clone(),
                         };
                         let row = run_config(rt, cache, cfg, grid.warmup,
                                              grid.steps)?;
@@ -352,6 +359,7 @@ mod tests {
             peak_transient_bytes: peak,
             loss: 1.0,
             imbalance: 1.1,
+            planner: "quantile".into(),
         }
     }
 

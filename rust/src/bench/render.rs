@@ -299,6 +299,7 @@ mod tests {
             peak_transient_bytes: peak,
             loss: 1.0,
             imbalance: 1.0,
+            planner: "quantile".into(),
         }
     }
 

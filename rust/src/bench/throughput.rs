@@ -29,6 +29,7 @@ use crate::coordinator::pipeline::{prepare_batch, BatchPrefetcher,
 use crate::coordinator::{TrainConfig, Variant};
 use crate::fanout::Fanouts;
 use crate::gen::Dataset;
+use crate::graph::cost::shared_session_model;
 use crate::graph::PlannerChoice;
 use crate::kernel::NativeBackend;
 use crate::memory::MemoryMeter;
@@ -108,6 +109,9 @@ impl ThroughputConfig {
             prefetch: self.prefetch,
             backend: BackendChoice::Native,
             planner: self.planner,
+            // throughput runs are ephemeral measurements; they never
+            // warm-start from or persist planner state
+            planner_state: None,
         }
     }
 }
@@ -120,21 +124,29 @@ pub fn run_throughput(ds: Arc<Dataset>,
         (true, Variant::Fsa) => HostWork::SeedsOnly,
         _ => HostWork::Block,
     };
+    // adaptive: one shared planner model for the whole run, so the
+    // sampler, the prefetch thread, and (for the fused variant) the
+    // native engine all feed the same per-worker weights
+    let shared = shared_session_model(&ds.graph, &cfg.fanouts, cfg.planner);
     let mut engine = if cfg.native {
-        Some(NativeBackend::new(
-            ds.clone(),
-            cfg.train_config().native_config(cfg.hidden),
-            cfg.adamw,
-        )?)
+        let native_cfg = cfg.train_config().native_config(cfg.hidden);
+        Some(match (&shared, cfg.variant) {
+            (Some(m), Variant::Fsa) => NativeBackend::with_shared_model(
+                ds.clone(), native_cfg, cfg.adamw, m.clone())?,
+            _ => NativeBackend::new(ds.clone(), native_cfg, cfg.adamw)?,
+        })
     } else {
         None
     };
     let mut meter = MemoryMeter::new();
     let mut sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)?;
-    let sampler = ParallelSampler::with_planner(cfg.threads, cfg.planner);
+    let mut sampler = ParallelSampler::with_planner(cfg.threads, cfg.planner);
+    if let Some(m) = &shared {
+        sampler = sampler.with_model(m.clone());
+    }
     let mut prefetcher = if cfg.prefetch {
         Some(BatchPrefetcher::spawn(ds.clone(), work, cfg.fanouts.clone(),
-                                    cfg.threads, cfg.planner))
+                                    sampler.fresh_stats()))
     } else {
         None
     };
@@ -239,6 +251,7 @@ pub fn run_throughput(ds: Arc<Dataset>,
         },
         utilization,
         imbalance: summarize(&imbalances).median,
+        planner: cfg.planner.as_str().to_string(),
     })
 }
 

@@ -29,13 +29,16 @@ pub mod pipeline;
 pub mod profile;
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::fanout::Fanouts;
 use crate::gen::{builtin_spec, Dataset, Split};
-use crate::graph::PlannerChoice;
+use crate::graph::cost::shared_session_model;
+use crate::graph::state::{unix_now, PlannerState, StateEntry, StateKey};
+use crate::graph::{lock_model, PlannerChoice, SharedCostModel};
 use crate::kernel::{NativeBackend, NativeConfig};
 use crate::memory::MemoryMeter;
 use crate::rng::mix;
@@ -91,6 +94,12 @@ pub struct TrainConfig {
     /// are bitwise identical under every flavor — only shard balance,
     /// and with it step time, moves.
     pub planner: PlannerChoice,
+    /// Planner-state persistence file (`--planner-state <path|off>`):
+    /// the adaptive flavor warm-starts its per-worker weights from this
+    /// file at startup and saves them back at shutdown. `None` = off;
+    /// the other flavors have no learned state and ignore it. Cuts may
+    /// differ across sessions because of it — sampled values never do.
+    pub planner_state: Option<PathBuf>,
 }
 
 impl TrainConfig {
@@ -213,6 +222,16 @@ pub struct Trainer<'rt> {
     sampler: ParallelSampler,
     prefetcher: Option<BatchPrefetcher>,
     pub meter: MemoryMeter,
+    /// The session-shared planner model (adaptive flavor only): the
+    /// fused kernel, the host sampler, and the prefetch thread all plan
+    /// and observe through it.
+    planner_model: Option<SharedCostModel>,
+    /// Where (and under which key) to persist the adaptive weights at
+    /// shutdown (`cfg.planner_state`, resolved), plus the
+    /// `steps_observed` baseline inherited from the warm start — only
+    /// sessions that observed *past* that baseline save, so re-running
+    /// without new measurements never refreshes the staleness stamp.
+    planner_persist: Option<(PathBuf, StateKey, u64)>,
 }
 
 /// One-time note when `Auto` falls back from PJRT to the native engine.
@@ -228,20 +247,22 @@ impl<'rt> Trainer<'rt> {
     pub fn new(rt: &'rt Runtime, cache: &mut DatasetCache,
                cfg: TrainConfig) -> Result<Trainer<'rt>> {
         let ds = cache.get(rt, &cfg.dataset)?;
+        let shared = Self::session_model(&ds, &cfg);
         let backend: Box<dyn Backend + 'rt> = match cfg.backend {
-            BackendChoice::Native => Box::new(Self::native_backend(rt, &ds,
-                                                                   &cfg)?),
+            BackendChoice::Native => Box::new(
+                Self::native_backend(rt, &ds, &cfg, shared.clone())?),
             BackendChoice::Pjrt => Box::new(Self::pjrt_backend(rt, &ds,
                                                                &cfg)?),
             BackendChoice::Auto => match Self::pjrt_backend(rt, &ds, &cfg) {
                 Ok(b) => Box::new(b),
                 Err(e) => {
                     note_native_fallback(&e);
-                    Box::new(Self::native_backend(rt, &ds, &cfg)?)
+                    Box::new(Self::native_backend(rt, &ds, &cfg,
+                                                  shared.clone())?)
                 }
             },
         };
-        Self::with_backend(rt, cfg, ds, backend)
+        Self::with_backend(rt, cfg, ds, backend, shared)
     }
 
     /// Build a trainer on an explicit PJRT artifact (e.g. a §Perf tile
@@ -249,10 +270,18 @@ impl<'rt> Trainer<'rt> {
     pub fn new_named(rt: &'rt Runtime, cache: &mut DatasetCache,
                      cfg: TrainConfig, artifact: &str) -> Result<Trainer<'rt>> {
         let ds = cache.get(rt, &cfg.dataset)?;
+        let shared = Self::session_model(&ds, &cfg);
         let backend = PjrtBackend::new(
             rt, &ds, artifact, cfg.variant == Variant::Fsa, &cfg.fanouts,
             cfg.batch, cfg.save_indices, cfg.seed)?;
-        Self::with_backend(rt, cfg, ds, Box::new(backend))
+        Self::with_backend(rt, cfg, ds, Box::new(backend), shared)
+    }
+
+    /// The session's shared planner model (`Some` for adaptive only —
+    /// see [`crate::graph::cost::shared_session_model`]).
+    fn session_model(ds: &Arc<Dataset>,
+                     cfg: &TrainConfig) -> Option<SharedCostModel> {
+        shared_session_model(&ds.graph, &cfg.fanouts, cfg.planner)
     }
 
     fn pjrt_backend(rt: &'rt Runtime, ds: &Arc<Dataset>,
@@ -267,20 +296,38 @@ impl<'rt> Trainer<'rt> {
                          &cfg.fanouts, cfg.batch, cfg.save_indices, cfg.seed)
     }
 
-    fn native_backend(rt: &Runtime, ds: &Arc<Dataset>,
-                      cfg: &TrainConfig) -> Result<NativeBackend> {
-        NativeBackend::new(ds.clone(), cfg.native_config(rt.manifest.hidden),
-                           rt.manifest.adamw)
+    fn native_backend(rt: &Runtime, ds: &Arc<Dataset>, cfg: &TrainConfig,
+                      shared: Option<SharedCostModel>)
+                      -> Result<NativeBackend> {
+        let native_cfg = cfg.native_config(rt.manifest.hidden);
+        match shared {
+            Some(model) => NativeBackend::with_shared_model(
+                ds.clone(), native_cfg, rt.manifest.adamw, model),
+            None => NativeBackend::new(ds.clone(), native_cfg,
+                                       rt.manifest.adamw),
+        }
     }
 
     fn with_backend(rt: &'rt Runtime, cfg: TrainConfig, ds: Arc<Dataset>,
-                    backend: Box<dyn Backend + 'rt>) -> Result<Trainer<'rt>> {
+                    backend: Box<dyn Backend + 'rt>,
+                    planner_model: Option<SharedCostModel>)
+                    -> Result<Trainer<'rt>> {
         let sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)?;
-        let sampler = ParallelSampler::with_planner(cfg.threads, cfg.planner);
+        let mut sampler =
+            ParallelSampler::with_planner(cfg.threads, cfg.planner);
+        if let Some(m) = &planner_model {
+            sampler = sampler.with_model(m.clone());
+        }
+        // warm-start before any planning happens, so the very first
+        // batch already cuts with the persisted weights
+        let planner_persist = Self::load_planner_state(
+            &cfg, &sampler, planner_model.as_ref());
         let prefetcher = cfg.prefetch.then(|| {
+            // a dedicated sampler for the prefetch thread: same shared
+            // model and clock, private imbalance accumulator
             BatchPrefetcher::spawn(ds.clone(), cfg.host_work(),
-                                   cfg.fanouts.clone(), cfg.threads,
-                                   cfg.planner)
+                                   cfg.fanouts.clone(),
+                                   sampler.fresh_stats())
         });
         Ok(Trainer {
             rt,
@@ -292,7 +339,84 @@ impl<'rt> Trainer<'rt> {
             sampler,
             prefetcher,
             meter: MemoryMeter::new(),
+            planner_model,
+            planner_persist,
         })
+    }
+
+    /// Warm-start the shared model from `cfg.planner_state` (adaptive
+    /// flavor only). Corrupt or mismatched files degrade to uniform
+    /// weights with a warning; a found entry is logged so a second run
+    /// can be seen to warm-start (the CI smoke greps for it). Returns
+    /// the resolved (path, key) to save back to at shutdown.
+    fn load_planner_state(cfg: &TrainConfig, sampler: &ParallelSampler,
+                          model: Option<&SharedCostModel>)
+                          -> Option<(PathBuf, StateKey, u64)> {
+        let (path, model) = match (&cfg.planner_state, model) {
+            (Some(p), Some(m)) => (p.clone(), m),
+            _ => return None,
+        };
+        // key on the *resolved* worker count (0 = auto is a CLI detail)
+        let key = StateKey::for_session(sampler.threads(), cfg.planner);
+        let state = PlannerState::load(&path);
+        let mut baseline = 0u64;
+        if let Some(entry) = state.get(&key) {
+            let mut m = lock_model(model);
+            if m.warm_start(&entry.weights, entry.steps_observed) {
+                baseline = entry.steps_observed;
+                eprintln!("planner-state: warm-start from {} \
+                           ({} steps observed, weights {:?})",
+                          path.display(), entry.steps_observed,
+                          entry.weights);
+            } else {
+                eprintln!("warning: planner-state entry for {} is \
+                           unusable; starting from uniform weights",
+                          key.as_string());
+            }
+        }
+        Some((path, key, baseline))
+    }
+
+    /// Persist the adaptive weights (load-merge-save, preserving other
+    /// keys' entries). Called at drop; callable explicitly by tests.
+    /// Sessions that observed nothing beyond their warm-start baseline
+    /// save nothing — a serial (or measurement-free) run must neither
+    /// clobber measured state with uniform weights nor refresh the
+    /// `saved_unix` staleness stamp without new evidence.
+    pub fn save_planner_state(&self) {
+        let (Some((path, key, baseline)), Some(model)) =
+            (&self.planner_persist, &self.planner_model)
+        else {
+            return;
+        };
+        let (weights, steps) = {
+            let m = lock_model(model);
+            (m.worker_weights().to_vec(), m.steps_observed())
+        };
+        if weights.is_empty() || steps <= *baseline {
+            return;
+        }
+        let mut state = PlannerState::load(path);
+        state.put(key, StateEntry {
+            weights,
+            steps_observed: steps,
+            saved_unix: unix_now(),
+        });
+        match state.save(path) {
+            Ok(()) => eprintln!("planner-state: saved {} ({} steps \
+                                 observed) to {}",
+                                key.as_string(), steps, path.display()),
+            Err(e) => eprintln!("warning: could not save planner-state \
+                                 {}: {e}", path.display()),
+        }
+    }
+
+    /// Current adaptive per-worker weights (None for other flavors or
+    /// before any feedback/warm-start).
+    pub fn planner_weights(&self) -> Option<Vec<f64>> {
+        let m = self.planner_model.as_ref()?;
+        let w = lock_model(m).worker_weights().to_vec();
+        (!w.is_empty()).then_some(w)
     }
 
     /// The execution backend actually in use ("native" | "pjrt").
@@ -452,6 +576,15 @@ impl<'rt> Trainer<'rt> {
             }
         }
         Ok(correct as f64 / total.max(1) as f64)
+    }
+}
+
+impl Drop for Trainer<'_> {
+    /// "Saved at shutdown": persist the adaptive weights when the
+    /// session ends, however it ends. No-op unless `cfg.planner_state`
+    /// is set, the flavor is adaptive, and feedback was observed.
+    fn drop(&mut self) {
+        self.save_planner_state();
     }
 }
 

@@ -155,15 +155,19 @@ pub struct BatchPrefetcher {
 }
 
 impl BatchPrefetcher {
-    /// Spawn the worker. `threads` is the sampler's worker count inside the
-    /// prefetch thread (0 = auto); `planner` its shard-planner flavor.
+    /// Spawn the worker around a fully configured [`ParallelSampler`]
+    /// (thread count, planner flavor, clock, and — for the adaptive
+    /// feedback loop — the session's [`crate::graph::SharedCostModel`],
+    /// so the prefetch thread's measured shard stats feed the same
+    /// per-worker weights as every other planning site). Callers should
+    /// hand over a dedicated sampler (e.g. `sampler.fresh_stats()`):
+    /// the imbalance accumulator is drained per batch and must not be
+    /// shared with a sampler running on another thread.
     pub fn spawn(ds: Arc<Dataset>, work: HostWork, fanouts: Fanouts,
-                 threads: usize,
-                 planner: crate::graph::PlannerChoice) -> BatchPrefetcher {
+                 sampler: ParallelSampler) -> BatchPrefetcher {
         let (jtx, jrx) = mpsc::channel::<Job>();
         let (dtx, drx) = mpsc::channel::<PreparedBatch>();
         let worker = thread::spawn(move || {
-            let sampler = ParallelSampler::with_planner(threads, planner);
             for job in jrx {
                 let batch = prepare_batch(&ds, work, &fanouts, &sampler,
                                           job.step, job.seeds, job.base);
@@ -299,8 +303,8 @@ mod tests {
         let ds = tiny();
         let mut sched = BatchScheduler::new(&ds, 64, 42).unwrap();
         let mut pf = BatchPrefetcher::spawn(ds.clone(), HostWork::Block,
-                                            Fanouts::of(&[4, 3]), 2,
-                                            Default::default());
+                                            Fanouts::of(&[4, 3]),
+                                            ParallelSampler::new(2));
         for _ in 0..3 {
             let step = sched.steps_drawn();
             let seeds = sched.next_seeds();
@@ -325,8 +329,8 @@ mod tests {
         let mut sync_sched = BatchScheduler::new(&ds, 64, 42).unwrap();
         let mut pf_sched = BatchScheduler::new(&ds, 64, 42).unwrap();
         let mut pf = BatchPrefetcher::spawn(ds.clone(), HostWork::Block,
-                                            fo.clone(), 8,
-                                            Default::default());
+                                            fo.clone(),
+                                            ParallelSampler::new(8));
         for _ in 0..10 {
             let step = pf_sched.steps_drawn();
             let seeds = pf_sched.next_seeds();

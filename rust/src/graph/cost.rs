@@ -50,11 +50,12 @@
 //! and thread count (pinned by `rust/tests/planner.rs`).
 
 use std::ops::Range;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{bail, Result};
 
-use super::shard::{plan_shards, plan_shards_weighted, sample_cost};
+use super::shard::{plan_shards, plan_shards_weighted, resize_weights,
+                   sample_cost};
 use super::Csr;
 use crate::fanout::Fanouts;
 
@@ -105,6 +106,66 @@ pub fn nominal_subtree_weight(ks: &[usize]) -> u64 {
         .iter()
         .rev()
         .fold(1u64, |w, &k| 1 + k as u64 * w)
+}
+
+// ---------------------------------------------------------------------------
+// ShardClock — the injectable timing seam
+// ---------------------------------------------------------------------------
+
+/// How a sharded pass times its workers. Production uses [`WallClock`]
+/// (the measured elapsed time, verbatim); tests use [`VirtualClock`] to
+/// script deterministic per-worker slowdowns so the adaptive feedback
+/// loop can be proven to converge without any wall-clock dependence
+/// (`rust/tests/adaptive.rs`). The clock only shapes the *timing signal*
+/// — plans decide where cuts land, never what is computed, so outputs
+/// stay bitwise identical under every clock.
+pub trait ShardClock: std::fmt::Debug + Send + Sync {
+    /// Reported wall time of one shard: `worker` is the shard index,
+    /// `cost` the shard's planned cost, `elapsed_ms` the measured
+    /// elapsed wall clock of the worker's body.
+    fn shard_ms(&self, worker: usize, cost: u64, elapsed_ms: f64) -> f64;
+}
+
+/// The production clock: report the measured elapsed time unchanged.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WallClock;
+
+impl ShardClock for WallClock {
+    fn shard_ms(&self, _worker: usize, _cost: u64, elapsed_ms: f64) -> f64 {
+        elapsed_ms
+    }
+}
+
+/// Deterministic test clock: shard time = planned cost × the worker's
+/// scripted ms-per-cost-unit (workers past the script run at 1.0). The
+/// real elapsed time is ignored entirely, so every simulated trajectory
+/// is exactly reproducible.
+#[derive(Clone, Debug)]
+pub struct VirtualClock {
+    ms_per_unit: Vec<f64>,
+}
+
+impl VirtualClock {
+    pub fn new(ms_per_unit: Vec<f64>) -> VirtualClock {
+        VirtualClock { ms_per_unit }
+    }
+
+    /// A clock where worker `slow` runs `factor`× slower than the other
+    /// `parts - 1` workers (the canonical straggler scenario).
+    pub fn with_slow_worker(parts: usize, slow: usize,
+                            factor: f64) -> VirtualClock {
+        let mut ms = vec![1.0; parts];
+        if slow < parts {
+            ms[slow] = factor;
+        }
+        VirtualClock::new(ms)
+    }
+}
+
+impl ShardClock for VirtualClock {
+    fn shard_ms(&self, worker: usize, cost: u64, _elapsed_ms: f64) -> f64 {
+        cost as f64 * self.ms_per_unit.get(worker).copied().unwrap_or(1.0)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -353,6 +414,33 @@ const FEEDBACK_ALPHA: f64 = 0.3;
 /// measurement from starving a worker).
 const FEEDBACK_CLAMP: (f64, f64) = (0.25, 4.0);
 
+/// One planner model shared across the session's planning sites — the
+/// fused kernel's batch sharding and the parallel sampler's per-level
+/// frontier sharding (including the prefetch thread's) all plan and
+/// [`CostModel::observe`] through the same weights, so every measured
+/// shard feeds the same adaptive feedback loop.
+pub type SharedCostModel = Arc<Mutex<CostModel>>;
+
+/// Lock a [`SharedCostModel`], recovering from poisoning (a panicked
+/// worker must not also wedge the planner — stale weights are safe, the
+/// plan never changes computed values).
+pub fn lock_model(model: &SharedCostModel) -> MutexGuard<'_, CostModel> {
+    model.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The session-shared planner model for one `(graph, fanouts, flavor)`
+/// configuration — `Some` only for the adaptive flavor, which is the
+/// one with cross-step state worth sharing (and persisting); the other
+/// flavors keep site-local planning. The single home of this rule:
+/// trainer and throughput mode both build their session model here.
+pub fn shared_session_model(csr: &Csr, fanouts: &Fanouts,
+                            choice: PlannerChoice)
+                            -> Option<SharedCostModel> {
+    (choice == PlannerChoice::Adaptive).then(|| {
+        Arc::new(Mutex::new(CostModel::new(csr, fanouts, choice)))
+    })
+}
+
 /// A planner for one `(graph, fanouts)` configuration: turns frontier
 /// rows into costs and costs into contiguous shard plans. Cheap to build
 /// (the degree summary is cached on the [`Csr`]); hold one per training
@@ -370,6 +458,11 @@ pub struct CostModel {
     sub2: f64,
     /// Adaptive: per-worker relative speed (empty = uniform).
     weights: Vec<f64>,
+    /// Sharded passes folded into the weights so far (this session plus
+    /// any warm-started history).
+    steps_observed: u64,
+    /// Timing seam for every sharded pass planned through this model.
+    clock: Arc<dyn ShardClock>,
 }
 
 impl CostModel {
@@ -391,11 +484,38 @@ impl CostModel {
                 (Some(s), sub)
             }
         };
-        CostModel { choice, ks, wb_nominal, summary, sub2, weights: Vec::new() }
+        CostModel {
+            choice,
+            ks,
+            wb_nominal,
+            summary,
+            sub2,
+            weights: Vec::new(),
+            steps_observed: 0,
+            clock: Arc::new(WallClock),
+        }
     }
 
     pub fn choice(&self) -> PlannerChoice {
         self.choice
+    }
+
+    /// Replace the timing seam (tests script a [`VirtualClock`] here;
+    /// production keeps the default [`WallClock`]).
+    pub fn with_clock(mut self, clock: Arc<dyn ShardClock>) -> CostModel {
+        self.clock = clock;
+        self
+    }
+
+    /// The timing seam every sharded pass planned by this model must
+    /// route its per-shard measurements through.
+    pub fn clock(&self) -> Arc<dyn ShardClock> {
+        self.clock.clone()
+    }
+
+    /// Sharded passes folded into the adaptive weights so far.
+    pub fn steps_observed(&self) -> u64 {
+        self.steps_observed
     }
 
     /// Planner cost of the full sampling subtree under one seed row.
@@ -440,13 +560,18 @@ impl CostModel {
     }
 
     /// Cut `costs` into at most `parts` contiguous shards. Adaptive
-    /// applies the measured per-worker speed weights; the others use
-    /// plain cost quantiles.
+    /// applies the measured per-worker speed weights (resized on the fly
+    /// when this plan's worker count differs from the observed one — a
+    /// warm-started session must not wait for its first observation);
+    /// the others use plain cost quantiles.
     pub fn plan(&self, costs: &[u64], parts: usize) -> Vec<Range<usize>> {
-        if self.choice == PlannerChoice::Adaptive
-            && self.weights.len() == parts
+        if self.choice == PlannerChoice::Adaptive && !self.weights.is_empty()
         {
-            return plan_shards_weighted(costs, parts, &self.weights);
+            if self.weights.len() == parts {
+                return plan_shards_weighted(costs, parts, &self.weights);
+            }
+            let w = resize_weights(&self.weights, parts);
+            return plan_shards_weighted(costs, parts, &w);
         }
         plan_shards(costs, parts)
     }
@@ -455,14 +580,17 @@ impl CostModel {
     /// weights (no-op for the other flavors). Shard `j` feeds worker
     /// `j`'s EWMA of cost-units per ms; weights are normalized to mean 1
     /// and clamped so the next plan's cut targets shift toward the
-    /// faster workers.
+    /// faster workers. A changed shard count resizes the learned weights
+    /// (truncate / pad + renormalize) instead of resetting them, and a
+    /// single live shard still adapts (its worker decays toward the
+    /// uniform weight; starved workers keep their history).
     pub fn observe(&mut self, stats: &ShardStats) {
         if self.choice != PlannerChoice::Adaptive || stats.is_empty() {
             return;
         }
         let parts = stats.shard_ms.len().min(stats.shard_cost.len());
         if self.weights.len() != parts {
-            self.weights = vec![1.0; parts];
+            self.weights = resize_weights(&self.weights, parts);
         }
         // per-shard throughput, normalized to this step's mean
         let mut tp = vec![0.0f64; parts];
@@ -474,9 +602,10 @@ impl CostModel {
                 cnt += 1;
             }
         }
-        if cnt < 2 {
+        if cnt == 0 {
             return;
         }
+        self.steps_observed += 1;
         let mean_tp = sum / cnt as f64;
         for j in 0..parts {
             if tp[j] > 0.0 {
@@ -486,6 +615,27 @@ impl CostModel {
                 self.weights[j] = w.clamp(FEEDBACK_CLAMP.0, FEEDBACK_CLAMP.1);
             }
         }
+    }
+
+    /// Seed the adaptive weights from a persisted session (the
+    /// planner-state warm start). Non-adaptive flavors and invalid
+    /// weight vectors (empty, non-finite, non-positive) are rejected —
+    /// the model stays uniform and returns `false` instead of erroring.
+    /// Accepted weights are renormalized to mean 1 and clamped exactly
+    /// like observed ones.
+    pub fn warm_start(&mut self, weights: &[f64], steps: u64) -> bool {
+        if self.choice != PlannerChoice::Adaptive
+            || weights.is_empty()
+            || weights.iter().any(|w| !w.is_finite() || *w <= 0.0)
+        {
+            return false;
+        }
+        self.weights = resize_weights(weights, weights.len())
+            .iter()
+            .map(|w| w.clamp(FEEDBACK_CLAMP.0, FEEDBACK_CLAMP.1))
+            .collect();
+        self.steps_observed = steps;
+        true
     }
 
     /// Current adaptive per-worker weights (diagnostics / tests).
@@ -634,5 +784,102 @@ mod tests {
         let mut q = CostModel::new(&csr, &fo, PlannerChoice::Quantile);
         q.observe(&ShardStats::new(vec![1.0, 2.0], vec![100, 100]));
         assert!(q.worker_weights().is_empty());
+        assert_eq!(q.steps_observed(), 0);
+    }
+
+    #[test]
+    fn observe_resizes_instead_of_resetting_on_shard_count_change() {
+        let csr = tiny_graph();
+        let mut m = CostModel::new(&csr, &Fanouts::of(&[5, 3]),
+                                   PlannerChoice::Adaptive);
+        // learn a 4-worker skew: worker 0 is 2x fast
+        for _ in 0..20 {
+            m.observe(&ShardStats::new(vec![0.5, 1.0, 1.0, 1.0],
+                                       vec![100, 100, 100, 100]));
+        }
+        let before = m.worker_weights().to_vec();
+        assert!(before[0] > 1.2, "setup failed: {before:?}");
+        // a 2-worker pass must inherit the learned skew, not reset it
+        m.observe(&ShardStats::new(vec![0.5, 1.0], vec![100, 100]));
+        let after = m.worker_weights();
+        assert_eq!(after.len(), 2);
+        assert!(after[0] > 1.1 && after[0] > after[1],
+                "skew lost on resize: {before:?} -> {after:?}");
+        // growing back pads with uniform workers, keeping worker 0 fast
+        m.observe(&ShardStats::new(vec![0.5, 1.0, 1.0], vec![50, 50, 50]));
+        let grown = m.worker_weights();
+        assert_eq!(grown.len(), 3);
+        assert!(grown[0] > grown[1] && grown[0] > grown[2], "{grown:?}");
+    }
+
+    #[test]
+    fn observe_adapts_with_a_single_live_shard() {
+        let csr = tiny_graph();
+        let mut m = CostModel::new(&csr, &Fanouts::of(&[5, 3]),
+                                   PlannerChoice::Adaptive);
+        // skew worker 0 fast, then feed a pass where worker 1 starved
+        for _ in 0..10 {
+            m.observe(&ShardStats::new(vec![0.5, 1.0], vec![100, 100]));
+        }
+        let w0 = m.worker_weights()[0];
+        let w1 = m.worker_weights()[1];
+        let steps = m.steps_observed();
+        assert!(w0 > 1.2, "{w0}");
+        m.observe(&ShardStats::new(vec![3.0, 0.0], vec![200, 0]));
+        // the lone live worker decays toward uniform; the starved
+        // worker's history is untouched; the step still counts
+        let w = m.worker_weights();
+        assert!(w[0] < w0, "lone-shard pass did not adapt: {w0} -> {}", w[0]);
+        assert_eq!(w[1], w1, "starved worker's history was touched");
+        assert_eq!(m.steps_observed(), steps + 1);
+        // a pass with no live shard at all is still a no-op
+        m.observe(&ShardStats::new(vec![0.0, 0.0], vec![0, 0]));
+        assert_eq!(m.steps_observed(), steps + 1);
+    }
+
+    #[test]
+    fn warm_start_seeds_weights_and_rejects_garbage() {
+        let csr = tiny_graph();
+        let fo = Fanouts::of(&[5, 3]);
+        let mut m = CostModel::new(&csr, &fo, PlannerChoice::Adaptive);
+        assert!(m.warm_start(&[1.6, 0.4], 12));
+        assert_eq!(m.steps_observed(), 12);
+        let w = m.worker_weights();
+        assert!((w[0] - 1.6).abs() < 1e-12 && (w[1] - 0.4).abs() < 1e-12);
+        // a warm-started model plans weighted immediately, even at a
+        // different worker count (resize on the fly)
+        let costs = vec![1u64; 120];
+        let plan = m.plan(&costs, 4);
+        assert_eq!(plan.len(), 4);
+        assert!(plan[0].len() > 30, "warm weights ignored: {plan:?}");
+        // invalid inputs are rejected without touching the model
+        let before = m.worker_weights().to_vec();
+        for bad in [&[][..], &[0.0, 1.0][..], &[f64::NAN, 1.0][..],
+                    &[-1.0, 1.0][..]] {
+            assert!(!m.warm_start(bad, 99), "{bad:?} accepted");
+        }
+        assert_eq!(m.worker_weights(), &before[..]);
+        // non-adaptive flavors refuse warm starts entirely
+        let mut q = CostModel::new(&csr, &fo, PlannerChoice::Quantile);
+        assert!(!q.warm_start(&[2.0, 0.5], 5));
+        assert!(q.worker_weights().is_empty());
+    }
+
+    #[test]
+    fn clocks_report_wall_vs_scripted_time() {
+        let wall = WallClock;
+        assert_eq!(wall.shard_ms(3, 999, 1.25), 1.25);
+        let v = VirtualClock::with_slow_worker(4, 0, 2.0);
+        // cost × ms-per-unit, real elapsed ignored; workers past the
+        // script run at 1.0
+        assert_eq!(v.shard_ms(0, 10, 123.0), 20.0);
+        assert_eq!(v.shard_ms(1, 10, 123.0), 10.0);
+        assert_eq!(v.shard_ms(9, 10, 123.0), 10.0);
+        // the seam rides on the model
+        let csr = tiny_graph();
+        let m = CostModel::new(&csr, &Fanouts::of(&[5]),
+                               PlannerChoice::Adaptive)
+            .with_clock(Arc::new(VirtualClock::new(vec![3.0])));
+        assert_eq!(m.clock().shard_ms(0, 7, 0.0), 21.0);
     }
 }

@@ -7,14 +7,18 @@
 
 pub mod cost;
 pub mod shard;
+pub mod state;
 
 use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, ensure, Result};
 
-pub use cost::{CostModel, DegreeSummary, ImbalanceAcc, PlannerChoice,
-               ShardStats};
-pub use shard::{plan_shards, plan_shards_weighted, sample_cost};
+pub use cost::{lock_model, CostModel, DegreeSummary, ImbalanceAcc,
+               PlannerChoice, ShardClock, ShardStats, SharedCostModel,
+               VirtualClock, WallClock};
+pub use shard::{plan_shards, plan_shards_weighted, resize_weights,
+                sample_cost};
+pub use state::{PlannerState, StateEntry, StateKey};
 
 /// Compressed sparse row adjacency with a padded edge capacity.
 #[derive(Clone, Debug)]

@@ -63,6 +63,28 @@ pub fn plan_shards_weighted(costs: &[u64], parts: usize,
     })
 }
 
+/// Adapt a learned per-worker weight vector to a different worker count
+/// without discarding what was measured: truncate (or pad with the
+/// uniform weight 1.0), then renormalize to mean 1 so the relative
+/// speeds of the surviving workers are preserved. Empty input yields
+/// uniform weights of the requested length (callers that treat an
+/// empty vector as "no feedback yet" must gate on that *before*
+/// resizing, as [`super::CostModel::plan`] does).
+pub fn resize_weights(weights: &[f64], parts: usize) -> Vec<f64> {
+    if weights.is_empty() || parts == 0 {
+        return vec![1.0; parts];
+    }
+    let mut w = weights.to_vec();
+    w.resize(parts, 1.0);
+    let mean = w.iter().sum::<f64>() / parts as f64;
+    if mean > 0.0 && mean.is_finite() {
+        for v in w.iter_mut() {
+            *v /= mean;
+        }
+    }
+    w
+}
+
 /// Shared quantile-cut body: `target(total, j, parts)` names the prefix
 /// cost at which cut `j` (1-based, `1..parts`) should land.
 fn plan_with_targets(costs: &[u64], parts: usize,
@@ -190,6 +212,29 @@ mod tests {
         assert_eq!(sample_cost(&csr, 99, 5), 1);
         assert_eq!(sample_cost(&csr, 2, 5), 1); // isolated
         assert_eq!(sample_cost(&csr, 0, 5), 2); // deg 1
+    }
+
+    #[test]
+    fn resize_weights_preserves_relative_speeds() {
+        // empty input yields uniform weights at the requested length;
+        // zero parts yields the empty vector
+        assert_eq!(resize_weights(&[], 3), vec![1.0; 3]);
+        assert!(resize_weights(&[1.0, 2.0], 0).is_empty());
+        // same length: renormalized to mean 1, ordering preserved
+        let same = resize_weights(&[2.0, 1.0, 1.0], 3);
+        assert!((same.iter().sum::<f64>() / 3.0 - 1.0).abs() < 1e-12);
+        assert!(same[0] > same[1]);
+        // truncation keeps the survivors' relative speeds
+        let cut = resize_weights(&[2.0, 0.5, 0.5, 1.0], 2);
+        assert_eq!(cut.len(), 2);
+        assert!((cut[0] / cut[1] - 4.0).abs() < 1e-12, "{cut:?}");
+        assert!((cut.iter().sum::<f64>() / 2.0 - 1.0).abs() < 1e-12);
+        // padding adds uniform workers and renormalizes
+        let grown = resize_weights(&[2.0, 0.5], 4);
+        assert_eq!(grown.len(), 4);
+        assert!((grown[0] / grown[1] - 4.0).abs() < 1e-12);
+        assert!((grown[2] - grown[3]).abs() < 1e-12);
+        assert!((grown.iter().sum::<f64>() / 4.0 - 1.0).abs() < 1e-12);
     }
 
     /// Property: random costs and part counts always produce ordered,

@@ -1,0 +1,400 @@
+//! Planner-state persistence — the adaptive feedback loop across
+//! sessions.
+//!
+//! The adaptive shard planner learns per-worker speed weights from
+//! measured shard times ([`super::CostModel::observe`]), but a model
+//! lives exactly one training session: every run used to restart from
+//! uniform weights and re-learn the same machine (ROADMAP
+//! "Adaptive-planner feedback persistence"; SALIENT's persistent
+//! pipeline profiling makes the same observation, arXiv 2110.08450).
+//! This module is the durable half of the loop: a small versioned JSON
+//! file (`results/planner_state.json` by default, `--planner-state
+//! <path|off>` on the CLI) that round-trips the adaptive weights plus
+//! run metadata, keyed by `(host, thread count, planner flavor)` so
+//! state measured on one machine/shape never warm-starts another.
+//!
+//! Robustness contract (pinned by the unit tests below and
+//! `rust/tests/adaptive.rs`): loading a missing, truncated,
+//! corrupt-JSON, wrong-version, or wrong-shape file **warns and falls
+//! back to an empty state** — a damaged state file can cost warm-start
+//! quality, never a run. Entries that fail validation individually
+//! (non-finite / non-positive weights, bad counters) are skipped, not
+//! fatal. Saving is write-the-whole-file: load-merge-save at shutdown
+//! preserves entries for other keys.
+//!
+//! Determinism scope: warm-started weights move *cut positions* only.
+//! Sampled values, aggregates, and loss trajectories are bitwise
+//! independent of any plan (the counter RNG is order-independent), so
+//! persistence cannot change results — only shard balance.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::json::Value;
+
+use super::PlannerChoice;
+
+/// Schema version of `planner_state.json`. Files with any other version
+/// are ignored wholesale (warn + empty) — weights learned under a
+/// different schema are not worth a migration.
+pub const STATE_VERSION: u64 = 1;
+
+/// Identity of one planner-state entry: measured worker speeds are a
+/// property of this machine at this worker count under this flavor.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct StateKey {
+    pub host: String,
+    pub threads: usize,
+    pub planner: PlannerChoice,
+}
+
+impl StateKey {
+    /// The key for the current process: detected host, resolved worker
+    /// count, and the session's planner flavor.
+    pub fn for_session(threads: usize, planner: PlannerChoice) -> StateKey {
+        StateKey { host: host_id(), threads, planner }
+    }
+
+    /// Canonical string form (the JSON object key).
+    pub fn as_string(&self) -> String {
+        format!("{}|t{}|{}", self.host, self.threads, self.planner.as_str())
+    }
+}
+
+/// One persisted adaptive session: the learned weights plus the
+/// metadata warm-start decisions need (how much evidence backs them and
+/// how stale it is).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateEntry {
+    /// Per-worker relative speed weights (mean ≈ 1; all finite > 0).
+    pub weights: Vec<f64>,
+    /// Sharded passes the EWMA has folded in (session + inherited).
+    pub steps_observed: u64,
+    /// Unix seconds of the save — the EWMA's staleness marker.
+    pub saved_unix: u64,
+}
+
+impl StateEntry {
+    fn validate(&self) -> bool {
+        !self.weights.is_empty()
+            && self.weights.iter().all(|w| w.is_finite() && *w > 0.0)
+    }
+}
+
+/// The in-memory view of one planner-state file.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PlannerState {
+    entries: BTreeMap<String, StateEntry>,
+}
+
+impl PlannerState {
+    /// Load a state file. A missing file is a silent empty state (first
+    /// run); anything unreadable — truncated, corrupt JSON, wrong
+    /// version, wrong shape — warns once and returns an empty state.
+    /// Never panics, never errors.
+    pub fn load(path: &Path) -> PlannerState {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return PlannerState::default();
+            }
+            Err(e) => {
+                eprintln!("warning: planner-state {path:?} unreadable ({e}); \
+                           starting from uniform weights");
+                return PlannerState::default();
+            }
+        };
+        let value = match crate::json::parse(&text) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("warning: planner-state {path:?} is not valid \
+                           JSON ({e}); starting from uniform weights");
+                return PlannerState::default();
+            }
+        };
+        match Self::from_json(&value) {
+            Ok(s) => s,
+            Err(msg) => {
+                eprintln!("warning: planner-state {path:?}: {msg}; \
+                           starting from uniform weights");
+                PlannerState::default()
+            }
+        }
+    }
+
+    /// Decode the parsed JSON; `Err` carries a human-readable reason.
+    /// Individually malformed entries are skipped (with a warning), not
+    /// fatal — one bad entry must not discard the others.
+    pub fn from_json(value: &Value) -> Result<PlannerState, String> {
+        let version = value
+            .get("version")
+            .and_then(Value::as_u64)
+            .ok_or("missing version field")?;
+        if version != STATE_VERSION {
+            return Err(format!(
+                "version {version} != supported {STATE_VERSION}"));
+        }
+        let raw = value
+            .get("entries")
+            .and_then(Value::as_obj)
+            .ok_or("missing/malformed entries object")?;
+        let mut entries = BTreeMap::new();
+        for (key, v) in raw {
+            match Self::entry_from_json(v) {
+                Some(e) => {
+                    entries.insert(key.clone(), e);
+                }
+                None => {
+                    eprintln!("warning: planner-state entry {key:?} is \
+                               malformed; skipping it");
+                }
+            }
+        }
+        Ok(PlannerState { entries })
+    }
+
+    fn entry_from_json(v: &Value) -> Option<StateEntry> {
+        let weights: Vec<f64> = v
+            .get("weights")?
+            .as_arr()?
+            .iter()
+            .map(Value::as_f64)
+            .collect::<Option<_>>()?;
+        let entry = StateEntry {
+            weights,
+            steps_observed: v.get("steps_observed")?.as_u64()?,
+            saved_unix: v.get("saved_unix")?.as_u64()?,
+        };
+        entry.validate().then_some(entry)
+    }
+
+    /// Encode to the canonical JSON value (BTreeMap ⇒ stable key order,
+    /// so write→load→write is byte-idempotent).
+    pub fn to_json(&self) -> Value {
+        let mut entries = BTreeMap::new();
+        for (key, e) in &self.entries {
+            let mut obj = BTreeMap::new();
+            obj.insert("weights".into(),
+                       Value::Arr(e.weights.iter().copied()
+                                  .map(Value::Num).collect()));
+            obj.insert("steps_observed".into(),
+                       Value::Num(e.steps_observed as f64));
+            obj.insert("saved_unix".into(), Value::Num(e.saved_unix as f64));
+            entries.insert(key.clone(), Value::Obj(obj));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("version".into(), Value::Num(STATE_VERSION as f64));
+        root.insert("entries".into(), Value::Obj(entries));
+        Value::Obj(root)
+    }
+
+    /// Write the state file (parent directory created on demand).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+
+    pub fn get(&self, key: &StateKey) -> Option<&StateEntry> {
+        self.entries.get(&key.as_string())
+    }
+
+    /// Insert/replace the entry for `key` (invalid entries are dropped
+    /// rather than persisted — the file must always load clean).
+    pub fn put(&mut self, key: &StateKey, entry: StateEntry) {
+        if entry.validate() {
+            self.entries.insert(key.as_string(), entry);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Current unix time in seconds (the `saved_unix` staleness stamp).
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Best-effort stable host identity: `$HOSTNAME`, `/etc/hostname`, or a
+/// fixed fallback. Only ever compared for equality — two hosts mapping
+/// to the same id merely share warm-start state.
+pub fn host_id() -> String {
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        let h = h.trim().to_string();
+        if !h.is_empty() {
+            return h;
+        }
+    }
+    for p in ["/etc/hostname", "/proc/sys/kernel/hostname"] {
+        if let Ok(h) = std::fs::read_to_string(p) {
+            let h = h.trim().to_string();
+            if !h.is_empty() {
+                return h;
+            }
+        }
+    }
+    "localhost".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fsa_planner_state_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn key(threads: usize) -> StateKey {
+        StateKey {
+            host: "testhost".into(),
+            threads,
+            planner: PlannerChoice::Adaptive,
+        }
+    }
+
+    fn entry(weights: &[f64], steps: u64) -> StateEntry {
+        StateEntry { weights: weights.to_vec(), steps_observed: steps,
+                     saved_unix: 1_700_000_000 }
+    }
+
+    #[test]
+    fn save_load_round_trips_entries() {
+        let p = tmp("round_trip.json");
+        let mut s = PlannerState::default();
+        s.put(&key(4), entry(&[1.5, 0.5, 1.0, 1.0], 42));
+        s.put(&key(8), entry(&[1.0; 8], 7));
+        s.save(&p).unwrap();
+        let back = PlannerState::load(&p);
+        assert_eq!(back, s);
+        let e = back.get(&key(4)).unwrap();
+        assert_eq!(e.weights, vec![1.5, 0.5, 1.0, 1.0]);
+        assert_eq!(e.steps_observed, 42);
+        assert_eq!(e.saved_unix, 1_700_000_000);
+        assert!(back.get(&key(2)).is_none(), "wrong key must miss");
+    }
+
+    #[test]
+    fn missing_file_is_a_silent_empty_state() {
+        let s = PlannerState::load(&tmp("does_not_exist.json"));
+        assert!(s.is_empty());
+    }
+
+    /// The fuzz battery the ISSUE names: truncated, corrupt-JSON,
+    /// wrong-version, and wrong-shape files must warn + fall back to
+    /// empty (uniform weights), never panic.
+    #[test]
+    fn corrupt_files_fall_back_to_uniform_not_panic() {
+        let cases: &[(&str, &str)] = &[
+            ("truncated.json", r#"{"version":1,"entries":{"h|t4|ada"#),
+            ("garbage.json", "not json at all"),
+            ("empty.json", ""),
+            ("wrong_version.json", r#"{"version":999,"entries":{}}"#),
+            ("no_version.json", r#"{"entries":{}}"#),
+            ("entries_not_obj.json", r#"{"version":1,"entries":42}"#),
+            ("root_array.json", r#"[1,2,3]"#),
+            ("version_string.json",
+             r#"{"version":"1","entries":{}}"#),
+        ];
+        for (name, text) in cases {
+            let p = tmp(name);
+            std::fs::write(&p, text).unwrap();
+            let s = PlannerState::load(&p);
+            assert!(s.is_empty(), "{name}: expected empty fallback");
+        }
+        // binary garbage too
+        let p = tmp("binary.json");
+        std::fs::write(&p, [0xFFu8, 0x00, 0x92, 0x13]).unwrap();
+        assert!(PlannerState::load(&p).is_empty());
+    }
+
+    #[test]
+    fn malformed_entries_are_skipped_not_fatal() {
+        let p = tmp("mixed_entries.json");
+        std::fs::write(&p, format!(
+            r#"{{"version":{STATE_VERSION},"entries":{{
+                "good|t2|adaptive":{{"weights":[1.2,0.8],
+                                     "steps_observed":5,"saved_unix":9}},
+                "no_weights|t2|adaptive":{{"steps_observed":5,
+                                           "saved_unix":9}},
+                "bad_weights|t2|adaptive":{{"weights":[0.0,1.0],
+                                            "steps_observed":5,
+                                            "saved_unix":9}},
+                "weights_not_numbers|t2|adaptive":{{"weights":["x"],
+                                                    "steps_observed":5,
+                                                    "saved_unix":9}},
+                "entry_not_obj|t2|adaptive":17
+            }}}}"#)).unwrap();
+        let s = PlannerState::load(&p);
+        assert_eq!(s.len(), 1, "only the valid entry survives");
+        let k = StateKey { host: "good".into(), threads: 2,
+                           planner: PlannerChoice::Adaptive };
+        assert_eq!(s.get(&k).unwrap().weights, vec![1.2, 0.8]);
+    }
+
+    #[test]
+    fn put_refuses_invalid_entries() {
+        let mut s = PlannerState::default();
+        s.put(&key(2), entry(&[], 1));
+        s.put(&key(2), entry(&[f64::NAN, 1.0], 1));
+        s.put(&key(2), entry(&[-1.0, 1.0], 1));
+        s.put(&key(2), entry(&[0.0, 1.0], 1));
+        assert!(s.is_empty());
+    }
+
+    /// Property: write→load→write is byte-idempotent for random states
+    /// (BTreeMap key order + the round-tripping f64 writer).
+    #[test]
+    fn prop_write_load_write_is_idempotent() {
+        let mut r = SplitMix64::new(314);
+        for trial in 0..50 {
+            let mut s = PlannerState::default();
+            for i in 0..r.next_below(6) {
+                let parts = 1 + r.next_below(12) as usize;
+                let weights: Vec<f64> = (0..parts)
+                    .map(|_| 0.25 + r.next_below(1500) as f64 / 400.0)
+                    .collect();
+                let k = StateKey {
+                    host: format!("host{}", r.next_below(3)),
+                    threads: parts,
+                    planner: if i % 2 == 0 { PlannerChoice::Adaptive }
+                             else { PlannerChoice::Quantile },
+                };
+                s.put(&k, entry(&weights, r.next_below(1_000_000)));
+            }
+            let p = tmp(&format!("idem_{trial}.json"));
+            s.save(&p).unwrap();
+            let first = std::fs::read(&p).unwrap();
+            let loaded = PlannerState::load(&p);
+            assert_eq!(loaded, s, "trial {trial}: load changed the state");
+            loaded.save(&p).unwrap();
+            let second = std::fs::read(&p).unwrap();
+            assert_eq!(first, second,
+                       "trial {trial}: write→load→write not idempotent");
+        }
+    }
+
+    #[test]
+    fn session_key_uses_detected_host() {
+        let k = StateKey::for_session(4, PlannerChoice::Adaptive);
+        assert!(!k.host.is_empty());
+        assert_eq!(k.threads, 4);
+        let s = k.as_string();
+        assert!(s.ends_with("|t4|adaptive"), "{s}");
+        assert!(unix_now() > 1_600_000_000 || unix_now() == 0);
+    }
+}

@@ -51,6 +51,14 @@ impl Value {
         self.as_i64().and_then(|x| usize::try_from(x).ok())
     }
 
+    /// Non-negative integer view (counters, versions, timestamps).
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|x| {
+            (x >= 0.0 && x.fract() == 0.0 && x <= u64::MAX as f64)
+                .then_some(x as u64)
+        })
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -380,6 +388,15 @@ mod tests {
         assert_eq!(parse("42").unwrap(), Value::Num(42.0));
         assert_eq!(parse("-3.5e2").unwrap(), Value::Num(-350.0));
         assert_eq!(parse("\"hi\"").unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn u64_view_accepts_counters_only() {
+        assert_eq!(parse("42").unwrap().as_u64(), Some(42));
+        assert_eq!(parse("0").unwrap().as_u64(), Some(0));
+        assert_eq!(parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(parse("-3").unwrap().as_u64(), None);
+        assert_eq!(parse("\"7\"").unwrap().as_u64(), None);
     }
 
     #[test]

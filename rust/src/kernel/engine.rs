@@ -29,7 +29,8 @@ use anyhow::{bail, ensure, Result};
 
 use crate::fanout::Fanouts;
 use crate::gen::Dataset;
-use crate::graph::{CostModel, PlannerChoice, ShardStats};
+use crate::graph::{lock_model, CostModel, PlannerChoice, ShardStats,
+                   SharedCostModel};
 use crate::memory::MemoryMeter;
 use crate::metrics::Timer;
 use crate::runtime::backend::{Backend, StepInputs, StepOutcome};
@@ -84,13 +85,16 @@ pub struct NativeConfig {
 }
 
 /// Native CPU training engine; owns the model/optimizer state (and the
-/// shard-planner cost model, so adaptive feedback persists across steps).
+/// shard-planner cost model, so adaptive feedback persists across steps
+/// — and, via [`NativeBackend::with_shared_model`], across the session's
+/// other planning sites and, with planner-state persistence, across
+/// sessions).
 pub struct NativeBackend {
     cfg: NativeConfig,
     ds: Arc<Dataset>,
     feat: Features,
     adamw: AdamwConfig,
-    cost: CostModel,
+    cost: SharedCostModel,
     params: Vec<Vec<f32>>,
     m: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
@@ -99,14 +103,6 @@ pub struct NativeBackend {
 impl NativeBackend {
     pub fn new(ds: Arc<Dataset>, cfg: NativeConfig,
                adamw: AdamwConfig) -> Result<NativeBackend> {
-        ensure!(cfg.fanouts.depth() >= 1, "fanout must have at least 1 hop");
-        let (d, c) = (ds.spec.d, ds.spec.c);
-        let feat = Features::from_dataset(ds.clone(), cfg.amp);
-        let specs = if cfg.fused {
-            fsa_param_specs(d, cfg.hidden, c)
-        } else {
-            dgl_param_specs(d, cfg.hidden, c, cfg.fanouts.depth())
-        };
         // the baseline variant never plans subtrees (its blocks are
         // sharded per level by the sampler), so build the sketch-free
         // nominal model there — the flavor only matters on the fused path
@@ -115,10 +111,34 @@ impl NativeBackend {
         } else {
             PlannerChoice::Nominal
         });
+        Self::with_shared_model(ds, cfg, adamw,
+                                Arc::new(std::sync::Mutex::new(cost)))
+    }
+
+    /// [`NativeBackend::new`] planning through an externally owned
+    /// [`SharedCostModel`] — the trainer threads one model through the
+    /// fused kernel, the host sampler, and the prefetch worker so every
+    /// measured shard feeds the same adaptive weights.
+    pub fn with_shared_model(ds: Arc<Dataset>, cfg: NativeConfig,
+                             adamw: AdamwConfig,
+                             cost: SharedCostModel) -> Result<NativeBackend> {
+        ensure!(cfg.fanouts.depth() >= 1, "fanout must have at least 1 hop");
+        let (d, c) = (ds.spec.d, ds.spec.c);
+        let feat = Features::from_dataset(ds.clone(), cfg.amp);
+        let specs = if cfg.fused {
+            fsa_param_specs(d, cfg.hidden, c)
+        } else {
+            dgl_param_specs(d, cfg.hidden, c, cfg.fanouts.depth())
+        };
         let params = init_params(&specs, cfg.seed);
         let m = params.iter().map(|p| vec![0.0; p.len()]).collect();
         let v = params.iter().map(|p| vec![0.0; p.len()]).collect();
         Ok(NativeBackend { cfg, ds, feat, adamw, cost, params, m, v })
+    }
+
+    /// The engine's planner model (shared for feedback/persistence).
+    pub fn cost_model(&self) -> SharedCostModel {
+        self.cost.clone()
     }
 
     /// Current parameters (tests; canonical spec order).
@@ -167,10 +187,13 @@ impl NativeBackend {
         let (d, h, c) = (self.feat.d, self.cfg.hidden, self.ds.spec.c);
 
         // -- fused sample+aggregate (the kernel); `_saved` keeps the index
-        // tensors alive for the whole step, like the device buffers would be
+        // tensors alive for the whole step, like the device buffers would
+        // be. Planning uses a snapshot of the shared model so the kernel
+        // never holds the session lock across the sharded pass.
+        let cost = lock_model(&self.cost).clone();
         let out = fused::fused_khop_planned(
             &self.ds.graph, &self.feat, seeds, &self.cfg.fanouts, base,
-            self.cfg.save_indices, self.cfg.threads, &self.cost);
+            self.cfg.save_indices, self.cfg.threads, &cost);
         meter.alloc((b * d) as u64 * F32);
         if let Some(saved) = &out.saved {
             for s in saved {
@@ -239,8 +262,9 @@ impl Backend for NativeBackend {
                 self.fsa_loss_grads(inp.seeds, inp.labels, inp.base, meter)?;
             self.apply_adamw(&grads, step);
             // adaptive flavor: fold this step's measured per-shard
-            // throughput into the next plan's cut targets
-            self.cost.observe(&stats);
+            // throughput into the next plan's cut targets (the shared
+            // model, so the sampler's observations compound with ours)
+            lock_model(&self.cost).observe(&stats);
             (loss, Some(pairs),
              (!stats.is_empty()).then_some(stats))
         } else {

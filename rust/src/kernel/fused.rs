@@ -243,13 +243,17 @@ pub fn fused_khop_planned(csr: &Csr, feat: &Features, seeds: &[i32],
                 .iter()
                 .map(|r| costs[r.clone()].iter().sum())
                 .collect();
+            // per-shard timing goes through the model's clock seam
+            // (WallClock in production; tests script a VirtualClock to
+            // make the adaptive feedback loop deterministic)
+            let clock = model.clock();
             std::thread::scope(|s| {
                 let mut agg_rest: &mut [f32] = &mut agg;
                 let mut pairs_rest: &mut [u64] = &mut pairs;
                 let mut ms_rest: &mut [f64] = &mut shard_ms;
                 let mut view_rest: Vec<Option<&mut [i32]>> =
                     view.iter_mut().map(|o| o.as_deref_mut()).collect();
-                for r in plan {
+                for (j, r) in plan.into_iter().enumerate() {
                     let rows = r.end - r.start;
                     let (agg_c, tail) =
                         std::mem::take(&mut agg_rest).split_at_mut(rows * d);
@@ -270,11 +274,13 @@ pub fn fused_khop_planned(csr: &Csr, feat: &Features, seeds: &[i32],
                     }
                     let seed_c = &seeds[r];
                     let kprod_ref = &kprod;
+                    let clock = clock.clone();
+                    let cost_j = shard_cost[j];
                     s.spawn(move || {
                         let t = Timer::start();
                         run_rows(csr, feat, seed_c, ks, kprod_ref, base,
                                  agg_c, &mut saved_c, pairs_c);
-                        ms_c[0] = t.ms();
+                        ms_c[0] = clock.shard_ms(j, cost_j, t.ms());
                     });
                 }
             });

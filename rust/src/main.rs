@@ -80,11 +80,13 @@ SUBCOMMANDS
               [--eval] [--threads N] [--prefetch on|off]
               [--backend auto|native|pjrt]
               [--planner nominal|quantile|adaptive]
+              [--planner-state PATH|off]
   bench-grid  [--quick] [--depths] [--datasets a,b]
               [--fanouts 10x10,15x10,15x10x5] [--batches 512,1024]
               [--steps N] [--warmup N] [--out FILE] [--threads N]
               [--prefetch on|off] [--backend auto|native|pjrt]
               [--planner nominal|quantile|adaptive]
+              [--planner-state PATH|off]
   table       --which 1|2|3|fig1|fig2|fig3|fig4|fig5 [--csv FILE]
   profile     [--steps N] [--warmup N] [--seed S]      (Table 3)
   memory      --dataset NAME --fanout K1xK2[xK3...] --batch B
@@ -124,6 +126,16 @@ PIPELINE KNOBS
                     outputs are bitwise identical under every flavor —
                     only shard balance (reported as the imbalance
                     column/ratio, max/mean worker ms) moves
+  --planner-state   where the adaptive planner persists its measured
+                    per-worker weights across sessions, keyed by
+                    (host, threads, flavor). Default for `train`:
+                    results/planner_state.json (warm-start on load,
+                    save at shutdown); `off` disables. bench-grid
+                    defaults to off so paper-protocol rows never
+                    inherit another run's weights. Corrupt/mismatched
+                    files fall back to uniform weights with a warning.
+                    Adaptive cut positions may differ across sessions
+                    because of this; sampled values never do.
 ";
 
 fn backend_choice(args: &Args) -> Result<BackendChoice> {
@@ -132,6 +144,22 @@ fn backend_choice(args: &Args) -> Result<BackendChoice> {
 
 fn planner_choice(args: &Args) -> Result<PlannerChoice> {
     PlannerChoice::parse(&args.str_or("planner", "quantile"))
+}
+
+/// `--planner-state <path|off>`: where the adaptive planner persists its
+/// per-worker weights. Defaults to `results/planner_state.json`; `off`
+/// disables persistence. Only the adaptive flavor reads/writes it.
+fn planner_state_arg(args: &Args, planner: PlannerChoice)
+                     -> Option<std::path::PathBuf> {
+    match args.str_opt("planner-state") {
+        Some("off") => None,
+        Some(p) => Some(std::path::PathBuf::from(p)),
+        // don't touch (or create) results/ unless the flavor has state
+        None if planner == PlannerChoice::Adaptive => {
+            Some(util::results_dir().join("planner_state.json"))
+        }
+        None => None,
+    }
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
@@ -159,6 +187,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         v => bail!("--variant must be fsa|dgl, got {v:?}"),
     };
     let fanouts = args.fanout("fanout", &Fanouts::of(&[15, 10]))?;
+    let planner = planner_choice(args)?;
     let cfg = TrainConfig {
         variant,
         dataset: args.str_or("dataset", "products_sim"),
@@ -170,7 +199,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         threads: args.usize_or("threads", 1)?,
         prefetch: args.bool_or("prefetch", false)?,
         backend: backend_choice(args)?,
-        planner: planner_choice(args)?,
+        planner,
+        planner_state: planner_state_arg(args, planner),
     };
     let steps = args.usize_or("steps", 30)?;
     let warmup = args.usize_or("warmup", 5)?;
@@ -267,17 +297,18 @@ fn cmd_bench_grid(args: &Args) -> Result<()> {
     grid.prefetch = args.bool_or("prefetch", grid.prefetch)?;
     grid.backend = backend_choice(args)?;
     grid.planner = planner_choice(args)?;
+    // bench cells default to NO planner-state persistence (a
+    // paper-protocol grid must not inherit another run's weights);
+    // --planner-state <path> opts in explicitly
+    grid.planner_state = match args.str_opt("planner-state") {
+        Some("off") | None => None,
+        Some(p) => Some(std::path::PathBuf::from(p)),
+    };
     if grid.threads != 1 || grid.prefetch {
         eprintln!("note: --threads/--prefetch change step_ms/sample_ms \
                    semantics and the CSV schema does not record them — \
                    rows are NOT comparable with paper-protocol runs; use \
                    `fsa throughput` for pipeline scaling measurements");
-    }
-    if grid.planner != PlannerChoice::default() {
-        eprintln!("note: the CSV schema does not record --planner either \
-                   (the imbalance column depends on it) — keep {} rows in \
-                   a separate file from quantile runs; BENCH_native.json \
-                   does record the flavor", grid.planner.as_str());
     }
 
     let out_path = match args.str_opt("out") {
@@ -326,8 +357,8 @@ fn cmd_table(args: &Args) -> Result<()> {
     if rows.is_empty() {
         bail!("{csv:?} contains no parseable rows — it may predate the \
                current schema (the k1,k2 columns became a single fanout \
-               column, and an imbalance column was appended); re-run \
-               `fsa bench-grid`");
+               column, and imbalance + planner columns were appended); \
+               re-run `fsa bench-grid`");
     }
     let text = match which.as_str() {
         "1" => render::table1(&rows),

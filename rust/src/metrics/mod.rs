@@ -114,25 +114,30 @@ pub struct BenchRow {
     /// Median measured shard-imbalance ratio (max/mean per-shard wall
     /// time of the step's sharded host pass; 1.0 = balanced or serial).
     pub imbalance: f64,
+    /// Shard-planner flavor the row ran under ("nominal" | "quantile" |
+    /// "adaptive") — the imbalance column depends on it, so the schema
+    /// records it (closing PR 4's "the CSV does not record --planner"
+    /// gap).
+    pub planner: String,
 }
 
-pub const CSV_HEADER: &str = "dataset,variant,hops,fanout,batch,amp,repeat_seed,steps,step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,nodes_per_s,peak_transient_bytes,loss,imbalance";
+pub const CSV_HEADER: &str = "dataset,variant,hops,fanout,batch,amp,repeat_seed,steps,step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,nodes_per_s,peak_transient_bytes,loss,imbalance,planner";
 
 impl BenchRow {
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.1},{},{:.5},{:.4}",
+            "{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.1},{},{:.5},{:.4},{}",
             self.dataset, self.variant, self.hops, self.fanout,
             self.batch, self.amp, self.repeat_seed, self.steps, self.step_ms,
             self.sample_ms, self.upload_ms, self.execute_ms, self.pairs_per_s,
             self.nodes_per_s, self.peak_transient_bytes, self.loss,
-            self.imbalance
+            self.imbalance, self.planner
         )
     }
 
     pub fn parse_csv(line: &str) -> Option<BenchRow> {
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 17 {
+        if f.len() != 18 {
             return None;
         }
         // `hops` is derivable from the fanout label; derive it so the two
@@ -157,6 +162,7 @@ impl BenchRow {
             peak_transient_bytes: f[14].parse().ok()?,
             loss: f[15].parse().ok()?,
             imbalance: f[16].parse().ok()?,
+            planner: f[17].to_string(),
         })
     }
 }
@@ -191,24 +197,27 @@ pub struct ThroughputRow {
     /// wall time; 1.0 = balanced or serial) — makes planner regressions
     /// visible without a full bench run.
     pub imbalance: f64,
+    /// Shard-planner flavor the run used (the imbalance column depends
+    /// on it).
+    pub planner: String,
 }
 
-pub const THROUGHPUT_CSV_HEADER: &str = "dataset,hops,fanout,batch,threads,prefetch,steps,steps_per_s,step_ms,sample_ms,overlap_ms,dispatch_ms,utilization,imbalance";
+pub const THROUGHPUT_CSV_HEADER: &str = "dataset,hops,fanout,batch,threads,prefetch,steps,steps_per_s,step_ms,sample_ms,overlap_ms,dispatch_ms,utilization,imbalance,planner";
 
 impl ThroughputRow {
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4}",
+            "{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{}",
             self.dataset, self.hops, self.fanout, self.batch,
             self.threads, self.prefetch, self.steps, self.steps_per_s,
             self.step_ms, self.sample_ms, self.overlap_ms, self.dispatch_ms,
-            self.utilization, self.imbalance
+            self.utilization, self.imbalance, self.planner
         )
     }
 
     pub fn parse_csv(line: &str) -> Option<ThroughputRow> {
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 14 {
+        if f.len() != 15 {
             return None;
         }
         // derive hops from the fanout label (see BenchRow::parse_csv)
@@ -228,6 +237,7 @@ impl ThroughputRow {
             dispatch_ms: f[11].parse().ok()?,
             utilization: f[12].parse().ok()?,
             imbalance: f[13].parse().ok()?,
+            planner: f[14].to_string(),
         })
     }
 }
@@ -267,8 +277,10 @@ pub fn median_over_repeats(rows: &[BenchRow]) -> Vec<BenchRow> {
     use std::collections::BTreeMap;
     let mut groups: BTreeMap<String, Vec<&BenchRow>> = BTreeMap::new();
     for r in rows {
-        let key = format!("{}|{}|{}|{}|{}|{}", r.dataset, r.variant,
-                          r.hops, r.fanout, r.batch, r.amp);
+        // planner is part of the key: imbalance medians across flavors
+        // would mix apples and oranges
+        let key = format!("{}|{}|{}|{}|{}|{}|{}", r.dataset, r.variant,
+                          r.hops, r.fanout, r.batch, r.amp, r.planner);
         groups.entry(key).or_default().push(r);
     }
     groups
@@ -297,6 +309,7 @@ pub fn median_over_repeats(rows: &[BenchRow]) -> Vec<BenchRow> {
                     as u64,
                 loss: med(|r| r.loss),
                 imbalance: med(|r| r.imbalance),
+                planner: first.planner.clone(),
             }
         })
         .collect()
@@ -349,6 +362,7 @@ mod tests {
             peak_transient_bytes: 123456,
             loss: 2.0,
             imbalance: 1.25,
+            planner: "quantile".into(),
         }
     }
 
@@ -362,8 +376,33 @@ mod tests {
         assert!((parsed.step_ms - 1.25).abs() < 1e-9);
         assert_eq!(parsed.peak_transient_bytes, 123456);
         assert!((parsed.imbalance - 1.25).abs() < 1e-9);
+        assert_eq!(parsed.planner, "quantile");
         assert_eq!(CSV_HEADER.split(',').count(),
                    row.to_csv().split(',').count());
+    }
+
+    /// Pin both schemas exactly: 18 bench columns / 15 throughput
+    /// columns, with `planner` appended last. A drive-by column
+    /// reorder or rename must fail here, not in a downstream reader.
+    #[test]
+    fn csv_schemas_are_pinned() {
+        assert_eq!(
+            CSV_HEADER,
+            "dataset,variant,hops,fanout,batch,amp,repeat_seed,steps,\
+             step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,\
+             nodes_per_s,peak_transient_bytes,loss,imbalance,planner");
+        assert_eq!(CSV_HEADER.split(',').count(), 18);
+        assert_eq!(
+            THROUGHPUT_CSV_HEADER,
+            "dataset,hops,fanout,batch,threads,prefetch,steps,\
+             steps_per_s,step_ms,sample_ms,overlap_ms,dispatch_ms,\
+             utilization,imbalance,planner");
+        assert_eq!(THROUGHPUT_CSV_HEADER.split(',').count(), 15);
+        // rows with the previous (17-/14-column) schema no longer parse:
+        // the reader rejects rather than misassigns
+        let new = sample_row(42, 1.0).to_csv();
+        let old_17_cols = new.rsplit_once(',').unwrap().0;
+        assert!(BenchRow::parse_csv(old_17_cols).is_none());
     }
 
     #[test]
@@ -404,6 +443,7 @@ mod tests {
             dispatch_ms: 2.0,
             utilization: 0.96,
             imbalance: 1.08,
+            planner: "adaptive".into(),
         };
         let parsed = ThroughputRow::parse_csv(&row.to_csv()).unwrap();
         assert_eq!(parsed.dataset, "arxiv_sim");
@@ -412,6 +452,7 @@ mod tests {
         assert!((parsed.steps_per_s - 123.45).abs() < 1e-6);
         assert!((parsed.utilization - 0.96).abs() < 1e-9);
         assert!((parsed.imbalance - 1.08).abs() < 1e-9);
+        assert_eq!(parsed.planner, "adaptive");
         assert_eq!(THROUGHPUT_CSV_HEADER.split(',').count(),
                    row.to_csv().split(',').count());
     }

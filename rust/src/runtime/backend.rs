@@ -95,7 +95,11 @@ pub struct StepOutcome {
     /// Per-shard wall time/cost of the dispatch's batch sharding (native
     /// fused kernel only; None when the backend does not shard on the
     /// host). Feeds the measured-imbalance metrics and the adaptive
-    /// planner.
+    /// planner's session-shared [`crate::graph::CostModel`] — whose
+    /// weights the trainer persists across sessions via
+    /// `results/planner_state.json` (`--planner-state`). Timing is
+    /// measured through the [`crate::graph::ShardClock`] seam, so tests
+    /// can script it deterministically.
     pub shard_stats: Option<crate::graph::ShardStats>,
 }
 

@@ -24,7 +24,9 @@
 use std::sync::{Arc, Mutex};
 
 use crate::fanout::Fanouts;
-use crate::graph::{shard, CostModel, Csr, ImbalanceAcc, PlannerChoice};
+use crate::graph::{lock_model, shard, CostModel, Csr, ImbalanceAcc,
+                   PlannerChoice, ShardClock, ShardStats, SharedCostModel,
+                   WallClock};
 use crate::metrics::Timer;
 
 use super::{sample_neighbors, Block};
@@ -40,13 +42,18 @@ pub const MIN_ROWS_PER_WORKER: usize = 64;
 /// frontier row's work is its own draws; there is no subtree below it in
 /// the same tensor — see [`CostModel::frontier_cost`]). Nominal and
 /// quantile plans are therefore identical here, so only the adaptive
-/// flavor routes through a [`CostModel`] (whose weighted cut targets the
-/// ROADMAP follow-on will feed from sampler stats). Every sharded pass
-/// contributes its wall time to an [`ImbalanceAcc`] drained by
-/// [`ParallelSampler::take_imbalance`] — the sampler half of the
-/// measured-imbalance feedback loop; passes of different worker counts
-/// (the levels of one block build) aggregate by
-/// critical-path-over-ideal, not by per-shard vectors.
+/// flavor routes through a [`CostModel`]. When a [`SharedCostModel`] is
+/// attached ([`ParallelSampler::with_model`]), every sharded level's
+/// measured [`ShardStats`] is folded back into that model via
+/// [`CostModel::observe`] — the block/baseline sampler adapts through
+/// the *same* per-worker weights as the fused kernel, instead of
+/// discarding what it measures. Every sharded pass also contributes its
+/// wall time to an [`ImbalanceAcc`] drained by
+/// [`ParallelSampler::take_imbalance`]; passes of different worker
+/// counts (the levels of one block build) aggregate by
+/// critical-path-over-ideal, not by per-shard vectors. Per-shard timing
+/// goes through an injectable [`ShardClock`] ([`WallClock`] by default;
+/// tests script a deterministic virtual clock).
 #[derive(Clone, Debug)]
 pub struct ParallelSampler {
     threads: usize,
@@ -54,6 +61,11 @@ pub struct ParallelSampler {
     /// Imbalance accumulator (`Arc`: clones share it, like the stats of
     /// one pipeline stage).
     stats: Arc<Mutex<ImbalanceAcc>>,
+    /// Session-shared planner model (adaptive feedback; None = plan
+    /// standalone and discard the measured stats beyond the Acc).
+    model: Option<SharedCostModel>,
+    /// Timing seam for the sharded passes.
+    clock: Arc<dyn ShardClock>,
 }
 
 impl ParallelSampler {
@@ -73,7 +85,26 @@ impl ParallelSampler {
             threads: t.max(1),
             planner,
             stats: Arc::new(Mutex::new(ImbalanceAcc::default())),
+            model: None,
+            clock: Arc::new(WallClock),
         }
+    }
+
+    /// Attach the session's shared planner model: block builds plan
+    /// through it and fold their measured per-level [`ShardStats`] back
+    /// via [`CostModel::observe`] (the sampler half of the adaptive
+    /// feedback loop). The sampler also adopts the model's clock so one
+    /// seam scripts both the kernel's and the sampler's timing.
+    pub fn with_model(mut self, model: SharedCostModel) -> Self {
+        self.clock = lock_model(&model).clock();
+        self.model = Some(model);
+        self
+    }
+
+    /// Replace the timing seam (tests script a virtual clock here).
+    pub fn with_clock(mut self, clock: Arc<dyn ShardClock>) -> Self {
+        self.clock = clock;
+        self
     }
 
     /// The serial sampler (1 worker) as a `ParallelSampler`.
@@ -84,6 +115,19 @@ impl ParallelSampler {
     /// Configured worker count.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// A sampler sharing this one's planner model and clock but with a
+    /// fresh (empty) imbalance accumulator — the shape the prefetch
+    /// worker needs: shared feedback, private per-batch stats.
+    pub fn fresh_stats(&self) -> ParallelSampler {
+        ParallelSampler {
+            threads: self.threads,
+            planner: self.planner,
+            stats: Arc::new(Mutex::new(ImbalanceAcc::default())),
+            model: self.model.clone(),
+            clock: self.clock.clone(),
+        }
     }
 
     /// Drain the accumulated measured imbalance ratio (None when every
@@ -97,15 +141,18 @@ impl ParallelSampler {
         }
     }
 
-    fn record(&self, shard_ms: &[f64]) {
-        let parts = shard_ms.len();
-        if parts == 0 {
+    /// Fold one sharded pass into the accumulator and, when a shared
+    /// model is attached, into its adaptive per-worker weights — the
+    /// sampler half of the measured feedback loop.
+    fn record(&self, stats: ShardStats) {
+        if stats.is_empty() {
             return;
         }
-        let crit = shard_ms.iter().fold(0.0f64, |m, &v| m.max(v));
-        let ideal = shard_ms.iter().sum::<f64>() / parts as f64;
         if let Ok(mut s) = self.stats.lock() {
-            s.add_pass(crit, ideal);
+            s.add(&stats);
+        }
+        if let Some(m) = &self.model {
+            lock_model(m).observe(&stats);
         }
     }
 
@@ -116,18 +163,25 @@ impl ParallelSampler {
 
     /// Run `fill(node, out_row)` over the planned contiguous shards of
     /// `frontier`, each worker owning a disjoint `width`-column slice of
-    /// `out`; per-shard wall time is recorded into the accumulator.
+    /// `out`. `costs` are the planner's per-row costs (aligned with
+    /// `frontier`); per-shard wall time is measured through the clock
+    /// seam and recorded — with the planned shard costs — into the
+    /// accumulator and the shared model.
     fn run_plan<F>(&self, frontier: &[i32], width: usize, out: &mut [i32],
-                   plan: Vec<std::ops::Range<usize>>, fill: F)
+                   plan: Vec<std::ops::Range<usize>>, costs: &[u64], fill: F)
     where
         F: Fn(i32, &mut [i32]) + Sync,
     {
         let mut shard_ms = vec![0.0f64; plan.len()];
+        let shard_cost: Vec<u64> = plan
+            .iter()
+            .map(|r| costs[r.clone()].iter().sum())
+            .collect();
         std::thread::scope(|s| {
             let mut rest: &mut [i32] = out;
             let mut ms_rest: &mut [f64] = &mut shard_ms;
             let fill = &fill;
-            for r in plan {
+            for (j, r) in plan.into_iter().enumerate() {
                 let take = (r.end - r.start) * width;
                 let slab = std::mem::take(&mut rest);
                 let (chunk, tail) = slab.split_at_mut(take);
@@ -138,26 +192,28 @@ impl ParallelSampler {
                 if rows.is_empty() {
                     continue;
                 }
+                let clock = self.clock.clone();
+                let cost_j = shard_cost[j];
                 s.spawn(move || {
                     let t = Timer::start();
                     for (i, &u) in rows.iter().enumerate() {
                         fill(u, &mut chunk[i * width..(i + 1) * width]);
                     }
-                    ms_c[0] = t.ms();
+                    ms_c[0] = clock.shard_ms(j, cost_j, t.ms());
                 });
             }
         });
-        self.record(&shard_ms);
+        self.record(ShardStats::new(shard_ms, shard_cost));
     }
 
     /// Plan one frontier level from the exact per-row cost
     /// `1 + min(deg, k)`. With a model (the adaptive block path) the
-    /// costs and cuts route through it — today that produces identical
-    /// cuts (a fresh model has no worker weights); it is the hook the
-    /// sampler-feedback follow-on (ROADMAP) fills in.
+    /// cuts route through its measured per-worker weights; the per-row
+    /// costs come back alongside the plan so the executed shards can be
+    /// costed for the feedback observation.
     fn level_plan(&self, csr: &Csr, frontier: &[i32], k: usize, hop: usize,
                   workers: usize, model: Option<&CostModel>)
-                  -> Vec<std::ops::Range<usize>> {
+                  -> (Vec<u64>, Vec<std::ops::Range<usize>>) {
         let costs: Vec<u64> = match model {
             Some(m) => frontier
                 .iter()
@@ -168,10 +224,11 @@ impl ParallelSampler {
                 .map(|&u| shard::sample_cost(csr, u, k))
                 .collect(),
         };
-        match model {
+        let plan = match model {
             Some(m) => m.plan(&costs, workers),
             None => shard::plan_shards(&costs, workers),
-        }
+        };
+        (costs, plan)
     }
 
     /// Parallel [`super::sample_frontier`]: row-major `[frontier.len(), k]`,
@@ -189,9 +246,9 @@ impl ParallelSampler {
             return super::sample_frontier(csr, frontier, k, base, hop);
         }
         let mut out = vec![-1i32; frontier.len() * k];
-        let plan =
+        let (costs, plan) =
             self.level_plan(csr, frontier, k, hop as usize, workers, model);
-        self.run_plan(frontier, k, &mut out, plan, |u, row| {
+        self.run_plan(frontier, k, &mut out, plan, &costs, |u, row| {
             sample_neighbors(csr, u, k, base, hop, row);
         });
         out
@@ -213,9 +270,9 @@ impl ParallelSampler {
             return super::expand_frontier(csr, nodes, k, base, hop);
         }
         let mut out = vec![-1i32; nodes.len() * w];
-        let plan =
+        let (costs, plan) =
             self.level_plan(csr, nodes, k, hop as usize, workers, model);
-        self.run_plan(nodes, w, &mut out, plan, |u, row| {
+        self.run_plan(nodes, w, &mut out, plan, &costs, |u, row| {
             row[0] = u;
             sample_neighbors(csr, u, k, base, hop, &mut row[1..]);
         });
@@ -225,16 +282,22 @@ impl ParallelSampler {
     /// Parallel [`super::build_block`] (bitwise identical at any thread
     /// count and planner flavor): the same level-by-level expansion, each
     /// level sharded by its exact per-row costs. Only the adaptive flavor
-    /// builds a [`CostModel`] — nominal/quantile plans are provably the
-    /// same as the exact path, and skipping the model keeps the default
-    /// block pipeline from building the degree sketch it never reads.
+    /// plans through a [`CostModel`] — nominal/quantile plans are
+    /// provably the same as the exact path, and skipping the model keeps
+    /// the default block pipeline from building the degree sketch it
+    /// never reads. With an attached [`SharedCostModel`] the levels plan
+    /// from a snapshot of the shared weights (this build's observations
+    /// shift the *next* build's cuts, one feedback step per batch).
     pub fn build_block(&self, csr: &Csr, seeds: &[i32], fanouts: &Fanouts,
                        base: u64) -> Block {
         if self.threads == 1 {
             return super::build_block(csr, seeds, fanouts, base);
         }
-        let model = (self.planner == PlannerChoice::Adaptive)
-            .then(|| CostModel::new(csr, fanouts, self.planner));
+        let model: Option<CostModel> = match &self.model {
+            Some(shared) => Some(lock_model(shared).clone()),
+            None => (self.planner == PlannerChoice::Adaptive)
+                .then(|| CostModel::new(csr, fanouts, self.planner)),
+        };
         let depth = fanouts.depth();
         let mut frontiers: Vec<Vec<i32>> = Vec::with_capacity(depth);
         frontiers.push(seeds.to_vec());

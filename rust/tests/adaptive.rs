@@ -1,0 +1,419 @@
+//! Adaptive-planner feedback suite — deterministic by construction.
+//!
+//! Everything here runs on the [`VirtualClock`] seam: per-shard "wall
+//! time" is a scripted function of the planned shard cost (a 2×-slow
+//! worker is exactly 2× slower, every run), so the whole feedback loop —
+//! plan → measure → observe → replan — is a pure function with no
+//! wall-clock dependence. The suite proves:
+//!
+//! 1. **Convergence**: under a 2×-slow worker, adaptive cut targets pull
+//!    work toward the fast workers until the measured imbalance drops
+//!    below a pinned threshold within a pinned step budget.
+//! 2. **Warm start**: a session seeded from persisted weights converges
+//!    in strictly fewer steps than a cold session.
+//! 3. **Sampler-side feedback**: the parallel block sampler's per-level
+//!    stats feed the same shared [`CostModel`] as the fused kernel.
+//! 4. **Persistence e2e**: a trainer writes `planner_state.json` at
+//!    shutdown and a second trainer warm-starts from it — while loss
+//!    trajectories stay bitwise identical (plans never change values).
+//! 5. **No stat leaks**: the prefetch pipeline's stale-accumulation
+//!    discard keeps one batch's sampler stats out of the next step's
+//!    imbalance, at threads 1/4/8.
+//! 6. **Output invariance**: nominal/quantile sampler, kernel, and
+//!    trainer outputs are bitwise identical to the serial reference at
+//!    threads 1/4/8, virtual clock or not.
+
+use std::sync::{Arc, Mutex};
+
+use fusesampleagg::coordinator::pipeline::{prepare_batch, BatchPrefetcher,
+                                           BatchScheduler, HostWork};
+use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Trainer,
+                                 Variant};
+use fusesampleagg::fanout::Fanouts;
+use fusesampleagg::gen::{builtin_spec, Dataset};
+use fusesampleagg::graph::{lock_model, CostModel, PlannerChoice,
+                           PlannerState, ShardClock, ShardStats,
+                           SharedCostModel, StateEntry, StateKey,
+                           VirtualClock};
+use fusesampleagg::kernel::{fused, Features};
+use fusesampleagg::runtime::{BackendChoice, Runtime};
+use fusesampleagg::sampler::{self, ParallelSampler};
+
+/// The pinned convergence contract: with one worker 2× slow among 4, a
+/// uniform plan measures ≥ 1.5 imbalance; adaptive feedback must push it
+/// below 1.15 within 12 observed steps.
+const PARTS: usize = 4;
+const SLOW: f64 = 2.0;
+const THRESH: f64 = 1.15;
+const BUDGET: usize = 12;
+
+fn tiny() -> Dataset {
+    Dataset::generate(builtin_spec("tiny").unwrap()).unwrap()
+}
+
+fn tmp_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("fsa_adaptive_suite");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Drive the pure feedback loop: plan `costs` into [`PARTS`] shards,
+/// time them with `clock`, observe, repeat. Returns the imbalance
+/// trajectory (one entry per step, measured *before* that step's
+/// observation lands) and the first step whose plan was below
+/// [`THRESH`] (`steps` if never).
+fn simulate(model: &mut CostModel, clock: &VirtualClock, costs: &[u64],
+            steps: usize) -> (Vec<f64>, usize) {
+    let mut traj = Vec::with_capacity(steps);
+    let mut converged = steps;
+    for step in 0..steps {
+        let plan = model.plan(costs, PARTS);
+        let shard_cost: Vec<u64> = plan
+            .iter()
+            .map(|r| costs[r.clone()].iter().sum())
+            .collect();
+        let shard_ms: Vec<f64> = shard_cost
+            .iter()
+            .enumerate()
+            .map(|(j, &c)| clock.shard_ms(j, c, 0.0))
+            .collect();
+        let stats = ShardStats::new(shard_ms, shard_cost);
+        let imb = stats.imbalance();
+        traj.push(imb);
+        if imb < THRESH && converged == steps {
+            converged = step;
+        }
+        model.observe(&stats);
+    }
+    (traj, converged)
+}
+
+#[test]
+fn adaptive_converges_under_virtual_2x_slow_worker() {
+    let ds = tiny();
+    let fo = Fanouts::of(&[5, 3]);
+    let clock = VirtualClock::with_slow_worker(PARTS, 0, SLOW);
+    let mut model = CostModel::new(&ds.graph, &fo, PlannerChoice::Adaptive);
+    let costs = vec![16u64; 512];
+    let (traj, converged) = simulate(&mut model, &clock, &costs, BUDGET);
+    // uniform first plan: slow worker is the critical path, ≈ 1.6
+    assert!(traj[0] > 1.5, "cold start not imbalanced: {traj:?}");
+    assert!(converged < BUDGET,
+            "did not converge below {THRESH} within {BUDGET} steps: \
+             {traj:?}");
+    // and it *stays* converged: the last plan is at least as balanced
+    assert!(*traj.last().unwrap() < THRESH, "{traj:?}");
+    // weights moved the right way: the slow worker owns less cost share
+    let w = model.worker_weights();
+    assert_eq!(w.len(), PARTS);
+    assert!(w[0] < 0.8 && w[1] > 1.0, "weights {w:?}");
+    // the same loop under a uniform clock never drifts: imbalance stays
+    // at 1.0 and weights stay (numerically) uniform
+    let flat = VirtualClock::new(vec![1.0; PARTS]);
+    let mut m2 = CostModel::new(&ds.graph, &fo, PlannerChoice::Adaptive);
+    let (traj2, conv2) = simulate(&mut m2, &flat, &costs, 6);
+    assert_eq!(conv2, 0, "{traj2:?}");
+    assert!(traj2.iter().all(|&v| (v - 1.0).abs() < 1e-9), "{traj2:?}");
+}
+
+#[test]
+fn warm_start_converges_strictly_faster_than_cold() {
+    let ds = tiny();
+    let fo = Fanouts::of(&[5, 3]);
+    let clock = VirtualClock::with_slow_worker(PARTS, 0, SLOW);
+    let costs = vec![16u64; 512];
+
+    // cold session: converges, but needs at least one feedback step
+    let mut cold = CostModel::new(&ds.graph, &fo, PlannerChoice::Adaptive);
+    let (cold_traj, cold_steps) = simulate(&mut cold, &clock, &costs, 50);
+    assert!(cold_steps >= 1, "cold start converged with no feedback?! \
+                              {cold_traj:?}");
+    assert!(cold_steps < 50);
+
+    // persist the converged weights through the real state file machinery
+    let path = tmp_dir().join("warm_start.json");
+    let key = StateKey {
+        host: "simhost".into(),
+        threads: PARTS,
+        planner: PlannerChoice::Adaptive,
+    };
+    let mut st = PlannerState::default();
+    st.put(&key, StateEntry {
+        weights: cold.worker_weights().to_vec(),
+        steps_observed: cold.steps_observed(),
+        saved_unix: 1,
+    });
+    st.save(&path).unwrap();
+
+    // warm session: loads the file, seeds the model, converges faster
+    let loaded = PlannerState::load(&path);
+    let entry = loaded.get(&key).expect("saved entry must load back");
+    let mut warm = CostModel::new(&ds.graph, &fo, PlannerChoice::Adaptive);
+    assert!(warm.warm_start(&entry.weights, entry.steps_observed));
+    assert_eq!(warm.steps_observed(), cold.steps_observed());
+    let (warm_traj, warm_steps) = simulate(&mut warm, &clock, &costs, 50);
+    assert!(warm_steps < cold_steps,
+            "warm start ({warm_steps} steps, {warm_traj:?}) not strictly \
+             faster than cold ({cold_steps} steps, {cold_traj:?})");
+    // the very first warm plan is already balanced
+    assert!(warm_traj[0] < THRESH, "{warm_traj:?}");
+}
+
+#[test]
+fn fused_kernel_feeds_adaptive_weights_and_stays_bitwise() {
+    let ds = tiny();
+    let feat = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false);
+    let seeds: Vec<i32> =
+        (0..256i32).map(|i| (i * 3) % ds.spec.n as i32).collect();
+    let fo = Fanouts::of(&[5, 3]);
+    let reference = fused::fused_khop(&ds.graph, &feat, &seeds, &fo, 21,
+                                      true, 1);
+    let clock = Arc::new(VirtualClock::with_slow_worker(PARTS, 0, SLOW));
+    let mut model = CostModel::new(&ds.graph, &fo, PlannerChoice::Adaptive)
+        .with_clock(clock.clone());
+    for step in 0..8 {
+        let out = fused::fused_khop_planned(&ds.graph, &feat, &seeds, &fo,
+                                            21, true, PARTS, &model);
+        assert_eq!(out.agg, reference.agg, "step {step}: agg diverged");
+        assert_eq!(out.saved, reference.saved, "step {step}");
+        assert_eq!(out.pairs, reference.pairs, "step {step}");
+        // the kernel's reported shard times are exactly the scripted
+        // virtual values — no wall clock leaks through the seam
+        assert_eq!(out.stats.shard_ms.len(), PARTS);
+        for (j, (&ms, &c)) in out.stats.shard_ms.iter()
+            .zip(&out.stats.shard_cost).enumerate()
+        {
+            let want = c as f64 * if j == 0 { SLOW } else { 1.0 };
+            assert_eq!(ms, want, "step {step} shard {j}");
+        }
+        model.observe(&out.stats);
+    }
+    let w = model.worker_weights();
+    assert_eq!(w.len(), PARTS);
+    assert!(w[0] < 0.8, "slow worker not discounted: {w:?}");
+    assert!(w[1] > 1.0 && w[2] > 1.0 && w[3] > 1.0, "{w:?}");
+    assert_eq!(model.steps_observed(), 8);
+}
+
+#[test]
+fn sampler_block_builds_feed_the_shared_model_and_stay_bitwise() {
+    let ds = tiny();
+    let fo = Fanouts::of(&[4, 3]);
+    let seeds: Vec<i32> =
+        (0..512i32).map(|i| (i * 7) % ds.spec.n as i32).collect();
+    let serial = sampler::build_block(&ds.graph, &seeds, &fo, 33);
+
+    let clock: Arc<dyn ShardClock> =
+        Arc::new(VirtualClock::with_slow_worker(PARTS, 0, SLOW));
+    let model = CostModel::new(&ds.graph, &fo, PlannerChoice::Adaptive)
+        .with_clock(clock);
+    let shared: SharedCostModel = Arc::new(Mutex::new(model));
+    let s = ParallelSampler::with_planner(PARTS, PlannerChoice::Adaptive)
+        .with_model(shared.clone());
+    for round in 0..6 {
+        let blk = s.build_block(&ds.graph, &seeds, &fo, 33);
+        assert_eq!(blk.frontiers, serial.frontiers, "round {round}");
+        assert_eq!(blk.leaf, serial.leaf, "round {round}");
+        let imb = s.take_imbalance()
+            .expect("sharded block build must record imbalance");
+        assert!(imb >= 1.0 - 1e-9, "round {round}: {imb}");
+    }
+    // both levels of every build observed into the *shared* weights:
+    // the sampler side of the feedback loop is closed
+    let m = lock_model(&shared);
+    let w = m.worker_weights();
+    assert_eq!(w.len(), PARTS, "{w:?}");
+    assert!(w[0] < 0.9 && w[0] < w[1], "sampler feedback missing: {w:?}");
+    assert_eq!(m.steps_observed(), 12, "2 levels x 6 builds");
+}
+
+#[test]
+fn prefetch_discard_never_leaks_stats_between_batches() {
+    let ds = Arc::new(tiny());
+    let fo = Fanouts::of(&[4, 3]);
+    let batch = 256;
+    for &threads in &[1usize, 4, 8] {
+        let clock: Arc<dyn ShardClock> = Arc::new(VirtualClock::new(
+            vec![2.0, 1.0, 1.0, 0.5, 1.0, 3.0, 1.0, 1.0]));
+        // reference: a fresh sampler per batch is leak-free by
+        // construction; the virtual clock makes each batch's imbalance
+        // an exact, comparable value
+        let mut ref_sched = BatchScheduler::new(&ds, batch, 42).unwrap();
+        let mut want = Vec::new();
+        for s in 0..6 {
+            let seeds = ref_sched.next_seeds();
+            let fresh = ParallelSampler::new(threads)
+                .with_clock(clock.clone());
+            let b = prepare_batch(&ds, HostWork::Block, &fo, &fresh, s,
+                                  seeds, ref_sched.base_seed(s));
+            want.push(b.sample_imbalance);
+        }
+        if threads == 1 {
+            assert!(want.iter().all(Option::is_none),
+                    "serial runs must not report imbalance");
+        }
+        // the same batches through one long-lived prefetch sampler:
+        // the stale-accumulation discard must reproduce the fresh
+        // values exactly — any leak shifts the f64 and fails
+        let mut sched = BatchScheduler::new(&ds, batch, 42).unwrap();
+        let worker = ParallelSampler::new(threads).with_clock(clock.clone());
+        let mut pf = BatchPrefetcher::spawn(ds.clone(), HostWork::Block,
+                                            fo.clone(), worker);
+        for s in 0..6 {
+            let got = pf.next_batch(&mut sched).unwrap();
+            assert_eq!(got.step, s);
+            assert_eq!(got.sample_imbalance, want[s],
+                       "threads={threads} step {s}: stats leaked across \
+                        batches");
+        }
+        // direct pollution: an unrelated sharded pass before
+        // prepare_batch must be fully discarded
+        if threads > 1 {
+            let polluted = ParallelSampler::new(threads)
+                .with_clock(clock.clone());
+            let junk: Vec<i32> = (0..448).collect();
+            polluted.sample_frontier(&ds.graph, &junk, 5, 99, 0);
+            let mut sched = BatchScheduler::new(&ds, batch, 42).unwrap();
+            let seeds = sched.next_seeds();
+            let got = prepare_batch(&ds, HostWork::Block, &fo, &polluted,
+                                    0, seeds, sched.base_seed(0));
+            assert_eq!(got.sample_imbalance, want[0],
+                       "threads={threads}: polluted accumulator leaked \
+                        into the batch imbalance");
+        }
+    }
+}
+
+#[test]
+fn trainer_persists_state_and_warm_starts_next_session() {
+    let rt = Runtime::from_env().unwrap();
+    let mut cache = DatasetCache::new();
+    let path = tmp_dir().join("trainer_state.json");
+    let _ = std::fs::remove_file(&path);
+    let mk_cfg = |state: Option<std::path::PathBuf>| TrainConfig {
+        variant: Variant::Fsa,
+        dataset: "tiny".into(),
+        fanouts: Fanouts::of(&[5, 3]),
+        batch: 256,
+        amp: false,
+        save_indices: true,
+        seed: 42,
+        threads: 4,
+        prefetch: false,
+        backend: BackendChoice::Native,
+        planner: PlannerChoice::Adaptive,
+        planner_state: state,
+    };
+    let cfg = mk_cfg(Some(path.clone()));
+    // session 1: cold start, real (wall-clock) feedback, save on drop
+    let losses_cold: Vec<f64> = {
+        let mut tr = Trainer::new(&rt, &mut cache, cfg.clone()).unwrap();
+        assert!(tr.planner_weights().is_none(),
+                "cold session has no weights before feedback");
+        (0..4).map(|_| tr.step().unwrap().loss).collect()
+    };
+    assert!(path.exists(), "session end must write the state file");
+    let state = PlannerState::load(&path);
+    let key = StateKey::for_session(4, PlannerChoice::Adaptive);
+    let entry = state.get(&key)
+        .expect("state file must hold this session's key");
+    assert!(entry.steps_observed >= 1, "{entry:?}");
+    assert_eq!(entry.weights.len(), 4, "{entry:?}");
+    assert!(entry.saved_unix > 0);
+
+    // session 2: warm-starts before its first step
+    let bytes_before = std::fs::read(&path).unwrap();
+    let tr2 = Trainer::new(&rt, &mut cache, cfg.clone()).unwrap();
+    let w = tr2.planner_weights()
+        .expect("second session must warm-start from the file");
+    assert_eq!(w.len(), 4);
+    assert!(w.iter().all(|v| v.is_finite() && *v > 0.0), "{w:?}");
+    drop(tr2);
+    // tr2 observed nothing beyond its warm-start baseline, so its drop
+    // must not rewrite the file (no free staleness-stamp refreshes)
+    assert_eq!(std::fs::read(&path).unwrap(), bytes_before,
+               "measurement-free session rewrote the state file");
+
+    // plans never change values: a warm-started session reproduces the
+    // cold session's loss trajectory bitwise
+    let mut tr3 = Trainer::new(&rt, &mut cache, cfg).unwrap();
+    let losses_warm: Vec<f64> =
+        (0..4).map(|_| tr3.step().unwrap().loss).collect();
+    assert_eq!(losses_cold, losses_warm,
+               "warm-started plans changed computed values");
+
+    drop(tr3);
+    // a corrupted state file degrades to uniform, never errors
+    std::fs::write(&path, "{definitely not json").unwrap();
+    let tr4 = Trainer::new(&rt, &mut cache, mk_cfg(Some(path.clone())))
+        .unwrap();
+    assert!(tr4.planner_weights().is_none(),
+            "corrupt state must fall back to uniform");
+}
+
+/// Acceptance pin: nominal/quantile sampler, kernel, and trainer outputs
+/// are bitwise identical to the serial reference at threads 1/4/8 — with
+/// a virtual clock scripted onto every timing path, proving the clock
+/// seam (and all the feedback plumbing behind it) cannot reach values.
+#[test]
+fn nominal_and_quantile_outputs_identical_at_threads_1_4_8() {
+    let ds = tiny();
+    let feat = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false);
+    let seeds: Vec<i32> =
+        (0..256i32).map(|i| (i * 5) % ds.spec.n as i32).collect();
+    let fo = Fanouts::of(&[4, 3]);
+    let ref_block = sampler::build_block(&ds.graph, &seeds, &fo, 77);
+    let ref_fused = fused::fused_khop(&ds.graph, &feat, &seeds, &fo, 77,
+                                      true, 1);
+    for choice in [PlannerChoice::Nominal, PlannerChoice::Quantile] {
+        for threads in [1usize, 4, 8] {
+            let clock: Arc<dyn ShardClock> =
+                Arc::new(VirtualClock::with_slow_worker(threads, 0, 7.0));
+            let s = ParallelSampler::with_planner(threads, choice)
+                .with_clock(clock.clone());
+            let blk = s.build_block(&ds.graph, &seeds, &fo, 77);
+            assert_eq!(blk.frontiers, ref_block.frontiers,
+                       "{choice:?} t={threads}: sampler diverged");
+            assert_eq!(blk.leaf, ref_block.leaf, "{choice:?} t={threads}");
+            let model = CostModel::new(&ds.graph, &fo, choice)
+                .with_clock(clock);
+            let out = fused::fused_khop_planned(&ds.graph, &feat, &seeds,
+                                                &fo, 77, true, threads,
+                                                &model);
+            assert_eq!(out.agg, ref_fused.agg,
+                       "{choice:?} t={threads}: kernel diverged");
+            assert_eq!(out.saved, ref_fused.saved, "{choice:?} t={threads}");
+            assert_eq!(out.pairs, ref_fused.pairs);
+        }
+    }
+
+    // trainer level: whole loss trajectories across flavors × threads
+    let rt = Runtime::from_env().unwrap();
+    let mut cache = DatasetCache::new();
+    let run = |choice: PlannerChoice, threads: usize,
+               cache: &mut DatasetCache| -> Vec<f64> {
+        let cfg = TrainConfig {
+            variant: Variant::Fsa,
+            dataset: "tiny".into(),
+            fanouts: Fanouts::of(&[4, 3]),
+            batch: 128,
+            amp: false,
+            save_indices: true,
+            seed: 7,
+            threads,
+            prefetch: false,
+            backend: BackendChoice::Native,
+            planner: choice,
+            planner_state: None,
+        };
+        let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
+        (0..5).map(|_| tr.step().unwrap().loss).collect()
+    };
+    let reference = run(PlannerChoice::Nominal, 1, &mut cache);
+    for choice in [PlannerChoice::Nominal, PlannerChoice::Quantile] {
+        for threads in [1usize, 4, 8] {
+            assert_eq!(run(choice, threads, &mut cache), reference,
+                       "{choice:?} t={threads}: trajectory diverged");
+        }
+    }
+}

@@ -327,6 +327,7 @@ fn depth3_bitwise_deterministic_across_threads_1_4_8() {
             prefetch: false,
             backend: BackendChoice::Native,
             planner: Default::default(),
+            planner_state: None,
         };
         let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
         (0..8).map(|_| tr.step().unwrap().loss).collect()
@@ -355,6 +356,7 @@ fn depth3_native_training_end_to_end() {
             prefetch: false,
             backend: BackendChoice::Native,
             planner: Default::default(),
+            planner_state: None,
         };
         let mut tr = Trainer::new(&rt, &mut cache, cfg).unwrap();
         let timings = measure(&mut tr, 2, 30).unwrap();
@@ -393,6 +395,7 @@ fn depth_axis_transient_ratio_grows() {
                 prefetch: false,
                 backend: BackendChoice::Native,
                 planner: Default::default(),
+                planner_state: None,
             };
             let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
             peaks[i] = tr.step().unwrap().transient_bytes;

@@ -45,6 +45,7 @@ fn tiny_cfg(variant: Variant, hops: u32, seed: u64) -> TrainConfig {
         prefetch: false,
         backend: Default::default(),
         planner: Default::default(),
+        planner_state: None,
     }
 }
 
@@ -225,6 +226,7 @@ fn bf16_feature_artifact_trains() {
         prefetch: false,
         backend: Default::default(),
         planner: Default::default(),
+        planner_state: None,
     };
     let mut tr = Trainer::new_named(
         &rt, &mut cache, cfg,

@@ -36,6 +36,7 @@ fn tiny_cfg(variant: Variant, ks: &[usize], seed: u64) -> TrainConfig {
         prefetch: false,
         backend: BackendChoice::Native,
         planner: Default::default(),
+        planner_state: None,
     }
 }
 

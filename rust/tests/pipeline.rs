@@ -71,7 +71,7 @@ fn prefetch_preserves_seed_order_and_base_seed_schedule() {
     // pipelined: double-buffered prefetch with a multi-threaded sampler
     let mut sched = BatchScheduler::new(&ds, batch, seed).unwrap();
     let mut pf = BatchPrefetcher::spawn(ds.clone(), HostWork::Block,
-                                        fo.clone(), 8, Default::default());
+                                        fo.clone(), ParallelSampler::new(8));
     for (s, want) in reference.iter().enumerate() {
         let got = pf.next_batch(&mut sched).unwrap();
         assert_eq!(got.step, s, "batches out of order");

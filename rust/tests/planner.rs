@@ -190,6 +190,7 @@ fn training_trajectories_identical_across_planners() {
                 prefetch: false,
                 backend: BackendChoice::Native,
                 planner,
+                planner_state: None,
             };
             let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
             (0..6).map(|_| tr.step().unwrap().loss).collect()
