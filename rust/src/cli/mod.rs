@@ -114,6 +114,93 @@ impl Args {
                 .map_err(|e| anyhow!("--{key}: {e}")),
         }
     }
+
+    /// Reject options/switches the subcommand does not understand, with
+    /// an edit-distance "did you mean" hint — so a typo like
+    /// `--batch-windw-ms` fails loudly instead of silently applying the
+    /// default.
+    pub fn ensure_known(&self, options: &[&str],
+                        switches: &[&str]) -> Result<()> {
+        for key in self.options.keys() {
+            if !options.contains(&key.as_str()) {
+                if switches.contains(&key.as_str()) {
+                    // a known switch given a value parses as an option;
+                    // accept it (bool_or handles the on/off value)
+                    continue;
+                }
+                bail!("unknown option --{key} for `fsa {}`{}",
+                      self.subcommand,
+                      did_you_mean(key, options, switches));
+            }
+        }
+        for key in &self.switches {
+            if !switches.contains(&key.as_str()) {
+                if options.contains(&key.as_str()) {
+                    bail!("--{key} expects a value");
+                }
+                bail!("unknown option --{key} for `fsa {}`{}",
+                      self.subcommand,
+                      did_you_mean(key, options, switches));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Every subcommand with a one-line summary — single source of truth for
+/// `fsa help` and the unknown-subcommand error.
+pub const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("gen", "generate a synthetic dataset into the artifact cache"),
+    ("train", "train a model (optionally saving a params checkpoint)"),
+    ("serve", "micro-batched online inference over a trained model"),
+    ("bench-grid", "sweep the variant x config bench grid to bench.csv"),
+    ("throughput", "pipeline throughput sweep to throughput.csv"),
+    ("table", "render a results CSV as an aligned table"),
+    ("profile", "per-phase step timing breakdown"),
+    ("memory", "peak transient memory accounting"),
+    ("inspect", "dump dataset / artifact metadata"),
+    ("help", "this overview"),
+];
+
+/// Indented `name  summary` listing of [`SUBCOMMANDS`].
+pub fn subcommand_summary() -> String {
+    let mut out = String::new();
+    for (name, what) in SUBCOMMANDS {
+        out.push_str(&format!("  {name:<11} {what}\n"));
+    }
+    out
+}
+
+/// `"; did you mean --<candidate>?"` when some known key is close
+/// enough to the typo, else empty.
+fn did_you_mean(key: &str, options: &[&str], switches: &[&str]) -> String {
+    let best = options
+        .iter()
+        .chain(switches.iter())
+        .map(|c| (levenshtein(key, c), *c))
+        .min();
+    match best {
+        Some((d, c)) if d <= 2 || d * 3 <= key.len() => {
+            format!("; did you mean --{c}?")
+        }
+        _ => String::new(),
+    }
+}
+
+/// Classic two-row edit distance, over bytes (keys are ASCII).
+pub fn levenshtein(a: &str, b: &str) -> usize {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 /// Parse an arbitrary-depth fanout string — "k1xk2x…" / "k1_k2_…" /
@@ -209,6 +296,56 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("fanout"), "{err}");
+    }
+
+    #[test]
+    fn unknown_options_are_rejected_with_hint() {
+        const OPTS: &[&str] = &["batch-window-ms", "max-batch",
+                                "queue-depth", "dataset"];
+        const SWITCHES: &[&str] = &["bench"];
+        // clean invocations pass
+        let ok = parse(&["serve", "--batch-window-ms", "2",
+                         "--dataset", "tiny", "--bench"]);
+        ok.ensure_known(OPTS, SWITCHES).unwrap();
+        // the motivating typo: suggests the real flag
+        let typo = parse(&["serve", "--batch-windw-ms", "2"]);
+        let err = typo.ensure_known(OPTS, SWITCHES).unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown option --batch-windw-ms"), "{err}");
+        assert!(err.contains("`fsa serve`"), "{err}");
+        assert!(err.contains("did you mean --batch-window-ms?"), "{err}");
+        // a known option used as a bare switch asks for its value
+        let bare = parse(&["serve", "--queue-depth"]);
+        let err = bare.ensure_known(OPTS, SWITCHES).unwrap_err()
+            .to_string();
+        assert!(err.contains("--queue-depth expects a value"), "{err}");
+        // unknown switch, nothing nearby: no bogus suggestion
+        let junk = parse(&["serve", "--zzzzzz"]);
+        let err = junk.ensure_known(OPTS, SWITCHES).unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown option --zzzzzz"), "{err}");
+        assert!(!err.contains("did you mean"), "{err}");
+        // a known switch given an on/off value still passes
+        let sw = parse(&["serve", "--bench", "on"]);
+        sw.ensure_known(OPTS, SWITCHES).unwrap();
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", ""), 0);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("abc", ""), 3);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("batch-windw-ms", "batch-window-ms"), 1);
+    }
+
+    #[test]
+    fn subcommand_listing_covers_serve() {
+        assert!(SUBCOMMANDS.iter().any(|(n, _)| *n == "serve"));
+        assert!(SUBCOMMANDS.iter().any(|(n, _)| *n == "help"));
+        let listing = subcommand_summary();
+        assert!(listing.contains("serve"));
+        assert!(listing.lines().count() == SUBCOMMANDS.len());
     }
 
     #[test]

@@ -11,6 +11,14 @@
 //! [`Fanouts`] list and the whole stack — host sampling, kernels, model
 //! width, eval protocol — follows its depth.
 //!
+//! Session state — dataset handle, parameters, optimizer state, planner
+//! model + persistence, backend dispatch, RNG schedule — lives in the
+//! [`Engine`] facade ([`crate::engine`]); [`Trainer`] is the training
+//! loop driving [`Engine::step`], and derefs to the engine so the whole
+//! session API (`step`, `evaluate`, `infer`, `save_params`, …) is
+//! available on it. The serving loop ([`crate::serve`]) drives the same
+//! engine through [`Engine::infer`] instead.
+//!
 //! The host half of the step runs through [`pipeline`]: batches are built
 //! by a sharded multi-threaded sampler (`TrainConfig::threads`) and can be
 //! prefetched on a background worker so sampling of step *t+1* overlaps
@@ -24,6 +32,8 @@
 //! in-crate CPU engine ([`crate::kernel`]) at any depth, and `Auto`
 //! (default) tries PJRT and falls back to native — so training works
 //! end-to-end with no artifacts and no PJRT bindings.
+//!
+//! [`Backend`]: crate::runtime::backend::Backend
 
 pub mod pipeline;
 pub mod profile;
@@ -32,22 +42,16 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::fanout::Fanouts;
-use crate::gen::{builtin_spec, Dataset, Split};
-use crate::graph::cost::shared_session_model;
-use crate::graph::state::{unix_now, PlannerState, StateEntry, StateKey};
-use crate::graph::{lock_model, PlannerChoice, SharedCostModel};
-use crate::kernel::{NativeBackend, NativeConfig};
-use crate::memory::MemoryMeter;
-use crate::rng::mix;
-use crate::runtime::backend::{ensure_pjrt_depth, Backend, BackendChoice,
-                              PjrtBackend, StepInputs};
+use crate::gen::{builtin_spec, Dataset};
+use crate::graph::PlannerChoice;
+use crate::kernel::NativeConfig;
+use crate::runtime::backend::BackendChoice;
 use crate::runtime::Runtime;
-use crate::sampler::{self, ParallelSampler};
-use crate::xla;
 
+pub use crate::engine::{evaluate_params, Engine};
 pub use pipeline::{BatchPrefetcher, BatchScheduler, HostWork, PreparedBatch};
 
 /// Which pipeline a trainer drives.
@@ -210,461 +214,58 @@ impl DatasetCache {
     }
 }
 
-/// A live training session for one configuration.
+/// A live training session: the training loop over an [`Engine`].
+///
+/// The trainer owns nothing but the engine — params, graph buffers,
+/// planner state, and the RNG schedule all belong to the facade. It
+/// derefs to [`Engine`], so `trainer.step()`, `trainer.evaluate(..)`,
+/// `trainer.cfg`, `trainer.ds`, … all resolve to the engine's fields
+/// and methods unchanged.
 pub struct Trainer<'rt> {
-    rt: &'rt Runtime,
-    pub cfg: TrainConfig,
-    backend: Box<dyn Backend + 'rt>,
-    pub ds: Arc<Dataset>,
-    pub step_count: usize,
-    // host batch pipeline
-    sched: BatchScheduler,
-    sampler: ParallelSampler,
-    prefetcher: Option<BatchPrefetcher>,
-    pub meter: MemoryMeter,
-    /// The session-shared planner model (adaptive flavor only): the
-    /// fused kernel, the host sampler, and the prefetch thread all plan
-    /// and observe through it.
-    planner_model: Option<SharedCostModel>,
-    /// Where (and under which key) to persist the adaptive weights at
-    /// shutdown (`cfg.planner_state`, resolved), plus the
-    /// `steps_observed` baseline inherited from the warm start — only
-    /// sessions that observed *past* that baseline save, so re-running
-    /// without new measurements never refreshes the staleness stamp.
-    planner_persist: Option<(PathBuf, StateKey, u64)>,
-}
-
-/// One-time note when `Auto` falls back from PJRT to the native engine.
-fn note_native_fallback(err: &anyhow::Error) {
-    static ONCE: std::sync::Once = std::sync::Once::new();
-    ONCE.call_once(|| {
-        eprintln!("note: PJRT backend unavailable ({err:#}); \
-                   using the native CPU engine");
-    });
+    engine: Engine<'rt>,
 }
 
 impl<'rt> Trainer<'rt> {
     pub fn new(rt: &'rt Runtime, cache: &mut DatasetCache,
                cfg: TrainConfig) -> Result<Trainer<'rt>> {
-        let ds = cache.get(rt, &cfg.dataset)?;
-        let shared = Self::session_model(&ds, &cfg);
-        let backend: Box<dyn Backend + 'rt> = match cfg.backend {
-            BackendChoice::Native => Box::new(
-                Self::native_backend(rt, &ds, &cfg, shared.clone())?),
-            BackendChoice::Pjrt => Box::new(Self::pjrt_backend(rt, &ds,
-                                                               &cfg)?),
-            BackendChoice::Auto => match Self::pjrt_backend(rt, &ds, &cfg) {
-                Ok(b) => Box::new(b),
-                Err(e) => {
-                    note_native_fallback(&e);
-                    Box::new(Self::native_backend(rt, &ds, &cfg,
-                                                  shared.clone())?)
-                }
-            },
-        };
-        Self::with_backend(rt, cfg, ds, backend, shared)
+        Ok(Trainer { engine: Engine::new(rt, cache, cfg)? })
     }
 
     /// Build a trainer on an explicit PJRT artifact (e.g. a §Perf tile
     /// variant) whose dims must match `cfg`.
     pub fn new_named(rt: &'rt Runtime, cache: &mut DatasetCache,
                      cfg: TrainConfig, artifact: &str) -> Result<Trainer<'rt>> {
-        let ds = cache.get(rt, &cfg.dataset)?;
-        let shared = Self::session_model(&ds, &cfg);
-        let backend = PjrtBackend::new(
-            rt, &ds, artifact, cfg.variant == Variant::Fsa, &cfg.fanouts,
-            cfg.batch, cfg.save_indices, cfg.seed)?;
-        Self::with_backend(rt, cfg, ds, Box::new(backend), shared)
+        Ok(Trainer { engine: Engine::new_named(rt, cache, cfg, artifact)? })
     }
 
-    /// The session's shared planner model (`Some` for adaptive only —
-    /// see [`crate::graph::cost::shared_session_model`]).
-    fn session_model(ds: &Arc<Dataset>,
-                     cfg: &TrainConfig) -> Option<SharedCostModel> {
-        shared_session_model(&ds.graph, &cfg.fanouts, cfg.planner)
+    /// The session engine this loop drives.
+    pub fn engine(&self) -> &Engine<'rt> {
+        &self.engine
     }
 
-    fn pjrt_backend(rt: &'rt Runtime, ds: &Arc<Dataset>,
-                    cfg: &TrainConfig) -> Result<PjrtBackend<'rt>> {
-        ensure_pjrt_depth(&cfg.fanouts)?;
-        let k1 = cfg.fanouts.k(0);
-        let k2 = if cfg.fanouts.depth() == 2 { cfg.fanouts.k(1) } else { 0 };
-        let name = rt.manifest.find_train(
-            &cfg.artifact_variant(), &cfg.dataset, k1, k2,
-            cfg.batch, cfg.amp, cfg.save_indices)?.name.clone();
-        PjrtBackend::new(rt, ds, &name, cfg.variant == Variant::Fsa,
-                         &cfg.fanouts, cfg.batch, cfg.save_indices, cfg.seed)
+    pub fn engine_mut(&mut self) -> &mut Engine<'rt> {
+        &mut self.engine
     }
 
-    fn native_backend(rt: &Runtime, ds: &Arc<Dataset>, cfg: &TrainConfig,
-                      shared: Option<SharedCostModel>)
-                      -> Result<NativeBackend> {
-        let native_cfg = cfg.native_config(rt.manifest.hidden);
-        match shared {
-            Some(model) => NativeBackend::with_shared_model(
-                ds.clone(), native_cfg, rt.manifest.adamw, model),
-            None => NativeBackend::new(ds.clone(), native_cfg,
-                                       rt.manifest.adamw),
-        }
-    }
-
-    fn with_backend(rt: &'rt Runtime, cfg: TrainConfig, ds: Arc<Dataset>,
-                    backend: Box<dyn Backend + 'rt>,
-                    planner_model: Option<SharedCostModel>)
-                    -> Result<Trainer<'rt>> {
-        let sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)?;
-        let mut sampler =
-            ParallelSampler::with_planner(cfg.threads, cfg.planner);
-        if let Some(m) = &planner_model {
-            sampler = sampler.with_model(m.clone());
-        }
-        // warm-start before any planning happens, so the very first
-        // batch already cuts with the persisted weights
-        let planner_persist = Self::load_planner_state(
-            &cfg, &sampler, planner_model.as_ref());
-        let prefetcher = cfg.prefetch.then(|| {
-            // a dedicated sampler for the prefetch thread: same shared
-            // model and clock, private imbalance accumulator
-            BatchPrefetcher::spawn(ds.clone(), cfg.host_work(),
-                                   cfg.fanouts.clone(),
-                                   sampler.fresh_stats())
-        });
-        Ok(Trainer {
-            rt,
-            cfg,
-            backend,
-            ds,
-            step_count: 0,
-            sched,
-            sampler,
-            prefetcher,
-            meter: MemoryMeter::new(),
-            planner_model,
-            planner_persist,
-        })
-    }
-
-    /// Warm-start the shared model from `cfg.planner_state` (adaptive
-    /// flavor only). Corrupt or mismatched files degrade to uniform
-    /// weights with a warning; a found entry is logged so a second run
-    /// can be seen to warm-start (the CI smoke greps for it). Returns
-    /// the resolved (path, key) to save back to at shutdown.
-    fn load_planner_state(cfg: &TrainConfig, sampler: &ParallelSampler,
-                          model: Option<&SharedCostModel>)
-                          -> Option<(PathBuf, StateKey, u64)> {
-        let (path, model) = match (&cfg.planner_state, model) {
-            (Some(p), Some(m)) => (p.clone(), m),
-            _ => return None,
-        };
-        // key on the *resolved* worker count (0 = auto is a CLI detail)
-        let key = StateKey::for_session(sampler.threads(), cfg.planner);
-        let state = PlannerState::load(&path);
-        let mut baseline = 0u64;
-        if let Some(entry) = state.get(&key) {
-            let mut m = lock_model(model);
-            if m.warm_start(&entry.weights, entry.steps_observed) {
-                baseline = entry.steps_observed;
-                eprintln!("planner-state: warm-start from {} \
-                           ({} steps observed, weights {:?})",
-                          path.display(), entry.steps_observed,
-                          entry.weights);
-            } else {
-                eprintln!("warning: planner-state entry for {} is \
-                           unusable; starting from uniform weights",
-                          key.as_string());
-            }
-        }
-        Some((path, key, baseline))
-    }
-
-    /// Persist the adaptive weights (load-merge-save, preserving other
-    /// keys' entries). Called at drop; callable explicitly by tests.
-    /// Sessions that observed nothing beyond their warm-start baseline
-    /// save nothing — a serial (or measurement-free) run must neither
-    /// clobber measured state with uniform weights nor refresh the
-    /// `saved_unix` staleness stamp without new evidence.
-    pub fn save_planner_state(&self) {
-        let (Some((path, key, baseline)), Some(model)) =
-            (&self.planner_persist, &self.planner_model)
-        else {
-            return;
-        };
-        let (weights, steps) = {
-            let m = lock_model(model);
-            (m.worker_weights().to_vec(), m.steps_observed())
-        };
-        if weights.is_empty() || steps <= *baseline {
-            return;
-        }
-        let mut state = PlannerState::load(path);
-        state.put(key, StateEntry {
-            weights,
-            steps_observed: steps,
-            saved_unix: unix_now(),
-        });
-        match state.save(path) {
-            Ok(()) => eprintln!("planner-state: saved {} ({} steps \
-                                 observed) to {}",
-                                key.as_string(), steps, path.display()),
-            Err(e) => eprintln!("warning: could not save planner-state \
-                                 {}: {e}", path.display()),
-        }
-    }
-
-    /// Current adaptive per-worker weights (None for other flavors or
-    /// before any feedback/warm-start).
-    pub fn planner_weights(&self) -> Option<Vec<f64>> {
-        let m = self.planner_model.as_ref()?;
-        let w = lock_model(m).worker_weights().to_vec();
-        (!w.is_empty()).then_some(w)
-    }
-
-    /// The execution backend actually in use ("native" | "pjrt").
-    pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
-    }
-
-    /// Next batch of seed nodes (reshuffles at epoch boundaries; identical
-    /// order across variants for the same seed). Draws from the shared
-    /// scheduler — mixing manual draws with prefetching degrades the
-    /// prefetcher to the synchronous path (see [`Trainer::acquire_batch`]).
-    pub fn next_batch(&mut self) -> Vec<i32> {
-        self.sched.next_seeds()
-    }
-
-    /// Per-step base seed: shared schedule across variants so both sample
-    /// the same neighborhoods at the same step (paired comparisons).
-    pub fn step_base_seed(&self) -> u64 {
-        mix(self.cfg.seed.wrapping_add(self.step_count as u64))
-    }
-
-    /// Run one training step; returns the timing breakdown.
-    pub fn step(&mut self) -> Result<StepTiming> {
-        let prepared = self.acquire_batch()?;
-        self.step_prepared(prepared)
-    }
-
-    /// Run one step on explicit seeds (used by tests and the e2e example).
-    /// Always samples synchronously; does not consume the scheduler.
-    pub fn step_with_seeds(&mut self, seeds: &[i32]) -> Result<StepTiming> {
-        let prepared = pipeline::prepare_batch(
-            &self.ds, self.cfg.host_work(), &self.cfg.fanouts,
-            &self.sampler, self.step_count, seeds.to_vec(),
-            self.step_base_seed());
-        self.step_prepared(prepared)
-    }
-
-    /// Obtain the batch for the current step — synchronously, or from the
-    /// double-buffered prefetch worker (keeping one batch in flight behind
-    /// the one being consumed so sampling overlaps dispatch).
-    fn acquire_batch(&mut self) -> Result<PreparedBatch> {
-        if let Some(p) = &mut self.prefetcher {
-            let prepared = p.next_batch(&mut self.sched)?;
-            if prepared.step == self.step_count {
-                return Ok(prepared);
-            }
-            // Schedule desync: explicit-seed steps advanced `step_count`
-            // past the prefetched stream. Keep the seed order (the drawn
-            // batch is still next) but resample synchronously with the
-            // base seed the legacy schedule mandates for this step.
-            return Ok(pipeline::prepare_batch(
-                &self.ds, self.cfg.host_work(), &self.cfg.fanouts,
-                &self.sampler, self.step_count, prepared.seeds,
-                self.step_base_seed()));
-        }
-        let seeds = self.sched.next_seeds();
-        Ok(pipeline::prepare_batch(
-            &self.ds, self.cfg.host_work(), &self.cfg.fanouts, &self.sampler,
-            self.step_count, seeds, self.step_base_seed()))
-    }
-
-    /// Dispatch one prepared batch through the backend and account it.
-    fn step_prepared(&mut self, prepared: PreparedBatch) -> Result<StepTiming> {
-        let mut t = StepTiming::default();
-        let b = self.cfg.batch;
-        if prepared.seeds.len() != b {
-            bail!("expected {b} seeds, got {}", prepared.seeds.len());
-        }
-        match prepared.wait_ms {
-            // synchronous build: sampling is the critical path
-            None => t.sample_ms = prepared.sample_ms,
-            // prefetched: only the wait is critical; the build overlapped
-            Some(wait) => {
-                t.sample_ms = wait;
-                t.sample_overlap_ms = prepared.sample_ms;
-            }
-        }
-
-        // ---- synchronized dispatch through the backend seam
-        self.meter.reset_step();
-        let inp = StepInputs {
-            seeds: &prepared.seeds,
-            labels: &prepared.labels,
-            base: prepared.base,
-            block: prepared.block.as_ref(),
-        };
-        let out = self.backend.train_step(self.step_count, &inp,
-                                          &mut self.meter)?;
-        t.upload_ms = out.upload_ms;
-        t.execute_ms = out.execute_ms;
-        t.post_ms = out.post_ms;
-        t.loss = out.loss;
-        // shard balance: the engine's batch shards when it sharded, else
-        // the host sampler's block shards, else serial (1.0)
-        t.imbalance = out
-            .shard_stats
-            .as_ref()
-            .map(|s| s.imbalance())
-            .or(prepared.sample_imbalance)
-            .unwrap_or(1.0);
-        t.transient_bytes = self.meter.peak();
-        self.meter.reset_peak();
-        self.meter.reset_step();
-
-        // untimed: raw sampled-pair count (paper's auxiliary metric) —
-        // fused native kernels count inline; other paths recount here
-        t.pairs = match out.pairs {
-            Some(p) => p,
-            None => match self.cfg.variant {
-                Variant::Dgl => sampler::block_sampled_pairs(
-                    prepared.block.as_ref().unwrap()),
-                Variant::Fsa => sampler::fused_sampled_pairs(
-                    &self.ds.graph, &prepared.seeds, &self.cfg.fanouts,
-                    prepared.base),
-            },
-        };
-
-        self.step_count += 1;
-        Ok(t)
-    }
-
-    /// Current parameters as host f32 tensors (canonical spec order).
-    pub fn params_f32(&self) -> Result<Vec<Vec<f32>>> {
-        self.backend.params_f32()
-    }
-
-    /// Validation accuracy: the depth-matched eval forward at the
-    /// 15-10(-5…) fanout over at least 512 val nodes. Native runs it
-    /// directly; PJRT goes through the dataset's `{fsa2|dgl2}_eval_*`
-    /// artifact (matching the trainer's variant). At depth 2 the two
-    /// protocols coincide, so numbers are comparable across the backend
-    /// seam; at depth 1 the native baseline is a different (single-layer)
-    /// model than the fixed two-layer dgl1 artifacts, and at depth ≥ 3
-    /// only the native path exists — cross-seam comparisons are a
-    /// depth-2 property until L-hop manifests land (ROADMAP).
-    pub fn evaluate(&mut self, max_nodes: usize) -> Result<f64> {
-        let mut nodes = self.ds.split_nodes(Split::Val);
-        nodes.truncate(max_nodes.max(512));
-        let eval_base = mix(self.cfg.seed ^ 0xEAE1);
-        let c = self.ds.spec.c;
-        let mut correct = 0usize;
-        let mut total = 0usize;
-        for chunk in nodes.chunks(512) {
-            let Some(logits) = self.backend.eval_logits(chunk, eval_base)?
-            else {
-                // backend has no forward-only path: AOT eval artifact
-                return evaluate_params(self.rt, &self.ds, self.cfg.variant,
-                                       &self.backend.params_f32()?,
-                                       self.cfg.seed, max_nodes);
-            };
-            for (i, &u) in chunk.iter().enumerate() {
-                let row = &logits[i * c..(i + 1) * c];
-                if argmax(row) as i32 == self.ds.labels[u as usize] {
-                    correct += 1;
-                }
-                total += 1;
-            }
-        }
-        Ok(correct as f64 / total.max(1) as f64)
+    /// Hand the session over (e.g. train, then serve the same weights
+    /// in-process without a checkpoint round trip).
+    pub fn into_engine(self) -> Engine<'rt> {
+        self.engine
     }
 }
 
-impl Drop for Trainer<'_> {
-    /// "Saved at shutdown": persist the adaptive weights when the
-    /// session ends, however it ends. No-op unless `cfg.planner_state`
-    /// is set, the flavor is adaptive, and feedback was observed.
-    fn drop(&mut self) {
-        self.save_planner_state();
+impl<'rt> std::ops::Deref for Trainer<'rt> {
+    type Target = Engine<'rt>;
+
+    fn deref(&self) -> &Engine<'rt> {
+        &self.engine
     }
 }
 
-fn argmax(row: &[f32]) -> usize {
-    row.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
-}
-
-/// Validation accuracy of a parameter set using the dataset's
-/// `{fsa2|dgl2}_eval_*` artifact. Static graph/feature buffers come from
-/// the runtime's per-dataset cache ([`Runtime::graph_bufs`]) instead of
-/// being re-uploaded per call.
-pub fn evaluate_params(rt: &Runtime, ds: &Dataset, variant: Variant,
-                       params: &[Vec<f32>], seed: u64,
-                       max_nodes: usize) -> Result<f64> {
-    let name = format!("{}2_eval_{}_f15x10_b512", variant.as_str(),
-                       ds.spec.name);
-    let exe = rt.load(&name)?;
-    let (b, k1, k2) = (exe.spec.batch, exe.spec.k1, exe.spec.k2);
-    let np = exe.spec.n_params();
-    anyhow::ensure!(params.len() == np,
-                    "eval artifact {name} wants {np} params, got {}",
-                    params.len());
-    let mut nodes = ds.split_nodes(Split::Val);
-    nodes.truncate(max_nodes.max(b));
-    let eval_base = mix(seed ^ 0xEAE1);
-    let x = rt.features_f32(ds)?;
-
-    let mut correct = 0usize;
-    let mut total = 0usize;
-    for chunk in nodes.chunks(b) {
-        let mut seeds = chunk.to_vec();
-        let real = seeds.len();
-        seeds.resize(b, chunk[0]); // pad; padded rows ignored below
-        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(10);
-        for (vals, spec) in params.iter().zip(&exe.spec.inputs[..np]) {
-            owned.push(rt.buf_f32(vals, &spec.shape)?);
-        }
-        let out = match variant {
-            Variant::Fsa => {
-                let graph = rt.graph_bufs(ds)?;
-                owned.push(rt.buf_i32(&seeds, &[b])?);
-                owned.push(rt.buf_u64(&[eval_base], &[1])?);
-                let mut args: Vec<&xla::PjRtBuffer> =
-                    owned[..np].iter().collect();
-                args.push(&graph.rowptr);
-                args.push(&graph.col);
-                args.push(x.as_ref());
-                args.push(&owned[np]);
-                args.push(&owned[np + 1]);
-                exe.run(&args)?
-            }
-            Variant::Dgl => {
-                let fo = Fanouts::new(vec![k1, k2])?;
-                let blk = sampler::build_block(&ds.graph, &seeds, &fo,
-                                               eval_base);
-                owned.push(rt.buf_i32(&blk.frontiers[1], &[b, 1 + k1])?);
-                owned.push(rt.buf_i32(&blk.leaf, &[b, 1 + k1, k2])?);
-                let mut args: Vec<&xla::PjRtBuffer> =
-                    owned[..np].iter().collect();
-                args.push(x.as_ref());
-                args.push(&owned[np]);
-                args.push(&owned[np + 1]);
-                exe.run(&args)?
-            }
-        };
-        let logits = out[0].to_vec::<f32>()?;
-        let c = ds.spec.c;
-        for (i, &u) in chunk.iter().enumerate().take(real) {
-            let row = &logits[i * c..(i + 1) * c];
-            if argmax(row) as i32 == ds.labels[u as usize] {
-                correct += 1;
-            }
-            total += 1;
-        }
+impl std::ops::DerefMut for Trainer<'_> {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        &mut self.engine
     }
-    Ok(correct as f64 / total.max(1) as f64)
 }
 
 /// Warmup + timed measurement loop (the paper's protocol, §5).

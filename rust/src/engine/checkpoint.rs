@@ -1,0 +1,326 @@
+//! Versioned parameter checkpoints (`fsa train --save-params` /
+//! `fsa serve --params`).
+//!
+//! The on-disk format is the in-crate JSON (no serde in this build
+//! environment): a single object carrying a format version, a kind tag,
+//! the session identity (variant / dataset / fanout / hidden width), and
+//! the parameter tensors in canonical spec order. f32 values are written
+//! through f64 — an exact widening — and the writer emits shortest
+//! round-trip decimals, so save → load is bitwise for every finite f32.
+//!
+//! Unlike the planner-state file ([`crate::graph::state`]), which
+//! degrades to defaults on corruption because stale shard weights only
+//! cost balance, a damaged params file would silently serve a *wrong
+//! model* — so every load failure here is a hard error with the path and
+//! the reason, pinned by the fuzz battery below.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::graph::state::unix_now;
+use crate::json::Value;
+
+/// Format version; bump on any incompatible layout change.
+pub const PARAMS_VERSION: u64 = 1;
+
+/// Kind tag distinguishing this file from the other JSON state files
+/// (planner state, manifests) a user might point `--params` at.
+pub const PARAMS_KIND: &str = "fsa-params";
+
+/// One saved parameter set plus the session identity it belongs to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamsCheckpoint {
+    /// Trainer variant ("fsa" | "dgl") — the tensors of one are
+    /// meaningless under the other's forward.
+    pub variant: String,
+    /// Dataset name; features/classes must match at load time.
+    pub dataset: String,
+    /// Fanout label (e.g. "15x10") the model was trained under. Depth
+    /// determines the tensor count, so this is identity, not metadata.
+    pub fanout: String,
+    /// Hidden width the tensor shapes were built for.
+    pub hidden: usize,
+    /// Parameter tensors in canonical spec order (row-major f32).
+    pub params: Vec<Vec<f32>>,
+}
+
+impl ParamsCheckpoint {
+    /// Serialize to a JSON value. Caller must have validated finiteness
+    /// (`save` does): NaN/Inf have no JSON encoding.
+    pub fn to_json(&self) -> Value {
+        let mut root = BTreeMap::new();
+        root.insert("version".into(), Value::Num(PARAMS_VERSION as f64));
+        root.insert("kind".into(), Value::Str(PARAMS_KIND.into()));
+        root.insert("variant".into(), Value::Str(self.variant.clone()));
+        root.insert("dataset".into(), Value::Str(self.dataset.clone()));
+        root.insert("fanout".into(), Value::Str(self.fanout.clone()));
+        root.insert("hidden".into(), Value::Num(self.hidden as f64));
+        root.insert("saved_unix".into(), Value::Num(unix_now() as f64));
+        root.insert("params".into(), Value::Arr(
+            self.params
+                .iter()
+                .map(|t| Value::Arr(
+                    t.iter().map(|&v| Value::Num(v as f64)).collect()))
+                .collect()));
+        Value::Obj(root)
+    }
+
+    /// Write to `path`, creating parent directories. Refuses non-finite
+    /// parameters — a diverged model must fail loudly at save time, not
+    /// produce a file that fails to parse at serve time.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        ensure!(!self.params.is_empty(), "refusing to save a checkpoint \
+                                          with no parameter tensors");
+        for (i, t) in self.params.iter().enumerate() {
+            ensure!(!t.is_empty(), "refusing to save: tensor {i} is empty");
+            for (j, v) in t.iter().enumerate() {
+                ensure!(v.is_finite(),
+                        "refusing to save: params[{i}][{j}] is non-finite \
+                         ({v}) — the model has diverged");
+            }
+        }
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).with_context(
+                    || format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing params checkpoint {}",
+                                     path.display()))
+    }
+
+    /// Load from `path`. Every failure mode — missing file, truncated or
+    /// garbage JSON, wrong version/kind, malformed tensors, non-finite
+    /// values — is a hard error naming the path and the defect.
+    pub fn load(path: &Path) -> Result<ParamsCheckpoint> {
+        let text = std::fs::read_to_string(path).with_context(
+            || format!("reading params checkpoint {}", path.display()))?;
+        let value = crate::json::parse(&text).map_err(
+            |e| anyhow!("params checkpoint {} is not valid JSON ({e})",
+                        path.display()))?;
+        Self::from_json(&value).map_err(
+            |msg| anyhow!("params checkpoint {}: {msg}", path.display()))
+    }
+
+    /// Strict decode; the `Err` string names the first defect found.
+    pub fn from_json(value: &Value)
+                     -> std::result::Result<ParamsCheckpoint, String> {
+        let version = value
+            .get("version")
+            .and_then(Value::as_u64)
+            .ok_or("missing or non-integer version field")?;
+        if version != PARAMS_VERSION {
+            return Err(format!(
+                "format version {version} is not the supported \
+                 {PARAMS_VERSION}"));
+        }
+        let kind = value
+            .get("kind")
+            .and_then(Value::as_str)
+            .ok_or("missing kind field")?;
+        if kind != PARAMS_KIND {
+            return Err(format!(
+                "kind {kind:?} is not {PARAMS_KIND:?} — wrong file?"));
+        }
+        let field = |k: &'static str| {
+            value
+                .get(k)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or(format!("missing or non-string {k} field"))
+        };
+        let variant = field("variant")?;
+        let dataset = field("dataset")?;
+        let fanout = field("fanout")?;
+        let hidden = value
+            .get("hidden")
+            .and_then(Value::as_usize)
+            .ok_or("missing or malformed hidden field")?;
+        let raw = value
+            .get("params")
+            .and_then(Value::as_arr)
+            .ok_or("missing or non-array params field")?;
+        if raw.is_empty() {
+            return Err("params array is empty".into());
+        }
+        let mut params = Vec::with_capacity(raw.len());
+        for (i, t) in raw.iter().enumerate() {
+            let vals = t
+                .as_arr()
+                .ok_or(format!("params[{i}] is not an array"))?;
+            if vals.is_empty() {
+                return Err(format!("params[{i}] is empty"));
+            }
+            let mut tensor = Vec::with_capacity(vals.len());
+            for (j, v) in vals.iter().enumerate() {
+                let x = v
+                    .as_f64()
+                    .ok_or(format!("params[{i}][{j}] is not a number"))?
+                    as f32;
+                if !x.is_finite() {
+                    return Err(format!(
+                        "params[{i}][{j}] is not a finite f32"));
+                }
+                tensor.push(x);
+            }
+            params.push(tensor);
+        }
+        Ok(ParamsCheckpoint { variant, dataset, fanout, hidden, params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fsa_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> ParamsCheckpoint {
+        ParamsCheckpoint {
+            variant: "fsa".into(),
+            dataset: "tiny".into(),
+            fanout: "5x3".into(),
+            hidden: 32,
+            params: vec![
+                vec![1.0, -2.5, 3.25e-4, f32::MIN_POSITIVE, 0.1],
+                vec![0.0, -0.0, f32::MAX, -1.0e-38, 7.0],
+            ],
+        }
+    }
+
+    /// save → load is bitwise for every finite f32 (the writer goes
+    /// through exact f64 widening + shortest round-trip decimals).
+    #[test]
+    fn round_trip_is_bitwise() {
+        let ckpt = sample();
+        let p = tmp("round_trip.json");
+        ckpt.save(&p).unwrap();
+        let back = ParamsCheckpoint::load(&p).unwrap();
+        assert_eq!(back, ckpt);
+        for (a, b) in ckpt.params.iter().zip(&back.params) {
+            for (&x, &y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+            }
+        }
+    }
+
+    /// Awkward f32 values survive the decimal round trip bit-exactly.
+    #[test]
+    fn round_trip_survives_awkward_floats() {
+        let mut r = crate::rng::SplitMix64::new(5);
+        let vals: Vec<f32> = (0..512)
+            .map(|_| (r.next_normal() * 1e3_f64.powf(r.next_f64() * 2.0
+                                                     - 1.0)) as f32)
+            .filter(|v| v.is_finite())
+            .collect();
+        let ckpt = ParamsCheckpoint { params: vec![vals], ..sample() };
+        let p = tmp("awkward.json");
+        ckpt.save(&p).unwrap();
+        assert_eq!(ParamsCheckpoint::load(&p).unwrap(), ckpt);
+    }
+
+    /// Fuzz battery mirroring the planner-state one in
+    /// `graph/state.rs` — but every case here must be a *hard error*
+    /// (serve refuses to run a wrong model) rather than a silent
+    /// degrade-to-defaults.
+    #[test]
+    fn corrupt_files_are_hard_errors() {
+        let good = r#"{"version":1,"kind":"fsa-params","variant":"fsa",
+                       "dataset":"tiny","fanout":"5x3","hidden":32,
+                       "params":[[1.0,2.0]]}"#;
+        assert!(ParamsCheckpoint::from_json(
+            &crate::json::parse(good).unwrap()).is_ok());
+        let cases: &[(&str, &[u8], &str)] = &[
+            ("truncated",
+             br#"{"version":1,"kind":"fsa-params","params":[[0.1"#,
+             "JSON"),
+            ("garbage", b"not json at all", "JSON"),
+            ("empty", b"", "JSON"),
+            ("binary", &[0xFF, 0x00, 0x92, 0x13], "JSON"),
+            ("root_array", b"[1,2,3]", "version"),
+            ("no_version",
+             br#"{"kind":"fsa-params","params":[[1.0]]}"#,
+             "version"),
+            ("version_string",
+             br#"{"version":"1","kind":"fsa-params","params":[[1.0]]}"#,
+             "version"),
+            ("wrong_version",
+             br#"{"version":999,"kind":"fsa-params","params":[[1.0]]}"#,
+             "version 999"),
+            ("no_kind",
+             br#"{"version":1,"variant":"fsa","params":[[1.0]]}"#,
+             "kind"),
+            ("wrong_kind",
+             br#"{"version":1,"kind":"planner-state","params":[[1.0]]}"#,
+             "wrong file"),
+            ("no_params",
+             br#"{"version":1,"kind":"fsa-params","variant":"fsa",
+                 "dataset":"tiny","fanout":"5x3","hidden":32}"#,
+             "params"),
+            ("params_not_array",
+             br#"{"version":1,"kind":"fsa-params","variant":"fsa",
+                 "dataset":"tiny","fanout":"5x3","hidden":32,
+                 "params":7}"#,
+             "params"),
+            ("params_empty",
+             br#"{"version":1,"kind":"fsa-params","variant":"fsa",
+                 "dataset":"tiny","fanout":"5x3","hidden":32,
+                 "params":[]}"#,
+             "empty"),
+            ("tensor_not_array",
+             br#"{"version":1,"kind":"fsa-params","variant":"fsa",
+                 "dataset":"tiny","fanout":"5x3","hidden":32,
+                 "params":[1,2]}"#,
+             "params[0]"),
+            ("tensor_holds_string",
+             br#"{"version":1,"kind":"fsa-params","variant":"fsa",
+                 "dataset":"tiny","fanout":"5x3","hidden":32,
+                 "params":[[1.0,"x"]]}"#,
+             "params[0][1]"),
+            ("overflows_f32",
+             br#"{"version":1,"kind":"fsa-params","variant":"fsa",
+                 "dataset":"tiny","fanout":"5x3","hidden":32,
+                 "params":[[1e300]]}"#,
+             "finite"),
+        ];
+        for (name, bytes, needle) in cases {
+            let p = tmp(&format!("corrupt_{name}.json"));
+            std::fs::write(&p, bytes).unwrap();
+            let err = ParamsCheckpoint::load(&p)
+                .expect_err(&format!("{name} must not load"))
+                .to_string();
+            assert!(err.to_lowercase().contains(&needle.to_lowercase()),
+                    "{name}: error {err:?} does not mention {needle:?}");
+            assert!(err.contains("corrupt_"),
+                    "{name}: error {err:?} does not name the file");
+        }
+        let missing = ParamsCheckpoint::load(&tmp("no_such_file.json"))
+            .unwrap_err()
+            .to_string();
+        assert!(missing.contains("no_such_file"), "{missing}");
+    }
+
+    /// A diverged (NaN/Inf) model refuses to save instead of writing a
+    /// file that cannot parse back.
+    #[test]
+    fn non_finite_params_refuse_to_save() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut ckpt = sample();
+            ckpt.params[1][2] = bad;
+            let err = ckpt
+                .save(&tmp("nonfinite.json"))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("params[1][2]"), "{err}");
+        }
+        let empty = ParamsCheckpoint { params: vec![], ..sample() };
+        assert!(empty.save(&tmp("empty_save.json")).is_err());
+    }
+}

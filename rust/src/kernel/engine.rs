@@ -98,6 +98,9 @@ pub struct NativeBackend {
     params: Vec<Vec<f32>>,
     m: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
+    /// Shard imbalance of the most recent `eval_logits` pass (None when
+    /// it ran serially) — the serving bench reads it per micro-batch.
+    last_eval_imbalance: Option<f64>,
 }
 
 impl NativeBackend {
@@ -133,7 +136,8 @@ impl NativeBackend {
         let params = init_params(&specs, cfg.seed);
         let m = params.iter().map(|p| vec![0.0; p.len()]).collect();
         let v = params.iter().map(|p| vec![0.0; p.len()]).collect();
-        Ok(NativeBackend { cfg, ds, feat, adamw, cost, params, m, v })
+        Ok(NativeBackend { cfg, ds, feat, adamw, cost, params, m, v,
+                           last_eval_imbalance: None })
     }
 
     /// The engine's planner model (shared for feedback/persistence).
@@ -313,19 +317,34 @@ impl Backend for NativeBackend {
         let logits = if self.cfg.fused {
             // eval fanouts differ from the training fanouts, so the
             // session's cost model does not apply — but the *flavor*
-            // must: --planner nominal must not build the degree sketch
-            let model = CostModel::new(&self.ds.graph, &ef,
-                                       self.cfg.planner);
-            let agg = fused::fused_khop_planned(&self.ds.graph, &self.feat,
+            // must: --planner nominal must not build the degree sketch.
+            // The adaptive flavor still seeds the cuts from the shared
+            // model's learned per-worker weights, and feeds the measured
+            // shard times back — forward-only sessions (serving) keep
+            // the feedback loop alive this way.
+            let mut model = CostModel::new(&self.ds.graph, &ef,
+                                           self.cfg.planner);
+            let (weights, steps) = {
+                let shared = lock_model(&self.cost);
+                (shared.worker_weights().to_vec(), shared.steps_observed())
+            };
+            if !weights.is_empty() {
+                model.warm_start(&weights, steps);
+            }
+            let out = fused::fused_khop_planned(&self.ds.graph, &self.feat,
                                                 seeds, &ef, base, false,
-                                                self.cfg.threads,
-                                                &model).agg;
+                                                self.cfg.threads, &model);
+            self.last_eval_imbalance =
+                (!out.stats.is_empty()).then(|| out.stats.imbalance());
+            lock_model(&self.cost).observe(&out.stats);
+            let agg = out.agg;
             let mut x_self = vec![0.0f32; b * d];
             for (i, &s) in seeds.iter().enumerate() {
                 self.feat.copy_row(s as usize, &mut x_self[i * d..(i + 1) * d]);
             }
             self.head_forward(&x_self, &agg, b).2
         } else {
+            self.last_eval_imbalance = None;
             let blk = sampler::build_block(&self.ds.graph, seeds, &ef, base);
             baseline::forward(&self.feat, &blk, &self.params, h, c,
                               self.cfg.threads, &mut scratch).logits
@@ -335,6 +354,34 @@ impl Backend for NativeBackend {
 
     fn params_f32(&self) -> Result<Vec<Vec<f32>>> {
         Ok(self.params.clone())
+    }
+
+    fn set_params_f32(&mut self, params: &[Vec<f32>]) -> Result<()> {
+        ensure!(params.len() == self.params.len(),
+                "checkpoint holds {} tensors but this model has {} \
+                 (different variant or depth?)",
+                params.len(), self.params.len());
+        for (i, (new, cur)) in params.iter().zip(&self.params).enumerate() {
+            ensure!(new.len() == cur.len(),
+                    "checkpoint tensor {i} has {} values but the model \
+                     wants {} (different dataset dims, hidden width, or \
+                     depth?)", new.len(), cur.len());
+            for (j, v) in new.iter().enumerate() {
+                ensure!(v.is_finite(),
+                        "checkpoint tensor {i} value {j} is non-finite \
+                         ({v})");
+            }
+        }
+        self.params = params.to_vec();
+        // restored parameters start a fresh optimizer trajectory
+        for t in self.m.iter_mut().chain(self.v.iter_mut()) {
+            t.iter_mut().for_each(|x| *x = 0.0);
+        }
+        Ok(())
+    }
+
+    fn eval_imbalance(&self) -> Option<f64> {
+        self.last_eval_imbalance
     }
 }
 

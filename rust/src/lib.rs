@@ -28,7 +28,9 @@
 //! | [`runtime`] | PJRT client, artifact manifest, backend seam |
 //! | [`memory`] | transient-memory meter + analytic block model |
 //! | [`metrics`] | timers, robust stats, CSV logging |
+//! | [`engine`] | session facade: params, optimizer, planner, infer/step |
 //! | [`coordinator`] | training loop driver, batch pipeline, profiling |
+//! | [`serve`] | micro-batched online inference queue + load generator |
 //! | [`bench`] | grid runner + renderers + host-pipeline throughput mode |
 //! | [`cli`] | hand-rolled argument parser and subcommands |
 //! | [`xla`] | stand-in for the PJRT bindings (see its module docs) |
@@ -36,6 +38,7 @@
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
+pub mod engine;
 pub mod fanout;
 pub mod gen;
 pub mod graph;
@@ -46,5 +49,6 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod util;
 pub mod xla;

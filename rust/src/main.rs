@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   gen         generate a synthetic dataset, print shape statistics
 //!   train       train one configuration, print per-step timings + loss
+//!   serve       micro-batched online inference over a trained model
 //!   bench-grid  run the paper's benchmark grid → results/bench.csv
 //!   table       render a table/figure (1|2|fig1..fig5) from the CSV
 //!   profile     stage-split baseline profile (Table 3)
@@ -21,19 +22,22 @@
 //!   fsa table --which 1 --csv results/bench.csv
 //!   fsa throughput --dataset arxiv_sim --sweep
 
+use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use fusesampleagg::bench::{self, render, throughput, Grid};
-use fusesampleagg::cli::Args;
+use fusesampleagg::cli::{self, Args};
 use fusesampleagg::coordinator::{profile, DatasetCache, TrainConfig, Trainer,
                                  Variant};
+use fusesampleagg::engine::{argmax, Engine};
 use fusesampleagg::fanout::Fanouts;
-use fusesampleagg::gen::{builtin_spec, Dataset};
+use fusesampleagg::gen::{builtin_spec, Dataset, Split};
 use fusesampleagg::graph::PlannerChoice;
 use fusesampleagg::memory::{self, StepDims};
 use fusesampleagg::metrics;
 use fusesampleagg::runtime::{BackendChoice, Manifest, Runtime};
+use fusesampleagg::serve;
 use fusesampleagg::util;
 
 fn main() {
@@ -54,6 +58,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_str() {
         "gen" => cmd_gen(args),
         "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
         "bench-grid" => cmd_bench_grid(args),
         "table" => cmd_table(args),
         "profile" => cmd_profile(args),
@@ -61,19 +66,24 @@ fn dispatch(args: &Args) -> Result<()> {
         "throughput" => cmd_throughput(args),
         "inspect" => cmd_inspect(args),
         "" | "help" | "--help" => {
-            print!("{}", HELP);
+            print_help();
             Ok(())
         }
-        other => bail!("unknown subcommand {other:?}; try `fsa help`"),
+        other => bail!("unknown subcommand {other:?}; subcommands are:\n{}\
+                        try `fsa help` for full usage",
+                       cli::subcommand_summary()),
     }
 }
 
+fn print_help() {
+    println!("fsa — FuseSampleAgg coordinator (rust+JAX+Pallas \
+              reproduction)\n\nUSAGE: fsa <subcommand> [options]\n\n\
+              SUBCOMMANDS\n{}", cli::subcommand_summary());
+    print!("{}", HELP);
+}
+
 const HELP: &str = "\
-fsa — FuseSampleAgg coordinator (rust+JAX+Pallas reproduction)
-
-USAGE: fsa <subcommand> [options]
-
-SUBCOMMANDS
+OPTIONS PER SUBCOMMAND
   gen         --dataset NAME                       generate + print stats
   train       --variant fsa|dgl --dataset NAME --fanout K1xK2[xK3...]
               --batch B [--steps N] [--warmup N] [--seed S] [--no-amp]
@@ -81,6 +91,20 @@ SUBCOMMANDS
               [--backend auto|native|pjrt]
               [--planner nominal|quantile|adaptive]
               [--planner-state PATH|off]
+              [--save-params FILE]   write a versioned params checkpoint
+                                     at shutdown (for `fsa serve`)
+  serve       [--params FILE] [--dataset NAME] [--variant fsa|dgl]
+              [--fanout K1xK2[...]] [--batch-window-ms X] [--max-batch N]
+              [--queue-depth N] [--threads N] [--backend native]
+              [--planner ...] [--planner-state PATH|off] [--seed S]
+              reads one request per stdin line (space/comma-separated
+              seed node ids), replies with argmax classes + latency;
+              unknown --options are rejected with a suggestion
+              --bench   closed-loop load generator instead of stdin:
+              [--rates R1,R2] [--windows W1,W2] [--duration-ms X]
+              [--clients N] [--seeds-per-request N] [--out FILE]
+              sweeps arrival rate x batch window -> serving.csv with
+              p50/p95/p99 latency, shed counts, achieved rps
   bench-grid  [--quick] [--depths] [--datasets a,b]
               [--fanouts 10x10,15x10,15x10x5] [--batches 512,1024]
               [--steps N] [--warmup N] [--out FILE] [--threads N]
@@ -247,6 +271,179 @@ fn cmd_train(args: &Args) -> Result<()> {
         let acc = trainer.evaluate(2048)?;
         println!("validation accuracy: {:.3}", acc);
     }
+    if let Some(p) = args.str_opt("save-params") {
+        trainer.save_params(Path::new(p))?;
+        println!("saved params checkpoint to {p}");
+    }
+    Ok(())
+}
+
+/// `--key X` as f64 with a default.
+fn f64_opt(args: &Args, key: &str, default: f64) -> Result<f64> {
+    match args.str_opt(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+    }
+}
+
+/// `--key X1,X2,...` as f64s with a default list.
+fn f64_list(args: &Args, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+    match args.str_opt(key) {
+        None => Ok(default.to_vec()),
+        Some(v) => v
+            .split(',')
+            .map(|s| {
+                s.trim().parse().map_err(|_| {
+                    anyhow!("--{key} expects comma-separated numbers, \
+                             got {s:?}")
+                })
+            })
+            .collect(),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    // serve rejects typos outright: a misspelled policy flag silently
+    // falling back to its default is exactly the failure mode an online
+    // service cannot afford
+    const SERVE_OPTIONS: &[&str] = &[
+        "dataset", "variant", "fanout", "params", "batch",
+        "batch-window-ms", "max-batch", "queue-depth", "threads",
+        "backend", "planner", "planner-state", "seed", "rates", "windows",
+        "duration-ms", "clients", "seeds-per-request", "out",
+    ];
+    const SERVE_SWITCHES: &[&str] = &["bench", "no-amp"];
+    args.ensure_known(SERVE_OPTIONS, SERVE_SWITCHES)?;
+
+    let rt = Runtime::from_env()?;
+    let mut cache = DatasetCache::new();
+    let variant = match args.str_or("variant", "fsa").as_str() {
+        "fsa" => Variant::Fsa,
+        "dgl" => Variant::Dgl,
+        v => bail!("--variant must be fsa|dgl, got {v:?}"),
+    };
+    let planner = planner_choice(args)?;
+    let cfg = TrainConfig {
+        variant,
+        dataset: args.str_or("dataset", "products_sim"),
+        fanouts: args.fanout("fanout", &Fanouts::of(&[15, 10]))?,
+        batch: args.usize_or("batch", 64)?,
+        amp: !args.has("no-amp"),
+        save_indices: false,
+        seed: args.u64_or("seed", 42)?,
+        threads: args.usize_or("threads", 1)?,
+        prefetch: false,
+        backend: BackendChoice::parse(&args.str_or("backend", "native"))?,
+        planner,
+        planner_state: planner_state_arg(args, planner),
+    };
+    let scfg = serve::ServeConfig {
+        batch_window_ms: f64_opt(args, "batch-window-ms", 2.0)?,
+        max_batch: args.usize_or("max-batch", 512)?,
+        queue_depth: args.usize_or("queue-depth", 64)?,
+    };
+
+    println!("serving {} on {} fanout {} ({}-hop) threads={} \
+              window={}ms max-batch={} queue-depth={}",
+             cfg.variant.as_str(), cfg.dataset, cfg.fanouts, cfg.hops(),
+             cfg.threads, scfg.batch_window_ms, scfg.max_batch,
+             scfg.queue_depth);
+    let mut engine = Engine::new(&rt, &mut cache, cfg)?;
+    println!("backend: {}", engine.backend_name());
+    match args.str_opt("params") {
+        Some(p) => {
+            engine.load_params(Path::new(p))?;
+            println!("loaded params checkpoint {p}");
+        }
+        None => eprintln!("note: no --params checkpoint; serving freshly \
+                           initialized (untrained) parameters"),
+    }
+
+    // warm up the forward path before taking traffic: a full val-split
+    // pass both JIT-warms caches and, at threads>1, gives the adaptive
+    // planner a sharded measurement to learn from
+    let t = metrics::Timer::start();
+    let mut warm = engine.ds.split_nodes(Split::Val);
+    warm.truncate(warm.len().min(128).max(1));
+    engine.infer(&warm)?;
+    println!("warmup: {} seeds in {:.1} ms", warm.len(), t.ms());
+
+    if args.has("bench") {
+        let bc = serve::bench::BenchConfig {
+            rates: f64_list(args, "rates", &[200.0, 1000.0])?,
+            windows_ms: f64_list(args, "windows", &[0.0, 2.0])?,
+            duration_ms: f64_opt(args, "duration-ms", 1000.0)?,
+            clients: args.usize_or("clients", 4)?,
+            seeds_per_request: args.usize_or("seeds-per-request", 4)?,
+            max_batch: scfg.max_batch,
+            queue_depth: scfg.queue_depth,
+            seed: args.u64_or("seed", 42)?,
+        };
+        let rows = serve::bench::run_bench(&mut engine, &bc)?;
+        println!("\n{}", serve::bench::render_table(&rows));
+        let out_path = match args.str_opt("out") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => util::results_dir().join("serving.csv"),
+        };
+        metrics::write_serving_csv(&out_path, &rows)?;
+        println!("wrote {} rows to {}", rows.len(), out_path.display());
+        return Ok(());
+    }
+
+    // stdin line protocol: one request per line, seed ids separated by
+    // spaces/commas/tabs; EOF (or closing the pipe) shuts down cleanly
+    let (handle, rx) = serve::channel(&scfg, engine.ds.spec.n);
+    let queue_depth = scfg.queue_depth;
+    let reader = std::thread::spawn(move || {
+        use std::io::BufRead as _;
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            let Ok(line) = line else { break };
+            let seeds: Result<Vec<i32>, _> = line
+                .split([',', ' ', '\t'])
+                .filter(|t| !t.is_empty())
+                .map(str::parse::<i32>)
+                .collect();
+            let seeds = match seeds {
+                Ok(s) if !s.is_empty() => s,
+                Ok(_) => continue, // blank line
+                Err(e) => {
+                    eprintln!("bad request line {line:?}: {e}");
+                    continue;
+                }
+            };
+            match handle.submit(seeds.clone()) {
+                Ok(serve::Submit::Accepted(reply)) => {
+                    let Ok(r) = reply.recv() else { break };
+                    let c = r.scores.len() / seeds.len().max(1);
+                    let classes: Vec<usize> = r
+                        .scores
+                        .chunks(c.max(1))
+                        .map(argmax)
+                        .collect();
+                    println!("seeds {seeds:?} -> classes {classes:?} \
+                              ({:.2} ms)", r.latency_ms);
+                }
+                Ok(serve::Submit::Shed) => {
+                    eprintln!("rejected: queue full \
+                               (--queue-depth {queue_depth})");
+                }
+                Err(e) => {
+                    eprintln!("request failed: {e}");
+                }
+            }
+        }
+        // dropping the handle lets the server loop drain and exit
+    });
+    let stats = serve::run_server(&mut engine, &scfg, &rx)?;
+    reader.join().map_err(|_| anyhow!("stdin reader panicked"))?;
+    let (p50, p95, p99) = stats.latency_percentiles();
+    println!("served {} requests in {} micro-batches (mean {:.1} \
+              seeds/batch); latency p50 {:.2} p95 {:.2} p99 {:.2} ms",
+             stats.completed, stats.batches, stats.mean_batch_seeds(),
+             p50, p95, p99);
     Ok(())
 }
 

@@ -242,6 +242,96 @@ impl ThroughputRow {
     }
 }
 
+/// One `fsa serve --bench` grid cell — the schema of
+/// `results/serving.csv`.
+#[derive(Clone, Debug)]
+pub struct ServingRow {
+    pub dataset: String,
+    /// Canonical *training* fanout label of the served model (the
+    /// forward pass itself runs the depth-matched eval protocol).
+    pub fanout: String,
+    /// Execution backend the cell served on ("native" | "pjrt").
+    pub backend: String,
+    /// Shard-planner flavor (the imbalance column depends on it).
+    pub planner: String,
+    /// Micro-batch window the cell ran under, ms.
+    pub batch_window_ms: f64,
+    /// Micro-batch seed budget.
+    pub max_batch: u32,
+    /// Admission queue depth.
+    pub queue_depth: u32,
+    /// Offered arrival rate, requests/s (sum over clients).
+    pub offered_rps: f64,
+    /// Requests answered within the cell.
+    pub completed: u64,
+    /// Requests shed at admission (queue full).
+    pub shed: u64,
+    /// Completed requests per second of cell wall-clock.
+    pub achieved_rps: f64,
+    /// Enqueue→reply latency percentiles, ms.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Median per-micro-batch shard imbalance (1.0 = balanced/serial).
+    pub imbalance: f64,
+}
+
+pub const SERVING_CSV_HEADER: &str = "dataset,fanout,backend,planner,batch_window_ms,max_batch,queue_depth,offered_rps,completed,shed,achieved_rps,p50_ms,p95_ms,p99_ms,imbalance";
+
+impl ServingRow {
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{:.3},{},{},{:.1},{},{},{:.2},{:.4},{:.4},{:.4},{:.4}",
+            self.dataset, self.fanout, self.backend, self.planner,
+            self.batch_window_ms, self.max_batch, self.queue_depth,
+            self.offered_rps, self.completed, self.shed, self.achieved_rps,
+            self.p50_ms, self.p95_ms, self.p99_ms, self.imbalance
+        )
+    }
+
+    pub fn parse_csv(line: &str) -> Option<ServingRow> {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 15 {
+            return None;
+        }
+        Some(ServingRow {
+            dataset: f[0].to_string(),
+            fanout: f[1].to_string(),
+            backend: f[2].to_string(),
+            planner: f[3].to_string(),
+            batch_window_ms: f[4].parse().ok()?,
+            max_batch: f[5].parse().ok()?,
+            queue_depth: f[6].parse().ok()?,
+            offered_rps: f[7].parse().ok()?,
+            completed: f[8].parse().ok()?,
+            shed: f[9].parse().ok()?,
+            achieved_rps: f[10].parse().ok()?,
+            p50_ms: f[11].parse().ok()?,
+            p95_ms: f[12].parse().ok()?,
+            p99_ms: f[13].parse().ok()?,
+            imbalance: f[14].parse().ok()?,
+        })
+    }
+}
+
+/// Write serving rows (with header) to a CSV file.
+pub fn write_serving_csv(path: &Path,
+                         rows: &[ServingRow]) -> std::io::Result<()> {
+    let mut out = String::with_capacity(rows.len() * 96 + 128);
+    out.push_str(SERVING_CSV_HEADER);
+    out.push('\n');
+    for r in rows {
+        let _ = writeln!(out, "{}", r.to_csv());
+    }
+    std::fs::write(path, out)
+}
+
+/// Read serving rows back (skipping header and malformed lines).
+pub fn read_serving_csv(path: &Path) -> std::io::Result<Vec<ServingRow>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(text.lines().skip(1).filter_map(ServingRow::parse_csv).collect())
+}
+
 /// Write throughput rows (with header) to a CSV file.
 pub fn write_throughput_csv(path: &Path,
                             rows: &[ThroughputRow]) -> std::io::Result<()> {
@@ -455,6 +545,73 @@ mod tests {
         assert_eq!(parsed.planner, "adaptive");
         assert_eq!(THROUGHPUT_CSV_HEADER.split(',').count(),
                    row.to_csv().split(',').count());
+    }
+
+    fn sample_serving_row() -> ServingRow {
+        ServingRow {
+            dataset: "tiny".into(),
+            fanout: "5x3".into(),
+            backend: "native".into(),
+            planner: "adaptive".into(),
+            batch_window_ms: 2.0,
+            max_batch: 512,
+            queue_depth: 64,
+            offered_rps: 800.0,
+            completed: 731,
+            shed: 12,
+            achieved_rps: 726.3,
+            p50_ms: 1.2,
+            p95_ms: 3.4,
+            p99_ms: 5.6,
+            imbalance: 1.07,
+        }
+    }
+
+    #[test]
+    fn serving_csv_round_trip() {
+        let row = sample_serving_row();
+        let parsed = ServingRow::parse_csv(&row.to_csv()).unwrap();
+        assert_eq!(parsed.dataset, "tiny");
+        assert_eq!(parsed.backend, "native");
+        assert_eq!(parsed.planner, "adaptive");
+        assert_eq!(parsed.max_batch, 512);
+        assert_eq!(parsed.queue_depth, 64);
+        assert_eq!(parsed.completed, 731);
+        assert_eq!(parsed.shed, 12);
+        assert!((parsed.offered_rps - 800.0).abs() < 1e-9);
+        assert!((parsed.achieved_rps - 726.3).abs() < 1e-6);
+        assert!((parsed.p99_ms - 5.6).abs() < 1e-6);
+        assert!((parsed.imbalance - 1.07).abs() < 1e-6);
+        assert_eq!(SERVING_CSV_HEADER.split(',').count(),
+                   row.to_csv().split(',').count());
+    }
+
+    /// Pin the serving schema exactly, same contract as
+    /// `csv_schemas_are_pinned`: 15 columns, this order, and rows from
+    /// an older (shorter) schema are rejected rather than misassigned.
+    #[test]
+    fn serving_csv_schema_is_pinned() {
+        assert_eq!(
+            SERVING_CSV_HEADER,
+            "dataset,fanout,backend,planner,batch_window_ms,max_batch,\
+             queue_depth,offered_rps,completed,shed,achieved_rps,\
+             p50_ms,p95_ms,p99_ms,imbalance");
+        assert_eq!(SERVING_CSV_HEADER.split(',').count(), 15);
+        let new = sample_serving_row().to_csv();
+        let old_14_cols = new.rsplit_once(',').unwrap().0;
+        assert!(ServingRow::parse_csv(old_14_cols).is_none());
+    }
+
+    #[test]
+    fn serving_csv_file_round_trip() {
+        let dir = std::env::temp_dir().join("fsa_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("serving.csv");
+        let rows = vec![sample_serving_row(), sample_serving_row()];
+        write_serving_csv(&p, &rows).unwrap();
+        let back = read_serving_csv(&p).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].completed, 731);
     }
 
     #[test]

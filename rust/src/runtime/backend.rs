@@ -123,6 +123,22 @@ pub trait Backend {
 
     /// Current parameters as host f32 tensors, canonical spec order.
     fn params_f32(&self) -> Result<Vec<Vec<f32>>>;
+
+    /// Replace the model parameters from host f32 tensors (checkpoint
+    /// restore, `fsa serve --params`). Backends without an in-place
+    /// parameter store must reject with a clear error instead of
+    /// silently serving whatever weights they initialized with.
+    fn set_params_f32(&mut self, _params: &[Vec<f32>]) -> Result<()> {
+        bail!("the {} backend cannot load parameter checkpoints; \
+               use --backend native", self.name())
+    }
+
+    /// Measured shard-imbalance ratio (max/mean per-shard wall time) of
+    /// the most recent `eval_logits` pass — `None` when that pass ran
+    /// serially or the backend does not shard on the host.
+    fn eval_imbalance(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Reject fanouts the AOT manifest cannot express. The manifest only

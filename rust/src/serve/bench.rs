@@ -1,0 +1,179 @@
+//! `fsa serve --bench` — closed-loop load generator over the serving
+//! stack (arrival rates × batch windows → `serving.csv`).
+//!
+//! Each grid cell spawns `clients` closed-loop client threads against a
+//! fresh queue: every client draws deterministic seed sets (SplitMix64
+//! keyed per client), submits, *waits for the reply* before pacing its
+//! next send — so offered load beyond the server's capacity shows up as
+//! rising latency and shed counts rather than an unbounded backlog. The
+//! server loop runs on the calling thread (it owns the engine) for the
+//! cell's duration; when the clients finish and drop their handles the
+//! loop drains and exits, and the cell's stats become one
+//! [`ServingRow`].
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::engine::Engine;
+use crate::metrics::ServingRow;
+use crate::rng::{mix, SplitMix64};
+
+use super::{channel, run_server, ServeConfig, ServeHandle, Submit};
+
+/// The bench grid: one serving cell per (rate, window) pair.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Offered arrival rates, requests/second (summed over clients).
+    pub rates: Vec<f64>,
+    /// Batch windows to sweep, ms.
+    pub windows_ms: Vec<f64>,
+    /// Wall-clock duration of each cell, ms.
+    pub duration_ms: f64,
+    /// Closed-loop client threads.
+    pub clients: usize,
+    /// Seed ids per request.
+    pub seeds_per_request: usize,
+    /// Micro-batch seed budget (`ServeConfig::max_batch`).
+    pub max_batch: usize,
+    /// Admission queue depth (`ServeConfig::queue_depth`).
+    pub queue_depth: usize,
+    /// RNG seed for the clients' node draws.
+    pub seed: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            rates: vec![200.0, 1000.0],
+            windows_ms: vec![0.0, 2.0],
+            duration_ms: 1000.0,
+            clients: 4,
+            seeds_per_request: 4,
+            max_batch: 512,
+            queue_depth: 64,
+            seed: 42,
+        }
+    }
+}
+
+/// Run the grid; one [`ServingRow`] per (rate, window) cell.
+pub fn run_bench(engine: &mut Engine<'_>, bc: &BenchConfig)
+                 -> Result<Vec<ServingRow>> {
+    ensure!(!bc.rates.is_empty() && !bc.windows_ms.is_empty(),
+            "--rates and --windows must be non-empty");
+    ensure!(bc.duration_ms > 0.0, "--duration-ms must be positive");
+    let n_nodes = engine.ds.spec.n;
+    let clients = bc.clients.max(1);
+    let spr = bc.seeds_per_request.max(1);
+    let backend = engine.backend_name().to_string();
+    let mut rows = Vec::new();
+    for &rate in &bc.rates {
+        ensure!(rate.is_finite() && rate > 0.0,
+                "--rates entries must be positive, got {rate}");
+        for &window in &bc.windows_ms {
+            ensure!(window.is_finite() && window >= 0.0,
+                    "--windows entries must be >= 0, got {window}");
+            let scfg = ServeConfig {
+                batch_window_ms: window,
+                max_batch: bc.max_batch,
+                queue_depth: bc.queue_depth,
+            };
+            let (handle, rx) = channel(&scfg, n_nodes);
+            // each client paces at rate/clients so the *sum* offered
+            // load is `rate`
+            let interval = Duration::from_secs_f64(clients as f64 / rate);
+            let started = Instant::now();
+            let deadline =
+                started + Duration::from_secs_f64(bc.duration_ms / 1e3);
+            let workers: Vec<_> = (0..clients)
+                .map(|ci| {
+                    let h = handle.clone();
+                    let seed = mix(bc.seed ^ (0xC11E + ci as u64));
+                    std::thread::spawn(move || {
+                        client_loop(h, n_nodes, spr, interval, deadline,
+                                    seed)
+                    })
+                })
+                .collect();
+            // the clients' clones are the only live handles now, so the
+            // server exits when they all finish
+            drop(handle);
+            let stats = run_server(engine, &scfg, &rx)?;
+            let elapsed_s = started.elapsed().as_secs_f64().max(1e-9);
+            let mut shed = 0u64;
+            for w in workers {
+                shed += w.join().expect("bench client thread panicked");
+            }
+            let (p50, p95, p99) = stats.latency_percentiles();
+            eprintln!("serve-bench: rate {rate:>6.0} rps window \
+                       {window:>4.1} ms -> {} completed, {shed} shed, \
+                       p99 {p99:.2} ms", stats.completed);
+            rows.push(ServingRow {
+                dataset: engine.cfg.dataset.clone(),
+                fanout: engine.cfg.fanouts.label(),
+                backend: backend.clone(),
+                planner: engine.cfg.planner.as_str().to_string(),
+                batch_window_ms: window,
+                max_batch: bc.max_batch as u32,
+                queue_depth: bc.queue_depth as u32,
+                offered_rps: rate,
+                completed: stats.completed,
+                shed,
+                achieved_rps: stats.completed as f64 / elapsed_s,
+                p50_ms: p50,
+                p95_ms: p95,
+                p99_ms: p99,
+                imbalance: stats.median_imbalance(),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// One closed-loop client: draw seeds, submit, block on the reply, pace
+/// to `interval`. Returns its shed count.
+fn client_loop(handle: ServeHandle, n_nodes: usize, seeds_per_request: usize,
+               interval: Duration, deadline: Instant, seed: u64) -> u64 {
+    let mut rng = SplitMix64::new(seed);
+    let mut shed = 0u64;
+    let mut next = Instant::now();
+    while Instant::now() < deadline {
+        let seeds: Vec<i32> = (0..seeds_per_request)
+            .map(|_| rng.next_below(n_nodes as u64) as i32)
+            .collect();
+        match handle.submit(seeds) {
+            Ok(Submit::Accepted(reply)) => {
+                // closed loop: wait for the answer before the next send
+                let _ = reply.recv();
+            }
+            Ok(Submit::Shed) => shed += 1,
+            Err(_) => break, // server is gone; stop offering load
+        }
+        next += interval;
+        let now = Instant::now();
+        if next > now {
+            std::thread::sleep(next - now);
+        } else {
+            next = now; // fell behind; don't try to catch up in a burst
+        }
+    }
+    shed
+}
+
+/// Human-readable table of the grid (printed after the CSV is written).
+pub fn render_table(rows: &[ServingRow]) -> String {
+    let mut out = String::new();
+    out.push_str("offered_rps  window_ms  completed   shed  \
+                  achieved_rps  p50_ms  p95_ms  p99_ms  imbalance\n");
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:>11.0}  {:>9.1}  {:>9}  {:>5}  {:>12.1}  {:>6.2}  \
+             {:>6.2}  {:>6.2}  {:>9.3}",
+            r.offered_rps, r.batch_window_ms, r.completed, r.shed,
+            r.achieved_rps, r.p50_ms, r.p95_ms, r.p99_ms, r.imbalance);
+    }
+    out
+}

@@ -1,0 +1,288 @@
+//! `fsa serve` — micro-batched online inference over [`Engine::infer`].
+//!
+//! Request lifecycle: a client thread calls [`ServeHandle::submit`] with
+//! a set of seed node ids. Admission control is a bounded queue
+//! (`--queue-depth`): when it is full the request is *shed* immediately
+//! ([`Submit::Shed`]) instead of queueing unboundedly — the client gets
+//! a synchronous rejection it can retry against. Admitted requests wait
+//! in the queue until the server loop ([`run_server`]) coalesces them
+//! into a micro-batch: starting from the first request dequeued, it
+//! keeps pulling until either `--max-batch` seeds are gathered or
+//! `--batch-window-ms` has elapsed since the batch opened. One
+//! [`Engine::infer`] call serves the whole micro-batch; per-request
+//! logits are split back out and sent over each request's private reply
+//! channel, stamped with the enqueue→reply latency.
+//!
+//! Determinism scope: the engine's counter RNG is keyed per *node* on a
+//! fixed forward base seed ([`Engine::infer_base`]), and each output row
+//! of the head matmuls depends only on that row's aggregate — so the
+//! logits for a given seed are bitwise identical no matter which
+//! micro-batch it lands in, how large that batch is, or in which order
+//! requests arrived (pinned in `rust/tests/serve.rs`). What the batching
+//! policy changes is *latency*, never values.
+//!
+//! The engine is not `Send` (it may hold PJRT runtime handles), so the
+//! server loop runs on the thread that owns the engine; clients are the
+//! threads holding [`ServeHandle`] clones. The loop exits when every
+//! handle has been dropped and the queue is drained — shutdown is
+//! graceful by construction, and dropping the engine afterwards persists
+//! planner state exactly like a training session's shutdown does.
+
+pub mod bench;
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::engine::Engine;
+use crate::metrics::percentile_sorted;
+
+/// Micro-batching + admission policy of one serving loop.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// How long a micro-batch stays open for more requests after the
+    /// first one arrives (0 = serve each queue drain immediately).
+    pub batch_window_ms: f64,
+    /// Seed budget per micro-batch: the batch closes as soon as the
+    /// gathered requests reach this many seeds.
+    pub max_batch: usize,
+    /// Bounded queue depth (admission control): submissions beyond this
+    /// many waiting requests are shed.
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { batch_window_ms: 2.0, max_batch: 512, queue_depth: 64 }
+    }
+}
+
+/// One admitted request, queued for the server loop.
+pub struct Request {
+    pub seeds: Vec<i32>,
+    pub enqueued: Instant,
+    reply: mpsc::Sender<Reply>,
+}
+
+/// Per-request response: row-major `[seeds.len(), classes]` scores plus
+/// the measured enqueue→reply latency.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub scores: Vec<f32>,
+    pub latency_ms: f64,
+}
+
+/// Outcome of a submission attempt.
+pub enum Submit {
+    /// Admitted; the reply arrives on this channel.
+    Accepted(mpsc::Receiver<Reply>),
+    /// Queue full — shed at admission (retry later or back off).
+    Shed,
+}
+
+/// Client-side handle: cheap to clone, one per client thread. The server
+/// loop ends when all handles are dropped and the queue is drained.
+#[derive(Clone)]
+pub struct ServeHandle {
+    tx: mpsc::SyncSender<Request>,
+    n_nodes: usize,
+}
+
+impl ServeHandle {
+    /// Submit one request. Malformed requests (empty, out-of-range ids)
+    /// are hard errors — only a *full queue* sheds. Errors also signal a
+    /// shut-down server (queue receiver dropped).
+    pub fn submit(&self, seeds: Vec<i32>) -> Result<Submit> {
+        ensure!(!seeds.is_empty(), "request has no seed ids");
+        for &s in &seeds {
+            ensure!(s >= 0 && (s as usize) < self.n_nodes,
+                    "seed {s} out of range: the graph has nodes \
+                     0..{}", self.n_nodes);
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request { seeds, enqueued: Instant::now(),
+                            reply: reply_tx };
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(Submit::Accepted(reply_rx)),
+            Err(mpsc::TrySendError::Full(_)) => Ok(Submit::Shed),
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                bail!("server is shut down")
+            }
+        }
+    }
+}
+
+/// Build the bounded request queue: a client handle and the receiver the
+/// server loop drains. `n_nodes` bounds valid seed ids at admission.
+pub fn channel(cfg: &ServeConfig, n_nodes: usize)
+               -> (ServeHandle, mpsc::Receiver<Request>) {
+    let (tx, rx) = mpsc::sync_channel(cfg.queue_depth.max(1));
+    (ServeHandle { tx, n_nodes }, rx)
+}
+
+/// Serving-side accounting for one `run_server` lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Requests answered (each with its own reply).
+    pub completed: u64,
+    /// Micro-batches dispatched (fused forward passes).
+    pub batches: u64,
+    /// Total seeds inferred across all batches.
+    pub seeds: u64,
+    /// Per-request enqueue→reply latencies, ms.
+    pub latencies_ms: Vec<f64>,
+    /// Per-batch measured shard imbalance (sharded passes only).
+    pub imbalances: Vec<f64>,
+}
+
+impl ServeStats {
+    /// (p50, p95, p99) of the per-request latencies, ms.
+    pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        let mut sorted = self.latencies_ms.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (percentile_sorted(&sorted, 50.0),
+         percentile_sorted(&sorted, 95.0),
+         percentile_sorted(&sorted, 99.0))
+    }
+
+    /// Median per-batch shard imbalance (1.0 when nothing sharded —
+    /// serial passes are balanced by definition).
+    pub fn median_imbalance(&self) -> f64 {
+        if self.imbalances.is_empty() {
+            return 1.0;
+        }
+        let mut sorted = self.imbalances.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&sorted, 50.0)
+    }
+
+    pub fn mean_batch_seeds(&self) -> f64 {
+        self.seeds as f64 / self.batches.max(1) as f64
+    }
+}
+
+/// The serving loop: drain the queue, coalesce micro-batches under the
+/// policy, infer, reply. Runs on the calling thread (which owns the
+/// engine) until every [`ServeHandle`] is dropped and the queue is
+/// empty; returns the accumulated stats. Engine errors abort the loop —
+/// admission validated the seeds, so an error here is a real fault, not
+/// a bad request.
+pub fn run_server(engine: &mut Engine<'_>, cfg: &ServeConfig,
+                  rx: &mpsc::Receiver<Request>) -> Result<ServeStats> {
+    let window = Duration::from_secs_f64(cfg.batch_window_ms.max(0.0) / 1e3);
+    let max_batch = cfg.max_batch.max(1);
+    let mut stats = ServeStats::default();
+    // blocks for the first request of each batch; Err = all handles
+    // dropped and queue drained = graceful shutdown
+    while let Ok(first) = rx.recv() {
+        let mut batch = vec![first];
+        let mut gathered = batch[0].seeds.len();
+        let deadline = Instant::now() + window;
+        while gathered < max_batch {
+            let now = Instant::now();
+            let left = deadline.saturating_duration_since(now);
+            if left.is_zero() {
+                // window closed: take only what is already queued
+                match rx.try_recv() {
+                    Ok(req) => {
+                        gathered += req.seeds.len();
+                        batch.push(req);
+                    }
+                    Err(_) => break,
+                }
+            } else {
+                match rx.recv_timeout(left) {
+                    Ok(req) => {
+                        gathered += req.seeds.len();
+                        batch.push(req);
+                    }
+                    // Timeout: window closed. Disconnected: shutting
+                    // down — serve what we have, outer recv() exits.
+                    Err(_) => break,
+                }
+            }
+        }
+        serve_batch(engine, batch, &mut stats)?;
+    }
+    Ok(stats)
+}
+
+/// Run one coalesced micro-batch through the engine and fan the logits
+/// back out to the per-request reply channels.
+fn serve_batch(engine: &mut Engine<'_>, batch: Vec<Request>,
+               stats: &mut ServeStats) -> Result<()> {
+    let all: Vec<i32> = batch
+        .iter()
+        .flat_map(|r| r.seeds.iter().copied())
+        .collect();
+    let logits = engine.infer(&all)?;
+    if let Some(imb) = engine.infer_imbalance() {
+        stats.imbalances.push(imb);
+    }
+    let c = logits.len() / all.len().max(1);
+    let done = Instant::now();
+    let mut offset = 0usize;
+    stats.batches += 1;
+    stats.seeds += all.len() as u64;
+    for req in batch {
+        let take = req.seeds.len() * c;
+        let scores = logits[offset..offset + take].to_vec();
+        offset += take;
+        let latency_ms =
+            done.duration_since(req.enqueued).as_secs_f64() * 1e3;
+        stats.completed += 1;
+        stats.latencies_ms.push(latency_ms);
+        // the client may have given up and dropped its receiver; that
+        // only loses the reply, not the server
+        let _ = req.reply.send(Reply { scores, latency_ms });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_validates_and_sheds() {
+        let cfg = ServeConfig { batch_window_ms: 0.0, max_batch: 512,
+                                queue_depth: 2 };
+        let (handle, rx) = channel(&cfg, 100);
+        assert!(matches!(handle.submit(vec![1]).unwrap(),
+                         Submit::Accepted(_)));
+        assert!(matches!(handle.submit(vec![2, 3]).unwrap(),
+                         Submit::Accepted(_)));
+        // queue full: shed, not an error
+        assert!(matches!(handle.submit(vec![4]).unwrap(), Submit::Shed));
+        // malformed requests: errors, not sheds
+        assert!(handle.submit(vec![]).is_err());
+        let err = handle.submit(vec![100]).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        let err = handle.submit(vec![-1]).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // server gone: error with a clear message
+        drop(rx);
+        let err = handle.submit(vec![5]).unwrap_err().to_string();
+        assert!(err.contains("shut down"), "{err}");
+    }
+
+    #[test]
+    fn stats_percentiles_and_means() {
+        let stats = ServeStats {
+            completed: 4,
+            batches: 2,
+            seeds: 6,
+            latencies_ms: vec![4.0, 1.0, 3.0, 2.0],
+            imbalances: vec![1.5, 1.0, 2.0],
+        };
+        let (p50, p95, p99) = stats.latency_percentiles();
+        assert!(p50 >= 1.0 && p50 <= 4.0 && p95 <= 4.0 && p99 <= 4.0);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert_eq!(stats.median_imbalance(), 1.5);
+        assert_eq!(stats.mean_batch_seeds(), 3.0);
+        assert_eq!(ServeStats::default().median_imbalance(), 1.0);
+        let (z50, _, z99) = ServeStats::default().latency_percentiles();
+        assert_eq!((z50, z99), (0.0, 0.0));
+    }
+}

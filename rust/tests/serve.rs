@@ -1,0 +1,303 @@
+//! Serving-stack integration tests: the `Engine` facade's forward-only
+//! inference path, the micro-batching request loop built on it, and the
+//! versioned params checkpoint that connects `fsa train` to `fsa serve`.
+//!
+//! The two contracts pinned here:
+//!
+//! 1. **Grouping invariance** — the logits a request receives through
+//!    the serve path are bitwise identical to a direct [`Engine::infer`]
+//!    call, no matter how requests are coalesced into micro-batches, in
+//!    which order they arrived, or how many kernel threads run
+//!    (counter RNG is keyed per node, head matmul rows are independent).
+//! 2. **Refactor neutrality** — `Trainer` is now a thin loop over
+//!    `Engine::step`; its loss trajectory must replay the pre-refactor
+//!    recipe (scheduler → sampler → native backend → AdamW) bitwise.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fusesampleagg::coordinator::pipeline::{prepare_batch, BatchScheduler};
+use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Trainer, Variant};
+use fusesampleagg::engine::Engine;
+use fusesampleagg::fanout::Fanouts;
+use fusesampleagg::gen::{builtin_spec, Dataset};
+use fusesampleagg::kernel::NativeBackend;
+use fusesampleagg::memory::MemoryMeter;
+use fusesampleagg::rng::{mix, SplitMix64};
+use fusesampleagg::runtime::{Backend, BackendChoice, Runtime, StepInputs};
+use fusesampleagg::sampler::ParallelSampler;
+use fusesampleagg::serve::{channel, run_server, Reply, ServeConfig, Submit};
+
+fn runtime() -> Runtime {
+    // manifest-less: Runtime::from_env falls back to the builtin manifest
+    Runtime::from_env().expect("manifest-less runtime")
+}
+
+fn tiny_cfg(threads: usize, seed: u64) -> TrainConfig {
+    TrainConfig {
+        variant: Variant::Fsa,
+        dataset: "tiny".into(),
+        fanouts: Fanouts::of(&[5, 3]),
+        batch: 64,
+        amp: false,
+        save_indices: false,
+        seed,
+        threads,
+        prefetch: false,
+        backend: BackendChoice::Native,
+        planner: Default::default(),
+        planner_state: None,
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("fsa_serve_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Deterministic request mix: 12 requests of 1..=5 seeds each.
+fn request_mix(n_nodes: usize) -> Vec<Vec<i32>> {
+    let mut r = SplitMix64::new(7);
+    (0..12)
+        .map(|i| {
+            (0..(i % 5) + 1)
+                .map(|_| r.next_below(n_nodes as u64) as i32)
+                .collect()
+        })
+        .collect()
+}
+
+/// The serve-path contract: per-request scores are bitwise identical to
+/// direct `Engine::infer`, under three different micro-batch policies
+/// (per-request, one giant batch, seed-budget groups with shuffled
+/// arrival order), at 1, 4 and 8 kernel threads — and the logits
+/// themselves are bitwise identical across thread counts.
+#[test]
+fn serve_logits_match_direct_infer_across_groupings_and_threads() {
+    let rt = runtime();
+    let mut cache = DatasetCache::new();
+    let mut reference_t1: Option<Vec<Vec<f32>>> = None;
+    for threads in [1usize, 4, 8] {
+        let mut engine =
+            Engine::new(&rt, &mut cache, tiny_cfg(threads, 42)).unwrap();
+        let reqs = request_mix(engine.ds.spec.n);
+        let direct: Vec<Vec<f32>> = reqs
+            .iter()
+            .map(|seeds| engine.infer(seeds).unwrap())
+            .collect();
+        match &reference_t1 {
+            None => reference_t1 = Some(direct.clone()),
+            Some(want) => assert_eq!(&direct, want,
+                                     "threads={threads} changed logits"),
+        }
+
+        // (window_ms, max_batch, shuffle arrival order?)
+        let policies = [(0.0, 1usize, false),
+                        (50.0, 4096, false),
+                        (5.0, 7, true)];
+        for (window, max_batch, shuffle) in policies {
+            let scfg = ServeConfig { batch_window_ms: window,
+                                     max_batch, queue_depth: 64 };
+            let (handle, rx) = channel(&scfg, engine.ds.spec.n);
+            let mut order: Vec<usize> = (0..reqs.len()).collect();
+            if shuffle {
+                let mut r = SplitMix64::new(99);
+                for i in (1..order.len()).rev() {
+                    let j = r.next_below(i as u64 + 1) as usize;
+                    order.swap(i, j);
+                }
+            }
+            let mut replies: Vec<Option<std::sync::mpsc::Receiver<Reply>>> =
+                (0..reqs.len()).map(|_| None).collect();
+            for &i in &order {
+                match handle.submit(reqs[i].clone()).unwrap() {
+                    Submit::Accepted(rx) => replies[i] = Some(rx),
+                    Submit::Shed => panic!("queue_depth 64 shed 12 reqs"),
+                }
+            }
+            drop(handle); // server drains the queue, then exits
+            let stats = run_server(&mut engine, &scfg, &rx).unwrap();
+            assert_eq!(stats.completed, reqs.len() as u64);
+            assert!(stats.batches >= 1);
+            for (i, rx) in replies.into_iter().enumerate() {
+                let r = rx.unwrap().recv().unwrap();
+                assert_eq!(r.scores, direct[i],
+                           "threads={threads} window={window} \
+                            max_batch={max_batch} shuffle={shuffle}: \
+                            request {i} logits diverged from direct \
+                            inference");
+                assert!(r.latency_ms >= 0.0);
+            }
+        }
+    }
+}
+
+/// Backpressure: at queue depth 1 with no server draining, the second
+/// and third submissions shed synchronously; once the server runs, the
+/// one admitted request is still answered.
+#[test]
+fn tiny_queue_depth_sheds_then_serves_admitted_requests() {
+    let rt = runtime();
+    let mut cache = DatasetCache::new();
+    let mut engine =
+        Engine::new(&rt, &mut cache, tiny_cfg(1, 42)).unwrap();
+    let scfg = ServeConfig { batch_window_ms: 0.0, max_batch: 512,
+                             queue_depth: 1 };
+    let (handle, rx) = channel(&scfg, engine.ds.spec.n);
+    let accepted = match handle.submit(vec![3, 4]).unwrap() {
+        Submit::Accepted(rx) => rx,
+        Submit::Shed => panic!("empty queue shed the first request"),
+    };
+    assert!(matches!(handle.submit(vec![5]).unwrap(), Submit::Shed));
+    assert!(matches!(handle.submit(vec![6]).unwrap(), Submit::Shed));
+    drop(handle);
+    let stats = run_server(&mut engine, &scfg, &rx).unwrap();
+    assert_eq!((stats.completed, stats.batches, stats.seeds), (1, 1, 2));
+    let reply = accepted.recv().unwrap();
+    assert_eq!(reply.scores, engine.infer(&[3, 4]).unwrap());
+}
+
+#[test]
+fn infer_rejects_out_of_range_seeds() {
+    let rt = runtime();
+    let mut cache = DatasetCache::new();
+    let mut engine =
+        Engine::new(&rt, &mut cache, tiny_cfg(1, 42)).unwrap();
+    let n = engine.ds.spec.n as i32;
+    let err = engine.infer(&[-1]).unwrap_err().to_string();
+    assert!(err.contains("out of range"), "{err}");
+    let err = engine.infer(&[n]).unwrap_err().to_string();
+    assert!(err.contains("out of range"), "{err}");
+}
+
+/// train --save-params → serve --params: the checkpoint restores the
+/// trained tensors bitwise, and a restored engine reproduces the trained
+/// engine's logits exactly.
+#[test]
+fn params_checkpoint_round_trips_bitwise_and_restores_into_engine() {
+    let rt = runtime();
+    let mut cache = DatasetCache::new();
+    let path = tmp("roundtrip_params.json");
+    let mut tr = Trainer::new(&rt, &mut cache, tiny_cfg(1, 42)).unwrap();
+    for _ in 0..5 {
+        tr.step().unwrap();
+    }
+    tr.save_params(&path).unwrap();
+    let trained = tr.params_f32().unwrap();
+    let seeds: Vec<i32> = (0..20).collect();
+    let want = tr.infer(&seeds).unwrap();
+    drop(tr);
+
+    let mut fresh = Engine::new(&rt, &mut cache, tiny_cfg(1, 42)).unwrap();
+    assert_ne!(fresh.params_f32().unwrap(), trained,
+               "training must have moved the parameters");
+    fresh.load_params(&path).unwrap();
+    assert_eq!(fresh.params_f32().unwrap(), trained,
+               "checkpoint restore must be bitwise");
+    assert_eq!(fresh.infer(&seeds).unwrap(), want,
+               "restored engine must reproduce the trained logits");
+}
+
+/// Mismatched checkpoints are hard errors at `Engine::load_params` —
+/// serving never silently falls back to fresh weights. (File-level
+/// corruption — truncation, bad JSON, wrong version/kind — is pinned by
+/// the unit battery in `engine::checkpoint`.)
+#[test]
+fn mismatched_checkpoints_are_hard_errors_at_load() {
+    let rt = runtime();
+    let mut cache = DatasetCache::new();
+    let mut tr = Trainer::new(&rt, &mut cache, tiny_cfg(1, 42)).unwrap();
+    tr.step().unwrap();
+    let good = tr.params_checkpoint().unwrap();
+    let engine = tr.engine_mut();
+
+    fn check(engine: &mut Engine<'_>,
+             good: &fusesampleagg::engine::ParamsCheckpoint, name: &str,
+             mutate: &dyn Fn(&mut fusesampleagg::engine::ParamsCheckpoint),
+             needle: &str) {
+        let mut ck = good.clone();
+        mutate(&mut ck);
+        let p = tmp(&format!("bad_{name}.json"));
+        ck.save(&p).unwrap();
+        let err = engine.load_params(&p).unwrap_err().to_string();
+        assert!(err.contains(needle), "{name}: {err}");
+    }
+    check(engine, &good, "variant", &|ck| ck.variant = "dgl".into(),
+          "variant");
+    check(engine, &good, "dataset", &|ck| ck.dataset = "arxiv_sim".into(),
+          "dataset");
+    check(engine, &good, "tensor_count", &|ck| { ck.params.pop(); },
+          "tensors");
+    check(engine, &good, "tensor_shape", &|ck| { ck.params[0].pop(); },
+          "tensor 0");
+    // after all those rejections the engine still serves
+    assert!(engine.infer(&[1, 2, 3]).is_ok());
+}
+
+/// The tentpole's neutrality pin: `Trainer` (now a newtype over
+/// `Engine`) must replay the pre-refactor training recipe bitwise —
+/// same scheduler draws, same per-step base seeds, same native backend
+/// stepping.
+#[test]
+fn trainer_loss_trajectory_matches_prerefactor_recipe_bitwise() {
+    let rt = runtime();
+    let cfg = tiny_cfg(1, 42);
+
+    let mut cache = DatasetCache::new();
+    let mut tr = Trainer::new(&rt, &mut cache, cfg.clone()).unwrap();
+    let got: Vec<f64> = (0..12).map(|_| tr.step().unwrap().loss).collect();
+
+    // the recipe as the pre-Engine Trainer hardcoded it
+    let ds = Arc::new(Dataset::generate(builtin_spec("tiny").unwrap())
+                          .unwrap());
+    let mut sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed).unwrap();
+    let sampler = ParallelSampler::with_planner(cfg.threads, cfg.planner);
+    let mut eng = NativeBackend::new(
+        ds.clone(), cfg.native_config(rt.manifest.hidden),
+        rt.manifest.adamw).unwrap();
+    let mut meter = MemoryMeter::new();
+    let mut want = Vec::with_capacity(12);
+    for step in 0..12usize {
+        let seeds = sched.next_seeds();
+        let base = mix(cfg.seed.wrapping_add(step as u64));
+        let prepared = prepare_batch(&ds, cfg.host_work(), &cfg.fanouts,
+                                     &sampler, step, seeds, base);
+        let inp = StepInputs {
+            seeds: &prepared.seeds,
+            labels: &prepared.labels,
+            base: prepared.base,
+            block: prepared.block.as_ref(),
+        };
+        want.push(eng.train_step(step, &inp, &mut meter).unwrap().loss);
+    }
+    assert_eq!(got, want,
+               "Engine refactor changed the training trajectory");
+}
+
+/// `evaluate` is now literally accuracy-over-`infer`: recompute it by
+/// hand from the same logits and the two must agree exactly.
+#[test]
+fn evaluate_is_accuracy_over_infer() {
+    use fusesampleagg::engine::argmax;
+    use fusesampleagg::gen::Split;
+
+    let rt = runtime();
+    let mut cache = DatasetCache::new();
+    let mut engine =
+        Engine::new(&rt, &mut cache, tiny_cfg(1, 42)).unwrap();
+    let acc = engine.evaluate(512).unwrap();
+    let mut nodes = engine.ds.split_nodes(Split::Val);
+    nodes.truncate(512); // evaluate(512) truncates to max_nodes.max(512)
+    let logits = engine.infer(&nodes).unwrap();
+    let c = engine.ds.spec.c;
+    let correct = nodes
+        .iter()
+        .enumerate()
+        .filter(|(i, &u)| {
+            argmax(&logits[i * c..(i + 1) * c]) as i32
+                == engine.ds.labels[u as usize]
+        })
+        .count();
+    assert_eq!(acc, correct as f64 / nodes.len() as f64);
+}
