@@ -35,6 +35,7 @@ fn losses(rt: &Runtime, cache: &mut DatasetCache, seed: u64,
         backend: Default::default(),
         planner: Default::default(),
         planner_state: None,
+        faults: fusesampleagg::runtime::faults::none(),
     };
     let mut trainer = Trainer::new(rt, cache, cfg)?;
     (0..steps).map(|_| Ok(trainer.step()?.loss)).collect()

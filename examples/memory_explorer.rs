@@ -64,6 +64,7 @@ fn main() -> Result<()> {
                     backend: Default::default(),
                     planner: Default::default(),
                     planner_state: None,
+                    faults: fusesampleagg::runtime::faults::none(),
                 };
                 Ok(run_config(&rt, &mut cache, cfg, 1, 5)?
                     .peak_transient_bytes)

@@ -34,6 +34,7 @@ fn main() -> Result<()> {
         backend: Default::default(),    // auto: PJRT, else native engine
         planner: Default::default(),
         planner_state: None,
+        faults: fusesampleagg::runtime::faults::none(),
     };
 
     // 3. train for 40 steps

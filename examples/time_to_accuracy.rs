@@ -30,6 +30,7 @@ fn run(rt: &Runtime, cache: &mut DatasetCache, variant: Variant,
         backend: Default::default(),
         planner: Default::default(),
         planner_state: None,
+        faults: fusesampleagg::runtime::faults::none(),
     };
     let mut tr = Trainer::new(rt, cache, cfg)?;
     let timer = Timer::start();

@@ -59,6 +59,7 @@ fn main() -> Result<()> {
         backend: Default::default(),
         planner: Default::default(),
         planner_state: None,
+        faults: fusesampleagg::runtime::faults::none(),
     };
     let total = Timer::start();
     let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;

@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
                 backend: Default::default(),
                 planner: Default::default(),
                 planner_state: None,
+                faults: fusesampleagg::runtime::faults::none(),
             };
             let r = run(&mut cache, cfg)?;
             let _ = writeln!(out, "  amp={:<5} {:<4}: {:>8.2} ms/step", amp,
@@ -69,6 +70,7 @@ fn main() -> anyhow::Result<()> {
                     backend: Default::default(),
                     planner: Default::default(),
                     planner_state: None,
+                    faults: fusesampleagg::runtime::faults::none(),
                 };
                 let r = run(&mut cache, cfg)?;
                 let _ = writeln!(out, "  {:<13} {}-hop {:<4}: {:>8.2} ms/step \
@@ -92,6 +94,7 @@ fn main() -> anyhow::Result<()> {
             backend: Default::default(),
             planner: Default::default(),
             planner_state: None,
+            faults: fusesampleagg::runtime::faults::none(),
         };
         let r = run(&mut cache, cfg)?;
         let _ = writeln!(out, "  save_indices={:<5}: {:>8.2} ms/step \
@@ -121,6 +124,7 @@ fn main() -> anyhow::Result<()> {
                 backend: Default::default(),
                 planner: Default::default(),
                 planner_state: None,
+                faults: fusesampleagg::runtime::faults::none(),
             };
             let mut tr = Trainer::new_named(rt2, &mut cache, cfg, artifact)?;
             let timings = measure(&mut tr, warmup, steps)?;

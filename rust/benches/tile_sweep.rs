@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
             backend: Default::default(),
             planner: Default::default(),
             planner_state: None,
+            faults: fusesampleagg::runtime::faults::none(),
         };
         let mut tr = Trainer::new_named(&rt, &mut cache, cfg, &name)?;
         let timings = measure(&mut tr, warmup, steps)?;

@@ -212,6 +212,7 @@ pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
                             backend: grid.backend,
                             planner: grid.planner,
                             planner_state: grid.planner_state.clone(),
+                            faults: crate::runtime::faults::none(),
                         };
                         let row = run_config(rt, cache, cfg, grid.warmup,
                                              grid.steps)?;

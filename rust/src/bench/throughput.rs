@@ -112,6 +112,7 @@ impl ThroughputConfig {
             // throughput runs are ephemeral measurements; they never
             // warm-start from or persist planner state
             planner_state: None,
+            faults: crate::runtime::faults::none(),
         }
     }
 }

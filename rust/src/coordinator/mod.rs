@@ -49,6 +49,7 @@ use crate::gen::{builtin_spec, Dataset};
 use crate::graph::PlannerChoice;
 use crate::kernel::NativeConfig;
 use crate::runtime::backend::BackendChoice;
+use crate::runtime::faults::FaultPlane;
 use crate::runtime::Runtime;
 
 pub use crate::engine::{evaluate_params, Engine};
@@ -104,6 +105,11 @@ pub struct TrainConfig {
     /// the other flavors have no learned state and ignore it. Cuts may
     /// differ across sessions because of it — sampled values never do.
     pub planner_state: Option<PathBuf>,
+    /// Fault-injection plane (`--chaos <spec>`); [`crate::runtime::
+    /// faults::none`] in production, where every hook is a no-op.
+    /// Installed into the session cost model so kernel and sampler
+    /// workers observe the same scripted schedule.
+    pub faults: Arc<dyn FaultPlane>,
 }
 
 impl TrainConfig {
@@ -138,6 +144,7 @@ impl TrainConfig {
             seed: self.seed,
             threads: self.threads,
             planner: self.planner,
+            faults: self.faults.clone(),
             hidden,
         }
     }

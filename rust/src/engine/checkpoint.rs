@@ -13,6 +13,15 @@
 //! cost balance, a damaged params file would silently serve a *wrong
 //! model* — so every load failure here is a hard error with the path and
 //! the reason, pinned by the fuzz battery below.
+//!
+//! Version 2 adds an optional [`TrainState`] (step cursor + AdamW
+//! moments) for crash-exact `fsa train --resume`: restoring params +
+//! moments + the step count reproduces the uninterrupted loss
+//! trajectory bitwise, because the sampling schedule is a pure function
+//! of `(seed, step)`. Version-1 files still load (params only) but
+//! cannot seed a resume. Files are written through
+//! [`crate::util::atomic_write`], so a crash mid-save leaves the
+//! previous complete checkpoint, never a torn one.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -22,8 +31,12 @@ use anyhow::{anyhow, ensure, Context, Result};
 use crate::graph::state::unix_now;
 use crate::json::Value;
 
-/// Format version; bump on any incompatible layout change.
-pub const PARAMS_VERSION: u64 = 1;
+/// Format version; bump on any incompatible layout change. Version 1
+/// (params-only) files are still accepted by the loader.
+pub const PARAMS_VERSION: u64 = 2;
+
+/// Oldest version the loader still accepts.
+pub const PARAMS_VERSION_MIN: u64 = 1;
 
 /// Kind tag distinguishing this file from the other JSON state files
 /// (planner state, manifests) a user might point `--params` at.
@@ -44,6 +57,81 @@ pub struct ParamsCheckpoint {
     pub hidden: usize,
     /// Parameter tensors in canonical spec order (row-major f32).
     pub params: Vec<Vec<f32>>,
+    /// Optimizer + schedule state for crash-exact resume (None in
+    /// legacy v1 files and final `--save-params` snapshots that only
+    /// need to serve).
+    pub train: Option<TrainState>,
+}
+
+/// The training-loop state a resume needs beyond the parameters: the
+/// step cursor rebuilds the RNG/batch schedule (a pure function of
+/// `(seed, step)`) and the AdamW bias correction; the moments make the
+/// next update bitwise identical to the uninterrupted run's.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    /// Optimizer steps fully applied — the next step to run.
+    pub step: u64,
+    /// AdamW first moments, aligned with `params`.
+    pub m: Vec<Vec<f32>>,
+    /// AdamW second moments, aligned with `params`.
+    pub v: Vec<Vec<f32>>,
+}
+
+/// Encode a tensor list as nested JSON arrays (f32 through exact f64
+/// widening; the writer's shortest round-trip decimals make save → load
+/// bitwise).
+fn tensors_to_json(tensors: &[Vec<f32>]) -> Value {
+    Value::Arr(tensors
+        .iter()
+        .map(|t| Value::Arr(
+            t.iter().map(|&v| Value::Num(v as f64)).collect()))
+        .collect())
+}
+
+/// Strict tensor-list decode; `what` names the field in errors.
+fn tensors_from_json(value: &Value, what: &str)
+                     -> std::result::Result<Vec<Vec<f32>>, String> {
+    let raw = value
+        .as_arr()
+        .ok_or(format!("{what} is not an array"))?;
+    if raw.is_empty() {
+        return Err(format!("{what} array is empty"));
+    }
+    let mut out = Vec::with_capacity(raw.len());
+    for (i, t) in raw.iter().enumerate() {
+        let vals = t
+            .as_arr()
+            .ok_or(format!("{what}[{i}] is not an array"))?;
+        if vals.is_empty() {
+            return Err(format!("{what}[{i}] is empty"));
+        }
+        let mut tensor = Vec::with_capacity(vals.len());
+        for (j, v) in vals.iter().enumerate() {
+            let x = v
+                .as_f64()
+                .ok_or(format!("{what}[{i}][{j}] is not a number"))?
+                as f32;
+            if !x.is_finite() {
+                return Err(format!("{what}[{i}][{j}] is not a finite f32"));
+            }
+            tensor.push(x);
+        }
+        out.push(tensor);
+    }
+    Ok(out)
+}
+
+/// Finiteness gate shared by the save path (`what` names the field).
+fn ensure_finite(tensors: &[Vec<f32>], what: &str) -> Result<()> {
+    for (i, t) in tensors.iter().enumerate() {
+        ensure!(!t.is_empty(), "refusing to save: {what}[{i}] is empty");
+        for (j, v) in t.iter().enumerate() {
+            ensure!(v.is_finite(),
+                    "refusing to save: {what}[{i}][{j}] is non-finite \
+                     ({v}) — the model has diverged");
+        }
+    }
+    Ok(())
 }
 
 impl ParamsCheckpoint {
@@ -58,28 +146,33 @@ impl ParamsCheckpoint {
         root.insert("fanout".into(), Value::Str(self.fanout.clone()));
         root.insert("hidden".into(), Value::Num(self.hidden as f64));
         root.insert("saved_unix".into(), Value::Num(unix_now() as f64));
-        root.insert("params".into(), Value::Arr(
-            self.params
-                .iter()
-                .map(|t| Value::Arr(
-                    t.iter().map(|&v| Value::Num(v as f64)).collect()))
-                .collect()));
+        root.insert("params".into(), tensors_to_json(&self.params));
+        if let Some(ts) = &self.train {
+            let mut t = BTreeMap::new();
+            t.insert("step".into(), Value::Num(ts.step as f64));
+            t.insert("m".into(), tensors_to_json(&ts.m));
+            t.insert("v".into(), tensors_to_json(&ts.v));
+            root.insert("train".into(), Value::Obj(t));
+        }
         Value::Obj(root)
     }
 
-    /// Write to `path`, creating parent directories. Refuses non-finite
-    /// parameters — a diverged model must fail loudly at save time, not
-    /// produce a file that fails to parse at serve time.
+    /// Write to `path` atomically (tmp + fsync + rename), creating parent
+    /// directories. Refuses non-finite parameters or moments — a
+    /// diverged model must fail loudly at save time, not produce a file
+    /// that fails to parse at serve time.
     pub fn save(&self, path: &Path) -> Result<()> {
         ensure!(!self.params.is_empty(), "refusing to save a checkpoint \
                                           with no parameter tensors");
-        for (i, t) in self.params.iter().enumerate() {
-            ensure!(!t.is_empty(), "refusing to save: tensor {i} is empty");
-            for (j, v) in t.iter().enumerate() {
-                ensure!(v.is_finite(),
-                        "refusing to save: params[{i}][{j}] is non-finite \
-                         ({v}) — the model has diverged");
-            }
+        ensure_finite(&self.params, "params")?;
+        if let Some(ts) = &self.train {
+            ensure!(ts.m.len() == self.params.len()
+                        && ts.v.len() == self.params.len(),
+                    "refusing to save: train state has {}/{} moment \
+                     tensors for {} params",
+                    ts.m.len(), ts.v.len(), self.params.len());
+            ensure_finite(&ts.m, "train.m")?;
+            ensure_finite(&ts.v, "train.v")?;
         }
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
@@ -87,7 +180,8 @@ impl ParamsCheckpoint {
                     || format!("creating {}", dir.display()))?;
             }
         }
-        std::fs::write(path, format!("{}\n", self.to_json()))
+        crate::util::atomic_write(path,
+                                  format!("{}\n", self.to_json()).as_bytes())
             .with_context(|| format!("writing params checkpoint {}",
                                      path.display()))
     }
@@ -98,7 +192,13 @@ impl ParamsCheckpoint {
     pub fn load(path: &Path) -> Result<ParamsCheckpoint> {
         let text = std::fs::read_to_string(path).with_context(
             || format!("reading params checkpoint {}", path.display()))?;
-        let value = crate::json::parse(&text).map_err(
+        Self::parse_str(&text, path)
+    }
+
+    /// Decode checkpoint text read from `path` (split out so the chaos
+    /// plane can corrupt the bytes between read and parse).
+    pub fn parse_str(text: &str, path: &Path) -> Result<ParamsCheckpoint> {
+        let value = crate::json::parse(text).map_err(
             |e| anyhow!("params checkpoint {} is not valid JSON ({e})",
                         path.display()))?;
         Self::from_json(&value).map_err(
@@ -112,10 +212,10 @@ impl ParamsCheckpoint {
             .get("version")
             .and_then(Value::as_u64)
             .ok_or("missing or non-integer version field")?;
-        if version != PARAMS_VERSION {
+        if !(PARAMS_VERSION_MIN..=PARAMS_VERSION).contains(&version) {
             return Err(format!(
                 "format version {version} is not the supported \
-                 {PARAMS_VERSION}"));
+                 {PARAMS_VERSION_MIN}..={PARAMS_VERSION}"));
         }
         let kind = value
             .get("kind")
@@ -139,36 +239,41 @@ impl ParamsCheckpoint {
             .get("hidden")
             .and_then(Value::as_usize)
             .ok_or("missing or malformed hidden field")?;
-        let raw = value
-            .get("params")
-            .and_then(Value::as_arr)
-            .ok_or("missing or non-array params field")?;
-        if raw.is_empty() {
-            return Err("params array is empty".into());
-        }
-        let mut params = Vec::with_capacity(raw.len());
-        for (i, t) in raw.iter().enumerate() {
-            let vals = t
-                .as_arr()
-                .ok_or(format!("params[{i}] is not an array"))?;
-            if vals.is_empty() {
-                return Err(format!("params[{i}] is empty"));
+        let params = tensors_from_json(
+            value.get("params").ok_or("missing or non-array params field")?,
+            "params")?;
+        let train = match value.get("train") {
+            None => None,
+            Some(_) if version < 2 => {
+                return Err("train state in a version-1 file".into());
             }
-            let mut tensor = Vec::with_capacity(vals.len());
-            for (j, v) in vals.iter().enumerate() {
-                let x = v
-                    .as_f64()
-                    .ok_or(format!("params[{i}][{j}] is not a number"))?
-                    as f32;
-                if !x.is_finite() {
+            Some(t) => {
+                let step = t
+                    .get("step")
+                    .and_then(Value::as_u64)
+                    .ok_or("missing or non-integer train.step field")?;
+                let m = tensors_from_json(
+                    t.get("m").ok_or("missing train.m field")?, "train.m")?;
+                let v = tensors_from_json(
+                    t.get("v").ok_or("missing train.v field")?, "train.v")?;
+                if m.len() != params.len() || v.len() != params.len() {
                     return Err(format!(
-                        "params[{i}][{j}] is not a finite f32"));
+                        "train state has {}/{} moment tensors for {} \
+                         params", m.len(), v.len(), params.len()));
                 }
-                tensor.push(x);
+                for (i, (mt, vt)) in m.iter().zip(&v).enumerate() {
+                    if mt.len() != params[i].len()
+                        || vt.len() != params[i].len() {
+                        return Err(format!(
+                            "train moment tensor {i} does not match \
+                             params[{i}]'s length"));
+                    }
+                }
+                Some(TrainState { step, m, v })
             }
-            params.push(tensor);
-        }
-        Ok(ParamsCheckpoint { variant, dataset, fanout, hidden, params })
+        };
+        Ok(ParamsCheckpoint { variant, dataset, fanout, hidden, params,
+                              train })
     }
 }
 
@@ -192,6 +297,7 @@ mod tests {
                 vec![1.0, -2.5, 3.25e-4, f32::MIN_POSITIVE, 0.1],
                 vec![0.0, -0.0, f32::MAX, -1.0e-38, 7.0],
             ],
+            train: None,
         }
     }
 
@@ -208,6 +314,71 @@ mod tests {
             for (&x, &y) in a.iter().zip(b) {
                 assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
             }
+        }
+    }
+
+    /// v2 train state (step + moments) round-trips bitwise alongside the
+    /// params.
+    #[test]
+    fn train_state_round_trips_bitwise() {
+        let mut ckpt = sample();
+        ckpt.train = Some(TrainState {
+            step: 17,
+            m: vec![vec![0.5, -1.0e-9, 2.0, 0.0, 3.0],
+                    vec![1.0, 2.0, 3.0, 4.0, 5.0]],
+            v: vec![vec![1e-12, 0.25, 0.0, 7.5, 0.125],
+                    vec![0.1, 0.2, 0.3, 0.4, 0.5]],
+        });
+        let p = tmp("train_round_trip.json");
+        ckpt.save(&p).unwrap();
+        let back = ParamsCheckpoint::load(&p).unwrap();
+        assert_eq!(back, ckpt);
+        assert_eq!(back.train.as_ref().unwrap().step, 17);
+    }
+
+    /// Legacy version-1 files (no train state) still load as
+    /// params-only checkpoints.
+    #[test]
+    fn legacy_v1_files_load_without_train_state() {
+        let v1 = r#"{"version":1,"kind":"fsa-params","variant":"fsa",
+                     "dataset":"tiny","fanout":"5x3","hidden":32,
+                     "params":[[1.0,2.0]]}"#;
+        let p = tmp("legacy_v1.json");
+        std::fs::write(&p, v1).unwrap();
+        let ck = ParamsCheckpoint::load(&p).unwrap();
+        assert_eq!(ck.params, vec![vec![1.0, 2.0]]);
+        assert!(ck.train.is_none());
+    }
+
+    /// Malformed train state is a hard error, like every other defect.
+    #[test]
+    fn corrupt_train_state_is_a_hard_error() {
+        let cases: &[(&str, &str)] = &[
+            (r#"{"version":2,"kind":"fsa-params","variant":"fsa",
+                 "dataset":"tiny","fanout":"5x3","hidden":32,
+                 "params":[[1.0]],"train":{"m":[[0.0]],"v":[[0.0]]}}"#,
+             "train.step"),
+            (r#"{"version":2,"kind":"fsa-params","variant":"fsa",
+                 "dataset":"tiny","fanout":"5x3","hidden":32,
+                 "params":[[1.0]],"train":{"step":3,"m":[[0.0,1.0]],
+                 "v":[[0.0,1.0]]}}"#,
+             "does not match"),
+            (r#"{"version":2,"kind":"fsa-params","variant":"fsa",
+                 "dataset":"tiny","fanout":"5x3","hidden":32,
+                 "params":[[1.0]],"train":{"step":3,"m":[[1e300]],
+                 "v":[[0.0]]}}"#,
+             "finite"),
+            (r#"{"version":1,"kind":"fsa-params","variant":"fsa",
+                 "dataset":"tiny","fanout":"5x3","hidden":32,
+                 "params":[[1.0]],"train":{"step":3,"m":[[0.0]],
+                 "v":[[0.0]]}}"#,
+             "version-1"),
+        ];
+        for (text, needle) in cases {
+            let err = ParamsCheckpoint::from_json(
+                &crate::json::parse(text).unwrap())
+                .expect_err(needle);
+            assert!(err.contains(needle), "{err:?} missing {needle:?}");
         }
     }
 

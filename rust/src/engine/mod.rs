@@ -25,7 +25,7 @@ pub mod checkpoint;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::pipeline::{self, BatchPrefetcher, BatchScheduler,
                                    PreparedBatch};
@@ -40,11 +40,12 @@ use crate::memory::MemoryMeter;
 use crate::rng::mix;
 use crate::runtime::backend::{ensure_pjrt_depth, Backend, BackendChoice,
                               PjrtBackend, StepInputs};
+use crate::runtime::faults::{self, FaultSite};
 use crate::runtime::Runtime;
 use crate::sampler::{self, ParallelSampler};
 use crate::xla;
 
-pub use checkpoint::ParamsCheckpoint;
+pub use checkpoint::{ParamsCheckpoint, TrainState};
 
 /// Inference chunk size: forward passes are dispatched at most this many
 /// seeds at a time (matches the eval artifact batch, and bounds the
@@ -78,6 +79,10 @@ pub struct Engine<'rt> {
     /// sessions that observed *past* that baseline save, so re-running
     /// without new measurements never refreshes the staleness stamp.
     planner_persist: Option<(PathBuf, StateKey, u64)>,
+    /// Bounded-backoff retries consumed by persistence (checkpoint
+    /// writes) so far this session; surfaces as serving.csv's `retries`
+    /// column. A `Cell` because saving takes `&self`.
+    retries: std::cell::Cell<u64>,
 }
 
 /// One-time note when `Auto` falls back from PJRT to the native engine.
@@ -187,6 +192,7 @@ impl<'rt> Engine<'rt> {
             meter: MemoryMeter::new(),
             planner_model,
             planner_persist,
+            retries: std::cell::Cell::new(0),
         })
     }
 
@@ -248,7 +254,16 @@ impl<'rt> Engine<'rt> {
             steps_observed: steps,
             saved_unix: unix_now(),
         });
-        match state.save(path) {
+        // warn-only: planner state is a warm-start optimization, never
+        // worth failing a session over (the chaos `state-write` site
+        // exercises exactly this degradation)
+        let res: Result<()> = {
+            let op = self.cfg.faults.begin(FaultSite::StateWrite);
+            faults::inject(self.cfg.faults.as_ref(), FaultSite::StateWrite,
+                           op)
+                .and_then(|()| Ok(state.save(path)?))
+        };
+        match res {
             Ok(()) => eprintln!("planner-state: saved {} ({} steps \
                                  observed) to {}",
                                 key.as_string(), steps, path.display()),
@@ -480,6 +495,9 @@ impl<'rt> Engine<'rt> {
     // ---------------------------------------------------------------
 
     /// Snapshot the current parameters with this session's identity.
+    /// Backends that expose optimizer state (native) also snapshot the
+    /// AdamW moments and step cursor, making the checkpoint resumable
+    /// (v2 `train` block); others write a params-only file.
     pub fn params_checkpoint(&self) -> Result<ParamsCheckpoint> {
         Ok(ParamsCheckpoint {
             variant: self.cfg.variant.as_str().to_string(),
@@ -487,12 +505,49 @@ impl<'rt> Engine<'rt> {
             fanout: self.cfg.fanouts.label(),
             hidden: self.rt.manifest.hidden,
             params: self.backend.params_f32()?,
+            train: self.backend.opt_state_f32().map(|(m, v)| TrainState {
+                step: self.step_count as u64,
+                m,
+                v,
+            }),
         })
     }
 
-    /// `fsa train --save-params`: write a versioned checkpoint.
+    /// `fsa train --save-params` / `--checkpoint-every`: write a
+    /// versioned checkpoint atomically, retrying transient failures
+    /// with jittered exponential backoff. Exhausting the budget is a
+    /// hard error naming the site.
     pub fn save_params(&self, path: &Path) -> Result<()> {
-        self.params_checkpoint()?.save(path)
+        let ck = self.params_checkpoint()?;
+        let plane = self.cfg.faults.clone();
+        let (res, retries) = faults::with_retries(
+            FaultSite::CheckpointWrite, 3, self.cfg.seed,
+            self.step_count as u64, || {
+                let op = plane.begin(FaultSite::CheckpointWrite);
+                faults::inject(plane.as_ref(), FaultSite::CheckpointWrite,
+                               op)?;
+                ck.save(path)
+            });
+        self.retries.set(self.retries.get() + retries as u64);
+        res
+    }
+
+    /// Bounded-backoff retries persistence has consumed this session
+    /// (the serving.csv `retries` column).
+    pub fn retries_total(&self) -> u64 {
+        self.retries.get()
+    }
+
+    /// Read + decode a checkpoint, routing the raw bytes through the
+    /// fault plane: chaos `ckpt-read=corrupt` mangles them between read
+    /// and parse, exactly where a torn disk would.
+    fn read_checkpoint(&self, path: &Path) -> Result<ParamsCheckpoint> {
+        let mut bytes = std::fs::read(path).with_context(|| {
+            format!("reading params checkpoint {}", path.display())
+        })?;
+        let op = self.cfg.faults.begin(FaultSite::CheckpointRead);
+        self.cfg.faults.mangle(FaultSite::CheckpointRead, op, &mut bytes);
+        ParamsCheckpoint::parse_str(&String::from_utf8_lossy(&bytes), path)
     }
 
     /// `fsa serve --params`: load a checkpoint into the live backend.
@@ -500,8 +555,38 @@ impl<'rt> Engine<'rt> {
     /// file — is a hard error; serving never silently falls back to
     /// fresh weights.
     pub fn load_params(&mut self, path: &Path) -> Result<()> {
-        let ckpt = ParamsCheckpoint::load(path)?;
+        let ckpt = self.read_checkpoint(path)?;
         self.restore_checkpoint(&ckpt)
+    }
+
+    /// `fsa train --resume`: restore params **and** training state
+    /// (AdamW moments, step cursor) from a v2 checkpoint, then
+    /// fast-forward the batch schedule so step `k` resumes with exactly
+    /// the seeds and base seed the uninterrupted run would have used at
+    /// step `k`. Returns the restored step count. Must be called on a
+    /// fresh session (before any steps).
+    pub fn restore_training(&mut self, path: &Path) -> Result<usize> {
+        let ckpt = self.read_checkpoint(path)?;
+        let Some(train) = &ckpt.train else {
+            bail!("checkpoint {} has no training state (a version-1 or \
+                   params-only file); cannot --resume from it",
+                  path.display());
+        };
+        ensure!(self.step_count == 0,
+                "--resume must restore into a fresh session (already at \
+                 step {})", self.step_count);
+        // params first: set_params_f32 zeroes the moments
+        self.restore_checkpoint(&ckpt)?;
+        self.backend.set_opt_state_f32(&train.m, &train.v)?;
+        let step = train.step as usize;
+        // replay the scheduler: its state is a pure function of the
+        // draw count, so `step` draws put the epoch/shuffle cursor
+        // exactly where the uninterrupted run had it
+        for _ in 0..step {
+            let _ = self.sched.next_seeds();
+        }
+        self.step_count = step;
+        Ok(step)
     }
 
     /// Restore an already-decoded checkpoint (identity checks + backend
@@ -520,9 +605,15 @@ impl<'rt> Engine<'rt> {
 
 impl Drop for Engine<'_> {
     /// "Saved at shutdown": persist the adaptive weights when the
-    /// session ends, however it ends. No-op unless `cfg.planner_state`
-    /// is set, the flavor is adaptive, and feedback was observed.
+    /// session ends *cleanly*. No-op unless `cfg.planner_state` is set,
+    /// the flavor is adaptive, and feedback was observed. A panicking
+    /// unwind deliberately skips the save — state measured up to an
+    /// undefined failure point must not overwrite the last good file
+    /// (pinned in `rust/tests/faults.rs`).
     fn drop(&mut self) {
+        if std::thread::panicking() {
+            return;
+        }
         self.save_planner_state();
     }
 }

@@ -58,6 +58,7 @@ use super::shard::{plan_shards, plan_shards_weighted, resize_weights,
                    sample_cost};
 use super::Csr;
 use crate::fanout::Fanouts;
+use crate::runtime::faults::{self, FaultPlane};
 
 /// Which cost model the shard planner runs on (`--planner`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -463,6 +464,9 @@ pub struct CostModel {
     steps_observed: u64,
     /// Timing seam for every sharded pass planned through this model.
     clock: Arc<dyn ShardClock>,
+    /// Fault seam for every sharded pass planned through this model
+    /// (prod: the zero-cost no-op plane).
+    faults: Arc<dyn FaultPlane>,
 }
 
 impl CostModel {
@@ -493,6 +497,7 @@ impl CostModel {
             weights: Vec::new(),
             steps_observed: 0,
             clock: Arc::new(WallClock),
+            faults: faults::none(),
         }
     }
 
@@ -511,6 +516,24 @@ impl CostModel {
     /// route its per-shard measurements through.
     pub fn clock(&self) -> Arc<dyn ShardClock> {
         self.clock.clone()
+    }
+
+    /// Replace the fault seam (chaos runs and the fault-tolerance tests;
+    /// production keeps the default no-op plane).
+    pub fn with_faults(mut self, faults: Arc<dyn FaultPlane>) -> CostModel {
+        self.faults = faults;
+        self
+    }
+
+    /// Install the fault seam in place (the engine wires a `--chaos`
+    /// plane into an already-shared model this way).
+    pub fn set_faults(&mut self, faults: Arc<dyn FaultPlane>) {
+        self.faults = faults;
+    }
+
+    /// The fault seam every sharded pass planned by this model consults.
+    pub fn faults(&self) -> Arc<dyn FaultPlane> {
+        self.faults.clone()
     }
 
     /// Sharded passes folded into the adaptive weights so far.

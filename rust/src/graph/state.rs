@@ -189,13 +189,16 @@ impl PlannerState {
     }
 
     /// Write the state file (parent directory created on demand).
+    /// Atomic (tmp + fsync + rename): a crash mid-save leaves the
+    /// previous file intact, never a truncated one.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
             }
         }
-        std::fs::write(path, format!("{}\n", self.to_json()))
+        crate::util::atomic_write(path,
+                                  format!("{}\n", self.to_json()).as_bytes())
     }
 
     pub fn get(&self, key: &StateKey) -> Option<&StateEntry> {

@@ -34,6 +34,7 @@ use crate::graph::{lock_model, CostModel, PlannerChoice, ShardStats,
 use crate::memory::MemoryMeter;
 use crate::metrics::Timer;
 use crate::runtime::backend::{Backend, StepInputs, StepOutcome};
+use crate::runtime::faults::FaultPlane;
 use crate::runtime::init_params;
 use crate::runtime::manifest::AdamwConfig;
 use crate::sampler;
@@ -82,6 +83,11 @@ pub struct NativeConfig {
     /// flavor, only shard cuts — and therefore balance — move).
     pub planner: PlannerChoice,
     pub hidden: usize,
+    /// Fault-injection plane (the `--chaos` knob; the no-op plane —
+    /// [`crate::runtime::faults::none`] — in production). Installed into
+    /// every [`CostModel`] this engine plans through, so the kernel's
+    /// and sampler's sharded passes consult one seam.
+    pub faults: Arc<dyn FaultPlane>,
 }
 
 /// Native CPU training engine; owns the model/optimizer state (and the
@@ -126,6 +132,7 @@ impl NativeBackend {
                              adamw: AdamwConfig,
                              cost: SharedCostModel) -> Result<NativeBackend> {
         ensure!(cfg.fanouts.depth() >= 1, "fanout must have at least 1 hop");
+        lock_model(&cost).set_faults(cfg.faults.clone());
         let (d, c) = (ds.spec.d, ds.spec.c);
         let feat = Features::from_dataset(ds.clone(), cfg.amp);
         let specs = if cfg.fused {
@@ -324,6 +331,7 @@ impl Backend for NativeBackend {
             // the feedback loop alive this way.
             let mut model = CostModel::new(&self.ds.graph, &ef,
                                            self.cfg.planner);
+            model.set_faults(self.cfg.faults.clone());
             let (weights, steps) = {
                 let shared = lock_model(&self.cost);
                 (shared.worker_weights().to_vec(), shared.steps_observed())
@@ -383,6 +391,28 @@ impl Backend for NativeBackend {
     fn eval_imbalance(&self) -> Option<f64> {
         self.last_eval_imbalance
     }
+
+    fn opt_state_f32(&self) -> Option<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        Some((self.m.clone(), self.v.clone()))
+    }
+
+    fn set_opt_state_f32(&mut self, m: &[Vec<f32>], v: &[Vec<f32>])
+                         -> Result<()> {
+        ensure!(m.len() == self.m.len() && v.len() == self.v.len(),
+                "checkpoint holds {}/{} moment tensors but this model \
+                 has {}", m.len(), v.len(), self.m.len());
+        for (i, (new, cur)) in m.iter().chain(v.iter())
+            .zip(self.m.iter().chain(self.v.iter()))
+            .enumerate()
+        {
+            ensure!(new.len() == cur.len(),
+                    "checkpoint moment tensor {i} has {} values but the \
+                     model wants {}", new.len(), cur.len());
+        }
+        self.m = m.to_vec();
+        self.v = v.to_vec();
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -404,6 +434,7 @@ mod tests {
             threads: 1,
             planner: PlannerChoice::default(),
             hidden: 32,
+            faults: crate::runtime::faults::none(),
         }
     }
 

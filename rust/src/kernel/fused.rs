@@ -29,6 +29,7 @@
 use crate::fanout::Fanouts;
 use crate::graph::{CostModel, Csr, PlannerChoice, ShardStats};
 use crate::metrics::Timer;
+use crate::runtime::faults::{Fault, FaultSite};
 use crate::sampler::sample_neighbors;
 
 use super::{resolve_threads, Features, D_TILE, MIN_PAR_ROWS};
@@ -245,12 +246,18 @@ pub fn fused_khop_planned(csr: &Csr, feat: &Features, seeds: &[i32],
                 .collect();
             // per-shard timing goes through the model's clock seam
             // (WallClock in production; tests script a VirtualClock to
-            // make the adaptive feedback loop deterministic)
+            // make the adaptive feedback loop deterministic); faults
+            // through its fault seam (no-op plane in production)
             let clock = model.clock();
+            let faults = model.faults();
+            let pass = faults.begin(FaultSite::KernelWorker);
+            let plan_ranges = plan.clone();
+            let mut failed = vec![false; plan_ranges.len()];
             std::thread::scope(|s| {
                 let mut agg_rest: &mut [f32] = &mut agg;
                 let mut pairs_rest: &mut [u64] = &mut pairs;
                 let mut ms_rest: &mut [f64] = &mut shard_ms;
+                let mut failed_rest: &mut [bool] = &mut failed;
                 let mut view_rest: Vec<Option<&mut [i32]>> =
                     view.iter_mut().map(|o| o.as_deref_mut()).collect();
                 for (j, r) in plan.into_iter().enumerate() {
@@ -269,21 +276,69 @@ pub fn fused_khop_planned(csr: &Csr, feat: &Features, seeds: &[i32],
                     let (ms_c, tail) =
                         std::mem::take(&mut ms_rest).split_at_mut(1);
                     ms_rest = tail;
+                    let (fail_c, tail) =
+                        std::mem::take(&mut failed_rest).split_at_mut(1);
+                    failed_rest = tail;
                     if rows == 0 {
                         continue;
                     }
                     let seed_c = &seeds[r];
                     let kprod_ref = &kprod;
                     let clock = clock.clone();
+                    let faults = faults.clone();
                     let cost_j = shard_cost[j];
                     s.spawn(move || {
                         let t = Timer::start();
-                        run_rows(csr, feat, seed_c, ks, kprod_ref, base,
-                                 agg_c, &mut saved_c, pairs_c);
+                        let res = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                match faults.fault(FaultSite::KernelWorker,
+                                                   pass, j) {
+                                    Fault::Stall(ms) => std::thread::sleep(
+                                        std::time::Duration::from_millis(ms)),
+                                    Fault::Panic | Fault::Error => {
+                                        panic!("chaos: injected kernel \
+                                                panic (op {pass}, worker \
+                                                {j})")
+                                    }
+                                    _ => {}
+                                }
+                                run_rows(csr, feat, seed_c, ks, kprod_ref,
+                                         base, agg_c, &mut saved_c, pairs_c);
+                            }));
+                        fail_c[0] = res.is_err();
                         ms_c[0] = clock.shard_ms(j, cost_j, t.ms());
                     });
                 }
             });
+            // Recovery: any shard whose worker panicked is reset and
+            // recomputed serially — the counter RNG is stateless, so the
+            // redo is bitwise identical to an undisturbed run of that
+            // shard (the budgeted-refresh framing: recovery work is
+            // exactly the failed shard, nothing more).
+            for (j, r) in plan_ranges.iter().enumerate() {
+                if !failed[j] {
+                    continue;
+                }
+                eprintln!("warning: kernel shard worker {j} panicked; \
+                           recomputing rows {}..{} serially",
+                          r.start, r.end);
+                agg[r.start * d..r.end * d].fill(0.0);
+                pairs[r.start..r.end].fill(0);
+                let mut saved_c: Vec<Option<&mut [i32]>> = view
+                    .iter_mut()
+                    .zip(&kprod)
+                    .map(|(o, &kp)| {
+                        o.as_deref_mut().map(|buf| {
+                            let sl = &mut buf[r.start * kp..r.end * kp];
+                            sl.fill(-1);
+                            sl
+                        })
+                    })
+                    .collect();
+                run_rows(csr, feat, &seeds[r.clone()], ks, &kprod, base,
+                         &mut agg[r.start * d..r.end * d], &mut saved_c,
+                         &mut pairs[r.start..r.end]);
+            }
             stats = ShardStats::new(shard_ms, shard_cost);
         }
     }

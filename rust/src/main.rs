@@ -36,6 +36,7 @@ use fusesampleagg::gen::{builtin_spec, Dataset, Split};
 use fusesampleagg::graph::PlannerChoice;
 use fusesampleagg::memory::{self, StepDims};
 use fusesampleagg::metrics;
+use fusesampleagg::runtime::faults::{self, ChaosPlane, FaultPlane};
 use fusesampleagg::runtime::{BackendChoice, Manifest, Runtime};
 use fusesampleagg::serve;
 use fusesampleagg::util;
@@ -90,16 +91,26 @@ OPTIONS PER SUBCOMMAND
               [--eval] [--threads N] [--prefetch on|off]
               [--backend auto|native|pjrt]
               [--planner nominal|quantile|adaptive]
-              [--planner-state PATH|off]
+              [--planner-state PATH|off] [--chaos SPEC]
               [--save-params FILE]   write a versioned params checkpoint
                                      at shutdown (for `fsa serve`)
+              [--checkpoint-every N] also checkpoint every N steps
+                                     (params + AdamW moments + step
+                                     cursor, written atomically)
+              [--resume]             restore params/opt-state/step from
+                                     --save-params FILE and continue; the
+                                     resumed loss trajectory is bitwise
+                                     identical to the uninterrupted run
   serve       [--params FILE] [--dataset NAME] [--variant fsa|dgl]
               [--fanout K1xK2[...]] [--batch-window-ms X] [--max-batch N]
-              [--queue-depth N] [--threads N] [--backend native]
-              [--planner ...] [--planner-state PATH|off] [--seed S]
+              [--queue-depth N] [--deadline-ms X] [--threads N]
+              [--backend native] [--planner ...]
+              [--planner-state PATH|off] [--seed S] [--chaos SPEC]
               reads one request per stdin line (space/comma-separated
               seed node ids), replies with argmax classes + latency;
-              unknown --options are rejected with a suggestion
+              malformed lines get an `ERR <reason>` reply and the server
+              keeps serving; unknown --options are rejected with a
+              suggestion
               --bench   closed-loop load generator instead of stdin:
               [--rates R1,R2] [--windows W1,W2] [--duration-ms X]
               [--clients N] [--seeds-per-request N] [--out FILE]
@@ -160,10 +171,32 @@ PIPELINE KNOBS
                     files fall back to uniform weights with a warning.
                     Adaptive cut positions may differ across sessions
                     because of this; sampled values never do.
+
+FAULT INJECTION (--chaos, train/serve)
+  Deterministic chaos for fault-tolerance testing; production runs
+  (no --chaos) take the zero-cost no-op plane and are bitwise
+  unaffected. Spec: rules separated by ';', each
+      site@ops[/wN][~P]=kind
+  with site  kernel|sampler|state-write|ckpt-write|ckpt-read|
+             csv-write|serve
+       ops   N | N-M | *          (site-local operation counter)
+       kind  panic|err|corrupt|stall:MS
+  e.g. --chaos 'kernel@3/w1=panic; ckpt-write@*=err'. Same spec + seed
+  replays the same fault schedule at any thread count.
 ";
 
 fn backend_choice(args: &Args) -> Result<BackendChoice> {
     BackendChoice::parse(&args.str_or("backend", "auto"))
+}
+
+/// `--chaos SPEC`: the scripted fault plane, or the production no-op
+/// plane when absent. Seeded from the run seed so a chaos schedule
+/// replays with the run.
+fn chaos_arg(args: &Args, seed: u64) -> Result<Arc<dyn FaultPlane>> {
+    match args.str_opt("chaos") {
+        Some(spec) => Ok(Arc::new(ChaosPlane::parse(spec, seed)?)),
+        None => Ok(faults::none()),
+    }
 }
 
 fn planner_choice(args: &Args) -> Result<PlannerChoice> {
@@ -212,6 +245,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let fanouts = args.fanout("fanout", &Fanouts::of(&[15, 10]))?;
     let planner = planner_choice(args)?;
+    let seed = args.u64_or("seed", 42)?;
     let cfg = TrainConfig {
         variant,
         dataset: args.str_or("dataset", "products_sim"),
@@ -219,15 +253,26 @@ fn cmd_train(args: &Args) -> Result<()> {
         batch: args.usize_or("batch", 1024)?,
         amp: !args.has("no-amp"),
         save_indices: !args.has("no-save-indices"),
-        seed: args.u64_or("seed", 42)?,
+        seed,
         threads: args.usize_or("threads", 1)?,
         prefetch: args.bool_or("prefetch", false)?,
         backend: backend_choice(args)?,
         planner,
         planner_state: planner_state_arg(args, planner),
+        faults: chaos_arg(args, seed)?,
     };
     let steps = args.usize_or("steps", 30)?;
     let warmup = args.usize_or("warmup", 5)?;
+    let ckpt_every = args.usize_or("checkpoint-every", 0)?;
+    let ckpt_path = args.str_opt("save-params").map(std::path::PathBuf::from);
+    if ckpt_every > 0 && ckpt_path.is_none() {
+        bail!("--checkpoint-every needs --save-params FILE (the checkpoint \
+               destination)");
+    }
+    if args.has("resume") && ckpt_path.is_none() {
+        bail!("--resume needs --save-params FILE (the checkpoint to resume \
+               from)");
+    }
 
     println!("training {} on {} fanout {} ({}-hop) batch {} amp={} seed={} \
               threads={} prefetch={}",
@@ -235,13 +280,28 @@ fn cmd_train(args: &Args) -> Result<()> {
              cfg.batch, cfg.amp, cfg.seed, cfg.threads, cfg.prefetch);
     let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;
     println!("backend: {}", trainer.backend_name());
-    for _ in 0..warmup {
-        trainer.step()?;
+    // resumed sessions skip the warmup: the checkpoint's step cursor
+    // already includes it, and replaying it would desync the schedule
+    let mut start_s = 0usize;
+    if args.has("resume") {
+        let p = ckpt_path.as_deref().unwrap();
+        let done = trainer.engine_mut().restore_training(p)?;
+        anyhow::ensure!(done >= warmup,
+                        "checkpoint {} is at step {done}, inside the \
+                         {warmup}-step warmup; nothing to resume",
+                        p.display());
+        start_s = done - warmup;
+        println!("resumed from {} at step {done} (timed step {start_s})",
+                 p.display());
+    } else {
+        for _ in 0..warmup {
+            trainer.step()?;
+        }
     }
     let mut totals = Vec::new();
     let mut overlaps = Vec::new();
     let mut imbalances = Vec::new();
-    for s in 0..steps {
+    for s in start_s..steps {
         let t = trainer.step()?;
         totals.push(t.total_ms());
         overlaps.push(t.sample_overlap_ms);
@@ -251,6 +311,9 @@ fn cmd_train(args: &Args) -> Result<()> {
                       {:.2}) loss {:.4}",
                      t.total_ms(), t.sample_ms, t.upload_ms, t.execute_ms,
                      t.loss);
+        }
+        if ckpt_every > 0 && (s + 1) % ckpt_every == 0 {
+            trainer.save_params(ckpt_path.as_deref().unwrap())?;
         }
     }
     let summary = metrics::summarize(&totals);
@@ -310,9 +373,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // service cannot afford
     const SERVE_OPTIONS: &[&str] = &[
         "dataset", "variant", "fanout", "params", "batch",
-        "batch-window-ms", "max-batch", "queue-depth", "threads",
-        "backend", "planner", "planner-state", "seed", "rates", "windows",
-        "duration-ms", "clients", "seeds-per-request", "out",
+        "batch-window-ms", "max-batch", "queue-depth", "deadline-ms",
+        "threads", "backend", "planner", "planner-state", "seed", "chaos",
+        "rates", "windows", "duration-ms", "clients", "seeds-per-request",
+        "out",
     ];
     const SERVE_SWITCHES: &[&str] = &["bench", "no-amp"];
     args.ensure_known(SERVE_OPTIONS, SERVE_SWITCHES)?;
@@ -325,6 +389,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         v => bail!("--variant must be fsa|dgl, got {v:?}"),
     };
     let planner = planner_choice(args)?;
+    let seed = args.u64_or("seed", 42)?;
     let cfg = TrainConfig {
         variant,
         dataset: args.str_or("dataset", "products_sim"),
@@ -332,17 +397,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch: args.usize_or("batch", 64)?,
         amp: !args.has("no-amp"),
         save_indices: false,
-        seed: args.u64_or("seed", 42)?,
+        seed,
         threads: args.usize_or("threads", 1)?,
         prefetch: false,
         backend: BackendChoice::parse(&args.str_or("backend", "native"))?,
         planner,
         planner_state: planner_state_arg(args, planner),
+        faults: chaos_arg(args, seed)?,
     };
     let scfg = serve::ServeConfig {
         batch_window_ms: f64_opt(args, "batch-window-ms", 2.0)?,
         max_batch: args.usize_or("max-batch", 512)?,
         queue_depth: args.usize_or("queue-depth", 64)?,
+        deadline_ms: f64_opt(args, "deadline-ms", 0.0)?,
     };
 
     println!("serving {} on {} fanout {} ({}-hop) threads={} \
@@ -379,6 +446,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             seeds_per_request: args.usize_or("seeds-per-request", 4)?,
             max_batch: scfg.max_batch,
             queue_depth: scfg.queue_depth,
+            deadline_ms: scfg.deadline_ms,
             seed: args.u64_or("seed", 42)?,
         };
         let rows = serve::bench::run_bench(&mut engine, &bc)?;
@@ -393,7 +461,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     // stdin line protocol: one request per line, seed ids separated by
-    // spaces/commas/tabs; EOF (or closing the pipe) shuts down cleanly
+    // spaces/commas/tabs; EOF (or closing the pipe) shuts down cleanly.
+    // Malformed lines get a structured `ERR <reason>` reply and the
+    // server keeps serving — bad input must never take the loop down.
     let (handle, rx) = serve::channel(&scfg, engine.ds.spec.n);
     let queue_depth = scfg.queue_depth;
     let reader = std::thread::spawn(move || {
@@ -401,37 +471,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let stdin = std::io::stdin();
         for line in stdin.lock().lines() {
             let Ok(line) = line else { break };
-            let seeds: Result<Vec<i32>, _> = line
-                .split([',', ' ', '\t'])
-                .filter(|t| !t.is_empty())
-                .map(str::parse::<i32>)
-                .collect();
-            let seeds = match seeds {
-                Ok(s) if !s.is_empty() => s,
-                Ok(_) => continue, // blank line
+            if line.trim().is_empty() {
+                continue;
+            }
+            let seeds = match serve::parse_request_line(&line) {
+                Ok(s) => s,
                 Err(e) => {
-                    eprintln!("bad request line {line:?}: {e}");
+                    println!("ERR {e}");
                     continue;
                 }
             };
             match handle.submit(seeds.clone()) {
                 Ok(serve::Submit::Accepted(reply)) => {
                     let Ok(r) = reply.recv() else { break };
-                    let c = r.scores.len() / seeds.len().max(1);
-                    let classes: Vec<usize> = r
-                        .scores
-                        .chunks(c.max(1))
-                        .map(argmax)
-                        .collect();
-                    println!("seeds {seeds:?} -> classes {classes:?} \
-                              ({:.2} ms)", r.latency_ms);
+                    match &r.body {
+                        serve::ReplyBody::Scores(scores) => {
+                            let c = scores.len() / seeds.len().max(1);
+                            let classes: Vec<usize> = scores
+                                .chunks(c.max(1))
+                                .map(argmax)
+                                .collect();
+                            println!("seeds {seeds:?} -> classes \
+                                      {classes:?} ({:.2} ms)",
+                                     r.latency_ms);
+                        }
+                        serve::ReplyBody::Timeout => {
+                            println!("ERR deadline exceeded \
+                                      ({:.2} ms waited)", r.latency_ms);
+                        }
+                        serve::ReplyBody::Error(reason) => {
+                            println!("ERR {reason}");
+                        }
+                    }
                 }
                 Ok(serve::Submit::Shed) => {
-                    eprintln!("rejected: queue full \
-                               (--queue-depth {queue_depth})");
+                    println!("ERR queue full \
+                              (--queue-depth {queue_depth})");
                 }
                 Err(e) => {
-                    eprintln!("request failed: {e}");
+                    println!("ERR {e}");
                 }
             }
         }
@@ -441,9 +519,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     reader.join().map_err(|_| anyhow!("stdin reader panicked"))?;
     let (p50, p95, p99) = stats.latency_percentiles();
     println!("served {} requests in {} micro-batches (mean {:.1} \
-              seeds/batch); latency p50 {:.2} p95 {:.2} p99 {:.2} ms",
+              seeds/batch); latency p50 {:.2} p95 {:.2} p99 {:.2} ms; \
+              {} faulted, {} timed out, {} retries",
              stats.completed, stats.batches, stats.mean_batch_seeds(),
-             p50, p95, p99);
+             p50, p95, p99, stats.faults, stats.timeouts, stats.retries);
     Ok(())
 }
 

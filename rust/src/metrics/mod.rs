@@ -274,24 +274,33 @@ pub struct ServingRow {
     pub p99_ms: f64,
     /// Median per-micro-batch shard imbalance (1.0 = balanced/serial).
     pub imbalance: f64,
+    /// Requests that got an `Error` reply (micro-batch panic or engine
+    /// failure, isolated to the batch).
+    pub faults: u64,
+    /// Bounded-backoff retries spent on transient persistence failures.
+    pub retries: u64,
+    /// Requests answered with a `Timeout` reply (deadline expired before
+    /// dispatch).
+    pub timeouts: u64,
 }
 
-pub const SERVING_CSV_HEADER: &str = "dataset,fanout,backend,planner,batch_window_ms,max_batch,queue_depth,offered_rps,completed,shed,achieved_rps,p50_ms,p95_ms,p99_ms,imbalance";
+pub const SERVING_CSV_HEADER: &str = "dataset,fanout,backend,planner,batch_window_ms,max_batch,queue_depth,offered_rps,completed,shed,achieved_rps,p50_ms,p95_ms,p99_ms,imbalance,faults,retries,timeouts";
 
 impl ServingRow {
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{:.3},{},{},{:.1},{},{},{:.2},{:.4},{:.4},{:.4},{:.4}",
+            "{},{},{},{},{:.3},{},{},{:.1},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{},{},{}",
             self.dataset, self.fanout, self.backend, self.planner,
             self.batch_window_ms, self.max_batch, self.queue_depth,
             self.offered_rps, self.completed, self.shed, self.achieved_rps,
-            self.p50_ms, self.p95_ms, self.p99_ms, self.imbalance
+            self.p50_ms, self.p95_ms, self.p99_ms, self.imbalance,
+            self.faults, self.retries, self.timeouts
         )
     }
 
     pub fn parse_csv(line: &str) -> Option<ServingRow> {
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 15 {
+        if f.len() != 18 {
             return None;
         }
         Some(ServingRow {
@@ -310,6 +319,9 @@ impl ServingRow {
             p95_ms: f[12].parse().ok()?,
             p99_ms: f[13].parse().ok()?,
             imbalance: f[14].parse().ok()?,
+            faults: f[15].parse().ok()?,
+            retries: f[16].parse().ok()?,
+            timeouts: f[17].parse().ok()?,
         })
     }
 }
@@ -323,7 +335,7 @@ pub fn write_serving_csv(path: &Path,
     for r in rows {
         let _ = writeln!(out, "{}", r.to_csv());
     }
-    std::fs::write(path, out)
+    crate::util::atomic_write(path, out.as_bytes())
 }
 
 /// Read serving rows back (skipping header and malformed lines).
@@ -341,7 +353,7 @@ pub fn write_throughput_csv(path: &Path,
     for r in rows {
         let _ = writeln!(out, "{}", r.to_csv());
     }
-    std::fs::write(path, out)
+    crate::util::atomic_write(path, out.as_bytes())
 }
 
 /// Write rows (with header) to a CSV file.
@@ -352,7 +364,7 @@ pub fn write_csv(path: &Path, rows: &[BenchRow]) -> std::io::Result<()> {
     for r in rows {
         let _ = writeln!(out, "{}", r.to_csv());
     }
-    std::fs::write(path, out)
+    crate::util::atomic_write(path, out.as_bytes())
 }
 
 /// Read rows back (skipping the header and malformed lines).
@@ -564,6 +576,9 @@ mod tests {
             p95_ms: 3.4,
             p99_ms: 5.6,
             imbalance: 1.07,
+            faults: 3,
+            retries: 1,
+            timeouts: 2,
         }
     }
 
@@ -582,12 +597,15 @@ mod tests {
         assert!((parsed.achieved_rps - 726.3).abs() < 1e-6);
         assert!((parsed.p99_ms - 5.6).abs() < 1e-6);
         assert!((parsed.imbalance - 1.07).abs() < 1e-6);
+        assert_eq!(parsed.faults, 3);
+        assert_eq!(parsed.retries, 1);
+        assert_eq!(parsed.timeouts, 2);
         assert_eq!(SERVING_CSV_HEADER.split(',').count(),
                    row.to_csv().split(',').count());
     }
 
     /// Pin the serving schema exactly, same contract as
-    /// `csv_schemas_are_pinned`: 15 columns, this order, and rows from
+    /// `csv_schemas_are_pinned`: 18 columns, this order, and rows from
     /// an older (shorter) schema are rejected rather than misassigned.
     #[test]
     fn serving_csv_schema_is_pinned() {
@@ -595,11 +613,11 @@ mod tests {
             SERVING_CSV_HEADER,
             "dataset,fanout,backend,planner,batch_window_ms,max_batch,\
              queue_depth,offered_rps,completed,shed,achieved_rps,\
-             p50_ms,p95_ms,p99_ms,imbalance");
-        assert_eq!(SERVING_CSV_HEADER.split(',').count(), 15);
+             p50_ms,p95_ms,p99_ms,imbalance,faults,retries,timeouts");
+        assert_eq!(SERVING_CSV_HEADER.split(',').count(), 18);
         let new = sample_serving_row().to_csv();
-        let old_14_cols = new.rsplit_once(',').unwrap().0;
-        assert!(ServingRow::parse_csv(old_14_cols).is_none());
+        let old_17_cols = new.rsplit_once(',').unwrap().0;
+        assert!(ServingRow::parse_csv(old_17_cols).is_none());
     }
 
     #[test]

@@ -139,6 +139,23 @@ pub trait Backend {
     fn eval_imbalance(&self) -> Option<f64> {
         None
     }
+
+    /// AdamW (m, v) moment tensors as host f32, aligned with
+    /// [`Backend::params_f32`] — the other half of a crash-exact
+    /// checkpoint. `None` means the backend cannot export them (the
+    /// resulting checkpoint is then serve-only, not resumable).
+    fn opt_state_f32(&self) -> Option<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        None
+    }
+
+    /// Restore the AdamW moments (checkpoint resume). Backends without
+    /// an in-place optimizer store must reject: resuming with zeroed
+    /// moments would silently diverge from the uninterrupted trajectory.
+    fn set_opt_state_f32(&mut self, _m: &[Vec<f32>], _v: &[Vec<f32>])
+                         -> Result<()> {
+        bail!("the {} backend cannot restore optimizer state; \
+               use --backend native", self.name())
+    }
 }
 
 /// Reject fanouts the AOT manifest cannot express. The manifest only

@@ -1,0 +1,480 @@
+//! Injectable fault plane — deterministic chaos for fault-tolerance
+//! testing, modeled on the [`crate::graph::ShardClock`] seam: production
+//! code threads an `Arc<dyn FaultPlane>` through every fault site, the
+//! default [`NoFaults`] implementation is a zero-cost no-op (every hook
+//! returns a constant, nothing is counted, outputs are bitwise identical
+//! to a build without the seam), and tests / `--chaos` runs install a
+//! [`ChaosPlane`] that scripts faults by site and operation index.
+//!
+//! Replayability: a chaos run is a pure function of (spec, seed, call
+//! order). Each site keeps its own operation counter, advanced once per
+//! operation by the *coordinating* thread ([`FaultPlane::begin`]) before
+//! any worker fans out, so shard workers query faults with a stable
+//! `(site, op, worker)` key no matter how threads interleave.
+//! Probabilistic rules (`~p`) draw from the counter RNG
+//! ([`crate::rng::rand_counter`]) keyed by that same triple — rerunning
+//! the same spec+seed reproduces exactly the same fault schedule.
+//!
+//! The `--chaos` spec grammar (train/serve):
+//!
+//! ```text
+//! spec  := rule (';' rule)*
+//! rule  := site '@' ops [ '/w' N ] [ '~' P ] '=' kind
+//! site  := kernel | sampler | state-write | ckpt-write | ckpt-read
+//!          | csv-write | serve
+//! ops   := N | N '-' M (inclusive) | '*'        site-local op counter
+//! kind  := panic | err | corrupt | stall:MS
+//! ```
+//!
+//! Examples: `kernel@3/w1=panic` (worker 1 of the 4th parallel kernel
+//! pass panics, the pass recovers by serial recompute),
+//! `ckpt-write@*=err` (every checkpoint write fails — retries exhaust,
+//! the save hard-errors naming the site), `serve@2=panic` (the 3rd
+//! micro-batch is poisoned; the server isolates it and keeps draining),
+//! `state-write@0-4~0.5=err` (each of the first 5 planner-state saves
+//! fails with probability 0.5, drawn deterministically).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::rng::rand_counter;
+
+/// Everywhere a fault can be injected, named as in the `--chaos` grammar.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// A parallel pass of the fused kernel (`fused_khop_planned`); one op
+    /// per sharded pass, faults keyed per worker.
+    KernelWorker,
+    /// A sharded pass of the parallel host sampler (`run_plan`).
+    SamplerWorker,
+    /// A planner-state save (`results/planner_state.json`).
+    StateWrite,
+    /// A params/train checkpoint save.
+    CheckpointWrite,
+    /// A params/train checkpoint load (supports `corrupt`).
+    CheckpointRead,
+    /// A results CSV write (bench/throughput/serving).
+    CsvWrite,
+    /// One serve micro-batch (the fused forward inside `run_server`).
+    ServeBatch,
+}
+
+pub const ALL_SITES: [FaultSite; 7] = [
+    FaultSite::KernelWorker,
+    FaultSite::SamplerWorker,
+    FaultSite::StateWrite,
+    FaultSite::CheckpointWrite,
+    FaultSite::CheckpointRead,
+    FaultSite::CsvWrite,
+    FaultSite::ServeBatch,
+];
+
+impl FaultSite {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultSite::KernelWorker => "kernel",
+            FaultSite::SamplerWorker => "sampler",
+            FaultSite::StateWrite => "state-write",
+            FaultSite::CheckpointWrite => "ckpt-write",
+            FaultSite::CheckpointRead => "ckpt-read",
+            FaultSite::CsvWrite => "csv-write",
+            FaultSite::ServeBatch => "serve",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FaultSite> {
+        ALL_SITES
+            .iter()
+            .copied()
+            .find(|site| site.as_str() == s)
+            .ok_or_else(|| {
+                anyhow!("unknown fault site {s:?}; sites are {}",
+                        ALL_SITES.map(|s| s.as_str()).join("|"))
+            })
+    }
+
+    fn index(&self) -> usize {
+        ALL_SITES.iter().position(|s| s == self).unwrap()
+    }
+}
+
+impl std::fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// What a site is scripted to do for one `(op, worker)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Proceed normally (the only answer [`NoFaults`] ever gives).
+    None,
+    /// Fail the operation with an injected error (retried where the call
+    /// site has a retry budget; hard error once it is exhausted).
+    Error,
+    /// Panic inside the operation (exercises `catch_unwind` isolation and
+    /// shard-recompute recovery).
+    Panic,
+    /// Sleep this many milliseconds, then proceed — moves timing (and the
+    /// adaptive planner's measurements) without ever touching values.
+    Stall(u64),
+    /// Corrupt the bytes of a read (checkpoint loads) deterministically.
+    Corrupt,
+}
+
+/// The injectable fault seam. Prod is [`NoFaults`]; chaos runs and the
+/// fault-tolerance tests install a scripted [`ChaosPlane`]. Same shape as
+/// `ShardClock`: `Debug + Send + Sync` behind an `Arc`, threaded through
+/// the cost model, the sampler, the engine, and serve.
+pub trait FaultPlane: std::fmt::Debug + Send + Sync {
+    /// Advance and return `site`'s 0-based operation counter. Called once
+    /// per operation by the coordinating thread, *before* workers fan
+    /// out, so `(site, op, worker)` keys are interleaving-independent.
+    fn begin(&self, site: FaultSite) -> u64 {
+        let _ = site;
+        0
+    }
+
+    /// The scripted fault for operation `op` at `site` as seen by shard
+    /// `worker` (0 outside sharded passes). Pure: the same key always
+    /// answers the same fault.
+    fn fault(&self, site: FaultSite, op: u64, worker: usize) -> Fault {
+        let _ = (site, op, worker);
+        Fault::None
+    }
+
+    /// Deterministically corrupt `bytes` when operation `op` at `site` is
+    /// scripted [`Fault::Corrupt`]; no-op otherwise.
+    fn mangle(&self, site: FaultSite, op: u64, bytes: &mut [u8]) {
+        let _ = (site, op, bytes);
+    }
+}
+
+/// The production plane: never faults, counts nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoFaults;
+
+impl FaultPlane for NoFaults {}
+
+/// Shared handle to the production no-op plane.
+pub fn none() -> Arc<dyn FaultPlane> {
+    Arc::new(NoFaults)
+}
+
+/// One parsed `--chaos` rule.
+#[derive(Clone, Debug)]
+struct Rule {
+    site: FaultSite,
+    /// Inclusive op range; `*` parses to `(0, u64::MAX)`.
+    ops: (u64, u64),
+    /// `/wN`: only this worker index (sharded sites); None = every worker.
+    worker: Option<usize>,
+    /// `~p`: fire with probability `p`, drawn from the counter RNG keyed
+    /// by `(seed, site, op, worker)`; None = always.
+    prob: Option<f64>,
+    kind: Fault,
+}
+
+impl Rule {
+    fn matches(&self, seed: u64, rule_idx: usize, site: FaultSite, op: u64,
+               worker: usize) -> bool {
+        if site != self.site || op < self.ops.0 || op > self.ops.1 {
+            return false;
+        }
+        if self.worker.is_some_and(|w| w != worker) {
+            return false;
+        }
+        match self.prob {
+            None => true,
+            Some(p) => {
+                // decorrelate rules sharing a key via the slot counter
+                let word = rand_counter(seed, site.index() as u64 ^ (op << 3),
+                                        worker as u64, rule_idx as u64);
+                (word >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < p
+            }
+        }
+    }
+}
+
+/// A scripted fault schedule: deterministic, replayable, thread-count
+/// independent (see module docs).
+#[derive(Debug)]
+pub struct ChaosPlane {
+    seed: u64,
+    rules: Vec<Rule>,
+    counters: [AtomicU64; ALL_SITES.len()],
+}
+
+impl ChaosPlane {
+    /// Parse a `--chaos` spec (grammar in the module docs). `seed` drives
+    /// the probabilistic rules and read corruption.
+    pub fn parse(spec: &str, seed: u64) -> Result<ChaosPlane> {
+        let mut rules = Vec::new();
+        for raw in spec.split(';').map(str::trim).filter(|r| !r.is_empty()) {
+            rules.push(Self::parse_rule(raw)?);
+        }
+        if rules.is_empty() {
+            bail!("--chaos spec {spec:?} contains no rules");
+        }
+        Ok(ChaosPlane {
+            seed: crate::rng::mix(seed ^ 0xC4A0),
+            rules,
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+        })
+    }
+
+    fn parse_rule(raw: &str) -> Result<Rule> {
+        let err = || {
+            anyhow!("bad chaos rule {raw:?}; expected \
+                     site@ops[/wN][~P]=kind (e.g. kernel@3/w1=panic)")
+        };
+        let (lhs, kind) = raw.split_once('=').ok_or_else(err)?;
+        let (site, mut sel) = lhs.split_once('@').ok_or_else(err)?;
+        let site = FaultSite::parse(site.trim())?;
+        let mut prob = None;
+        if let Some((rest, p)) = sel.split_once('~') {
+            let p: f64 = p.trim().parse().map_err(|_| err())?;
+            if !(0.0..=1.0).contains(&p) {
+                bail!("chaos probability {p} not in [0, 1] in {raw:?}");
+            }
+            prob = Some(p);
+            sel = rest;
+        }
+        let mut worker = None;
+        if let Some((rest, w)) = sel.split_once("/w") {
+            worker = Some(w.trim().parse().map_err(|_| err())?);
+            sel = rest;
+        }
+        let sel = sel.trim();
+        let ops = if sel == "*" {
+            (0, u64::MAX)
+        } else if let Some((a, b)) = sel.split_once('-') {
+            let lo: u64 = a.trim().parse().map_err(|_| err())?;
+            let hi: u64 = b.trim().parse().map_err(|_| err())?;
+            if hi < lo {
+                bail!("empty op range {sel:?} in {raw:?}");
+            }
+            (lo, hi)
+        } else {
+            let n: u64 = sel.parse().map_err(|_| err())?;
+            (n, n)
+        };
+        let kind = match kind.trim() {
+            "panic" => Fault::Panic,
+            "err" => Fault::Error,
+            "corrupt" => Fault::Corrupt,
+            other => match other.strip_prefix("stall:") {
+                Some(ms) => Fault::Stall(ms.trim().parse().map_err(|_| {
+                    anyhow!("bad stall duration in chaos rule {raw:?}")
+                })?),
+                None => bail!("unknown chaos kind {other:?} in {raw:?}; \
+                               kinds are panic|err|corrupt|stall:MS"),
+            },
+        };
+        Ok(Rule { site, ops, worker, prob, kind })
+    }
+}
+
+impl FaultPlane for ChaosPlane {
+    fn begin(&self, site: FaultSite) -> u64 {
+        self.counters[site.index()].fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn fault(&self, site: FaultSite, op: u64, worker: usize) -> Fault {
+        for (i, r) in self.rules.iter().enumerate() {
+            if r.matches(self.seed, i, site, op, worker) {
+                return r.kind;
+            }
+        }
+        Fault::None
+    }
+
+    fn mangle(&self, site: FaultSite, op: u64, bytes: &mut [u8]) {
+        if self.fault(site, op, 0) != Fault::Corrupt || bytes.is_empty() {
+            return;
+        }
+        // flip a handful of deterministically chosen bytes
+        let n = bytes.len();
+        for slot in 0..4u64.min(n as u64) {
+            let word = rand_counter(self.seed, site.index() as u64, op, slot);
+            bytes[(word % n as u64) as usize] ^= 0xA5;
+        }
+    }
+}
+
+/// Apply the scripted fault for one coordinated (non-sharded) operation:
+/// stalls sleep, errors return `Err`, panics panic. `Corrupt` is a no-op
+/// here — read sites apply it to their bytes via [`FaultPlane::mangle`].
+pub fn inject(plane: &dyn FaultPlane, site: FaultSite, op: u64) -> Result<()> {
+    match plane.fault(site, op, 0) {
+        Fault::None | Fault::Corrupt => Ok(()),
+        Fault::Stall(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+        Fault::Error => bail!("chaos: injected {site} error (op {op})"),
+        Fault::Panic => panic!("chaos: injected {site} panic (op {op})"),
+    }
+}
+
+/// Run `op` with bounded retries and deterministic jittered exponential
+/// backoff (for transient persistence failures). Returns the result and
+/// the number of retries consumed; on exhaustion the error names the
+/// site and attempt count. Backoff after attempt `i` (0-based) is
+/// `2^i` ms plus up to `2^i` ms of counter-RNG jitter keyed by
+/// `(jitter_seed, site, invocation, attempt)`.
+pub fn with_retries<T>(site: FaultSite, max_attempts: u32, jitter_seed: u64,
+                       invocation: u64,
+                       mut op: impl FnMut() -> Result<T>)
+                       -> (Result<T>, u32) {
+    debug_assert!(max_attempts >= 1);
+    let mut retries = 0;
+    loop {
+        match op() {
+            Ok(v) => return (Ok(v), retries),
+            Err(e) if retries + 1 >= max_attempts => {
+                return (Err(e.context(format!(
+                    "{site} failed after {max_attempts} attempts"))),
+                        retries);
+            }
+            Err(_) => {
+                let base = 1u64 << retries.min(6);
+                let jitter = rand_counter(crate::rng::mix(jitter_seed),
+                                          site.index() as u64, invocation,
+                                          retries as u64) % base;
+                std::thread::sleep(std::time::Duration::from_millis(
+                    base + jitter));
+                retries += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_plane_answers_constants() {
+        let p = NoFaults;
+        assert_eq!(p.begin(FaultSite::KernelWorker), 0);
+        assert_eq!(p.begin(FaultSite::KernelWorker), 0);
+        assert_eq!(p.fault(FaultSite::ServeBatch, 7, 3), Fault::None);
+        let mut bytes = vec![1u8, 2, 3];
+        p.mangle(FaultSite::CheckpointRead, 0, &mut bytes);
+        assert_eq!(bytes, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn spec_parses_sites_ops_workers_kinds() {
+        let p = ChaosPlane::parse(
+            "kernel@3/w1=panic; ckpt-write@0-2=err; serve@*=stall:5; \
+             ckpt-read@0=corrupt",
+            42).unwrap();
+        assert_eq!(p.fault(FaultSite::KernelWorker, 3, 1), Fault::Panic);
+        assert_eq!(p.fault(FaultSite::KernelWorker, 3, 0), Fault::None);
+        assert_eq!(p.fault(FaultSite::KernelWorker, 2, 1), Fault::None);
+        assert_eq!(p.fault(FaultSite::CheckpointWrite, 0, 0), Fault::Error);
+        assert_eq!(p.fault(FaultSite::CheckpointWrite, 2, 0), Fault::Error);
+        assert_eq!(p.fault(FaultSite::CheckpointWrite, 3, 0), Fault::None);
+        assert_eq!(p.fault(FaultSite::ServeBatch, 999, 0), Fault::Stall(5));
+        assert_eq!(p.fault(FaultSite::CheckpointRead, 0, 0), Fault::Corrupt);
+    }
+
+    #[test]
+    fn bad_specs_error_clearly() {
+        for (spec, needle) in [
+            ("", "no rules"),
+            ("kernel=panic", "expected"),
+            ("bogus@0=panic", "unknown fault site"),
+            ("kernel@0=explode", "unknown chaos kind"),
+            ("kernel@5-2=panic", "empty op range"),
+            ("kernel@0~1.5=err", "not in [0, 1]"),
+            ("kernel@0=stall:abc", "stall duration"),
+        ] {
+            let err = ChaosPlane::parse(spec, 1).unwrap_err().to_string();
+            assert!(err.contains(needle), "{spec:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn counters_are_per_site_and_monotonic() {
+        let p = ChaosPlane::parse("kernel@*=panic", 1).unwrap();
+        assert_eq!(p.begin(FaultSite::KernelWorker), 0);
+        assert_eq!(p.begin(FaultSite::KernelWorker), 1);
+        assert_eq!(p.begin(FaultSite::ServeBatch), 0);
+        assert_eq!(p.begin(FaultSite::KernelWorker), 2);
+    }
+
+    #[test]
+    fn probabilistic_rules_replay_exactly() {
+        let fire = |seed: u64| -> Vec<bool> {
+            let p = ChaosPlane::parse("serve@*~0.5=err", seed).unwrap();
+            (0..64)
+                .map(|op| p.fault(FaultSite::ServeBatch, op, 0) == Fault::Error)
+                .collect()
+        };
+        let a = fire(7);
+        assert_eq!(a, fire(7), "same seed must replay the same schedule");
+        assert_ne!(a, fire(8), "different seed should move the schedule");
+        let hits = a.iter().filter(|&&b| b).count();
+        assert!((16..=48).contains(&hits), "p=0.5 wildly off: {hits}/64");
+    }
+
+    #[test]
+    fn mangle_corrupts_deterministically_and_only_when_scripted() {
+        let p = ChaosPlane::parse("ckpt-read@1=corrupt", 3).unwrap();
+        let clean = b"{\"version\": 2}".to_vec();
+        let mut a = clean.clone();
+        p.mangle(FaultSite::CheckpointRead, 0, &mut a);
+        assert_eq!(a, clean, "op 0 is not scripted");
+        p.mangle(FaultSite::CheckpointRead, 1, &mut a);
+        assert_ne!(a, clean, "op 1 must corrupt");
+        let mut b = clean.clone();
+        let q = ChaosPlane::parse("ckpt-read@1=corrupt", 3).unwrap();
+        q.mangle(FaultSite::CheckpointRead, 1, &mut b);
+        assert_eq!(a, b, "corruption must be deterministic");
+    }
+
+    #[test]
+    fn inject_maps_kinds() {
+        let p = ChaosPlane::parse("state-write@0=err", 1).unwrap();
+        let err = inject(&p, FaultSite::StateWrite, 0).unwrap_err()
+            .to_string();
+        assert!(err.contains("state-write"), "{err}");
+        assert!(err.contains("op 0"), "{err}");
+        inject(&p, FaultSite::StateWrite, 1).unwrap();
+        let panicking = ChaosPlane::parse("serve@0=panic", 1).unwrap();
+        let r = std::panic::catch_unwind(|| {
+            inject(&panicking, FaultSite::ServeBatch, 0)
+        });
+        assert!(r.is_err(), "panic kind must panic");
+    }
+
+    #[test]
+    fn retries_back_off_then_hard_error_naming_site() {
+        // always-failing op: exhausts the budget
+        let mut calls = 0;
+        let (res, retries) = with_retries(
+            FaultSite::CheckpointWrite, 3, 42, 0, || {
+                calls += 1;
+                bail!("transient")
+            });
+        assert_eq!((calls, retries), (3, 2));
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(err.contains("ckpt-write failed after 3 attempts"), "{err}");
+        // heals on the second attempt: one retry, success
+        let mut calls = 0;
+        let (res, retries) = with_retries(
+            FaultSite::StateWrite, 3, 42, 1, || {
+                calls += 1;
+                if calls == 1 {
+                    bail!("transient")
+                }
+                Ok(7)
+            });
+        assert_eq!((res.unwrap(), retries), (7, 1));
+    }
+}

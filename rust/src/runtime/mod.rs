@@ -17,6 +17,7 @@
 //! are uploaded each step and counted by the memory meter.
 
 pub mod backend;
+pub mod faults;
 pub mod manifest;
 
 use std::collections::HashMap;

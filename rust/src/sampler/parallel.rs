@@ -28,6 +28,7 @@ use crate::graph::{lock_model, shard, CostModel, Csr, ImbalanceAcc,
                    PlannerChoice, ShardClock, ShardStats, SharedCostModel,
                    WallClock};
 use crate::metrics::Timer;
+use crate::runtime::faults::{self, Fault, FaultPlane, FaultSite};
 
 use super::{sample_neighbors, Block};
 
@@ -66,6 +67,8 @@ pub struct ParallelSampler {
     model: Option<SharedCostModel>,
     /// Timing seam for the sharded passes.
     clock: Arc<dyn ShardClock>,
+    /// Fault seam for the sharded passes (no-op plane in production).
+    faults: Arc<dyn FaultPlane>,
 }
 
 impl ParallelSampler {
@@ -87,16 +90,21 @@ impl ParallelSampler {
             stats: Arc::new(Mutex::new(ImbalanceAcc::default())),
             model: None,
             clock: Arc::new(WallClock),
+            faults: faults::none(),
         }
     }
 
     /// Attach the session's shared planner model: block builds plan
     /// through it and fold their measured per-level [`ShardStats`] back
     /// via [`CostModel::observe`] (the sampler half of the adaptive
-    /// feedback loop). The sampler also adopts the model's clock so one
-    /// seam scripts both the kernel's and the sampler's timing.
+    /// feedback loop). The sampler also adopts the model's clock and
+    /// fault plane so one seam scripts both the kernel's and the
+    /// sampler's timing and faults.
     pub fn with_model(mut self, model: SharedCostModel) -> Self {
-        self.clock = lock_model(&model).clock();
+        let m = lock_model(&model);
+        self.clock = m.clock();
+        self.faults = m.faults();
+        drop(m);
         self.model = Some(model);
         self
     }
@@ -104,6 +112,12 @@ impl ParallelSampler {
     /// Replace the timing seam (tests script a virtual clock here).
     pub fn with_clock(mut self, clock: Arc<dyn ShardClock>) -> Self {
         self.clock = clock;
+        self
+    }
+
+    /// Replace the fault seam (chaos runs and the fault-tolerance tests).
+    pub fn with_faults(mut self, faults: Arc<dyn FaultPlane>) -> Self {
+        self.faults = faults;
         self
     }
 
@@ -127,6 +141,7 @@ impl ParallelSampler {
             stats: Arc::new(Mutex::new(ImbalanceAcc::default())),
             model: self.model.clone(),
             clock: self.clock.clone(),
+            faults: self.faults.clone(),
         }
     }
 
@@ -177,9 +192,13 @@ impl ParallelSampler {
             .iter()
             .map(|r| costs[r.clone()].iter().sum())
             .collect();
+        let pass = self.faults.begin(FaultSite::SamplerWorker);
+        let plan_ranges = plan.clone();
+        let mut failed = vec![false; plan_ranges.len()];
         std::thread::scope(|s| {
-            let mut rest: &mut [i32] = out;
+            let mut rest: &mut [i32] = &mut *out;
             let mut ms_rest: &mut [f64] = &mut shard_ms;
+            let mut failed_rest: &mut [bool] = &mut failed;
             let fill = &fill;
             for (j, r) in plan.into_iter().enumerate() {
                 let take = (r.end - r.start) * width;
@@ -188,21 +207,55 @@ impl ParallelSampler {
                 rest = tail;
                 let (ms_c, tail) = std::mem::take(&mut ms_rest).split_at_mut(1);
                 ms_rest = tail;
+                let (fail_c, tail) =
+                    std::mem::take(&mut failed_rest).split_at_mut(1);
+                failed_rest = tail;
                 let rows = &frontier[r];
                 if rows.is_empty() {
                     continue;
                 }
                 let clock = self.clock.clone();
+                let faults = self.faults.clone();
                 let cost_j = shard_cost[j];
                 s.spawn(move || {
                     let t = Timer::start();
-                    for (i, &u) in rows.iter().enumerate() {
-                        fill(u, &mut chunk[i * width..(i + 1) * width]);
-                    }
+                    let res = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            match faults.fault(FaultSite::SamplerWorker,
+                                               pass, j) {
+                                Fault::Stall(ms) => std::thread::sleep(
+                                    std::time::Duration::from_millis(ms)),
+                                Fault::Panic | Fault::Error => {
+                                    panic!("chaos: injected sampler panic \
+                                            (op {pass}, worker {j})")
+                                }
+                                _ => {}
+                            }
+                            for (i, &u) in rows.iter().enumerate() {
+                                fill(u,
+                                     &mut chunk[i * width..(i + 1) * width]);
+                            }
+                        }));
+                    fail_c[0] = res.is_err();
                     ms_c[0] = clock.shard_ms(j, cost_j, t.ms());
                 });
             }
         });
+        // Recovery: redo any panicked shard serially — the counter RNG
+        // is stateless, so the redo is bitwise identical to an
+        // undisturbed pass over those rows.
+        for (j, r) in plan_ranges.iter().enumerate() {
+            if !failed[j] {
+                continue;
+            }
+            eprintln!("warning: sampler shard worker {j} panicked; \
+                       resampling rows {}..{} serially", r.start, r.end);
+            let chunk = &mut out[r.start * width..r.end * width];
+            chunk.fill(-1);
+            for (i, &u) in frontier[r.clone()].iter().enumerate() {
+                fill(u, &mut chunk[i * width..(i + 1) * width]);
+            }
+        }
         self.record(ShardStats::new(shard_ms, shard_cost));
     }
 

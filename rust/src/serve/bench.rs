@@ -39,6 +39,8 @@ pub struct BenchConfig {
     pub max_batch: usize,
     /// Admission queue depth (`ServeConfig::queue_depth`).
     pub queue_depth: usize,
+    /// Per-request deadline (`ServeConfig::deadline_ms`; 0 = none).
+    pub deadline_ms: f64,
     /// RNG seed for the clients' node draws.
     pub seed: u64,
 }
@@ -53,6 +55,7 @@ impl Default for BenchConfig {
             seeds_per_request: 4,
             max_batch: 512,
             queue_depth: 64,
+            deadline_ms: 0.0,
             seed: 42,
         }
     }
@@ -79,6 +82,7 @@ pub fn run_bench(engine: &mut Engine<'_>, bc: &BenchConfig)
                 batch_window_ms: window,
                 max_batch: bc.max_batch,
                 queue_depth: bc.queue_depth,
+                deadline_ms: bc.deadline_ms,
             };
             let (handle, rx) = channel(&scfg, n_nodes);
             // each client paces at rate/clients so the *sum* offered
@@ -126,6 +130,9 @@ pub fn run_bench(engine: &mut Engine<'_>, bc: &BenchConfig)
                 p95_ms: p95,
                 p99_ms: p99,
                 imbalance: stats.median_imbalance(),
+                faults: stats.faults,
+                retries: stats.retries,
+                timeouts: stats.timeouts,
             });
         }
     }
@@ -166,14 +173,16 @@ fn client_loop(handle: ServeHandle, n_nodes: usize, seeds_per_request: usize,
 pub fn render_table(rows: &[ServingRow]) -> String {
     let mut out = String::new();
     out.push_str("offered_rps  window_ms  completed   shed  \
-                  achieved_rps  p50_ms  p95_ms  p99_ms  imbalance\n");
+                  achieved_rps  p50_ms  p95_ms  p99_ms  imbalance  \
+                  faults  retries  timeouts\n");
     for r in rows {
         let _ = writeln!(
             out,
             "{:>11.0}  {:>9.1}  {:>9}  {:>5}  {:>12.1}  {:>6.2}  \
-             {:>6.2}  {:>6.2}  {:>9.3}",
+             {:>6.2}  {:>6.2}  {:>9.3}  {:>6}  {:>7}  {:>8}",
             r.offered_rps, r.batch_window_ms, r.completed, r.shed,
-            r.achieved_rps, r.p50_ms, r.p95_ms, r.p99_ms, r.imbalance);
+            r.achieved_rps, r.p50_ms, r.p95_ms, r.p99_ms, r.imbalance,
+            r.faults, r.retries, r.timeouts);
     }
     out
 }

@@ -27,6 +27,16 @@
 //! handle has been dropped and the queue is drained — shutdown is
 //! graceful by construction, and dropping the engine afterwards persists
 //! planner state exactly like a training session's shutdown does.
+//!
+//! Graceful degradation (the fault-tolerance contract, pinned in
+//! `rust/tests/faults.rs`): every admitted request gets exactly one
+//! typed reply. Requests whose enqueue→dispatch wait exceeds
+//! `--deadline-ms` are answered [`ReplyBody::Timeout`] instead of stale
+//! scores; a micro-batch whose forward pass panics or errors is
+//! *isolated* — its requests get [`ReplyBody::Error`] and the server
+//! keeps draining (`catch_unwind` around the one `infer` call, chaos
+//! site `serve`). Both outcomes are counted ([`ServeStats::timeouts`],
+//! [`ServeStats::faults`]) and land in `serving.csv`.
 
 pub mod bench;
 
@@ -37,6 +47,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::engine::Engine;
 use crate::metrics::percentile_sorted;
+use crate::runtime::faults::{self, FaultSite};
 
 /// Micro-batching + admission policy of one serving loop.
 #[derive(Clone, Copy, Debug)]
@@ -50,11 +61,16 @@ pub struct ServeConfig {
     /// Bounded queue depth (admission control): submissions beyond this
     /// many waiting requests are shed.
     pub queue_depth: usize,
+    /// Per-request deadline, ms (0 = none): a request that waited longer
+    /// than this before its batch dispatched is answered
+    /// [`ReplyBody::Timeout`] instead of stale scores.
+    pub deadline_ms: f64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { batch_window_ms: 2.0, max_batch: 512, queue_depth: 64 }
+        ServeConfig { batch_window_ms: 2.0, max_batch: 512, queue_depth: 64,
+                      deadline_ms: 0.0 }
     }
 }
 
@@ -65,12 +81,35 @@ pub struct Request {
     reply: mpsc::Sender<Reply>,
 }
 
-/// Per-request response: row-major `[seeds.len(), classes]` scores plus
-/// the measured enqueue→reply latency.
+/// What a reply carries: scores on success, a typed degradation
+/// otherwise. Every admitted request gets exactly one reply.
+#[derive(Clone, Debug)]
+pub enum ReplyBody {
+    /// Row-major `[seeds.len(), classes]` scores.
+    Scores(Vec<f32>),
+    /// The request missed its `--deadline-ms` before dispatch.
+    Timeout,
+    /// The request's micro-batch panicked or errored; the failure was
+    /// isolated to the batch and the server kept serving.
+    Error(String),
+}
+
+/// Per-request response: the typed body plus the measured enqueue→reply
+/// latency.
 #[derive(Clone, Debug)]
 pub struct Reply {
-    pub scores: Vec<f32>,
+    pub body: ReplyBody,
     pub latency_ms: f64,
+}
+
+impl Reply {
+    /// The scores, when this reply has any (None for timeout/error).
+    pub fn scores(&self) -> Option<&[f32]> {
+        match &self.body {
+            ReplyBody::Scores(s) => Some(s),
+            _ => None,
+        }
+    }
 }
 
 /// Outcome of a submission attempt.
@@ -134,6 +173,14 @@ pub struct ServeStats {
     pub latencies_ms: Vec<f64>,
     /// Per-batch measured shard imbalance (sharded passes only).
     pub imbalances: Vec<f64>,
+    /// Requests answered [`ReplyBody::Error`] (micro-batch panic or
+    /// engine failure, isolated to the batch).
+    pub faults: u64,
+    /// Requests answered [`ReplyBody::Timeout`] (missed `deadline_ms`).
+    pub timeouts: u64,
+    /// Bounded-backoff persistence retries the engine consumed while
+    /// this loop ran (delta of [`Engine::retries_total`]).
+    pub retries: u64,
 }
 
 impl ServeStats {
@@ -165,13 +212,14 @@ impl ServeStats {
 /// The serving loop: drain the queue, coalesce micro-batches under the
 /// policy, infer, reply. Runs on the calling thread (which owns the
 /// engine) until every [`ServeHandle`] is dropped and the queue is
-/// empty; returns the accumulated stats. Engine errors abort the loop —
-/// admission validated the seeds, so an error here is a real fault, not
-/// a bad request.
+/// empty; returns the accumulated stats. A failing micro-batch —
+/// panic or engine error — never aborts the loop: its requests get
+/// [`ReplyBody::Error`] and serving continues (see the module docs).
 pub fn run_server(engine: &mut Engine<'_>, cfg: &ServeConfig,
                   rx: &mpsc::Receiver<Request>) -> Result<ServeStats> {
     let window = Duration::from_secs_f64(cfg.batch_window_ms.max(0.0) / 1e3);
     let max_batch = cfg.max_batch.max(1);
+    let retries_before = engine.retries_total();
     let mut stats = ServeStats::default();
     // blocks for the first request of each batch; Err = all handles
     // dropped and queue drained = graceful shutdown
@@ -203,20 +251,89 @@ pub fn run_server(engine: &mut Engine<'_>, cfg: &ServeConfig,
                 }
             }
         }
-        serve_batch(engine, batch, &mut stats)?;
+        serve_batch(engine, cfg, batch, &mut stats);
     }
+    stats.retries = engine.retries_total() - retries_before;
     Ok(stats)
 }
 
+/// Latency of `req` measured at `at`, in ms.
+fn latency_at(req: &Request, at: Instant) -> f64 {
+    at.duration_since(req.enqueued).as_secs_f64() * 1e3
+}
+
+/// Answer every request in `batch` with the same degraded body.
+fn reply_all(batch: Vec<Request>, body: &ReplyBody, stats: &mut ServeStats) {
+    let done = Instant::now();
+    for req in batch {
+        let latency_ms = latency_at(&req, done);
+        stats.completed += 1;
+        stats.latencies_ms.push(latency_ms);
+        let _ = req.reply.send(Reply { body: body.clone(), latency_ms });
+    }
+}
+
 /// Run one coalesced micro-batch through the engine and fan the logits
-/// back out to the per-request reply channels.
-fn serve_batch(engine: &mut Engine<'_>, batch: Vec<Request>,
-               stats: &mut ServeStats) -> Result<()> {
+/// back out to the per-request reply channels. Degradations stay inside
+/// this batch: deadline-expired requests get `Timeout`, and a panicking
+/// or erroring forward pass gets every remaining request an `Error`.
+fn serve_batch(engine: &mut Engine<'_>, cfg: &ServeConfig,
+               mut batch: Vec<Request>, stats: &mut ServeStats) {
+    if cfg.deadline_ms > 0.0 {
+        let now = Instant::now();
+        batch.retain(|req| {
+            if latency_at(req, now) <= cfg.deadline_ms {
+                return true;
+            }
+            let latency_ms = latency_at(req, now);
+            stats.completed += 1;
+            stats.timeouts += 1;
+            stats.latencies_ms.push(latency_ms);
+            let _ = req.reply.send(Reply { body: ReplyBody::Timeout,
+                                           latency_ms });
+            false
+        });
+        if batch.is_empty() {
+            return;
+        }
+    }
     let all: Vec<i32> = batch
         .iter()
         .flat_map(|r| r.seeds.iter().copied())
         .collect();
-    let logits = engine.infer(&all)?;
+    // one op per micro-batch (the chaos `serve` site); the unwind
+    // barrier turns a poisoned batch into per-request Error replies
+    // instead of a dead server
+    let plane = engine.cfg.faults.clone();
+    let op = plane.begin(FaultSite::ServeBatch);
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || -> Result<Vec<f32>> {
+            faults::inject(plane.as_ref(), FaultSite::ServeBatch, op)?;
+            engine.infer(&all)
+        }));
+    let logits = match outcome {
+        Ok(Ok(logits)) => logits,
+        Ok(Err(e)) => {
+            eprintln!("warning: serve batch failed ({} requests): {e:#}",
+                      batch.len());
+            stats.faults += batch.len() as u64;
+            reply_all(batch, &ReplyBody::Error(format!("{e:#}")), stats);
+            return;
+        }
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown panic".to_string());
+            eprintln!("warning: serve batch panicked ({} requests): {msg}; \
+                       isolating the batch and continuing", batch.len());
+            stats.faults += batch.len() as u64;
+            reply_all(batch, &ReplyBody::Error(format!("batch panicked: \
+                                                        {msg}")), stats);
+            return;
+        }
+    };
     if let Some(imb) = engine.infer_imbalance() {
         stats.imbalances.push(imb);
     }
@@ -229,15 +346,34 @@ fn serve_batch(engine: &mut Engine<'_>, batch: Vec<Request>,
         let take = req.seeds.len() * c;
         let scores = logits[offset..offset + take].to_vec();
         offset += take;
-        let latency_ms =
-            done.duration_since(req.enqueued).as_secs_f64() * 1e3;
+        let latency_ms = latency_at(&req, done);
         stats.completed += 1;
         stats.latencies_ms.push(latency_ms);
         // the client may have given up and dropped its receiver; that
         // only loses the reply, not the server
-        let _ = req.reply.send(Reply { scores, latency_ms });
+        let _ = req.reply.send(Reply { body: ReplyBody::Scores(scores),
+                                       latency_ms });
     }
-    Ok(())
+}
+
+/// Parse one stdin-protocol request line — node ids separated by
+/// spaces, commas, or tabs — into a seed set. Malformed lines are
+/// errors the caller answers with an `ERR` reply; they must never kill
+/// the server.
+pub fn parse_request_line(line: &str) -> Result<Vec<i32>> {
+    let mut seeds = Vec::new();
+    let toks = line
+        .split(|c: char| c.is_whitespace() || c == ',')
+        .filter(|t| !t.is_empty());
+    for tok in toks {
+        match tok.parse::<i32>() {
+            Ok(id) => seeds.push(id),
+            Err(_) => bail!("bad node id {tok:?} (expected a non-negative \
+                             integer)"),
+        }
+    }
+    ensure!(!seeds.is_empty(), "empty request line");
+    Ok(seeds)
 }
 
 #[cfg(test)]
@@ -247,7 +383,7 @@ mod tests {
     #[test]
     fn admission_validates_and_sheds() {
         let cfg = ServeConfig { batch_window_ms: 0.0, max_batch: 512,
-                                queue_depth: 2 };
+                                queue_depth: 2, deadline_ms: 0.0 };
         let (handle, rx) = channel(&cfg, 100);
         assert!(matches!(handle.submit(vec![1]).unwrap(),
                          Submit::Accepted(_)));
@@ -275,6 +411,7 @@ mod tests {
             seeds: 6,
             latencies_ms: vec![4.0, 1.0, 3.0, 2.0],
             imbalances: vec![1.5, 1.0, 2.0],
+            ..Default::default()
         };
         let (p50, p95, p99) = stats.latency_percentiles();
         assert!(p50 >= 1.0 && p50 <= 4.0 && p95 <= 4.0 && p99 <= 4.0);
@@ -284,5 +421,29 @@ mod tests {
         assert_eq!(ServeStats::default().median_imbalance(), 1.0);
         let (z50, _, z99) = ServeStats::default().latency_percentiles();
         assert_eq!((z50, z99), (0.0, 0.0));
+    }
+
+    #[test]
+    fn request_lines_parse_or_error_with_a_reason() {
+        assert_eq!(parse_request_line("3 1 4").unwrap(), vec![3, 1, 4]);
+        assert_eq!(parse_request_line("3,1,4").unwrap(), vec![3, 1, 4]);
+        assert_eq!(parse_request_line("  7\t").unwrap(), vec![7]);
+        for (line, needle) in [("", "empty"), ("   ", "empty"),
+                               ("1 two 3", "bad node id"),
+                               ("1.5", "bad node id"),
+                               ("99999999999999", "bad node id")] {
+            let err = parse_request_line(line).unwrap_err().to_string();
+            assert!(err.contains(needle), "{line:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn reply_scores_accessor_matches_body() {
+        let ok = Reply { body: ReplyBody::Scores(vec![0.5]),
+                         latency_ms: 1.0 };
+        assert_eq!(ok.scores(), Some(&[0.5f32][..]));
+        for body in [ReplyBody::Timeout, ReplyBody::Error("x".into())] {
+            assert!(Reply { body, latency_ms: 1.0 }.scores().is_none());
+        }
     }
 }

@@ -92,6 +92,61 @@ pub fn results_dir() -> PathBuf {
     dir
 }
 
+/// Phases of [`atomic_write`], in order — the unit tests inject a failure
+/// at each one and assert the destination file survives untouched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WritePhase {
+    Create,
+    Write,
+    Sync,
+    Rename,
+}
+
+/// Atomic durable write: the bytes land in `<path>.tmp` first, are
+/// fsync'd, and only then renamed over `path` — so a crash or I/O error
+/// at any point leaves either the complete old file or the complete new
+/// file, never a torn one. Every results file (planner state, params
+/// checkpoints, CSVs) goes through here.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    atomic_write_hooked(path, bytes, &|_| Ok(()))
+}
+
+/// [`atomic_write`] with a per-phase failure hook (tests only; prod
+/// callers use the no-op hook). On failure the temp file is removed.
+fn atomic_write_hooked(path: &Path, bytes: &[u8],
+                       hook: &dyn Fn(WritePhase) -> std::io::Result<()>)
+                       -> std::io::Result<()> {
+    use std::io::Write as _;
+    let tmp = match path.file_name() {
+        Some(name) => {
+            let mut n = name.to_os_string();
+            n.push(".tmp");
+            path.with_file_name(n)
+        }
+        None => {
+            return Err(std::io::Error::new(std::io::ErrorKind::InvalidInput,
+                                           format!("{path:?} has no file \
+                                                    name")));
+        }
+    };
+    let attempt = || -> std::io::Result<()> {
+        hook(WritePhase::Create)?;
+        let mut f = std::fs::File::create(&tmp)?;
+        hook(WritePhase::Write)?;
+        f.write_all(bytes)?;
+        hook(WritePhase::Sync)?;
+        f.sync_all()?;
+        drop(f);
+        hook(WritePhase::Rename)?;
+        std::fs::rename(&tmp, path)
+    };
+    let res = attempt();
+    if res.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    res
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +192,51 @@ mod tests {
     fn ms_formatting() {
         assert_eq!(fmt_ms(86.88), "86.88");
         assert_eq!(fmt_ms(166.0), "166.0");
+    }
+
+    fn atomic_tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("fsa_atomic_write_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_round_trips() {
+        let p = atomic_tmp("roundtrip.txt");
+        atomic_write(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        atomic_write(&p, b"second, longer contents").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second, longer contents");
+        assert!(!p.with_file_name("roundtrip.txt.tmp").exists(),
+                "temp file must not linger");
+    }
+
+    #[test]
+    fn injected_failure_at_every_phase_preserves_the_old_file() {
+        for phase in [WritePhase::Create, WritePhase::Write,
+                      WritePhase::Sync, WritePhase::Rename] {
+            let p = atomic_tmp(&format!("fail_{phase:?}.txt"));
+            atomic_write(&p, b"precious").unwrap();
+            let hook = move |at: WritePhase| -> std::io::Result<()> {
+                if at == phase {
+                    Err(std::io::Error::other(format!("injected at \
+                                                       {at:?}")))
+                } else {
+                    Ok(())
+                }
+            };
+            let err = atomic_write_hooked(&p, b"torn", &hook).unwrap_err();
+            assert!(err.to_string().contains("injected"), "{phase:?}: {err}");
+            assert_eq!(std::fs::read(&p).unwrap(), b"precious",
+                       "{phase:?} failure must leave the old file intact");
+            assert!(!p.with_file_name(format!("fail_{phase:?}.txt.tmp"))
+                        .exists(),
+                    "{phase:?} failure must clean up the temp file");
+        }
+    }
+
+    #[test]
+    fn atomic_write_rejects_pathless_targets() {
+        assert!(atomic_write(Path::new("/"), b"x").is_err());
     }
 }

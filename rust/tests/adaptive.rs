@@ -303,6 +303,7 @@ fn trainer_persists_state_and_warm_starts_next_session() {
         backend: BackendChoice::Native,
         planner: PlannerChoice::Adaptive,
         planner_state: state,
+        faults: fusesampleagg::runtime::faults::none(),
     };
     let cfg = mk_cfg(Some(path.clone()));
     // session 1: cold start, real (wall-clock) feedback, save on drop
@@ -405,6 +406,7 @@ fn nominal_and_quantile_outputs_identical_at_threads_1_4_8() {
             backend: BackendChoice::Native,
             planner: choice,
             planner_state: None,
+            faults: fusesampleagg::runtime::faults::none(),
         };
         let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
         (0..5).map(|_| tr.step().unwrap().loss).collect()

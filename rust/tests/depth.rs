@@ -328,6 +328,7 @@ fn depth3_bitwise_deterministic_across_threads_1_4_8() {
             backend: BackendChoice::Native,
             planner: Default::default(),
             planner_state: None,
+            faults: fusesampleagg::runtime::faults::none(),
         };
         let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
         (0..8).map(|_| tr.step().unwrap().loss).collect()
@@ -357,6 +358,7 @@ fn depth3_native_training_end_to_end() {
             backend: BackendChoice::Native,
             planner: Default::default(),
             planner_state: None,
+            faults: fusesampleagg::runtime::faults::none(),
         };
         let mut tr = Trainer::new(&rt, &mut cache, cfg).unwrap();
         let timings = measure(&mut tr, 2, 30).unwrap();
@@ -396,6 +398,7 @@ fn depth_axis_transient_ratio_grows() {
                 backend: BackendChoice::Native,
                 planner: Default::default(),
                 planner_state: None,
+                faults: fusesampleagg::runtime::faults::none(),
             };
             let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
             peaks[i] = tr.step().unwrap().transient_bytes;

@@ -46,6 +46,7 @@ fn tiny_cfg(variant: Variant, hops: u32, seed: u64) -> TrainConfig {
         backend: Default::default(),
         planner: Default::default(),
         planner_state: None,
+        faults: fusesampleagg::runtime::faults::none(),
     }
 }
 
@@ -227,6 +228,7 @@ fn bf16_feature_artifact_trains() {
         backend: Default::default(),
         planner: Default::default(),
         planner_state: None,
+        faults: fusesampleagg::runtime::faults::none(),
     };
     let mut tr = Trainer::new_named(
         &rt, &mut cache, cfg,

@@ -37,6 +37,7 @@ fn tiny_cfg(variant: Variant, ks: &[usize], seed: u64) -> TrainConfig {
         backend: BackendChoice::Native,
         planner: Default::default(),
         planner_state: None,
+        faults: fusesampleagg::runtime::faults::none(),
     }
 }
 
@@ -222,6 +223,7 @@ fn native_fused_forward_matches_unfused_reference() {
         threads: 1,
         planner: Default::default(),
         hidden: h,
+        faults: fusesampleagg::runtime::faults::none(),
     };
     let adamw = Manifest::builtin().adamw;
     let mut eng = NativeBackend::new(ds.clone(), cfg, adamw).unwrap();
@@ -299,6 +301,7 @@ fn fused_grads_match_finite_difference() {
         threads: 1,
         planner: Default::default(),
         hidden: h,
+        faults: fusesampleagg::runtime::faults::none(),
     };
     let adamw = Manifest::builtin().adamw;
     let mut eng = NativeBackend::new(ds.clone(), cfg, adamw).unwrap();

@@ -191,6 +191,7 @@ fn training_trajectories_identical_across_planners() {
                 backend: BackendChoice::Native,
                 planner,
                 planner_state: None,
+                faults: fusesampleagg::runtime::faults::none(),
             };
             let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
             (0..6).map(|_| tr.step().unwrap().loss).collect()

@@ -47,6 +47,7 @@ fn tiny_cfg(threads: usize, seed: u64) -> TrainConfig {
         backend: BackendChoice::Native,
         planner: Default::default(),
         planner_state: None,
+        faults: fusesampleagg::runtime::faults::none(),
     }
 }
 
@@ -98,7 +99,8 @@ fn serve_logits_match_direct_infer_across_groupings_and_threads() {
                         (5.0, 7, true)];
         for (window, max_batch, shuffle) in policies {
             let scfg = ServeConfig { batch_window_ms: window,
-                                     max_batch, queue_depth: 64 };
+                                     max_batch, queue_depth: 64,
+                                     deadline_ms: 0.0 };
             let (handle, rx) = channel(&scfg, engine.ds.spec.n);
             let mut order: Vec<usize> = (0..reqs.len()).collect();
             if shuffle {
@@ -122,7 +124,8 @@ fn serve_logits_match_direct_infer_across_groupings_and_threads() {
             assert!(stats.batches >= 1);
             for (i, rx) in replies.into_iter().enumerate() {
                 let r = rx.unwrap().recv().unwrap();
-                assert_eq!(r.scores, direct[i],
+                assert_eq!(r.scores().expect("scores reply"),
+                           &direct[i][..],
                            "threads={threads} window={window} \
                             max_batch={max_batch} shuffle={shuffle}: \
                             request {i} logits diverged from direct \
@@ -143,7 +146,7 @@ fn tiny_queue_depth_sheds_then_serves_admitted_requests() {
     let mut engine =
         Engine::new(&rt, &mut cache, tiny_cfg(1, 42)).unwrap();
     let scfg = ServeConfig { batch_window_ms: 0.0, max_batch: 512,
-                             queue_depth: 1 };
+                             queue_depth: 1, deadline_ms: 0.0 };
     let (handle, rx) = channel(&scfg, engine.ds.spec.n);
     let accepted = match handle.submit(vec![3, 4]).unwrap() {
         Submit::Accepted(rx) => rx,
@@ -155,7 +158,50 @@ fn tiny_queue_depth_sheds_then_serves_admitted_requests() {
     let stats = run_server(&mut engine, &scfg, &rx).unwrap();
     assert_eq!((stats.completed, stats.batches, stats.seeds), (1, 1, 2));
     let reply = accepted.recv().unwrap();
-    assert_eq!(reply.scores, engine.infer(&[3, 4]).unwrap());
+    assert_eq!(reply.scores().expect("scores reply"),
+               &engine.infer(&[3, 4]).unwrap()[..]);
+}
+
+/// Satellite of the fault-tolerance PR: 20 malformed stdin lines each
+/// get a structured `ERR <reason>` reply on stdout, and a well-formed
+/// request after all of them is still served — bad input never takes
+/// the server down.
+#[test]
+fn malformed_stdin_lines_get_err_replies_and_serving_continues() {
+    use std::io::Write as _;
+    use std::process::{Command, Stdio};
+
+    let malformed = [
+        "abc", "1 2 x", "--", "1.5", "2 -x", ",", "!!", "9e9", "0x10",
+        "1;2", "two", "NaN", "-", "+ +", "12345678901234567890",
+        "seeds 1 2", "[1,2]", "\"3\"", "{", "1 2 3.0",
+    ];
+    assert_eq!(malformed.len(), 20);
+    let mut child = Command::new(env!("CARGO_BIN_EXE_fsa"))
+        .args(["serve", "--dataset", "tiny", "--fanout", "5x3",
+               "--batch", "64", "--backend", "native"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn fsa serve");
+    {
+        let mut stdin = child.stdin.take().unwrap();
+        for line in malformed {
+            writeln!(stdin, "{line}").unwrap();
+        }
+        writeln!(stdin, "1 2 3").unwrap();
+        // dropping stdin sends EOF: the server drains and exits cleanly
+    }
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success(), "serve exited {:?}", out.status);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let errs = stdout.lines().filter(|l| l.starts_with("ERR ")).count();
+    assert_eq!(errs, 20,
+               "every malformed line gets exactly one ERR reply:\n{stdout}");
+    assert!(stdout.lines().any(|l| l.starts_with("seeds [1, 2, 3]")),
+            "the good request after 20 bad ones must still be \
+             served:\n{stdout}");
 }
 
 #[test]
