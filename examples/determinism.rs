@@ -35,6 +35,8 @@ fn losses(rt: &Runtime, cache: &mut DatasetCache, seed: u64,
         backend: Default::default(),
         planner: Default::default(),
         planner_state: None,
+        simd: Default::default(),
+        layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
     };
     let mut trainer = Trainer::new(rt, cache, cfg)?;

@@ -64,6 +64,8 @@ fn main() -> Result<()> {
                     backend: Default::default(),
                     planner: Default::default(),
                     planner_state: None,
+                    simd: Default::default(),
+                    layout: Default::default(),
                     faults: fusesampleagg::runtime::faults::none(),
                 };
                 Ok(run_config(&rt, &mut cache, cfg, 1, 5)?

@@ -34,6 +34,8 @@ fn main() -> Result<()> {
         backend: Default::default(),    // auto: PJRT, else native engine
         planner: Default::default(),
         planner_state: None,
+        simd: Default::default(),
+        layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
     };
 

@@ -30,6 +30,8 @@ fn run(rt: &Runtime, cache: &mut DatasetCache, variant: Variant,
         backend: Default::default(),
         planner: Default::default(),
         planner_state: None,
+        simd: Default::default(),
+        layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
     };
     let mut tr = Trainer::new(rt, cache, cfg)?;

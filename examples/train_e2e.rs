@@ -59,6 +59,8 @@ fn main() -> Result<()> {
         backend: Default::default(),
         planner: Default::default(),
         planner_state: None,
+        simd: Default::default(),
+        layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
     };
     let total = Timer::start();

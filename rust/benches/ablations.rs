@@ -48,6 +48,8 @@ fn main() -> anyhow::Result<()> {
                 backend: Default::default(),
                 planner: Default::default(),
                 planner_state: None,
+                simd: Default::default(),
+                layout: Default::default(),
                 faults: fusesampleagg::runtime::faults::none(),
             };
             let r = run(&mut cache, cfg)?;
@@ -70,6 +72,8 @@ fn main() -> anyhow::Result<()> {
                     backend: Default::default(),
                     planner: Default::default(),
                     planner_state: None,
+                    simd: Default::default(),
+                    layout: Default::default(),
                     faults: fusesampleagg::runtime::faults::none(),
                 };
                 let r = run(&mut cache, cfg)?;
@@ -94,6 +98,8 @@ fn main() -> anyhow::Result<()> {
             backend: Default::default(),
             planner: Default::default(),
             planner_state: None,
+            simd: Default::default(),
+            layout: Default::default(),
             faults: fusesampleagg::runtime::faults::none(),
         };
         let r = run(&mut cache, cfg)?;
@@ -124,6 +130,8 @@ fn main() -> anyhow::Result<()> {
                 backend: Default::default(),
                 planner: Default::default(),
                 planner_state: None,
+                simd: Default::default(),
+                layout: Default::default(),
                 faults: fusesampleagg::runtime::faults::none(),
             };
             let mut tr = Trainer::new_named(rt2, &mut cache, cfg, artifact)?;

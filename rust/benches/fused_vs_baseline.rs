@@ -8,12 +8,17 @@
 //! the transient-ratio-vs-depth trajectory is recorded at equal gather
 //! volume. Reports per-step time, steps/sec, speedup, and *measured* peak
 //! transient bytes per depth, and writes the cross-PR trajectory artifact
-//! `BENCH_native.json` at the repo root. Scale down with
-//! FSA_BENCH_QUICK=1 / FSA_BENCH_STEPS / FSA_BENCH_SEEDS.
+//! `BENCH_native.json` at the repo root. A final simd on/off A/B at the
+//! paper's main cell records the native vector-tier speedup
+//! (`simd_speedup` at the JSON root; outputs are bitwise identical, only
+//! step time moves). Scale down with FSA_BENCH_QUICK=1 /
+//! FSA_BENCH_STEPS / FSA_BENCH_SEEDS.
 
 use fusesampleagg::bench::{self, env_overrides, save_exhibit, Grid};
-use fusesampleagg::coordinator::DatasetCache;
+use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Variant};
 use fusesampleagg::fanout::Fanouts;
+use fusesampleagg::json::Value;
+use fusesampleagg::kernel::SimdChoice;
 use fusesampleagg::runtime::{BackendChoice, Runtime};
 use fusesampleagg::util;
 
@@ -41,7 +46,43 @@ fn main() -> anyhow::Result<()> {
                   r.step_ms, util::bytes_to_mb(r.peak_transient_bytes));
     })?;
 
-    let json = bench::native_bench_json(&rows, grid.planner);
+    // simd on/off A/B at the paper's main cell (products_sim, 15x10,
+    // B=1024, fused, native): same seed and planner, so outputs are
+    // bitwise identical and only the vector tier differs — the measured
+    // step-time speedup lands at the JSON root for the CI smoke.
+    let ab_cfg = |simd| TrainConfig {
+        variant: Variant::Fsa,
+        dataset: "products_sim".into(),
+        fanouts: Fanouts::of(&[15, 10]),
+        batch: 1024,
+        amp: grid.amp,
+        save_indices: true,
+        seed: 42,
+        threads: 1,
+        prefetch: false,
+        backend: BackendChoice::Native,
+        planner: grid.planner,
+        planner_state: None,
+        faults: fusesampleagg::runtime::faults::none(),
+        simd,
+        layout: Default::default(),
+    };
+    eprintln!("  simd A/B: products_sim f15x10 b1024 fused, scalar tier...");
+    let off = bench::run_config(&rt, &mut cache, ab_cfg(SimdChoice::Off),
+                                grid.warmup, grid.steps)?;
+    eprintln!("  simd A/B: vector tier...");
+    let on = bench::run_config(&rt, &mut cache, ab_cfg(SimdChoice::On),
+                               grid.warmup, grid.steps)?;
+    let simd_speedup = off.step_ms / on.step_ms.max(1e-9);
+    eprintln!("  simd A/B: off {:.2} ms, on {:.2} ms ({simd_speedup:.2}x)",
+              off.step_ms, on.step_ms);
+
+    let mut json = bench::native_bench_json(&rows, grid.planner, grid.simd);
+    if let Value::Obj(root) = &mut json {
+        root.insert("simd_off_step_ms".into(), Value::Num(off.step_ms));
+        root.insert("simd_on_step_ms".into(), Value::Num(on.step_ms));
+        root.insert("simd_speedup".into(), Value::Num(simd_speedup));
+    }
     let repo = util::find_repo_root()
         .unwrap_or_else(|| std::path::PathBuf::from("."));
     std::fs::write(repo.join("BENCH_native.json"), format!("{json}\n"))?;
@@ -72,6 +113,11 @@ fn main() -> anyhow::Result<()> {
     out.push_str("\n(the mem-x column should grow with depth: the baseline \
                   block multiplies by (1+k) per hop, the fused transients \
                   only add saved-index rows)\n");
+    out.push_str(&format!(
+        "\nsimd A/B (products_sim f15x10 b1024, fused, bitwise-identical \
+         outputs):\n  scalar tier {:.2} ms/step, vector tier {:.2} ms/step \
+         -> {:.2}x\n",
+        off.step_ms, on.step_ms, simd_speedup));
     save_exhibit("fused_vs_baseline", &out);
     println!("wrote {}", repo.join("BENCH_native.json").display());
     Ok(())

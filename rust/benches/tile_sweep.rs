@@ -1,11 +1,22 @@
-//! §Perf bench: L1 seed-tile sweep — the HBM↔VMEM schedule knob
-//! (the paper's "kernel autotuning over block sizes" future work).
+//! §Perf bench: the two tile axes of the kernel schedule.
 //!
-//! Same configuration (products_sim, 15-10, B=1024, AMP on), four tile
-//! sizes: 16 / 64 (VMEM-budget default) / 256 / 1024 (whole batch, one grid
-//! step). On a real TPU only tiles whose gathered block fits VMEM are
-//! legal; on CPU-PJRT all four run, exposing the grid-iteration overhead
-//! that the tile size trades against. Outputs: results/tile_sweep.txt.
+//! **Axis 1 — PJRT seed-tile sweep** (the HBM↔VMEM schedule knob, the
+//! paper's "kernel autotuning over block sizes" future work): same
+//! configuration (products_sim, 15-10, B=1024, AMP on), six seed-tile
+//! sizes. On a real TPU only tiles whose gathered block fits VMEM are
+//! legal; on CPU-PJRT all run, exposing the grid-iteration overhead the
+//! tile size trades against. The gathered-block formula reads the feature
+//! width from the dataset spec — it is d-dependent, not a constant 64.
+//!
+//! **Axis 2 — native feature-tile sweep** (the L1-blocking knob of the
+//! native fused kernel): the same cell on the native CPU engine at a
+//! range of `FSA_D_TILE`-equivalent widths via
+//! [`fusesampleagg::kernel::set_d_tile`]. Every width is bitwise-output
+//! identical (the tile only chunks the feature dimension), so the sweep
+//! is purely a step-time measurement; the default is detected from L1d
+//! cache geometry and reported alongside.
+//!
+//! Outputs: results/tile_sweep.txt.
 
 use std::fmt::Write as _;
 
@@ -13,9 +24,31 @@ use fusesampleagg::bench::save_exhibit;
 use fusesampleagg::coordinator::{measure, DatasetCache, TrainConfig, Trainer,
                                  Variant};
 use fusesampleagg::fanout::Fanouts;
+use fusesampleagg::gen::builtin_spec;
+use fusesampleagg::kernel::{d_tile, set_d_tile, SimdChoice};
 use fusesampleagg::metrics::median;
-use fusesampleagg::runtime::Runtime;
+use fusesampleagg::runtime::{BackendChoice, Runtime};
 use fusesampleagg::util::fmt_bytes;
+
+fn cell_cfg(backend: BackendChoice) -> TrainConfig {
+    TrainConfig {
+        variant: Variant::Fsa,
+        dataset: "products_sim".into(),
+        fanouts: Fanouts::of(&[15, 10]),
+        batch: 1024,
+        amp: true,
+        save_indices: true,
+        seed: 42,
+        threads: 1,
+        prefetch: false,
+        backend,
+        planner: Default::default(),
+        planner_state: None,
+        simd: SimdChoice::Auto,
+        layout: Default::default(),
+        faults: fusesampleagg::runtime::faults::none(),
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::from_env()?;
@@ -23,43 +56,61 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::var("FSA_BENCH_QUICK").is_ok();
     let steps = if quick { 5 } else { 20 };
     let warmup = if quick { 1 } else { 3 };
+    let spec = builtin_spec("products_sim")?;
+    let (k1, k2, d) = (15usize, 10usize, spec.d);
 
     let mut out = String::new();
-    let _ = writeln!(out, "L1 seed-tile sweep — products_sim, fanout 15-10, \
+    let _ = writeln!(out, "Tile sweep — products_sim (d={d}), fanout 15-10, \
                            B=1024, AMP on ({steps} timed steps).\n");
+
+    // -- axis 1: PJRT seed tile (rows of the batch per grid step)
+    let _ = writeln!(out, "PJRT seed-tile axis (HBM<->VMEM schedule):");
     let _ = writeln!(out, "{:<8} {:>6} {:>16} {:>14} {:>12}", "tile", "grid",
                      "gather tile", "VMEM-legal?", "step (ms)");
-
     for tile in [8usize, 16, 32, 64, 256, 1024] {
         let name = format!("fsa2_train_products_sim_f15x10_b1024_ampOn_t{tile}");
-        let cfg = TrainConfig {
-            variant: Variant::Fsa,
-            dataset: "products_sim".into(),
-            fanouts: Fanouts::of(&[15, 10]),
-            batch: 1024,
-            amp: true,
-            save_indices: true,
-            seed: 42,
-            threads: 1,
-            prefetch: false,
-            backend: Default::default(),
-            planner: Default::default(),
-            planner_state: None,
-            faults: fusesampleagg::runtime::faults::none(),
-        };
+        let cfg = cell_cfg(Default::default());
         let mut tr = Trainer::new_named(&rt, &mut cache, cfg, &name)?;
         let timings = measure(&mut tr, warmup, steps)?;
         let ms = median(&timings.iter().map(|t| t.total_ms()).collect::<Vec<_>>());
-        let tile_bytes = (tile * 15 * 10 * 64 * 4) as u64;
+        // gathered leaf block per grid step: tile seeds x k1*k2 leaves x
+        // d features x 4 bytes (d from the dataset spec, NOT a constant)
+        let tile_bytes = (tile * k1 * k2 * d * 4) as u64;
         let legal = tile_bytes <= 4 * 1024 * 1024;
         let _ = writeln!(out, "{:<8} {:>6} {:>16} {:>14} {:>12.2}", tile,
                          1024 / tile, fmt_bytes(tile_bytes),
                          if legal { "yes" } else { "no (CPU only)" }, ms);
-        eprintln!("  tile {tile}: {ms:.2} ms/step");
+        eprintln!("  seed tile {tile}: {ms:.2} ms/step");
     }
-    let _ = writeln!(out, "\nDefault = largest VMEM-legal tile \
+    let _ = writeln!(out, "Default = largest VMEM-legal tile \
                            (tiling.seed_tile); larger tiles trade VMEM \
-                           footprint for fewer grid iterations.");
+                           footprint for fewer grid iterations.\n");
+
+    // -- axis 2: native feature tile (elements of d per gather pass)
+    let detected = {
+        set_d_tile(0); // measure what auto resolves to on this host
+        d_tile()
+    };
+    let _ = writeln!(out, "native feature-tile axis (L1 blocking of the \
+                           fused gather/fold; detected default {detected}):");
+    let _ = writeln!(out, "{:<8} {:>16} {:>12}", "d_tile", "tile bytes",
+                     "step (ms)");
+    for tile in [64usize, 128, 256, 512, 1024] {
+        set_d_tile(tile);
+        let cfg = cell_cfg(BackendChoice::Native);
+        let mut tr = Trainer::new(&rt, &mut cache, cfg)?;
+        let timings = measure(&mut tr, warmup, steps)?;
+        let ms = median(&timings.iter().map(|t| t.total_ms()).collect::<Vec<_>>());
+        let _ = writeln!(out, "{:<8} {:>16} {:>12.2}{}", tile,
+                         fmt_bytes((tile * 4) as u64), ms,
+                         if tile == detected { "  <- detected" } else { "" });
+        eprintln!("  feature tile {tile}: {ms:.2} ms/step");
+    }
+    set_d_tile(0); // restore auto for anything running after us
+    let _ = writeln!(out, "Default = detected from L1d cache geometry \
+                           (FSA_D_TILE overrides); every width is \
+                           bitwise-output identical.");
+
     save_exhibit("tile_sweep", &out);
     Ok(())
 }

@@ -16,6 +16,7 @@ use anyhow::Result;
 use crate::coordinator::{measure, DatasetCache, TrainConfig, Trainer, Variant};
 use crate::fanout::Fanouts;
 use crate::graph::PlannerChoice;
+use crate::kernel::{FeatureLayout, SimdChoice};
 use crate::metrics::{median, median_over_repeats, BenchRow};
 use crate::runtime::{BackendChoice, Runtime};
 
@@ -43,6 +44,11 @@ pub struct Grid {
     /// (`--planner-state <path|off>`; None = off, the grid default —
     /// paper-protocol cells should not inherit another run's weights).
     pub planner_state: Option<std::path::PathBuf>,
+    /// Native vector tier for every cell (`--simd`); outputs are bitwise
+    /// identical either way, so the grid records rather than re-pairs it.
+    pub simd: SimdChoice,
+    /// Feature-row storage order for every cell (`--layout`).
+    pub layout: FeatureLayout,
 }
 
 impl Default for Grid {
@@ -63,6 +69,8 @@ impl Default for Grid {
             backend: BackendChoice::Auto,
             planner: PlannerChoice::default(),
             planner_state: None,
+            simd: SimdChoice::default(),
+            layout: FeatureLayout::default(),
         }
     }
 }
@@ -187,6 +195,7 @@ pub fn run_config(rt: &Runtime, cache: &mut DatasetCache, cfg: TrainConfig,
         loss,
         imbalance,
         planner: cfg.planner.as_str().to_string(),
+        simd: if cfg.simd.enabled() { "on" } else { "off" }.to_string(),
     })
 }
 
@@ -213,6 +222,8 @@ pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
                             planner: grid.planner,
                             planner_state: grid.planner_state.clone(),
                             faults: crate::runtime::faults::none(),
+                            simd: grid.simd,
+                            layout: grid.layout,
                         };
                         let row = run_config(rt, cache, cfg, grid.warmup,
                                              grid.steps)?;
@@ -233,8 +244,8 @@ pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
 /// native runs and the `fused_vs_baseline` bench target so the perf
 /// numbers — including the transient-ratio-vs-depth trajectory — are
 /// comparable across PRs.
-pub fn native_bench_json(rows: &[BenchRow],
-                         planner: PlannerChoice) -> crate::json::Value {
+pub fn native_bench_json(rows: &[BenchRow], planner: PlannerChoice,
+                         simd: SimdChoice) -> crate::json::Value {
     use crate::json::Value;
     use std::collections::BTreeMap;
 
@@ -296,14 +307,21 @@ pub fn native_bench_json(rows: &[BenchRow],
     // the imbalance cells depend on the planner flavor; record it so
     // artifacts from different flavors are distinguishable
     root.insert("planner".into(), Value::Str(planner.as_str().into()));
+    // the step-time cells depend on the vector tier the run resolved to
+    // (outputs never do); record the resolved "on"/"off", not the knob,
+    // so `auto` artifacts from different machines stay distinguishable
+    root.insert("simd".into(),
+                Value::Str(if simd.enabled() { "on" } else { "off" }.into()));
     root.insert("cells".into(), Value::Arr(out_cells));
     Value::Obj(root)
 }
 
 /// Write [`native_bench_json`] to `path`.
 pub fn write_native_json(rows: &[BenchRow], planner: PlannerChoice,
+                         simd: SimdChoice,
                          path: &std::path::Path) -> std::io::Result<()> {
-    std::fs::write(path, format!("{}\n", native_bench_json(rows, planner)))
+    std::fs::write(path,
+                   format!("{}\n", native_bench_json(rows, planner, simd)))
 }
 
 #[cfg(test)]
@@ -361,6 +379,7 @@ mod tests {
             loss: 1.0,
             imbalance: 1.1,
             planner: "quantile".into(),
+            simd: "on".into(),
         }
     }
 
@@ -372,9 +391,11 @@ mod tests {
             row("dgl", "5x3", 2, 42, 3.0, 1000),
             row("dgl", "5x3", 2, 43, 3.4, 1100),
         ];
-        let v = native_bench_json(&rows, PlannerChoice::default());
+        let v = native_bench_json(&rows, PlannerChoice::default(),
+                                  SimdChoice::On);
         assert_eq!(v.get("bench").unwrap().as_str(),
                    Some("fused_vs_baseline"));
+        assert_eq!(v.get("simd").unwrap().as_str(), Some("on"));
         let cells = v.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 1);
         assert_eq!(cells[0].get("fanout").unwrap().as_str(), Some("5x3"));
@@ -400,7 +421,9 @@ mod tests {
             row("fsa", "15x5x2", 3, 42, 1.0, 140),
             row("dgl", "15x5x2", 3, 42, 4.0, 4000),
         ];
-        let v = native_bench_json(&rows, PlannerChoice::default());
+        let v = native_bench_json(&rows, PlannerChoice::default(),
+                                  SimdChoice::Off);
+        assert_eq!(v.get("simd").unwrap().as_str(), Some("off"));
         let cells = v.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 3);
         // the transient ratio trajectory across depth is recoverable

@@ -300,6 +300,7 @@ mod tests {
             loss: 1.0,
             imbalance: 1.0,
             planner: "quantile".into(),
+            simd: "on".into(),
         }
     }
 

@@ -31,7 +31,7 @@ use crate::fanout::Fanouts;
 use crate::gen::Dataset;
 use crate::graph::cost::shared_session_model;
 use crate::graph::PlannerChoice;
-use crate::kernel::NativeBackend;
+use crate::kernel::{FeatureLayout, NativeBackend, SimdChoice};
 use crate::memory::MemoryMeter;
 use crate::metrics::{summarize, ThroughputRow, Timer};
 use crate::runtime::manifest::AdamwConfig;
@@ -67,6 +67,10 @@ pub struct ThroughputConfig {
     pub adamw: AdamwConfig,
     /// Shard-planner cost model (`--planner`).
     pub planner: PlannerChoice,
+    /// Native vector tier for the dispatch (`--simd`; bitwise-invariant).
+    pub simd: SimdChoice,
+    /// Feature-row storage order (`--layout`; bitwise-invariant).
+    pub layout: FeatureLayout,
 }
 
 impl ThroughputConfig {
@@ -89,6 +93,8 @@ impl ThroughputConfig {
             hidden: builtin.hidden,
             adamw: builtin.adamw,
             planner: PlannerChoice::default(),
+            simd: SimdChoice::default(),
+            layout: FeatureLayout::default(),
         }
     }
 
@@ -113,6 +119,8 @@ impl ThroughputConfig {
             // warm-start from or persist planner state
             planner_state: None,
             faults: crate::runtime::faults::none(),
+            simd: self.simd,
+            layout: self.layout,
         }
     }
 }

@@ -47,7 +47,7 @@ use anyhow::Result;
 use crate::fanout::Fanouts;
 use crate::gen::{builtin_spec, Dataset};
 use crate::graph::PlannerChoice;
-use crate::kernel::NativeConfig;
+use crate::kernel::{FeatureLayout, NativeConfig, SimdChoice};
 use crate::runtime::backend::BackendChoice;
 use crate::runtime::faults::FaultPlane;
 use crate::runtime::Runtime;
@@ -110,6 +110,15 @@ pub struct TrainConfig {
     /// Installed into the session cost model so kernel and sampler
     /// workers observe the same scripted schedule.
     pub faults: Arc<dyn FaultPlane>,
+    /// Native-kernel vector tier (`--simd auto|on|off`). Outputs are
+    /// bitwise identical either way (lanes run across the feature
+    /// dimension, never across neighbors) — only step time moves.
+    pub simd: SimdChoice,
+    /// Feature-row storage order (`--layout natural|degree`). `degree`
+    /// permutes rows into degree-descending order behind an index map;
+    /// node IDs, RNG draws, saved indices, and planner costs are
+    /// untouched, so outputs are bitwise identical.
+    pub layout: FeatureLayout,
 }
 
 impl TrainConfig {
@@ -146,6 +155,8 @@ impl TrainConfig {
             planner: self.planner,
             faults: self.faults.clone(),
             hidden,
+            simd: self.simd,
+            layout: self.layout,
         }
     }
 }

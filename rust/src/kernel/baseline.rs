@@ -22,7 +22,7 @@ use crate::memory::MemoryMeter;
 use crate::sampler::Block;
 
 use super::linalg::{add_bias, col_sum, matmul, matmul_a_bt, matmul_at_b, relu};
-use super::{par_fill_rows, Features};
+use super::{par_fill_rows, simd, Features};
 
 const F32: u64 = 4;
 
@@ -110,9 +110,7 @@ pub fn forward(feat: &Features, blk: &Block, params: &[Vec<f32>],
                     continue;
                 }
                 let src = &block[((bi * w + col) * kl + j2) * d..][..d];
-                for (o, &x) in dst.iter_mut().zip(src) {
-                    *o += x;
-                }
+                simd::add_assign_f32(dst, src);
             }
             for o in dst.iter_mut() {
                 *o /= den;
@@ -176,9 +174,7 @@ pub fn forward(feat: &Features, blk: &Block, params: &[Vec<f32>],
                     continue;
                 }
                 let src = &hprev[(p * gw + col) * h..(p * gw + col + 1) * h];
-                for (o, &v) in dst.iter_mut().zip(src) {
-                    *o += v;
-                }
+                simd::add_assign_f32(dst, src);
             }
             for o in dst.iter_mut() {
                 *o /= den;

@@ -41,7 +41,7 @@ use crate::sampler;
 
 use super::linalg::{add_bias, col_sum, matmul, matmul_a_bt, matmul_at_b, relu};
 use super::{adamw_update, baseline, dgl_param_specs, fsa_param_specs, fused,
-            softmax_xent, Features};
+            softmax_xent, FeatureLayout, Features, SimdChoice};
 
 const F32: u64 = 4;
 const I32: u64 = 4;
@@ -83,6 +83,14 @@ pub struct NativeConfig {
     /// flavor, only shard cuts — and therefore balance — move).
     pub planner: PlannerChoice,
     pub hidden: usize,
+    /// Scalar vs vector gather/fold in the fused kernel (the `--simd`
+    /// knob; outputs are bitwise identical either way, only step time
+    /// moves).
+    pub simd: SimdChoice,
+    /// Physical order of the feature-row storage (the `--layout` knob;
+    /// `degree` runs the opt-in degree-descending locality pass — node
+    /// ids and therefore all outputs are untouched).
+    pub layout: FeatureLayout,
     /// Fault-injection plane (the `--chaos` knob; the no-op plane —
     /// [`crate::runtime::faults::none`] — in production). Installed into
     /// every [`CostModel`] this engine plans through, so the kernel's
@@ -134,7 +142,10 @@ impl NativeBackend {
         ensure!(cfg.fanouts.depth() >= 1, "fanout must have at least 1 hop");
         lock_model(&cost).set_faults(cfg.faults.clone());
         let (d, c) = (ds.spec.d, ds.spec.c);
-        let feat = Features::from_dataset(ds.clone(), cfg.amp);
+        let mut feat = Features::from_dataset(ds.clone(), cfg.amp);
+        if cfg.layout == FeatureLayout::DegreeDesc {
+            feat.permute_by_degree(&ds.graph);
+        }
         let specs = if cfg.fused {
             fsa_param_specs(d, cfg.hidden, c)
         } else {
@@ -202,9 +213,10 @@ impl NativeBackend {
         // be. Planning uses a snapshot of the shared model so the kernel
         // never holds the session lock across the sharded pass.
         let cost = lock_model(&self.cost).clone();
-        let out = fused::fused_khop_planned(
+        let out = fused::fused_khop_simd(
             &self.ds.graph, &self.feat, seeds, &self.cfg.fanouts, base,
-            self.cfg.save_indices, self.cfg.threads, &cost);
+            self.cfg.save_indices, self.cfg.threads, &cost,
+            self.cfg.simd.enabled());
         meter.alloc((b * d) as u64 * F32);
         if let Some(saved) = &out.saved {
             for s in saved {
@@ -339,9 +351,10 @@ impl Backend for NativeBackend {
             if !weights.is_empty() {
                 model.warm_start(&weights, steps);
             }
-            let out = fused::fused_khop_planned(&self.ds.graph, &self.feat,
-                                                seeds, &ef, base, false,
-                                                self.cfg.threads, &model);
+            let out = fused::fused_khop_simd(&self.ds.graph, &self.feat,
+                                             seeds, &ef, base, false,
+                                             self.cfg.threads, &model,
+                                             self.cfg.simd.enabled());
             self.last_eval_imbalance =
                 (!out.stats.is_empty()).then(|| out.stats.imbalance());
             lock_model(&self.cost).observe(&out.stats);
@@ -434,6 +447,8 @@ mod tests {
             threads: 1,
             planner: PlannerChoice::default(),
             hidden: 32,
+            simd: SimdChoice::Auto,
+            layout: FeatureLayout::Natural,
             faults: crate::runtime::faults::none(),
         }
     }

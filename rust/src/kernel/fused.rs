@@ -17,8 +17,14 @@
 //! `fused_2hop` kernels' (pinned bitwise by `rust/tests/depth.rs`).
 //!
 //! The gather is cache-blocked over the feature dimension
-//! ([`super::D_TILE`]): the accumulator tile stays L1-resident while the
-//! sampled rows stream through it. Batch rows are sharded across scoped
+//! ([`super::d_tile`], sized off detected L1d geometry and sweepable via
+//! [`super::set_d_tile`]): the accumulator tile stays L1-resident while
+//! the sampled rows stream through it. Under `--simd on` (the default
+//! via `auto`) the fold runs the [`super::simd`] vector tier — dtype
+//! dispatch hoisted out of the row loop, next-row prefetch, 8-lane adds
+//! across the feature dimension — and stays bitwise identical to the
+//! scalar reference because lanes never cross neighbors.
+//! Batch rows are sharded across scoped
 //! workers with the expected-subtree cost planner
 //! ([`crate::graph::CostModel`]); each worker writes disjoint row ranges
 //! of every output, so results are bitwise identical at any thread count
@@ -32,7 +38,7 @@ use crate::metrics::Timer;
 use crate::runtime::faults::{Fault, FaultSite};
 use crate::sampler::sample_neighbors;
 
-use super::{resolve_threads, Features, D_TILE, MIN_PAR_ROWS};
+use super::{d_tile, resolve_threads, simd, Features, RowData, MIN_PAR_ROWS};
 
 /// Output of one fused L-hop aggregation.
 pub struct FusedOut {
@@ -56,7 +62,9 @@ struct Scratch {
     rows: Vec<Vec<i32>>,
     /// One `[d]` accumulator per non-leaf level below the seed.
     accs: Vec<Vec<f32>>,
-    valid: Vec<u32>,
+    /// Staging buffer for compacting `-1` entries out of a sampled row;
+    /// full-degree rows bypass it entirely ([`valid_slice`]).
+    valid: Vec<i32>,
     tile: Vec<f32>,
 }
 
@@ -68,41 +76,84 @@ impl Scratch {
                 .map(|_| vec![0.0f32; d])
                 .collect(),
             valid: Vec::with_capacity(ks.iter().copied().max().unwrap_or(1)),
-            tile: vec![0.0; D_TILE],
+            tile: vec![0.0; d_tile()],
         }
     }
 }
 
-/// Mean of the valid feature rows into `agg_row`; `acc += mean(x[valid])`.
+/// The valid (non-negative) entries of a sampled row. When the row has
+/// no `-1` padding — the common case on hub nodes, whose degree covers
+/// the fanout — the row itself is returned and the staging copy is
+/// skipped; otherwise the valid ids are compacted into `stage`.
 #[inline]
-fn accumulate_mean(feat: &Features, valid: &[u32], tile: &mut [f32],
-                   agg_row: &mut [f32]) {
+fn valid_slice<'a>(row: &'a [i32], stage: &'a mut Vec<i32>) -> &'a [i32] {
+    if row.iter().all(|&v| v >= 0) {
+        return row;
+    }
+    stage.clear();
+    stage.extend(row.iter().copied().filter(|&v| v >= 0));
+    stage
+}
+
+/// Mean of the valid feature rows into `agg_row`; `agg += mean(x[valid])`.
+/// `simd_on` selects the vector fold ([`super::simd`], lanes across the
+/// feature dimension) or the scalar per-row-dispatch reference; both
+/// produce bitwise-identical output because every element sees the same
+/// add-per-neighbor-then-scale operation sequence.
+#[inline]
+fn accumulate_mean(feat: &Features, valid: &[i32], tile: &mut [f32],
+                   agg_row: &mut [f32], simd_on: bool) {
     if valid.is_empty() {
         return;
     }
     let inv = 1.0 / valid.len() as f32;
     let d = feat.d;
+    let tw = tile.len();
     let mut t0 = 0;
     while t0 < d {
-        let t1 = (t0 + D_TILE).min(d);
+        let t1 = (t0 + tw).min(d);
         let acc = &mut tile[..t1 - t0];
         acc.fill(0.0);
-        for &w in valid {
-            feat.add_row_slice(w as usize, t0, t1, acc);
-        }
-        for (a, &v) in agg_row[t0..t1].iter_mut().zip(acc.iter()) {
-            *a += v * inv;
+        if simd_on {
+            add_rows_vector(feat, valid, t0, t1, acc);
+            simd::scale_add(&mut agg_row[t0..t1], acc, inv);
+        } else {
+            for &w in valid {
+                feat.add_row_slice(w as usize, t0, t1, acc);
+            }
+            for (a, &v) in agg_row[t0..t1].iter_mut().zip(acc.iter()) {
+                *a += v * inv;
+            }
         }
         t0 = t1;
     }
 }
 
-#[inline]
-fn collect_valid(row: &[i32], out: &mut Vec<u32>) {
-    out.clear();
-    for &v in row {
-        if v >= 0 {
-            out.push(v as u32);
+/// The vector gather: dtype dispatch hoisted to one match per tile
+/// (monomorphized f32/bf16 loops instead of `add_row_slice`'s per-row
+/// re-match), the next valid neighbor row prefetched one iteration
+/// ahead, and the element adds running through the SIMD helpers.
+fn add_rows_vector(feat: &Features, valid: &[i32], t0: usize, t1: usize,
+                   acc: &mut [f32]) {
+    let d = feat.d;
+    match feat.rows() {
+        RowData::F32(x) => {
+            for (i, &w) in valid.iter().enumerate() {
+                if let Some(&nx) = valid.get(i + 1) {
+                    simd::prefetch_f32(x, feat.phys(nx as usize) * d + t0);
+                }
+                let base = feat.phys(w as usize) * d;
+                simd::add_assign_f32(acc, &x[base + t0..base + t1]);
+            }
+        }
+        RowData::Bf16(x) => {
+            for (i, &w) in valid.iter().enumerate() {
+                if let Some(&nx) = valid.get(i + 1) {
+                    simd::prefetch_u16(x, feat.phys(nx as usize) * d + t0);
+                }
+                let base = feat.phys(w as usize) * d;
+                simd::add_assign_bf16(acc, &x[base + t0..base + t1]);
+            }
         }
     }
 }
@@ -121,8 +172,9 @@ fn collect_valid(row: &[i32], out: &mut Vec<u32>) {
 fn fold_subtree(csr: &Csr, feat: &Features, node: i32, hop: u64,
                 ks: &[usize], kprod: &[usize], bi: usize, slot: usize,
                 base: u64, rows: &mut [Vec<i32>], accs: &mut [Vec<f32>],
-                saved: &mut [Option<&mut [i32]>], valid: &mut Vec<u32>,
-                tile: &mut [f32], out: &mut [f32], pairs: &mut u64) {
+                saved: &mut [Option<&mut [i32]>], valid: &mut Vec<i32>,
+                tile: &mut [f32], simd_on: bool, out: &mut [f32],
+                pairs: &mut u64) {
     let k = ks[0];
     let (row, rows_rest) = rows.split_first_mut().unwrap();
     let (srow, saved_rest) = saved.split_first_mut().unwrap();
@@ -132,9 +184,9 @@ fn fold_subtree(csr: &Csr, feat: &Features, node: i32, hop: u64,
         buf[at..at + k].copy_from_slice(row);
     }
     if ks.len() == 1 {
-        collect_valid(row, valid);
-        *pairs += valid.len() as u64;
-        accumulate_mean(feat, valid, tile, out);
+        let vs = valid_slice(row.as_slice(), valid);
+        *pairs += vs.len() as u64;
+        accumulate_mean(feat, vs, tile, out, simd_on);
         return;
     }
     let (acc, accs_rest) = accs.split_first_mut().unwrap();
@@ -149,7 +201,7 @@ fn fold_subtree(csr: &Csr, feat: &Features, node: i32, hop: u64,
         *pairs += 1;
         fold_subtree(csr, feat, child, hop + 1, &ks[1..], &kprod[1..], bi,
                      slot * k + i, base, rows_rest, accs_rest, saved_rest,
-                     valid, tile, acc, pairs);
+                     valid, tile, simd_on, acc, pairs);
     }
     let inv = 1.0 / eff.max(1) as f32;
     for (o, &a) in out.iter_mut().zip(acc.iter()) {
@@ -164,7 +216,8 @@ fn fold_subtree(csr: &Csr, feat: &Features, node: i32, hop: u64,
 #[allow(clippy::too_many_arguments)]
 fn run_rows(csr: &Csr, feat: &Features, seeds: &[i32], ks: &[usize],
             kprod: &[usize], base: u64, agg: &mut [f32],
-            saved: &mut [Option<&mut [i32]>], pairs: &mut [u64]) {
+            saved: &mut [Option<&mut [i32]>], pairs: &mut [u64],
+            simd_on: bool) {
     let d = feat.d;
     let mut sc = Scratch::new(ks, d);
     for (bi, &r) in seeds.iter().enumerate() {
@@ -172,7 +225,7 @@ fn run_rows(csr: &Csr, feat: &Features, seeds: &[i32], ks: &[usize],
         let mut np = 0u64;
         fold_subtree(csr, feat, r, 0, ks, kprod, bi, 0, base, &mut sc.rows,
                      &mut sc.accs, saved, &mut sc.valid, &mut sc.tile,
-                     agg_row, &mut np);
+                     simd_on, agg_row, &mut np);
         pairs[bi] = np;
     }
 }
@@ -201,7 +254,9 @@ pub fn fused_khop(csr: &Csr, feat: &Features, seeds: &[i32],
                        threads, &model)
 }
 
-/// [`fused_khop`] with an explicit shard planner. The plan decides only
+/// [`fused_khop`] with an explicit shard planner, resolving the
+/// scalar/vector choice from the process default (`auto`, i.e. the
+/// `FSA_SIMD` override or the vector path). The plan decides only
 /// *where* the contiguous seed-range cuts land — every worker writes a
 /// disjoint slice of every output and the counter RNG is
 /// order-independent, so `agg`/`saved`/`pairs` are bitwise identical
@@ -211,6 +266,21 @@ pub fn fused_khop(csr: &Csr, feat: &Features, seeds: &[i32],
 pub fn fused_khop_planned(csr: &Csr, feat: &Features, seeds: &[i32],
                           fanouts: &Fanouts, base: u64, save_indices: bool,
                           threads: usize, model: &CostModel) -> FusedOut {
+    fused_khop_simd(csr, feat, seeds, fanouts, base, save_indices, threads,
+                    model, simd::SimdChoice::Auto.enabled())
+}
+
+/// [`fused_khop_planned`] with the `--simd` knob resolved explicitly:
+/// `simd_on` picks the vector gather/fold (dispatch-hoisted, prefetched,
+/// 8-lane folds across the feature dimension) or the scalar
+/// per-row-dispatch reference. The two paths are bitwise identical in
+/// `agg`/`saved`/`pairs` at every depth, thread count and planner
+/// (pinned by `rust/tests/simd.rs`); only step time moves.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_khop_simd(csr: &Csr, feat: &Features, seeds: &[i32],
+                       fanouts: &Fanouts, base: u64, save_indices: bool,
+                       threads: usize, model: &CostModel, simd_on: bool)
+                       -> FusedOut {
     let b = seeds.len();
     let d = feat.d;
     let ks = fanouts.as_slice();
@@ -232,7 +302,7 @@ pub fn fused_khop_planned(csr: &Csr, feat: &Features, seeds: &[i32],
         let workers = resolve_threads(threads).min((b / MIN_PAR_ROWS).max(1));
         if workers <= 1 {
             run_rows(csr, feat, seeds, ks, &kprod, base, &mut agg, &mut view,
-                     &mut pairs);
+                     &mut pairs, simd_on);
         } else {
             // cost model: expected row-adds of the whole nested subtree
             // below each seed (nominal flavor: full-fanout weights)
@@ -303,7 +373,8 @@ pub fn fused_khop_planned(csr: &Csr, feat: &Features, seeds: &[i32],
                                     _ => {}
                                 }
                                 run_rows(csr, feat, seed_c, ks, kprod_ref,
-                                         base, agg_c, &mut saved_c, pairs_c);
+                                         base, agg_c, &mut saved_c, pairs_c,
+                                         simd_on);
                             }));
                         fail_c[0] = res.is_err();
                         ms_c[0] = clock.shard_ms(j, cost_j, t.ms());
@@ -337,7 +408,7 @@ pub fn fused_khop_planned(csr: &Csr, feat: &Features, seeds: &[i32],
                     .collect();
                 run_rows(csr, feat, &seeds[r.clone()], ks, &kprod, base,
                          &mut agg[r.start * d..r.end * d], &mut saved_c,
-                         &mut pairs[r.start..r.end]);
+                         &mut pairs[r.start..r.end], simd_on);
             }
             stats = ShardStats::new(shard_ms, shard_cost);
         }
@@ -357,15 +428,15 @@ pub fn fused_khop_planned(csr: &Csr, feat: &Features, seeds: &[i32],
 pub fn fused_1hop_at_hop(csr: &Csr, feat: &Features, seeds: &[i32], k: usize,
                          base: u64, hop: u64) -> Vec<f32> {
     let d = feat.d;
+    let simd_on = simd::SimdChoice::Auto.enabled();
     let mut agg = vec![0.0f32; seeds.len() * d];
-    let mut row = vec![-1i32; k];
-    let mut valid = Vec::with_capacity(k);
-    let mut tile = vec![0.0f32; D_TILE];
+    let mut sc = Scratch::new(&[k], d);
     for (bi, &r) in seeds.iter().enumerate() {
-        sample_neighbors(csr, r, k, base, hop, &mut row);
-        collect_valid(&row, &mut valid);
-        accumulate_mean(feat, &valid, &mut tile,
-                        &mut agg[bi * d..(bi + 1) * d]);
+        let row = &mut sc.rows[0];
+        sample_neighbors(csr, r, k, base, hop, row);
+        let vs = valid_slice(row.as_slice(), &mut sc.valid);
+        accumulate_mean(feat, vs, &mut sc.tile,
+                        &mut agg[bi * d..(bi + 1) * d], simd_on);
     }
     agg
 }

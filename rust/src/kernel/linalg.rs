@@ -7,6 +7,15 @@
 //! which rustc auto-vectorizes; at the head sizes of this repo
 //! (d = h = 64, c ≤ 47) that is within a small factor of an optimized BLAS
 //! and far off the critical path next to the feature gathers.
+//!
+//! The axpy-shaped inner loops (`row += scalar · row`, `row += row`) run
+//! through [`super::simd`] unconditionally: they are elementwise with one
+//! rounding per multiply and per add, in the same per-element order as
+//! the plain loops, so the explicit vector tier changes no bits — only
+//! [`matmul_a_bt`]'s dot products stay scalar (a vectorized horizontal
+//! sum would reassociate the reduction).
+
+use super::simd;
 
 /// `c[m,n] += a[m,k] @ b[k,n]`.
 pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
@@ -20,10 +29,7 @@ pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize)
             if av == 0.0 {
                 continue; // relu outputs are sparse; skip dead rows of b
             }
-            let brow = &b[p * n..(p + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
+            simd::scale_add(crow, &b[p * n..(p + 1) * n], av);
         }
     }
 }
@@ -41,10 +47,7 @@ pub fn matmul_at_b(a: &[f32], g: &[f32], c: &mut [f32], m: usize, k: usize,
             if av == 0.0 {
                 continue;
             }
-            let crow = &mut c[p * n..(p + 1) * n];
-            for (cv, &gv) in crow.iter_mut().zip(grow) {
-                *cv += av * gv;
-            }
+            simd::scale_add(&mut c[p * n..(p + 1) * n], grow, av);
         }
     }
 }
@@ -75,9 +78,7 @@ pub fn add_bias(x: &mut [f32], bias: &[f32], m: usize, n: usize) {
     debug_assert_eq!(x.len(), m * n);
     debug_assert_eq!(bias.len(), n);
     for i in 0..m {
-        for (xv, &bv) in x[i * n..(i + 1) * n].iter_mut().zip(bias) {
-            *xv += bv;
-        }
+        simd::add_assign_f32(&mut x[i * n..(i + 1) * n], bias);
     }
 }
 
@@ -86,9 +87,7 @@ pub fn col_sum(g: &[f32], out: &mut [f32], m: usize, n: usize) {
     debug_assert_eq!(g.len(), m * n);
     debug_assert_eq!(out.len(), n);
     for i in 0..m {
-        for (ov, &gv) in out.iter_mut().zip(&g[i * n..(i + 1) * n]) {
-            *ov += gv;
-        }
+        simd::add_assign_f32(out, &g[i * n..(i + 1) * n]);
     }
 }
 

@@ -27,10 +27,13 @@ pub mod baseline;
 pub mod engine;
 pub mod fused;
 pub mod linalg;
+pub mod simd;
 
 pub use engine::{NativeBackend, NativeConfig};
+pub use simd::SimdChoice;
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
 
 use crate::gen::Dataset;
 use crate::runtime::{Dtype, TensorSpec};
@@ -39,10 +42,118 @@ use crate::runtime::{Dtype, TensorSpec};
 /// serial loop (thread spawn would dominate the per-row work).
 pub const MIN_PAR_ROWS: usize = 16;
 
-/// Feature-dimension tile for the gather loops: the running-mean
-/// accumulator slice stays L1-resident while the sampled rows stream
-/// through it (the CPU analogue of the kernel's VMEM tile over `d`).
+/// Fallback feature-dimension tile for the gather loops when cache
+/// geometry cannot be detected: the running-mean accumulator slice stays
+/// L1-resident while the sampled rows stream through it (the CPU
+/// analogue of the kernel's VMEM tile over `d`). [`d_tile`] is the
+/// measured/derived value the kernels actually use.
 pub const D_TILE: usize = 256;
+
+/// Process-wide feature-tile override (0 = automatic). The tile_sweep
+/// bench flips it between timed runs; safe because the tile partitions
+/// the feature dimension without reordering any per-element fold, so
+/// outputs are bitwise identical at every size (pinned by
+/// `rust/tests/simd.rs`).
+static D_TILE_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the native feature tile (floats per accumulator slice);
+/// `0` restores automatic selection.
+pub fn set_d_tile(n: usize) {
+    D_TILE_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// The feature tile the native kernels use: the explicit override, else
+/// `FSA_D_TILE` from the environment, else a size derived from the
+/// detected L1d geometry, else the [`D_TILE`] fallback.
+pub fn d_tile() -> usize {
+    let over = D_TILE_OVERRIDE.load(Ordering::Relaxed);
+    if over != 0 {
+        return over.max(simd::LANES);
+    }
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    *AUTO.get_or_init(|| {
+        if let Some(n) = std::env::var("FSA_D_TILE")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+        {
+            return n.max(simd::LANES) & !(simd::LANES - 1);
+        }
+        detected_d_tile().unwrap_or(D_TILE)
+    })
+}
+
+/// Tile from L1d size: each tile's hot set is the accumulator slice, the
+/// streaming neighbor-row slice, and the output slice (~12 bytes per
+/// feature column in f32) plus rowptr/col traffic, so budgeting the tile
+/// at 1/32 of the L1d's float capacity keeps it resident with headroom.
+/// A standard 32 KiB L1d lands exactly on the historical 256 default —
+/// the tile_sweep bench's native axis is the empirical check.
+fn detected_d_tile() -> Option<usize> {
+    let l1 = l1d_cache_bytes()?;
+    Some(((l1 / 128) & !(simd::LANES - 1)).clamp(64, 1024))
+}
+
+/// Scan `/sys/devices/system/cpu/cpu0/cache/index*` for the level-1
+/// data-cache size (Linux sysfs; other platforms return `None` and take
+/// the [`D_TILE`] fallback).
+fn l1d_cache_bytes() -> Option<usize> {
+    let cache = std::path::Path::new("/sys/devices/system/cpu/cpu0/cache");
+    for i in 0..8 {
+        let dir = cache.join(format!("index{i}"));
+        let read = |f: &str| std::fs::read_to_string(dir.join(f)).ok();
+        let (Some(level), Some(kind)) = (read("level"), read("type")) else {
+            continue;
+        };
+        if level.trim() != "1" || kind.trim() == "Instruction" {
+            continue;
+        }
+        return parse_cache_size(read("size")?.trim());
+    }
+    None
+}
+
+/// Cache sizes as sysfs spells them: `32K`, `1M`, or plain bytes.
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let (num, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    num.parse::<usize>().ok().map(|n| n * mult)
+}
+
+/// `--layout natural|degree` — physical order of the native feature-row
+/// storage. `degree` runs the opt-in locality pass: rows are permuted
+/// into degree-descending order behind an index map so hub-heavy gathers
+/// on power-law graphs hit a hot, contiguous region. Node ids — and
+/// therefore the counter-hash RNG draws, saved indices, and planner
+/// costs — are untouched, so outputs are bitwise identical under either
+/// layout (pinned by `rust/tests/simd.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FeatureLayout {
+    #[default]
+    Natural,
+    DegreeDesc,
+}
+
+impl FeatureLayout {
+    pub fn parse(s: &str) -> anyhow::Result<FeatureLayout> {
+        Ok(match s {
+            "natural" => FeatureLayout::Natural,
+            "degree" | "degree-desc" => FeatureLayout::DegreeDesc,
+            other => anyhow::bail!("--layout must be natural|degree, \
+                                    got {other:?}"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FeatureLayout::Natural => "natural",
+            FeatureLayout::DegreeDesc => "degree",
+        }
+    }
+}
 
 /// Resolve a thread-count knob (0 = machine parallelism, min 1).
 pub fn resolve_threads(threads: usize) -> usize {
@@ -69,11 +180,23 @@ enum Storage {
     Bf16(Vec<u16>),
 }
 
+/// Borrowed view of the raw row-major storage, for gather loops that
+/// hoist the dtype dispatch out of their per-row body; index physical
+/// rows via [`Features::phys`].
+pub(crate) enum RowData<'a> {
+    F32(&'a [f32]),
+    Bf16(&'a [u16]),
+}
+
 /// The `[n, d]` feature matrix in the native engine's storage dtype.
 pub struct Features {
     pub n: usize,
     pub d: usize,
     store: Storage,
+    /// Logical node id → physical storage row when a layout pass has
+    /// permuted the rows ([`Features::permute_by_degree`]); `None` is
+    /// the identity (natural) layout.
+    perm: Option<Vec<u32>>,
 }
 
 impl Features {
@@ -85,7 +208,7 @@ impl Features {
         } else {
             Storage::F32(x.to_vec())
         };
-        Features { n, d, store }
+        Features { n, d, store, perm: None }
     }
 
     /// Build over a dataset's features: shares the `Arc` in f32 mode (no
@@ -97,7 +220,51 @@ impl Features {
         } else {
             Storage::Shared(ds)
         };
-        Features { n, d, store }
+        Features { n, d, store, perm: None }
+    }
+
+    /// The opt-in locality pass (`--layout degree`): physically reorder
+    /// the rows into degree-descending order (ties by id, so the result
+    /// is deterministic) and install the index map. A `Shared` view
+    /// cannot survive a permutation and becomes an owned f32 copy. All
+    /// gathers are redirected through [`Features::phys`], so every
+    /// logical read — and therefore every kernel output — is unchanged.
+    pub fn permute_by_degree(&mut self, csr: &crate::graph::Csr) {
+        assert_eq!(csr.n, self.n,
+                   "layout pass: graph/features shape mismatch");
+        let mut order: Vec<u32> = (0..self.n as u32).collect();
+        order.sort_by_key(|&u| (std::cmp::Reverse(csr.degree(u as i32)), u));
+        let mut perm = vec![0u32; self.n];
+        for (p, &u) in order.iter().enumerate() {
+            perm[u as usize] = p as u32;
+        }
+        self.store = match &self.store {
+            Storage::F32(x) => Storage::F32(permute_rows(x, &order, self.d)),
+            Storage::Shared(ds) => {
+                Storage::F32(permute_rows(&ds.features, &order, self.d))
+            }
+            Storage::Bf16(x) => Storage::Bf16(permute_rows(x, &order, self.d)),
+        };
+        self.perm = Some(perm);
+    }
+
+    /// Physical storage row of logical node `u` under the active layout.
+    #[inline]
+    pub(crate) fn phys(&self, u: usize) -> usize {
+        match &self.perm {
+            Some(p) => p[u] as usize,
+            None => u,
+        }
+    }
+
+    /// The raw storage for monomorphized (dispatch-hoisted) gather loops.
+    #[inline]
+    pub(crate) fn rows(&self) -> RowData<'_> {
+        match &self.store {
+            Storage::F32(x) => RowData::F32(x),
+            Storage::Shared(ds) => RowData::F32(&ds.features),
+            Storage::Bf16(x) => RowData::Bf16(x),
+        }
     }
 
     #[inline]
@@ -120,12 +287,14 @@ impl Features {
         }
     }
 
-    /// `acc[..hi-lo] += x[u][lo..hi]` (decoding bf16 on the fly).
+    /// `acc[..hi-lo] += x[u][lo..hi]` (decoding bf16 on the fly). This
+    /// per-row dispatch is the scalar (`--simd off`) reference path; the
+    /// vector kernel hoists the match via [`Features::rows`].
     #[inline]
     pub fn add_row_slice(&self, u: usize, lo: usize, hi: usize,
                          acc: &mut [f32]) {
         debug_assert!(u < self.n && hi <= self.d);
-        let base = u * self.d;
+        let base = self.phys(u) * self.d;
         match self.f32_data() {
             Some(x) => {
                 for (a, &v) in acc.iter_mut().zip(&x[base + lo..base + hi]) {
@@ -145,7 +314,7 @@ impl Features {
     #[inline]
     pub fn copy_row(&self, u: usize, out: &mut [f32]) {
         debug_assert!(u < self.n);
-        let base = u * self.d;
+        let base = self.phys(u) * self.d;
         match self.f32_data() {
             Some(x) => out[..self.d].copy_from_slice(&x[base..base + self.d]),
             None => {
@@ -156,6 +325,15 @@ impl Features {
             }
         }
     }
+}
+
+/// `out[p] = x[order[p]]`, row-major `[n, d]`.
+fn permute_rows<T: Copy>(x: &[T], order: &[u32], d: usize) -> Vec<T> {
+    let mut out = Vec::with_capacity(x.len());
+    for &u in order {
+        out.extend_from_slice(&x[u as usize * d..(u as usize + 1) * d]);
+    }
+    out
 }
 
 // ---------------------------------------------------------------------------
@@ -341,6 +519,68 @@ mod tests {
             owned.copy_row(u, &mut b);
             assert_eq!(a, b);
         }
+    }
+
+    #[test]
+    fn degree_permuted_features_read_identically() {
+        let ds = Arc::new(
+            crate::gen::Dataset::generate(
+                crate::gen::builtin_spec("tiny").unwrap()).unwrap());
+        let d = ds.spec.d;
+        for amp in [false, true] {
+            let plain = Features::from_dataset(ds.clone(), amp);
+            let mut permuted = Features::from_dataset(ds.clone(), amp);
+            permuted.permute_by_degree(&ds.graph);
+            let mut a = vec![0.0f32; d];
+            let mut b = vec![0.0f32; d];
+            for u in [0usize, 3, 17, 200, 511] {
+                plain.copy_row(u, &mut a);
+                permuted.copy_row(u, &mut b);
+                assert_eq!(a, b, "amp={amp} node {u}");
+                a.fill(0.5);
+                b.fill(0.5);
+                plain.add_row_slice(u, 1, d, &mut a[1..]);
+                permuted.add_row_slice(u, 1, d, &mut b[1..]);
+                assert_eq!(a, b, "amp={amp} node {u} slice");
+            }
+        }
+        // the hottest row moved to the front of physical storage
+        let mut permuted = Features::from_dataset(ds.clone(), false);
+        permuted.permute_by_degree(&ds.graph);
+        let hub = (0..ds.spec.n)
+            .min_by_key(|&u| {
+                (std::cmp::Reverse(ds.graph.degree(u as i32)), u)
+            })
+            .unwrap();
+        assert_eq!(permuted.phys(hub), 0);
+    }
+
+    #[test]
+    fn d_tile_override_env_and_detection_agree_on_bounds() {
+        set_d_tile(96);
+        assert_eq!(d_tile(), 96);
+        set_d_tile(0);
+        let auto = d_tile();
+        assert!((64..=1024).contains(&auto) && auto % simd::LANES == 0,
+                "auto tile {auto}");
+    }
+
+    #[test]
+    fn cache_size_strings_parse() {
+        assert_eq!(parse_cache_size("32K"), Some(32 * 1024));
+        assert_eq!(parse_cache_size("1M"), Some(1024 * 1024));
+        assert_eq!(parse_cache_size("49152"), Some(49152));
+        assert_eq!(parse_cache_size("weird"), None);
+    }
+
+    #[test]
+    fn layout_choice_parses() {
+        assert_eq!(FeatureLayout::parse("natural").unwrap(),
+                   FeatureLayout::Natural);
+        assert_eq!(FeatureLayout::parse("degree").unwrap(),
+                   FeatureLayout::DegreeDesc);
+        assert!(FeatureLayout::parse("random").is_err());
+        assert_eq!(FeatureLayout::default().as_str(), "natural");
     }
 
     #[test]

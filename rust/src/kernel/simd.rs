@@ -1,0 +1,352 @@
+//! Stable-Rust SIMD primitives for the native kernel's gather/fold.
+//!
+//! Lanes run across the **feature dimension**: element `j` of an
+//! accumulator only ever combines with element `j` of a neighbor row, in
+//! the same neighbor order as the scalar loop, so every output element
+//! sees the identical floating-point operation sequence at any vector
+//! width. That is what keeps `--simd on` bitwise identical to `--simd
+//! off` at every depth, thread count and planner; lane-per-neighbor
+//! folding would reassociate the sum and break it (DESIGN_BACKEND.md
+//! §SIMD). No FMA is emitted anywhere: the vector fold rounds after the
+//! multiply and after the add, exactly like the scalar code.
+//!
+//! Dispatch is two-tier and decided at runtime: on `x86_64` with AVX2
+//! detected, 8-lane intrinsic loops (including the bf16→f32 decode —
+//! a `u16` zero-extend plus 16-bit shift, the same bits as
+//! [`crate::util::bf16_to_f32`]); everywhere else, portable
+//! `chunks_exact` loops the optimizer can auto-vectorize. The scalar
+//! reference kernel (`--simd off`) bypasses this module entirely — it is
+//! the pre-vectorization per-row-dispatch loop, kept as the baseline the
+//! bench speedup is measured against.
+
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+/// Vector width of the fold loops (f32 lanes per step). The AVX2 tier
+/// uses exactly this width; the portable tier chunks by it so both tiers
+/// walk the remainder identically.
+pub const LANES: usize = 8;
+
+/// `--simd auto|on|off` — vector vs scalar gather/fold in the native
+/// kernel. Outputs are bitwise identical under every setting; the knob
+/// only moves step time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdChoice {
+    /// The vector path unless an `FSA_SIMD=off` environment override
+    /// says otherwise (the portable fallback makes the vector path safe
+    /// on every target, so auto needs no capability gate; AVX2 is a
+    /// runtime specialization *inside* the vector helpers).
+    #[default]
+    Auto,
+    On,
+    Off,
+}
+
+impl SimdChoice {
+    pub fn parse(s: &str) -> Result<SimdChoice> {
+        Ok(match s {
+            "auto" => SimdChoice::Auto,
+            "on" => SimdChoice::On,
+            "off" => SimdChoice::Off,
+            other => bail!("--simd must be auto|on|off, got {other:?}"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdChoice::Auto => "auto",
+            SimdChoice::On => "on",
+            SimdChoice::Off => "off",
+        }
+    }
+
+    /// Resolve to the concrete path this process takes: `auto` honors an
+    /// `FSA_SIMD=on|off` override (how CI flips whole suites without
+    /// touching each invocation) and otherwise takes the vector path.
+    pub fn enabled(self) -> bool {
+        static AUTO: OnceLock<bool> = OnceLock::new();
+        match self {
+            SimdChoice::On => true,
+            SimdChoice::Off => false,
+            SimdChoice::Auto => *AUTO.get_or_init(|| {
+                !matches!(std::env::var("FSA_SIMD").ok().as_deref(),
+                          Some("off") | Some("0"))
+            }),
+        }
+    }
+}
+
+/// True when the AVX2 specializations are in use (benches report it so a
+/// recorded speedup names its tier); every other target serves the
+/// portable loops.
+pub fn avx2_active() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static AVX2: OnceLock<bool> = OnceLock::new();
+        *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// `acc[i] += row[i]` — one add per element, same order as the scalar
+/// gather.
+#[inline]
+pub(crate) fn add_assign_f32(acc: &mut [f32], row: &[f32]) {
+    debug_assert_eq!(acc.len(), row.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_active() {
+        // SAFETY: AVX2 presence was just checked.
+        unsafe { add_assign_f32_avx2(acc, row) };
+        return;
+    }
+    add_assign_f32_portable(acc, row);
+}
+
+/// `acc[i] += decode(row[i])` with the bf16→f32 widening in the same
+/// pass (bit-exact with [`crate::util::bf16_to_f32`]).
+#[inline]
+pub(crate) fn add_assign_bf16(acc: &mut [f32], row: &[u16]) {
+    debug_assert_eq!(acc.len(), row.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_active() {
+        // SAFETY: AVX2 presence was just checked.
+        unsafe { add_assign_bf16_avx2(acc, row) };
+        return;
+    }
+    add_assign_bf16_portable(acc, row);
+}
+
+/// `out[i] += acc[i] * s` — multiply rounds, then add rounds (no FMA),
+/// matching the scalar fold's two-rounding sequence bit for bit.
+#[inline]
+pub(crate) fn scale_add(out: &mut [f32], acc: &[f32], s: f32) {
+    debug_assert_eq!(out.len(), acc.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_active() {
+        // SAFETY: AVX2 presence was just checked.
+        unsafe { scale_add_avx2(out, acc, s) };
+        return;
+    }
+    scale_add_portable(out, acc, s);
+}
+
+/// Hint the cache hierarchy to start pulling `x[at..]` — the gather loop
+/// issues this for the *next* valid neighbor row one iteration ahead.
+/// Out-of-range indices and non-x86 targets degrade to a no-op.
+#[inline]
+pub(crate) fn prefetch_f32(x: &[f32], at: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if at < x.len() {
+        // SAFETY: in-bounds pointer; prefetch has no memory effects.
+        unsafe {
+            use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+            _mm_prefetch::<_MM_HINT_T0>(x.as_ptr().add(at) as *const i8);
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = (x, at);
+}
+
+/// [`prefetch_f32`] for bf16-compressed storage.
+#[inline]
+pub(crate) fn prefetch_u16(x: &[u16], at: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if at < x.len() {
+        // SAFETY: in-bounds pointer; prefetch has no memory effects.
+        unsafe {
+            use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+            _mm_prefetch::<_MM_HINT_T0>(x.as_ptr().add(at) as *const i8);
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = (x, at);
+}
+
+// ---------------------------------------------------------------------------
+// portable tier — LANES-wide chunks the optimizer can auto-vectorize
+// ---------------------------------------------------------------------------
+
+fn add_assign_f32_portable(acc: &mut [f32], row: &[f32]) {
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut r = row.chunks_exact(LANES);
+    for (ac, rc) in (&mut a).zip(&mut r) {
+        for (x, &v) in ac.iter_mut().zip(rc) {
+            *x += v;
+        }
+    }
+    for (x, &v) in a.into_remainder().iter_mut().zip(r.remainder()) {
+        *x += v;
+    }
+}
+
+fn add_assign_bf16_portable(acc: &mut [f32], row: &[u16]) {
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut r = row.chunks_exact(LANES);
+    for (ac, rc) in (&mut a).zip(&mut r) {
+        for (x, &v) in ac.iter_mut().zip(rc) {
+            *x += crate::util::bf16_to_f32(v);
+        }
+    }
+    for (x, &v) in a.into_remainder().iter_mut().zip(r.remainder()) {
+        *x += crate::util::bf16_to_f32(v);
+    }
+}
+
+fn scale_add_portable(out: &mut [f32], acc: &[f32], s: f32) {
+    let mut o = out.chunks_exact_mut(LANES);
+    let mut a = acc.chunks_exact(LANES);
+    for (oc, ac) in (&mut o).zip(&mut a) {
+        for (x, &v) in oc.iter_mut().zip(ac) {
+            *x += v * s;
+        }
+    }
+    for (x, &v) in o.into_remainder().iter_mut().zip(a.remainder()) {
+        *x += v * s;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 tier — explicit 8-lane intrinsics, runtime-selected
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn add_assign_f32_avx2(acc: &mut [f32], row: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let mut i = 0;
+    while i + LANES <= n {
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let r = _mm256_loadu_ps(row.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, r));
+        i += LANES;
+    }
+    while i < n {
+        *acc.get_unchecked_mut(i) += *row.get_unchecked(i);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn add_assign_bf16_avx2(acc: &mut [f32], row: &[u16]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let mut i = 0;
+    while i + LANES <= n {
+        // widen 8 bf16 halves to u32 lanes and shift them into the f32
+        // high half — the same bits the scalar decoder produces
+        let h = _mm_loadu_si128(row.as_ptr().add(i) as *const __m128i);
+        let w = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h));
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let v = _mm256_castsi256_ps(w);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, v));
+        i += LANES;
+    }
+    while i < n {
+        *acc.get_unchecked_mut(i) +=
+            crate::util::bf16_to_f32(*row.get_unchecked(i));
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_add_avx2(out: &mut [f32], acc: &[f32], s: f32) {
+    use std::arch::x86_64::*;
+    let sv = _mm256_set1_ps(s);
+    let n = out.len();
+    let mut i = 0;
+    while i + LANES <= n {
+        let o = _mm256_loadu_ps(out.as_ptr().add(i));
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        // mul then add (two roundings) — deliberately not an FMA
+        let r = _mm256_add_ps(o, _mm256_mul_ps(a, sv));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+        i += LANES;
+    }
+    while i < n {
+        *out.get_unchecked_mut(i) += *acc.get_unchecked(i) * s;
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{bf16_to_f32, f32_to_bf16};
+
+    fn pattern(n: usize, salt: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i * 37 % 101) as f32 - 50.0) * 0.37 + salt).collect()
+    }
+
+    #[test]
+    fn choice_parses_and_round_trips() {
+        for (s, want) in [("auto", SimdChoice::Auto), ("on", SimdChoice::On),
+                          ("off", SimdChoice::Off)] {
+            let c = SimdChoice::parse(s).unwrap();
+            assert_eq!(c, want);
+            assert_eq!(c.as_str(), s);
+        }
+        assert!(SimdChoice::parse("avx512").is_err());
+        assert!(SimdChoice::On.enabled());
+        assert!(!SimdChoice::Off.enabled());
+        assert_eq!(SimdChoice::default(), SimdChoice::Auto);
+    }
+
+    #[test]
+    fn add_assign_matches_scalar_at_remainder_lengths() {
+        for n in [1usize, 7, 8, 63, 64, 65, 256] {
+            let row = pattern(n, 0.25);
+            let mut acc = pattern(n, -3.0);
+            let mut want = acc.clone();
+            for (a, &v) in want.iter_mut().zip(&row) {
+                *a += v;
+            }
+            add_assign_f32(&mut acc, &row);
+            assert_eq!(acc, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn bf16_add_matches_scalar_decode_bitwise() {
+        for n in [1usize, 7, 8, 63, 65] {
+            let row: Vec<u16> =
+                pattern(n, 1.5).iter().map(|&v| f32_to_bf16(v)).collect();
+            let mut acc = pattern(n, 2.0);
+            let mut want = acc.clone();
+            for (a, &v) in want.iter_mut().zip(&row) {
+                *a += bf16_to_f32(v);
+            }
+            add_assign_bf16(&mut acc, &row);
+            assert_eq!(acc, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scale_add_matches_scalar_mul_then_add() {
+        // a non-power-of-two scale so both roundings are exercised
+        for n in [1usize, 7, 64, 65] {
+            let acc = pattern(n, 0.5);
+            let mut out = pattern(n, -1.0);
+            let mut want = out.clone();
+            for (o, &v) in want.iter_mut().zip(&acc) {
+                *o += v * (1.0 / 3.0);
+            }
+            scale_add(&mut out, &acc, 1.0 / 3.0);
+            assert_eq!(out, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn prefetch_tolerates_out_of_range() {
+        let x = [1.0f32; 4];
+        prefetch_f32(&x, 0);
+        prefetch_f32(&x, 100); // past the end: must degrade to a no-op
+        prefetch_u16(&[1u16; 4], 100);
+    }
+}

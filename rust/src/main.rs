@@ -34,6 +34,7 @@ use fusesampleagg::engine::{argmax, Engine};
 use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::gen::{builtin_spec, Dataset, Split};
 use fusesampleagg::graph::PlannerChoice;
+use fusesampleagg::kernel::{FeatureLayout, SimdChoice};
 use fusesampleagg::memory::{self, StepDims};
 use fusesampleagg::metrics;
 use fusesampleagg::runtime::faults::{self, ChaosPlane, FaultPlane};
@@ -92,6 +93,7 @@ OPTIONS PER SUBCOMMAND
               [--backend auto|native|pjrt]
               [--planner nominal|quantile|adaptive]
               [--planner-state PATH|off] [--chaos SPEC]
+              [--simd auto|on|off] [--layout natural|degree]
               [--save-params FILE]   write a versioned params checkpoint
                                      at shutdown (for `fsa serve`)
               [--checkpoint-every N] also checkpoint every N steps
@@ -106,6 +108,7 @@ OPTIONS PER SUBCOMMAND
               [--queue-depth N] [--deadline-ms X] [--threads N]
               [--backend native] [--planner ...]
               [--planner-state PATH|off] [--seed S] [--chaos SPEC]
+              [--simd auto|on|off] [--layout natural|degree]
               reads one request per stdin line (space/comma-separated
               seed node ids), replies with argmax classes + latency;
               malformed lines get an `ERR <reason>` reply and the server
@@ -122,6 +125,7 @@ OPTIONS PER SUBCOMMAND
               [--prefetch on|off] [--backend auto|native|pjrt]
               [--planner nominal|quantile|adaptive]
               [--planner-state PATH|off]
+              [--simd auto|on|off] [--layout natural|degree]
   table       --which 1|2|3|fig1|fig2|fig3|fig4|fig5 [--csv FILE]
   profile     [--steps N] [--warmup N] [--seed S]      (Table 3)
   memory      --dataset NAME --fanout K1xK2[xK3...] --batch B
@@ -130,6 +134,7 @@ OPTIONS PER SUBCOMMAND
               [--steps N] [--threads N] [--prefetch on|off]
               [--dispatch-ms X] [--sweep] [--backend emulated|native]
               [--variant fsa|dgl] [--planner nominal|quantile|adaptive]
+              [--simd auto|on|off] [--layout natural|degree]
               host sampling/batch pipeline: steps/sec + shard imbalance
               + utilization (no artifacts needed; dispatch is emulated or
               native compute)
@@ -171,6 +176,28 @@ PIPELINE KNOBS
                     files fall back to uniform weights with a warning.
                     Adaptive cut positions may differ across sessions
                     because of this; sampled values never do.
+  --simd S          native-kernel vector tier (default auto):
+                      auto  use AVX2 gather/fold when the CPU has it
+                            (FSA_SIMD=off|0 in the environment forces
+                            the scalar tier without re-invoking)
+                      on    force the vector tier
+                      off   force the scalar reference tier
+                    outputs are bitwise identical either way — SIMD
+                    lanes run across the feature dimension, never
+                    across neighbors, so no float op is reassociated;
+                    only step time moves
+  --layout L        feature-row storage order (default natural):
+                      natural  rows stored in node-id order
+                      degree   opt-in locality pass: rows permuted into
+                               degree-descending order behind an index
+                               map, so hot hub rows share cache lines
+                    node ids, RNG draws, saved indices, and planner
+                    costs are untouched — outputs are bitwise identical
+  FSA_D_TILE=N      override the native feature-tile width (elements per
+                    cache-blocked gather pass; default from detected L1d
+                    geometry, rounded to the SIMD lane width). Any value
+                    is bitwise-output-identical; `cargo bench --bench
+                    tile_sweep` measures the sweet spot
 
 FAULT INJECTION (--chaos, train/serve)
   Deterministic chaos for fault-tolerance testing; production runs
@@ -201,6 +228,14 @@ fn chaos_arg(args: &Args, seed: u64) -> Result<Arc<dyn FaultPlane>> {
 
 fn planner_choice(args: &Args) -> Result<PlannerChoice> {
     PlannerChoice::parse(&args.str_or("planner", "quantile"))
+}
+
+fn simd_choice(args: &Args) -> Result<SimdChoice> {
+    SimdChoice::parse(&args.str_or("simd", "auto"))
+}
+
+fn layout_choice(args: &Args) -> Result<FeatureLayout> {
+    FeatureLayout::parse(&args.str_or("layout", "natural"))
 }
 
 /// `--planner-state <path|off>`: where the adaptive planner persists its
@@ -260,6 +295,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         planner,
         planner_state: planner_state_arg(args, planner),
         faults: chaos_arg(args, seed)?,
+        simd: simd_choice(args)?,
+        layout: layout_choice(args)?,
     };
     let steps = args.usize_or("steps", 30)?;
     let warmup = args.usize_or("warmup", 5)?;
@@ -375,8 +412,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "dataset", "variant", "fanout", "params", "batch",
         "batch-window-ms", "max-batch", "queue-depth", "deadline-ms",
         "threads", "backend", "planner", "planner-state", "seed", "chaos",
-        "rates", "windows", "duration-ms", "clients", "seeds-per-request",
-        "out",
+        "simd", "layout", "rates", "windows", "duration-ms", "clients",
+        "seeds-per-request", "out",
     ];
     const SERVE_SWITCHES: &[&str] = &["bench", "no-amp"];
     args.ensure_known(SERVE_OPTIONS, SERVE_SWITCHES)?;
@@ -404,6 +441,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         planner,
         planner_state: planner_state_arg(args, planner),
         faults: chaos_arg(args, seed)?,
+        simd: simd_choice(args)?,
+        layout: layout_choice(args)?,
     };
     let scfg = serve::ServeConfig {
         batch_window_ms: f64_opt(args, "batch-window-ms", 2.0)?,
@@ -573,6 +612,8 @@ fn cmd_bench_grid(args: &Args) -> Result<()> {
     grid.prefetch = args.bool_or("prefetch", grid.prefetch)?;
     grid.backend = backend_choice(args)?;
     grid.planner = planner_choice(args)?;
+    grid.simd = simd_choice(args)?;
+    grid.layout = layout_choice(args)?;
     // bench cells default to NO planner-state persistence (a
     // paper-protocol grid must not inherit another run's weights);
     // --planner-state <path> opts in explicitly
@@ -608,7 +649,7 @@ fn cmd_bench_grid(args: &Args) -> Result<()> {
     // `fused_vs_baseline` bench — an ad-hoc grid must not overwrite it.
     if grid.backend == BackendChoice::Native {
         let json_path = util::results_dir().join("BENCH_native.json");
-        bench::write_native_json(&rows, grid.planner, &json_path)?;
+        bench::write_native_json(&rows, grid.planner, grid.simd, &json_path)?;
         println!("wrote native fused-vs-baseline summary to {}",
                  json_path.display());
     }
@@ -633,8 +674,8 @@ fn cmd_table(args: &Args) -> Result<()> {
     if rows.is_empty() {
         bail!("{csv:?} contains no parseable rows — it may predate the \
                current schema (the k1,k2 columns became a single fanout \
-               column, and imbalance + planner columns were appended); \
-               re-run `fsa bench-grid`");
+               column, and imbalance + planner + simd columns were \
+               appended); re-run `fsa bench-grid`");
     }
     let text = match which.as_str() {
         "1" => render::table1(&rows),
@@ -744,6 +785,8 @@ fn cmd_throughput(args: &Args) -> Result<()> {
         hidden,
         adamw,
         planner: planner_choice(args)?,
+        simd: simd_choice(args)?,
+        layout: layout_choice(args)?,
         ..throughput::ThroughputConfig::new(&name)
     };
 

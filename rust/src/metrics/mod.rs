@@ -119,25 +119,30 @@ pub struct BenchRow {
     /// records it (closing PR 4's "the CSV does not record --planner"
     /// gap).
     pub planner: String,
+    /// Resolved native vector tier the row ran under ("on" | "off").
+    /// Outputs are bitwise identical either way, but step_ms is not —
+    /// a speedup computed across rows must not mix tiers, so the schema
+    /// records it (same rationale as `planner`).
+    pub simd: String,
 }
 
-pub const CSV_HEADER: &str = "dataset,variant,hops,fanout,batch,amp,repeat_seed,steps,step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,nodes_per_s,peak_transient_bytes,loss,imbalance,planner";
+pub const CSV_HEADER: &str = "dataset,variant,hops,fanout,batch,amp,repeat_seed,steps,step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,nodes_per_s,peak_transient_bytes,loss,imbalance,planner,simd";
 
 impl BenchRow {
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.1},{},{:.5},{:.4},{}",
+            "{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.1},{},{:.5},{:.4},{},{}",
             self.dataset, self.variant, self.hops, self.fanout,
             self.batch, self.amp, self.repeat_seed, self.steps, self.step_ms,
             self.sample_ms, self.upload_ms, self.execute_ms, self.pairs_per_s,
             self.nodes_per_s, self.peak_transient_bytes, self.loss,
-            self.imbalance, self.planner
+            self.imbalance, self.planner, self.simd
         )
     }
 
     pub fn parse_csv(line: &str) -> Option<BenchRow> {
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 18 {
+        if f.len() != 19 {
             return None;
         }
         // `hops` is derivable from the fanout label; derive it so the two
@@ -163,6 +168,7 @@ impl BenchRow {
             loss: f[15].parse().ok()?,
             imbalance: f[16].parse().ok()?,
             planner: f[17].to_string(),
+            simd: f[18].to_string(),
         })
     }
 }
@@ -379,10 +385,12 @@ pub fn median_over_repeats(rows: &[BenchRow]) -> Vec<BenchRow> {
     use std::collections::BTreeMap;
     let mut groups: BTreeMap<String, Vec<&BenchRow>> = BTreeMap::new();
     for r in rows {
-        // planner is part of the key: imbalance medians across flavors
+        // planner and simd are part of the key: imbalance medians across
+        // planner flavors — or step-time medians across vector tiers —
         // would mix apples and oranges
-        let key = format!("{}|{}|{}|{}|{}|{}|{}", r.dataset, r.variant,
-                          r.hops, r.fanout, r.batch, r.amp, r.planner);
+        let key = format!("{}|{}|{}|{}|{}|{}|{}|{}", r.dataset, r.variant,
+                          r.hops, r.fanout, r.batch, r.amp, r.planner,
+                          r.simd);
         groups.entry(key).or_default().push(r);
     }
     groups
@@ -412,6 +420,7 @@ pub fn median_over_repeats(rows: &[BenchRow]) -> Vec<BenchRow> {
                 loss: med(|r| r.loss),
                 imbalance: med(|r| r.imbalance),
                 planner: first.planner.clone(),
+                simd: first.simd.clone(),
             }
         })
         .collect()
@@ -465,6 +474,7 @@ mod tests {
             loss: 2.0,
             imbalance: 1.25,
             planner: "quantile".into(),
+            simd: "on".into(),
         }
     }
 
@@ -479,32 +489,34 @@ mod tests {
         assert_eq!(parsed.peak_transient_bytes, 123456);
         assert!((parsed.imbalance - 1.25).abs() < 1e-9);
         assert_eq!(parsed.planner, "quantile");
+        assert_eq!(parsed.simd, "on");
         assert_eq!(CSV_HEADER.split(',').count(),
                    row.to_csv().split(',').count());
     }
 
-    /// Pin both schemas exactly: 18 bench columns / 15 throughput
-    /// columns, with `planner` appended last. A drive-by column
-    /// reorder or rename must fail here, not in a downstream reader.
+    /// Pin both schemas exactly: 19 bench columns / 15 throughput
+    /// columns, with `simd` (bench) and `planner` (both) appended last.
+    /// A drive-by column reorder or rename must fail here, not in a
+    /// downstream reader.
     #[test]
     fn csv_schemas_are_pinned() {
         assert_eq!(
             CSV_HEADER,
             "dataset,variant,hops,fanout,batch,amp,repeat_seed,steps,\
              step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,\
-             nodes_per_s,peak_transient_bytes,loss,imbalance,planner");
-        assert_eq!(CSV_HEADER.split(',').count(), 18);
+             nodes_per_s,peak_transient_bytes,loss,imbalance,planner,simd");
+        assert_eq!(CSV_HEADER.split(',').count(), 19);
         assert_eq!(
             THROUGHPUT_CSV_HEADER,
             "dataset,hops,fanout,batch,threads,prefetch,steps,\
              steps_per_s,step_ms,sample_ms,overlap_ms,dispatch_ms,\
              utilization,imbalance,planner");
         assert_eq!(THROUGHPUT_CSV_HEADER.split(',').count(), 15);
-        // rows with the previous (17-/14-column) schema no longer parse:
+        // rows with the previous (18-/14-column) schema no longer parse:
         // the reader rejects rather than misassigns
         let new = sample_row(42, 1.0).to_csv();
-        let old_17_cols = new.rsplit_once(',').unwrap().0;
-        assert!(BenchRow::parse_csv(old_17_cols).is_none());
+        let old_18_cols = new.rsplit_once(',').unwrap().0;
+        assert!(BenchRow::parse_csv(old_18_cols).is_none());
     }
 
     #[test]

@@ -303,6 +303,8 @@ fn trainer_persists_state_and_warm_starts_next_session() {
         backend: BackendChoice::Native,
         planner: PlannerChoice::Adaptive,
         planner_state: state,
+        simd: Default::default(),
+        layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
     };
     let cfg = mk_cfg(Some(path.clone()));
@@ -406,6 +408,8 @@ fn nominal_and_quantile_outputs_identical_at_threads_1_4_8() {
             backend: BackendChoice::Native,
             planner: choice,
             planner_state: None,
+            simd: Default::default(),
+            layout: Default::default(),
             faults: fusesampleagg::runtime::faults::none(),
         };
         let mut tr = Trainer::new(&rt, cache, cfg).unwrap();

@@ -328,6 +328,8 @@ fn depth3_bitwise_deterministic_across_threads_1_4_8() {
             backend: BackendChoice::Native,
             planner: Default::default(),
             planner_state: None,
+            simd: Default::default(),
+            layout: Default::default(),
             faults: fusesampleagg::runtime::faults::none(),
         };
         let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
@@ -358,6 +360,8 @@ fn depth3_native_training_end_to_end() {
             backend: BackendChoice::Native,
             planner: Default::default(),
             planner_state: None,
+            simd: Default::default(),
+            layout: Default::default(),
             faults: fusesampleagg::runtime::faults::none(),
         };
         let mut tr = Trainer::new(&rt, &mut cache, cfg).unwrap();
@@ -398,6 +402,8 @@ fn depth_axis_transient_ratio_grows() {
                 backend: BackendChoice::Native,
                 planner: Default::default(),
                 planner_state: None,
+                simd: Default::default(),
+                layout: Default::default(),
                 faults: fusesampleagg::runtime::faults::none(),
             };
             let mut tr = Trainer::new(&rt, cache, cfg).unwrap();

@@ -56,6 +56,8 @@ fn tiny_cfg(variant: Variant, threads: usize,
         backend: BackendChoice::Native,
         planner: Default::default(),
         planner_state: None,
+        simd: Default::default(),
+        layout: Default::default(),
         faults,
     }
 }

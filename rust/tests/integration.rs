@@ -46,6 +46,8 @@ fn tiny_cfg(variant: Variant, hops: u32, seed: u64) -> TrainConfig {
         backend: Default::default(),
         planner: Default::default(),
         planner_state: None,
+        simd: Default::default(),
+        layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
     }
 }
@@ -228,6 +230,8 @@ fn bf16_feature_artifact_trains() {
         backend: Default::default(),
         planner: Default::default(),
         planner_state: None,
+        simd: Default::default(),
+        layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
     };
     let mut tr = Trainer::new_named(

@@ -37,6 +37,8 @@ fn tiny_cfg(variant: Variant, ks: &[usize], seed: u64) -> TrainConfig {
         backend: BackendChoice::Native,
         planner: Default::default(),
         planner_state: None,
+        simd: Default::default(),
+        layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
     }
 }
@@ -223,6 +225,8 @@ fn native_fused_forward_matches_unfused_reference() {
         threads: 1,
         planner: Default::default(),
         hidden: h,
+        simd: Default::default(),
+        layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
     };
     let adamw = Manifest::builtin().adamw;
@@ -301,6 +305,8 @@ fn fused_grads_match_finite_difference() {
         threads: 1,
         planner: Default::default(),
         hidden: h,
+        simd: Default::default(),
+        layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
     };
     let adamw = Manifest::builtin().adamw;

@@ -191,6 +191,8 @@ fn training_trajectories_identical_across_planners() {
                 backend: BackendChoice::Native,
                 planner,
                 planner_state: None,
+                simd: Default::default(),
+                layout: Default::default(),
                 faults: fusesampleagg::runtime::faults::none(),
             };
             let mut tr = Trainer::new(&rt, cache, cfg).unwrap();

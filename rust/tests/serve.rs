@@ -47,6 +47,8 @@ fn tiny_cfg(threads: usize, seed: u64) -> TrainConfig {
         backend: BackendChoice::Native,
         planner: Default::default(),
         planner_state: None,
+        simd: Default::default(),
+        layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
     }
 }

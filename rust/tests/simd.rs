@@ -1,0 +1,219 @@
+//! SIMD-tier suite — pins the vector fold's bitwise contract.
+//!
+//! The native fused kernel carries lanes across the *feature* dimension,
+//! so the per-element sequence of f32 operations is identical in the
+//! scalar and vector tiers: outputs must be **bitwise equal**, not just
+//! close. This suite pins that contract along every axis that could
+//! break it:
+//!
+//! 1. **Scalar vs vector parity** at depths 1/2/3, threads 1/4/8, and
+//!    both dtypes (f32 and bf16/AMP).
+//! 2. **Remainder widths**: d = 7 / 63 / 65 exercise the sub-lane head
+//!    (d < LANES), the full-chunks-minus-one tail, and the
+//!    one-past-a-chunk tail of the 8-lane fold.
+//! 3. **Feature-layout invariance**: the degree-descending physical
+//!    permutation is an index-map change only — agg/saved/pairs are
+//!    bitwise identical to the natural layout.
+//! 4. **Feature-tile invariance**: `set_d_tile` only re-chunks the
+//!    feature dimension; any width gives bitwise-identical outputs.
+//! 5. **Engine-level layout invariance**: a `NativeBackend` configured
+//!    with `--layout degree` reproduces the natural layout's losses and
+//!    eval logits bitwise, f32 and bf16.
+
+use std::sync::Arc;
+
+use fusesampleagg::fanout::Fanouts;
+use fusesampleagg::gen::{builtin_spec, Dataset, DatasetSpec, DegreeLaw};
+use fusesampleagg::graph::{CostModel, PlannerChoice};
+use fusesampleagg::kernel::{fused, set_d_tile, FeatureLayout, Features,
+                            NativeBackend, NativeConfig, SimdChoice};
+use fusesampleagg::memory::MemoryMeter;
+use fusesampleagg::rng::{mix, SplitMix64};
+use fusesampleagg::runtime::{Backend, Manifest, StepInputs};
+
+fn tiny() -> Dataset {
+    Dataset::generate(builtin_spec("tiny").unwrap()).unwrap()
+}
+
+fn seeds_for(ds: &Dataset, count: usize, rng_seed: u64) -> Vec<i32> {
+    let mut r = SplitMix64::new(rng_seed);
+    (0..count).map(|_| r.next_below(ds.spec.n as u64) as i32).collect()
+}
+
+/// Scalar and vector tiers are bitwise identical at depths 1/2/3,
+/// threads 1/4/8, both dtypes.
+#[test]
+fn scalar_and_vector_tiers_bitwise_identical() {
+    let ds = tiny();
+    let seeds = seeds_for(&ds, 256, 9);
+    for amp in [false, true] {
+        let feat = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, amp);
+        for fo in [Fanouts::of(&[5]), Fanouts::of(&[5, 3]),
+                   Fanouts::of(&[4, 3, 2])] {
+            let model = CostModel::new(&ds.graph, &fo, PlannerChoice::default());
+            let scalar = fused::fused_khop_simd(
+                &ds.graph, &feat, &seeds, &fo, 77, true, 1, &model, false);
+            for threads in [1usize, 4, 8] {
+                for simd_on in [false, true] {
+                    let out = fused::fused_khop_simd(
+                        &ds.graph, &feat, &seeds, &fo, 77, true, threads,
+                        &model, simd_on);
+                    assert_eq!(out.agg, scalar.agg,
+                               "{fo} amp={amp} t={threads} simd={simd_on}: \
+                                agg diverged from scalar tier");
+                    assert_eq!(out.saved, scalar.saved,
+                               "{fo} amp={amp} t={threads} simd={simd_on}: \
+                                saved indices diverged");
+                    assert_eq!(out.pairs, scalar.pairs);
+                }
+            }
+        }
+    }
+}
+
+/// Remainder feature widths (d = 7, 63, 65) hit the head/tail paths of
+/// the 8-lane fold; parity must hold there too, both dtypes.
+#[test]
+fn remainder_feature_widths_stay_bitwise() {
+    for (i, d) in [7usize, 63, 65].into_iter().enumerate() {
+        let spec = DatasetSpec {
+            name: format!("simd_rem_d{d}"),
+            stands_for: "SIMD remainder-width fixture".into(),
+            n: 256,
+            e_cap: 4096,
+            avg_deg: 6,
+            degree_law: DegreeLaw::Uniform,
+            d,
+            c: 4,
+            gen_seed: 2000 + i as u64,
+        };
+        let ds = Dataset::generate(spec).unwrap();
+        let seeds = seeds_for(&ds, 128, 31);
+        let fo = Fanouts::of(&[5, 3]);
+        let model = CostModel::new(&ds.graph, &fo, PlannerChoice::default());
+        for amp in [false, true] {
+            let feat = Features::from_f32(&ds.features, ds.spec.n, d, amp);
+            let scalar = fused::fused_khop_simd(
+                &ds.graph, &feat, &seeds, &fo, 5, true, 1, &model, false);
+            for threads in [1usize, 4] {
+                let vect = fused::fused_khop_simd(
+                    &ds.graph, &feat, &seeds, &fo, 5, true, threads, &model,
+                    true);
+                assert_eq!(vect.agg, scalar.agg,
+                           "d={d} amp={amp} t={threads}: remainder fold \
+                            diverged");
+                assert_eq!(vect.saved, scalar.saved);
+                assert_eq!(vect.pairs, scalar.pairs);
+            }
+        }
+    }
+}
+
+/// The degree-descending storage permutation changes only where rows
+/// live; kernel outputs stay bitwise identical in both tiers.
+#[test]
+fn feature_permutation_is_output_invariant() {
+    let ds = tiny();
+    let seeds = seeds_for(&ds, 200, 17);
+    let fo = Fanouts::of(&[5, 3]);
+    let model = CostModel::new(&ds.graph, &fo, PlannerChoice::default());
+    for amp in [false, true] {
+        let natural = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d,
+                                         amp);
+        let mut permuted =
+            Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, amp);
+        permuted.permute_by_degree(&ds.graph);
+        let reference = fused::fused_khop_simd(
+            &ds.graph, &natural, &seeds, &fo, 11, true, 1, &model, false);
+        for threads in [1usize, 8] {
+            for simd_on in [false, true] {
+                let out = fused::fused_khop_simd(
+                    &ds.graph, &permuted, &seeds, &fo, 11, true, threads,
+                    &model, simd_on);
+                assert_eq!(out.agg, reference.agg,
+                           "amp={amp} t={threads} simd={simd_on}: layout \
+                            pass changed the aggregate");
+                assert_eq!(out.saved, reference.saved,
+                           "amp={amp} t={threads} simd={simd_on}: layout \
+                            pass leaked into saved node IDs");
+                assert_eq!(out.pairs, reference.pairs);
+            }
+        }
+    }
+}
+
+/// Any feature-tile width gives bitwise-identical outputs — the tile
+/// only chunks the feature dimension, never reorders accumulation.
+#[test]
+fn feature_tile_width_is_output_invariant() {
+    let ds = tiny();
+    let seeds = seeds_for(&ds, 128, 23);
+    let fo = Fanouts::of(&[4, 3, 2]);
+    let model = CostModel::new(&ds.graph, &fo, PlannerChoice::default());
+    let feat = Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, true);
+    set_d_tile(0); // auto-detected width
+    let reference = fused::fused_khop_simd(
+        &ds.graph, &feat, &seeds, &fo, 3, true, 1, &model, true);
+    for tile in [8usize, 64, 1024] {
+        set_d_tile(tile);
+        for simd_on in [false, true] {
+            let out = fused::fused_khop_simd(
+                &ds.graph, &feat, &seeds, &fo, 3, true, 4, &model, simd_on);
+            assert_eq!(out.agg, reference.agg,
+                       "d_tile={tile} simd={simd_on}: tile width changed \
+                        the output");
+            assert_eq!(out.saved, reference.saved);
+        }
+    }
+    set_d_tile(0); // restore auto for the rest of the binary
+}
+
+/// A `NativeBackend` running the degree layout reproduces the natural
+/// layout's training losses and eval logits bitwise.
+#[test]
+fn engine_degree_layout_is_loss_and_eval_invariant() {
+    let ds = Arc::new(tiny());
+    let cfg = |amp: bool, layout: FeatureLayout| NativeConfig {
+        fused: true,
+        fanouts: Fanouts::of(&[5, 3]),
+        amp,
+        save_indices: true,
+        seed: 42,
+        threads: 2,
+        planner: Default::default(),
+        hidden: 32,
+        simd: SimdChoice::Auto,
+        layout,
+        faults: fusesampleagg::runtime::faults::none(),
+    };
+    let adamw = Manifest::builtin().adamw;
+    for amp in [false, true] {
+        let mut nat = NativeBackend::new(ds.clone(),
+                                         cfg(amp, FeatureLayout::Natural),
+                                         adamw).unwrap();
+        let mut deg = NativeBackend::new(ds.clone(),
+                                         cfg(amp, FeatureLayout::DegreeDesc),
+                                         adamw).unwrap();
+        for step in 0..4usize {
+            let mut r = SplitMix64::new(mix(step as u64));
+            let seeds: Vec<i32> = (0..64)
+                .map(|_| r.next_below(ds.spec.n as u64) as i32).collect();
+            let labels: Vec<i32> =
+                seeds.iter().map(|&u| ds.labels[u as usize]).collect();
+            let inp = StepInputs { seeds: &seeds, labels: &labels,
+                                   base: mix(1000 + step as u64),
+                                   block: None };
+            let mut m1 = MemoryMeter::new();
+            let mut m2 = MemoryMeter::new();
+            let a = nat.train_step(step, &inp, &mut m1).unwrap();
+            let b = deg.train_step(step, &inp, &mut m2).unwrap();
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(),
+                       "amp={amp} step {step}: degree layout changed the \
+                        loss ({} vs {})", a.loss, b.loss);
+        }
+        let eval_seeds: Vec<i32> = (0..64).collect();
+        let ln = nat.eval_logits(&eval_seeds, 99).unwrap().unwrap();
+        let ld = deg.eval_logits(&eval_seeds, 99).unwrap().unwrap();
+        assert_eq!(ln, ld, "amp={amp}: degree layout changed eval logits");
+    }
+}
