@@ -38,6 +38,7 @@ fn losses(rt: &Runtime, cache: &mut DatasetCache, seed: u64,
         simd: Default::default(),
         layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     };
     let mut trainer = Trainer::new(rt, cache, cfg)?;
     (0..steps).map(|_| Ok(trainer.step()?.loss)).collect()

@@ -67,6 +67,7 @@ fn main() -> Result<()> {
                     simd: Default::default(),
                     layout: Default::default(),
                     faults: fusesampleagg::runtime::faults::none(),
+                    hub_cache: None,
                 };
                 Ok(run_config(&rt, &mut cache, cfg, 1, 5)?
                     .peak_transient_bytes)

@@ -37,6 +37,7 @@ fn main() -> Result<()> {
         simd: Default::default(),
         layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     };
 
     // 3. train for 40 steps
@@ -60,6 +61,7 @@ fn main() -> Result<()> {
     // 4. the baseline pipeline, same seeds, same neighborhoods
     let mut baseline = Trainer::new(&rt, &mut cache, TrainConfig {
         variant: Variant::Dgl,
+        hub_cache: None,
         ..cfg
     })?;
     let mut base_ms = Vec::new();

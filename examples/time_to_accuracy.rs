@@ -33,6 +33,7 @@ fn run(rt: &Runtime, cache: &mut DatasetCache, variant: Variant,
         simd: Default::default(),
         layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     };
     let mut tr = Trainer::new(rt, cache, cfg)?;
     let timer = Timer::start();

@@ -62,6 +62,7 @@ fn main() -> Result<()> {
         simd: Default::default(),
         layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     };
     let total = Timer::start();
     let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;

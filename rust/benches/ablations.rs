@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
                 simd: Default::default(),
                 layout: Default::default(),
                 faults: fusesampleagg::runtime::faults::none(),
+                hub_cache: None,
             };
             let r = run(&mut cache, cfg)?;
             let _ = writeln!(out, "  amp={:<5} {:<4}: {:>8.2} ms/step", amp,
@@ -75,6 +76,7 @@ fn main() -> anyhow::Result<()> {
                     simd: Default::default(),
                     layout: Default::default(),
                     faults: fusesampleagg::runtime::faults::none(),
+                    hub_cache: None,
                 };
                 let r = run(&mut cache, cfg)?;
                 let _ = writeln!(out, "  {:<13} {}-hop {:<4}: {:>8.2} ms/step \
@@ -101,6 +103,7 @@ fn main() -> anyhow::Result<()> {
             simd: Default::default(),
             layout: Default::default(),
             faults: fusesampleagg::runtime::faults::none(),
+            hub_cache: None,
         };
         let r = run(&mut cache, cfg)?;
         let _ = writeln!(out, "  save_indices={:<5}: {:>8.2} ms/step \
@@ -133,6 +136,7 @@ fn main() -> anyhow::Result<()> {
                 simd: Default::default(),
                 layout: Default::default(),
                 faults: fusesampleagg::runtime::faults::none(),
+                hub_cache: None,
             };
             let mut tr = Trainer::new_named(rt2, &mut cache, cfg, artifact)?;
             let timings = measure(&mut tr, warmup, steps)?;

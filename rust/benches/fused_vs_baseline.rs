@@ -11,14 +11,19 @@
 //! `BENCH_native.json` at the repo root. A final simd on/off A/B at the
 //! paper's main cell records the native vector-tier speedup
 //! (`simd_speedup` at the JSON root; outputs are bitwise identical, only
-//! step time moves). Scale down with FSA_BENCH_QUICK=1 /
-//! FSA_BENCH_STEPS / FSA_BENCH_SEEDS.
+//! step time moves), and a hub-cache on/off A/B over the serve path on
+//! the Zipf-skewed `zipf_serve` fixture (plus a uniform-law neutrality
+//! cell on `tiny`) records `hub_cache_speedup` /
+//! `hub_cache_uniform_ratio` the same way. Scale down with
+//! FSA_BENCH_QUICK=1 / FSA_BENCH_STEPS / FSA_BENCH_SEEDS.
 
 use fusesampleagg::bench::{self, env_overrides, save_exhibit, Grid};
 use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Variant};
+use fusesampleagg::engine::Engine;
 use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::json::Value;
 use fusesampleagg::kernel::SimdChoice;
+use fusesampleagg::rng::{mix, SplitMix64};
 use fusesampleagg::runtime::{BackendChoice, Runtime};
 use fusesampleagg::util;
 
@@ -66,6 +71,7 @@ fn main() -> anyhow::Result<()> {
         faults: fusesampleagg::runtime::faults::none(),
         simd,
         layout: Default::default(),
+        hub_cache: None,
     };
     eprintln!("  simd A/B: products_sim f15x10 b1024 fused, scalar tier...");
     let off = bench::run_config(&rt, &mut cache, ab_cfg(SimdChoice::Off),
@@ -77,11 +83,37 @@ fn main() -> anyhow::Result<()> {
     eprintln!("  simd A/B: off {:.2} ms, on {:.2} ms ({simd_speedup:.2}x)",
               off.step_ms, on.step_ms);
 
+    // hub-cache A/B on the serve/eval path: zipf_serve's degree law puts
+    // roughly half of all leaf gather traffic on a few hundred hub
+    // nodes, so caching their innermost-hop partial means should beat
+    // the cache-off engine by a clear margin at depth 3; tiny's uniform
+    // law selects zero hubs, so the same A/B there is the neutrality
+    // guard (ratio ~1.0). Logits are asserted bitwise identical inside
+    // hub_ab before any timing is recorded.
+    let passes = if std::env::var("FSA_BENCH_QUICK").is_ok() { 2 } else { 6 };
+    eprintln!("  hub-cache A/B: zipf_serve f15x10x5 serve path \
+               (budget 512)...");
+    let (z_off, z_on) = hub_ab(&rt, &mut cache, &grid, "zipf_serve", 512,
+                               passes)?;
+    let hub_speedup = z_off / z_on.max(1e-9);
+    eprintln!("  hub-cache A/B: off {z_off:.1} ms, on {z_on:.1} ms \
+               ({hub_speedup:.2}x)");
+    eprintln!("  hub-cache A/B: tiny (uniform, no hubs) neutrality...");
+    let (t_off, t_on) = hub_ab(&rt, &mut cache, &grid, "tiny", 512, passes)?;
+    let hub_uniform = t_off / t_on.max(1e-9);
+    eprintln!("  hub-cache A/B: tiny off {t_off:.1} ms, on {t_on:.1} ms \
+               (ratio {hub_uniform:.2})");
+
     let mut json = bench::native_bench_json(&rows, grid.planner, grid.simd);
     if let Value::Obj(root) = &mut json {
         root.insert("simd_off_step_ms".into(), Value::Num(off.step_ms));
         root.insert("simd_on_step_ms".into(), Value::Num(on.step_ms));
         root.insert("simd_speedup".into(), Value::Num(simd_speedup));
+        root.insert("hub_cache_off_ms".into(), Value::Num(z_off));
+        root.insert("hub_cache_on_ms".into(), Value::Num(z_on));
+        root.insert("hub_cache_speedup".into(), Value::Num(hub_speedup));
+        root.insert("hub_cache_uniform_ratio".into(),
+                    Value::Num(hub_uniform));
     }
     let repo = util::find_repo_root()
         .unwrap_or_else(|| std::path::PathBuf::from("."));
@@ -118,7 +150,74 @@ fn main() -> anyhow::Result<()> {
          outputs):\n  scalar tier {:.2} ms/step, vector tier {:.2} ms/step \
          -> {:.2}x\n",
         off.step_ms, on.step_ms, simd_speedup));
+    out.push_str(&format!(
+        "\nhub-cache A/B (serve path, f15x10x5, budget 512, \
+         bitwise-identical logits):\n  zipf_serve: off {z_off:.1} ms, \
+         on {z_on:.1} ms -> {hub_speedup:.2}x\n  tiny (uniform, 0 hubs): \
+         off {t_off:.1} ms, on {t_on:.1} ms -> ratio {hub_uniform:.2} \
+         (neutrality)\n"));
     save_exhibit("fused_vs_baseline", &out);
     println!("wrote {}", repo.join("BENCH_native.json").display());
     Ok(())
+}
+
+/// Serve-path hub-cache A/B on `dataset`: the same deterministic request
+/// stream (32 requests x 64 seeds, SplitMix64-drawn) through a cache-off
+/// engine and a cache-on engine with the given refresh `budget`, fanout
+/// 15x10x5. The first pass checks every logit bitwise (a hit must replay
+/// the exact RNG draw) and pays the cache's refresh builds; the timed
+/// `passes` that follow measure steady-state serving. Returns
+/// `(off_ms, on_ms)` total forward wall time.
+fn hub_ab(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
+          dataset: &str, budget: usize, passes: usize)
+          -> anyhow::Result<(f64, f64)> {
+    let cfg = |hub_cache| TrainConfig {
+        variant: Variant::Fsa,
+        dataset: dataset.into(),
+        fanouts: Fanouts::of(&[15, 10, 5]),
+        batch: 64,
+        amp: grid.amp,
+        save_indices: false,
+        seed: 42,
+        threads: 1,
+        prefetch: false,
+        backend: BackendChoice::Native,
+        planner: grid.planner,
+        planner_state: None,
+        faults: fusesampleagg::runtime::faults::none(),
+        simd: grid.simd,
+        layout: Default::default(),
+        hub_cache,
+    };
+    let mut eng_off = Engine::new(rt, cache, cfg(None))?;
+    let mut eng_on = Engine::new(rt, cache, cfg(Some(budget)))?;
+    let n = eng_off.ds.spec.n as u64;
+    let mut rng = SplitMix64::new(mix(42 ^ 0x4B5));
+    let requests: Vec<Vec<i32>> = (0..32)
+        .map(|_| (0..64).map(|_| rng.next_below(n) as i32).collect())
+        .collect();
+    for req in &requests {
+        let a = eng_off.infer(req)?;
+        let b = eng_on.infer(req)?;
+        anyhow::ensure!(
+            a.len() == b.len()
+                && a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "hub-cache on/off logits diverged on {dataset} — the cache \
+             must be bitwise-invisible");
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..passes {
+        for req in &requests {
+            eng_off.infer(req)?;
+        }
+    }
+    let off_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = std::time::Instant::now();
+    for _ in 0..passes {
+        for req in &requests {
+            eng_on.infer(req)?;
+        }
+    }
+    let on_ms = t1.elapsed().as_secs_f64() * 1e3;
+    Ok((off_ms, on_ms))
 }

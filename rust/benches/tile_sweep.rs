@@ -47,6 +47,7 @@ fn cell_cfg(backend: BackendChoice) -> TrainConfig {
         simd: SimdChoice::Auto,
         layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     }
 }
 

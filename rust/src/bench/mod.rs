@@ -49,6 +49,10 @@ pub struct Grid {
     pub simd: SimdChoice,
     /// Feature-row storage order for every cell (`--layout`).
     pub layout: FeatureLayout,
+    /// Hub-aggregate cache refresh budget for every cell
+    /// (`--hub-cache off|N`; None = off, the grid default). Outputs
+    /// are bitwise identical either way — only step time moves.
+    pub hub_cache: Option<usize>,
 }
 
 impl Default for Grid {
@@ -71,6 +75,7 @@ impl Default for Grid {
             planner_state: None,
             simd: SimdChoice::default(),
             layout: FeatureLayout::default(),
+            hub_cache: None,
         }
     }
 }
@@ -175,6 +180,17 @@ pub fn run_config(rt: &Runtime, cache: &mut DatasetCache, cfg: TrainConfig,
     let loss = timings.last().map(|t| t.loss).unwrap_or(f64::NAN);
     let imbalance =
         median(&timings.iter().map(|t| t.imbalance).collect::<Vec<_>>());
+    // hub-cache activity totals over the timed window (all zero when
+    // `--hub-cache off`: no lookups happen at all, so the rate is 0.0)
+    let hub_hits: u64 = timings.iter().map(|t| t.hub_hits).sum();
+    let hub_lookups: u64 =
+        hub_hits + timings.iter().map(|t| t.hub_misses).sum::<u64>();
+    let hub_hit_rate = if hub_lookups == 0 {
+        0.0
+    } else {
+        hub_hits as f64 / hub_lookups as f64
+    };
+    let hub_refreshes: u64 = timings.iter().map(|t| t.hub_refreshes).sum();
 
     Ok(BenchRow {
         dataset: cfg.dataset.clone(),
@@ -196,6 +212,8 @@ pub fn run_config(rt: &Runtime, cache: &mut DatasetCache, cfg: TrainConfig,
         imbalance,
         planner: cfg.planner.as_str().to_string(),
         simd: if cfg.simd.enabled() { "on" } else { "off" }.to_string(),
+        hub_hit_rate,
+        hub_refreshes,
     })
 }
 
@@ -224,6 +242,7 @@ pub fn run_grid(rt: &Runtime, cache: &mut DatasetCache, grid: &Grid,
                             faults: crate::runtime::faults::none(),
                             simd: grid.simd,
                             layout: grid.layout,
+                            hub_cache: grid.hub_cache,
                         };
                         let row = run_config(rt, cache, cfg, grid.warmup,
                                              grid.steps)?;
@@ -281,6 +300,9 @@ pub fn native_bench_json(rows: &[BenchRow], planner: PlannerChoice,
             // per-depth measured shard-imbalance ratio of the fused
             // kernel's batch sharding (1.0 = balanced or serial)
             obj.insert("imbalance".into(), num(f.imbalance));
+            // hub-cache hit rate over the timed window (0.0 when off)
+            obj.insert("hub_hit_rate".into(), num(f.hub_hit_rate));
+            obj.insert("hub_refreshes".into(), num(f.hub_refreshes as f64));
         }
         if let Some(d) = &dgl {
             obj.insert("baseline_step_ms".into(), num(d.step_ms));
@@ -380,6 +402,8 @@ mod tests {
             imbalance: 1.1,
             planner: "quantile".into(),
             simd: "on".into(),
+            hub_hit_rate: 0.0,
+            hub_refreshes: 0,
         }
     }
 

@@ -71,6 +71,9 @@ pub struct ThroughputConfig {
     pub simd: SimdChoice,
     /// Feature-row storage order (`--layout`; bitwise-invariant).
     pub layout: FeatureLayout,
+    /// Hub-aggregate cache refresh budget (`--hub-cache off|N`;
+    /// bitwise-invariant, native fused dispatch only).
+    pub hub_cache: Option<usize>,
 }
 
 impl ThroughputConfig {
@@ -95,6 +98,7 @@ impl ThroughputConfig {
             planner: PlannerChoice::default(),
             simd: SimdChoice::default(),
             layout: FeatureLayout::default(),
+            hub_cache: None,
         }
     }
 
@@ -121,6 +125,7 @@ impl ThroughputConfig {
             faults: crate::runtime::faults::none(),
             simd: self.simd,
             layout: self.layout,
+            hub_cache: self.hub_cache,
         }
     }
 }
@@ -166,10 +171,12 @@ pub fn run_throughput(ds: Arc<Dataset>,
     let mut dispatched: Vec<f64> = Vec::with_capacity(cfg.steps);
     let mut imbalances: Vec<f64> = Vec::with_capacity(cfg.steps);
     let mut wall = Timer::start();
+    let mut hub_start = None;
 
     for step in 0..cfg.warmup + cfg.steps {
         if step == cfg.warmup {
             wall = Timer::start(); // timed window begins
+            hub_start = engine.as_ref().and_then(|e| e.hub_counters());
         }
         let step_timer = Timer::start();
         let prepared = match prefetcher.as_mut() {
@@ -241,6 +248,21 @@ pub fn run_throughput(ds: Arc<Dataset>,
         0.0
     };
 
+    // hub-cache activity over the timed window (0.0/0 when off)
+    let hub_end = engine.as_ref().and_then(|e| e.hub_counters());
+    let (hub_hit_rate, hub_refreshes) = match (hub_start, hub_end) {
+        (Some((h0, m0, r0)), Some((h1, m1, r1))) => {
+            let lookups = (h1 - h0) + (m1 - m0);
+            let rate = if lookups == 0 {
+                0.0
+            } else {
+                (h1 - h0) as f64 / lookups as f64
+            };
+            (rate, r1 - r0)
+        }
+        _ => (0.0, 0),
+    };
+
     Ok(ThroughputRow {
         dataset: cfg.dataset.clone(),
         hops: cfg.fanouts.depth() as u32,
@@ -261,6 +283,8 @@ pub fn run_throughput(ds: Arc<Dataset>,
         utilization,
         imbalance: summarize(&imbalances).median,
         planner: cfg.planner.as_str().to_string(),
+        hub_hit_rate,
+        hub_refreshes,
     })
 }
 

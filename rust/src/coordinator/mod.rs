@@ -119,6 +119,11 @@ pub struct TrainConfig {
     /// node IDs, RNG draws, saved indices, and planner costs are
     /// untouched, so outputs are bitwise identical.
     pub layout: FeatureLayout,
+    /// Hub-aggregate cache refresh budget (`--hub-cache off|N`):
+    /// `None` = off, `Some(n)` = cache leaf-hop hub aggregates and
+    /// refresh at most `n` entries per seed epoch. Outputs are bitwise
+    /// identical either way — only gather time moves.
+    pub hub_cache: Option<usize>,
 }
 
 impl TrainConfig {
@@ -157,6 +162,7 @@ impl TrainConfig {
             hidden,
             simd: self.simd,
             layout: self.layout,
+            hub_cache: self.hub_cache,
         }
     }
 }
@@ -193,6 +199,14 @@ pub struct StepTiming {
     /// when the native engine sharded, else the sampler's block shards.
     /// 1.0 = balanced or serial.
     pub imbalance: f64,
+    /// Hub-cache leaf-hop lookups served from the cache this step
+    /// (0 when `--hub-cache off`).
+    pub hub_hits: u64,
+    /// Leaf-hop lookups the cache could not serve (non-hub nodes,
+    /// evicted or not-yet-refreshed entries; 0 when off).
+    pub hub_misses: u64,
+    /// Cache entries (re)built by this step's refresh budget pre-pass.
+    pub hub_refreshes: u64,
 }
 
 impl StepTiming {

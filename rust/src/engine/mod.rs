@@ -378,6 +378,9 @@ impl<'rt> Engine<'rt> {
             .map(|s| s.imbalance())
             .or(prepared.sample_imbalance)
             .unwrap_or(1.0);
+        t.hub_hits = out.hub_hits;
+        t.hub_misses = out.hub_misses;
+        t.hub_refreshes = out.hub_refreshes;
         t.transient_bytes = self.meter.peak();
         self.meter.reset_peak();
         self.meter.reset_step();
@@ -458,6 +461,14 @@ impl<'rt> Engine<'rt> {
     /// (None when it ran serially or on a backend that does not shard).
     pub fn infer_imbalance(&self) -> Option<f64> {
         self.backend.eval_imbalance()
+    }
+
+    /// Cumulative hub-cache `(hits, misses, refreshes)` counters since
+    /// backend construction (`None` when `--hub-cache off` or the
+    /// backend has no cache). Snapshot before/after a window and
+    /// difference for per-window activity.
+    pub fn hub_counters(&self) -> Option<(u64, u64, u64)> {
+        self.backend.hub_counters()
     }
 
     /// Validation accuracy: the depth-matched eval forward at the

@@ -36,6 +36,13 @@ pub enum DegreeLaw {
     Uniform,
     PowerLaw,
     Hubs,
+    /// Zipf-skewed *target* popularity: out-degrees are uniform but edge
+    /// targets concentrate on low node ids with an inverse-square draw,
+    /// so a handful of hubs absorbs most of the traffic. Built for the
+    /// `zipf_serve` fixture; unlike the legacy laws, self-loop draws are
+    /// redrawn (not dropped), so realized directed edge counts equal the
+    /// out-degree spec exactly.
+    Zipf,
 }
 
 impl DegreeLaw {
@@ -44,6 +51,7 @@ impl DegreeLaw {
             "uniform" => DegreeLaw::Uniform,
             "powerlaw" => DegreeLaw::PowerLaw,
             "hubs" => DegreeLaw::Hubs,
+            "zipf" => DegreeLaw::Zipf,
             other => bail!("unknown degree law {other:?}"),
         })
     }
@@ -105,7 +113,7 @@ impl Dataset {
 fn out_degree(spec: &DatasetSpec, rng: &mut SplitMix64, node: usize) -> usize {
     let half = (spec.avg_deg / 2).max(1);
     match spec.degree_law {
-        DegreeLaw::Uniform => half,
+        DegreeLaw::Uniform | DegreeLaw::Zipf => half,
         DegreeLaw::PowerLaw => {
             // Pareto(alpha=2.5) weight, clamped; mean ~ alpha/(alpha-1) = 1.67
             let u = rng.next_f64().max(1e-12);
@@ -123,6 +131,16 @@ fn out_degree(spec: &DatasetSpec, rng: &mut SplitMix64, node: usize) -> usize {
 }
 
 fn generate_graph(spec: &DatasetSpec) -> Result<Csr> {
+    let edges = draw_edges(spec);
+    Csr::from_edges(spec.n, &edges, spec.e_cap, /*symmetrize=*/ true)
+}
+
+/// The realized directed edge list before CSR construction (symmetrize +
+/// dedup). Split out of [`generate_graph`] so tests can pin the realized
+/// counts: legacy laws silently drop self-loop draws (so counts drift
+/// below the out-degree spec — frozen behavior, goldens depend on it);
+/// the Zipf law redraws and its count equals the spec exactly.
+fn draw_edges(spec: &DatasetSpec) -> Vec<(u32, u32)> {
     let mut rng = SplitMix64::new(spec.gen_seed);
     let n = spec.n;
     let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * spec.avg_deg / 2);
@@ -134,6 +152,31 @@ fn generate_graph(spec: &DatasetSpec) -> Result<Csr> {
     for u in 0..n {
         let du = out_degree(spec, &mut rng, u);
         for _ in 0..du {
+            if spec.degree_law == DegreeLaw::Zipf {
+                // inverse-square skewed target: P(v < x) = 1 - 1/sqrt(x),
+                // concentrating traffic on the low-id hubs. Self-loop
+                // draws are REDRAWN (bounded), not dropped, so the
+                // realized directed edge count equals the out-degree
+                // spec exactly — the legacy laws below keep their
+                // drop-on-self-loop behavior (and their RNG streams)
+                // untouched so existing goldens stay bitwise.
+                let mut v = u as u32;
+                for _ in 0..64 {
+                    let r = rng.next_f64().min(1.0 - 1e-12);
+                    let z = (1.0 / (1.0 - r)).powi(2) - 1.0;
+                    v = (z as usize).min(n - 1) as u32;
+                    if v as usize != u {
+                        break;
+                    }
+                }
+                if v as usize == u {
+                    v = ((u + 1) % n) as u32;
+                }
+                edges.push((u as u32, v));
+                endpoints.push(v);
+                endpoints.push(u as u32);
+                continue;
+            }
             let local = rng.next_f64() < LOCAL_EDGE_FRACTION;
             let v = if local {
                 let w = LOCAL_WINDOW.min(n - 1) as u64;
@@ -153,7 +196,7 @@ fn generate_graph(spec: &DatasetSpec) -> Result<Csr> {
             }
         }
     }
-    Csr::from_edges(n, &edges, spec.e_cap, /*symmetrize=*/ true)
+    edges
 }
 
 /// Labels by contiguous id blocks (communities); edges are locality-biased,
@@ -219,6 +262,11 @@ pub fn builtin_spec(name: &str) -> Result<DatasetSpec> {
                             3_400_000, 50, DegreeLaw::PowerLaw, 64, 47, 1003),
         "tiny" => s("tiny", "unit tests", 512, 8_192, 6,
                     DegreeLaw::Uniform, 16, 8, 1000),
+        // serving fixture with Zipf-skewed target popularity: a small
+        // hub set dominates gather traffic, the regime the hub-aggregate
+        // cache (`--hub-cache`) is built for
+        "zipf_serve" => s("zipf_serve", "zipf serving fixture", 16_384,
+                          320_000, 16, DegreeLaw::Zipf, 128, 32, 1009),
         other => bail!("unknown dataset {other:?}"),
     })
 }
@@ -307,6 +355,66 @@ mod tests {
 
     fn dist(x: &[f32], c: &[f64]) -> f64 {
         x.iter().zip(c).map(|(a, b)| (*a as f64 - b).powi(2)).sum()
+    }
+
+    /// Pin the realized drawn-edge counts of the legacy laws. Their
+    /// generators silently DROP self-loop draws (gen drift below the
+    /// out-degree spec) — frozen behavior: goldens and every seeded
+    /// artifact depend on these exact streams, so a future "fix" that
+    /// redraws instead must show up here, not as a silent golden shift.
+    /// (Laws that use `powf` are excluded: their draw counts depend on
+    /// libm rounding, so the pins would not be portable.)
+    #[test]
+    fn legacy_laws_pin_realized_edge_counts() {
+        // tiny (Uniform): 512 nodes x 3 targets = 1536 draws, 2 dropped
+        let spec = builtin_spec("tiny").unwrap();
+        let drawn = draw_edges(&spec);
+        assert_eq!(drawn.len(), 1534, "tiny realized edge count moved");
+        let targets: usize = 512 * 3;
+        assert_eq!(targets - drawn.len(), 2, "tiny self-loop drops moved");
+        // and the CSR that everything downstream sees is pinned too
+        let g = generate_graph(&spec).unwrap();
+        assert_eq!(g.num_edges(), 3064, "tiny CSR edge count moved");
+        // reddit_sim (Hubs): 714950 targets, 19 dropped
+        let spec = builtin_spec("reddit_sim").unwrap();
+        let drawn = draw_edges(&spec);
+        assert_eq!(drawn.len(), 714_931,
+                   "reddit_sim realized edge count moved");
+        assert_eq!(generate_graph(&spec).unwrap().num_edges(), 1_259_998,
+                   "reddit_sim CSR edge count moved");
+    }
+
+    /// The Zipf law redraws self-loop draws instead of dropping them, so
+    /// its realized directed edge count equals the out-degree spec
+    /// exactly — no drift, by construction.
+    #[test]
+    fn zipf_law_realizes_the_out_degree_spec_exactly() {
+        let spec = builtin_spec("zipf_serve").unwrap();
+        let half = (spec.avg_deg / 2).max(1);
+        let drawn = draw_edges(&spec);
+        assert_eq!(drawn.len(), spec.n * half,
+                   "zipf must redraw, never drop");
+        assert!(drawn.iter().all(|&(u, v)| u != v), "zipf self-loop");
+        // pinned CSR count (post symmetrize + dedup), well under cap
+        let g = generate_graph(&spec).unwrap();
+        assert_eq!(g.num_edges(), 192_546, "zipf CSR edge count moved");
+        assert!(g.num_edges() <= spec.e_cap);
+        // the skew the fixture exists for: the max-degree node absorbs
+        // a macroscopic slice of all edges
+        let stats = g.degree_stats();
+        assert!(stats.max as f64 > 0.05 * g.num_edges() as f64,
+                "zipf skew collapsed: max degree {}", stats.max);
+    }
+
+    #[test]
+    fn zipf_dataset_generates_and_validates() {
+        let ds = Dataset::generate(builtin_spec("zipf_serve").unwrap())
+            .unwrap();
+        ds.graph.validate().unwrap();
+        assert!(ds.graph.is_symmetric());
+        assert_eq!(ds.spec.n, 16_384);
+        assert_eq!(ds.features.len(), 16_384 * 128);
+        assert!(ds.labels.iter().all(|&l| (0..32).contains(&l)));
     }
 
     /// Shape statistics of the three main datasets respect their caps and

@@ -39,6 +39,7 @@ use crate::runtime::init_params;
 use crate::runtime::manifest::AdamwConfig;
 use crate::sampler;
 
+use super::hubcache::HubCache;
 use super::linalg::{add_bias, col_sum, matmul, matmul_a_bt, matmul_at_b, relu};
 use super::{adamw_update, baseline, dgl_param_specs, fsa_param_specs, fused,
             softmax_xent, FeatureLayout, Features, SimdChoice};
@@ -96,6 +97,13 @@ pub struct NativeConfig {
     /// every [`CostModel`] this engine plans through, so the kernel's
     /// and sampler's sharded passes consult one seam.
     pub faults: Arc<dyn FaultPlane>,
+    /// Hub-aggregate cache refresh budget (the `--hub-cache` knob;
+    /// `None` = off). `Some(n)` caches leaf-hop partial means for hub
+    /// nodes and recomputes at most `n` stale entries per pass — outputs
+    /// are bitwise identical either way, only gather time moves (see
+    /// [`super::hubcache`]). `FSA_HUB_CACHE=off|0|N` in the environment
+    /// overrides this without re-invoking.
+    pub hub_cache: Option<usize>,
 }
 
 /// Native CPU training engine; owns the model/optimizer state (and the
@@ -115,6 +123,9 @@ pub struct NativeBackend {
     /// Shard imbalance of the most recent `eval_logits` pass (None when
     /// it ran serially) — the serving bench reads it per micro-batch.
     last_eval_imbalance: Option<f64>,
+    /// Hub-aggregate cache (fused variant with `--hub-cache N` only).
+    /// Prepared serially before each pass, read-only during it.
+    hub: Option<HubCache>,
 }
 
 impl NativeBackend {
@@ -154,8 +165,47 @@ impl NativeBackend {
         let params = init_params(&specs, cfg.seed);
         let m = params.iter().map(|p| vec![0.0; p.len()]).collect();
         let v = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        // `FSA_HUB_CACHE=off|0` forces the cache off, `=N` forces budget
+        // N, anything else defers to the config (mirrors FSA_SIMD)
+        let budget = match std::env::var("FSA_HUB_CACHE") {
+            Ok(v) if v == "off" || v == "0" => None,
+            Ok(v) => match v.parse::<usize>() {
+                Ok(n) => Some(n),
+                Err(_) => cfg.hub_cache,
+            },
+            Err(_) => cfg.hub_cache,
+        };
+        // only the fused kernel has a leaf-hop gather to cache
+        let hub = budget
+            .filter(|_| cfg.fused)
+            .map(|n| HubCache::new(&ds.graph, n));
         Ok(NativeBackend { cfg, ds, feat, adamw, cost, params, m, v,
-                           last_eval_imbalance: None })
+                           last_eval_imbalance: None, hub })
+    }
+
+    /// Prepare the hub cache for a pass at `fanouts` under `base`: roll
+    /// the generation to this pass's `(base, leaf hop, leaf k)` triple
+    /// (deterministically evicting every stale entry) and spend the
+    /// refresh budget on the hottest missing hubs.
+    fn prepare_hub(&mut self, fanouts: &Fanouts, base: u64) {
+        if let Some(h) = self.hub.as_mut() {
+            let depth = fanouts.depth();
+            h.prepare(&self.ds.graph, &self.feat, base, (depth - 1) as u64,
+                      fanouts.k(depth - 1), self.cfg.simd.enabled());
+        }
+    }
+
+    /// The cache handle for a pass at `fanouts` under `base` — `None`
+    /// unless [`HubCache::prepare`] rolled it to exactly that
+    /// generation. Guards the pub [`NativeBackend::fsa_loss_grads`]
+    /// surface: a caller that skips the prepare gets a bypassed cache,
+    /// never stale aggregates.
+    fn hub_for(&self, fanouts: &Fanouts, base: u64) -> Option<&HubCache> {
+        let depth = fanouts.depth();
+        self.hub.as_ref().filter(|h| {
+            h.generation()
+                == Some((base, (depth - 1) as u64, fanouts.k(depth - 1)))
+        })
     }
 
     /// The engine's planner model (shared for feedback/persistence).
@@ -213,10 +263,11 @@ impl NativeBackend {
         // be. Planning uses a snapshot of the shared model so the kernel
         // never holds the session lock across the sharded pass.
         let cost = lock_model(&self.cost).clone();
-        let out = fused::fused_khop_simd(
+        let out = fused::fused_khop_cached(
             &self.ds.graph, &self.feat, seeds, &self.cfg.fanouts, base,
             self.cfg.save_indices, self.cfg.threads, &cost,
-            self.cfg.simd.enabled());
+            self.cfg.simd.enabled(),
+            self.hub_for(&self.cfg.fanouts, base));
         meter.alloc((b * d) as u64 * F32);
         if let Some(saved) = &out.saved {
             for s in saved {
@@ -280,6 +331,12 @@ impl Backend for NativeBackend {
         // per-step host tensors handed to the engine
         meter.alloc((2 * b) as u64 * I32 + 8);
 
+        // budgeted hub-cache refresh for this step's seed epoch, before
+        // the sharded pass (the pass reads the cache immutably)
+        let hub_before = self.hub.as_ref().map(|h| h.counters());
+        if self.cfg.fused {
+            self.prepare_hub(&self.cfg.fanouts.clone(), inp.base);
+        }
         let (loss, pairs, shard_stats) = if self.cfg.fused {
             let (loss, grads, pairs, stats) =
                 self.fsa_loss_grads(inp.seeds, inp.labels, inp.base, meter)?;
@@ -311,6 +368,14 @@ impl Backend for NativeBackend {
             (loss, None, None)
         };
 
+        // per-step cache counter deltas (zeros when the cache is off)
+        let (hub_hits, hub_misses, hub_refreshes) =
+            match (hub_before, self.hub.as_ref().map(|h| h.counters())) {
+                (Some((h0, m0, r0)), Some((h1, m1, r1))) => {
+                    (h1 - h0, m1 - m0, r1 - r0)
+                }
+                _ => (0, 0, 0),
+            };
         Ok(StepOutcome {
             loss,
             upload_ms: 0.0, // no device, nothing crosses a bus
@@ -318,6 +383,9 @@ impl Backend for NativeBackend {
             post_ms: 0.0,
             pairs,
             shard_stats,
+            hub_hits,
+            hub_misses,
+            hub_refreshes,
         })
     }
 
@@ -333,6 +401,12 @@ impl Backend for NativeBackend {
         // model's own depth (see [`eval_fanouts`]). At depth 2 this is
         // exactly the fixed f15x10 protocol of the AOT eval artifacts.
         let ef = eval_fanouts(self.cfg.fanouts.depth());
+        if self.cfg.fused {
+            // eval/serve shares one seed epoch (`base` is fixed per
+            // session), so entries refreshed here persist and get
+            // re-hit across subsequent requests.
+            self.prepare_hub(&ef, base);
+        }
         let logits = if self.cfg.fused {
             // eval fanouts differ from the training fanouts, so the
             // session's cost model does not apply — but the *flavor*
@@ -351,10 +425,11 @@ impl Backend for NativeBackend {
             if !weights.is_empty() {
                 model.warm_start(&weights, steps);
             }
-            let out = fused::fused_khop_simd(&self.ds.graph, &self.feat,
-                                             seeds, &ef, base, false,
-                                             self.cfg.threads, &model,
-                                             self.cfg.simd.enabled());
+            let out = fused::fused_khop_cached(&self.ds.graph, &self.feat,
+                                               seeds, &ef, base, false,
+                                               self.cfg.threads, &model,
+                                               self.cfg.simd.enabled(),
+                                               self.hub_for(&ef, base));
             self.last_eval_imbalance =
                 (!out.stats.is_empty()).then(|| out.stats.imbalance());
             lock_model(&self.cost).observe(&out.stats);
@@ -405,6 +480,10 @@ impl Backend for NativeBackend {
         self.last_eval_imbalance
     }
 
+    fn hub_counters(&self) -> Option<(u64, u64, u64)> {
+        self.hub.as_ref().map(|h| h.counters())
+    }
+
     fn opt_state_f32(&self) -> Option<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
         Some((self.m.clone(), self.v.clone()))
     }
@@ -450,6 +529,7 @@ mod tests {
             simd: SimdChoice::Auto,
             layout: FeatureLayout::Natural,
             faults: crate::runtime::faults::none(),
+            hub_cache: None,
         }
     }
 

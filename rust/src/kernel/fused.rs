@@ -38,6 +38,7 @@ use crate::metrics::Timer;
 use crate::runtime::faults::{Fault, FaultSite};
 use crate::sampler::sample_neighbors;
 
+use super::hubcache::HubCache;
 use super::{d_tile, resolve_threads, simd, Features, RowData, MIN_PAR_ROWS};
 
 /// Output of one fused L-hop aggregation.
@@ -101,8 +102,9 @@ fn valid_slice<'a>(row: &'a [i32], stage: &'a mut Vec<i32>) -> &'a [i32] {
 /// produce bitwise-identical output because every element sees the same
 /// add-per-neighbor-then-scale operation sequence.
 #[inline]
-fn accumulate_mean(feat: &Features, valid: &[i32], tile: &mut [f32],
-                   agg_row: &mut [f32], simd_on: bool) {
+pub(crate) fn accumulate_mean(feat: &Features, valid: &[i32],
+                              tile: &mut [f32], agg_row: &mut [f32],
+                              simd_on: bool) {
     if valid.is_empty() {
         return;
     }
@@ -173,21 +175,42 @@ fn fold_subtree(csr: &Csr, feat: &Features, node: i32, hop: u64,
                 ks: &[usize], kprod: &[usize], bi: usize, slot: usize,
                 base: u64, rows: &mut [Vec<i32>], accs: &mut [Vec<f32>],
                 saved: &mut [Option<&mut [i32]>], valid: &mut Vec<i32>,
-                tile: &mut [f32], simd_on: bool, out: &mut [f32],
+                tile: &mut [f32], simd_on: bool,
+                cache: Option<&HubCache>, out: &mut [f32],
                 pairs: &mut u64) {
     let k = ks[0];
     let (row, rows_rest) = rows.split_first_mut().unwrap();
     let (srow, saved_rest) = saved.split_first_mut().unwrap();
-    sample_neighbors(csr, node, k, base, hop, row);
-    if let Some(buf) = srow.as_deref_mut() {
-        let at = bi * kprod[0] + slot * k;
-        buf[at..at + k].copy_from_slice(row);
-    }
     if ks.len() == 1 {
+        // Leaf hop: a live hub-cache entry replays the stored draw into
+        // the saved tensor, the stored valid count into `pairs`, and the
+        // stored exactly-rounded partial mean into `out` — bitwise what
+        // the miss path below would have produced (see kernel::hubcache).
+        if let Some(e) = cache.and_then(|c| c.lookup(node)) {
+            if let Some(buf) = srow.as_deref_mut() {
+                let at = bi * kprod[0] + slot * k;
+                buf[at..at + k].copy_from_slice(&e.row);
+            }
+            *pairs += e.valid as u64;
+            for (o, &m) in out.iter_mut().zip(e.mean.iter()) {
+                *o += m;
+            }
+            return;
+        }
+        sample_neighbors(csr, node, k, base, hop, row);
+        if let Some(buf) = srow.as_deref_mut() {
+            let at = bi * kprod[0] + slot * k;
+            buf[at..at + k].copy_from_slice(row);
+        }
         let vs = valid_slice(row.as_slice(), valid);
         *pairs += vs.len() as u64;
         accumulate_mean(feat, vs, tile, out, simd_on);
         return;
+    }
+    sample_neighbors(csr, node, k, base, hop, row);
+    if let Some(buf) = srow.as_deref_mut() {
+        let at = bi * kprod[0] + slot * k;
+        buf[at..at + k].copy_from_slice(row);
     }
     let (acc, accs_rest) = accs.split_first_mut().unwrap();
     acc.fill(0.0);
@@ -201,7 +224,7 @@ fn fold_subtree(csr: &Csr, feat: &Features, node: i32, hop: u64,
         *pairs += 1;
         fold_subtree(csr, feat, child, hop + 1, &ks[1..], &kprod[1..], bi,
                      slot * k + i, base, rows_rest, accs_rest, saved_rest,
-                     valid, tile, simd_on, acc, pairs);
+                     valid, tile, simd_on, cache, acc, pairs);
     }
     let inv = 1.0 / eff.max(1) as f32;
     for (o, &a) in out.iter_mut().zip(acc.iter()) {
@@ -217,7 +240,7 @@ fn fold_subtree(csr: &Csr, feat: &Features, node: i32, hop: u64,
 fn run_rows(csr: &Csr, feat: &Features, seeds: &[i32], ks: &[usize],
             kprod: &[usize], base: u64, agg: &mut [f32],
             saved: &mut [Option<&mut [i32]>], pairs: &mut [u64],
-            simd_on: bool) {
+            simd_on: bool, cache: Option<&HubCache>) {
     let d = feat.d;
     let mut sc = Scratch::new(ks, d);
     for (bi, &r) in seeds.iter().enumerate() {
@@ -225,7 +248,7 @@ fn run_rows(csr: &Csr, feat: &Features, seeds: &[i32], ks: &[usize],
         let mut np = 0u64;
         fold_subtree(csr, feat, r, 0, ks, kprod, bi, 0, base, &mut sc.rows,
                      &mut sc.accs, saved, &mut sc.valid, &mut sc.tile,
-                     simd_on, agg_row, &mut np);
+                     simd_on, cache, agg_row, &mut np);
         pairs[bi] = np;
     }
 }
@@ -281,6 +304,24 @@ pub fn fused_khop_simd(csr: &Csr, feat: &Features, seeds: &[i32],
                        fanouts: &Fanouts, base: u64, save_indices: bool,
                        threads: usize, model: &CostModel, simd_on: bool)
                        -> FusedOut {
+    fused_khop_cached(csr, feat, seeds, fanouts, base, save_indices,
+                      threads, model, simd_on, None)
+}
+
+/// [`fused_khop_simd`] with an optional [`HubCache`]: leaf-hop calls on
+/// cached hub nodes replay the stored draw + partial mean instead of
+/// re-gathering. The cache is consulted read-only (shard workers share
+/// one `&HubCache`); the caller is responsible for having `prepare`d it
+/// for this pass's `(base, leaf hop, leaf k)` generation — entries from
+/// any other generation were already evicted there, so a stale replay is
+/// impossible by construction. With `cache` = `None` this *is*
+/// [`fused_khop_simd`], and every output is bitwise identical either way
+/// (pinned by `rust/tests/hubcache.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_khop_cached(csr: &Csr, feat: &Features, seeds: &[i32],
+                         fanouts: &Fanouts, base: u64, save_indices: bool,
+                         threads: usize, model: &CostModel, simd_on: bool,
+                         cache: Option<&HubCache>) -> FusedOut {
     let b = seeds.len();
     let d = feat.d;
     let ks = fanouts.as_slice();
@@ -302,7 +343,7 @@ pub fn fused_khop_simd(csr: &Csr, feat: &Features, seeds: &[i32],
         let workers = resolve_threads(threads).min((b / MIN_PAR_ROWS).max(1));
         if workers <= 1 {
             run_rows(csr, feat, seeds, ks, &kprod, base, &mut agg, &mut view,
-                     &mut pairs, simd_on);
+                     &mut pairs, simd_on, cache);
         } else {
             // cost model: expected row-adds of the whole nested subtree
             // below each seed (nominal flavor: full-fanout weights)
@@ -374,7 +415,7 @@ pub fn fused_khop_simd(csr: &Csr, feat: &Features, seeds: &[i32],
                                 }
                                 run_rows(csr, feat, seed_c, ks, kprod_ref,
                                          base, agg_c, &mut saved_c, pairs_c,
-                                         simd_on);
+                                         simd_on, cache);
                             }));
                         fail_c[0] = res.is_err();
                         ms_c[0] = clock.shard_ms(j, cost_j, t.ms());
@@ -408,7 +449,7 @@ pub fn fused_khop_simd(csr: &Csr, feat: &Features, seeds: &[i32],
                     .collect();
                 run_rows(csr, feat, &seeds[r.clone()], ks, &kprod, base,
                          &mut agg[r.start * d..r.end * d], &mut saved_c,
-                         &mut pairs[r.start..r.end], simd_on);
+                         &mut pairs[r.start..r.end], simd_on, cache);
             }
             stats = ShardStats::new(shard_ms, shard_cost);
         }

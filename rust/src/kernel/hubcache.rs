@@ -1,0 +1,335 @@
+//! Hub-aggregate cache — budgeted reuse of innermost-hop partial means
+//! on skewed graphs (the top ROADMAP item, grounded in the budgeted
+//! one-pass neighborhood-estimation paper, arxiv 2511.13645).
+//!
+//! On power-law graphs a tiny set of hub nodes dominates leaf-hop gather
+//! cost: every batch and every serve request re-draws and re-folds the
+//! same high-degree neighborhoods. This cache stores, per hub node, the
+//! leaf-hop sampled row *and* its folded partial mean, keyed by the
+//! generation triple `(base seed-epoch, leaf hop counter, leaf fanout)`.
+//! Because the counter RNG is stateless — `sample_neighbors(csr, node,
+//! k, base, hop)` is a pure function of exactly that triple plus the
+//! node — an entry is valid for every leaf-hop call of every kernel
+//! pass that shares the triple, and invalidation is deterministic: when
+//! the trainer advances its per-step base seed (or an eval pass switches
+//! to the fixed [`crate::engine::Engine::infer_base`] epoch), the triple
+//! changes and [`HubCache::prepare`] drops every stale entry at once.
+//!
+//! Bitwise contract (pinned by `rust/tests/hubcache.rs`): a cache hit
+//! replays `row` into the saved-index tensors, adds `valid` to the pair
+//! count, and adds `mean` to the seed accumulator. `mean` was produced
+//! by [`crate::kernel::fused::accumulate_mean`] into a *zeroed* buffer,
+//! so each element is exactly `round(acc * inv)` — the same
+//! mul-then-add value (deliberately no FMA, see `simd::scale_add`) the
+//! miss path would have folded in. Hits therefore change no output bit
+//! anywhere: aggregates, saved indices, pair counts, and the replayed
+//! backward all match cache-off exactly.
+//!
+//! Refresh budget (the 2511.13645 framing): [`HubCache::prepare`] runs
+//! serially *before* the sharded kernel pass and (re)computes at most
+//! `budget` missing entries per call, hottest hubs first — so per-step
+//! cache maintenance cost is bounded and a budget of 0 degenerates to
+//! cache-off behavior bitwise. During the pass the cache is read-only
+//! (`&HubCache` is `Sync`; hit/miss counters are relaxed atomics), so
+//! shard workers never contend on it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::graph::Csr;
+use crate::sampler::sample_neighbors;
+
+use super::fused::accumulate_mean;
+use super::{d_tile, Features};
+
+/// Hubs kept per graph, after thresholding. Bounds memory (one `[d]`
+/// mean per hub) and keeps the budgeted prepare scan short.
+const MAX_HUBS: usize = 4096;
+
+/// One cached leaf-hop aggregate for one hub node.
+pub struct HubEntry {
+    /// The node's sampled leaf row (`k` ids, -1 padded) — replayed into
+    /// the saved-index tensors on a hit so backward stays exact.
+    pub row: Vec<i32>,
+    /// Count of valid (non-negative) ids in `row`.
+    pub valid: u32,
+    /// `[d]` partial mean of the valid rows' features, rounded exactly
+    /// as the miss path would fold it.
+    pub mean: Vec<f32>,
+}
+
+/// The per-backend hub-aggregate cache. Owned mutably by the native
+/// backend (which calls [`HubCache::prepare`] between steps) and read
+/// concurrently by kernel shard workers during a pass.
+pub struct HubCache {
+    /// Max entries (re)computed per `prepare` call; 0 = never populate.
+    budget: usize,
+    /// Hub node ids, degree-descending (ties id-ascending).
+    hubs: Vec<u32>,
+    /// node id -> slot in `hubs`/`entries`, -1 for non-hubs.
+    slot_of: Vec<i32>,
+    /// One optional entry per hub slot.
+    entries: Vec<Option<HubEntry>>,
+    /// Generation key: (base seed-epoch, leaf hop counter, leaf fanout).
+    generation: Option<(u64, u64, usize)>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    refreshes: u64,
+}
+
+impl HubCache {
+    /// Select the hubs from the graph's [`crate::graph::DegreeSummary`]
+    /// sketch: nodes strictly above the lowest edge-mass quantile bound
+    /// that are also at least 2x the mean degree. The quantile bound
+    /// filters degenerate summaries; the 2x-mean test is what leaves
+    /// uniform graphs with few or no hubs — the neutrality guard. (The
+    /// *top* quantile bound would be too aggressive: under extreme Zipf
+    /// skew the heaviest 1/8 of edge mass sits on a single node, and the
+    /// cache would miss the hundreds of mid-tail hubs that still carry
+    /// most of the traffic.)
+    pub fn new(csr: &Csr, budget: usize) -> HubCache {
+        let summary = csr.degree_summary();
+        let uppers = summary.bucket_uppers();
+        let floor = uppers.first().copied().unwrap_or(i32::MAX);
+        let total_deg: u64 = (0..csr.n as i32).map(|u| csr.degree(u) as u64).sum();
+        let mean_deg = total_deg as f64 / csr.n.max(1) as f64;
+        let mut hubs: Vec<u32> = (0..csr.n as i32)
+            .filter(|&u| {
+                let d = csr.degree(u);
+                d > floor && d as f64 >= 2.0 * mean_deg
+            })
+            .map(|u| u as u32)
+            .collect();
+        hubs.sort_by_key(|&u| (-(csr.degree(u as i32) as i64), u));
+        hubs.truncate(MAX_HUBS);
+        let mut slot_of = vec![-1i32; csr.n];
+        for (s, &u) in hubs.iter().enumerate() {
+            slot_of[u as usize] = s as i32;
+        }
+        let entries = hubs.iter().map(|_| None).collect();
+        HubCache { budget, hubs, slot_of, entries, generation: None,
+                   hits: AtomicU64::new(0), misses: AtomicU64::new(0),
+                   refreshes: 0 }
+    }
+
+    /// Roll the cache to the generation `(base, hop, k)` and spend up to
+    /// the refresh budget filling missing entries, hottest hubs first.
+    /// A changed triple evicts *every* entry (the counter RNG makes all
+    /// of them stale at once); an unchanged triple only tops up — the
+    /// serve path's cross-request warm-up, since eval passes share one
+    /// fixed base seed per session.
+    pub fn prepare(&mut self, csr: &Csr, feat: &Features, base: u64,
+                   hop: u64, k: usize, simd_on: bool) {
+        if self.generation != Some((base, hop, k)) {
+            for e in self.entries.iter_mut() {
+                *e = None;
+            }
+            self.generation = Some((base, hop, k));
+        }
+        if self.budget == 0 {
+            return;
+        }
+        let d = feat.d;
+        let mut row = vec![-1i32; k];
+        let mut valid: Vec<i32> = Vec::with_capacity(k);
+        let mut tile = vec![0.0f32; d_tile()];
+        let mut spent = 0usize;
+        for slot in 0..self.hubs.len() {
+            if spent >= self.budget {
+                break;
+            }
+            if self.entries[slot].is_some() {
+                continue;
+            }
+            let node = self.hubs[slot] as i32;
+            sample_neighbors(csr, node, k, base, hop, &mut row);
+            valid.clear();
+            valid.extend(row.iter().copied().filter(|&v| v >= 0));
+            // a zeroed target makes accumulate_mean's fold land each
+            // element at exactly round(acc * inv) — the value a miss
+            // would have added (see the module docs)
+            let mut mean = vec![0.0f32; d];
+            accumulate_mean(feat, &valid, &mut tile, &mut mean, simd_on);
+            self.entries[slot] = Some(HubEntry {
+                row: row.clone(),
+                valid: valid.len() as u32,
+                mean,
+            });
+            self.refreshes += 1;
+            spent += 1;
+        }
+    }
+
+    /// Consult the cache for one leaf-hop call. Counts a hit when the
+    /// node has a live entry in the current generation, a miss
+    /// otherwise (including non-hub nodes — the denominator of the
+    /// reported hit rate is *every* leaf-hop call).
+    #[inline]
+    pub fn lookup(&self, node: i32) -> Option<&HubEntry> {
+        let entry = if node >= 0 && (node as usize) < self.slot_of.len() {
+            match self.slot_of[node as usize] {
+                s if s >= 0 => self.entries[s as usize].as_ref(),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        match entry {
+            Some(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Cumulative (hits, misses, refreshes) since construction. Callers
+    /// that want per-step deltas snapshot around the step.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (self.hits.load(Ordering::Relaxed),
+         self.misses.load(Ordering::Relaxed), self.refreshes)
+    }
+
+    /// Number of hub nodes under management.
+    pub fn hub_count(&self) -> usize {
+        self.hubs.len()
+    }
+
+    /// Number of live entries in the current generation.
+    pub fn live_entries(&self) -> usize {
+        self.entries.iter().filter(|e| e.is_some()).count()
+    }
+
+    /// The current generation triple (tests / diagnostics).
+    pub fn generation(&self) -> Option<(u64, u64, usize)> {
+        self.generation
+    }
+
+    /// The per-prepare refresh budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{builtin_spec, Dataset};
+
+    fn dataset(name: &str) -> Dataset {
+        Dataset::generate(builtin_spec(name).unwrap()).unwrap()
+    }
+
+    fn feats(ds: &Dataset) -> Features {
+        Features::from_f32(&ds.features, ds.spec.n, ds.spec.d, false)
+    }
+
+    #[test]
+    fn hubs_are_degree_sorted_and_skew_only() {
+        let skew = dataset("arxiv_sim");
+        let cache = HubCache::new(&skew.graph, 64);
+        assert!(cache.hub_count() > 0, "power-law graph must have hubs");
+        assert!(cache.hub_count() <= MAX_HUBS);
+        let degs: Vec<i32> = cache
+            .hubs
+            .iter()
+            .map(|&u| skew.graph.degree(u as i32))
+            .collect();
+        for w in degs.windows(2) {
+            assert!(w[0] >= w[1], "hubs not degree-descending: {w:?}");
+        }
+        // every hub clears both thresholds by construction
+        let stats = skew.graph.degree_stats();
+        for &d in &degs {
+            assert!(d as f64 >= 2.0 * stats.mean * 0.99,
+                    "hub degree {d} below 2x mean {}", stats.mean);
+        }
+        // the uniform fixture has no degree skew: no hubs, so the cache
+        // is structurally inert there
+        let flat = dataset("tiny");
+        let none = HubCache::new(&flat.graph, 64);
+        assert_eq!(none.hub_count(), 0, "uniform graph grew hubs");
+        // the Zipf serving fixture concentrates traffic on a mid-sized
+        // hub set — the regime the cache is built for: enough hubs that
+        // a budgeted prepare matters, few enough to stay under the cap
+        let zipf = dataset("zipf_serve");
+        let zc = HubCache::new(&zipf.graph, 64);
+        assert!(zc.hub_count() >= 100 && zc.hub_count() <= MAX_HUBS,
+                "zipf hub count {}", zc.hub_count());
+        // those hubs carry a large share of the edge mass (what makes
+        // leaf-hop lookups hit): at least a third of all edges
+        let total: u64 = (0..zipf.spec.n as i32)
+            .map(|u| zipf.graph.degree(u) as u64)
+            .sum();
+        let hub_mass: u64 = zc
+            .hubs
+            .iter()
+            .map(|&u| zipf.graph.degree(u as i32) as u64)
+            .sum();
+        assert!(hub_mass as f64 >= total as f64 / 3.0,
+                "zipf hubs carry only {hub_mass}/{total} edges");
+    }
+
+    #[test]
+    fn prepare_respects_budget_and_generation() {
+        let ds = dataset("arxiv_sim");
+        let feat = feats(&ds);
+        let mut cache = HubCache::new(&ds.graph, 3);
+        cache.prepare(&ds.graph, &feat, 42, 1, 10, false);
+        assert_eq!(cache.live_entries(), 3.min(cache.hub_count()));
+        assert_eq!(cache.generation(), Some((42, 1, 10)));
+        // same generation: tops up, never recomputes live entries
+        cache.prepare(&ds.graph, &feat, 42, 1, 10, false);
+        assert_eq!(cache.live_entries(), 6.min(cache.hub_count()));
+        let (_, _, refreshes) = cache.counters();
+        assert_eq!(refreshes as usize, cache.live_entries());
+        // epoch rollover: every entry evicted, then refilled from the
+        // hottest hub under the same budget
+        cache.prepare(&ds.graph, &feat, 43, 1, 10, false);
+        assert_eq!(cache.live_entries(), 3.min(cache.hub_count()));
+        assert_eq!(cache.generation(), Some((43, 1, 10)));
+        // a fanout change is its own epoch, too
+        cache.prepare(&ds.graph, &feat, 43, 1, 5, false);
+        assert_eq!(cache.generation(), Some((43, 1, 5)));
+    }
+
+    #[test]
+    fn budget_zero_never_populates() {
+        let ds = dataset("arxiv_sim");
+        let feat = feats(&ds);
+        let mut cache = HubCache::new(&ds.graph, 0);
+        cache.prepare(&ds.graph, &feat, 42, 1, 10, false);
+        assert_eq!(cache.live_entries(), 0);
+        let hub = cache.hubs.first().copied().unwrap() as i32;
+        assert!(cache.lookup(hub).is_none());
+        let (hits, misses, refreshes) = cache.counters();
+        assert_eq!((hits, refreshes), (0, 0));
+        assert_eq!(misses, 1);
+    }
+
+    #[test]
+    fn cached_entry_replays_the_sampler_draw_exactly() {
+        let ds = dataset("arxiv_sim");
+        let feat = feats(&ds);
+        let mut cache = HubCache::new(&ds.graph, 8);
+        let (base, hop, k) = (7u64, 2u64, 10usize);
+        cache.prepare(&ds.graph, &feat, base, hop, k, false);
+        let hub = cache.hubs[0] as i32;
+        let entry = cache.lookup(hub).expect("hottest hub must be cached");
+        let mut want = vec![-1i32; k];
+        sample_neighbors(&ds.graph, hub, k, base, hop, &mut want);
+        assert_eq!(entry.row, want);
+        assert_eq!(entry.valid as usize,
+                   want.iter().filter(|&&v| v >= 0).count());
+        let (hits, misses, _) = cache.counters();
+        assert_eq!((hits, misses), (1, 0));
+        // a non-hub lookup is a miss, never a panic
+        let non_hub = (0..ds.spec.n as i32)
+            .find(|&u| cache.slot_of[u as usize] < 0)
+            .unwrap();
+        assert!(cache.lookup(non_hub).is_none());
+        assert!(cache.lookup(-1).is_none());
+    }
+}

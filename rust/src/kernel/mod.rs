@@ -26,10 +26,12 @@
 pub mod baseline;
 pub mod engine;
 pub mod fused;
+pub mod hubcache;
 pub mod linalg;
 pub mod simd;
 
 pub use engine::{NativeBackend, NativeConfig};
+pub use hubcache::HubCache;
 pub use simd::SimdChoice;
 
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -94,6 +94,7 @@ OPTIONS PER SUBCOMMAND
               [--planner nominal|quantile|adaptive]
               [--planner-state PATH|off] [--chaos SPEC]
               [--simd auto|on|off] [--layout natural|degree]
+              [--hub-cache off|N]
               [--save-params FILE]   write a versioned params checkpoint
                                      at shutdown (for `fsa serve`)
               [--checkpoint-every N] also checkpoint every N steps
@@ -109,6 +110,7 @@ OPTIONS PER SUBCOMMAND
               [--backend native] [--planner ...]
               [--planner-state PATH|off] [--seed S] [--chaos SPEC]
               [--simd auto|on|off] [--layout natural|degree]
+              [--hub-cache off|N]
               reads one request per stdin line (space/comma-separated
               seed node ids), replies with argmax classes + latency;
               malformed lines get an `ERR <reason>` reply and the server
@@ -126,6 +128,7 @@ OPTIONS PER SUBCOMMAND
               [--planner nominal|quantile|adaptive]
               [--planner-state PATH|off]
               [--simd auto|on|off] [--layout natural|degree]
+              [--hub-cache off|N]
   table       --which 1|2|3|fig1|fig2|fig3|fig4|fig5 [--csv FILE]
   profile     [--steps N] [--warmup N] [--seed S]      (Table 3)
   memory      --dataset NAME --fanout K1xK2[xK3...] --batch B
@@ -135,6 +138,7 @@ OPTIONS PER SUBCOMMAND
               [--dispatch-ms X] [--sweep] [--backend emulated|native]
               [--variant fsa|dgl] [--planner nominal|quantile|adaptive]
               [--simd auto|on|off] [--layout natural|degree]
+              [--hub-cache off|N]
               host sampling/batch pipeline: steps/sec + shard imbalance
               + utilization (no artifacts needed; dispatch is emulated or
               native compute)
@@ -198,6 +202,24 @@ PIPELINE KNOBS
                     geometry, rounded to the SIMD lane width). Any value
                     is bitwise-output-identical; `cargo bench --bench
                     tile_sweep` measures the sweet spot
+  --hub-cache C     hub-aggregate cache on the native fused path
+                    (default off):
+                      off   no cache; the fused kernel gathers every
+                            leaf subtree from scratch
+                      N     cache the innermost-hop partial mean for
+                            high-degree (hub) nodes, rebuilding at most
+                            N entries per step. Entries are keyed by
+                            (node, leaf fanout, seed epoch), so a hit
+                            replays the exact neighbor draw the RNG
+                            schedule would have produced — losses,
+                            logits, gradients, and saved indices are
+                            bitwise identical to `off` at every thread
+                            count. Only step/serve time moves; wins are
+                            largest on skewed (zipf/hubs) degree laws,
+                            neutral on uniform ones.
+                    FSA_HUB_CACHE=off|N in the environment overrides the
+                    flag without re-invoking (used by CI to force the
+                    cache on across the numeric suites)
 
 FAULT INJECTION (--chaos, train/serve)
   Deterministic chaos for fault-tolerance testing; production runs
@@ -236,6 +258,20 @@ fn simd_choice(args: &Args) -> Result<SimdChoice> {
 
 fn layout_choice(args: &Args) -> Result<FeatureLayout> {
     FeatureLayout::parse(&args.str_or("layout", "natural"))
+}
+
+/// `--hub-cache off|N`: per-step refresh budget for the hub-aggregate
+/// cache on the native fused path. `off` (the default) disables it; a
+/// budget `N` caps how many hub entries may be (re)built per step.
+/// Outputs are bitwise identical either way — only step time moves.
+fn hub_cache_arg(args: &Args) -> Result<Option<usize>> {
+    match args.str_opt("hub-cache") {
+        None | Some("off") => Ok(None),
+        Some(v) => v.parse::<usize>().map(Some).map_err(|_| {
+            anyhow!("--hub-cache expects `off` or a refresh budget N, \
+                     got {v:?}")
+        }),
+    }
 }
 
 /// `--planner-state <path|off>`: where the adaptive planner persists its
@@ -297,6 +333,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         faults: chaos_arg(args, seed)?,
         simd: simd_choice(args)?,
         layout: layout_choice(args)?,
+        hub_cache: hub_cache_arg(args)?,
     };
     let steps = args.usize_or("steps", 30)?;
     let warmup = args.usize_or("warmup", 5)?;
@@ -412,8 +449,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "dataset", "variant", "fanout", "params", "batch",
         "batch-window-ms", "max-batch", "queue-depth", "deadline-ms",
         "threads", "backend", "planner", "planner-state", "seed", "chaos",
-        "simd", "layout", "rates", "windows", "duration-ms", "clients",
-        "seeds-per-request", "out",
+        "simd", "layout", "hub-cache", "rates", "windows", "duration-ms",
+        "clients", "seeds-per-request", "out",
     ];
     const SERVE_SWITCHES: &[&str] = &["bench", "no-amp"];
     args.ensure_known(SERVE_OPTIONS, SERVE_SWITCHES)?;
@@ -443,6 +480,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         faults: chaos_arg(args, seed)?,
         simd: simd_choice(args)?,
         layout: layout_choice(args)?,
+        hub_cache: hub_cache_arg(args)?,
     };
     let scfg = serve::ServeConfig {
         batch_window_ms: f64_opt(args, "batch-window-ms", 2.0)?,
@@ -614,6 +652,7 @@ fn cmd_bench_grid(args: &Args) -> Result<()> {
     grid.planner = planner_choice(args)?;
     grid.simd = simd_choice(args)?;
     grid.layout = layout_choice(args)?;
+    grid.hub_cache = hub_cache_arg(args)?;
     // bench cells default to NO planner-state persistence (a
     // paper-protocol grid must not inherit another run's weights);
     // --planner-state <path> opts in explicitly
@@ -787,6 +826,7 @@ fn cmd_throughput(args: &Args) -> Result<()> {
         planner: planner_choice(args)?,
         simd: simd_choice(args)?,
         layout: layout_choice(args)?,
+        hub_cache: hub_cache_arg(args)?,
         ..throughput::ThroughputConfig::new(&name)
     };
 

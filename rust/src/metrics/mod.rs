@@ -124,25 +124,32 @@ pub struct BenchRow {
     /// a speedup computed across rows must not mix tiers, so the schema
     /// records it (same rationale as `planner`).
     pub simd: String,
+    /// Hub-cache hit rate over the timed window: hits / (hits + misses)
+    /// of leaf-hop cache lookups; 0.0 when `--hub-cache off` (no
+    /// lookups happen at all).
+    pub hub_hit_rate: f64,
+    /// Total hub-cache entries (re)built over the timed window.
+    pub hub_refreshes: u64,
 }
 
-pub const CSV_HEADER: &str = "dataset,variant,hops,fanout,batch,amp,repeat_seed,steps,step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,nodes_per_s,peak_transient_bytes,loss,imbalance,planner,simd";
+pub const CSV_HEADER: &str = "dataset,variant,hops,fanout,batch,amp,repeat_seed,steps,step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,nodes_per_s,peak_transient_bytes,loss,imbalance,planner,simd,hub_hit_rate,hub_refreshes";
 
 impl BenchRow {
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.1},{},{:.5},{:.4},{},{}",
+            "{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.1},{},{:.5},{:.4},{},{},{:.4},{}",
             self.dataset, self.variant, self.hops, self.fanout,
             self.batch, self.amp, self.repeat_seed, self.steps, self.step_ms,
             self.sample_ms, self.upload_ms, self.execute_ms, self.pairs_per_s,
             self.nodes_per_s, self.peak_transient_bytes, self.loss,
-            self.imbalance, self.planner, self.simd
+            self.imbalance, self.planner, self.simd, self.hub_hit_rate,
+            self.hub_refreshes
         )
     }
 
     pub fn parse_csv(line: &str) -> Option<BenchRow> {
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 19 {
+        if f.len() != 21 {
             return None;
         }
         // `hops` is derivable from the fanout label; derive it so the two
@@ -169,6 +176,8 @@ impl BenchRow {
             imbalance: f[16].parse().ok()?,
             planner: f[17].to_string(),
             simd: f[18].to_string(),
+            hub_hit_rate: f[19].parse().ok()?,
+            hub_refreshes: f[20].parse().ok()?,
         })
     }
 }
@@ -206,24 +215,30 @@ pub struct ThroughputRow {
     /// Shard-planner flavor the run used (the imbalance column depends
     /// on it).
     pub planner: String,
+    /// Hub-cache hit rate over the timed window (see
+    /// [`BenchRow::hub_hit_rate`]); 0.0 when off.
+    pub hub_hit_rate: f64,
+    /// Total hub-cache entries (re)built over the timed window.
+    pub hub_refreshes: u64,
 }
 
-pub const THROUGHPUT_CSV_HEADER: &str = "dataset,hops,fanout,batch,threads,prefetch,steps,steps_per_s,step_ms,sample_ms,overlap_ms,dispatch_ms,utilization,imbalance,planner";
+pub const THROUGHPUT_CSV_HEADER: &str = "dataset,hops,fanout,batch,threads,prefetch,steps,steps_per_s,step_ms,sample_ms,overlap_ms,dispatch_ms,utilization,imbalance,planner,hub_hit_rate,hub_refreshes";
 
 impl ThroughputRow {
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{}",
+            "{},{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{},{:.4},{}",
             self.dataset, self.hops, self.fanout, self.batch,
             self.threads, self.prefetch, self.steps, self.steps_per_s,
             self.step_ms, self.sample_ms, self.overlap_ms, self.dispatch_ms,
-            self.utilization, self.imbalance, self.planner
+            self.utilization, self.imbalance, self.planner,
+            self.hub_hit_rate, self.hub_refreshes
         )
     }
 
     pub fn parse_csv(line: &str) -> Option<ThroughputRow> {
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 15 {
+        if f.len() != 17 {
             return None;
         }
         // derive hops from the fanout label (see BenchRow::parse_csv)
@@ -244,6 +259,8 @@ impl ThroughputRow {
             utilization: f[12].parse().ok()?,
             imbalance: f[13].parse().ok()?,
             planner: f[14].to_string(),
+            hub_hit_rate: f[15].parse().ok()?,
+            hub_refreshes: f[16].parse().ok()?,
         })
     }
 }
@@ -288,25 +305,32 @@ pub struct ServingRow {
     /// Requests answered with a `Timeout` reply (deadline expired before
     /// dispatch).
     pub timeouts: u64,
+    /// Hub-cache hit rate over the cell (see [`BenchRow::hub_hit_rate`]);
+    /// 0.0 when off. Serve cells share one eval seed epoch, so warm
+    /// cells approach the hub traffic share on skewed graphs.
+    pub hub_hit_rate: f64,
+    /// Total hub-cache entries (re)built over the cell.
+    pub hub_refreshes: u64,
 }
 
-pub const SERVING_CSV_HEADER: &str = "dataset,fanout,backend,planner,batch_window_ms,max_batch,queue_depth,offered_rps,completed,shed,achieved_rps,p50_ms,p95_ms,p99_ms,imbalance,faults,retries,timeouts";
+pub const SERVING_CSV_HEADER: &str = "dataset,fanout,backend,planner,batch_window_ms,max_batch,queue_depth,offered_rps,completed,shed,achieved_rps,p50_ms,p95_ms,p99_ms,imbalance,faults,retries,timeouts,hub_hit_rate,hub_refreshes";
 
 impl ServingRow {
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{:.3},{},{},{:.1},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{},{},{}",
+            "{},{},{},{},{:.3},{},{},{:.1},{},{},{:.2},{:.4},{:.4},{:.4},{:.4},{},{},{},{:.4},{}",
             self.dataset, self.fanout, self.backend, self.planner,
             self.batch_window_ms, self.max_batch, self.queue_depth,
             self.offered_rps, self.completed, self.shed, self.achieved_rps,
             self.p50_ms, self.p95_ms, self.p99_ms, self.imbalance,
-            self.faults, self.retries, self.timeouts
+            self.faults, self.retries, self.timeouts, self.hub_hit_rate,
+            self.hub_refreshes
         )
     }
 
     pub fn parse_csv(line: &str) -> Option<ServingRow> {
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 18 {
+        if f.len() != 20 {
             return None;
         }
         Some(ServingRow {
@@ -328,6 +352,8 @@ impl ServingRow {
             faults: f[15].parse().ok()?,
             retries: f[16].parse().ok()?,
             timeouts: f[17].parse().ok()?,
+            hub_hit_rate: f[18].parse().ok()?,
+            hub_refreshes: f[19].parse().ok()?,
         })
     }
 }
@@ -421,6 +447,8 @@ pub fn median_over_repeats(rows: &[BenchRow]) -> Vec<BenchRow> {
                 imbalance: med(|r| r.imbalance),
                 planner: first.planner.clone(),
                 simd: first.simd.clone(),
+                hub_hit_rate: med(|r| r.hub_hit_rate),
+                hub_refreshes: med(|r| r.hub_refreshes as f64) as u64,
             }
         })
         .collect()
@@ -475,6 +503,8 @@ mod tests {
             imbalance: 1.25,
             planner: "quantile".into(),
             simd: "on".into(),
+            hub_hit_rate: 0.75,
+            hub_refreshes: 12,
         }
     }
 
@@ -490,33 +520,36 @@ mod tests {
         assert!((parsed.imbalance - 1.25).abs() < 1e-9);
         assert_eq!(parsed.planner, "quantile");
         assert_eq!(parsed.simd, "on");
+        assert!((parsed.hub_hit_rate - 0.75).abs() < 1e-9);
+        assert_eq!(parsed.hub_refreshes, 12);
         assert_eq!(CSV_HEADER.split(',').count(),
                    row.to_csv().split(',').count());
     }
 
-    /// Pin both schemas exactly: 19 bench columns / 15 throughput
-    /// columns, with `simd` (bench) and `planner` (both) appended last.
-    /// A drive-by column reorder or rename must fail here, not in a
-    /// downstream reader.
+    /// Pin both schemas exactly: 21 bench columns / 17 throughput
+    /// columns, with the hub-cache pair (`hub_hit_rate,hub_refreshes`)
+    /// appended last. A drive-by column reorder or rename must fail
+    /// here, not in a downstream reader.
     #[test]
     fn csv_schemas_are_pinned() {
         assert_eq!(
             CSV_HEADER,
             "dataset,variant,hops,fanout,batch,amp,repeat_seed,steps,\
              step_ms,sample_ms,upload_ms,execute_ms,pairs_per_s,\
-             nodes_per_s,peak_transient_bytes,loss,imbalance,planner,simd");
-        assert_eq!(CSV_HEADER.split(',').count(), 19);
+             nodes_per_s,peak_transient_bytes,loss,imbalance,planner,\
+             simd,hub_hit_rate,hub_refreshes");
+        assert_eq!(CSV_HEADER.split(',').count(), 21);
         assert_eq!(
             THROUGHPUT_CSV_HEADER,
             "dataset,hops,fanout,batch,threads,prefetch,steps,\
              steps_per_s,step_ms,sample_ms,overlap_ms,dispatch_ms,\
-             utilization,imbalance,planner");
-        assert_eq!(THROUGHPUT_CSV_HEADER.split(',').count(), 15);
-        // rows with the previous (18-/14-column) schema no longer parse:
+             utilization,imbalance,planner,hub_hit_rate,hub_refreshes");
+        assert_eq!(THROUGHPUT_CSV_HEADER.split(',').count(), 17);
+        // rows with the previous (20-/16-column) schema no longer parse:
         // the reader rejects rather than misassigns
         let new = sample_row(42, 1.0).to_csv();
-        let old_18_cols = new.rsplit_once(',').unwrap().0;
-        assert!(BenchRow::parse_csv(old_18_cols).is_none());
+        let old_20_cols = new.rsplit_once(',').unwrap().0;
+        assert!(BenchRow::parse_csv(old_20_cols).is_none());
     }
 
     #[test]
@@ -558,6 +591,8 @@ mod tests {
             utilization: 0.96,
             imbalance: 1.08,
             planner: "adaptive".into(),
+            hub_hit_rate: 0.5,
+            hub_refreshes: 7,
         };
         let parsed = ThroughputRow::parse_csv(&row.to_csv()).unwrap();
         assert_eq!(parsed.dataset, "arxiv_sim");
@@ -567,6 +602,8 @@ mod tests {
         assert!((parsed.utilization - 0.96).abs() < 1e-9);
         assert!((parsed.imbalance - 1.08).abs() < 1e-9);
         assert_eq!(parsed.planner, "adaptive");
+        assert!((parsed.hub_hit_rate - 0.5).abs() < 1e-9);
+        assert_eq!(parsed.hub_refreshes, 7);
         assert_eq!(THROUGHPUT_CSV_HEADER.split(',').count(),
                    row.to_csv().split(',').count());
     }
@@ -591,6 +628,8 @@ mod tests {
             faults: 3,
             retries: 1,
             timeouts: 2,
+            hub_hit_rate: 0.9,
+            hub_refreshes: 4,
         }
     }
 
@@ -612,12 +651,14 @@ mod tests {
         assert_eq!(parsed.faults, 3);
         assert_eq!(parsed.retries, 1);
         assert_eq!(parsed.timeouts, 2);
+        assert!((parsed.hub_hit_rate - 0.9).abs() < 1e-9);
+        assert_eq!(parsed.hub_refreshes, 4);
         assert_eq!(SERVING_CSV_HEADER.split(',').count(),
                    row.to_csv().split(',').count());
     }
 
     /// Pin the serving schema exactly, same contract as
-    /// `csv_schemas_are_pinned`: 18 columns, this order, and rows from
+    /// `csv_schemas_are_pinned`: 20 columns, this order, and rows from
     /// an older (shorter) schema are rejected rather than misassigned.
     #[test]
     fn serving_csv_schema_is_pinned() {
@@ -625,11 +666,12 @@ mod tests {
             SERVING_CSV_HEADER,
             "dataset,fanout,backend,planner,batch_window_ms,max_batch,\
              queue_depth,offered_rps,completed,shed,achieved_rps,\
-             p50_ms,p95_ms,p99_ms,imbalance,faults,retries,timeouts");
-        assert_eq!(SERVING_CSV_HEADER.split(',').count(), 18);
+             p50_ms,p95_ms,p99_ms,imbalance,faults,retries,timeouts,\
+             hub_hit_rate,hub_refreshes");
+        assert_eq!(SERVING_CSV_HEADER.split(',').count(), 20);
         let new = sample_serving_row().to_csv();
-        let old_17_cols = new.rsplit_once(',').unwrap().0;
-        assert!(ServingRow::parse_csv(old_17_cols).is_none());
+        let old_19_cols = new.rsplit_once(',').unwrap().0;
+        assert!(ServingRow::parse_csv(old_19_cols).is_none());
     }
 
     #[test]

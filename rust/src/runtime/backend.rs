@@ -101,6 +101,13 @@ pub struct StepOutcome {
     /// measured through the [`crate::graph::ShardClock`] seam, so tests
     /// can script it deterministically.
     pub shard_stats: Option<crate::graph::ShardStats>,
+    /// Hub-aggregate cache activity inside this dispatch (leaf-hop
+    /// lookups served from / missed by the cache, entries refreshed by
+    /// the pre-pass budget). All zero when the cache is off or the
+    /// backend has none.
+    pub hub_hits: u64,
+    pub hub_misses: u64,
+    pub hub_refreshes: u64,
 }
 
 /// One synchronized train-step executor. Implementations own the model and
@@ -137,6 +144,14 @@ pub trait Backend {
     /// the most recent `eval_logits` pass — `None` when that pass ran
     /// serially or the backend does not shard on the host.
     fn eval_imbalance(&self) -> Option<f64> {
+        None
+    }
+
+    /// Cumulative hub-cache `(hits, misses, refreshes)` counters since
+    /// backend construction — `None` when the backend has no cache.
+    /// Callers that want per-window activity (serve bench cells, the
+    /// throughput harness) snapshot before/after and difference.
+    fn hub_counters(&self) -> Option<(u64, u64, u64)> {
         None
     }
 
@@ -381,7 +396,8 @@ impl Backend for PjrtBackend<'_> {
         meter.alloc(analytic.intermediates + self.exe.spec.output_bytes());
 
         Ok(StepOutcome { loss, upload_ms, execute_ms, post_ms, pairs: None,
-                         shard_stats: None })
+                         shard_stats: None, hub_hits: 0, hub_misses: 0,
+                         hub_refreshes: 0 })
     }
 
     fn params_f32(&self) -> Result<Vec<Vec<f32>>> {

@@ -104,7 +104,24 @@ pub fn run_bench(engine: &mut Engine<'_>, bc: &BenchConfig)
             // the clients' clones are the only live handles now, so the
             // server exits when they all finish
             drop(handle);
+            let hub0 = engine.hub_counters();
             let stats = run_server(engine, &scfg, &rx)?;
+            // hub-cache activity attributable to this cell (serve cells
+            // share one eval seed epoch, so warm cells approach the hub
+            // traffic share on skewed graphs; 0.0/0 when off)
+            let (hub_hit_rate, hub_refreshes) =
+                match (hub0, engine.hub_counters()) {
+                    (Some((h0, m0, r0)), Some((h1, m1, r1))) => {
+                        let lookups = (h1 - h0) + (m1 - m0);
+                        let rate = if lookups == 0 {
+                            0.0
+                        } else {
+                            (h1 - h0) as f64 / lookups as f64
+                        };
+                        (rate, r1 - r0)
+                    }
+                    _ => (0.0, 0),
+                };
             let elapsed_s = started.elapsed().as_secs_f64().max(1e-9);
             let mut shed = 0u64;
             for w in workers {
@@ -133,6 +150,8 @@ pub fn run_bench(engine: &mut Engine<'_>, bc: &BenchConfig)
                 faults: stats.faults,
                 retries: stats.retries,
                 timeouts: stats.timeouts,
+                hub_hit_rate,
+                hub_refreshes,
             });
         }
     }
@@ -174,15 +193,17 @@ pub fn render_table(rows: &[ServingRow]) -> String {
     let mut out = String::new();
     out.push_str("offered_rps  window_ms  completed   shed  \
                   achieved_rps  p50_ms  p95_ms  p99_ms  imbalance  \
-                  faults  retries  timeouts\n");
+                  faults  retries  timeouts  hub_hit  refreshes\n");
     for r in rows {
         let _ = writeln!(
             out,
             "{:>11.0}  {:>9.1}  {:>9}  {:>5}  {:>12.1}  {:>6.2}  \
-             {:>6.2}  {:>6.2}  {:>9.3}  {:>6}  {:>7}  {:>8}",
+             {:>6.2}  {:>6.2}  {:>9.3}  {:>6}  {:>7}  {:>8}  {:>7.3}  \
+             {:>9}",
             r.offered_rps, r.batch_window_ms, r.completed, r.shed,
             r.achieved_rps, r.p50_ms, r.p95_ms, r.p99_ms, r.imbalance,
-            r.faults, r.retries, r.timeouts);
+            r.faults, r.retries, r.timeouts, r.hub_hit_rate,
+            r.hub_refreshes);
     }
     out
 }

@@ -184,10 +184,22 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
-    /// (p50, p95, p99) of the per-request latencies, ms.
+    /// (p50, p95, p99) of the per-request latencies, ms. An empty
+    /// window (every request shed or timed out under `--bench`) reports
+    /// all-zero percentiles with a warning instead of panicking, so
+    /// serving.csv rows stay finite and schema-valid; NaN latencies
+    /// order via `f64::total_cmp` (after every non-NaN) rather than
+    /// aborting the sort.
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        if self.latencies_ms.is_empty() {
+            if self.completed + self.timeouts + self.faults > 0 {
+                eprintln!("warning: serve window recorded no reply \
+                           latencies; reporting 0.0 percentiles");
+            }
+            return (0.0, 0.0, 0.0);
+        }
         let mut sorted = self.latencies_ms.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         (percentile_sorted(&sorted, 50.0),
          percentile_sorted(&sorted, 95.0),
          percentile_sorted(&sorted, 99.0))
@@ -200,7 +212,7 @@ impl ServeStats {
             return 1.0;
         }
         let mut sorted = self.imbalances.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         percentile_sorted(&sorted, 50.0)
     }
 
@@ -421,6 +433,32 @@ mod tests {
         assert_eq!(ServeStats::default().median_imbalance(), 1.0);
         let (z50, _, z99) = ServeStats::default().latency_percentiles();
         assert_eq!((z50, z99), (0.0, 0.0));
+    }
+
+    /// A NaN latency or imbalance (a clock glitch, a div-by-zero shard
+    /// ratio) must not panic the percentile sort, and an all-shed bench
+    /// window (latencies empty, timeouts > 0) must report finite zeros
+    /// rather than unwrap on an empty comparison.
+    #[test]
+    fn stats_survive_nan_and_empty_windows() {
+        let stats = ServeStats {
+            completed: 3,
+            latencies_ms: vec![2.0, f64::NAN, 1.0],
+            imbalances: vec![f64::NAN, 1.5, 1.0],
+            ..Default::default()
+        };
+        // total_cmp puts the NaN last: the median stays finite (the
+        // tail percentiles may interpolate into the NaN, but nothing
+        // panics)
+        let (p50, _p95, _p99) = stats.latency_percentiles();
+        assert_eq!(p50, 2.0, "NaN must sort last, not poison p50");
+        assert_eq!(stats.median_imbalance(), 1.5);
+        let shed_everything = ServeStats {
+            timeouts: 7,
+            ..Default::default()
+        };
+        let (a, b, c) = shed_everything.latency_percentiles();
+        assert_eq!((a, b, c), (0.0, 0.0, 0.0));
     }
 
     #[test]

@@ -306,6 +306,7 @@ fn trainer_persists_state_and_warm_starts_next_session() {
         simd: Default::default(),
         layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     };
     let cfg = mk_cfg(Some(path.clone()));
     // session 1: cold start, real (wall-clock) feedback, save on drop
@@ -411,6 +412,7 @@ fn nominal_and_quantile_outputs_identical_at_threads_1_4_8() {
             simd: Default::default(),
             layout: Default::default(),
             faults: fusesampleagg::runtime::faults::none(),
+            hub_cache: None,
         };
         let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
         (0..5).map(|_| tr.step().unwrap().loss).collect()

@@ -331,6 +331,7 @@ fn depth3_bitwise_deterministic_across_threads_1_4_8() {
             simd: Default::default(),
             layout: Default::default(),
             faults: fusesampleagg::runtime::faults::none(),
+            hub_cache: None,
         };
         let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
         (0..8).map(|_| tr.step().unwrap().loss).collect()
@@ -363,6 +364,7 @@ fn depth3_native_training_end_to_end() {
             simd: Default::default(),
             layout: Default::default(),
             faults: fusesampleagg::runtime::faults::none(),
+            hub_cache: None,
         };
         let mut tr = Trainer::new(&rt, &mut cache, cfg).unwrap();
         let timings = measure(&mut tr, 2, 30).unwrap();
@@ -405,6 +407,7 @@ fn depth_axis_transient_ratio_grows() {
                 simd: Default::default(),
                 layout: Default::default(),
                 faults: fusesampleagg::runtime::faults::none(),
+                hub_cache: None,
             };
             let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
             peaks[i] = tr.step().unwrap().transient_bytes;

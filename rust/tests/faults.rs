@@ -59,6 +59,7 @@ fn tiny_cfg(variant: Variant, threads: usize,
         simd: Default::default(),
         layout: Default::default(),
         faults,
+        hub_cache: None,
     }
 }
 
@@ -291,6 +292,7 @@ fn mid_session_panic_leaves_previous_planner_state_intact() {
     let cfg = || TrainConfig {
         planner: PlannerChoice::Adaptive,
         planner_state: Some(path.clone()),
+        hub_cache: None,
         ..tiny_cfg(Variant::Fsa, 4, faults::none())
     };
     {
@@ -328,6 +330,7 @@ fn state_write_failures_degrade_to_a_warning() {
     let cfg = TrainConfig {
         planner: PlannerChoice::Adaptive,
         planner_state: Some(path.clone()),
+        hub_cache: None,
         ..tiny_cfg(Variant::Fsa, 4, chaos("state-write@*=err"))
     };
     {

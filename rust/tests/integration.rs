@@ -49,6 +49,7 @@ fn tiny_cfg(variant: Variant, hops: u32, seed: u64) -> TrainConfig {
         simd: Default::default(),
         layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     }
 }
 
@@ -233,6 +234,7 @@ fn bf16_feature_artifact_trains() {
         simd: Default::default(),
         layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     };
     let mut tr = Trainer::new_named(
         &rt, &mut cache, cfg,

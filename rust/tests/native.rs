@@ -40,6 +40,7 @@ fn tiny_cfg(variant: Variant, ks: &[usize], seed: u64) -> TrainConfig {
         simd: Default::default(),
         layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     }
 }
 
@@ -228,6 +229,7 @@ fn native_fused_forward_matches_unfused_reference() {
         simd: Default::default(),
         layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     };
     let adamw = Manifest::builtin().adamw;
     let mut eng = NativeBackend::new(ds.clone(), cfg, adamw).unwrap();
@@ -308,6 +310,7 @@ fn fused_grads_match_finite_difference() {
         simd: Default::default(),
         layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     };
     let adamw = Manifest::builtin().adamw;
     let mut eng = NativeBackend::new(ds.clone(), cfg, adamw).unwrap();

@@ -194,6 +194,7 @@ fn training_trajectories_identical_across_planners() {
                 simd: Default::default(),
                 layout: Default::default(),
                 faults: fusesampleagg::runtime::faults::none(),
+                hub_cache: None,
             };
             let mut tr = Trainer::new(&rt, cache, cfg).unwrap();
             (0..6).map(|_| tr.step().unwrap().loss).collect()

@@ -50,6 +50,7 @@ fn tiny_cfg(threads: usize, seed: u64) -> TrainConfig {
         simd: Default::default(),
         layout: Default::default(),
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     }
 }
 

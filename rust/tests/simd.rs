@@ -185,6 +185,7 @@ fn engine_degree_layout_is_loss_and_eval_invariant() {
         simd: SimdChoice::Auto,
         layout,
         faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
     };
     let adamw = Manifest::builtin().adamw;
     for amp in [false, true] {
