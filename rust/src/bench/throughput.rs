@@ -250,18 +250,7 @@ pub fn run_throughput(ds: Arc<Dataset>,
 
     // hub-cache activity over the timed window (0.0/0 when off)
     let hub_end = engine.as_ref().and_then(|e| e.hub_counters());
-    let (hub_hit_rate, hub_refreshes) = match (hub_start, hub_end) {
-        (Some((h0, m0, r0)), Some((h1, m1, r1))) => {
-            let lookups = (h1 - h0) + (m1 - m0);
-            let rate = if lookups == 0 {
-                0.0
-            } else {
-                (h1 - h0) as f64 / lookups as f64
-            };
-            (rate, r1 - r0)
-        }
-        _ => (0.0, 0),
-    };
+    let (hub_hit_rate, hub_refreshes) = hub_delta(hub_start, hub_end);
 
     Ok(ThroughputRow {
         dataset: cfg.dataset.clone(),
@@ -286,6 +275,30 @@ pub fn run_throughput(ds: Arc<Dataset>,
         hub_hit_rate,
         hub_refreshes,
     })
+}
+
+/// Hub-cache hit rate + refresh count over a start/end counter pair.
+/// The counters are cumulative per engine, so an engine rebuild or
+/// counter reset mid-window makes `end < start`; raw subtraction would
+/// wrap to huge u64 deltas and a hit rate far outside [0,1] in the
+/// CSVs. Deltas saturate at 0 instead and the rate is clamped to [0,1],
+/// so a reset window degrades to "no observed activity", never to
+/// garbage rows.
+pub fn hub_delta(start: Option<(u64, u64, u64)>, end: Option<(u64, u64, u64)>)
+                 -> (f64, u64) {
+    match (start, end) {
+        (Some((h0, m0, r0)), Some((h1, m1, r1))) => {
+            let hits = h1.saturating_sub(h0);
+            let lookups = hits + m1.saturating_sub(m0);
+            let rate = if lookups == 0 {
+                0.0
+            } else {
+                (hits as f64 / lookups as f64).clamp(0.0, 1.0)
+            };
+            (rate, r1.saturating_sub(r0))
+        }
+        _ => (0.0, 0),
+    }
 }
 
 /// Render a throughput comparison table (rows share a dataset/config).
@@ -399,6 +412,32 @@ mod tests {
         let r = run_throughput(tiny(), &cfg).unwrap();
         assert_eq!(r.hops, 3);
         assert!(r.steps_per_s > 0.0 && r.dispatch_ms > 0.0);
+    }
+
+    /// The ISSUE's wraparound regression: a counter reset mid-run
+    /// (engine rebuild) makes end < start; the deltas must saturate to
+    /// zero and the rate stay in [0,1], never wrap.
+    #[test]
+    fn hub_delta_survives_counter_resets() {
+        // normal window: 8 hits, 2 misses, 1 refresh
+        assert_eq!(hub_delta(Some((10, 5, 3)), Some((18, 7, 4))),
+                   (0.8, 1));
+        // full reset mid-window: every end counter below its start —
+        // degrades to "no observed activity"
+        let (rate, refreshes) =
+            hub_delta(Some((100, 50, 9)), Some((3, 1, 0)));
+        assert!((0.0..=1.0).contains(&rate), "wrapped rate {rate}");
+        assert_eq!((rate, refreshes), (0.0, 0));
+        // partial reset: hits wrapped, misses advanced
+        let (rate, refreshes) =
+            hub_delta(Some((100, 5, 2)), Some((0, 9, 5)));
+        assert_eq!((rate, refreshes), (0.0, 3));
+        // cache off on either side: inert zeros
+        assert_eq!(hub_delta(None, Some((1, 1, 1))), (0.0, 0));
+        assert_eq!(hub_delta(Some((1, 1, 1)), None), (0.0, 0));
+        assert_eq!(hub_delta(None, None), (0.0, 0));
+        // zero-activity window
+        assert_eq!(hub_delta(Some((5, 5, 5)), Some((5, 5, 5))), (0.0, 0));
     }
 
     #[test]

@@ -1,0 +1,943 @@
+//! Localhost multi-process data-parallel training.
+//!
+//! `fsa train --workers N` runs this module's [`train`] loop: one
+//! coordinator process owning the optimizer, N workers (child
+//! processes spawned as the hidden `fsa dist-worker` subcommand, or
+//! in-process threads for the deterministic tests) each owning a full
+//! local copy of the graph and answering gradient requests over a
+//! length-prefixed protocol on a localhost TCP socket
+//! ([`proto`] / [`worker`]).
+//!
+//! # Work decomposition and bitwise reproducibility
+//!
+//! Every optimizer step draws the *same* seed batch the single-process
+//! scheduler would draw (`BatchScheduler` keyed by the session seed),
+//! splits it into fixed-size micro-batches, and assigns micro `m` to
+//! live worker `m % N`. The decomposition depends only on the batch
+//! and `--micro-batch` — never on N — and the coordinator folds worker
+//! gradients **in micro id order** with weights `count/batch`, so the
+//! loss trajectory is bitwise identical for any worker count at a
+//! matched config. With `--micro-batch >= batch` there is exactly one
+//! micro whose weight is exactly 1.0, which makes the run additionally
+//! bitwise identical to plain single-process `fsa train` (the fold is
+//! seeded from the first micro's weighted gradients rather than a
+//! zero-filled accumulator precisely so `1.0 * g` preserves every bit,
+//! including negative-zero signs).
+//!
+//! # Failure handling
+//!
+//! Liveness is heartbeat-based: each worker beacons on a timer
+//! independent of compute, and a worker silent for ~4 heartbeat
+//! intervals (or whose socket closes) is declared dead. Its node shard
+//! is folded into the least-loaded survivor and its outstanding micros
+//! are re-dispatched — the `Step` frame re-broadcasts the current
+//! parameters, so recovery needs no state transfer and cannot perturb
+//! the trajectory. Chaos hooks (`dist-send` / `dist-recv` fault sites)
+//! drop frames or stall writes under `--chaos`; dropped result frames
+//! are recovered by a rate-limited re-dispatch of whatever is still
+//! outstanding, which is safe because gradient acceptance is
+//! idempotent (first `Grads` frame per micro id wins).
+
+pub mod proto;
+pub mod worker;
+
+use std::collections::BTreeMap;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::{BatchScheduler, TrainConfig, Variant};
+use crate::engine::{ParamsCheckpoint, TrainState};
+use crate::gen::Dataset;
+use crate::graph::plan_shards;
+use crate::kernel::NativeBackend;
+use crate::metrics::{DistRow, Timer};
+use crate::runtime::backend::Backend as _;
+use crate::runtime::faults::{Fault, FaultSite};
+use crate::runtime::manifest::AdamwConfig;
+
+use proto::{Micro, Msg};
+
+/// How the coordinator launches its workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerMode {
+    /// `fsa dist-worker` child processes — the `fsa train --workers`
+    /// path, and the only mode where SIGKILLing a worker is a real
+    /// process death.
+    Process,
+    /// In-process threads over real localhost sockets — same protocol,
+    /// same code path, deterministic to drive from tests.
+    Thread,
+}
+
+/// Knobs for a distributed session beyond the shared [`TrainConfig`].
+#[derive(Clone, Debug)]
+pub struct DistOptions {
+    /// Worker count (N >= 1).
+    pub workers: usize,
+    /// Seeds per micro-batch; 0 derives `ceil(batch / 4)`. Values past
+    /// the batch clamp to one micro per step, which is the
+    /// `fsa train`-bitwise-identical configuration.
+    pub micro_batch: usize,
+    /// Worker heartbeat period; silence past ~4x this marks a worker
+    /// dead.
+    pub heartbeat_ms: u64,
+    pub mode: WorkerMode,
+    /// Timed optimizer steps (after `warmup`).
+    pub steps: usize,
+    /// Untimed warmup steps.
+    pub warmup: usize,
+    /// Snapshot the optimizer every this many timed steps (0 = off;
+    /// requires `ckpt_path`).
+    pub ckpt_every: usize,
+    /// Params checkpoint path (`--save-params`).
+    pub ckpt_path: Option<PathBuf>,
+    /// Resume from `ckpt_path` instead of starting fresh.
+    pub resume: bool,
+    /// Where to write the per-worker `dist.csv` (None = don't).
+    pub dist_out: Option<PathBuf>,
+}
+
+impl Default for DistOptions {
+    fn default() -> Self {
+        DistOptions {
+            workers: 1,
+            micro_batch: 0,
+            heartbeat_ms: 500,
+            mode: WorkerMode::Process,
+            steps: 30,
+            warmup: 5,
+            ckpt_every: 0,
+            ckpt_path: None,
+            resume: false,
+            dist_out: None,
+        }
+    }
+}
+
+/// What a distributed session produced, for callers and tests.
+#[derive(Clone, Debug)]
+pub struct DistReport {
+    /// Loss per executed optimizer step (warmup included; starts at
+    /// the resume point when resuming).
+    pub losses: Vec<f64>,
+    /// Final model parameters (bitwise comparable across runs).
+    pub params: Vec<Vec<f32>>,
+    /// One row per worker rank.
+    pub rows: Vec<DistRow>,
+    /// Worst relative deviation of a shard's edge share from the ideal
+    /// `1/N` under the cost-weighted cut.
+    pub edge_load_dev: f64,
+    /// Shard reassignments performed after worker deaths.
+    pub reassigned: u64,
+    /// Wall-clock per timed step, ms.
+    pub step_ms: Vec<f64>,
+}
+
+/// One worker's result for one micro-batch (the fold input).
+struct MicroResult {
+    count: u32,
+    loss: f64,
+    grads: Vec<Vec<f32>>,
+}
+
+/// Coordinator-side view of one worker rank.
+struct Peer {
+    rank: usize,
+    /// Send half; `None` before hello and after death.
+    writer: Option<TcpStream>,
+    alive: bool,
+    last_seen: Instant,
+    /// The rank's original node shard (for the locality stat).
+    orig: Range<usize>,
+    /// Edges currently owned (grows when absorbing a dead peer's
+    /// shard).
+    edges: u64,
+    steps: u32,
+    stepped: bool,
+    micros: u64,
+    seeds: u64,
+    local_seeds: u64,
+    comp_ms: f64,
+    comm_ms: f64,
+    reassigned: u32,
+}
+
+/// What a per-connection reader thread forwards to the coordinator.
+enum Event {
+    Msg(usize, Msg),
+    Gone(usize),
+}
+
+struct Coord<'a> {
+    cfg: &'a TrainConfig,
+    peers: Vec<Peer>,
+    /// Connection index -> rank, filled in by each `Hello`.
+    conn_rank: Vec<Option<usize>>,
+    /// Send halves parked per connection until the hello claims them.
+    conn_writers: Vec<Option<TcpStream>>,
+    rx: mpsc::Receiver<Event>,
+    stale_after: Duration,
+    reassigned: u64,
+    /// Connections that died before identifying themselves.
+    unmapped_gone: usize,
+}
+
+impl Coord<'_> {
+    fn live(&self) -> Vec<usize> {
+        self.peers.iter().filter(|p| p.alive).map(|p| p.rank).collect()
+    }
+
+    /// Adopt a fresh connection: spawn its reader thread and park the
+    /// send half until its `Hello` arrives (heartbeats can legitimately
+    /// precede the hello — the worker's beacon thread starts before its
+    /// backend finishes building).
+    fn register(&mut self, stream: TcpStream, tx: &mpsc::Sender<Event>)
+                -> Result<()> {
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(false).ok();
+        // a blocked send to a stalled-but-undead worker must not pin
+        // the coordinator past the liveness deadline
+        stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
+        let conn = self.conn_writers.len();
+        let mut reader = stream.try_clone().context("clone worker socket")?;
+        let tx = tx.clone();
+        std::thread::spawn(move || loop {
+            match proto::read_msg(&mut reader) {
+                Ok(m) => {
+                    if tx.send(Event::Msg(conn, m)).is_err() {
+                        return; // coordinator is done with this session
+                    }
+                }
+                Err(_) => {
+                    tx.send(Event::Gone(conn)).ok();
+                    return;
+                }
+            }
+        });
+        self.conn_writers.push(Some(stream));
+        self.conn_rank.push(None);
+        Ok(())
+    }
+
+    /// Wait for one event and absorb the bookkeeping kinds; returns a
+    /// message only when it came from an identified rank.
+    fn pump(&mut self, wait: Duration) -> Result<Option<(usize, Msg)>> {
+        match self.rx.recv_timeout(wait) {
+            Ok(Event::Msg(conn, msg)) => {
+                let rank = match (self.conn_rank[conn], &msg) {
+                    (Some(r), _) => r,
+                    (None, Msg::Hello { rank }) => {
+                        let r = *rank as usize;
+                        ensure!(r < self.peers.len(),
+                                "hello from out-of-range rank {r}");
+                        ensure!(self.conn_rank.iter().all(|m| *m != Some(r)),
+                                "two connections claimed rank {r}");
+                        self.conn_rank[conn] = Some(r);
+                        self.peers[r].writer = self.conn_writers[conn].take();
+                        self.peers[r].alive = true;
+                        r
+                    }
+                    // pre-hello heartbeat: liveness starts at the hello
+                    (None, _) => return Ok(None),
+                };
+                self.peers[rank].last_seen = Instant::now();
+                Ok(Some((rank, msg)))
+            }
+            Ok(Event::Gone(conn)) => {
+                match self.conn_rank[conn] {
+                    Some(r) => self.mark_dead(r, "socket closed"),
+                    None => self.unmapped_gone += 1,
+                }
+                Ok(None)
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // every reader thread has exited, so every socket is
+                // gone; the staleness sweep's caller will notice
+                for r in 0..self.peers.len() {
+                    self.mark_dead(r, "reader exited");
+                }
+                Ok(None)
+            }
+        }
+    }
+
+    /// Declare heartbeat-silent workers dead.
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        for r in 0..self.peers.len() {
+            if self.peers[r].alive
+                && now.duration_since(self.peers[r].last_seen)
+                    > self.stale_after
+            {
+                self.mark_dead(r, "heartbeat silence");
+            }
+        }
+    }
+
+    /// Kill a peer: close its socket (unblocking both sides) and fold
+    /// its shard into the least-loaded survivor. Idempotent.
+    fn mark_dead(&mut self, rank: usize, why: &str) {
+        if !self.peers[rank].alive {
+            return;
+        }
+        self.peers[rank].alive = false;
+        if let Some(w) = self.peers[rank].writer.take() {
+            w.shutdown(Shutdown::Both).ok();
+        }
+        let edges = std::mem::take(&mut self.peers[rank].edges);
+        let heir = self.live().into_iter()
+            .min_by_key(|&r| self.peers[r].edges);
+        match heir {
+            Some(t) => {
+                self.peers[t].edges += edges;
+                self.peers[t].reassigned += 1;
+                self.reassigned += 1;
+                eprintln!("dist: worker {rank} lost ({why}); shard \
+                           reassigned to worker {t}");
+            }
+            None => eprintln!("dist: worker {rank} lost ({why}); no \
+                               survivors to absorb its shard"),
+        }
+    }
+
+    /// Send one `Step` frame, running the `dist-send` chaos site.
+    /// `false` means the worker is unreachable (caller buries it).
+    fn send_step(&mut self, rank: usize, step: u64, base: u64,
+                 params: &[Vec<f32>], micros: Vec<Micro>) -> bool {
+        let op = self.cfg.faults.begin(FaultSite::DistSend);
+        match self.cfg.faults.fault(FaultSite::DistSend, op, rank) {
+            Fault::Error => return false, // scripted socket drop
+            Fault::Stall(ms) => {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            Fault::Panic => panic!("chaos: scripted panic at dist-send \
+                                    op {op}"),
+            Fault::None | Fault::Corrupt => {}
+        }
+        let Some(w) = self.peers[rank].writer.as_mut() else {
+            return false;
+        };
+        let msg = Msg::Step { step, base, params: params.to_vec(), micros };
+        proto::write_msg(w, &msg).is_ok()
+    }
+
+    /// Assign `todo` micros round-robin over the live ranks (micro id
+    /// modulo live count — with everyone alive that is the canonical
+    /// `m % N`) and send the per-worker `Step` frames. Send failures
+    /// bury the worker and loop until everything is parked on a live
+    /// rank. `outstanding` tracks who owes which micro.
+    fn dispatch(&mut self, step: u64, base: u64, params: &[Vec<f32>],
+                mut todo: Vec<Micro>,
+                outstanding: &mut BTreeMap<u32, (usize, Micro)>)
+                -> Result<()> {
+        while !todo.is_empty() {
+            let live = self.live();
+            ensure!(!live.is_empty(),
+                    "step {step}: every worker died; cannot place \
+                     {} micro(s)", todo.len());
+            let mut per: BTreeMap<usize, Vec<Micro>> = BTreeMap::new();
+            for m in todo.drain(..) {
+                per.entry(live[m.id as usize % live.len()])
+                    .or_default()
+                    .push(m);
+            }
+            for (rank, micros) in per {
+                for m in &micros {
+                    outstanding.insert(m.id, (rank, m.clone()));
+                }
+                if !self.send_step(rank, step, base, params,
+                                   micros.clone()) {
+                    self.mark_dead(rank, "step send failed");
+                    todo.extend(micros);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run a distributed training session. The coordinator owns the
+/// scheduler, the optimizer, and every checkpoint; workers are pure
+/// gradient functions (see the module docs for the contract).
+pub fn train(ds: Arc<Dataset>, cfg: &TrainConfig, hidden: usize,
+             adamw: AdamwConfig, opts: &DistOptions) -> Result<DistReport> {
+    ensure!(matches!(cfg.variant, Variant::Fsa),
+            "distributed training drives the fused native path; run it \
+             with --variant fsa (got {})", cfg.variant.as_str());
+    ensure!(cfg.batch > 0, "--batch must be positive");
+    let workers = opts.workers.max(1);
+    ensure!(workers <= 64,
+            "--workers {workers} is past the localhost simulation's \
+             sanity cap (64)");
+    if opts.ckpt_every > 0 || opts.resume {
+        ensure!(opts.ckpt_path.is_some(),
+                "--checkpoint-every/--resume need --save-params");
+    }
+    let micro = if opts.micro_batch == 0 {
+        cfg.batch.div_ceil(4).max(1)
+    } else {
+        opts.micro_batch.clamp(1, cfg.batch)
+    };
+    let micros_per_step = cfg.batch.div_ceil(micro);
+
+    // edge-balanced contiguous node shards via the cost-weighted cut
+    // (degree + 1, the sampling-cost proxy the planner already uses)
+    let n = ds.spec.n;
+    let costs: Vec<u64> =
+        (0..n).map(|u| 1 + ds.graph.degree(u as i32) as u64).collect();
+    let shards = plan_shards(&costs, workers);
+    let shard_edges: Vec<u64> = shards.iter()
+        .map(|r| r.clone().map(|u| ds.graph.degree(u as i32) as u64).sum())
+        .collect();
+    let total_edges: u64 = shard_edges.iter().sum::<u64>().max(1);
+    let ideal = 1.0 / workers as f64;
+    let edge_load_dev = shard_edges.iter()
+        .map(|&e| (e as f64 / total_edges as f64 - ideal).abs() / ideal)
+        .fold(0.0, f64::max);
+
+    let mut backend =
+        NativeBackend::new(ds.clone(), cfg.native_config(hidden), adamw)?;
+    let mut sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)?;
+    let total = opts.warmup + opts.steps;
+    let mut start = 0usize;
+    if opts.resume {
+        let path = opts.ckpt_path.as_deref().expect("checked above");
+        start = restore(&mut backend, &mut sched, cfg, hidden, opts, path)?;
+        ensure!(start <= total,
+                "checkpoint stops at step {start}, past this run's \
+                 {total} total steps");
+    }
+
+    // bring up the fleet
+    let listener =
+        TcpListener::bind("127.0.0.1:0").context("bind dist coordinator")?;
+    let addr = listener.local_addr()?.to_string();
+    let mut children: Vec<Child> = Vec::new();
+    let mut threads: Vec<JoinHandle<Result<()>>> = Vec::new();
+    for rank in 0..workers {
+        match opts.mode {
+            WorkerMode::Process => {
+                children.push(spawn_child(&addr, rank, cfg, hidden,
+                                          opts.heartbeat_ms)?);
+            }
+            WorkerMode::Thread => {
+                let wcfg = worker::WorkerConfig {
+                    rank: rank as u32,
+                    ds: ds.clone(),
+                    fanouts: cfg.fanouts.clone(),
+                    amp: cfg.amp,
+                    seed: cfg.seed,
+                    threads: cfg.threads,
+                    hidden,
+                    simd: cfg.simd,
+                    layout: cfg.layout,
+                    heartbeat_ms: opts.heartbeat_ms,
+                };
+                let a = addr.clone();
+                threads.push(std::thread::spawn(move || {
+                    worker::connect_and_run(&a, wcfg)
+                }));
+            }
+        }
+    }
+
+    let (tx, rx) = mpsc::channel();
+    let mut co = Coord {
+        cfg,
+        peers: (0..workers)
+            .map(|rank| Peer {
+                rank,
+                writer: None,
+                alive: false,
+                last_seen: Instant::now(),
+                orig: shards[rank].clone(),
+                edges: shard_edges[rank],
+                steps: 0,
+                stepped: false,
+                micros: 0,
+                seeds: 0,
+                local_seeds: 0,
+                comp_ms: 0.0,
+                comm_ms: 0.0,
+                reassigned: 0,
+            })
+            .collect(),
+        conn_rank: Vec::new(),
+        conn_writers: Vec::new(),
+        rx,
+        stale_after: Duration::from_millis(
+            (opts.heartbeat_ms.saturating_mul(4)).clamp(200, 60_000)),
+        reassigned: 0,
+        unmapped_gone: 0,
+    };
+
+    // accept N connections, then wait for N hellos (process-mode
+    // children regenerate the dataset and build a backend first, so
+    // the deadline is generous)
+    let deadline = Instant::now() + Duration::from_secs(180);
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+    let mut accepted = 0;
+    while accepted < workers {
+        ensure!(Instant::now() < deadline,
+                "timed out waiting for {workers} workers to connect \
+                 ({accepted} so far)");
+        match listener.accept() {
+            Ok((stream, _)) => {
+                co.register(stream, &tx)?;
+                accepted += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accept dist-worker"),
+        }
+    }
+    drop(listener);
+    // readers hold the only live senders now: a disconnected channel
+    // later means every socket is gone
+    drop(tx);
+    let mut joined = 0;
+    while joined < workers {
+        ensure!(Instant::now() < deadline,
+                "timed out waiting for worker hellos ({joined}/{workers})");
+        ensure!(co.unmapped_gone == 0,
+                "a worker exited before its hello ({joined}/{workers} \
+                 joined)");
+        if let Some((_, Msg::Hello { .. })) =
+            co.pump(Duration::from_millis(50))?
+        {
+            joined += 1;
+        }
+    }
+
+    // the training loop: same schedule, same optimizer, remote grads
+    let mut losses = Vec::with_capacity(total.saturating_sub(start));
+    let mut timed_ms: Vec<f64> = Vec::new();
+    for s in start..total {
+        let t = Timer::start();
+        let base = sched.base_seed(s);
+        let seeds = sched.next_seeds();
+        let micros: Vec<Micro> = seeds.chunks(micro)
+            .enumerate()
+            .map(|(i, c)| Micro { id: i as u32, seeds: c.to_vec() })
+            .collect();
+        let want = micros.len();
+        let params = backend.params().to_vec();
+        let mut outstanding: BTreeMap<u32, (usize, Micro)> = BTreeMap::new();
+        co.sweep();
+        co.dispatch(s as u64, base, &params, micros, &mut outstanding)?;
+        let dispatch_ms = t.ms();
+        let sent_at = Instant::now();
+
+        let mut done: BTreeMap<u32, MicroResult> = BTreeMap::new();
+        let mut last_progress = Instant::now();
+        let mut last_redispatch = Instant::now();
+        while done.len() < want {
+            co.sweep();
+            if let Some((rank, msg)) = co.pump(Duration::from_millis(20))? {
+                match msg {
+                    Msg::Grads { step, micro_id, count, loss, compute_ms,
+                                 grads, .. } => {
+                        if step != s as u64 {
+                            continue; // stale answer from a past step
+                        }
+                        let op = cfg.faults.begin(FaultSite::DistRecv);
+                        match cfg.faults.fault(FaultSite::DistRecv, op,
+                                               rank) {
+                            Fault::Error | Fault::Corrupt => continue,
+                            Fault::Stall(ms) => std::thread::sleep(
+                                Duration::from_millis(ms)),
+                            Fault::Panic => panic!("chaos: scripted panic \
+                                                    at dist-recv op {op}"),
+                            Fault::None => {}
+                        }
+                        if done.contains_key(&micro_id) {
+                            continue; // re-dispatch overlap: first wins
+                        }
+                        ensure!(grads.len() == params.len(),
+                                "worker {rank} sent {} grad tensors, \
+                                 model has {}", grads.len(), params.len());
+                        if let Some((_, m)) = outstanding.remove(&micro_id) {
+                            let p = &mut co.peers[rank];
+                            p.micros += 1;
+                            p.seeds += count as u64;
+                            p.local_seeds += m.seeds.iter()
+                                .filter(|&&u| p.orig.contains(&(u as usize)))
+                                .count() as u64;
+                            p.comp_ms += compute_ms;
+                            p.comm_ms += (sent_at.elapsed().as_secs_f64()
+                                * 1e3
+                                - compute_ms)
+                                .max(0.0);
+                            p.stepped = true;
+                        }
+                        done.insert(micro_id,
+                                    MicroResult { count, loss, grads });
+                        last_progress = Instant::now();
+                    }
+                    Msg::Heartbeat { .. } | Msg::Hello { .. } => {}
+                    Msg::Step { .. } | Msg::Shutdown => {
+                        bail!("unexpected frame from worker {rank}");
+                    }
+                }
+            }
+            // micros parked on a worker that died since dispatch move
+            // to a survivor immediately
+            let orphaned: Vec<Micro> = outstanding.values()
+                .filter(|(r, _)| !co.peers[*r].alive)
+                .map(|(_, m)| m.clone())
+                .collect();
+            if !orphaned.is_empty() {
+                eprintln!("dist: step {s}: re-dispatching {} micro(s) \
+                           from dead worker(s)", orphaned.len());
+                co.dispatch(s as u64, base, &params, orphaned,
+                            &mut outstanding)?;
+                last_redispatch = Instant::now();
+            }
+            // a live worker may simply never answer (chaos-dropped
+            // frame): after a quiet staleness window, re-offer what is
+            // still outstanding — idempotent, so over-delivery is safe
+            if !outstanding.is_empty()
+                && last_progress.elapsed() > co.stale_after
+                && last_redispatch.elapsed() > co.stale_after
+            {
+                let todo: Vec<Micro> =
+                    outstanding.values().map(|(_, m)| m.clone()).collect();
+                eprintln!("dist: step {s}: re-dispatching {} stalled \
+                           micro(s)", todo.len());
+                co.dispatch(s as u64, base, &params, todo,
+                            &mut outstanding)?;
+                last_redispatch = Instant::now();
+            }
+        }
+
+        // fold in micro id order, seeding the accumulator from the
+        // first micro (see the module docs for why not zero-init)
+        let mut acc: Vec<Vec<f32>> = Vec::new();
+        let mut loss = 0.0f64;
+        for r in done.values() {
+            let w = r.count as f32 / cfg.batch as f32;
+            if acc.is_empty() {
+                acc = r.grads.iter()
+                    .map(|g| g.iter().map(|&x| w * x).collect())
+                    .collect();
+            } else {
+                for (a, g) in acc.iter_mut().zip(&r.grads) {
+                    ensure!(a.len() == g.len(),
+                            "gradient shape drifted between micros");
+                    for (ai, gi) in a.iter_mut().zip(g) {
+                        *ai += w * gi;
+                    }
+                }
+            }
+            loss += r.count as f64 / cfg.batch as f64 * r.loss;
+        }
+        backend.apply_grads(&acc, s)?;
+        losses.push(loss);
+        for p in co.peers.iter_mut() {
+            if p.stepped {
+                p.steps += 1;
+                p.stepped = false;
+            }
+        }
+
+        if s >= opts.warmup {
+            let timed = s - opts.warmup;
+            let ms = t.ms();
+            timed_ms.push(ms);
+            if timed % 10 == 0 || timed + 1 == opts.steps {
+                println!("step {timed:>4}: {ms:.2} ms (dispatch \
+                          {dispatch_ms:.2} collect {:.2}) loss {loss:.4}",
+                         (ms - dispatch_ms).max(0.0));
+            }
+            if opts.ckpt_every > 0 && (timed + 1) % opts.ckpt_every == 0 {
+                if let Some(p) = &opts.ckpt_path {
+                    save_checkpoint(&backend, cfg, hidden, (s + 1) as u64,
+                                    p)?;
+                }
+            }
+        }
+    }
+
+    // orderly teardown: shutdown frames, then reap
+    for p in co.peers.iter_mut() {
+        if let Some(w) = p.writer.as_mut() {
+            proto::write_msg(w, &Msg::Shutdown).ok();
+        }
+        if let Some(w) = p.writer.take() {
+            w.shutdown(Shutdown::Write).ok();
+        }
+    }
+    for h in threads {
+        if let Ok(Err(e)) = h.join() {
+            eprintln!("dist: worker thread error: {e:#}");
+        }
+    }
+    for mut c in children {
+        c.wait().ok();
+    }
+
+    if let Some(p) = &opts.ckpt_path {
+        save_checkpoint(&backend, cfg, hidden, total as u64, p)?;
+        println!("saved params checkpoint to {}", p.display());
+    }
+
+    let rows: Vec<DistRow> = co.peers.iter()
+        .map(|p| DistRow {
+            workers: workers as u32,
+            rank: p.rank as u32,
+            steps: p.steps,
+            micros: p.micros,
+            seeds: p.seeds,
+            local_frac: if p.seeds > 0 {
+                p.local_seeds as f64 / p.seeds as f64
+            } else {
+                0.0
+            },
+            step_ms: p.comp_ms,
+            comm_ms: p.comm_ms,
+            edge_share: p.edges as f64 / total_edges as f64,
+            edge_load_dev,
+            reassigned: p.reassigned,
+            completed: p.alive,
+        })
+        .collect();
+    if let Some(out) = &opts.dist_out {
+        // stats are advisory: a full disk must not fail a finished run
+        match crate::metrics::write_dist_csv(out, &rows) {
+            Ok(()) => println!("wrote {} worker row(s) to {}", rows.len(),
+                               out.display()),
+            Err(e) => eprintln!("dist: could not write {}: {e:#}",
+                                out.display()),
+        }
+    }
+    println!("distributed: {workers} worker(s), micro-batch {micro} \
+              ({micros_per_step} micro(s)/step), edge-load deviation \
+              {:.2}%, {} shard reassignment(s)",
+             edge_load_dev * 100.0, co.reassigned);
+
+    Ok(DistReport {
+        losses,
+        params: backend.params().to_vec(),
+        rows,
+        edge_load_dev,
+        reassigned: co.reassigned,
+        step_ms: timed_ms,
+    })
+}
+
+/// Launch one `fsa dist-worker` child against our own binary. The
+/// child rebuilds the dataset from its spec (generation is
+/// deterministic), so nothing graph-sized crosses a pipe.
+fn spawn_child(addr: &str, rank: usize, cfg: &TrainConfig, hidden: usize,
+               heartbeat_ms: u64) -> Result<Child> {
+    let exe = std::env::current_exe().context("locate the fsa binary")?;
+    let mut cmd = Command::new(exe);
+    cmd.arg("dist-worker")
+        .arg("--connect").arg(addr)
+        .arg("--rank").arg(rank.to_string())
+        .arg("--dataset").arg(&cfg.dataset)
+        .arg("--fanout").arg(cfg.fanouts.label())
+        .arg("--hidden").arg(hidden.to_string())
+        .arg("--seed").arg(cfg.seed.to_string())
+        .arg("--threads").arg(cfg.threads.to_string())
+        .arg("--heartbeat-ms").arg(heartbeat_ms.to_string())
+        .arg("--simd").arg(cfg.simd.as_str())
+        .arg("--layout").arg(cfg.layout.as_str())
+        .stdin(Stdio::null());
+    if !cfg.amp {
+        cmd.arg("--no-amp");
+    }
+    cmd.spawn().with_context(|| format!("spawn dist-worker rank {rank}"))
+}
+
+/// Install a checkpoint into the coordinator's backend and fast-forward
+/// the schedule; returns the step to resume at. Mirrors
+/// `Engine::restore_training` (params before moments — installing
+/// params zeroes the AdamW state).
+fn restore(backend: &mut NativeBackend, sched: &mut BatchScheduler,
+           cfg: &TrainConfig, hidden: usize, opts: &DistOptions,
+           path: &Path) -> Result<usize> {
+    let ck = ParamsCheckpoint::load(path)?;
+    ensure!(ck.variant == cfg.variant.as_str(),
+            "checkpoint {} is for variant {}, this run is {}",
+            path.display(), ck.variant, cfg.variant.as_str());
+    ensure!(ck.dataset == cfg.dataset,
+            "checkpoint {} is for dataset {}, this run is {}",
+            path.display(), ck.dataset, cfg.dataset);
+    ensure!(ck.fanout == cfg.fanouts.label(),
+            "checkpoint {} is for fanout {}, this run is {}",
+            path.display(), ck.fanout, cfg.fanouts.label());
+    ensure!(ck.hidden == hidden,
+            "checkpoint {} has hidden {}, this run has {}",
+            path.display(), ck.hidden, hidden);
+    let Some(ts) = &ck.train else {
+        bail!("checkpoint {} has no training state to resume from",
+              path.display());
+    };
+    backend.set_params_f32(&ck.params)?;
+    backend.set_opt_state_f32(&ts.m, &ts.v)?;
+    let done = ts.step as usize;
+    ensure!(done >= opts.warmup,
+            "checkpoint stops at step {done}, inside the {}-step warmup",
+            opts.warmup);
+    for _ in 0..done {
+        sched.next_seeds();
+    }
+    println!("resumed from {} at step {done} (timed step {})",
+             path.display(), done - opts.warmup);
+    Ok(done)
+}
+
+/// Snapshot the coordinator's params + AdamW state, compatible with
+/// `Engine::restore_training` and [`restore`].
+fn save_checkpoint(backend: &NativeBackend, cfg: &TrainConfig,
+                   hidden: usize, step: u64, path: &Path) -> Result<()> {
+    let ck = ParamsCheckpoint {
+        variant: cfg.variant.as_str().to_string(),
+        dataset: cfg.dataset.clone(),
+        fanout: cfg.fanouts.label(),
+        hidden,
+        params: backend.params_f32()?,
+        train: backend.opt_state_f32()
+            .map(|(m, v)| TrainState { step, m, v }),
+    };
+    ck.save(path)
+        .with_context(|| format!("save dist checkpoint {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::builtin_spec;
+    use crate::graph::PlannerChoice;
+    use crate::kernel::{FeatureLayout, SimdChoice};
+    use crate::runtime::backend::BackendChoice;
+
+    fn tiny_cfg() -> TrainConfig {
+        TrainConfig {
+            variant: Variant::Fsa,
+            dataset: "tiny".to_string(),
+            fanouts: crate::fanout::Fanouts::of(&[5, 3]),
+            batch: 64,
+            amp: false,
+            save_indices: false,
+            seed: 42,
+            threads: 1,
+            prefetch: false,
+            backend: BackendChoice::Native,
+            planner: PlannerChoice::Nominal,
+            planner_state: None,
+            faults: crate::runtime::faults::none(),
+            simd: SimdChoice::Auto,
+            layout: FeatureLayout::Natural,
+            hub_cache: None,
+        }
+    }
+
+    /// The shard cut must cover every node exactly once, in order, and
+    /// keep the realized edge imbalance tight on the builtin graphs.
+    #[test]
+    fn shard_cut_covers_and_balances() {
+        let ds = Dataset::generate(builtin_spec("tiny").unwrap()).unwrap();
+        let n = ds.spec.n;
+        let costs: Vec<u64> =
+            (0..n).map(|u| 1 + ds.graph.degree(u as i32) as u64).collect();
+        for parts in [1usize, 2, 4] {
+            let shards = plan_shards(&costs, parts);
+            assert_eq!(shards.len(), parts);
+            let mut next = 0usize;
+            for r in &shards {
+                assert_eq!(r.start, next, "shards must tile the node id \
+                                           space in order");
+                next = r.end;
+            }
+            assert_eq!(next, n, "shards must cover every node");
+            let edges: Vec<u64> = shards.iter()
+                .map(|r| r.clone()
+                    .map(|u| ds.graph.degree(u as i32) as u64)
+                    .sum())
+                .collect();
+            let total: u64 = edges.iter().sum();
+            let ideal = total as f64 / parts as f64;
+            for &e in &edges {
+                let dev = (e as f64 - ideal).abs() / ideal.max(1.0);
+                assert!(dev < 0.05,
+                        "{parts}-way cut is {:.1}% off ideal",
+                        dev * 100.0);
+            }
+        }
+    }
+
+    /// Micro decomposition is a function of (batch, micro) only — the
+    /// contract that makes the trajectory independent of N.
+    #[test]
+    fn micro_decomposition_is_worker_count_free() {
+        let seeds: Vec<i32> = (0..100).collect();
+        for micro in [1usize, 7, 25, 100, 1000] {
+            let micros: Vec<Micro> = seeds.chunks(micro.min(seeds.len()))
+                .enumerate()
+                .map(|(i, c)| Micro { id: i as u32, seeds: c.to_vec() })
+                .collect();
+            let back: Vec<i32> =
+                micros.iter().flat_map(|m| m.seeds.clone()).collect();
+            assert_eq!(back, seeds, "chunking must preserve seed order");
+            let ids: Vec<u32> = micros.iter().map(|m| m.id).collect();
+            let want: Vec<u32> = (0..micros.len() as u32).collect();
+            assert_eq!(ids, want);
+        }
+    }
+
+    /// One thread-mode worker, micro-batch == batch: the distributed
+    /// session's first-micro fold must leave the gradients untouched,
+    /// so losses and params match a local single-process run bitwise.
+    #[test]
+    fn single_worker_single_micro_matches_local_compute() {
+        let ds = Arc::new(
+            Dataset::generate(builtin_spec("tiny").unwrap()).unwrap());
+        let cfg = tiny_cfg();
+        let adamw = crate::runtime::manifest::Manifest::builtin().adamw;
+        let opts = DistOptions {
+            workers: 1,
+            micro_batch: cfg.batch,
+            heartbeat_ms: 50,
+            mode: WorkerMode::Thread,
+            steps: 3,
+            warmup: 1,
+            ..DistOptions::default()
+        };
+        let report = train(ds.clone(), &cfg, 32, adamw, &opts).unwrap();
+        assert_eq!(report.losses.len(), 4);
+
+        // local reference: the exact single-process update loop
+        let mut backend = NativeBackend::new(
+            ds.clone(), cfg.native_config(32), adamw).unwrap();
+        let mut sched = BatchScheduler::new(&ds, cfg.batch, cfg.seed)
+            .unwrap();
+        let mut meter = crate::memory::MemoryMeter::new();
+        let mut losses = Vec::new();
+        for s in 0..4 {
+            let base = sched.base_seed(s);
+            let seeds = sched.next_seeds();
+            let labels: Vec<i32> =
+                seeds.iter().map(|&x| ds.labels[x as usize]).collect();
+            let (loss, grads, _, _) = backend
+                .fsa_loss_grads(&seeds, &labels, base, &mut meter)
+                .unwrap();
+            backend.apply_grads(&grads, s).unwrap();
+            losses.push(loss);
+        }
+        assert_eq!(report.losses, losses,
+                   "distributed losses must be bitwise identical");
+        assert_eq!(report.params, backend.params().to_vec(),
+                   "distributed params must be bitwise identical");
+    }
+}

@@ -1,0 +1,369 @@
+//! Length-prefixed wire protocol for the localhost data-parallel
+//! sessions — hand-rolled bincode-style framing, no new dependencies.
+//!
+//! Every frame is `u32` little-endian payload length followed by the
+//! payload; the payload's first byte is the message tag. All integers
+//! are little-endian; `f32` tensors travel as raw `to_le_bytes`
+//! patterns, so encode→decode is **bitwise exact** — the coordinator's
+//! fold over worker gradients sees precisely the floats the worker
+//! computed, which is what makes the N-worker trajectory reproducible
+//! bit for bit.
+//!
+//! Message flow (coordinator ⇄ worker):
+//!
+//! ```text
+//! worker      → Hello{rank}                     once, after connect
+//! coordinator → Step{step, base, params, micros}  per step (and per
+//!                                                  re-dispatch)
+//! worker      → Grads{step, micro_id, ...}      one per assigned micro
+//! worker      → Heartbeat{rank}                 every heartbeat tick
+//! coordinator → Shutdown                        end of session
+//! ```
+//!
+//! Decoding is defensive: a frame longer than [`MAX_FRAME`] or a
+//! payload that does not parse exactly is an `InvalidData` error, never
+//! a huge allocation or a panic — the coordinator treats a bad frame
+//! like a dead socket.
+
+use std::io::{Read, Write};
+
+/// Upper bound on one frame's payload (guards the length-prefix
+/// allocation against a corrupt/hostile peer). Params for realistic
+/// models are a few MB; 1 GiB is far above anything legitimate.
+pub const MAX_FRAME: u32 = 1 << 30;
+
+const TAG_HELLO: u8 = 1;
+const TAG_STEP: u8 = 2;
+const TAG_GRADS: u8 = 3;
+const TAG_HEARTBEAT: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+
+/// One seed micro-batch: the unit of work assignment and of gradient
+/// dedup (`id` is unique within a step; the coordinator accepts the
+/// first `Grads` frame per id and ignores duplicates).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Micro {
+    pub id: u32,
+    pub seeds: Vec<i32>,
+}
+
+/// A protocol message (see the module docs for the flow).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Worker `rank` has connected.
+    Hello { rank: u32 },
+    /// Compute these micros at `step` under `base`, starting from
+    /// `params` (broadcast every step so a late-joining or re-dispatch
+    /// target needs no history).
+    Step { step: u64, base: u64, params: Vec<Vec<f32>>, micros: Vec<Micro> },
+    /// One micro's result: the loss over its `count` seeds, the
+    /// parameter gradients, the kernel's sampled-pair count, and the
+    /// worker-side compute time.
+    Grads {
+        step: u64,
+        micro_id: u32,
+        count: u32,
+        loss: f64,
+        pairs: u64,
+        compute_ms: f64,
+        grads: Vec<Vec<f32>>,
+    },
+    /// Liveness beacon, sent on a timer independent of compute.
+    Heartbeat { rank: u32 },
+    /// Clean end of session; the worker exits its loop.
+    Shutdown,
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32s(buf: &mut Vec<u8>, vs: &[i32]) {
+    put_u32(buf, vs.len() as u32);
+    for v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_tensors(buf: &mut Vec<u8>, ts: &[Vec<f32>]) {
+    put_u32(buf, ts.len() as u32);
+    for t in ts {
+        put_u32(buf, t.len() as u32);
+        for v in t {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Cursor over one received payload; every take is bounds-checked so a
+/// truncated frame decodes to an error, not a panic.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+fn bad(what: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData,
+                        format!("dist frame: {what}"))
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> std::io::Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(bad("truncated payload"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> std::io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> std::io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> std::io::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32s(&mut self) -> std::io::Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn tensors(&mut self) -> std::io::Result<Vec<Vec<f32>>> {
+        let n = self.u32()? as usize;
+        let mut ts = Vec::with_capacity(n.min(64));
+        for _ in 0..n {
+            let len = self.u32()? as usize;
+            let raw = self.take(len * 4)?;
+            ts.push(raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect());
+        }
+        Ok(ts)
+    }
+
+    fn done(&self) -> std::io::Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(bad("trailing bytes in payload"));
+        }
+        Ok(())
+    }
+}
+
+/// Serialize `msg` into one framed byte buffer (length prefix included).
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let mut p = Vec::new();
+    match msg {
+        Msg::Hello { rank } => {
+            p.push(TAG_HELLO);
+            put_u32(&mut p, *rank);
+        }
+        Msg::Step { step, base, params, micros } => {
+            p.push(TAG_STEP);
+            put_u64(&mut p, *step);
+            put_u64(&mut p, *base);
+            put_tensors(&mut p, params);
+            put_u32(&mut p, micros.len() as u32);
+            for m in micros {
+                put_u32(&mut p, m.id);
+                put_i32s(&mut p, &m.seeds);
+            }
+        }
+        Msg::Grads { step, micro_id, count, loss, pairs, compute_ms,
+                     grads } => {
+            p.push(TAG_GRADS);
+            put_u64(&mut p, *step);
+            put_u32(&mut p, *micro_id);
+            put_u32(&mut p, *count);
+            put_f64(&mut p, *loss);
+            put_u64(&mut p, *pairs);
+            put_f64(&mut p, *compute_ms);
+            put_tensors(&mut p, grads);
+        }
+        Msg::Heartbeat { rank } => {
+            p.push(TAG_HEARTBEAT);
+            put_u32(&mut p, *rank);
+        }
+        Msg::Shutdown => p.push(TAG_SHUTDOWN),
+    }
+    let mut framed = Vec::with_capacity(4 + p.len());
+    put_u32(&mut framed, p.len() as u32);
+    framed.extend_from_slice(&p);
+    framed
+}
+
+/// Decode one payload (the bytes after the length prefix).
+pub fn decode(payload: &[u8]) -> std::io::Result<Msg> {
+    let mut c = Cur { buf: payload, pos: 0 };
+    let tag = c.take(1)?[0];
+    let msg = match tag {
+        TAG_HELLO => Msg::Hello { rank: c.u32()? },
+        TAG_STEP => {
+            let step = c.u64()?;
+            let base = c.u64()?;
+            let params = c.tensors()?;
+            let n = c.u32()? as usize;
+            let mut micros = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                let id = c.u32()?;
+                let seeds = c.i32s()?;
+                micros.push(Micro { id, seeds });
+            }
+            Msg::Step { step, base, params, micros }
+        }
+        TAG_GRADS => Msg::Grads {
+            step: c.u64()?,
+            micro_id: c.u32()?,
+            count: c.u32()?,
+            loss: c.f64()?,
+            pairs: c.u64()?,
+            compute_ms: c.f64()?,
+            grads: c.tensors()?,
+        },
+        TAG_HEARTBEAT => Msg::Heartbeat { rank: c.u32()? },
+        TAG_SHUTDOWN => Msg::Shutdown,
+        other => return Err(bad(&format!("unknown tag {other}"))),
+    };
+    c.done()?;
+    Ok(msg)
+}
+
+/// Write one framed message to `w` (a blocking socket write; the caller
+/// serializes concurrent writers — frames must never interleave).
+pub fn write_msg(w: &mut impl Write, msg: &Msg) -> std::io::Result<()> {
+    w.write_all(&encode(msg))
+}
+
+/// Read one framed message from `r`. A cleanly closed socket surfaces
+/// as `UnexpectedEof` on the length prefix.
+pub fn read_msg(r: &mut impl Read) -> std::io::Result<Msg> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME {
+        return Err(bad(&format!("frame length {len} exceeds cap")));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    decode(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: &Msg) -> Msg {
+        let framed = encode(msg);
+        let mut r = &framed[..];
+        let back = read_msg(&mut r).unwrap();
+        assert!(r.is_empty(), "frame must consume exactly");
+        back
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        let msgs = [
+            Msg::Hello { rank: 3 },
+            Msg::Step {
+                step: 17,
+                base: 0xDEADBEEF_u64,
+                params: vec![vec![1.0, -2.5, 3.25e-7], vec![], vec![0.0]],
+                micros: vec![
+                    Micro { id: 0, seeds: vec![5, 1, 9] },
+                    Micro { id: 1, seeds: vec![] },
+                ],
+            },
+            Msg::Grads {
+                step: 17,
+                micro_id: 1,
+                count: 256,
+                loss: 2.302585,
+                pairs: 123_456,
+                compute_ms: 4.25,
+                grads: vec![vec![1e-8, -0.5], vec![f32::MIN_POSITIVE]],
+            },
+            Msg::Heartbeat { rank: 2 },
+            Msg::Shutdown,
+        ];
+        for msg in &msgs {
+            assert_eq!(&round_trip(msg), msg);
+        }
+    }
+
+    /// The bitwise contract: f32 payloads survive the wire exactly,
+    /// including subnormals, negative zero, infinities, and NaN bit
+    /// patterns.
+    #[test]
+    fn f32_payloads_are_bitwise_exact() {
+        let specials = vec![
+            0.0f32, -0.0, 1.0, -1.0, f32::MIN_POSITIVE, f32::EPSILON,
+            f32::MAX, f32::MIN, f32::INFINITY, f32::NEG_INFINITY,
+            f32::from_bits(0x7FC0_0001), // a quiet NaN with payload bits
+            f32::from_bits(0x0000_0001), // smallest subnormal
+        ];
+        let msg = Msg::Grads {
+            step: 0, micro_id: 0, count: 1, loss: 0.0, pairs: 0,
+            compute_ms: 0.0, grads: vec![specials.clone()],
+        };
+        let Msg::Grads { grads, .. } = round_trip(&msg) else {
+            panic!("wrong tag back");
+        };
+        let bits: Vec<u32> = grads[0].iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = specials.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want, "wire transit changed f32 bit patterns");
+    }
+
+    #[test]
+    fn corrupt_frames_error_instead_of_panicking() {
+        // truncated length prefix
+        let mut r = &[0u8, 0][..];
+        assert!(read_msg(&mut r).is_err());
+        // length prefix over the cap
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut r = &framed[..];
+        assert!(read_msg(&mut r).is_err());
+        // unknown tag
+        assert!(decode(&[99]).is_err());
+        // truncated payloads at every prefix length of a real message
+        let full = encode(&Msg::Step {
+            step: 1, base: 2,
+            params: vec![vec![1.0, 2.0]],
+            micros: vec![Micro { id: 0, seeds: vec![3, 4] }],
+        });
+        let payload = &full[4..];
+        for cut in 0..payload.len() {
+            assert!(decode(&payload[..cut]).is_err(),
+                    "prefix of {cut} bytes must not decode");
+        }
+        // trailing garbage after a valid message
+        let mut long = payload.to_vec();
+        long.push(0);
+        assert!(decode(&long).is_err(), "trailing bytes must be rejected");
+        // an empty payload
+        assert!(decode(&[]).is_err());
+    }
+
+    #[test]
+    fn eof_on_closed_socket_is_unexpected_eof() {
+        let mut r: &[u8] = &[];
+        let err = read_msg(&mut r).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+}

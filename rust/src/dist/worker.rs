@@ -1,0 +1,289 @@
+//! The data-parallel worker: the hidden `fsa dist-worker` child
+//! entrypoint, and the in-process variant the deterministic tests run
+//! (`--workers` thread mode) — both drive the same [`run`] loop over a
+//! connected socket.
+//!
+//! A worker owns a full local copy of the graph (datasets are generated
+//! deterministically from their spec, so "shipping the shard" is a
+//! no-op on localhost) and a [`NativeBackend`] it never optimizes with:
+//! every `Step` frame carries the coordinator's current parameters, the
+//! worker installs them verbatim ([`NativeBackend::set_params`]), runs
+//! [`NativeBackend::fsa_loss_grads`] per assigned micro-batch, and
+//! ships the raw f32 gradients back. All floating-point decisions —
+//! the weighted fold and the AdamW update — live on the coordinator,
+//! which is what keeps the trajectory independent of which worker
+//! computed which micro.
+//!
+//! Liveness is a dedicated heartbeat thread writing `Heartbeat` frames
+//! on a timer, so a worker deep in a long kernel pass still looks alive
+//! — only a dead or truly stalled process goes silent. Socket writes
+//! from the compute loop and the heartbeat thread are serialized
+//! through one mutex so frames never interleave.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::fanout::Fanouts;
+use crate::gen::Dataset;
+use crate::graph::PlannerChoice;
+use crate::kernel::{FeatureLayout, NativeBackend, NativeConfig, SimdChoice};
+use crate::memory::MemoryMeter;
+use crate::metrics::Timer;
+use crate::runtime::manifest::Manifest;
+
+use super::proto::{self, Msg};
+
+/// Everything a worker needs to rebuild the coordinator's model shape
+/// locally. Process-mode children parse this from their CLI args;
+/// thread-mode workers receive it directly.
+#[derive(Clone)]
+pub struct WorkerConfig {
+    pub rank: u32,
+    pub ds: Arc<Dataset>,
+    pub fanouts: Fanouts,
+    pub amp: bool,
+    pub seed: u64,
+    pub threads: usize,
+    pub hidden: usize,
+    pub simd: SimdChoice,
+    pub layout: FeatureLayout,
+    pub heartbeat_ms: u64,
+}
+
+impl WorkerConfig {
+    /// The worker-side engine config: fused variant, no planner state,
+    /// no hub cache, no fault plane — workers are pure gradient
+    /// functions; every stateful concern lives on the coordinator.
+    fn native_config(&self) -> NativeConfig {
+        NativeConfig {
+            fused: true,
+            fanouts: self.fanouts.clone(),
+            amp: self.amp,
+            save_indices: false,
+            seed: self.seed,
+            threads: self.threads,
+            planner: PlannerChoice::Nominal,
+            hidden: self.hidden,
+            simd: self.simd,
+            layout: self.layout,
+            faults: crate::runtime::faults::none(),
+            hub_cache: None,
+        }
+    }
+}
+
+/// Run one worker session over an already connected socket: send
+/// `Hello`, then serve `Step` frames until `Shutdown` or the socket
+/// closes. Returns cleanly on `Shutdown`/EOF so thread-mode tests can
+/// join; protocol violations are errors.
+pub fn run(stream: TcpStream, cfg: WorkerConfig) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = stream.try_clone().context("clone worker socket")?;
+    let writer = Arc::new(Mutex::new(stream));
+    let done = Arc::new(AtomicBool::new(false));
+
+    // liveness beacon, independent of compute
+    let hb_writer = writer.clone();
+    let hb_done = done.clone();
+    let rank = cfg.rank;
+    let tick = Duration::from_millis(cfg.heartbeat_ms.clamp(10, 10_000) / 2
+                                     + 1);
+    let heartbeat = std::thread::spawn(move || {
+        while !hb_done.load(Ordering::Relaxed) {
+            {
+                let mut w = hb_writer.lock().unwrap();
+                if proto::write_msg(&mut *w, &Msg::Heartbeat { rank })
+                    .is_err()
+                {
+                    break; // coordinator gone; main loop will see EOF
+                }
+            }
+            std::thread::sleep(tick);
+        }
+    });
+
+    let result = serve_steps(&mut reader, &writer, &cfg);
+    done.store(true, Ordering::Relaxed);
+    // unblock the heartbeat thread's next write by closing our half
+    writer.lock().unwrap().shutdown(std::net::Shutdown::Both).ok();
+    heartbeat.join().ok();
+    result
+}
+
+fn serve_steps(reader: &mut TcpStream, writer: &Arc<Mutex<TcpStream>>,
+               cfg: &WorkerConfig) -> Result<()> {
+    // the worker never optimizes, so the AdamW hyper-params are inert —
+    // the builtin manifest's values keep the constructor honest
+    let mut backend = NativeBackend::new(cfg.ds.clone(), cfg.native_config(),
+                                         Manifest::builtin().adamw)?;
+    let n = cfg.ds.spec.n;
+    {
+        let mut w = writer.lock().unwrap();
+        proto::write_msg(&mut *w, &Msg::Hello { rank: cfg.rank })
+            .context("send hello")?;
+    }
+    let mut meter = MemoryMeter::new();
+    loop {
+        let msg = match proto::read_msg(reader) {
+            Ok(m) => m,
+            // coordinator crashed or closed without Shutdown: exit
+            // quietly, the coordinator side owns the failure story
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                return Ok(());
+            }
+            Err(e) => return Err(e).context("read coordinator frame"),
+        };
+        match msg {
+            Msg::Step { step, base, params, micros } => {
+                ensure!(params.len() == backend.params().len(),
+                        "step {step}: coordinator sent {} param tensors, \
+                         model has {}", params.len(), backend.params().len());
+                backend.set_params(params);
+                for micro in micros {
+                    let timer = Timer::start();
+                    for &s in &micro.seeds {
+                        ensure!(s >= 0 && (s as usize) < n,
+                                "step {step} micro {}: seed {s} out of \
+                                 range 0..{n}", micro.id);
+                    }
+                    let labels: Vec<i32> = micro.seeds.iter()
+                        .map(|&s| cfg.ds.labels[s as usize])
+                        .collect();
+                    let (loss, grads, pairs, _stats) = backend
+                        .fsa_loss_grads(&micro.seeds, &labels, base,
+                                        &mut meter)?;
+                    meter.reset_step();
+                    let reply = Msg::Grads {
+                        step,
+                        micro_id: micro.id,
+                        count: micro.seeds.len() as u32,
+                        loss,
+                        pairs,
+                        compute_ms: timer.ms(),
+                        grads,
+                    };
+                    let mut w = writer.lock().unwrap();
+                    proto::write_msg(&mut *w, &reply)
+                        .context("send grads")?;
+                }
+            }
+            Msg::Shutdown => return Ok(()),
+            Msg::Hello { .. } | Msg::Grads { .. } | Msg::Heartbeat { .. } => {
+                bail!("unexpected {msg:?} from coordinator");
+            }
+        }
+    }
+}
+
+/// Connect to the coordinator and run a worker session (thread mode and
+/// the child entrypoint both end up here).
+pub fn connect_and_run(addr: &str, cfg: WorkerConfig) -> Result<()> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("dist-worker: connect {addr}"))?;
+    run(stream, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::builtin_spec;
+    use std::net::TcpListener;
+
+    fn tiny_cfg(rank: u32) -> WorkerConfig {
+        let ds = Arc::new(
+            Dataset::generate(builtin_spec("tiny").unwrap()).unwrap());
+        WorkerConfig {
+            rank,
+            ds,
+            fanouts: Fanouts::of(&[5, 3]),
+            amp: false,
+            seed: 42,
+            threads: 1,
+            hidden: 32,
+            simd: SimdChoice::Auto,
+            layout: FeatureLayout::Natural,
+            heartbeat_ms: 50,
+        }
+    }
+
+    /// Drive one worker end-to-end over a real localhost socket: it
+    /// must say hello, heartbeat while idle, answer a Step with one
+    /// Grads frame per micro, and exit on Shutdown.
+    #[test]
+    fn worker_answers_steps_and_shuts_down() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let cfg = tiny_cfg(7);
+        let ds = cfg.ds.clone();
+        let worker = std::thread::spawn(move || connect_and_run(&addr, cfg));
+        let (mut sock, _) = listener.accept().unwrap();
+        sock.set_nodelay(true).ok();
+
+        let hello = proto::read_msg(&mut sock).unwrap();
+        assert_eq!(hello, Msg::Hello { rank: 7 });
+
+        // build a reference backend with the same shape for the params
+        let refcfg = tiny_cfg(0);
+        let backend = NativeBackend::new(
+            ds.clone(), refcfg.native_config(),
+            Manifest::builtin().adamw).unwrap();
+        let params: Vec<Vec<f32>> = backend.params().to_vec();
+        let micros = vec![
+            proto::Micro { id: 0, seeds: (0..32).collect() },
+            proto::Micro { id: 1, seeds: (32..48).collect() },
+        ];
+        proto::write_msg(&mut sock, &Msg::Step {
+            step: 0, base: 99, params: params.clone(),
+            micros: micros.clone(),
+        }).unwrap();
+
+        // collect exactly one Grads per micro (heartbeats interleave)
+        let mut got = std::collections::BTreeMap::new();
+        while got.len() < 2 {
+            match proto::read_msg(&mut sock).unwrap() {
+                Msg::Grads { step, micro_id, count, loss, grads, .. } => {
+                    assert_eq!(step, 0);
+                    assert!(loss.is_finite());
+                    assert_eq!(grads.len(), params.len());
+                    got.insert(micro_id, (count, grads));
+                }
+                Msg::Heartbeat { rank } => assert_eq!(rank, 7),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(got[&0].0, 32);
+        assert_eq!(got[&1].0, 16);
+
+        // the worker's grads must equal a local compute bitwise
+        let mut meter = MemoryMeter::new();
+        let seeds: Vec<i32> = micros[0].seeds.clone();
+        let labels: Vec<i32> =
+            seeds.iter().map(|&s| ds.labels[s as usize]).collect();
+        let (_, local, _, _) = backend
+            .fsa_loss_grads(&seeds, &labels, 99, &mut meter).unwrap();
+        assert_eq!(got[&0].1, local,
+                   "worker grads differ from local compute");
+
+        proto::write_msg(&mut sock, &Msg::Shutdown).unwrap();
+        worker.join().unwrap().unwrap();
+    }
+
+    /// A coordinator that disappears without Shutdown (crash) must end
+    /// the worker cleanly, not hang or error.
+    #[test]
+    fn worker_exits_cleanly_on_coordinator_eof() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let cfg = tiny_cfg(0);
+        let worker = std::thread::spawn(move || connect_and_run(&addr, cfg));
+        let (mut sock, _) = listener.accept().unwrap();
+        let hello = proto::read_msg(&mut sock).unwrap();
+        assert!(matches!(hello, Msg::Hello { rank: 0 }));
+        drop(sock); // simulated coordinator crash
+        worker.join().unwrap().unwrap();
+    }
+}

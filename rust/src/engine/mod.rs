@@ -229,12 +229,17 @@ impl<'rt> Engine<'rt> {
         Some((path, key, baseline))
     }
 
-    /// Persist the adaptive weights (load-merge-save, preserving other
-    /// keys' entries). Called at drop; callable explicitly by tests.
-    /// Sessions that observed nothing beyond their warm-start baseline
-    /// save nothing — a serial (or measurement-free) run must neither
-    /// clobber measured state with uniform weights nor refresh the
-    /// `saved_unix` staleness stamp without new evidence.
+    /// Persist the adaptive weights through the lock-guarded
+    /// freshness-merging save ([`PlannerState::merge_save`]): the file
+    /// is re-read inside the lock and the entry only lands if it
+    /// carries more evidence than the incumbent, so concurrent sessions
+    /// sharing the file (serve shutting down while train exits) cannot
+    /// clobber each other's same-key weights. Called at drop; callable
+    /// explicitly by tests. Sessions that observed nothing beyond their
+    /// warm-start baseline save nothing — a serial (or
+    /// measurement-free) run must neither clobber measured state with
+    /// uniform weights nor refresh the `saved_unix` staleness stamp
+    /// without new evidence.
     pub fn save_planner_state(&self) {
         let (Some((path, key, baseline)), Some(model)) =
             (&self.planner_persist, &self.planner_model)
@@ -248,25 +253,28 @@ impl<'rt> Engine<'rt> {
         if weights.is_empty() || steps <= *baseline {
             return;
         }
-        let mut state = PlannerState::load(path);
-        state.put(key, StateEntry {
+        let entry = StateEntry {
             weights,
             steps_observed: steps,
             saved_unix: unix_now(),
-        });
+        };
         // warn-only: planner state is a warm-start optimization, never
         // worth failing a session over (the chaos `state-write` site
         // exercises exactly this degradation)
-        let res: Result<()> = {
+        let res: Result<bool> = {
             let op = self.cfg.faults.begin(FaultSite::StateWrite);
             faults::inject(self.cfg.faults.as_ref(), FaultSite::StateWrite,
                            op)
-                .and_then(|()| Ok(state.save(path)?))
+                .and_then(|()| Ok(PlannerState::merge_save(path, key,
+                                                           entry)?))
         };
         match res {
-            Ok(()) => eprintln!("planner-state: saved {} ({} steps \
-                                 observed) to {}",
-                                key.as_string(), steps, path.display()),
+            Ok(true) => eprintln!("planner-state: saved {} ({} steps \
+                                   observed) to {}",
+                                  key.as_string(), steps, path.display()),
+            Ok(false) => eprintln!("planner-state: kept fresher on-disk \
+                                    entry for {} (ours: {} steps observed)",
+                                   key.as_string(), steps),
             Err(e) => eprintln!("warning: could not save planner-state \
                                  {}: {e}", path.display()),
         }

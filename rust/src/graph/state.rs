@@ -20,7 +20,11 @@
 //! quality, never a run. Entries that fail validation individually
 //! (non-finite / non-positive weights, bad counters) are skipped, not
 //! fatal. Saving is write-the-whole-file: load-merge-save at shutdown
-//! preserves entries for other keys.
+//! preserves entries for other keys, and the whole window is guarded by
+//! [`crate::util::FileLock`] with per-entry freshness merging
+//! ([`StateEntry::is_fresher`]) so two sessions sharing the file (e.g.
+//! `fsa serve` shutting down while `fsa train` exits) cannot clobber
+//! each other's freshly observed weights for the same key.
 //!
 //! Determinism scope: warm-started weights move *cut positions* only.
 //! Sampled values, aggregates, and loss trajectories are bitwise
@@ -78,6 +82,16 @@ impl StateEntry {
     fn validate(&self) -> bool {
         !self.weights.is_empty()
             && self.weights.iter().all(|w| w.is_finite() && *w > 0.0)
+    }
+
+    /// Whether this entry carries strictly fresher evidence than
+    /// `other`: more observed passes wins, and at equal evidence the
+    /// later save does. Equal on both axes is *not* fresher — an
+    /// incumbent entry is kept over an identical-vintage challenger.
+    pub fn is_fresher(&self, other: &StateEntry) -> bool {
+        self.steps_observed > other.steps_observed
+            || (self.steps_observed == other.steps_observed
+                && self.saved_unix > other.saved_unix)
     }
 }
 
@@ -201,6 +215,23 @@ impl PlannerState {
                                   format!("{}\n", self.to_json()).as_bytes())
     }
 
+    /// One whole lock-guarded load-merge-save cycle: take the file
+    /// lock, re-read the file *inside* the lock (another session may
+    /// have saved since our last load), merge `entry` by freshness, and
+    /// save. Returns whether the entry won the merge. If the lock
+    /// cannot be acquired (held-and-live for the full retry budget) the
+    /// cycle proceeds unlocked — a best-effort save beats no save.
+    pub fn merge_save(path: &Path, key: &StateKey, entry: StateEntry)
+                      -> std::io::Result<bool> {
+        let _guard = crate::util::FileLock::acquire(path);
+        let mut state = PlannerState::load(path);
+        let installed = state.put_if_fresher(key, entry);
+        if installed {
+            state.save(path)?;
+        }
+        Ok(installed)
+    }
+
     pub fn get(&self, key: &StateKey) -> Option<&StateEntry> {
         self.entries.get(&key.as_string())
     }
@@ -210,6 +241,25 @@ impl PlannerState {
     pub fn put(&mut self, key: &StateKey, entry: StateEntry) {
         if entry.validate() {
             self.entries.insert(key.as_string(), entry);
+        }
+    }
+
+    /// [`PlannerState::put`] that defers to an incumbent entry with
+    /// fresher (or equal-vintage) evidence. Returns whether the entry
+    /// was installed. This is the merge rule that fixes the concurrent
+    /// load-merge-save lost update: a stale challenger never overwrites
+    /// weights another session observed for longer.
+    pub fn put_if_fresher(&mut self, key: &StateKey, entry: StateEntry)
+                          -> bool {
+        if !entry.validate() {
+            return false;
+        }
+        match self.entries.get(&key.as_string()) {
+            Some(cur) if !entry.is_fresher(cur) => false,
+            _ => {
+                self.entries.insert(key.as_string(), entry);
+                true
+            }
         }
     }
 
@@ -389,6 +439,74 @@ mod tests {
             assert_eq!(first, second,
                        "trial {trial}: write→load→write not idempotent");
         }
+    }
+
+    #[test]
+    fn freshness_orders_by_steps_then_save_time() {
+        let base = entry(&[1.0, 1.0], 10);
+        let mut more_steps = entry(&[1.1, 0.9], 11);
+        assert!(more_steps.is_fresher(&base));
+        assert!(!base.is_fresher(&more_steps));
+        more_steps.steps_observed = 10;
+        assert!(!more_steps.is_fresher(&base),
+                "equal vintage must not be fresher");
+        more_steps.saved_unix += 1;
+        assert!(more_steps.is_fresher(&base),
+                "equal steps, later save wins");
+    }
+
+    #[test]
+    fn put_if_fresher_keeps_the_fresher_incumbent() {
+        let mut s = PlannerState::default();
+        assert!(s.put_if_fresher(&key(4), entry(&[1.2, 0.8], 50)));
+        // stale challenger loses
+        assert!(!s.put_if_fresher(&key(4), entry(&[9.0, 9.0], 49)));
+        assert_eq!(s.get(&key(4)).unwrap().weights, vec![1.2, 0.8]);
+        // fresher challenger wins
+        assert!(s.put_if_fresher(&key(4), entry(&[1.3, 0.7], 51)));
+        assert_eq!(s.get(&key(4)).unwrap().weights, vec![1.3, 0.7]);
+        // invalid entries are still refused
+        assert!(!s.put_if_fresher(&key(4), entry(&[f64::NAN], 99)));
+    }
+
+    /// The ISSUE's lost-update regression: two sessions each do
+    /// load-merge-save on the shared file, interleaved so both loaded
+    /// before either saved. With plain `put`+`save` the last writer
+    /// clobbers the same-key entry; `merge_save` re-loads inside the
+    /// lock and merges by freshness, so both survive — the shared key
+    /// keeps the fresher weights and the disjoint keys keep both.
+    #[test]
+    fn interleaved_save_cycles_do_not_lose_updates() {
+        let p = tmp("interleaved.json");
+        let _ = std::fs::remove_file(&p);
+        // seed the file, as both sessions would have loaded it
+        let mut seeded = PlannerState::default();
+        seeded.put(&key(4), entry(&[1.0, 1.0], 10));
+        seeded.save(&p).unwrap();
+
+        // session A: observed 200 passes on the t4 key + its own t8 key
+        // session B: observed only 20 passes on the t4 key + its t2 key
+        // B saves *after* A (the clobbering order in the bug).
+        assert!(PlannerState::merge_save(
+            &p, &key(4), entry(&[1.5, 0.5], 200)).unwrap());
+        assert!(PlannerState::merge_save(
+            &p, &key(8), entry(&[1.0; 8], 200)).unwrap());
+        assert!(!PlannerState::merge_save(
+            &p, &key(4), entry(&[0.9, 1.1], 20)).unwrap(),
+            "stale writer must lose the shared key");
+        assert!(PlannerState::merge_save(
+            &p, &key(2), entry(&[1.0, 1.0], 20)).unwrap());
+
+        let merged = PlannerState::load(&p);
+        assert_eq!(merged.len(), 3);
+        assert_eq!(merged.get(&key(4)).unwrap().weights, vec![1.5, 0.5],
+                   "session A's longer-observed weights must survive \
+                    session B saving last");
+        assert_eq!(merged.get(&key(4)).unwrap().steps_observed, 200);
+        assert!(merged.get(&key(8)).is_some());
+        assert!(merged.get(&key(2)).is_some());
+        assert!(!p.with_file_name("interleaved.json.lock").exists(),
+                "lock file must not linger");
     }
 
     #[test]

@@ -315,6 +315,26 @@ impl NativeBackend {
                          &mut self.v[i], step, &self.adamw);
         }
     }
+
+    /// Apply one externally computed gradient set through the shared
+    /// AdamW update — the distributed coordinator's optimizer step: it
+    /// aggregates per-worker gradients itself and owns the only
+    /// optimizer state in the session, so this is exactly the update a
+    /// local [`Backend::train_step`] would have applied to the same
+    /// gradients at the same step.
+    pub fn apply_grads(&mut self, grads: &[Vec<f32>], step: usize)
+                       -> Result<()> {
+        ensure!(grads.len() == self.params.len(),
+                "gradient set holds {} tensors but the model has {}",
+                grads.len(), self.params.len());
+        for (i, (g, p)) in grads.iter().zip(&self.params).enumerate() {
+            ensure!(g.len() == p.len(),
+                    "gradient tensor {i} has {} values but the parameter \
+                     has {}", g.len(), p.len());
+        }
+        self.apply_adamw(grads, step);
+        Ok(())
+    }
 }
 
 impl Backend for NativeBackend {
@@ -368,11 +388,14 @@ impl Backend for NativeBackend {
             (loss, None, None)
         };
 
-        // per-step cache counter deltas (zeros when the cache is off)
+        // per-step cache counter deltas (zeros when the cache is off);
+        // saturating like `bench::throughput::hub_delta` so a counter
+        // reset can never wrap to a garbage delta
         let (hub_hits, hub_misses, hub_refreshes) =
             match (hub_before, self.hub.as_ref().map(|h| h.counters())) {
                 (Some((h0, m0, r0)), Some((h1, m1, r1))) => {
-                    (h1 - h0, m1 - m0, r1 - r0)
+                    (h1.saturating_sub(h0), m1.saturating_sub(m0),
+                     r1.saturating_sub(r0))
                 }
                 _ => (0, 0, 0),
             };

@@ -30,6 +30,7 @@
 //! | [`metrics`] | timers, robust stats, CSV logging |
 //! | [`engine`] | session facade: params, optimizer, planner, infer/step |
 //! | [`coordinator`] | training loop driver, batch pipeline, profiling |
+//! | [`dist`] | localhost multi-process data-parallel training |
 //! | [`serve`] | micro-batched online inference queue + load generator |
 //! | [`bench`] | grid runner + renderers + host-pipeline throughput mode |
 //! | [`cli`] | hand-rolled argument parser and subcommands |
@@ -38,6 +39,7 @@
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
+pub mod dist;
 pub mod engine;
 pub mod fanout;
 pub mod gen;

@@ -18,6 +18,8 @@
 //!   fsa train --variant fsa --dataset products_sim --fanout 15x10 \
 //!       --batch 1024 --steps 30 --threads 4 --prefetch on
 //!   fsa train --fanout 10x5x5 --backend native     # 3-hop, native engine
+//!   fsa train --dataset arxiv_sim --workers 4      # data-parallel, bitwise
+//!                                                  # equal to --workers 1
 //!   fsa bench-grid --out results/bench.csv
 //!   fsa table --which 1 --csv results/bench.csv
 //!   fsa throughput --dataset arxiv_sim --sweep
@@ -30,6 +32,7 @@ use fusesampleagg::bench::{self, render, throughput, Grid};
 use fusesampleagg::cli::{self, Args};
 use fusesampleagg::coordinator::{profile, DatasetCache, TrainConfig, Trainer,
                                  Variant};
+use fusesampleagg::dist;
 use fusesampleagg::engine::{argmax, Engine};
 use fusesampleagg::fanout::Fanouts;
 use fusesampleagg::gen::{builtin_spec, Dataset, Split};
@@ -67,6 +70,10 @@ fn dispatch(args: &Args) -> Result<()> {
         "memory" => cmd_memory(args),
         "throughput" => cmd_throughput(args),
         "inspect" => cmd_inspect(args),
+        // hidden child entrypoint of `fsa train --workers N` (its args
+        // are an internal contract with dist::spawn_child, so it stays
+        // out of the subcommand summary)
+        "dist-worker" => cmd_dist_worker(args),
         "" | "help" | "--help" => {
             print_help();
             Ok(())
@@ -104,6 +111,25 @@ OPTIONS PER SUBCOMMAND
                                      --save-params FILE and continue; the
                                      resumed loss trajectory is bitwise
                                      identical to the uninterrupted run
+              [--workers N]          data-parallel over N localhost
+                                     worker processes (fsa variant only).
+                                     The loss trajectory is bitwise
+                                     identical for any N at a matched
+                                     config, and additionally identical
+                                     to the plain single-process path
+                                     when --micro-batch >= batch. A dead
+                                     worker (detected by heartbeat) has
+                                     its shard reassigned and its micros
+                                     re-dispatched; the run completes on
+                                     the survivors
+              [--micro-batch M]      seeds per gradient micro-batch
+                                     (default ceil(batch/4), clamped to
+                                     the batch)
+              [--heartbeat-ms MS]    worker liveness beacon period
+                                     (default 500); silence past ~4x
+                                     this marks a worker dead
+              [--dist-out FILE]      per-worker session stats CSV
+                                     (default results/dist.csv)
   serve       [--params FILE] [--dataset NAME] [--variant fsa|dgl]
               [--fanout K1xK2[...]] [--batch-window-ms X] [--max-batch N]
               [--queue-depth N] [--deadline-ms X] [--threads N]
@@ -227,7 +253,7 @@ FAULT INJECTION (--chaos, train/serve)
   unaffected. Spec: rules separated by ';', each
       site@ops[/wN][~P]=kind
   with site  kernel|sampler|state-write|ckpt-write|ckpt-read|
-             csv-write|serve
+             csv-write|serve|dist-send|dist-recv
        ops   N | N-M | *          (site-local operation counter)
        kind  panic|err|corrupt|stall:MS
   e.g. --chaos 'kernel@3/w1=panic; ckpt-write@*=err'. Same spec + seed
@@ -352,6 +378,43 @@ fn cmd_train(args: &Args) -> Result<()> {
               threads={} prefetch={}",
              cfg.variant.as_str(), cfg.dataset, cfg.fanouts, cfg.hops(),
              cfg.batch, cfg.amp, cfg.seed, cfg.threads, cfg.prefetch);
+
+    // --workers routes to the localhost data-parallel coordinator; the
+    // single-process Trainer below never runs in that mode
+    if let Some(w) = args.str_opt("workers") {
+        let workers: usize = w.parse().map_err(|_| {
+            anyhow!("--workers expects a worker count, got {w:?}")
+        })?;
+        let opts = dist::DistOptions {
+            workers,
+            micro_batch: args.usize_or("micro-batch", 0)?,
+            heartbeat_ms: args.u64_or("heartbeat-ms", 500)?,
+            mode: dist::WorkerMode::Process,
+            steps,
+            warmup,
+            ckpt_every,
+            ckpt_path: ckpt_path.clone(),
+            resume: args.has("resume"),
+            dist_out: Some(match args.str_opt("dist-out") {
+                Some(p) => std::path::PathBuf::from(p),
+                None => util::results_dir().join("dist.csv"),
+            }),
+        };
+        println!("backend: native ({workers} dist worker processes)");
+        let ds = cache.get(&rt, &cfg.dataset)?;
+        let report = dist::train(ds, &cfg, rt.manifest.hidden,
+                                 rt.manifest.adamw, &opts)?;
+        let summary = metrics::summarize(&report.step_ms);
+        println!("median step {:.2} ms  (p10 {:.2}, p90 {:.2}, n={})",
+                 summary.median, summary.p10, summary.p90, summary.n);
+        if args.has("eval") {
+            eprintln!("note: --eval is not wired for --workers; load the \
+                       --save-params checkpoint with `fsa serve` or a \
+                       plain `fsa train --resume` run instead");
+        }
+        return Ok(());
+    }
+
     let mut trainer = Trainer::new(&rt, &mut cache, cfg)?;
     println!("backend: {}", trainer.backend_name());
     // resumed sessions skip the warmup: the checkpoint's step cursor
@@ -413,6 +476,31 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("saved params checkpoint to {p}");
     }
     Ok(())
+}
+
+/// Hidden child entrypoint of `fsa train --workers N`: rebuild the
+/// dataset from its spec (generation is deterministic, so nothing
+/// graph-sized crosses a pipe), connect back to the coordinator, and
+/// serve gradient requests until `Shutdown` or EOF.
+fn cmd_dist_worker(args: &Args) -> Result<()> {
+    let addr = args
+        .str_opt("connect")
+        .context("dist-worker: --connect HOST:PORT required")?;
+    let dataset = args.str_or("dataset", "tiny");
+    let ds = Arc::new(Dataset::generate(builtin_spec(&dataset)?)?);
+    let cfg = dist::worker::WorkerConfig {
+        rank: args.usize_or("rank", 0)? as u32,
+        ds,
+        fanouts: args.fanout("fanout", &Fanouts::of(&[15, 10]))?,
+        amp: !args.has("no-amp"),
+        seed: args.u64_or("seed", 42)?,
+        threads: args.usize_or("threads", 1)?,
+        hidden: args.usize_or("hidden", Manifest::builtin().hidden)?,
+        simd: simd_choice(args)?,
+        layout: layout_choice(args)?,
+        heartbeat_ms: args.u64_or("heartbeat-ms", 500)?,
+    };
+    dist::worker::connect_and_run(addr, cfg)
 }
 
 /// `--key X` as f64 with a default.

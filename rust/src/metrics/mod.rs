@@ -376,6 +376,89 @@ pub fn read_serving_csv(path: &Path) -> std::io::Result<Vec<ServingRow>> {
     Ok(text.lines().skip(1).filter_map(ServingRow::parse_csv).collect())
 }
 
+/// One worker's ledger from a distributed training session
+/// (`fsa train --workers N` → `dist.csv`, one row per rank).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistRow {
+    /// Session worker count.
+    pub workers: u32,
+    pub rank: u32,
+    /// Optimizer steps this rank contributed at least one micro to.
+    pub steps: u32,
+    /// Micro-batches whose gradients the coordinator accepted from
+    /// this rank (first-frame-wins under re-dispatch).
+    pub micros: u64,
+    /// Seeds across those accepted micros.
+    pub seeds: u64,
+    /// Fraction of those seeds inside the rank's original node shard.
+    pub local_frac: f64,
+    /// Worker-side compute time across accepted micros, ms.
+    pub step_ms: f64,
+    /// Dispatch-to-acceptance time minus compute, ms (protocol +
+    /// queueing overhead; coarse, clamped at zero).
+    pub comm_ms: f64,
+    /// Edge share of the shard(s) this rank ended the session owning.
+    pub edge_share: f64,
+    /// Worst relative deviation of any initial shard's edge share from
+    /// the ideal `1/workers` (global, repeated on every row).
+    pub edge_load_dev: f64,
+    /// Dead peers' shards this rank absorbed.
+    pub reassigned: u32,
+    /// Whether the rank was still alive at session end.
+    pub completed: bool,
+}
+
+pub const DIST_CSV_HEADER: &str = "workers,rank,steps,micros,seeds,local_frac,step_ms,comm_ms,edge_share,edge_load_dev,reassigned,completed";
+
+impl DistRow {
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{},{}",
+            self.workers, self.rank, self.steps, self.micros, self.seeds,
+            self.local_frac, self.step_ms, self.comm_ms, self.edge_share,
+            self.edge_load_dev, self.reassigned, self.completed
+        )
+    }
+
+    pub fn parse_csv(line: &str) -> Option<DistRow> {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 12 {
+            return None;
+        }
+        Some(DistRow {
+            workers: f[0].parse().ok()?,
+            rank: f[1].parse().ok()?,
+            steps: f[2].parse().ok()?,
+            micros: f[3].parse().ok()?,
+            seeds: f[4].parse().ok()?,
+            local_frac: f[5].parse().ok()?,
+            step_ms: f[6].parse().ok()?,
+            comm_ms: f[7].parse().ok()?,
+            edge_share: f[8].parse().ok()?,
+            edge_load_dev: f[9].parse().ok()?,
+            reassigned: f[10].parse().ok()?,
+            completed: f[11].parse().ok()?,
+        })
+    }
+}
+
+/// Write per-worker dist rows (with header) to a CSV file.
+pub fn write_dist_csv(path: &Path, rows: &[DistRow]) -> std::io::Result<()> {
+    let mut out = String::with_capacity(rows.len() * 96 + 128);
+    out.push_str(DIST_CSV_HEADER);
+    out.push('\n');
+    for r in rows {
+        let _ = writeln!(out, "{}", r.to_csv());
+    }
+    crate::util::atomic_write(path, out.as_bytes())
+}
+
+/// Read dist rows back (skipping header and malformed lines).
+pub fn read_dist_csv(path: &Path) -> std::io::Result<Vec<DistRow>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(text.lines().skip(1).filter_map(DistRow::parse_csv).collect())
+}
+
 /// Write throughput rows (with header) to a CSV file.
 pub fn write_throughput_csv(path: &Path,
                             rows: &[ThroughputRow]) -> std::io::Result<()> {
@@ -550,6 +633,54 @@ mod tests {
         let new = sample_row(42, 1.0).to_csv();
         let old_20_cols = new.rsplit_once(',').unwrap().0;
         assert!(BenchRow::parse_csv(old_20_cols).is_none());
+    }
+
+    fn sample_dist_row(rank: u32) -> DistRow {
+        DistRow {
+            workers: 4,
+            rank,
+            steps: 30,
+            micros: 120,
+            seeds: 7_680,
+            local_frac: 0.2531,
+            step_ms: 812.5,
+            comm_ms: 90.25,
+            edge_share: 0.2498,
+            edge_load_dev: 0.0125,
+            reassigned: 1,
+            completed: true,
+        }
+    }
+
+    /// Pin the dist schema exactly (12 columns) and reject truncated
+    /// rows, mirroring the bench/throughput/serving guarantees.
+    #[test]
+    fn dist_csv_schema_is_pinned() {
+        assert_eq!(
+            DIST_CSV_HEADER,
+            "workers,rank,steps,micros,seeds,local_frac,step_ms,comm_ms,\
+             edge_share,edge_load_dev,reassigned,completed");
+        assert_eq!(DIST_CSV_HEADER.split(',').count(), 12);
+        let row = sample_dist_row(2);
+        assert_eq!(row.to_csv().split(',').count(), 12);
+        let parsed = DistRow::parse_csv(&row.to_csv()).unwrap();
+        assert_eq!(parsed, row);
+        let truncated = row.to_csv();
+        let truncated = truncated.rsplit_once(',').unwrap().0;
+        assert!(DistRow::parse_csv(truncated).is_none());
+        assert!(DistRow::parse_csv("not,a,row").is_none());
+    }
+
+    #[test]
+    fn dist_csv_file_round_trip() {
+        let dir = std::env::temp_dir().join("fsa_metrics_dist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("dist.csv");
+        let rows: Vec<DistRow> = (0..3).map(sample_dist_row).collect();
+        write_dist_csv(&p, &rows).unwrap();
+        let back = read_dist_csv(&p).unwrap();
+        assert_eq!(back, rows);
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //! spec  := rule (';' rule)*
 //! rule  := site '@' ops [ '/w' N ] [ '~' P ] '=' kind
 //! site  := kernel | sampler | state-write | ckpt-write | ckpt-read
-//!          | csv-write | serve
+//!          | csv-write | serve | dist-send | dist-recv
 //! ops   := N | N '-' M (inclusive) | '*'        site-local op counter
 //! kind  := panic | err | corrupt | stall:MS
 //! ```
@@ -59,9 +59,17 @@ pub enum FaultSite {
     CsvWrite,
     /// One serve micro-batch (the fused forward inside `run_server`).
     ServeBatch,
+    /// One coordinator→worker send on the distributed training socket
+    /// (`dist::coordinator`); `err` drops the connection as if the
+    /// worker's socket died, `stall:MS` delays the dispatch, faults
+    /// keyed per worker rank.
+    DistSend,
+    /// One coordinator-side receive/processing of a worker frame;
+    /// `err` discards the frame as if the bytes were lost in flight.
+    DistRecv,
 }
 
-pub const ALL_SITES: [FaultSite; 7] = [
+pub const ALL_SITES: [FaultSite; 9] = [
     FaultSite::KernelWorker,
     FaultSite::SamplerWorker,
     FaultSite::StateWrite,
@@ -69,6 +77,8 @@ pub const ALL_SITES: [FaultSite; 7] = [
     FaultSite::CheckpointRead,
     FaultSite::CsvWrite,
     FaultSite::ServeBatch,
+    FaultSite::DistSend,
+    FaultSite::DistRecv,
 ];
 
 impl FaultSite {
@@ -81,6 +91,8 @@ impl FaultSite {
             FaultSite::CheckpointRead => "ckpt-read",
             FaultSite::CsvWrite => "csv-write",
             FaultSite::ServeBatch => "serve",
+            FaultSite::DistSend => "dist-send",
+            FaultSite::DistRecv => "dist-recv",
         }
     }
 
@@ -397,6 +409,21 @@ mod tests {
             let err = ChaosPlane::parse(spec, 1).unwrap_err().to_string();
             assert!(err.contains(needle), "{spec:?}: {err}");
         }
+    }
+
+    #[test]
+    fn dist_sites_parse_and_script() {
+        for (name, site) in [("dist-send", FaultSite::DistSend),
+                             ("dist-recv", FaultSite::DistRecv)] {
+            assert_eq!(FaultSite::parse(name).unwrap(), site);
+            assert_eq!(site.as_str(), name);
+        }
+        let p = ChaosPlane::parse(
+            "dist-send@1/w0=err; dist-recv@*=stall:3", 42).unwrap();
+        assert_eq!(p.fault(FaultSite::DistSend, 1, 0), Fault::Error);
+        assert_eq!(p.fault(FaultSite::DistSend, 1, 1), Fault::None);
+        assert_eq!(p.fault(FaultSite::DistSend, 0, 0), Fault::None);
+        assert_eq!(p.fault(FaultSite::DistRecv, 17, 0), Fault::Stall(3));
     }
 
     #[test]

@@ -110,18 +110,8 @@ pub fn run_bench(engine: &mut Engine<'_>, bc: &BenchConfig)
             // share one eval seed epoch, so warm cells approach the hub
             // traffic share on skewed graphs; 0.0/0 when off)
             let (hub_hit_rate, hub_refreshes) =
-                match (hub0, engine.hub_counters()) {
-                    (Some((h0, m0, r0)), Some((h1, m1, r1))) => {
-                        let lookups = (h1 - h0) + (m1 - m0);
-                        let rate = if lookups == 0 {
-                            0.0
-                        } else {
-                            (h1 - h0) as f64 / lookups as f64
-                        };
-                        (rate, r1 - r0)
-                    }
-                    _ => (0.0, 0),
-                };
+                crate::bench::throughput::hub_delta(
+                    hub0, engine.hub_counters());
             let elapsed_s = started.elapsed().as_secs_f64().max(1e-9);
             let mut shed = 0u64;
             for w in workers {

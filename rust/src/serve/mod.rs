@@ -30,9 +30,11 @@
 //!
 //! Graceful degradation (the fault-tolerance contract, pinned in
 //! `rust/tests/faults.rs`): every admitted request gets exactly one
-//! typed reply. Requests whose enqueue→dispatch wait exceeds
-//! `--deadline-ms` are answered [`ReplyBody::Timeout`] instead of stale
-//! scores; a micro-batch whose forward pass panics or errors is
+//! typed reply. Requests that exceed `--deadline-ms` — whether waiting
+//! for dispatch or while their micro-batch computes (the deadline is
+//! re-checked at reply time) — are answered [`ReplyBody::Timeout`]
+//! instead of stale scores; a micro-batch whose forward pass panics or
+//! errors is
 //! *isolated* — its requests get [`ReplyBody::Error`] and the server
 //! keeps draining (`catch_unwind` around the one `infer` call, chaos
 //! site `serve`). Both outcomes are counted ([`ServeStats::timeouts`],
@@ -61,8 +63,9 @@ pub struct ServeConfig {
     /// Bounded queue depth (admission control): submissions beyond this
     /// many waiting requests are shed.
     pub queue_depth: usize,
-    /// Per-request deadline, ms (0 = none): a request that waited longer
-    /// than this before its batch dispatched is answered
+    /// Per-request deadline, ms (0 = none): a request that exceeds this
+    /// — before its batch dispatches *or* while the batch computes
+    /// (checked again at reply time) — is answered
     /// [`ReplyBody::Timeout`] instead of stale scores.
     pub deadline_ms: f64,
 }
@@ -361,10 +364,18 @@ fn serve_batch(engine: &mut Engine<'_>, cfg: &ServeConfig,
         let latency_ms = latency_at(&req, done);
         stats.completed += 1;
         stats.latencies_ms.push(latency_ms);
+        // re-check the deadline at reply time: a request admitted just
+        // under the wire that expired while its batch computed must get
+        // Timeout (and be counted), not stale scores
+        let body = if cfg.deadline_ms > 0.0 && latency_ms > cfg.deadline_ms {
+            stats.timeouts += 1;
+            ReplyBody::Timeout
+        } else {
+            ReplyBody::Scores(scores)
+        };
         // the client may have given up and dropped its receiver; that
         // only loses the reply, not the server
-        let _ = req.reply.send(Reply { body: ReplyBody::Scores(scores),
-                                       latency_ms });
+        let _ = req.reply.send(Reply { body, latency_ms });
     }
 }
 

@@ -147,6 +147,74 @@ fn atomic_write_hooked(path: &Path, bytes: &[u8],
     res
 }
 
+/// A coarse cross-process mutex over one state file, held for the
+/// duration of a load-merge-save cycle. Implemented as an `O_EXCL`
+/// sibling lock file (`<path>.lock`) — the only primitive that is both
+/// atomic on every local filesystem and dependency-free.
+///
+/// Acquisition retries with a short sleep for up to ~2s; a lock file
+/// older than [`FileLock::STALE_SECS`] is presumed leaked by a crashed
+/// process and is removed. If the lock still cannot be taken, `acquire`
+/// returns `None` and the caller proceeds *unlocked* — planner state is
+/// a warm-start cache, so losing mutual exclusion once must never turn
+/// into losing the save entirely.
+pub struct FileLock {
+    lock_path: PathBuf,
+}
+
+impl FileLock {
+    /// A leftover lock this old belongs to a crashed process, not a
+    /// concurrent one: the guarded window is a single JSON
+    /// load-merge-save, which completes in milliseconds.
+    pub const STALE_SECS: u64 = 10;
+
+    /// Try to take the lock guarding `path` (the state file itself, not
+    /// the lock file). Blocks with bounded retries; `None` on timeout.
+    pub fn acquire(path: &Path) -> Option<FileLock> {
+        let mut name = path.file_name()?.to_os_string();
+        name.push(".lock");
+        let lock_path = path.with_file_name(name);
+        if let Some(dir) = lock_path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).ok()?;
+            }
+        }
+        for _ in 0..200 {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&lock_path)
+            {
+                Ok(_) => return Some(FileLock { lock_path }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    Self::reap_stale(&lock_path);
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(_) => return None,
+            }
+        }
+        None
+    }
+
+    /// Remove the lock file if its mtime says the holder is long gone.
+    fn reap_stale(lock_path: &Path) {
+        let stale = std::fs::metadata(lock_path)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok())
+            .is_some_and(|age| age.as_secs() > Self::STALE_SECS);
+        if stale {
+            let _ = std::fs::remove_file(lock_path);
+        }
+    }
+}
+
+impl Drop for FileLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.lock_path);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,5 +306,40 @@ mod tests {
     #[test]
     fn atomic_write_rejects_pathless_targets() {
         assert!(atomic_write(Path::new("/"), b"x").is_err());
+    }
+
+    #[test]
+    fn file_lock_excludes_and_releases() {
+        let p = atomic_tmp("locked_state.json");
+        let lock_file = p.with_file_name("locked_state.json.lock");
+        let _ = std::fs::remove_file(&lock_file);
+        let guard = FileLock::acquire(&p).expect("first acquire");
+        assert!(lock_file.exists(), "lock file must exist while held");
+        // a second taker in another thread blocks until the guard drops
+        let p2 = p.clone();
+        let waiter = std::thread::spawn(move || {
+            FileLock::acquire(&p2).is_some()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        drop(guard);
+        assert!(waiter.join().unwrap(),
+                "waiter must acquire after release");
+        assert!(!lock_file.exists(), "drop must remove the lock file");
+    }
+
+    #[test]
+    fn file_lock_reaps_stale_locks() {
+        let p = atomic_tmp("stale_state.json");
+        let lock_file = p.with_file_name("stale_state.json.lock");
+        std::fs::write(&lock_file, b"").unwrap();
+        // age the lock file past the staleness horizon
+        let old = std::time::SystemTime::now()
+            - std::time::Duration::from_secs(FileLock::STALE_SECS + 5);
+        let f = std::fs::OpenOptions::new().write(true)
+            .open(&lock_file).unwrap();
+        f.set_modified(old).unwrap();
+        drop(f);
+        let guard = FileLock::acquire(&p);
+        assert!(guard.is_some(), "stale lock must be reaped, not block");
     }
 }

@@ -1,0 +1,369 @@
+//! Distributed-training integration tests: the localhost data-parallel
+//! coordinator (`dist::train`), its worker protocol, and the `fsa train
+//! --workers` process path.
+//!
+//! The contracts pinned here:
+//!
+//! 1. **Worker-count invariance** — the loss trajectory and final
+//!    parameters are bitwise identical at 1, 2 and 4 workers for a
+//!    matched config: the micro decomposition, fold order and fold
+//!    weights never depend on N.
+//! 2. **Single-process identity** — with `--micro-batch >= batch` a
+//!    distributed run is additionally bitwise identical to plain
+//!    `fsa train` (the `Trainer` loop).
+//! 3. **Failure transparency** — a worker lost mid-run (scripted socket
+//!    drop, dropped result frame, or a real SIGKILL of a child process)
+//!    gets its shard reassigned and the run completes with the *same*
+//!    bitwise trajectory: the coordinator owns every floating-point
+//!    decision, so recomputing a micro elsewhere cannot perturb it, and
+//!    gradient acceptance is first-wins so a re-dispatched micro is
+//!    never double-counted.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fusesampleagg::coordinator::{DatasetCache, TrainConfig, Trainer, Variant};
+use fusesampleagg::dist::{self, DistOptions, WorkerMode};
+use fusesampleagg::fanout::Fanouts;
+use fusesampleagg::gen::{builtin_spec, Dataset};
+use fusesampleagg::metrics::read_dist_csv;
+use fusesampleagg::runtime::faults::ChaosPlane;
+use fusesampleagg::runtime::manifest::{AdamwConfig, Manifest};
+use fusesampleagg::runtime::{BackendChoice, Runtime};
+
+fn tiny_cfg(seed: u64) -> TrainConfig {
+    TrainConfig {
+        variant: Variant::Fsa,
+        dataset: "tiny".into(),
+        fanouts: Fanouts::of(&[5, 3]),
+        batch: 64,
+        amp: false,
+        save_indices: false,
+        seed,
+        threads: 1,
+        prefetch: false,
+        backend: BackendChoice::Native,
+        planner: Default::default(),
+        planner_state: None,
+        simd: Default::default(),
+        layout: Default::default(),
+        faults: fusesampleagg::runtime::faults::none(),
+        hub_cache: None,
+    }
+}
+
+fn tiny_ds() -> Arc<Dataset> {
+    Arc::new(Dataset::generate(builtin_spec("tiny").unwrap()).unwrap())
+}
+
+fn adamw() -> AdamwConfig {
+    Manifest::builtin().adamw
+}
+
+/// Thread-mode options: real sockets, deterministic to drive from tests.
+fn thread_opts(workers: usize, micro_batch: usize) -> DistOptions {
+    DistOptions {
+        workers,
+        micro_batch,
+        heartbeat_ms: 50,
+        mode: WorkerMode::Thread,
+        steps: 3,
+        warmup: 1,
+        ..DistOptions::default()
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("fsa_dist_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Contract 1: the trajectory is a function of the config, not of N.
+/// Four micros per step are split across 1, 2 and 4 workers; losses and
+/// final params must agree bitwise, the cut must stay edge-balanced,
+/// and the per-worker stats must account for every seed.
+#[test]
+fn worker_counts_share_one_bitwise_trajectory() {
+    let ds = tiny_ds();
+    let cfg = tiny_cfg(42);
+    let out = tmp("trajectory_dist.csv");
+    let mut reference: Option<(Vec<f64>, Vec<Vec<f32>>)> = None;
+    for workers in [1usize, 2, 4] {
+        let mut opts = thread_opts(workers, 16); // 64/16 = 4 micros/step
+        opts.dist_out = Some(out.clone());
+        let report = dist::train(ds.clone(), &cfg, 32, adamw(), &opts)
+            .unwrap();
+        assert_eq!(report.losses.len(), 4, "warmup 1 + 3 timed steps");
+        assert_eq!(report.reassigned, 0, "no failures were injected");
+        assert!(report.edge_load_dev < 0.05,
+                "{workers}-way cut is {:.1}% off the ideal edge share",
+                report.edge_load_dev * 100.0);
+        assert_eq!(report.rows.len(), workers);
+        let seeds: u64 = report.rows.iter().map(|r| r.seeds).sum();
+        assert_eq!(seeds, 4 * 64, "every step's 64 seeds must be computed \
+                                   exactly once across the fleet");
+        assert!(report.rows.iter().all(|r| r.completed),
+                "all workers survive a clean run");
+        let csv = read_dist_csv(&out).unwrap();
+        assert_eq!(csv.len(), workers, "one dist.csv row per rank");
+        match &reference {
+            None => reference = Some((report.losses, report.params)),
+            Some((losses, params)) => {
+                assert_eq!(&report.losses, losses,
+                           "workers={workers} changed the loss trajectory");
+                assert_eq!(&report.params, params,
+                           "workers={workers} changed the final params");
+            }
+        }
+    }
+}
+
+/// Contract 2: `--micro-batch >= batch` makes the fold weight exactly
+/// 1.0, so a 2-worker distributed session replays plain `fsa train`
+/// (the `Trainer` loop) bitwise — losses and parameters.
+#[test]
+fn single_micro_run_matches_plain_trainer_bitwise() {
+    let rt = Runtime::from_env().unwrap();
+    let cfg = tiny_cfg(42);
+    let hidden = rt.manifest.hidden;
+
+    let mut cache = DatasetCache::new();
+    let mut tr = Trainer::new(&rt, &mut cache, cfg.clone()).unwrap();
+    let want: Vec<f64> = (0..4).map(|_| tr.step().unwrap().loss).collect();
+    let want_params = tr.params_f32().unwrap();
+    drop(tr);
+
+    let report = dist::train(tiny_ds(), &cfg, hidden, rt.manifest.adamw,
+                             &thread_opts(2, cfg.batch))
+        .unwrap();
+    assert_eq!(report.losses, want,
+               "distributed losses diverged from plain fsa train");
+    assert_eq!(report.params, want_params,
+               "distributed params diverged from plain fsa train");
+}
+
+/// Contract 3a: a scripted socket drop (chaos `dist-send`) on the step-1
+/// dispatch buries worker 0 mid-run; its shard moves to worker 1, the
+/// orphaned micros are recomputed there, and the trajectory still
+/// matches a clean run bitwise.
+#[test]
+fn scripted_send_drop_reassigns_shard_and_preserves_trajectory() {
+    let ds = tiny_ds();
+    let clean = dist::train(ds.clone(), &tiny_cfg(42), 32, adamw(),
+                            &thread_opts(2, 16))
+        .unwrap();
+
+    let mut cfg = tiny_cfg(42);
+    // ops 0,1 are step 0's two per-rank sends; op 2 is step 1, rank 0
+    cfg.faults = Arc::new(ChaosPlane::parse("dist-send@2=err", 42).unwrap());
+    let report =
+        dist::train(ds, &cfg, 32, adamw(), &thread_opts(2, 16)).unwrap();
+
+    assert_eq!(report.reassigned, 1, "the dropped worker's shard must be \
+                                      reassigned exactly once");
+    assert!(!report.rows[0].completed, "rank 0 was buried");
+    assert!(report.rows[1].completed, "rank 1 survived");
+    assert_eq!(report.rows[1].reassigned, 1,
+               "rank 1 absorbed the dead shard");
+    assert!((report.rows[1].edge_share - 1.0).abs() < 1e-9,
+            "the survivor owns every edge after the reassignment");
+    assert_eq!(report.losses, clean.losses,
+               "losing a worker must not perturb the loss trajectory");
+    assert_eq!(report.params, clean.params,
+               "losing a worker must not perturb the final params");
+}
+
+/// Contract 3b (never double-count): a result frame lost in flight
+/// (chaos `dist-recv` discards the first `Grads`) is recovered by the
+/// stalled-micro re-dispatch — the micro is recomputed and accepted
+/// exactly once. Any double fold (or a dropped one) would shift the
+/// trajectory; bitwise equality with the clean run proves neither
+/// happened.
+#[test]
+fn dropped_result_frame_recovers_without_double_count() {
+    let ds = tiny_ds();
+    let mut opts = thread_opts(2, 16);
+    opts.steps = 1; // the ~200 ms recovery window runs once, keep it short
+    let clean =
+        dist::train(ds.clone(), &tiny_cfg(42), 32, adamw(), &opts).unwrap();
+
+    let mut cfg = tiny_cfg(42);
+    cfg.faults = Arc::new(ChaosPlane::parse("dist-recv@0=err", 42).unwrap());
+    let report = dist::train(ds, &cfg, 32, adamw(), &opts).unwrap();
+
+    assert_eq!(report.reassigned, 0,
+               "a lost frame is not a lost worker — no reassignment");
+    assert_eq!(report.losses, clean.losses,
+               "the recovered micro must fold exactly once");
+    assert_eq!(report.params, clean.params,
+               "the recovered micro must fold exactly once (params)");
+}
+
+/// Losing the *last* worker is a hard error naming the step — the
+/// coordinator must fail loudly, not hang waiting for gradients no one
+/// will send.
+#[test]
+fn losing_every_worker_is_an_error_not_a_hang() {
+    let mut cfg = tiny_cfg(42);
+    cfg.faults = Arc::new(ChaosPlane::parse("dist-send@0=err", 42).unwrap());
+    let err = dist::train(tiny_ds(), &cfg, 32, adamw(), &thread_opts(1, 16))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("every worker died"), "{err}");
+}
+
+/// The coordinator's checkpoint is `Engine`-compatible train state:
+/// stopping a distributed run and resuming it from the saved params +
+/// AdamW moments replays the uninterrupted run's remaining steps
+/// bitwise.
+#[test]
+fn checkpoint_resume_continues_bitwise() {
+    let ds = tiny_ds();
+    let cfg = tiny_cfg(42);
+    let path = tmp("resume_ckpt.json");
+
+    // the uninterrupted control: warmup 1 + 5 timed steps
+    let mut full_opts = thread_opts(2, 16);
+    full_opts.steps = 5;
+    let full =
+        dist::train(ds.clone(), &cfg, 32, adamw(), &full_opts).unwrap();
+    assert_eq!(full.losses.len(), 6);
+
+    // first half: stop after 3 optimizer steps, snapshotting at exit
+    let mut first = thread_opts(2, 16);
+    first.steps = 2;
+    first.ckpt_path = Some(path.clone());
+    let a = dist::train(ds.clone(), &cfg, 32, adamw(), &first).unwrap();
+    assert_eq!(a.losses, full.losses[..3],
+               "the first half must already match the control");
+
+    // second half: resume at step 3, run to the control's 6
+    let mut second = full_opts;
+    second.ckpt_path = Some(path);
+    second.resume = true;
+    let b = dist::train(ds, &cfg, 32, adamw(), &second).unwrap();
+    assert_eq!(b.losses, full.losses[3..],
+               "the resumed half must replay the control's tail bitwise");
+    assert_eq!(b.params, full.params,
+               "resume must land on the control's exact final params");
+}
+
+/// The real thing, end to end: `fsa train --workers 2` child processes,
+/// one of them SIGKILLed mid-run. The coordinator must detect the loss,
+/// reassign the shard, finish all steps with exit code 0, and print the
+/// same final loss as an unharmed control run.
+#[cfg(target_os = "linux")]
+#[test]
+fn sigkilled_child_worker_is_survived_with_identical_loss() {
+    use std::io::{BufRead, BufReader};
+    use std::process::{Command, Stdio};
+
+    fn spawn_train() -> std::process::Child {
+        Command::new(env!("CARGO_BIN_EXE_fsa"))
+            .args(["train", "--dataset", "tiny", "--fanout", "5x3",
+                   "--batch", "64", "--backend", "native", "--threads", "1",
+                   "--workers", "2", "--micro-batch", "16",
+                   "--heartbeat-ms", "50", "--steps", "400", "--warmup",
+                   "5"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawn fsa train --workers 2")
+    }
+
+    /// Direct children of `parent` whose cmdline names the hidden
+    /// `dist-worker` entrypoint (ppid is field 4 of /proc/PID/stat,
+    /// read after the parenthesized comm to survive spaces in it).
+    fn dist_worker_children(parent: u32) -> Vec<u32> {
+        let mut pids = Vec::new();
+        let Ok(entries) = std::fs::read_dir("/proc") else { return pids };
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let Some(pid) =
+                name.to_str().and_then(|s| s.parse::<u32>().ok())
+            else {
+                continue;
+            };
+            let Ok(stat) =
+                std::fs::read_to_string(format!("/proc/{pid}/stat"))
+            else {
+                continue;
+            };
+            let Some(rest) = stat.rsplit(')').next() else { continue };
+            if rest.split_whitespace().nth(1)
+                != Some(parent.to_string().as_str())
+            {
+                continue;
+            }
+            let Ok(cmd) =
+                std::fs::read_to_string(format!("/proc/{pid}/cmdline"))
+            else {
+                continue;
+            };
+            if cmd.contains("dist-worker") {
+                pids.push(pid);
+            }
+        }
+        pids
+    }
+
+    /// The `loss X` token of the last printed step line.
+    fn final_loss(stdout: &str) -> String {
+        stdout.lines()
+            .filter(|l| l.trim_start().starts_with("step "))
+            .filter_map(|l| l.rsplit_once("loss ").map(|(_, t)| t.trim()))
+            .last()
+            .unwrap_or_else(|| panic!("no step lines in:\n{stdout}"))
+            .to_string()
+    }
+
+    // control: both workers live end to end
+    let control = spawn_train().wait_with_output().unwrap();
+    assert!(control.status.success(), "control run failed:\n{}",
+            String::from_utf8_lossy(&control.stderr));
+    let want = final_loss(&String::from_utf8_lossy(&control.stdout));
+
+    // victim run: wait for the first timed step, then SIGKILL a worker
+    let mut child = spawn_train();
+    let pid = child.id();
+    let mut reader = BufReader::new(child.stdout.take().unwrap());
+    let mut stdout = String::new();
+    let mut killed = false;
+    let mut line = String::new();
+    while reader.read_line(&mut line).unwrap() > 0 {
+        stdout.push_str(&line);
+        if !killed && line.contains("step ") && line.contains("loss") {
+            // training is underway; bury one of the two workers
+            let mut victims = Vec::new();
+            for _ in 0..200 {
+                victims = dist_worker_children(pid);
+                if !victims.is_empty() {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            let victim = victims.first().expect("no dist-worker children \
+                                                 to kill");
+            let ok = Command::new("kill")
+                .args(["-9", &victim.to_string()])
+                .status()
+                .unwrap()
+                .success();
+            assert!(ok, "kill -9 {victim} failed");
+            killed = true;
+        }
+        line.clear();
+    }
+    assert!(killed, "the run finished before any step line appeared:\n\
+                     {stdout}");
+    let out = child.wait_with_output().unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "run with a SIGKILLed worker must still exit 0; stderr:\n\
+             {stderr}");
+    assert!(stderr.contains("shard reassigned"),
+            "coordinator must report the reassignment; stderr:\n{stderr}");
+    assert_eq!(final_loss(&stdout), want,
+               "killing a worker mid-run must not change the final loss");
+}

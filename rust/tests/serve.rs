@@ -324,6 +324,99 @@ fn trainer_loss_trajectory_matches_prerefactor_recipe_bitwise() {
                "Engine refactor changed the training trajectory");
 }
 
+/// Pin of the reply-time deadline re-check (serve bugfix): a request
+/// dispatched *within* its deadline whose micro-batch then stalls (the
+/// chaos `serve` site scripts a 150 ms stall) must be answered
+/// [`ReplyBody::Timeout`] — never the stale scores — and be counted in
+/// `ServeStats::timeouts`. Before the fix the pre-dispatch check was
+/// the only one, so a slow batch delivered expired scores uncounted.
+#[test]
+fn deadline_is_rechecked_at_reply_time_after_slow_batch() {
+    use fusesampleagg::runtime::faults::ChaosPlane;
+    use fusesampleagg::serve::ReplyBody;
+
+    let rt = runtime();
+    let mut cache = DatasetCache::new();
+    let mut cfg = tiny_cfg(1, 42);
+    // stall the first (and only) micro-batch well past the deadline
+    cfg.faults = Arc::new(ChaosPlane::parse("serve@0=stall:150", 42)
+                              .unwrap());
+    let mut engine = Engine::new(&rt, &mut cache, cfg).unwrap();
+    let scfg = ServeConfig { batch_window_ms: 0.0, max_batch: 512,
+                             queue_depth: 8, deadline_ms: 20.0 };
+    let (handle, rx) = channel(&scfg, engine.ds.spec.n);
+    // submitted fresh: the pre-dispatch deadline check passes, only the
+    // reply-time re-check can catch the stalled batch
+    let accepted = match handle.submit(vec![1, 2]).unwrap() {
+        Submit::Accepted(rx) => rx,
+        Submit::Shed => panic!("empty queue shed the request"),
+    };
+    drop(handle);
+    let stats = run_server(&mut engine, &scfg, &rx).unwrap();
+    let reply = accepted.recv().unwrap();
+    assert!(matches!(reply.body, ReplyBody::Timeout),
+            "slow batch must time out at reply time, got {:?}",
+            reply.body);
+    assert!(reply.latency_ms > scfg.deadline_ms,
+            "timeout reply carries the real latency ({} ms)",
+            reply.latency_ms);
+    assert_eq!((stats.completed, stats.timeouts, stats.batches), (1, 1, 1),
+               "the expired request is answered, counted as a timeout, \
+                and the batch still ran");
+}
+
+/// Satellite: duplicate seed ids — repeated *within* one request and
+/// shared *across* two requests coalesced into the same micro-batch —
+/// each get scores bitwise identical to a dedup'd direct
+/// [`Engine::infer`] over the distinct seeds. The counter RNG is keyed
+/// per node, so a seed's logits cannot depend on how often (or next to
+/// what) it appears in a batch.
+#[test]
+fn duplicate_seeds_within_and_across_requests_match_dedup_infer() {
+    let rt = runtime();
+    let mut cache = DatasetCache::new();
+    let mut engine =
+        Engine::new(&rt, &mut cache, tiny_cfg(1, 42)).unwrap();
+    let c = engine.ds.spec.c;
+
+    // the dedup'd reference: one infer over the distinct seeds only
+    let distinct = [5, 9, 17];
+    let reference = engine.infer(&distinct).unwrap();
+    let row = |s: i32| -> &[f32] {
+        let i = distinct.iter().position(|&d| d == s).unwrap();
+        &reference[i * c..(i + 1) * c]
+    };
+
+    // request 0 repeats seed 5 three times; request 1 shares seeds 9
+    // and 5 with it; a wide window coalesces both into one batch
+    let reqs = [vec![5, 5, 9, 5], vec![9, 17, 5]];
+    let scfg = ServeConfig { batch_window_ms: 200.0, max_batch: 4096,
+                             queue_depth: 64, deadline_ms: 0.0 };
+    let (handle, rx) = channel(&scfg, engine.ds.spec.n);
+    let replies: Vec<_> = reqs
+        .iter()
+        .map(|r| match handle.submit(r.clone()).unwrap() {
+            Submit::Accepted(rx) => rx,
+            Submit::Shed => panic!("queue_depth 64 shed 2 requests"),
+        })
+        .collect();
+    drop(handle);
+    let stats = run_server(&mut engine, &scfg, &rx).unwrap();
+    assert_eq!((stats.completed, stats.batches), (2, 1),
+               "both requests must coalesce into one micro-batch");
+    assert_eq!(stats.seeds, 7, "the batch carries the raw (dup'd) seeds");
+    for (req, rx) in reqs.iter().zip(replies) {
+        let reply = rx.recv().unwrap();
+        let scores = reply.scores().expect("scores reply");
+        assert_eq!(scores.len(), req.len() * c);
+        for (i, &s) in req.iter().enumerate() {
+            assert_eq!(&scores[i * c..(i + 1) * c], row(s),
+                       "seed {s} at slot {i} diverged from the dedup'd \
+                        direct inference");
+        }
+    }
+}
+
 /// `evaluate` is now literally accuracy-over-`infer`: recompute it by
 /// hand from the same logits and the two must agree exactly.
 #[test]
